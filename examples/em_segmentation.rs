@@ -1,0 +1,153 @@
+//! End-to-end driver: sliding-window boundary "segmentation" of a
+//! synthetic 3D electron-microscopy-like volume — the workload the
+//! paper's introduction motivates (petascale connectomics imagery).
+//!
+//! Generates a smoothed-noise volume with membrane-like sheets, runs
+//! full patch-based sliding-window inference through the coordinator
+//! with an optimizer-chosen plan, verifies the MPF output against the
+//! dense per-window reference on a sub-volume, and reports throughput.
+//!
+//!     cargo run --release --example em_segmentation [volume_extent]
+
+use znni::coordinator::{Coordinator, InferenceRequest};
+use znni::device::Device;
+use znni::inference::dense_reference;
+use znni::net::PoolingMode;
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::TaskPool;
+use znni::util::prng::Rng;
+use znni::util::{human_bytes, human_throughput};
+
+/// Synthetic EM-ish volume: band-limited noise plus a few membrane-like
+/// planes with higher intensity (box-blurred for smoothness).
+fn synth_em_volume(n: usize, seed: u64) -> Tensor5 {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f32; n * n * n];
+    rng.fill_uniform(&mut v);
+    // Membranes: a few oblique planes of elevated intensity.
+    for plane in 0..4 {
+        let a = 1 + plane % 3;
+        let b = 1 + (plane / 2) % 2;
+        let c0 = (plane * n) / 3;
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    if (a * x + b * y + z) % n == c0 {
+                        v[(x * n + y) * n + z] += 2.0;
+                    }
+                }
+            }
+        }
+    }
+    // One pass of 3³ box blur for band-limiting.
+    let mut out = v.clone();
+    for x in 1..n - 1 {
+        for y in 1..n - 1 {
+            for z in 1..n - 1 {
+                let mut acc = 0.0;
+                for dx in 0..3 {
+                    for dy in 0..3 {
+                        for dz in 0..3 {
+                            acc += v[((x + dx - 1) * n + y + dy - 1) * n + z + dz - 1];
+                        }
+                    }
+                }
+                out[(x * n + y) * n + z] = acc / 27.0;
+            }
+        }
+    }
+    Tensor5::from_vec(Shape5::new(1, 1, n, n, n), out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(40);
+    let pool = TaskPool::global();
+    let net = znni::net::zoo::tiny_net(4);
+    let fov = net.field_of_view();
+    println!("== ZNNi end-to-end: synthetic EM volume {n}³, net {} (FoV {fov:?}) ==", net.name);
+
+    println!("generating volume...");
+    let volume = synth_em_volume(n, 2016);
+
+    println!("optimizing plan (§VI.A)...");
+    let cm = CostModel::calibrate(pool, 8);
+    let space = SearchSpace::cpu_only(Device::host(), (n).min(29));
+    let plan = search(&net, &space, &cm).expect("feasible plan");
+    println!(
+        "  patch {}³, est memory {}, primitives: {:?}",
+        plan.input.x,
+        human_bytes(plan.est_memory),
+        plan.layers.iter().map(|l| l.tag()).collect::<Vec<_>>()
+    );
+
+    let weights = make_weights(&net, 8888);
+    let cp = compile(&net, &plan, &weights)?;
+    let coordinator = Coordinator::new(net.clone(), cp)?;
+
+    println!("running sliding-window inference through the coordinator...");
+    let (resps, metrics) = coordinator.serve(
+        vec![InferenceRequest { id: 1, volume: volume.clone_tensor() }],
+        pool,
+    )?;
+    let output = &resps[0].output;
+    println!("  output {} | {}", output.shape(), metrics.report());
+
+    // Validation: dense per-window reference on a small corner.
+    println!("validating against dense per-window reference (corner sub-volume)...");
+    let sub = fov[0] + 3;
+    let mut corner = Tensor5::zeros(Shape5::new(1, 1, sub, sub, sub));
+    for x in 0..sub {
+        for y in 0..sub {
+            for z in 0..sub {
+                corner.set(0, 0, x, y, z, volume.at(0, 0, x, y, z));
+            }
+        }
+    }
+    // Window runner: max-pool modes, direct conv.
+    let modes = vec![PoolingMode::MaxPool; net.pool_count()];
+    let wshapes = net.shapes(Shape5::from_spatial(1, 1, fov), &modes)?;
+    let wplan = znni::optimizer::Plan {
+        net_name: net.name.clone(),
+        input: Shape5::from_spatial(1, 1, fov),
+        layers: net
+            .layers
+            .iter()
+            .map(|l| match l {
+                znni::net::LayerSpec::Conv { .. } => znni::optimizer::PlanLayer::Conv {
+                    algo: znni::memory::model::ConvAlgo::DirectMkl,
+                },
+                znni::net::LayerSpec::Pool { .. } => znni::optimizer::PlanLayer::Pool {
+                    mode: PoolingMode::MaxPool,
+                },
+            })
+            .collect(),
+        shapes: wshapes,
+        est_secs: 1.0,
+        est_memory: 0,
+        out_voxels: 1,
+    };
+    let wcp = compile(&net, &wplan, &weights)?;
+    let runner = |t: Tensor5| wcp.run(t, pool);
+    let expect = dense_reference(&net, &runner, &corner);
+    let mut worst = 0.0f32;
+    let esh = expect.shape();
+    for f in 0..esh.f {
+        for x in 0..esh.x {
+            for y in 0..esh.y {
+                for z in 0..esh.z {
+                    worst = worst.max((expect.at(0, f, x, y, z) - output.at(0, f, x, y, z)).abs());
+                }
+            }
+        }
+    }
+    println!("  max |Δ| vs dense reference on {}³ corner: {worst:.2e}", sub);
+    assert!(worst < 1e-3, "MPF pipeline disagrees with dense reference");
+
+    println!(
+        "DONE: {} of boundary-probability output at {}",
+        human_bytes(output.shape().bytes_f32()),
+        human_throughput(metrics.throughput())
+    );
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Table IV reproduction as an example: run the §VI.A exhaustive search
+//! for each benchmark net on the simulated GPU and on the host CPU,
+//! print the optimal primitive per layer and the chosen input size.
+//!
+//!     cargo run --release --example optimizer_search [--scale tiny|small|paper]
+
+use znni::device::Device;
+use znni::net::zoo::{benchmark_nets, NetScale};
+use znni::net::PoolingMode;
+use znni::optimizer::{plan_table, search, CostModel, SearchSpace};
+use znni::util::bench::Table;
+use znni::util::human_bytes;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let scale = NetScale::from_env();
+    let pool = TaskPool::global();
+    eprintln!("calibrating cost model...");
+    let cm = CostModel::calibrate(pool, 10);
+    let gpu = Device::titan_x();
+    let host = Device::host();
+
+    for (dev_name, mk_space) in [
+        ("sim-titan-x (GPU-only)", true),
+        ("host (CPU-only)", false),
+    ] {
+        println!("\n== optimal layer primitives on {dev_name}, scale {scale:?} ==");
+        let mut table = Table::new(&["", "n337", "n537", "n726", "n926"]);
+        let mut columns = Vec::new();
+        for net in benchmark_nets(scale) {
+            let modes = vec![PoolingMode::Mpf; net.pool_count()];
+            let min = net.min_extent(&modes).unwrap();
+            let mut space = if mk_space {
+                SearchSpace::gpu_only(gpu.clone(), min + 32)
+            } else {
+                SearchSpace::cpu_only(host.clone(), min + 32)
+            };
+            space.max_candidates = 8;
+            let plan = search(&net, &space, &cm);
+            columns.push(plan.map(|p| plan_table(&p)));
+        }
+        let max_rows = columns.iter().flatten().map(|c| c.len()).max().unwrap_or(0);
+        for r in 0..max_rows {
+            let mut row = vec![String::new()];
+            for c in &columns {
+                match c {
+                    Some(rows) if r < rows.len() => {
+                        if row[0].is_empty() {
+                            row[0] = rows[r].0.clone();
+                        }
+                        row.push(rows[r].1.clone());
+                    }
+                    Some(_) => row.push(String::new()),
+                    None => row.push("infeasible".into()),
+                }
+            }
+            table.row(row);
+        }
+        table.print();
+        println!("(memory budget: GPU {} / host {})", human_bytes(gpu.ram_bytes), human_bytes(host.ram_bytes));
+    }
+}

@@ -1,0 +1,64 @@
+//! §VII.C demo: CPU–GPU pipelined inference over a stream of patches,
+//! comparing pipelined wall-clock against sequential execution.
+//!
+//!     cargo run --release --example pipeline_demo
+
+use std::sync::Arc;
+
+use znni::conv::{Activation, Weights};
+use znni::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
+use znni::memory::model::ConvAlgo;
+use znni::pipeline::Pipeline;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::TaskPool;
+
+fn stack() -> Vec<Box<dyn LayerPrimitive>> {
+    vec![
+        Box::new(ConvLayer::new(
+            Arc::new(Weights::random(4, 1, [3, 3, 3], 1)),
+            ConvAlgo::FftDataParallel,
+            Activation::Relu,
+        )),
+        Box::new(MpfLayer { window: [2, 2, 2], placement: Placement::Cpu }),
+        Box::new(ConvLayer::new(
+            Arc::new(Weights::random(4, 4, [3, 3, 3], 2)),
+            ConvAlgo::GpuFft,
+            Activation::Relu,
+        )),
+        Box::new(ConvLayer::new(
+            Arc::new(Weights::random(2, 4, [3, 3, 3], 3)),
+            ConvAlgo::GpuDensePrecomp,
+            Activation::Relu,
+        )),
+    ]
+}
+
+fn main() {
+    let pool = TaskPool::global();
+    let theta = 2; // conv+MPF on the CPU side, convs on the GPU side
+    let n = 19;
+    let patches = 6;
+    println!("pipeline: head = first {theta} layers (CPU), tail = rest (sim-GPU); {patches} patches of {n}³");
+
+    let mk_inputs =
+        || (0..patches).map(|i| Tensor5::random(Shape5::new(1, 1, n, n, n), i as u64)).collect::<Vec<_>>();
+
+    let pipe = Pipeline::split(stack(), theta);
+    let t0 = std::time::Instant::now();
+    let outs = pipe.run_stream(mk_inputs(), pool);
+    let streamed = t0.elapsed().as_secs_f64();
+
+    let t0 = std::time::Instant::now();
+    let seq = pipe.run_sequential(mk_inputs(), pool);
+    let sequential = t0.elapsed().as_secs_f64();
+
+    let diff: f32 = outs
+        .iter()
+        .zip(&seq)
+        .map(|(a, b)| a.max_abs_diff(b))
+        .fold(0.0, f32::max);
+    println!("pipelined:  {streamed:.3}s  ({:.3}s/patch)", streamed / patches as f64);
+    println!("sequential: {sequential:.3}s  ({:.3}s/patch)", sequential / patches as f64);
+    println!("outputs identical: max |Δ| = {diff:.2e}");
+    println!("note: this testbed is single-core, so the overlap is structural; on a real CPU+GPU pair the pipelined walltime approaches max(head, tail).");
+}

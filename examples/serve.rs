@@ -1,0 +1,41 @@
+//! Serving demo: the coordinator takes whole-volume requests, splits
+//! them into patches (overlap-save), runs the optimized plan, and
+//! reassembles — reporting serving metrics.
+//!
+//!     cargo run --release --example serve [volume_extent] [num_requests]
+
+use znni::coordinator::{Coordinator, InferenceRequest};
+use znni::device::Device;
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::TaskPool;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(32);
+    let requests: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(3);
+    let pool = TaskPool::global();
+    let net = znni::net::zoo::tiny_net(4);
+    let cm = CostModel::calibrate(pool, 8);
+    let space = SearchSpace::cpu_only(Device::host(), n.min(23));
+    let plan = search(&net, &space, &cm).expect("feasible plan");
+    let weights = make_weights(&net, 11);
+    let cp = compile(&net, &plan, &weights)?;
+    let coord = Coordinator::new(net, cp)?;
+    println!(
+        "serving {requests} request(s) of {n}³ with patch {}³ (cover {:?})",
+        coord.net.field_of_view()[0].max(plan.input.x),
+        coord.cover()
+    );
+    let reqs = (0..requests)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            volume: Tensor5::random(Shape5::new(1, 1, n, n, n), i as u64),
+        })
+        .collect();
+    let (resps, metrics) = coord.serve(reqs, pool)?;
+    for r in &resps {
+        println!("  request {} -> {} ({} voxels)", r.id, r.output.shape(), r.voxels);
+    }
+    println!("{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path (never imported at runtime)."""

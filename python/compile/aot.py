@@ -1,0 +1,97 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO text artifacts + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+(See /opt/xla-example/README.md.)
+
+Artifacts (all with weights as runtime inputs):
+* conv_probe    — the Pallas conv3d kernel alone, small shape;
+* tiny_net13    — the tiny CPCC net on a 13^3 patch (quickstart / tests);
+* first_layer   — n337's first conv layer, the layer the CPU-GPU
+                  pipeline offloads to the device (S = f = 1).
+
+Run: python -m compile.aot --out ../artifacts  (or via `make artifacts`)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import FIRST_LAYER_N337, TINY_NET, make_forward_fn, parse_net, weight_shapes
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_net(config_text, input_shape, use_pallas=True):
+    """Lower a net forward to HLO text. Returns (text, arg_shapes,
+    out_shape)."""
+    fn, f_in, layers = make_forward_fn(config_text, use_pallas)
+    assert input_shape[1] == f_in
+    args = [jax.ShapeDtypeStruct(input_shape, jnp.float32)]
+    for ws, bs in weight_shapes(f_in, layers):
+        args.append(jax.ShapeDtypeStruct(ws, jnp.float32))
+        args.append(jax.ShapeDtypeStruct(bs, jnp.float32))
+    lowered = jax.jit(fn).lower(*args)
+    out_shape = jax.eval_shape(fn, *args)[0].shape
+    return to_hlo_text(lowered), [tuple(a.shape) for a in args], tuple(out_shape)
+
+
+ARTIFACTS = [
+    # (name, config, input shape (S, f, n, n, n), use_pallas)
+    ("conv_probe", FIRST_LAYER_N337, (1, 1, 12, 12, 12), True),
+    ("tiny_net13", TINY_NET, (1, 1, 13, 13, 13), True),
+    ("first_layer", FIRST_LAYER_N337, (1, 1, 24, 24, 24), True),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for name, config, ishape, use_pallas in ARTIFACTS:
+        text, arg_shapes, out_shape = lower_net(config, ishape, use_pallas)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "net": " ".join(config.split()),
+                "arg_shapes": arg_shapes,
+                "output_shape": list(out_shape),
+                "pallas": use_pallas,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars), out={out_shape}")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Line-oriented twin of the manifest for the Rust loader (the
+    # offline crate set has no JSON parser):
+    #   artifact <name> <file>
+    #   arg <d0> <d1> ...
+    #   out <d0> <d1> ...
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        for m in manifest:
+            f.write(f"artifact {m['name']} {m['file']}\n")
+            for sh in m["arg_shapes"]:
+                f.write("arg " + " ".join(str(d) for d in sh) + "\n")
+            f.write("out " + " ".join(str(d) for d in m["output_shape"]) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

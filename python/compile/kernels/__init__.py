@@ -1,0 +1,1 @@
+"""Layer-1 Pallas kernels + the pure-jnp oracle."""

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: 3D valid convolution (true convolution) with
+bias + ReLU, tiled for the TPU MXU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPU
+hot spot is implicit-GEMM convolution tuned for threadblocks + shared
+memory. On a TPU the same reuse is expressed by tiling the output so
+each (output-channel block × input-channel block) contraction runs on
+the MXU systolic array: for every kernel tap (a, b, c) the update
+
+    O[j, x, y, z] += W[j, i, a, b, c] · I[i, x+a, y+b, z+c]
+
+is a (f' × f) @ (f × XYZ) matmul — `jnp.einsum('ji,ixyz->jxyz')`
+lowers to a single `dot_general` feeding the MXU. The grid iterates
+over output-channel blocks; BlockSpecs express the HBM→VMEM schedule
+(weights for one block + the full input window resident in VMEM).
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path; real-TPU efficiency is estimated analytically in
+DESIGN.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-channel block: 8 keeps the (bf' × f) tap matmuls MXU-shaped
+# without exceeding VMEM for the benchmark nets' 80-map layers.
+DEFAULT_FOUT_BLOCK = 8
+
+
+def _conv3d_tap_kernel(i_ref, w_ref, b_ref, o_ref, *, k, relu):
+    """One grid step: all taps for one output-channel block.
+
+    i_ref: (f, x, y, z)        — full input window (VMEM)
+    w_ref: (bf', f, kx, ky, kz) — weights for this block
+    b_ref: (bf',)              — bias for this block
+    o_ref: (bf', x', y', z')   — output tile
+    """
+    kx, ky, kz = k
+    _, ox, oy, oz = o_ref.shape
+    x = i_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    # Static unroll over kernel taps; each tap is one MXU contraction.
+    for a in range(kx):
+        for b in range(ky):
+            for c in range(kz):
+                win = jax.lax.dynamic_slice(
+                    x, (0, a, b, c), (x.shape[0], ox, oy, oz)
+                )
+                # True convolution: flip the kernel indices.
+                tap = w[:, :, kx - 1 - a, ky - 1 - b, kz - 1 - c]
+                acc = acc + jnp.einsum(
+                    "ji,ixyz->jxyz", tap, win, preferred_element_type=jnp.float32
+                )
+    acc = acc + b_ref[...][:, None, None, None]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def conv3d_pallas(x, w, bias, *, relu=True, fout_block=DEFAULT_FOUT_BLOCK):
+    """Valid 3D convolution layer via the Pallas kernel.
+
+    x: (f, nx, ny, nz); w: (f', f, kx, ky, kz); bias: (f',)
+    returns (f', nx-kx+1, ny-ky+1, nz-kz+1)
+    """
+    f_out, f_in, kx, ky, kz = w.shape
+    assert x.shape[0] == f_in, f"channel mismatch {x.shape[0]} vs {f_in}"
+    out_sp = (x.shape[1] - kx + 1, x.shape[2] - ky + 1, x.shape[3] - kz + 1)
+    bf = min(fout_block, f_out)
+    # Pad f' up to a multiple of the block (masked off afterwards).
+    f_pad = (-f_out) % bf
+    if f_pad:
+        w = jnp.pad(w, ((0, f_pad), (0, 0), (0, 0), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, (0, f_pad))
+    blocks = (f_out + f_pad) // bf
+
+    out = pl.pallas_call(
+        partial(_conv3d_tap_kernel, k=(kx, ky, kz), relu=relu),
+        grid=(blocks,),
+        in_specs=[
+            # Whole input window resident per step.
+            pl.BlockSpec(x.shape, lambda j: (0,) * 4),
+            # One output-channel block of weights per step.
+            pl.BlockSpec((bf, f_in, kx, ky, kz), lambda j: (j, 0, 0, 0, 0)),
+            pl.BlockSpec((bf,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bf,) + out_sp, lambda j: (j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(((f_out + f_pad),) + out_sp, jnp.float32),
+        interpret=True,
+    )(x, w, bias)
+    return out[:f_out]
+
+
+def conv3d_vmem_bytes(x_shape, w_shape, fout_block=DEFAULT_FOUT_BLOCK):
+    """Analytic VMEM footprint of one grid step (bytes, f32): input
+    window + weight block + output tile + accumulator."""
+    f_in, nx, ny, nz = x_shape
+    f_out, _, kx, ky, kz = w_shape
+    bf = min(fout_block, f_out)
+    out_sp = (nx - kx + 1) * (ny - ky + 1) * (nz - kz + 1)
+    inp = f_in * nx * ny * nz
+    wgt = bf * f_in * kx * ky * kz
+    out = bf * out_sp
+    return 4 * (inp + wgt + 2 * out)
+
+
+def conv3d_mxu_utilization(x_shape, w_shape, fout_block=DEFAULT_FOUT_BLOCK):
+    """Analytic MXU utilisation estimate of the tap matmuls: the
+    contraction is (bf × f) @ (f × XYZ); the 128×128 MXU is fully fed
+    when bf and f reach 128. Returns min(1, bf/128) · min(1, f/128)."""
+    f_in = x_shape[0]
+    f_out = w_shape[0]
+    bf = min(fout_block, f_out)
+    return min(1.0, bf / 128.0) * min(1.0, f_in / 128.0)

@@ -1,0 +1,52 @@
+"""Layer-1 Pallas kernel: max-pooling fragments (MPF, paper §V).
+
+For window p = (px, py, pz) the kernel emits all px·py·pz pooled
+fragments of the input — the batch-multiplying pooling that lets a
+sliding-window net reuse computation. Offsets are unrolled statically;
+each fragment is a strided-window max, which on TPU is a VPU reduce
+over a reshaped (x', px, y', py, z', pz) view (no gather needed).
+
+interpret=True for the same reason as conv3d (see that module).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mpf_kernel(i_ref, o_ref, *, p):
+    """i_ref: (f, nx, ny, nz); o_ref: (P, f, x', y', z') with
+    P = px·py·pz fragments in row-major offset order."""
+    px, py, pz = p
+    _, f, ox, oy, oz = o_ref.shape
+    x = i_ref[...]
+    frags = []
+    for ax in range(px):
+        for ay in range(py):
+            for az in range(pz):
+                win = jax.lax.dynamic_slice(
+                    x, (0, ax, ay, az), (f, ox * px, oy * py, oz * pz)
+                )
+                v = win.reshape(f, ox, px, oy, py, oz, pz)
+                frags.append(v.max(axis=(2, 4, 6)))
+    o_ref[...] = jnp.stack(frags, axis=0)
+
+
+def mpf_pallas(x, p):
+    """MPF layer: x (f, n...) with (n+1) % p == 0 per dim →
+    (P, f, n//p ...)."""
+    f = x.shape[0]
+    for d in range(3):
+        assert (x.shape[1 + d] + 1) % p[d] == 0, "MPF needs (n+1) % p == 0"
+    out_sp = tuple(x.shape[1 + d] // p[d] for d in range(3))
+    bp = p[0] * p[1] * p[2]
+    return pl.pallas_call(
+        partial(_mpf_kernel, p=tuple(p)),
+        grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0,) * 4)],
+        out_specs=pl.BlockSpec((bp, f) + out_sp, lambda i: (0,) * 5),
+        out_shape=jax.ShapeDtypeStruct((bp, f) + out_sp, jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness anchor of
+the build-time test suite).
+
+Semantics match the paper and the Rust primitives exactly:
+* convolution is *true* convolution (flipped kernel), "valid" region;
+* MPF emits fragments in row-major offset order, batch-major.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv3d_ref(x, w, bias, relu=True):
+    """x: (f, n...); w: (f', f, k...); bias: (f',)."""
+    # lax convolution computes correlation; flip spatial axes for true
+    # convolution (the paper's w * I).
+    wf = w[:, :, ::-1, ::-1, ::-1]
+    out = lax.conv_general_dilated(
+        x[None],  # (1, f, nx, ny, nz)
+        wf,
+        window_strides=(1, 1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHWD", "OIHWD", "NCHWD"),
+    )[0]
+    out = out + bias[:, None, None, None]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool_ref(x, p):
+    """x: (f, n...) with n % p == 0 -> (f, n/p...)."""
+    f = x.shape[0]
+    xr = x.reshape(
+        f,
+        x.shape[1] // p[0], p[0],
+        x.shape[2] // p[1], p[1],
+        x.shape[3] // p[2], p[2],
+    )
+    return xr.max(axis=(2, 4, 6))
+
+
+def mpf_ref(x, p):
+    """x: (f, n...) with (n+1) % p == 0 -> (P, f, n//p...)."""
+    out_sp = tuple(x.shape[1 + d] // p[d] for d in range(3))
+    frags = []
+    for ax in range(p[0]):
+        for ay in range(p[1]):
+            for az in range(p[2]):
+                win = x[:,
+                        ax:ax + out_sp[0] * p[0],
+                        ay:ay + out_sp[1] * p[1],
+                        az:az + out_sp[2] * p[2]]
+                frags.append(maxpool_ref(win, p))
+    return jnp.stack(frags, axis=0)

@@ -1,0 +1,120 @@
+"""Layer-2: the JAX model — ConvNet forward graphs built from the
+Pallas kernels (L1), shared with the Rust coordinator through the same
+tiny net-config format (`name/input/conv/pool` directives).
+
+Weights are *runtime inputs* of the lowered functions (not baked
+constants), so the Rust side feeds the exact same tensors to the PJRT
+executable and to its native primitives and cross-checks the numerics.
+
+Conventions (must match rust/src/):
+* a batch is the leading axis: x is (S, f, nx, ny, nz);
+* weights per conv layer: (f', f, kx, ky, kz) + bias (f',);
+* true convolution (flipped kernels) + bias + ReLU on every conv layer;
+* MPF fragments multiply the batch axis, fragment index is the
+  least-significant part (s' = s * P + frag), offsets row-major.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv3d import conv3d_pallas
+from .kernels.mpf import mpf_pallas
+
+
+def parse_net(text):
+    """Parse the shared config format. Returns (f_in, layers) where
+    layers are ('conv', f_out, (k,k,k)) / ('pool', (p,p,p))."""
+    f_in = None
+    layers = []
+    for raw in text.splitlines():
+        line = raw.split('#')[0].strip()
+        if not line:
+            continue
+        toks = line.split()
+        if toks[0] == 'name':
+            continue
+        elif toks[0] == 'input':
+            f_in = int(toks[1])
+        elif toks[0] == 'conv':
+            nums = [int(t) for t in toks[1:]]
+            f_out = nums[0]
+            k = tuple(nums[1:]) if len(nums) == 4 else (nums[1],) * 3
+            layers.append(('conv', f_out, k))
+        elif toks[0] == 'pool':
+            nums = [int(t) for t in toks[1:]]
+            p = tuple(nums) if len(nums) == 3 else (nums[0],) * 3
+            layers.append(('pool', p))
+        else:
+            raise ValueError(f'unknown directive {toks[0]}')
+    if f_in is None or not layers:
+        raise ValueError('config needs input + layers')
+    return f_in, layers
+
+
+def weight_shapes(f_in, layers):
+    """Shapes of the (w, b) pairs the forward function expects."""
+    shapes = []
+    f = f_in
+    for l in layers:
+        if l[0] == 'conv':
+            _, f_out, k = l
+            shapes.append(((f_out, f) + k, (f_out,)))
+            f = f_out
+    return shapes
+
+
+def conv_layer(x, w, b, use_pallas=True):
+    """Batched conv layer: x (S, f, n...)."""
+    fn = conv3d_pallas if use_pallas else ref.conv3d_ref
+    return jax.vmap(lambda xi: fn(xi, w, b))(x)
+
+
+def mpf_layer(x, p, use_pallas=True):
+    """Batched MPF layer: (S, f, n...) -> (S·P, f, n//p...)."""
+    fn = mpf_pallas if use_pallas else ref.mpf_ref
+    frags = jax.vmap(lambda xi: fn(xi, p))(x)  # (S, P, f, ...)
+    s, pcount = frags.shape[0], frags.shape[1]
+    return frags.reshape((s * pcount,) + frags.shape[2:])
+
+
+def net_forward(x, weights, layers, use_pallas=True):
+    """Run the whole net. `weights` is the flat [w1, b1, w2, b2, ...]
+    list in conv-layer order."""
+    wi = 0
+    for l in layers:
+        if l[0] == 'conv':
+            x = conv_layer(x, weights[wi], weights[wi + 1], use_pallas)
+            wi += 2
+        else:
+            x = mpf_layer(x, l[1], use_pallas)
+    return x
+
+
+def make_forward_fn(config_text, use_pallas=True):
+    """Returns (fn, f_in, layers); fn(x, *weights) -> output."""
+    f_in, layers = parse_net(config_text)
+
+    def fn(x, *weights):
+        return (net_forward(x, list(weights), layers, use_pallas),)
+
+    return fn, f_in, layers
+
+
+# The tiny CPCC net shared with rust::net::zoo::tiny_net(4).
+TINY_NET = """
+name tiny-cpcc
+input 1
+conv 4 3
+pool 2
+conv 4 3
+conv 2 3
+"""
+
+# First layer of n337 at Small scale (8 maps), the shape the paper
+# finds FFT-DP/CuDNN1-optimal (f = S = 1).
+FIRST_LAYER_N337 = """
+name n337-first
+input 1
+conv 8 2
+"""

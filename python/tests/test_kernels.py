@@ -1,0 +1,136 @@
+"""Pallas kernels vs the pure-jnp oracle — the core build-time
+correctness signal. Hypothesis sweeps shapes; fixed cases pin the
+paper-relevant configurations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv3d import (
+    conv3d_mxu_utilization,
+    conv3d_pallas,
+    conv3d_vmem_bytes,
+)
+from compile.kernels.mpf import mpf_pallas
+from compile.kernels import ref
+
+
+def rand(key, shape):
+    return jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@pytest.mark.parametrize("f_in,f_out,k,n", [
+    (1, 8, 2, 9),     # n337 first layer shape family
+    (4, 4, 3, 8),     # body layer
+    (2, 3, 5, 11),    # n537 body kernel
+    (1, 1, 1, 4),     # degenerate identity-size
+    (3, 2, 4, 7),     # even kernel
+])
+def test_conv3d_pallas_matches_ref(f_in, f_out, k, n):
+    ka, kb, kc = keys(0, 3)
+    x = rand(ka, (f_in, n, n, n))
+    w = rand(kb, (f_out, f_in, k, k, k))
+    b = rand(kc, (f_out,))
+    got = conv3d_pallas(x, w, b, relu=True)
+    want = ref.conv3d_ref(x, w, b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    f_in=st.integers(1, 4),
+    f_out=st.integers(1, 6),
+    k=st.tuples(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3)),
+    extra=st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(0, 3)),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_conv3d_pallas_hypothesis(f_in, f_out, k, extra, relu, seed):
+    n = tuple(k[d] + extra[d] for d in range(3))
+    ka, kb, kc = keys(seed, 3)
+    x = rand(ka, (f_in,) + n)
+    w = rand(kb, (f_out, f_in) + k)
+    b = rand(kc, (f_out,))
+    got = conv3d_pallas(x, w, b, relu=relu)
+    want = ref.conv3d_ref(x, w, b, relu=relu)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv3d_is_true_convolution():
+    """A kernel with a single 1 at index (0,0,0) must *shift* the image
+    (flip semantics), not copy the leading window."""
+    x = rand(keys(1, 1)[0], (1, 4, 4, 4))
+    w = jnp.zeros((1, 1, 2, 2, 2)).at[0, 0, 0, 0, 0].set(1.0)
+    b = jnp.zeros((1,))
+    out = conv3d_pallas(x, w, b, relu=False)
+    np.testing.assert_allclose(out[0], x[0, 1:, 1:, 1:], rtol=1e-6)
+
+
+def test_conv3d_fout_block_padding():
+    """f' not divisible by the block size exercises the pad/mask path."""
+    ka, kb, kc = keys(2, 3)
+    x = rand(ka, (3, 6, 6, 6))
+    w = rand(kb, (5, 3, 3, 3, 3))
+    b = rand(kc, (5,))
+    got = conv3d_pallas(x, w, b, fout_block=4)
+    want = ref.conv3d_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("p,n", [
+    ((2, 2, 2), (7, 7, 7)),
+    ((2, 2, 2), (5, 9, 7)),
+    ((3, 3, 3), (8, 8, 8)),
+    ((2, 1, 1), (5, 4, 4)),   # the paper's 2x1x1 illustration window
+])
+def test_mpf_pallas_matches_ref(p, n):
+    x = rand(keys(3, 1)[0], (3,) + n)
+    got = mpf_pallas(x, p)
+    want = ref.mpf_ref(x, p)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    f=st.integers(1, 3),
+    p=st.sampled_from([(2, 2, 2), (3, 3, 3), (2, 1, 2)]),
+    t=st.tuples(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3)),
+    seed=st.integers(0, 2**16),
+)
+def test_mpf_pallas_hypothesis(f, p, t, seed):
+    n = tuple(p[d] * t[d] + p[d] - 1 for d in range(3))  # (n+1) % p == 0
+    x = rand(keys(seed, 1)[0], (f,) + n)
+    got = mpf_pallas(x, p)
+    want = ref.mpf_ref(x, p)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=0)
+
+
+def test_mpf_fragment_count_and_order():
+    x = jnp.arange(1 * 5 * 5 * 5, dtype=jnp.float32).reshape(1, 5, 5, 5)
+    out = mpf_pallas(x, (2, 2, 2))
+    assert out.shape == (8, 1, 2, 2, 2)
+    # Fragment 0 pools offsets (0,0,0); fragment 7 offsets (1,1,1).
+    np.testing.assert_allclose(out[0], ref.maxpool_ref(x[:, :4, :4, :4], (2, 2, 2)))
+    np.testing.assert_allclose(out[7], ref.maxpool_ref(x[:, 1:, 1:, 1:], (2, 2, 2)))
+
+
+def test_vmem_estimate_within_budget():
+    """The DESIGN.md §Perf claim: one grid step of the benchmark nets'
+    largest layer fits a 16 MB VMEM."""
+    # n337 body at paper scale, input patch 96^3 tile 24^3.
+    vmem = conv3d_vmem_bytes((80, 24, 24, 24), (80, 80, 3, 3, 3))
+    assert vmem <= 16 << 20, f"{vmem} bytes exceeds VMEM"
+
+
+def test_mxu_utilization_estimate_monotone():
+    low = conv3d_mxu_utilization((8, 8, 8, 8), (8, 8, 3, 3, 3), fout_block=8)
+    high = conv3d_mxu_utilization((128, 8, 8, 8), (128, 128, 3, 3, 3), fout_block=128)
+    assert 0 < low < high <= 1.0

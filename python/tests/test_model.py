@@ -1,0 +1,98 @@
+"""Layer-2 model tests: config parsing, shape propagation, whole-net
+forward vs oracle composition, and batch/fragment ordering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(seed, shape):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, jnp.float32, -1.0, 1.0)
+
+
+def make_weights(f_in, layers, seed=0):
+    ws = []
+    for i, (wshape, bshape) in enumerate(model.weight_shapes(f_in, layers)):
+        ws.append(rand(seed + 2 * i, wshape))
+        ws.append(rand(seed + 2 * i + 1, bshape))
+    return ws
+
+
+def test_parse_tiny_net():
+    f_in, layers = model.parse_net(model.TINY_NET)
+    assert f_in == 1
+    assert layers == [('conv', 4, (3, 3, 3)), ('pool', (2, 2, 2)),
+                      ('conv', 4, (3, 3, 3)), ('conv', 2, (3, 3, 3))]
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        model.parse_net("input 1\nwibble 3\n")
+    with pytest.raises(ValueError):
+        model.parse_net("conv 4 3\n")
+
+
+def test_weight_shapes_track_channels():
+    f_in, layers = model.parse_net(model.TINY_NET)
+    shapes = model.weight_shapes(f_in, layers)
+    assert shapes[0][0] == (4, 1, 3, 3, 3)
+    assert shapes[1][0] == (4, 4, 3, 3, 3)
+    assert shapes[2][0] == (2, 4, 3, 3, 3)
+
+
+def test_net_forward_shape_and_fragments():
+    f_in, layers = model.parse_net(model.TINY_NET)
+    ws = make_weights(f_in, layers)
+    x = rand(99, (1, 1, 13, 13, 13))
+    out = model.net_forward(x, ws, layers, use_pallas=False)
+    # 13 -> conv 11 -> MPF (8 frags of 5) -> conv 3 -> conv 1
+    assert out.shape == (8, 2, 1, 1, 1)
+
+
+def test_pallas_and_ref_paths_agree():
+    f_in, layers = model.parse_net(model.TINY_NET)
+    ws = make_weights(f_in, layers, seed=7)
+    x = rand(5, (1, 1, 13, 13, 13))
+    a = model.net_forward(x, ws, layers, use_pallas=True)
+    b = model.net_forward(x, ws, layers, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_batch_concatenation_property():
+    """§VII.B: applying the net to a concatenated batch equals
+    concatenating per-input results (fragment groups stay contiguous)."""
+    f_in, layers = model.parse_net(model.TINY_NET)
+    ws = make_weights(f_in, layers, seed=3)
+    x1 = rand(11, (1, 1, 13, 13, 13))
+    x2 = rand(12, (1, 1, 13, 13, 13))
+    both = jnp.concatenate([x1, x2], axis=0)
+    o1 = model.net_forward(x1, ws, layers, use_pallas=False)
+    o2 = model.net_forward(x2, ws, layers, use_pallas=False)
+    ob = model.net_forward(both, ws, layers, use_pallas=False)
+    np.testing.assert_allclose(ob, jnp.concatenate([o1, o2], axis=0), rtol=1e-5)
+
+
+def test_mpf_layer_batch_order():
+    """Fragment index must be least-significant in the output batch."""
+    x = jnp.stack([
+        jnp.zeros((1, 5, 5, 5), jnp.float32),
+        jnp.ones((1, 5, 5, 5), jnp.float32),
+    ])
+    out = model.mpf_layer(x, (2, 2, 2), use_pallas=False)
+    assert out.shape == (16, 1, 2, 2, 2)
+    assert float(out[:8].max()) == 0.0
+    assert float(out[8:].min()) == 1.0
+
+
+def test_first_layer_config():
+    f_in, layers = model.parse_net(model.FIRST_LAYER_N337)
+    ws = make_weights(f_in, layers)
+    x = rand(1, (1, 1, 9, 9, 9))
+    out = model.net_forward(x, ws, layers, use_pallas=False)
+    assert out.shape == (1, 8, 8, 8, 8)
+    want = ref.conv3d_ref(x[0], ws[0], ws[1])
+    np.testing.assert_allclose(out[0], want, rtol=1e-5, atol=1e-5)

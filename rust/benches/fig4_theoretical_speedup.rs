@@ -1,0 +1,71 @@
+//! Fig 4: theoretical speedup of MPF pooling networks (FFT-based
+//! costs) vs memory, for several batch sizes, on a 1-pool and a 2-pool
+//! network. Reproduces the paper's finding: with ≥2 pooling layers,
+//! batch size 1 achieves the highest speedup at any memory budget;
+//! 1-pool networks can prefer larger batches.
+
+use znni::net::spec::{LayerSpec, NetSpec};
+use znni::optimizer::theory::speedup_series;
+use znni::util::bench::Table;
+use znni::util::human_bytes;
+
+fn net(pools: usize) -> NetSpec {
+    let mut layers = vec![LayerSpec::Conv { f_out: 8, k: [3; 3] }];
+    for _ in 0..pools {
+        layers.push(LayerSpec::Pool { p: [2; 3] });
+        layers.push(LayerSpec::Conv { f_out: 8, k: [3; 3] });
+    }
+    layers.push(LayerSpec::Conv { f_out: 3, k: [3; 3] });
+    NetSpec { name: format!("fig4-{pools}pool"), f_in: 1, layers }
+}
+
+fn main() {
+    for pools in [1usize, 2] {
+        let n = net(pools);
+        println!("\n== Fig 4{}: {} (batch sizes 1/2/4/8) ==", if pools == 1 { 'a' } else { 'b' }, n.name);
+        let series = speedup_series(&n, &[1, 2, 4, 8], 61, 4);
+        let mut t = Table::new(&["memory", "S=1", "S=2", "S=4", "S=8"]);
+        // Align by memory decade: print each S's speedup at its points;
+        // use the S=1 memory grid and interpolate others by nearest ≤.
+        let grid: Vec<u64> = series[0].points.iter().map(|(m, _)| *m).collect();
+        for (gi, mem) in grid.iter().enumerate() {
+            if gi % 2 == 1 {
+                continue; // thin the table
+            }
+            let mut row = vec![human_bytes(*mem).to_string()];
+            for s in &series {
+                let v = s
+                    .points
+                    .iter()
+                    .filter(|(m, _)| m <= mem)
+                    .map(|(_, v)| *v)
+                    .fold(f64::NAN, f64::max);
+                row.push(if v.is_nan() { "-".into() } else { format!("{v:.1}x") });
+            }
+            t.row(row);
+        }
+        t.print();
+        // Paper-shape check: for the 2-pool net the S=1 column should
+        // dominate at the largest common memory point.
+        if pools == 2 {
+            // Compare at the largest memory point BOTH series cover.
+            let m1 = series[0].points.last().unwrap().0;
+            let m4 = series[2].points.last().unwrap().0;
+            let m_common = m1.min(m4);
+            let best_at = |s: &znni::optimizer::theory::SpeedupSeries| {
+                s.points
+                    .iter()
+                    .filter(|(m, _)| *m <= m_common)
+                    .map(|(_, v)| *v)
+                    .fold(0.0, f64::max)
+            };
+            let v1 = best_at(&series[0]);
+            let v4 = best_at(&series[2]);
+            println!(
+                "2-pool check at {}: S=1 best {v1:.1}x vs S=4 best {v4:.1}x  ({})",
+                human_bytes(m_common),
+                if v1 >= v4 * 0.95 { "paper shape HOLDS" } else { "paper shape VIOLATED" }
+            );
+        }
+    }
+}

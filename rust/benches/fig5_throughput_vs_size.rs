@@ -1,0 +1,71 @@
+//! Fig 5: measured throughput vs input image size for CPU-only and
+//! GPU-only execution of the benchmark nets. ZNNI_SCALE=paper uses the
+//! true Table III nets; the default uses the topology-preserving
+//! miniatures (see net::zoo::bench_miniatures).
+
+use znni::device::Device;
+use znni::net::zoo::{bench_miniatures, benchmark_nets, NetScale};
+use znni::net::{NetSpec, PoolingMode};
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::tensor::Tensor5;
+use znni::util::bench::{Scale, Table};
+use znni::util::human_throughput;
+use znni::util::pool::TaskPool;
+
+fn nets() -> Vec<NetSpec> {
+    match Scale::from_env() {
+        Scale::Paper => benchmark_nets(NetScale::Paper),
+        Scale::Small => bench_miniatures(),
+        Scale::Tiny => bench_miniatures().into_iter().take(2).collect(),
+    }
+}
+
+fn main() {
+    let pool = TaskPool::global();
+    eprintln!("calibrating...");
+    let cm = CostModel::calibrate(pool, 10);
+    let host = Device::host();
+    let gpu = Device::titan_x();
+    println!("== Fig 5: throughput vs input size (measured) ==");
+    for net in nets() {
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let min = net.min_extent(&modes).unwrap();
+        let extents = net.valid_extents(min, min + 24, &modes);
+        let mut t = Table::new(&["input", "CPU-only Vx/s", "GPU-only Vx/s"]);
+        println!("\n-- {} (FoV {:?}) --", net.name, net.field_of_view());
+        let weights = make_weights(&net, 5);
+        for n in extents.into_iter().take(6) {
+            let mut row = vec![format!("{n}^3")];
+            for gpu_mode in [false, true] {
+                let mut space = if gpu_mode {
+                    SearchSpace::gpu_only(gpu.clone(), n)
+                } else {
+                    SearchSpace::cpu_only(host.clone(), n)
+                };
+                space.min_extent = n;
+                space.max_candidates = 1;
+                match search(&net, &space, &cm) {
+                    Some(plan) => {
+                        let cp = compile(&net, &plan, &weights).unwrap();
+                        let input = Tensor5::random(plan.input, 3);
+                        let t0 = std::time::Instant::now();
+                        let out = cp.run(input, pool);
+                        let mut secs = t0.elapsed().as_secs_f64();
+                        if gpu_mode {
+                            secs += gpu.transfer_secs(
+                                plan.input.bytes_f32() + out.shape().bytes_f32(),
+                            );
+                        }
+                        let osh = out.shape();
+                        let vox = (osh.s * osh.x * osh.y * osh.z) as f64;
+                        row.push(human_throughput(vox / secs));
+                    }
+                    None => row.push("infeasible".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("\n(paper shape: throughput grows with input size until the device memory frontier)");
+}

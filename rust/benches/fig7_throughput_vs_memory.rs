@@ -1,0 +1,63 @@
+//! Fig 7: measured throughput vs memory consumed for the four
+//! approaches (CPU-only, GPU-only, GPU + host RAM, CPU-GPU), sweeping
+//! the memory budget. Miniature nets by default; ZNNI_SCALE=paper uses
+//! the Table III nets.
+
+use std::sync::Arc;
+
+use znni::approaches::{run_approach, Approach};
+use znni::device::Device;
+use znni::net::zoo::{bench_miniatures, benchmark_nets, NetScale};
+use znni::net::{NetSpec, PoolingMode};
+use znni::optimizer::CostModel;
+use znni::util::bench::{Scale, Table};
+use znni::util::{human_bytes, human_throughput};
+use znni::util::pool::TaskPool;
+
+fn nets() -> Vec<NetSpec> {
+    match Scale::from_env() {
+        Scale::Paper => benchmark_nets(NetScale::Paper),
+        Scale::Small => bench_miniatures(),
+        Scale::Tiny => bench_miniatures().into_iter().take(1).collect(),
+    }
+}
+
+fn main() {
+    let pool = TaskPool::global();
+    eprintln!("calibrating...");
+    let cm = CostModel::calibrate(pool, 10);
+    println!("== Fig 7: throughput vs memory budget (measured + modelled transfers) ==");
+    // Budgets scaled down from the paper's 256 GB host / 12 GB device.
+    let budgets: &[(u64, u64)] = &[
+        (8 << 20, 2 << 20), // host 8 MiB, device 2 MiB — memory binds hard
+        (32 << 20, 8 << 20),
+        (128 << 20, 32 << 20),
+        (512 << 20, 128 << 20),
+    ];
+    for net in nets() {
+        println!("\n-- {} --", net.name);
+        let weights: Vec<Arc<_>> = znni::optimizer::make_weights(&net, 5);
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let min = net.min_extent(&modes).unwrap();
+        let mut t = Table::new(&["host RAM", "dev RAM", "CPU-only", "GPU-only", "GPU+host", "CPU-GPU"]);
+        for &(host_b, gpu_b) in budgets {
+            let host = Device::host_with_ram(host_b);
+            let gpu = Device::gpu_with_ram(gpu_b);
+            let mut row = vec![human_bytes(host_b).to_string(), human_bytes(gpu_b).to_string()];
+            for a in Approach::ALL {
+                match run_approach(a, &net, &weights, &host, &gpu, &cm, pool, min + 44) {
+                    Ok(r) => row.push(format!(
+                        "{} @{}³",
+                        human_throughput(r.throughput()),
+                        r.input_extent
+                    )),
+                    Err(_) => row.push("infeasible".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("\n(paper shape: GPU-only saturates at the device frontier; GPU+host and CPU-GPU keep");
+    println!(" scaling with host RAM; CPU-GPU is the top line)");
+}

@@ -1,0 +1,59 @@
+//! §IV claims on the convolutional primitives:
+//! * direct "MKL" ≈ 2× naive;
+//! * task-parallel FFT ≫ data-parallel FFT when f·S is large
+//!   (paper: up to 10× on a 4-way Xeon — structural here on 1 core);
+//! * FFT-based beats direct for larger kernels.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use znni::conv::{Activation, Weights};
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::ConvAlgo;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::{time_budget, Scale, Table};
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    let scale = Scale::from_env();
+    let (n, f, s) = match scale {
+        Scale::Paper => (48, 16, 2),
+        Scale::Small => (20, 8, 2),
+        Scale::Tiny => (12, 4, 1),
+    };
+    println!("== Convolutional primitive comparison (n={n}, f=f'={f}, S={s}) ==");
+    let mut table = Table::new(&["kernel", "algo", "ms/layer", "GFLOP/s", "vs naive"]);
+    let budget = Duration::from_millis(500);
+    for &k in &[2usize, 3, 5] {
+        let w = Arc::new(Weights::random(f, f, [k, k, k], 7));
+        let sh = Shape5::new(s, f, n, n, n);
+        let mut naive_ms = 0.0;
+        for algo in [
+            ConvAlgo::DirectNaive,
+            ConvAlgo::DirectMkl,
+            ConvAlgo::FftDataParallel,
+            ConvAlgo::FftTaskParallel,
+            ConvAlgo::GpuFft,
+        ] {
+            let layer = ConvLayer::new(w.clone(), algo, Activation::Relu);
+            let flops = layer.flops(sh);
+            let sample = time_budget(budget, || {
+                let t = Tensor5::random(sh, 3);
+                std::hint::black_box(layer.execute(t, pool));
+            });
+            let ms = sample.secs() * 1e3;
+            if algo == ConvAlgo::DirectNaive {
+                naive_ms = ms;
+            }
+            table.row(vec![
+                format!("{k}^3"),
+                algo.tag().into(),
+                format!("{ms:.2}"),
+                format!("{:.2}", flops / sample.secs() / 1e9),
+                format!("{:.2}x", naive_ms / ms),
+            ]);
+        }
+    }
+    table.print();
+}

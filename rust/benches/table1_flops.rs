@@ -1,0 +1,72 @@
+//! Table I: input/output shape relations and FLOP counts. Verifies the
+//! shape algebra and checks measured time scales with the analytic
+//! FLOPs (time/FLOPs roughly constant per algorithm).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use znni::conv::{conv_out_shape, Activation, Weights};
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::{ConvAlgo, ConvDims};
+use znni::pool::{max_pool_out_shape, mpf_out_shape};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::{time_budget, Table};
+use znni::util::pool::TaskPool;
+
+fn main() {
+    println!("== Table I: shapes ==");
+    let mut t = Table::new(&["layer", "input", "output", "FLOPs"]);
+    let sh = Shape5::new(2, 4, 16, 16, 16);
+    let d = ConvDims { s: 2, f_in: 4, f_out: 8, n: [16; 3], k: [3; 3] };
+    t.row(vec![
+        "Conv direct".into(),
+        sh.to_string(),
+        conv_out_shape(sh, 8, [3; 3]).to_string(),
+        format!("{:.2e}", d.direct_flops()),
+    ]);
+    t.row(vec![
+        "Conv FFT".into(),
+        sh.to_string(),
+        conv_out_shape(sh, 8, [3; 3]).to_string(),
+        format!("{:.2e}", d.fft_flops()),
+    ]);
+    t.row(vec![
+        "Max pooling".into(),
+        sh.to_string(),
+        max_pool_out_shape(sh, [2; 3]).to_string(),
+        format!("{:.2e}", sh.len() as f64),
+    ]);
+    let msh = Shape5::new(2, 4, 15, 15, 15);
+    t.row(vec![
+        "Max frag pooling".into(),
+        msh.to_string(),
+        mpf_out_shape(msh, [2; 3]).to_string(),
+        format!("{:.2e}", msh.len() as f64 * 8.0),
+    ]);
+    t.print();
+
+    println!("\n== time ∝ FLOPs check (GFLOP/s should be ~flat per algo) ==");
+    let pool = TaskPool::global();
+    let mut t2 = Table::new(&["algo", "n", "FLOPs", "ms", "GFLOP/s"]);
+    let budget = Duration::from_millis(400);
+    for algo in [ConvAlgo::DirectMkl, ConvAlgo::FftTaskParallel] {
+        for &n in &[10usize, 14, 18, 24] {
+            let w = Arc::new(Weights::random(4, 4, [3; 3], 5));
+            let layer = ConvLayer::new(w, algo, Activation::Relu);
+            let sh = Shape5::new(1, 4, n, n, n);
+            let flops = layer.flops(sh);
+            let s = time_budget(budget, || {
+                let inp = Tensor5::random(sh, 3);
+                std::hint::black_box(layer.execute(inp, pool));
+            });
+            t2.row(vec![
+                algo.tag().into(),
+                format!("{n}"),
+                format!("{flops:.2e}"),
+                format!("{:.2}", s.secs() * 1e3),
+                format!("{:.2}", flops / s.secs() / 1e9),
+            ]);
+        }
+    }
+    t2.print();
+}

@@ -1,0 +1,37 @@
+//! Table II: memory required by each implementation — analytic model vs
+//! measured peak from the allocation ledger.
+
+use std::sync::Arc;
+
+use znni::conv::{Activation, Weights};
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::Table;
+use znni::util::human_bytes;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    println!("== Table II: memory model vs measured peak ==");
+    let mut t = Table::new(&["algorithm", "model", "measured", "measured/model"]);
+    let d = ConvDims { s: 2, f_in: 6, f_out: 6, n: [18; 3], k: [3; 3] };
+    let sh = Shape5::from_spatial(d.s, d.f_in, d.n);
+    for algo in ConvAlgo::ALL {
+        let w = Arc::new(Weights::random(d.f_out, d.f_in, d.k, 3));
+        let layer = ConvLayer::new(w, algo, Activation::Relu);
+        let model = conv_memory_bytes(algo, &d, pool.workers());
+        let input = Tensor5::random(sh, 5);
+        let in_bytes = sh.bytes_f32();
+        let (_out, peak) = znni::memory::measure(|| layer.execute(input, pool));
+        let measured = peak + in_bytes;
+        t.row(vec![
+            algo.name().into(),
+            human_bytes(model).to_string(),
+            human_bytes(measured).to_string(),
+            format!("{:.2}", measured as f64 / model as f64),
+        ]);
+    }
+    t.print();
+    println!("(model must upper-bound measured; GPU-FFT model includes the K scratch constant)");
+}

@@ -1,0 +1,50 @@
+//! Table IV: optimal primitive choice per layer + optimal input size
+//! for the four benchmark nets on the simulated 12 GB GPU. Pure
+//! cost-model search (no execution), so this runs the REAL Table III
+//! nets at Small scale by default (ZNNI_SCALE=paper for 80 maps).
+
+use znni::device::Device;
+use znni::net::zoo::{benchmark_nets, NetScale};
+use znni::net::PoolingMode;
+use znni::optimizer::{plan_table, search, CostModel, SearchSpace};
+use znni::util::bench::Table;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let scale = NetScale::from_env();
+    let pool = TaskPool::global();
+    eprintln!("calibrating...");
+    let cm = CostModel::calibrate(pool, 10);
+    let gpu = Device::titan_x();
+    println!("== Table IV: optimal GPU-only layer primitives (scale {scale:?}, 12 GiB device) ==");
+    let nets = benchmark_nets(scale);
+    let mut plans = Vec::new();
+    for net in &nets {
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let min = net.min_extent(&modes).unwrap();
+        let mut space = SearchSpace::gpu_only(gpu.clone(), min + 64);
+        space.max_candidates = 16;
+        plans.push(search(net, &space, &cm).map(|p| plan_table(&p)));
+    }
+    let mut t = Table::new(&["", "n337", "n537", "n726", "n926"]);
+    let rows = plans.iter().flatten().map(|p| p.len()).max().unwrap_or(0);
+    for r in 0..rows {
+        let mut row = vec![String::new()];
+        for p in &plans {
+            match p {
+                Some(rows_) if r < rows_.len() => {
+                    if row[0].is_empty() {
+                        row[0] = rows_[r].0.clone();
+                    }
+                    row.push(rows_[r].1.clone());
+                }
+                Some(_) => row.push(String::new()),
+                None => row.push("infeasible".into()),
+            }
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("(paper shape: layer 1 uses the lean CuDNN1 — the memory frontier beats raw speed;");
+    println!(" later layers switch to FFT for the large-kernel nets n726/n926)");
+}

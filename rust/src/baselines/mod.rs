@@ -1,0 +1,409 @@
+//! Baseline comparators for Table V (§VIII).
+//!
+//! Each reimplements the *algorithm* of a publicly available competitor
+//! on our substrate, so the comparison isolates algorithmic choices:
+//!
+//! * **Baseline (cuDNN)** — the naive approach: compute every
+//!   subsampling offset of each max-pooling layer separately with plain
+//!   pooling (no reuse across offsets). Dense conv + max-pool.
+//! * **Caffe (strided kernels)** — dense convolution with *dilated*
+//!   kernels after each pooling (Tschopp 2015): no batch blow-up, but a
+//!   training-oriented memory profile (keeps every intermediate, as the
+//!   paper observed it could only run the smallest net).
+//! * **ELEKTRONN** — MPF pooling like ZNNi, but convolution fixed to
+//!   the dense (cuDNN-style) primitive.
+//! * **ZNN** — max-filtering + FFT-based sparse (dilated) convolution
+//!   on the CPU (Zlateski et al. 2015): dense sliding-window semantics
+//!   with kernels dilated by the cumulative pooling stride.
+
+use crate::conv::{Activation, Weights};
+use crate::net::{LayerSpec, NetSpec, PoolingMode};
+use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+/// Which baseline algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Baseline {
+    NaiveCudnn,
+    CaffeStrided,
+    Elektronn,
+    Znn,
+}
+
+impl Baseline {
+    pub const ALL: [Baseline; 4] =
+        [Baseline::NaiveCudnn, Baseline::CaffeStrided, Baseline::Elektronn, Baseline::Znn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::NaiveCudnn => "Baseline (cuDNN)",
+            Baseline::CaffeStrided => "Caffe",
+            Baseline::Elektronn => "ELEKTRONN",
+            Baseline::Znn => "ZNN",
+        }
+    }
+}
+
+/// Max-filtering: sliding max with window p, stride 1 (ZNN's pooling).
+/// Output extent n − p + 1.
+pub fn max_filter(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
+    let ish = input.shape();
+    let osh = Shape5 {
+        x: ish.x - p[0] + 1,
+        y: ish.y - p[1] + 1,
+        z: ish.z - p[2] + 1,
+        ..ish
+    };
+    let mut out = Tensor5::zeros(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    let ol = osh.image_len();
+    pool.parallel_for(ish.s * ish.f, |sf| {
+        let (s, f) = (sf / ish.f, sf % ish.f);
+        let img = input.image(s, f);
+        let o = unsafe { outp.slice_mut(osh.image_offset(s, f), ol) };
+        for x in 0..osh.x {
+            for y in 0..osh.y {
+                for z in 0..osh.z {
+                    let mut m = f32::NEG_INFINITY;
+                    for a in 0..p[0] {
+                        for b in 0..p[1] {
+                            let row = ((x + a) * ish.y + (y + b)) * ish.z + z;
+                            for c in 0..p[2] {
+                                m = m.max(img[row + c]);
+                            }
+                        }
+                    }
+                    o[(x * osh.y + y) * osh.z + z] = m;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Dilate a weight set by `d` (insert d−1 zeros between taps): the
+/// "strided kernels" / "sparse convolution" of Caffe and ZNN.
+pub fn dilate_weights(w: &Weights, d: Vec3) -> Weights {
+    let nk = [
+        (w.k[0] - 1) * d[0] + 1,
+        (w.k[1] - 1) * d[1] + 1,
+        (w.k[2] - 1) * d[2] + 1,
+    ];
+    let mut out = Weights::zeros(w.f_out, w.f_in, nk);
+    for j in 0..w.f_out {
+        for i in 0..w.f_in {
+            let src = w.kernel(j, i);
+            let dst = out.kernel_mut(j, i);
+            for a in 0..w.k[0] {
+                for b in 0..w.k[1] {
+                    for c in 0..w.k[2] {
+                        dst[((a * d[0]) * nk[1] + b * d[1]) * nk[2] + c * d[2]] =
+                            src[(a * w.k[1] + b) * w.k[2] + c];
+                    }
+                }
+            }
+        }
+        out.set_bias(j, w.bias(j));
+    }
+    out
+}
+
+/// Run a baseline over one input patch, returning the *dense*
+/// sliding-window output (extent n − FoV + 1 per dim) so all baselines
+/// and ZNNi modes are compared on identical work.
+pub fn run_baseline(
+    b: Baseline,
+    net: &NetSpec,
+    weights: &[std::sync::Arc<Weights>],
+    input: &Tensor5,
+    pool: &TaskPool,
+) -> anyhow::Result<Tensor5> {
+    match b {
+        Baseline::NaiveCudnn => run_naive_subsampling(net, weights, input, pool),
+        Baseline::CaffeStrided | Baseline::Znn => run_dilated(b, net, weights, input, pool),
+        Baseline::Elektronn => run_elektronn(net, weights, input, pool),
+    }
+}
+
+/// Naive: for every combined pooling offset, run the plain max-pool net
+/// on the shifted input, then interleave — no reuse across offsets.
+fn run_naive_subsampling(
+    net: &NetSpec,
+    weights: &[std::sync::Arc<Weights>],
+    input: &Tensor5,
+    pool: &TaskPool,
+) -> anyhow::Result<Tensor5> {
+    let ish = input.shape();
+    let fov = net.field_of_view();
+    let stride = net.total_stride();
+    let odims = [ish.x - fov[0] + 1, ish.y - fov[1] + 1, ish.z - fov[2] + 1];
+    let mut out = Tensor5::zeros(Shape5::from_spatial(1, net.f_out(), odims));
+    // For each offset, crop the largest shifted sub-volume whose sizes
+    // satisfy the max-pool divisibility, run, and scatter at stride.
+    for ox in 0..stride[0] {
+        for oy in 0..stride[1] {
+            for oz in 0..stride[2] {
+                let off = [ox, oy, oz];
+                // positions covered: off + stride·t < odims
+                let cnt = [
+                    (odims[0] + stride[0] - 1 - off[0]) / stride[0],
+                    (odims[1] + stride[1] - 1 - off[1]) / stride[1],
+                    (odims[2] + stride[2] - 1 - off[2]) / stride[2],
+                ];
+                if cnt.iter().any(|&c| c == 0) {
+                    continue;
+                }
+                // input region needed: fov + (cnt-1)*stride per dim
+                let idims = [
+                    fov[0] + (cnt[0] - 1) * stride[0],
+                    fov[1] + (cnt[1] - 1) * stride[1],
+                    fov[2] + (cnt[2] - 1) * stride[2],
+                ];
+                let mut sub = Tensor5::zeros(Shape5::from_spatial(1, ish.f, idims));
+                for f in 0..ish.f {
+                    for x in 0..idims[0] {
+                        for y in 0..idims[1] {
+                            for z in 0..idims[2] {
+                                sub.set(0, f, x, y, z, input.at(0, f, ox + x, oy + y, oz + z));
+                            }
+                        }
+                    }
+                }
+                let res = forward_plain(net, weights, sub, PoolingMode::MaxPool, pool)?;
+                let rsh = res.shape();
+                debug_assert_eq!([rsh.x, rsh.y, rsh.z], cnt);
+                for f in 0..rsh.f {
+                    for x in 0..rsh.x {
+                        for y in 0..rsh.y {
+                            for z in 0..rsh.z {
+                                out.set(
+                                    0,
+                                    f,
+                                    off[0] + stride[0] * x,
+                                    off[1] + stride[1] * y,
+                                    off[2] + stride[2] * z,
+                                    res.at(0, f, x, y, z),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Plain forward with uniform pooling mode and dense direct conv.
+fn forward_plain(
+    net: &NetSpec,
+    weights: &[std::sync::Arc<Weights>],
+    input: Tensor5,
+    mode: PoolingMode,
+    pool: &TaskPool,
+) -> anyhow::Result<Tensor5> {
+    let mut cur = input;
+    let mut wi = 0;
+    for l in &net.layers {
+        cur = match l {
+            LayerSpec::Conv { .. } => {
+                let w = &weights[wi];
+                wi += 1;
+                crate::conv::direct::conv_direct_mkl(&cur, w, Activation::Relu, pool)
+            }
+            LayerSpec::Pool { p } => match mode {
+                PoolingMode::MaxPool => crate::pool::max_pool(&cur, *p, pool),
+                PoolingMode::Mpf => crate::pool::mpf_forward(&cur, *p, pool),
+            },
+        };
+    }
+    Ok(cur)
+}
+
+/// Dilated-kernel dense network (Caffe "strided kernels" / ZNN "sparse
+/// convolution"): pooling becomes max-filtering (stride 1) and every
+/// subsequent kernel is dilated by the cumulative pooling factor. The
+/// output is dense directly. Caffe uses dense direct convolution; ZNN
+/// uses the FFT-based primitive for the (dilated) convolutions.
+fn run_dilated(
+    b: Baseline,
+    net: &NetSpec,
+    weights: &[std::sync::Arc<Weights>],
+    input: &Tensor5,
+    pool: &TaskPool,
+) -> anyhow::Result<Tensor5> {
+    let mut cur = input.clone_tensor();
+    let mut dil: Vec3 = [1, 1, 1];
+    let mut wi = 0;
+    for l in &net.layers {
+        cur = match l {
+            LayerSpec::Conv { .. } => {
+                let w = dilate_weights(&weights[wi], dil);
+                wi += 1;
+                match b {
+                    // ZNN: FFT-based sparse convolution. The dilated
+                    // kernel's zero taps cost nothing in the spectrum
+                    // product; the pruned FFT skips their lines.
+                    Baseline::Znn => {
+                        crate::conv::fft_tp::conv_fft_tp(cur, &w, Activation::Relu, pool)
+                    }
+                    // Caffe: dense direct convolution of the dilated
+                    // kernel (zero taps skipped in the inner loop).
+                    _ => crate::conv::direct::conv_direct_mkl(&cur, &w, Activation::Relu, pool),
+                }
+            }
+            LayerSpec::Pool { p } => {
+                let pd = [p[0] * dil[0] - dil[0] + 1, p[1] * dil[1] - dil[1] + 1, p[2] * dil[2] - dil[2] + 1];
+                let filtered = max_filter(&cur, pd, pool);
+                for d in 0..3 {
+                    dil[d] *= p[d];
+                }
+                filtered
+            }
+        };
+    }
+    Ok(cur)
+}
+
+/// ELEKTRONN: MPF pooling (like ZNNi) + dense conv primitives, then
+/// recombine fragments to the dense output.
+fn run_elektronn(
+    net: &NetSpec,
+    weights: &[std::sync::Arc<Weights>],
+    input: &Tensor5,
+    pool: &TaskPool,
+) -> anyhow::Result<Tensor5> {
+    let modes = vec![PoolingMode::Mpf; net.pool_count()];
+    let raw = forward_plain(net, weights, input.clone_tensor(), PoolingMode::Mpf, pool)?;
+    let map = crate::inference::fragment_map(net, &modes)?;
+    Ok(crate::inference::recombine(&raw, 1, &map))
+}
+
+/// Memory-model estimate for a baseline on a cubic input (for the
+/// Table V "largest input that fits" search). Training-oriented
+/// frameworks (Caffe, ELEKTRONN) keep all intermediates resident.
+pub fn baseline_memory_bytes(b: Baseline, net: &NetSpec, extent: usize) -> Option<u64> {
+    let modes = match b {
+        Baseline::Elektronn => vec![PoolingMode::Mpf; net.pool_count()],
+        _ => vec![PoolingMode::MaxPool; net.pool_count()],
+    };
+    let input = Shape5::new(1, net.f_in, extent, extent, extent);
+    match b {
+        Baseline::CaffeStrided | Baseline::Elektronn => {
+            // Dense semantics: every intermediate kept (training-style).
+            // Approximate the dilated shapes by the undecimated extent.
+            let mut total = input.bytes_f32();
+            let mut f = net.f_in;
+            let mut n = [extent, extent, extent];
+            for l in &net.layers {
+                match l {
+                    LayerSpec::Conv { f_out, k } => {
+                        for d in 0..3 {
+                            n[d] = n[d].checked_sub(k[d] - 1)?;
+                        }
+                        f = *f_out;
+                    }
+                    LayerSpec::Pool { p } => {
+                        for d in 0..3 {
+                            n[d] = n[d].checked_sub(p[d] - 1)?;
+                        }
+                    }
+                }
+                total += (f * n[0] * n[1] * n[2] * 4) as u64;
+            }
+            Some(total)
+        }
+        _ => {
+            // Inference-style: two live tensors (input+output of the
+            // current layer).
+            let shapes = net.shapes(input, &modes).ok()?;
+            let mut peak = 0u64;
+            let mut prev = input;
+            for s in &shapes {
+                peak = peak.max(prev.bytes_f32() + s.bytes_f32());
+                prev = *s;
+            }
+            Some(peak)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo::tiny_net;
+    use crate::optimizer::make_weights;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn max_filter_window1_is_identity() {
+        let p = tpool();
+        let t = Tensor5::random(Shape5::new(1, 2, 4, 4, 4), 3);
+        let o = max_filter(&t, [1, 1, 1], &p);
+        assert_eq!(o.data(), t.data());
+    }
+
+    #[test]
+    fn max_filter_matches_manual() {
+        let p = tpool();
+        let t = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 5);
+        let o = max_filter(&t, [2, 2, 2], &p);
+        assert_eq!(o.shape(), Shape5::new(1, 1, 3, 3, 3));
+        let mut m = f32::NEG_INFINITY;
+        for a in 0..2 {
+            for b in 0..2 {
+                for c in 0..2 {
+                    m = m.max(t.at(0, 0, 1 + a, 2 + b, 0 + c));
+                }
+            }
+        }
+        assert_eq!(o.at(0, 0, 1, 2, 0), m);
+    }
+
+    #[test]
+    fn dilation_roundtrip() {
+        let w = Weights::random(2, 2, [3, 3, 3], 1);
+        let d = dilate_weights(&w, [2, 2, 2]);
+        assert_eq!(d.k, [5, 5, 5]);
+        assert_eq!(d.kernel(1, 0)[0], w.kernel(1, 0)[0]);
+        assert_eq!(d.kernel(1, 0)[(2 * 5 + 2) * 5 + 2], w.kernel(1, 0)[(1 * 3 + 1) * 3 + 1]);
+        assert_eq!(d.kernel(1, 0)[1], 0.0);
+        // d = 1 is the identity.
+        let same = dilate_weights(&w, [1, 1, 1]);
+        assert_eq!(same.kernel(0, 1), w.kernel(0, 1));
+    }
+
+    /// All four baselines must produce the SAME dense sliding-window
+    /// output (they differ in speed/memory, not semantics).
+    #[test]
+    fn all_baselines_agree_on_dense_output() {
+        let p = tpool();
+        let net = tiny_net(2);
+        let weights = make_weights(&net, 11);
+        let input = Tensor5::random(Shape5::new(1, 1, 15, 15, 15), 13);
+        let reference = run_baseline(Baseline::NaiveCudnn, &net, &weights, &input, &p).unwrap();
+        let fov = net.field_of_view();
+        assert_eq!(
+            reference.shape(),
+            Shape5::new(1, 2, 15 - fov[0] + 1, 15 - fov[1] + 1, 15 - fov[2] + 1)
+        );
+        for b in [Baseline::CaffeStrided, Baseline::Elektronn, Baseline::Znn] {
+            let out = run_baseline(b, &net, &weights, &input, &p).unwrap();
+            assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, b.name());
+        }
+    }
+
+    #[test]
+    fn training_style_memory_exceeds_inference_style() {
+        let net = tiny_net(8);
+        let m_caffe = baseline_memory_bytes(Baseline::CaffeStrided, &net, 32).unwrap();
+        let m_naive = baseline_memory_bytes(Baseline::NaiveCudnn, &net, 32).unwrap();
+        assert!(m_caffe > m_naive);
+    }
+}

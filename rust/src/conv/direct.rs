@@ -1,0 +1,179 @@
+//! Direct convolution — Algorithm 1 (§IV.A.1).
+//!
+//! The computation is parallelised by two `parallel for` loops so every
+//! output image of every batch entry is produced on its own worker.
+//! Two variants:
+//!
+//! * **naive** — textbook six-loop accumulation straight into the
+//!   output image; minimal memory (Table II row 1);
+//! * **"MKL"** — convolve into a per-thread temporary image with a
+//!   z-contiguous multiply-add inner loop, then accumulate; ~2× faster
+//!   at the cost of `T·n'` extra elements (Table II row 2). It mirrors
+//!   the paper's Intel-MKL-backed variant, which also trades a temp
+//!   image for speed.
+
+use crate::tensor::{Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+use super::{conv_out_shape, convolve_valid_accumulate, Activation, Weights};
+
+/// Direct convolutional layer, naive inner loop.
+pub fn conv_direct_naive(
+    input: &Tensor5,
+    w: &Weights,
+    act: Activation,
+    pool: &TaskPool,
+) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let mut out = Tensor5::zeros(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    let img_len = osh.image_len();
+    // parallel over (s, j) pairs — Algorithm 1's two parallel-for loops.
+    pool.parallel_for(ish.s * w.f_out, |sj| {
+        let (s, j) = (sj / w.f_out, sj % w.f_out);
+        let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
+        for i in 0..w.f_in {
+            convolve_valid_accumulate(input.image(s, i), ish.spatial(), w.kernel(j, i), w.k, o);
+        }
+        let b = w.bias(j);
+        for v in o.iter_mut() {
+            *v = act.apply(*v + b);
+        }
+    });
+    out
+}
+
+/// Direct convolutional layer, optimised ("MKL") inner loop: per-thread
+/// temporary image, z-contiguous fused multiply-add over kernel taps.
+pub fn conv_direct_mkl(
+    input: &Tensor5,
+    w: &Weights,
+    act: Activation,
+    pool: &TaskPool,
+) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let mut out = Tensor5::zeros(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    let img_len = osh.image_len();
+    let n = ish.spatial();
+    let on = osh.spatial();
+    pool.parallel_for(ish.s * w.f_out, |sj| {
+        let (s, j) = (sj / w.f_out, sj % w.f_out);
+        let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
+        // The temporary image (the T·n' of Table II) is tracked so the
+        // memory-model test observes it.
+        let mut tmp = crate::memory::TrackedVec::<f32>::zeroed(img_len, "direct-mkl temp");
+        for i in 0..w.f_in {
+            tmp.as_mut_slice().fill(0.0);
+            convolve_rows_fma(input.image(s, i), n, w.kernel(j, i), w.k, on, tmp.as_mut_slice());
+            for (d, t) in o.iter_mut().zip(tmp.as_slice()) {
+                *d += *t;
+            }
+        }
+        let b = w.bias(j);
+        for v in o.iter_mut() {
+            *v = act.apply(*v + b);
+        }
+    });
+    out
+}
+
+/// Row-vectorised valid convolution: for each kernel tap, multiply-add a
+/// contiguous z-run of the input into the output row. The inner loop is
+/// a `[f32]` axpy the compiler auto-vectorises.
+fn convolve_rows_fma(img: &[f32], n: Vec3, ker: &[f32], k: Vec3, on: Vec3, out: &mut [f32]) {
+    for x in 0..on[0] {
+        for y in 0..on[1] {
+            let orow = &mut out[(x * on[1] + y) * on[2]..(x * on[1] + y) * on[2] + on[2]];
+            for a in 0..k[0] {
+                for b in 0..k[1] {
+                    let irow_base = ((x + a) * n[1] + (y + b)) * n[2];
+                    for c in 0..k[2] {
+                        let kv = ker[((k[0] - 1 - a) * k[1] + (k[1] - 1 - b)) * k[2]
+                            + (k[2] - 1 - c)];
+                        if kv == 0.0 {
+                            continue;
+                        }
+                        let irow = &img[irow_base + c..irow_base + c + on[2]];
+                        for (d, iv) in orow.iter_mut().zip(irow) {
+                            *d += kv * *iv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_layer_reference;
+    use crate::tensor::Shape5;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn pool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn naive_matches_reference() {
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 1);
+        let w = Weights::random(4, 3, [3, 2, 3], 2);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_direct_naive(&input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "direct naive");
+    }
+
+    #[test]
+    fn mkl_matches_reference() {
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 3);
+        let w = Weights::random(4, 3, [3, 3, 3], 4);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_direct_mkl(&input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "direct mkl");
+    }
+
+    #[test]
+    fn asymmetric_kernels_ok() {
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(1, 2, 5, 8, 6), 5);
+        let w = Weights::random(2, 2, [1, 4, 2], 6);
+        let expect = conv_layer_reference(&input, &w, Activation::None);
+        for got in [
+            conv_direct_naive(&input, &w, Activation::None, &p),
+            conv_direct_mkl(&input, &w, Activation::None, &p),
+        ] {
+            assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "asym");
+        }
+    }
+
+    #[test]
+    fn property_direct_variants_agree() {
+        let p = pool();
+        crate::util::quick::check("direct naive == mkl", |g| {
+            let s = g.usize(1, 2);
+            let fi = g.usize(1, 3);
+            let fo = g.usize(1, 3);
+            let k = [g.usize(1, 3), g.usize(1, 3), g.usize(1, 3)];
+            let n = [
+                k[0] + g.usize(0, 4),
+                k[1] + g.usize(0, 4),
+                k[2] + g.usize(0, 4),
+            ];
+            let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64);
+            let w = Weights::random(fo, fi, k, g.case as u64 + 100);
+            let a = conv_direct_naive(&input, &w, Activation::Relu, &p);
+            let b = conv_direct_mkl(&input, &w, Activation::Relu, &p);
+            assert_allclose(b.data(), a.data(), 1e-5, 1e-4, "variants");
+        });
+    }
+}

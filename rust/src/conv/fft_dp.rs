@@ -1,0 +1,132 @@
+//! Data-parallel FFT convolution — Algorithm 2 (§IV.A.2).
+//!
+//! Every computationally intensive operation (each 3D FFT, each inverse
+//! FFT, each point-wise multiply-add sweep) is *individually*
+//! parallelised across all workers. This variant has lower memory
+//! overhead than the task-parallel algorithm (one kernel spectrum and
+//! one output accumulator tensor live at a time) but keeps all workers
+//! touching shared data — the paper measures it up to 10× slower than
+//! the task-parallel algorithm when `f·S` is large, yet it remains the
+//! best choice for the first layer where `f = S = 1`.
+
+use crate::fft::fft3d::Fft3;
+use crate::fft::fft_optimal_vec3;
+use crate::memory::TrackedVec;
+use crate::tensor::{CTensor5, Complex32, Shape5, Tensor5};
+use crate::util::pool::TaskPool;
+
+use super::{conv_out_shape, Activation, Weights};
+
+/// FFT-based convolutional layer, data-parallel variant.
+///
+/// Consumes `input` (Algorithm 2 frees I after the forward transforms).
+pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let n = ish.spatial();
+    let padded = fft_optimal_vec3(n);
+    let plan = Fft3::new(padded);
+    let kplan = Fft3::new(padded);
+    let zc = plan.zc();
+    let csh = Shape5::new(ish.s, ish.f, padded[0], padded[1], zc);
+
+    // Stage 1 — forward transforms of all input images (each transform
+    // internally parallel), then free the input.
+    let mut itrans = CTensor5::zeros(csh);
+    for s in 0..ish.s {
+        for i in 0..ish.f {
+            let img = input.image(s, i);
+            let spec = itrans.image_mut(s, i);
+            plan.forward_par(img, n, spec, pool);
+        }
+    }
+    drop(input);
+
+    // Stage 2 — for each output map: transform its kernels one at a
+    // time (w̃ is a single spectrum buffer), multiply-add into the
+    // per-batch accumulator Õ, then inverse-transform into O.
+    let mut out = Tensor5::zeros(osh);
+    let spec_len = plan.complex_len();
+    let mut otrans: TrackedVec<Complex32> = TrackedVec::zeroed(ish.s * spec_len, "fft-dp Otilde");
+    let mut wtrans: TrackedVec<Complex32> = TrackedVec::zeroed(spec_len, "fft-dp wtilde");
+    let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
+    let crop = [osh.x, osh.y, osh.z];
+    for j in 0..w.f_out {
+        otrans.as_mut_slice().fill(Complex32::ZERO);
+        for i in 0..w.f_in {
+            kplan.forward_par(w.kernel(j, i), w.k, wtrans.as_mut_slice(), pool);
+            for s in 0..ish.s {
+                let acc = &mut otrans.as_mut_slice()[s * spec_len..(s + 1) * spec_len];
+                Fft3::mad_spectra_par(acc, itrans.image(s, i), wtrans.as_slice(), pool);
+            }
+        }
+        let b = w.bias(j);
+        for s in 0..ish.s {
+            let acc = &mut otrans.as_mut_slice()[s * spec_len..(s + 1) * spec_len];
+            plan.inverse_crop_par(acc, crop_off, crop, out.image_mut(s, j), pool);
+            for v in out.image_mut(s, j).iter_mut() {
+                *v = act.apply(*v + b);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_layer_reference;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn pool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 11);
+        let w = Weights::random(4, 3, [3, 2, 3], 12);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_dp(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-dp");
+    }
+
+    #[test]
+    fn first_layer_shape_s1_f1() {
+        // The configuration the paper finds FFT-DP optimal for.
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(1, 1, 12, 12, 12), 13);
+        let w = Weights::random(5, 1, [4, 4, 4], 14);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_dp(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-dp first layer");
+    }
+
+    #[test]
+    fn property_matches_reference() {
+        let p = pool();
+        crate::util::quick::check_with(
+            crate::util::quick::Config { cases: 12, ..Default::default() },
+            "fft-dp == reference",
+            |g| {
+                let s = g.usize(1, 2);
+                let fi = g.usize(1, 3);
+                let fo = g.usize(1, 3);
+                let k = [g.usize(1, 4), g.usize(1, 4), g.usize(1, 4)];
+                let n = [
+                    k[0] + g.usize(0, 5),
+                    k[1] + g.usize(0, 5),
+                    k[2] + g.usize(0, 5),
+                ];
+                let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64 + 3);
+                let w = Weights::random(fo, fi, k, g.case as u64 + 200);
+                let expect = conv_layer_reference(&input, &w, Activation::None);
+                let got = conv_fft_dp(input, &w, Activation::None, &p);
+                assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "prop fft-dp");
+            },
+        );
+    }
+}

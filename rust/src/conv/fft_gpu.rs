@@ -1,0 +1,187 @@
+//! FFT convolution, GPU scheme — Algorithm 3 (§IV.B.2).
+//!
+//! Built on the batched pruned FFT of §III.C ([`BatchedFft3`]): all `f`
+//! images of a batch entry (and all `f` kernels of an output map) are
+//! transformed as one batch of contiguous 1D FFTs, and the point-wise
+//! multiply/accumulate stages are wide data-parallel sweeps — the shape
+//! of work a GPU wants. On this testbed the primitive executes on the
+//! simulated device (see `crate::device`), preserving Algorithm 3's
+//! three-stage structure and its Table II memory behaviour, including
+//! the reuse of the FFT scratch `s̃` for the point-wise products.
+
+use crate::fft::batched::BatchedFft3;
+use crate::fft::fft_optimal_vec3;
+use crate::memory::TrackedVec;
+use crate::tensor::{Complex32, Tensor5};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+use super::{conv_out_shape, Activation, Weights};
+
+/// FFT-based convolutional layer, GPU scheme. Consumes `input`.
+pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let n = ish.spatial();
+    let padded = fft_optimal_vec3(n);
+    let plan_img = BatchedFft3::new(n, padded);
+    let plan_ker = BatchedFft3::new(w.k, padded);
+    let spec = plan_img.spectrum_len();
+    let (s_n, f_in, f_out) = (ish.s, w.f_in, w.f_out);
+
+    // Stage 1 — transform all input batches (f images at a time).
+    let mut itrans: TrackedVec<Complex32> = TrackedVec::zeroed(s_n * f_in * spec, "gpu-fft Itilde");
+    for s in 0..s_n {
+        let imgs = &input.data()
+            [ish.image_offset(s, 0)..ish.image_offset(s, 0) + f_in * ish.image_len()];
+        plan_img.forward(f_in, imgs, &mut itrans.as_mut_slice()[s * f_in * spec..(s + 1) * f_in * spec], pool);
+    }
+    drop(input);
+
+    // Stage 2 — per output map: batched kernel transform, point-wise
+    // products into the scratch s̃, accumulate over input maps.
+    let mut otrans: TrackedVec<Complex32> = TrackedVec::zeroed(s_n * f_out * spec, "gpu-fft Otilde");
+    {
+        let mut wtrans: TrackedVec<Complex32> = TrackedVec::zeroed(f_in * spec, "gpu-fft wtilde");
+        let mut prod: TrackedVec<Complex32> = TrackedVec::zeroed(f_in * spec, "gpu-fft stilde");
+        let klen = w.klen();
+        for j in 0..f_out {
+            let kbatch = &w.raw()[j * f_in * klen..(j + 1) * f_in * klen];
+            plan_ker.forward(f_in, kbatch, wtrans.as_mut_slice(), pool);
+            for s in 0..s_n {
+                let ibase = s * f_in * spec;
+                // PARALLEL-MULT: s̃[i][e] = Ĩ[s,i][e] · w̃[i][e]
+                {
+                    let pp = SendPtr(prod.as_mut_ptr());
+                    let it = itrans.as_slice();
+                    let wt = wtrans.as_slice();
+                    let total = f_in * spec;
+                    let chunks = (pool.workers() * 4).min(total.max(1));
+                    let per = total.div_ceil(chunks);
+                    pool.parallel_for(chunks, |c| {
+                        let lo = c * per;
+                        let hi = ((c + 1) * per).min(total);
+                        if lo >= hi {
+                            return;
+                        }
+                        let dst = unsafe { pp.slice_mut(lo, hi - lo) };
+                        for (o, d) in dst.iter_mut().enumerate() {
+                            let e = lo + o;
+                            *d = it[ibase + e] * wt[e];
+                        }
+                    });
+                }
+                // PARALLEL-ACCUMULATE: Õ[s,j][e] = Σ_i s̃[i][e]
+                {
+                    let ob = (s * f_out + j) * spec;
+                    let op = SendPtr(otrans.as_mut_ptr());
+                    let pr = prod.as_slice();
+                    let chunks = (pool.workers() * 4).min(spec.max(1));
+                    let per = spec.div_ceil(chunks);
+                    pool.parallel_for(chunks, |c| {
+                        let lo = c * per;
+                        let hi = ((c + 1) * per).min(spec);
+                        if lo >= hi {
+                            return;
+                        }
+                        let dst = unsafe { op.slice_mut(ob + lo, hi - lo) };
+                        for (o, d) in dst.iter_mut().enumerate() {
+                            let e = lo + o;
+                            let mut acc = Complex32::ZERO;
+                            for i in 0..f_in {
+                                acc += pr[i * spec + e];
+                            }
+                            *d = acc;
+                        }
+                    });
+                }
+            }
+        }
+    }
+    drop(itrans);
+
+    // Stage 3 — batched inverse transforms, crop to the valid region,
+    // bias + transfer function.
+    let mut out = Tensor5::zeros(osh);
+    let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
+    let crop = [osh.x, osh.y, osh.z];
+    for s in 0..s_n {
+        let ob = s * f_out * spec;
+        let img_base = osh.image_offset(s, 0);
+        let img_len = f_out * osh.image_len();
+        plan_img.inverse_crop(
+            f_out,
+            &mut otrans.as_mut_slice()[ob..ob + f_out * spec],
+            crop_off,
+            crop,
+            &mut out.data_mut()[img_base..img_base + img_len],
+            pool,
+        );
+        for j in 0..f_out {
+            let b = w.bias(j);
+            for v in out.image_mut(s, j).iter_mut() {
+                *v = act.apply(*v + b);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_layer_reference;
+    use crate::tensor::Shape5;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn pool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 31);
+        let w = Weights::random(4, 3, [3, 2, 3], 32);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_gpu(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "gpu-fft");
+    }
+
+    #[test]
+    fn larger_kernels() {
+        let p = pool();
+        let input = Tensor5::random(Shape5::new(1, 2, 11, 11, 11), 33);
+        let w = Weights::random(3, 2, [5, 5, 5], 34);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_gpu(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "gpu-fft k5");
+    }
+
+    #[test]
+    fn property_matches_reference() {
+        let p = pool();
+        crate::util::quick::check_with(
+            crate::util::quick::Config { cases: 10, ..Default::default() },
+            "gpu-fft == reference",
+            |g| {
+                let s = g.usize(1, 2);
+                let fi = g.usize(1, 3);
+                let fo = g.usize(1, 3);
+                let k = [g.usize(1, 4), g.usize(1, 4), g.usize(1, 4)];
+                let n = [
+                    k[0] + g.usize(0, 5),
+                    k[1] + g.usize(0, 5),
+                    k[2] + g.usize(0, 5),
+                ];
+                let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64 + 17);
+                let w = Weights::random(fo, fi, k, g.case as u64 + 400);
+                let expect = conv_layer_reference(&input, &w, Activation::None);
+                let got = conv_fft_gpu(input, &w, Activation::None, &p);
+                assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "prop gpu-fft");
+            },
+        );
+    }
+}

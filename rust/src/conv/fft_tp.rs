@@ -1,0 +1,252 @@
+//! Task-parallel FFT convolution — §IV.A.3, the paper's flagship CPU
+//! primitive.
+//!
+//! The computation is broken into the five task types of Fig. 3 —
+//! input-image transforms, kernel transforms, multiply-adds,
+//! output-image transforms, and synchronisation tasks that own all
+//! allocation — executed in three stages:
+//!
+//! 1. **Input transforms**: `S·f` independent serial 3D FFTs, any
+//!    worker. The sync task then frees the input and allocates Õ.
+//! 2. **Kernel transforms + multiply-adds**: kernel (j, i) spectra are
+//!    computed by *primary* workers (one per chip, each owning a single
+//!    ñ-sized buffer — the `T·ñ` of Table II) and their dependent MADs
+//!    run **only on workers of the same chip**, accumulating
+//!    `Ĩ[s,i]·w̃[j,i]` into `Õ[s,j]`. Scheduling is
+//!    highest-priority-first by distance to the DAG sink. Because each
+//!    chip owns one buffer, kernels are issued in *waves* — each wave
+//!    gives every chip at most one kernel, and its MADs complete before
+//!    the chip's buffer is reused. (The paper expresses the same
+//!    constraint through DAG dependencies; waves are the barrier-form of
+//!    it with identical peak memory.)
+//! 3. **Output transforms**: `S·f'` serial inverse FFTs + bias +
+//!    transfer function, any worker.
+//!
+//! Wave assignment gives each chip a disjoint set of output columns per
+//! wave, so no two chips ever accumulate into the same `Õ[s,j]` — the
+//! races the paper avoids by task dependencies are avoided structurally.
+
+use crate::fft::fft3d::{with_tl_scratch, Fft3};
+use crate::fft::fft_optimal_vec3;
+use crate::memory::TrackedVec;
+use crate::tensor::{CTensor5, Complex32, Shape5, Tensor5};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+use super::{conv_out_shape, Activation, Weights};
+
+/// FFT-based convolutional layer, task-parallel variant. Consumes
+/// `input` (the second sync task frees it).
+pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let n = ish.spatial();
+    let padded = fft_optimal_vec3(n);
+    let plan = Fft3::new(padded);
+    let spec_len = plan.complex_len();
+    let chips = pool.topology().chips;
+
+    // ---- Stage 1: input image transform tasks (S·f, any worker) ----
+    let csh = Shape5::new(ish.s, ish.f, padded[0], padded[1], plan.zc());
+    let mut itrans = CTensor5::zeros(csh);
+    {
+        let itp = SendPtr(itrans.data_mut().as_mut_ptr());
+        let input = &input;
+        let plan = &plan;
+        pool.scope(|sc| {
+            for s in 0..ish.s {
+                for i in 0..ish.f {
+                    let off = csh.image_offset(s, i);
+                    sc.submit(move |_| {
+                        let spec = unsafe { itp.slice_mut(off, spec_len) };
+                        with_tl_scratch(|tls| plan.forward(input.image(s, i), n, spec, tls));
+                    });
+                }
+            }
+        });
+    }
+    // Sync task 2: free the input, allocate output transforms.
+    drop(input);
+    let otsh = Shape5::new(ish.s, w.f_out, padded[0], padded[1], plan.zc());
+    let mut otrans = CTensor5::zeros(otsh);
+
+    // ---- Stage 2: kernel transforms (primary-only) + MADs (chip) ----
+    {
+        // One spectrum buffer per chip — the primary-thread temporaries.
+        let mut bufs: Vec<TrackedVec<Complex32>> =
+            (0..chips).map(|_| TrackedVec::zeroed(spec_len, "fft-tp primary buffer")).collect();
+        let kplan = Fft3::new(padded);
+        let total_pairs = w.f_out * w.f_in;
+        let col_blocks = w.f_out.div_ceil(chips);
+        let itp = SendPtr(itrans.data_mut().as_mut_ptr());
+        let otp = SendPtr(otrans.data_mut().as_mut_ptr());
+        // Waves over (input row i, column block jb).
+        for i in 0..w.f_in {
+            for jb in 0..col_blocks {
+                // Which (chip, j) pairs are active this wave.
+                let active: Vec<(usize, usize)> = (0..chips)
+                    .map(|c| (c, jb * chips + c))
+                    .filter(|&(_, j)| j < w.f_out)
+                    .collect();
+                // Kernel transforms: primary workers, one per chip.
+                {
+                    let bufp: Vec<SendPtr<Complex32>> =
+                        bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+                    let kplan = &kplan;
+                    pool.scope(|sc| {
+                        for &(c, j) in &active {
+                            let bp = bufp[c];
+                            let prio = (total_pairs - (j * w.f_in + i)) as i64;
+                            sc.submit_chip_primary(c, prio, move |_| {
+                                let buf = unsafe { bp.slice_mut(0, spec_len) };
+                                with_tl_scratch(|tls| kplan.forward(w.kernel(j, i), w.k, buf, tls));
+                            });
+                        }
+                    });
+                }
+                // Multiply-add tasks: same chip as their kernel's primary.
+                {
+                    let bufp: Vec<SendPtr<Complex32>> =
+                        bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+                    pool.scope(|sc| {
+                        for &(c, j) in &active {
+                            for s in 0..ish.s {
+                                let bp = bufp[c];
+                                let prio = (total_pairs - (j * w.f_in + i)) as i64;
+                                sc.submit_chip(c, prio, move |_| {
+                                    let wbuf =
+                                        unsafe { std::slice::from_raw_parts(bp.get(), spec_len) };
+                                    let acc = unsafe {
+                                        otp.slice_mut(otsh.image_offset(s, j), spec_len)
+                                    };
+                                    let inp = unsafe {
+                                        std::slice::from_raw_parts(
+                                            itp.get().add(csh.image_offset(s, i)),
+                                            spec_len,
+                                        )
+                                    };
+                                    Fft3::mad_spectra(acc, inp, wbuf);
+                                });
+                            }
+                        }
+                    });
+                }
+            }
+        }
+    }
+    // Sync task 3: free primary buffers (scope above) and the input
+    // transforms; allocate the output.
+    drop(itrans);
+    let mut out = Tensor5::zeros(osh);
+
+    // ---- Stage 3: output image transform tasks (S·f', any worker) ----
+    {
+        let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
+        let crop = [osh.x, osh.y, osh.z];
+        let otp = SendPtr(otrans.data_mut().as_mut_ptr());
+        let outp = SendPtr(out.data_mut().as_mut_ptr());
+        let img_len = osh.image_len();
+        let plan = &plan;
+        pool.scope(|sc| {
+            for s in 0..ish.s {
+                for j in 0..w.f_out {
+                    sc.submit(move |_| {
+                        let spec = unsafe { otp.slice_mut(otsh.image_offset(s, j), spec_len) };
+                        let img = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
+                        with_tl_scratch(|tls| plan.inverse_crop(spec, crop_off, crop, img, tls));
+                        let b = w.bias(j);
+                        for v in img.iter_mut() {
+                            *v = act.apply(*v + b);
+                        }
+                    });
+                }
+            }
+        });
+    }
+    // Final sync task frees the output transforms.
+    drop(otrans);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_layer_reference;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn pool(chips: usize, cores: usize) -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips, cores_per_chip: cores })
+    }
+
+    #[test]
+    fn matches_reference_small() {
+        let p = pool(2, 2);
+        let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 21);
+        let w = Weights::random(4, 3, [3, 2, 3], 22);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_tp(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp");
+    }
+
+    #[test]
+    fn large_ffp_batch_config() {
+        // The regime the task-parallel algorithm targets: f·S, f'·S ≥
+        // worker count.
+        let p = pool(2, 2);
+        let input = Tensor5::random(Shape5::new(2, 6, 8, 8, 8), 23);
+        let w = Weights::random(6, 6, [3, 3, 3], 24);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_tp(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp large");
+    }
+
+    #[test]
+    fn single_chip_topology() {
+        let p = pool(1, 3);
+        let input = Tensor5::random(Shape5::new(1, 4, 7, 7, 7), 25);
+        let w = Weights::random(3, 4, [2, 2, 2], 26);
+        let expect = conv_layer_reference(&input, &w, Activation::None);
+        let got = conv_fft_tp(input, &w, Activation::None, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp 1chip");
+    }
+
+    #[test]
+    fn more_chips_than_outputs() {
+        let p = pool(4, 1);
+        let input = Tensor5::random(Shape5::new(1, 2, 6, 6, 6), 27);
+        let w = Weights::random(2, 2, [3, 3, 3], 28);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_fft_tp(input, &w, Activation::Relu, &p);
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp 4chip");
+    }
+
+    #[test]
+    fn property_matches_dp_variant() {
+        let p = pool(2, 2);
+        crate::util::quick::check_with(
+            crate::util::quick::Config { cases: 10, ..Default::default() },
+            "fft-tp == fft-dp",
+            |g| {
+                let s = g.usize(1, 2);
+                let fi = g.usize(1, 4);
+                let fo = g.usize(1, 4);
+                let k = [g.usize(1, 3), g.usize(1, 3), g.usize(1, 3)];
+                let n = [
+                    k[0] + g.usize(0, 4),
+                    k[1] + g.usize(0, 4),
+                    k[2] + g.usize(0, 4),
+                ];
+                let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64 + 7);
+                let w = Weights::random(fo, fi, k, g.case as u64 + 300);
+                let a = {
+                    let inp = input.clone_tensor();
+                    crate::conv::fft_dp::conv_fft_dp(inp, &w, Activation::Relu, &p)
+                };
+                let b = conv_fft_tp(input, &w, Activation::Relu, &p);
+                assert_allclose(b.data(), a.data(), 1e-3, 1e-2, "tp vs dp");
+            },
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! Convolutional-layer primitives (§IV).
+//!
+//! Three CPU algorithms — direct (Algorithm 1), data-parallel FFT
+//! (Algorithm 2), task-parallel FFT (§IV.A.3) — and the GPU-scheme
+//! FFT algorithm (Algorithm 3) plus dense stand-ins for the cuDNN
+//! primitives. All compute *true* convolution (kernel flipped), a
+//! "valid"-region output of extent `n − k + 1`, matching Table I.
+
+pub mod direct;
+pub mod fft_dp;
+pub mod fft_gpu;
+pub mod fft_tp;
+
+use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::prng::Rng;
+
+/// Post-convolution transfer function. Applied by the output stage of
+/// every primitive (the paper applies ReLU after each conv layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(&self, v: f32) -> f32 {
+        match self {
+            Activation::None => v,
+            Activation::Relu => v.max(0.0),
+        }
+    }
+}
+
+/// Weights of one convolutional layer: `f' × f` kernels of extent `k`
+/// plus one bias per output map.
+pub struct Weights {
+    pub f_out: usize,
+    pub f_in: usize,
+    pub k: Vec3,
+    data: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+impl Weights {
+    pub fn zeros(f_out: usize, f_in: usize, k: Vec3) -> Self {
+        Weights {
+            f_out,
+            f_in,
+            k,
+            data: vec![0.0; f_out * f_in * k[0] * k[1] * k[2]],
+            bias: vec![0.0; f_out],
+        }
+    }
+
+    /// Deterministic random init scaled ~1/√(fan-in), so deep nets keep
+    /// activations O(1) in tests and benches.
+    pub fn random(f_out: usize, f_in: usize, k: Vec3, seed: u64) -> Self {
+        let mut w = Self::zeros(f_out, f_in, k);
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / ((f_in * k[0] * k[1] * k[2]) as f32).sqrt();
+        for v in w.data.iter_mut() {
+            *v = rng.f32_range(-1.0, 1.0) * scale;
+        }
+        for b in w.bias.iter_mut() {
+            *b = rng.f32_range(-0.1, 0.1);
+        }
+        w
+    }
+
+    pub fn klen(&self) -> usize {
+        self.k[0] * self.k[1] * self.k[2]
+    }
+
+    /// Kernel w[j][i] (output j ← input i) as a contiguous slice.
+    pub fn kernel(&self, j: usize, i: usize) -> &[f32] {
+        let o = (j * self.f_in + i) * self.klen();
+        &self.data[o..o + self.klen()]
+    }
+
+    pub fn kernel_mut(&mut self, j: usize, i: usize) -> &mut [f32] {
+        let l = self.klen();
+        let o = (j * self.f_in + i) * l;
+        &mut self.data[o..o + l]
+    }
+
+    pub fn bias(&self, j: usize) -> f32 {
+        self.bias[j]
+    }
+
+    pub fn set_bias(&mut self, j: usize, b: f32) {
+        self.bias[j] = b;
+    }
+
+    /// All kernels flat (f'·f·k³), e.g. for handing to the PJRT runtime.
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn raw_bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    /// Restrict to a sub-range of output and input maps (the sub-layer
+    /// decomposition of §VII.A needs weight windows).
+    pub fn window(&self, j0: usize, jn: usize, i0: usize, in_: usize) -> Weights {
+        let mut w = Weights::zeros(jn, in_, self.k);
+        for j in 0..jn {
+            for i in 0..in_ {
+                w.kernel_mut(j, i).copy_from_slice(self.kernel(j0 + j, i0 + i));
+            }
+            w.bias[j] = self.bias[j0 + j];
+        }
+        w
+    }
+}
+
+/// Output shape of a valid convolution (Table I row 1).
+pub fn conv_out_shape(input: Shape5, f_out: usize, k: Vec3) -> Shape5 {
+    assert!(input.x >= k[0] && input.y >= k[1] && input.z >= k[2], "kernel larger than image");
+    Shape5 {
+        s: input.s,
+        f: f_out,
+        x: input.x - k[0] + 1,
+        y: input.y - k[1] + 1,
+        z: input.z - k[2] + 1,
+    }
+}
+
+/// Reference single-image valid **convolution** (flipped kernel),
+/// accumulating into `out`. O(n³k³); used as the correctness oracle and
+/// by the naive direct primitive.
+pub fn convolve_valid_accumulate(
+    img: &[f32],
+    n: Vec3,
+    ker: &[f32],
+    k: Vec3,
+    out: &mut [f32],
+) {
+    let on = [n[0] - k[0] + 1, n[1] - k[1] + 1, n[2] - k[2] + 1];
+    debug_assert_eq!(img.len(), n[0] * n[1] * n[2]);
+    debug_assert_eq!(ker.len(), k[0] * k[1] * k[2]);
+    debug_assert_eq!(out.len(), on[0] * on[1] * on[2]);
+    for x in 0..on[0] {
+        for y in 0..on[1] {
+            for z in 0..on[2] {
+                let mut acc = 0.0f32;
+                for a in 0..k[0] {
+                    for b in 0..k[1] {
+                        for c in 0..k[2] {
+                            let iv = img[((x + a) * n[1] + (y + b)) * n[2] + (z + c)];
+                            let kv = ker[((k[0] - 1 - a) * k[1] + (k[1] - 1 - b)) * k[2]
+                                + (k[2] - 1 - c)];
+                            acc += iv * kv;
+                        }
+                    }
+                }
+                out[(x * on[1] + y) * on[2] + z] += acc;
+            }
+        }
+    }
+}
+
+/// Single-threaded reference convolutional layer (oracle for every
+/// primitive): `O[s,j] = act(Σ_i w[j,i] * I[s,i] + bias[j])`.
+pub fn conv_layer_reference(input: &Tensor5, w: &Weights, act: Activation) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in);
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let mut out = Tensor5::zeros(osh);
+    for s in 0..ish.s {
+        for j in 0..w.f_out {
+            for i in 0..w.f_in {
+                convolve_valid_accumulate(
+                    input.image(s, i),
+                    ish.spatial(),
+                    w.kernel(j, i),
+                    w.k,
+                    out.image_mut(s, j),
+                );
+            }
+            let b = w.bias(j);
+            for v in out.image_mut(s, j).iter_mut() {
+                *v = act.apply(*v + b);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_shape_valid() {
+        let sh = conv_out_shape(Shape5::new(1, 2, 8, 9, 10), 4, [3, 3, 3]);
+        assert_eq!(sh, Shape5::new(1, 4, 6, 7, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel larger")]
+    fn out_shape_rejects_small_image() {
+        conv_out_shape(Shape5::new(1, 1, 2, 2, 2), 1, [3, 3, 3]);
+    }
+
+    #[test]
+    fn identity_kernel_convolution() {
+        // 1³ kernel of value 1 must reproduce the image.
+        let img = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 3);
+        let mut w = Weights::zeros(1, 1, [1, 1, 1]);
+        w.kernel_mut(0, 0)[0] = 1.0;
+        let out = conv_layer_reference(&img, &w, Activation::None);
+        assert_eq!(out.data(), img.data());
+    }
+
+    #[test]
+    fn shift_kernel_is_true_convolution() {
+        // Kernel with a single 1 at position (0,0,0) of a 2³ kernel:
+        // true convolution flips it → output[x] = img[x + k - 1 - 0].
+        let img = Tensor5::random(Shape5::new(1, 1, 3, 3, 3), 5);
+        let mut w = Weights::zeros(1, 1, [2, 2, 2]);
+        w.kernel_mut(0, 0)[0] = 1.0; // kernel[0,0,0]
+        let out = conv_layer_reference(&img, &w, Activation::None);
+        // valid conv output (2³): out[x,y,z] = img[x+1, y+1, z+1]
+        for x in 0..2 {
+            for y in 0..2 {
+                for z in 0..2 {
+                    assert_eq!(out.at(0, 0, x, y, z), img.at(0, 0, x + 1, y + 1, z + 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_and_relu_applied() {
+        let img = Tensor5::from_vec(Shape5::new(1, 1, 1, 1, 1), vec![-5.0]);
+        let mut w = Weights::zeros(1, 1, [1, 1, 1]);
+        w.kernel_mut(0, 0)[0] = 1.0;
+        w.set_bias(0, 2.0);
+        let out = conv_layer_reference(&img, &w, Activation::Relu);
+        assert_eq!(out.data(), &[0.0]); // relu(-5 + 2) = 0
+        let out = conv_layer_reference(&img, &w, Activation::None);
+        assert_eq!(out.data(), &[-3.0]);
+    }
+
+    #[test]
+    fn weights_window_extracts() {
+        let w = Weights::random(4, 3, [2, 2, 2], 9);
+        let sub = w.window(1, 2, 1, 2);
+        assert_eq!(sub.kernel(0, 0), w.kernel(1, 1));
+        assert_eq!(sub.kernel(1, 1), w.kernel(2, 2));
+        assert_eq!(sub.bias(0), w.bias(1));
+    }
+
+    #[test]
+    fn multi_channel_accumulates() {
+        // Two input channels with 1³ unit kernels sum the channels.
+        let mut img = Tensor5::zeros(Shape5::new(1, 2, 2, 2, 2));
+        img.set(0, 0, 0, 0, 0, 3.0);
+        img.set(0, 1, 0, 0, 0, 4.0);
+        let mut w = Weights::zeros(1, 2, [1, 1, 1]);
+        w.kernel_mut(0, 0)[0] = 1.0;
+        w.kernel_mut(0, 1)[0] = 1.0;
+        let out = conv_layer_reference(&img, &w, Activation::None);
+        assert_eq!(out.at(0, 0, 0, 0, 0), 7.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Device models: the host CPU and the **simulated GPU**.
+//!
+//! This testbed has no CUDA device, so the GPU of the paper (a 12 GB
+//! Titan X) is modelled as a *constraint + cost structure* — which is
+//! exactly the role it plays in the paper's arguments:
+//!
+//! * a hard on-board RAM budget (the reason GPU-only loses to CPU-only
+//!   for large kernels, §VI.B);
+//! * a host↔device transfer cost per byte (the reason GPU + host RAM
+//!   layers are pipelined per sub-layer, §VII.A, and MPF layers moved to
+//!   the CPU, §VII.B);
+//! * a relative speed factor applied to *modelled* compute time, used
+//!   by the optimizer's cost model when ranking GPU primitives against
+//!   CPU ones (calibratable; default from `ZNNI_GPU_SPEEDUP`).
+//!
+//! GPU-placed primitives execute on the host cores through the same
+//! code paths (or through the PJRT runtime for AOT-compiled layers);
+//! the device ledger enforces the memory budget the real card would.
+
+use crate::tensor::Shape5;
+
+/// Kind of execution resource.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+/// A device with a memory budget and a transfer cost model.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub kind: DeviceKind,
+    pub name: String,
+    /// RAM available to primitives on this device.
+    pub ram_bytes: u64,
+    /// Host↔device bandwidth (bytes/s). Zero ⇒ no transfer cost (host).
+    pub transfer_bytes_per_sec: f64,
+    /// Modelled speed multiplier relative to host compute for the same
+    /// primitive (>1 ⇒ device is faster). Only used in *cost models*;
+    /// measured wall-clock numbers are always reported as measured.
+    pub speed_factor: f64,
+}
+
+impl Device {
+    /// The host machine: all visible RAM (or `ZNNI_HOST_RAM` bytes).
+    pub fn host() -> Device {
+        let ram = std::env::var("ZNNI_HOST_RAM")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(detect_host_ram);
+        Device {
+            kind: DeviceKind::Cpu,
+            name: "host-cpu".into(),
+            ram_bytes: ram,
+            transfer_bytes_per_sec: 0.0,
+            speed_factor: 1.0,
+        }
+    }
+
+    /// Host device with an explicit RAM budget (Fig 7 sweeps this).
+    pub fn host_with_ram(ram_bytes: u64) -> Device {
+        Device { ram_bytes, ..Device::host() }
+    }
+
+    /// The simulated Titan X: 12 GB on-board, ~8 GB/s effective PCIe
+    /// bandwidth, speed factor from `ZNNI_GPU_SPEEDUP` (default 1.0 —
+    /// honest wall-clock on this testbed).
+    pub fn titan_x() -> Device {
+        let speed = std::env::var("ZNNI_GPU_SPEEDUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Device {
+            kind: DeviceKind::Gpu,
+            name: "sim-titan-x".into(),
+            ram_bytes: 12 << 30,
+            transfer_bytes_per_sec: 8e9,
+            speed_factor: speed,
+        }
+    }
+
+    /// Simulated GPU with an explicit RAM budget.
+    pub fn gpu_with_ram(ram_bytes: u64) -> Device {
+        Device { ram_bytes, ..Device::titan_x() }
+    }
+
+    /// Does a primitive needing `bytes` fit on this device?
+    pub fn fits(&self, bytes: u64) -> bool {
+        bytes <= self.ram_bytes
+    }
+
+    /// Modelled seconds to move `bytes` between host and this device
+    /// (0 for the host itself).
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        if self.transfer_bytes_per_sec <= 0.0 {
+            0.0
+        } else {
+            bytes as f64 / self.transfer_bytes_per_sec
+        }
+    }
+
+    /// Modelled seconds to upload a tensor of this shape.
+    pub fn upload_secs(&self, shape: Shape5) -> f64 {
+        self.transfer_secs(shape.bytes_f32())
+    }
+}
+
+/// Read total system RAM from /proc/meminfo (fallback 16 GiB).
+pub fn detect_host_ram() -> u64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/meminfo") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("MemTotal:") {
+                if let Some(kb) = rest.trim().split_whitespace().next().and_then(|v| v.parse::<u64>().ok()) {
+                    return kb * 1024;
+                }
+            }
+        }
+    }
+    16 << 30
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn titan_x_budget() {
+        let g = Device::titan_x();
+        assert_eq!(g.ram_bytes, 12 << 30);
+        assert!(g.fits(1 << 30));
+        assert!(!g.fits(13 << 30));
+    }
+
+    #[test]
+    fn transfer_model() {
+        let g = Device::titan_x();
+        let t = g.transfer_secs(8_000_000_000);
+        assert!((t - 1.0).abs() < 1e-9);
+        let h = Device::host();
+        assert_eq!(h.transfer_secs(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn host_ram_detected() {
+        assert!(detect_host_ram() > 1 << 28, "host has at least 256 MiB");
+    }
+
+    #[test]
+    fn explicit_budgets() {
+        assert_eq!(Device::host_with_ram(1024).ram_bytes, 1024);
+        assert_eq!(Device::gpu_with_ram(2048).ram_bytes, 2048);
+        assert_eq!(Device::gpu_with_ram(2048).kind, DeviceKind::Gpu);
+    }
+}

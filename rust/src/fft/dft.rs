@@ -1,0 +1,464 @@
+//! 1D complex FFT: recursive mixed-radix Cooley–Tukey with specialised
+//! radix-2/3/4 butterflies, plus real↔complex wrappers including the
+//! two-for-one packed transform (two real lines per complex FFT) used by
+//! the 3D schemes for batched line transforms.
+
+use crate::tensor::Complex32;
+
+use super::plan::factorize;
+
+/// Reusable scratch for the real/inverse wrappers. One per thread;
+/// grows to the largest plan it has served.
+#[derive(Default)]
+pub struct FftScratch {
+    a: Vec<Complex32>,
+    b: Vec<Complex32>,
+}
+
+impl FftScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.a.len() < n {
+            self.a.resize(n, Complex32::ZERO);
+            self.b.resize(n, Complex32::ZERO);
+        }
+    }
+}
+
+/// Precomputed plan for length-`n` transforms.
+pub struct FftPlan {
+    n: usize,
+    /// tw[j] = e^{-2πi j / n}
+    tw: Vec<Complex32>,
+    factors: Vec<usize>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "FFT length must be positive");
+        let tw = (0..n)
+            .map(|j| Complex32::cis(-2.0 * std::f64::consts::PI * j as f64 / n as f64))
+            .collect();
+        FftPlan { n, tw, factors: factorize(n) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Number of complex outputs of a real transform: n/2 + 1.
+    pub fn half_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Forward complex DFT, out of place. `src` and `dst` have length n.
+    pub fn forward(&self, src: &[Complex32], dst: &mut [Complex32]) {
+        debug_assert_eq!(src.len(), self.n);
+        debug_assert_eq!(dst.len(), self.n);
+        self.rec(src, 1, dst, self.n, 0);
+    }
+
+    /// Inverse complex DFT (normalised by 1/n), out of place.
+    pub fn inverse(&self, src: &[Complex32], dst: &mut [Complex32], scratch: &mut FftScratch) {
+        scratch.ensure(self.n);
+        for (s, d) in src.iter().zip(scratch.a.iter_mut()) {
+            *d = s.conj();
+        }
+        self.rec(&scratch.a[..self.n], 1, dst, self.n, 0);
+        let inv = 1.0 / self.n as f32;
+        for d in dst.iter_mut() {
+            *d = d.conj().scale(inv);
+        }
+    }
+
+    /// Real → complex transform: `dst` receives the n/2+1 non-redundant
+    /// bins.
+    pub fn r2c(&self, src: &[f32], dst: &mut [Complex32], scratch: &mut FftScratch) {
+        debug_assert_eq!(src.len(), self.n);
+        debug_assert!(dst.len() >= self.half_len());
+        scratch.ensure(self.n);
+        for (i, s) in src.iter().enumerate() {
+            scratch.a[i] = Complex32::new(*s, 0.0);
+        }
+        let (a, b) = {
+            let FftScratch { a, b } = scratch;
+            (&a[..self.n], &mut b[..self.n])
+        };
+        self.rec(a, 1, b, self.n, 0);
+        dst[..self.half_len()].copy_from_slice(&b[..self.half_len()]);
+    }
+
+    /// Two-for-one: real transforms of two lines `pa`, `pb` for the cost
+    /// of one complex FFT (pack z = a + i·b, then unpack by Hermitian
+    /// symmetry). This is the work-horse of the batched 3D schemes.
+    pub fn r2c_pair(
+        &self,
+        pa: &[f32],
+        pb: &[f32],
+        da: &mut [Complex32],
+        db: &mut [Complex32],
+        scratch: &mut FftScratch,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(pa.len(), n);
+        debug_assert_eq!(pb.len(), n);
+        scratch.ensure(n);
+        for i in 0..n {
+            scratch.a[i] = Complex32::new(pa[i], pb[i]);
+        }
+        let (a, b) = {
+            let FftScratch { a, b } = scratch;
+            (&a[..n], &mut b[..n])
+        };
+        self.rec(a, 1, b, n, 0);
+        let h = self.half_len();
+        for k in 0..h {
+            let u = b[k];
+            let v = b[(n - k) % n].conj();
+            da[k] = (u + v).scale(0.5);
+            db[k] = (u - v).mul_neg_i().scale(0.5);
+        }
+    }
+
+    /// Complex (half-spectrum) → real inverse transform.
+    pub fn c2r(&self, src: &[Complex32], dst: &mut [f32], scratch: &mut FftScratch) {
+        let n = self.n;
+        let h = self.half_len();
+        debug_assert!(src.len() >= h);
+        debug_assert_eq!(dst.len(), n);
+        scratch.ensure(n);
+        // Build the conjugated full spectrum; then Re(FFT(conj X)) / n
+        // is the inverse real signal.
+        for k in 0..h {
+            scratch.a[k] = src[k].conj();
+        }
+        for k in h..n {
+            scratch.a[k] = src[n - k];
+        }
+        let (a, b) = {
+            let FftScratch { a, b } = scratch;
+            (&a[..n], &mut b[..n])
+        };
+        self.rec(a, 1, b, n, 0);
+        let inv = 1.0 / n as f32;
+        for i in 0..n {
+            dst[i] = b[i].re * inv;
+        }
+    }
+
+    /// Two-for-one inverse: recover two real lines from their half
+    /// spectra with one complex FFT.
+    pub fn c2r_pair(
+        &self,
+        sa: &[Complex32],
+        sb: &[Complex32],
+        da: &mut [f32],
+        db: &mut [f32],
+        scratch: &mut FftScratch,
+    ) {
+        let n = self.n;
+        let h = self.half_len();
+        scratch.ensure(n);
+        // Z = A + i·B has IFFT z = a + i·b. Build conj(Z) and forward it:
+        // z = conj(FFT(conj Z)) / n, so a = Re/n, b = -Im/n.
+        for k in 0..h {
+            scratch.a[k] = (sa[k] + sb[k].mul_i()).conj();
+        }
+        for k in h..n {
+            scratch.a[k] = (sa[n - k].conj() + sb[n - k].conj().mul_i()).conj();
+        }
+        let (a, b) = {
+            let FftScratch { a, b } = scratch;
+            (&a[..n], &mut b[..n])
+        };
+        self.rec(a, 1, b, n, 0);
+        let inv = 1.0 / n as f32;
+        for i in 0..n {
+            da[i] = b[i].re * inv;
+            db[i] = -b[i].im * inv;
+        }
+    }
+
+    /// Recursive decimation-in-time step: FFT of `src` (strided) into
+    /// contiguous `dst[0..sub_n]`. `fi` indexes the factor used at this
+    /// level; twiddle stride is `self.n / sub_n`.
+    fn rec(&self, src: &[Complex32], stride: usize, dst: &mut [Complex32], sub_n: usize, fi: usize) {
+        if sub_n == 1 {
+            dst[0] = src[0];
+            return;
+        }
+        let r = self.factors[fi];
+        if sub_n == r {
+            // Leaf: small strided DFT straight out of src.
+            self.small_dft_strided(src, stride, dst, r);
+            return;
+        }
+        let m = sub_n / r;
+        for q in 0..r {
+            self.rec(&src[q * stride..], stride * r, &mut dst[q * m..(q + 1) * m], m, fi + 1);
+        }
+        // Combine r sub-transforms of length m.
+        let tw_step = self.n / sub_n;
+        let mut t = [Complex32::ZERO; 8];
+        let mut tv: Vec<Complex32> = if r > 8 { vec![Complex32::ZERO; r] } else { Vec::new() };
+        for k2 in 0..m {
+            let t = if r <= 8 { &mut t[..r] } else { &mut tv[..] };
+            // Twiddle index q·k2·tw_step mod n by accumulation — no
+            // multiply/modulo in the gather loop (perf pass, see
+            // EXPERIMENTS.md §Perf), and the w = 1 case skipped.
+            let step = (k2 * tw_step) % self.n;
+            let mut w_idx = 0usize;
+            for q in 0..r {
+                let v = dst[q * m + k2];
+                t[q] = if w_idx == 0 { v } else { v * self.tw[w_idx] };
+                w_idx += step;
+                if w_idx >= self.n {
+                    w_idx -= self.n;
+                }
+            }
+            match r {
+                2 => {
+                    dst[k2] = t[0] + t[1];
+                    dst[m + k2] = t[0] - t[1];
+                }
+                3 => {
+                    let (x0, x1, x2) = bf3(t[0], t[1], t[2]);
+                    dst[k2] = x0;
+                    dst[m + k2] = x1;
+                    dst[2 * m + k2] = x2;
+                }
+                4 => {
+                    let (x0, x1, x2, x3) = bf4(t[0], t[1], t[2], t[3]);
+                    dst[k2] = x0;
+                    dst[m + k2] = x1;
+                    dst[2 * m + k2] = x2;
+                    dst[3 * m + k2] = x3;
+                }
+                _ => {
+                    // Generic radix: r-point naive DFT of t.
+                    let wr = self.n / r;
+                    for k3 in 0..r {
+                        let mut acc = t[0];
+                        for q in 1..r {
+                            acc.mad(t[q], self.tw[(q * k3 % r) * wr]);
+                        }
+                        dst[k3 * m + k2] = acc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Naive strided small DFT (leaf case, r ≤ 7 on the planned path).
+    fn small_dft_strided(&self, src: &[Complex32], stride: usize, dst: &mut [Complex32], r: usize) {
+        match r {
+            2 => {
+                let (a, b) = (src[0], src[stride]);
+                dst[0] = a + b;
+                dst[1] = a - b;
+            }
+            3 => {
+                let (x0, x1, x2) = bf3(src[0], src[stride], src[2 * stride]);
+                dst[0] = x0;
+                dst[1] = x1;
+                dst[2] = x2;
+            }
+            4 => {
+                let (x0, x1, x2, x3) = bf4(src[0], src[stride], src[2 * stride], src[3 * stride]);
+                dst[0] = x0;
+                dst[1] = x1;
+                dst[2] = x2;
+                dst[3] = x3;
+            }
+            _ => {
+                let wr = self.n / r;
+                for k in 0..r {
+                    let mut acc = src[0];
+                    for q in 1..r {
+                        acc.mad(src[q * stride], self.tw[(q * k % r) * wr]);
+                    }
+                    dst[k] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Radix-3 butterfly (forward), 2 real-mult form.
+#[inline(always)]
+fn bf3(t0: Complex32, t1: Complex32, t2: Complex32) -> (Complex32, Complex32, Complex32) {
+    const S60: f32 = 0.866_025_4; // sin(2π/3)
+    let s = t1 + t2;
+    let d = t1 - t2;
+    let x0 = t0 + s;
+    let m = t0 - s.scale(0.5);
+    let e = Complex32::new(S60 * d.im, -S60 * d.re); // -i·sin60·d
+    (x0, m + e, m - e)
+}
+
+/// Radix-4 butterfly (forward): multiplies by ±i only.
+#[inline(always)]
+fn bf4(
+    t0: Complex32,
+    t1: Complex32,
+    t2: Complex32,
+    t3: Complex32,
+) -> (Complex32, Complex32, Complex32, Complex32) {
+    let a = t0 + t2;
+    let b = t0 - t2;
+    let c = t1 + t3;
+    let d = (t1 - t3).mul_neg_i();
+    (a + c, b + d, a - c, b - d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::assert_allclose;
+
+    /// O(n²) reference DFT.
+    fn naive_dft(src: &[Complex32], sign: f64) -> Vec<Complex32> {
+        let n = src.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = Complex32::ZERO;
+                for (j, s) in src.iter().enumerate() {
+                    let w = Complex32::cis(sign * 2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64);
+                    acc.mad(*s, w);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn flat(v: &[Complex32]) -> Vec<f32> {
+        v.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    fn rand_complex(n: usize, seed: u64) -> Vec<Complex32> {
+        let mut r = crate::util::prng::Rng::new(seed);
+        (0..n).map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0))).collect()
+    }
+
+    #[test]
+    fn forward_matches_naive_many_sizes() {
+        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 10, 12, 15, 16, 20, 21, 24, 25, 27, 30, 32, 35, 36, 48, 49, 60, 64, 11, 13, 22, 26, 33] {
+            let plan = FftPlan::new(n);
+            let src = rand_complex(n, n as u64);
+            let mut dst = vec![Complex32::ZERO; n];
+            plan.forward(&src, &mut dst);
+            let expect = naive_dft(&src, -1.0);
+            assert_allclose(&flat(&dst), &flat(&expect), 1e-3, 1e-3, &format!("fft n={n}"));
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut scratch = FftScratch::new();
+        for n in [4usize, 12, 30, 49, 64, 105] {
+            let plan = FftPlan::new(n);
+            let src = rand_complex(n, 7 + n as u64);
+            let mut freq = vec![Complex32::ZERO; n];
+            let mut back = vec![Complex32::ZERO; n];
+            plan.forward(&src, &mut freq);
+            plan.inverse(&freq, &mut back, &mut scratch);
+            assert_allclose(&flat(&back), &flat(&src), 1e-4, 1e-3, &format!("ifft n={n}"));
+        }
+    }
+
+    #[test]
+    fn r2c_matches_complex_fft() {
+        let mut scratch = FftScratch::new();
+        for n in [4usize, 10, 24, 35, 64] {
+            let plan = FftPlan::new(n);
+            let mut r = crate::util::prng::Rng::new(n as u64);
+            let real: Vec<f32> = (0..n).map(|_| r.f32_range(-1.0, 1.0)).collect();
+            let mut half = vec![Complex32::ZERO; plan.half_len()];
+            plan.r2c(&real, &mut half, &mut scratch);
+            let src: Vec<Complex32> = real.iter().map(|&v| Complex32::new(v, 0.0)).collect();
+            let full = naive_dft(&src, -1.0);
+            assert_allclose(&flat(&half), &flat(&full[..plan.half_len()]), 1e-3, 1e-3, "r2c");
+        }
+    }
+
+    #[test]
+    fn r2c_c2r_roundtrip() {
+        let mut scratch = FftScratch::new();
+        for n in [4usize, 9, 20, 48, 70] {
+            let plan = FftPlan::new(n);
+            let mut r = crate::util::prng::Rng::new(n as u64 * 3);
+            let real: Vec<f32> = (0..n).map(|_| r.f32_range(-1.0, 1.0)).collect();
+            let mut half = vec![Complex32::ZERO; plan.half_len()];
+            let mut back = vec![0.0f32; n];
+            plan.r2c(&real, &mut half, &mut scratch);
+            plan.c2r(&half, &mut back, &mut scratch);
+            assert_allclose(&back, &real, 1e-4, 1e-3, &format!("r2c/c2r n={n}"));
+        }
+    }
+
+    #[test]
+    fn two_for_one_pair_matches_single() {
+        let mut scratch = FftScratch::new();
+        for n in [6usize, 16, 30, 63] {
+            let plan = FftPlan::new(n);
+            let mut r = crate::util::prng::Rng::new(n as u64 * 5);
+            let a: Vec<f32> = (0..n).map(|_| r.f32_range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| r.f32_range(-1.0, 1.0)).collect();
+            let h = plan.half_len();
+            let (mut da, mut db) = (vec![Complex32::ZERO; h], vec![Complex32::ZERO; h]);
+            let (mut ea, mut eb) = (vec![Complex32::ZERO; h], vec![Complex32::ZERO; h]);
+            plan.r2c_pair(&a, &b, &mut da, &mut db, &mut scratch);
+            plan.r2c(&a, &mut ea, &mut scratch);
+            plan.r2c(&b, &mut eb, &mut scratch);
+            assert_allclose(&flat(&da), &flat(&ea), 1e-3, 1e-3, "pair A");
+            assert_allclose(&flat(&db), &flat(&eb), 1e-3, 1e-3, "pair B");
+            // And the inverse pair.
+            let (mut ra, mut rb) = (vec![0.0f32; n], vec![0.0f32; n]);
+            plan.c2r_pair(&da, &db, &mut ra, &mut rb, &mut scratch);
+            assert_allclose(&ra, &a, 1e-4, 1e-3, "pair inv A");
+            assert_allclose(&rb, &b, 1e-4, 1e-3, "pair inv B");
+        }
+    }
+
+    #[test]
+    fn linearity_property() {
+        crate::util::quick::check("fft linearity", |g| {
+            let n = *g.choose(&[8usize, 12, 20, 36]);
+            let plan = FftPlan::new(n);
+            let a = rand_complex(n, g.case as u64);
+            let b = rand_complex(n, g.case as u64 + 999);
+            let alpha = g.f32(-2.0, 2.0);
+            let sum: Vec<Complex32> =
+                a.iter().zip(&b).map(|(x, y)| *x + y.scale(alpha)).collect();
+            let mut fa = vec![Complex32::ZERO; n];
+            let mut fb = vec![Complex32::ZERO; n];
+            let mut fs = vec![Complex32::ZERO; n];
+            plan.forward(&a, &mut fa);
+            plan.forward(&b, &mut fb);
+            plan.forward(&sum, &mut fs);
+            let expect: Vec<Complex32> =
+                fa.iter().zip(&fb).map(|(x, y)| *x + y.scale(alpha)).collect();
+            assert_allclose(&flat(&fs), &flat(&expect), 1e-3, 1e-2, "linearity");
+        });
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum() {
+        let n = 24;
+        let plan = FftPlan::new(n);
+        let mut src = vec![Complex32::ZERO; n];
+        src[0] = Complex32::ONE;
+        let mut dst = vec![Complex32::ZERO; n];
+        plan.forward(&src, &mut dst);
+        for d in &dst {
+            assert!((d.re - 1.0).abs() < 1e-5 && d.im.abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,729 @@
+//! Pruned 3D FFT — the CPU scheme of §III.B.
+//!
+//! A 3D transform is three passes of 1D transforms. When the input is a
+//! small image (e.g. a k³ kernel) zero-padded to the FFT size, most 1D
+//! lines are all-zero and their transforms are skipped:
+//!
+//! * along z: only the `nx·ny` lines inside the image are transformed;
+//! * along y: only lines at `x < nx` can be non-zero — `nx·z̃` lines;
+//! * along x: every `ỹ·z̃` line may be non-zero — full pass.
+//!
+//! The inverse prunes symmetrically against the *crop window* (the
+//! "valid" region of the convolution): full pass along x, then only
+//! cropped-x lines along y, then only cropped-(x,y) lines along z.
+//!
+//! Layout: real volumes are `[x][y][z]` row-major (z contiguous);
+//! spectra are `[x][y][zc]` with `zc = Z/2+1` complex bins from the
+//! real-to-complex transform along z.
+
+use crate::tensor::{Complex32, Vec3};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+use super::dft::{FftPlan, FftScratch};
+
+thread_local! {
+    /// Per-worker scratch for the parallel (data-parallel primitive)
+    /// variants — avoids per-line allocation in the hot loops.
+    static TL_SCRATCH: std::cell::RefCell<Fft3Scratch> =
+        std::cell::RefCell::new(Fft3Scratch::new());
+}
+
+/// Scratch for one in-flight 3D transform. One per worker thread.
+pub struct Fft3Scratch {
+    pub fft: FftScratch,
+    line_a: Vec<Complex32>,
+    line_b: Vec<Complex32>,
+    real_a: Vec<f32>,
+    real_b: Vec<f32>,
+}
+
+impl Fft3Scratch {
+    pub fn new() -> Self {
+        Fft3Scratch {
+            fft: FftScratch::new(),
+            line_a: Vec::new(),
+            line_b: Vec::new(),
+            real_a: Vec::new(),
+            real_b: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.line_a.len() < n {
+            self.line_a.resize(n, Complex32::ZERO);
+            self.line_b.resize(n, Complex32::ZERO);
+            self.real_a.resize(n, 0.0);
+            self.real_b.resize(n, 0.0);
+        }
+    }
+}
+
+impl Default for Fft3Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plan for 3D transforms padded to `padded = [X, Y, Z]`.
+pub struct Fft3 {
+    padded: Vec3,
+    zc: usize,
+    px: FftPlan,
+    py: FftPlan,
+    pz: FftPlan,
+}
+
+impl Fft3 {
+    pub fn new(padded: Vec3) -> Self {
+        let [x, y, z] = padded;
+        Fft3 {
+            padded,
+            zc: z / 2 + 1,
+            px: FftPlan::new(x),
+            py: FftPlan::new(y),
+            pz: FftPlan::new(z),
+        }
+    }
+
+    pub fn padded(&self) -> Vec3 {
+        self.padded
+    }
+
+    /// Complex bins along z after r2c.
+    pub fn zc(&self) -> usize {
+        self.zc
+    }
+
+    /// Elements of a spectrum buffer: X · Y · zc.
+    pub fn complex_len(&self) -> usize {
+        self.padded[0] * self.padded[1] * self.zc
+    }
+
+    /// Pruned forward transform: `img` has extent `dims ≤ padded`
+    /// (z-contiguous), `out` is the X·Y·zc spectrum (fully overwritten).
+    pub fn forward(&self, img: &[f32], dims: Vec3, out: &mut [Complex32], sc: &mut Fft3Scratch) {
+        let [nx, ny, nz] = dims;
+        let [px, py, _pz] = self.padded;
+        let zc = self.zc;
+        assert!(nx <= px && ny <= py && nz <= self.padded[2], "image exceeds padded size");
+        assert_eq!(img.len(), nx * ny * nz);
+        assert_eq!(out.len(), self.complex_len());
+        sc.ensure(self.max_len());
+        out.fill(Complex32::ZERO);
+
+        // Pass 1 — along z (real→complex), pruned to the nx·ny image
+        // lines, two lines per complex FFT.
+        let z = self.padded[2];
+        let total = nx * ny;
+        let mut li = 0usize;
+        while li < total {
+            let (x0, y0) = (li / ny, li % ny);
+            let src0 = &img[(x0 * ny + y0) * nz..(x0 * ny + y0) * nz + nz];
+            sc.real_a[..nz].copy_from_slice(src0);
+            sc.real_a[nz..z].fill(0.0);
+            if li + 1 < total {
+                let (x1, y1) = ((li + 1) / ny, (li + 1) % ny);
+                let src1 = &img[(x1 * ny + y1) * nz..(x1 * ny + y1) * nz + nz];
+                sc.real_b[..nz].copy_from_slice(src1);
+                sc.real_b[nz..z].fill(0.0);
+                // Split scratch: write into line buffers, then copy out.
+                let (ra, rb, la, lb, fft) = (
+                    &sc.real_a[..z],
+                    &sc.real_b[..z],
+                    &mut sc.line_a[..zc],
+                    &mut sc.line_b[..zc],
+                    &mut sc.fft,
+                );
+                self.pz.r2c_pair(ra, rb, la, lb, fft);
+                out[(x0 * py + y0) * zc..(x0 * py + y0) * zc + zc].copy_from_slice(la);
+                out[(x1 * py + y1) * zc..(x1 * py + y1) * zc + zc].copy_from_slice(lb);
+                li += 2;
+            } else {
+                let (ra, la, fft) = (&sc.real_a[..z], &mut sc.line_a[..zc], &mut sc.fft);
+                self.pz.r2c(ra, la, fft);
+                out[(x0 * py + y0) * zc..(x0 * py + y0) * zc + zc].copy_from_slice(la);
+                li += 1;
+            }
+        }
+
+        // Pass 2 — along y, pruned to x < nx: nx·zc lines.
+        for x in 0..nx {
+            for k in 0..zc {
+                self.c2c_line(out, (x * py) * zc + k, zc, &self.py, sc);
+            }
+        }
+
+        // Pass 3 — along x: full ỹ·zc lines.
+        for y in 0..py {
+            for k in 0..zc {
+                self.c2c_line(out, y * zc + k, py * zc, &self.px, sc);
+            }
+        }
+    }
+
+    /// Unpruned forward (reference / baseline): transforms every line.
+    pub fn forward_naive(&self, img: &[f32], dims: Vec3, out: &mut [Complex32], sc: &mut Fft3Scratch) {
+        let [nx, ny, nz] = dims;
+        let [px, py, pz] = self.padded;
+        let zc = self.zc;
+        assert_eq!(out.len(), self.complex_len());
+        sc.ensure(self.max_len());
+        out.fill(Complex32::ZERO);
+        let z = pz;
+        // Along z: all px·py lines (zero lines transformed too).
+        for x in 0..px {
+            for y in 0..py {
+                if x < nx && y < ny {
+                    let src = &img[(x * ny + y) * nz..(x * ny + y) * nz + nz];
+                    sc.real_a[..nz].copy_from_slice(src);
+                    sc.real_a[nz..z].fill(0.0);
+                } else {
+                    sc.real_a[..z].fill(0.0);
+                }
+                let (ra, la, fft) = (&sc.real_a[..z], &mut sc.line_a[..zc], &mut sc.fft);
+                self.pz.r2c(ra, la, fft);
+                out[(x * py + y) * zc..(x * py + y) * zc + zc].copy_from_slice(la);
+            }
+        }
+        for x in 0..px {
+            for k in 0..zc {
+                self.c2c_line(out, (x * py) * zc + k, zc, &self.py, sc);
+            }
+        }
+        for y in 0..py {
+            for k in 0..zc {
+                self.c2c_line(out, y * zc + k, py * zc, &self.px, sc);
+            }
+        }
+    }
+
+    /// Pruned inverse: recover only the crop window `offset..offset+dims`
+    /// of the padded real volume. `freq` is consumed (overwritten).
+    pub fn inverse_crop(
+        &self,
+        freq: &mut [Complex32],
+        offset: Vec3,
+        dims: Vec3,
+        out_img: &mut [f32],
+        sc: &mut Fft3Scratch,
+    ) {
+        let [ox, oy, oz] = offset;
+        let [cx, cy, cz] = dims;
+        let [px, py, pz] = self.padded;
+        let zc = self.zc;
+        assert!(ox + cx <= px && oy + cy <= py && oz + cz <= pz, "crop exceeds padded size");
+        assert_eq!(freq.len(), self.complex_len());
+        assert_eq!(out_img.len(), cx * cy * cz);
+        sc.ensure(self.max_len());
+
+        // Pass 1 — inverse along x: all ỹ·zc lines are needed.
+        for y in 0..py {
+            for k in 0..zc {
+                self.c2c_line_inv(freq, y * zc + k, py * zc, &self.px, sc);
+            }
+        }
+        // Pass 2 — inverse along y, pruned to x within the crop.
+        for x in ox..ox + cx {
+            for k in 0..zc {
+                self.c2c_line_inv(freq, (x * py) * zc + k, zc, &self.py, sc);
+            }
+        }
+        // Pass 3 — complex→real along z, pruned to (x, y) within the
+        // crop, two lines per complex FFT.
+        let total = cx * cy;
+        let mut li = 0usize;
+        while li < total {
+            let (ix0, iy0) = (li / cy, li % cy);
+            let (x0, y0) = (ox + ix0, oy + iy0);
+            let o0 = (x0 * py + y0) * zc;
+            if li + 1 < total {
+                let (ix1, iy1) = ((li + 1) / cy, (li + 1) % cy);
+                let (x1, y1) = (ox + ix1, oy + iy1);
+                let o1 = (x1 * py + y1) * zc;
+                // Copy spectra lines into scratch to avoid aliasing.
+                sc.line_a[..zc].copy_from_slice(&freq[o0..o0 + zc]);
+                sc.line_b[..zc].copy_from_slice(&freq[o1..o1 + zc]);
+                let (la, lb, ra, rb, fft) = (
+                    &sc.line_a[..zc],
+                    &sc.line_b[..zc],
+                    &mut sc.real_a[..pz],
+                    &mut sc.real_b[..pz],
+                    &mut sc.fft,
+                );
+                self.pz.c2r_pair(la, lb, ra, rb, fft);
+                out_img[(ix0 * cy + iy0) * cz..(ix0 * cy + iy0) * cz + cz]
+                    .copy_from_slice(&ra[oz..oz + cz]);
+                out_img[(ix1 * cy + iy1) * cz..(ix1 * cy + iy1) * cz + cz]
+                    .copy_from_slice(&rb[oz..oz + cz]);
+                li += 2;
+            } else {
+                sc.line_a[..zc].copy_from_slice(&freq[o0..o0 + zc]);
+                let (la, ra, fft) = (&sc.line_a[..zc], &mut sc.real_a[..pz], &mut sc.fft);
+                self.pz.c2r(la, ra, fft);
+                out_img[(ix0 * cy + iy0) * cz..(ix0 * cy + iy0) * cz + cz]
+                    .copy_from_slice(&ra[oz..oz + cz]);
+                li += 1;
+            }
+        }
+    }
+
+    /// Parallel pruned forward: same result as [`Self::forward`], with
+    /// each pass's independent 1D lines fanned out over the pool. This
+    /// is the "PARALLEL-FFT" of Algorithm 2 (the data-parallel CPU
+    /// primitive parallelises *within* one transform).
+    pub fn forward_par(&self, img: &[f32], dims: Vec3, out: &mut [Complex32], pool: &TaskPool) {
+        let [nx, ny, nz] = dims;
+        let [px, py, pz] = self.padded;
+        let zc = self.zc;
+        assert!(nx <= px && ny <= py && nz <= pz, "image exceeds padded size");
+        assert_eq!(img.len(), nx * ny * nz);
+        assert_eq!(out.len(), self.complex_len());
+        out.fill(Complex32::ZERO);
+        let outp = SendPtr(out.as_mut_ptr());
+
+        // Pass 1 — r2c along z over nx·ny image lines (paired).
+        let total = nx * ny;
+        pool.parallel_for(total.div_ceil(2), |pair| {
+            TL_SCRATCH.with(|c| {
+                let sc = &mut *c.borrow_mut();
+                sc.ensure(self.max_len());
+                let l0 = pair * 2;
+                let (x0, y0) = (l0 / ny, l0 % ny);
+                sc.real_a[..nz].copy_from_slice(&img[l0 * nz..(l0 + 1) * nz]);
+                sc.real_a[nz..pz].fill(0.0);
+                if l0 + 1 < total {
+                    let (x1, y1) = ((l0 + 1) / ny, (l0 + 1) % ny);
+                    sc.real_b[..nz].copy_from_slice(&img[(l0 + 1) * nz..(l0 + 2) * nz]);
+                    sc.real_b[nz..pz].fill(0.0);
+                    let (ra, rb, la, lb, fft) = (
+                        &sc.real_a[..pz],
+                        &sc.real_b[..pz],
+                        &mut sc.line_a[..zc],
+                        &mut sc.line_b[..zc],
+                        &mut sc.fft,
+                    );
+                    self.pz.r2c_pair(ra, rb, la, lb, fft);
+                    unsafe {
+                        outp.slice_mut((x0 * py + y0) * zc, zc).copy_from_slice(la);
+                        outp.slice_mut((x1 * py + y1) * zc, zc).copy_from_slice(lb);
+                    }
+                } else {
+                    let (ra, la, fft) = (&sc.real_a[..pz], &mut sc.line_a[..zc], &mut sc.fft);
+                    self.pz.r2c(ra, la, fft);
+                    unsafe {
+                        outp.slice_mut((x0 * py + y0) * zc, zc).copy_from_slice(la);
+                    }
+                }
+            });
+        });
+
+        // Pass 2 — along y, pruned to x < nx.
+        pool.parallel_for(nx * zc, |i| {
+            let (x, k) = (i / zc, i % zc);
+            TL_SCRATCH.with(|c| {
+                let sc = &mut *c.borrow_mut();
+                sc.ensure(self.max_len());
+                unsafe {
+                    c2c_line_raw(outp, (x * py) * zc + k, zc, &self.py, sc, false);
+                }
+            });
+        });
+
+        // Pass 3 — along x, full width.
+        pool.parallel_for(py * zc, |i| {
+            let (y, k) = (i / zc, i % zc);
+            TL_SCRATCH.with(|c| {
+                let sc = &mut *c.borrow_mut();
+                sc.ensure(self.max_len());
+                unsafe {
+                    c2c_line_raw(outp, y * zc + k, py * zc, &self.px, sc, false);
+                }
+            });
+        });
+    }
+
+    /// Parallel pruned inverse-with-crop — the data-parallel
+    /// counterpart of [`Self::inverse_crop`].
+    pub fn inverse_crop_par(
+        &self,
+        freq: &mut [Complex32],
+        offset: Vec3,
+        dims: Vec3,
+        out_img: &mut [f32],
+        pool: &TaskPool,
+    ) {
+        let [ox, oy, oz] = offset;
+        let [cx, cy, cz] = dims;
+        let [px, py, pz] = self.padded;
+        let zc = self.zc;
+        assert!(ox + cx <= px && oy + cy <= py && oz + cz <= pz);
+        assert_eq!(freq.len(), self.complex_len());
+        assert_eq!(out_img.len(), cx * cy * cz);
+        let freqp = SendPtr(freq.as_mut_ptr());
+        let outp = SendPtr(out_img.as_mut_ptr());
+
+        // Inverse along x — all lines.
+        pool.parallel_for(py * zc, |i| {
+            let (y, k) = (i / zc, i % zc);
+            TL_SCRATCH.with(|c| {
+                let sc = &mut *c.borrow_mut();
+                sc.ensure(self.max_len());
+                unsafe {
+                    c2c_line_raw(freqp, y * zc + k, py * zc, &self.px, sc, true);
+                }
+            });
+        });
+        // Inverse along y — x within crop only.
+        pool.parallel_for(cx * zc, |i| {
+            let (xi, k) = (i / zc, i % zc);
+            let x = ox + xi;
+            TL_SCRATCH.with(|c| {
+                let sc = &mut *c.borrow_mut();
+                sc.ensure(self.max_len());
+                unsafe {
+                    c2c_line_raw(freqp, (x * py) * zc + k, zc, &self.py, sc, true);
+                }
+            });
+        });
+        // c2r along z — (x, y) within crop, paired.
+        let total = cx * cy;
+        pool.parallel_for(total.div_ceil(2), |pair| {
+            TL_SCRATCH.with(|c| {
+                let sc = &mut *c.borrow_mut();
+                sc.ensure(self.max_len());
+                let l0 = pair * 2;
+                let (ix0, iy0) = (l0 / cy, l0 % cy);
+                let o0 = ((ox + ix0) * py + oy + iy0) * zc;
+                unsafe {
+                    sc.line_a[..zc].copy_from_slice(outp_freq(freqp, o0, zc));
+                    if l0 + 1 < total {
+                        let (ix1, iy1) = ((l0 + 1) / cy, (l0 + 1) % cy);
+                        let o1 = ((ox + ix1) * py + oy + iy1) * zc;
+                        sc.line_b[..zc].copy_from_slice(outp_freq(freqp, o1, zc));
+                        let (la, lb, ra, rb, fft) = (
+                            &sc.line_a[..zc],
+                            &sc.line_b[..zc],
+                            &mut sc.real_a[..pz],
+                            &mut sc.real_b[..pz],
+                            &mut sc.fft,
+                        );
+                        self.pz.c2r_pair(la, lb, ra, rb, fft);
+                        outp.slice_mut((ix0 * cy + iy0) * cz, cz)
+                            .copy_from_slice(&ra[oz..oz + cz]);
+                        outp.slice_mut((ix1 * cy + iy1) * cz, cz)
+                            .copy_from_slice(&rb[oz..oz + cz]);
+                    } else {
+                        let (la, ra, fft) =
+                            (&sc.line_a[..zc], &mut sc.real_a[..pz], &mut sc.fft);
+                        self.pz.c2r(la, ra, fft);
+                        outp.slice_mut((ix0 * cy + iy0) * cz, cz)
+                            .copy_from_slice(&ra[oz..oz + cz]);
+                    }
+                }
+            });
+        });
+    }
+
+    fn max_len(&self) -> usize {
+        self.padded[0].max(self.padded[1]).max(self.padded[2]).max(self.zc)
+    }
+
+    /// Gather a strided complex line, forward-transform, scatter back.
+    fn c2c_line(&self, buf: &mut [Complex32], start: usize, stride: usize, plan: &FftPlan, sc: &mut Fft3Scratch) {
+        let n = plan.len();
+        for i in 0..n {
+            sc.line_a[i] = buf[start + i * stride];
+        }
+        {
+            let (la, lb) = (&sc.line_a[..n], &mut sc.line_b[..n]);
+            plan.forward(la, lb);
+        }
+        for i in 0..n {
+            buf[start + i * stride] = sc.line_b[i];
+        }
+    }
+
+    fn c2c_line_inv(&self, buf: &mut [Complex32], start: usize, stride: usize, plan: &FftPlan, sc: &mut Fft3Scratch) {
+        let n = plan.len();
+        for i in 0..n {
+            sc.line_a[i] = buf[start + i * stride];
+        }
+        {
+            let (la, lb, fft) = (&sc.line_a[..n], &mut sc.line_b[..n], &mut sc.fft);
+            plan.inverse(la, lb, fft);
+        }
+        for i in 0..n {
+            buf[start + i * stride] = sc.line_b[i];
+        }
+    }
+
+    /// Point-wise multiply-accumulate of two spectra: `acc += a · b`,
+    /// parallelised over chunks (PARALLEL-MAD of Algorithm 2).
+    pub fn mad_spectra_par(
+        acc: &mut [Complex32],
+        a: &[Complex32],
+        b: &[Complex32],
+        pool: &TaskPool,
+    ) {
+        assert_eq!(acc.len(), a.len());
+        assert_eq!(acc.len(), b.len());
+        let n = acc.len();
+        let chunks = (pool.workers() * 2).min(n.max(1));
+        let per = n.div_ceil(chunks);
+        let accp = SendPtr(acc.as_mut_ptr());
+        pool.parallel_for(chunks, |c| {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                return;
+            }
+            let acc = unsafe { accp.slice_mut(lo, hi - lo) };
+            for (i, d) in acc.iter_mut().enumerate() {
+                d.mad(a[lo + i], b[lo + i]);
+            }
+        });
+    }
+
+    /// Point-wise multiply-accumulate of two spectra: `acc += a · b`.
+    /// This is PARALLEL-MAD's inner kernel (Algorithm 2).
+    pub fn mad_spectra(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+        debug_assert_eq!(acc.len(), a.len());
+        debug_assert_eq!(acc.len(), b.len());
+        for ((d, x), y) in acc.iter_mut().zip(a.iter()).zip(b.iter()) {
+            d.mad(*x, *y);
+        }
+    }
+}
+
+/// Run `f` with this worker thread's reusable 3D-FFT scratch. Task
+/// bodies of the task-parallel primitive use this so per-task transforms
+/// do not re-allocate.
+pub fn with_tl_scratch<R>(f: impl FnOnce(&mut Fft3Scratch) -> R) -> R {
+    TL_SCRATCH.with(|c| f(&mut c.borrow_mut()))
+}
+
+/// Gather a strided line through a raw pointer, transform (forward or
+/// inverse), scatter back.
+///
+/// # Safety
+/// Caller guarantees the strided line indices are in bounds and no two
+/// concurrent calls touch the same line.
+unsafe fn c2c_line_raw(
+    buf: SendPtr<Complex32>,
+    start: usize,
+    stride: usize,
+    plan: &FftPlan,
+    sc: &mut Fft3Scratch,
+    inverse: bool,
+) {
+    let n = plan.len();
+    let p = buf.get();
+    for i in 0..n {
+        sc.line_a[i] = *p.add(start + i * stride);
+    }
+    {
+        let (la, lb, fft) = (&sc.line_a[..n], &mut sc.line_b[..n], &mut sc.fft);
+        if inverse {
+            plan.inverse(la, lb, fft);
+        } else {
+            plan.forward(la, lb);
+        }
+    }
+    for i in 0..n {
+        *p.add(start + i * stride) = sc.line_b[i];
+    }
+}
+
+/// View a spectrum range through the raw pointer (read side of the
+/// paired c2r pass).
+unsafe fn outp_freq(p: SendPtr<Complex32>, off: usize, len: usize) -> &'static [Complex32] {
+    std::slice::from_raw_parts(p.get().add(off), len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::quick::assert_allclose;
+
+    fn rand_img(dims: Vec3, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..dims[0] * dims[1] * dims[2]).map(|_| r.f32_range(-1.0, 1.0)).collect()
+    }
+
+    /// O(n⁶) 3D DFT magnitude reference via direct convolution theorem
+    /// check instead: pruned forward must equal naive forward.
+    #[test]
+    fn pruned_equals_naive_forward() {
+        for (dims, padded) in [
+            ([3, 3, 3], [8, 8, 8]),
+            ([2, 3, 4], [6, 7, 8]),
+            ([5, 5, 5], [5, 5, 5]),
+            ([1, 1, 1], [4, 4, 4]),
+            ([4, 2, 6], [9, 10, 12]),
+        ] {
+            let plan = Fft3::new(padded);
+            let img = rand_img(dims, 42);
+            let mut sc = Fft3Scratch::new();
+            let mut a = vec![Complex32::ZERO; plan.complex_len()];
+            let mut b = vec![Complex32::ZERO; plan.complex_len()];
+            plan.forward(&img, dims, &mut a, &mut sc);
+            plan.forward_naive(&img, dims, &mut b, &mut sc);
+            let fa: Vec<f32> = a.iter().flat_map(|c| [c.re, c.im]).collect();
+            let fb: Vec<f32> = b.iter().flat_map(|c| [c.re, c.im]).collect();
+            assert_allclose(&fa, &fb, 1e-3, 1e-3, &format!("pruned vs naive {dims:?}->{padded:?}"));
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip_full() {
+        let dims = [4, 5, 6];
+        let padded = [4, 5, 6];
+        let plan = Fft3::new(padded);
+        let img = rand_img(dims, 7);
+        let mut sc = Fft3Scratch::new();
+        let mut freq = vec![Complex32::ZERO; plan.complex_len()];
+        plan.forward(&img, dims, &mut freq, &mut sc);
+        let mut back = vec![0.0f32; dims[0] * dims[1] * dims[2]];
+        plan.inverse_crop(&mut freq, [0, 0, 0], dims, &mut back, &mut sc);
+        assert_allclose(&back, &img, 1e-4, 1e-3, "3d roundtrip");
+    }
+
+    #[test]
+    fn inverse_crop_extracts_window() {
+        let dims = [6, 6, 6];
+        let padded = [8, 9, 10];
+        let plan = Fft3::new(padded);
+        let img = rand_img(dims, 9);
+        let mut sc = Fft3Scratch::new();
+        let mut freq = vec![Complex32::ZERO; plan.complex_len()];
+        plan.forward(&img, dims, &mut freq, &mut sc);
+
+        // Full inverse for reference.
+        let mut freq2 = freq.clone();
+        let mut full = vec![0.0f32; padded[0] * padded[1] * padded[2]];
+        plan.inverse_crop(&mut freq2, [0, 0, 0], padded, &mut full, &mut sc);
+
+        let off = [2, 1, 3];
+        let cdims = [3, 4, 5];
+        let mut crop = vec![0.0f32; cdims[0] * cdims[1] * cdims[2]];
+        plan.inverse_crop(&mut freq, off, cdims, &mut crop, &mut sc);
+
+        let mut expect = Vec::new();
+        for x in 0..cdims[0] {
+            for y in 0..cdims[1] {
+                for z in 0..cdims[2] {
+                    expect.push(
+                        full[((off[0] + x) * padded[1] + (off[1] + y)) * padded[2] + off[2] + z],
+                    );
+                }
+            }
+        }
+        assert_allclose(&crop, &expect, 1e-4, 1e-3, "crop window");
+    }
+
+    #[test]
+    fn parallel_variants_match_serial() {
+        let pool = crate::util::pool::TaskPool::with_topology(
+            crate::util::pool::ChipTopology { chips: 2, cores_per_chip: 2 },
+        );
+        let dims = [5, 6, 7];
+        let padded = [8, 8, 9];
+        let plan = Fft3::new(padded);
+        let img = rand_img(dims, 33);
+        let mut sc = Fft3Scratch::new();
+
+        let mut a = vec![Complex32::ZERO; plan.complex_len()];
+        let mut b = vec![Complex32::ZERO; plan.complex_len()];
+        plan.forward(&img, dims, &mut a, &mut sc);
+        plan.forward_par(&img, dims, &mut b, &pool);
+        let fa: Vec<f32> = a.iter().flat_map(|c| [c.re, c.im]).collect();
+        let fb: Vec<f32> = b.iter().flat_map(|c| [c.re, c.im]).collect();
+        assert_allclose(&fb, &fa, 1e-4, 1e-3, "forward_par");
+
+        let off = [1, 2, 0];
+        let crop = [4, 3, 5];
+        let mut out_s = vec![0.0f32; crop.volume_()];
+        let mut out_p = vec![0.0f32; crop.volume_()];
+        plan.inverse_crop(&mut a, off, crop, &mut out_s, &mut sc);
+        plan.inverse_crop_par(&mut b, off, crop, &mut out_p, &pool);
+        assert_allclose(&out_p, &out_s, 1e-4, 1e-3, "inverse_crop_par");
+    }
+
+    trait Volume_ {
+        fn volume_(&self) -> usize;
+    }
+    impl Volume_ for Vec3 {
+        fn volume_(&self) -> usize {
+            self[0] * self[1] * self[2]
+        }
+    }
+
+    #[test]
+    fn mad_par_matches_serial() {
+        let pool = crate::util::pool::TaskPool::with_topology(
+            crate::util::pool::ChipTopology { chips: 1, cores_per_chip: 3 },
+        );
+        let mut r = Rng::new(77);
+        let n = 1000;
+        let a: Vec<Complex32> =
+            (0..n).map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0))).collect();
+        let b: Vec<Complex32> =
+            (0..n).map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0))).collect();
+        let mut acc1 = vec![Complex32::new(0.1, 0.2); n];
+        let mut acc2 = acc1.clone();
+        Fft3::mad_spectra(&mut acc1, &a, &b);
+        Fft3::mad_spectra_par(&mut acc2, &a, &b, &pool);
+        let f1: Vec<f32> = acc1.iter().flat_map(|c| [c.re, c.im]).collect();
+        let f2: Vec<f32> = acc2.iter().flat_map(|c| [c.re, c.im]).collect();
+        assert_allclose(&f2, &f1, 1e-6, 1e-6, "mad par");
+    }
+
+    /// Convolution theorem end-to-end: FFT-multiply-IFFT must equal a
+    /// direct "valid" 3D convolution.
+    #[test]
+    fn convolution_theorem_valid_region() {
+        let n = [7, 6, 8];
+        let k = [3, 2, 4];
+        let padded = n; // overlap-save: pad only to image size
+        let plan = Fft3::new(padded);
+        let img = rand_img(n, 11);
+        let ker = rand_img(k, 13);
+        let mut sc = Fft3Scratch::new();
+
+        let mut fi = vec![Complex32::ZERO; plan.complex_len()];
+        let mut fk = vec![Complex32::ZERO; plan.complex_len()];
+        plan.forward(&img, n, &mut fi, &mut sc);
+        plan.forward(&ker, k, &mut fk, &mut sc);
+        for (a, b) in fi.iter_mut().zip(fk.iter()) {
+            *a = *a * *b;
+        }
+        let out_dims = [n[0] - k[0] + 1, n[1] - k[1] + 1, n[2] - k[2] + 1];
+        let off = [k[0] - 1, k[1] - 1, k[2] - 1];
+        let mut out = vec![0.0f32; out_dims[0] * out_dims[1] * out_dims[2]];
+        plan.inverse_crop(&mut fi, off, out_dims, &mut out, &mut sc);
+
+        // Direct valid *convolution* (flipped kernel).
+        let mut expect = vec![0.0f32; out.len()];
+        for x in 0..out_dims[0] {
+            for y in 0..out_dims[1] {
+                for z in 0..out_dims[2] {
+                    let mut acc = 0.0f32;
+                    for a in 0..k[0] {
+                        for b in 0..k[1] {
+                            for c in 0..k[2] {
+                                let iv = img[((x + a) * n[1] + (y + b)) * n[2] + (z + c)];
+                                let kv = ker[((k[0] - 1 - a) * k[1] + (k[1] - 1 - b)) * k[2]
+                                    + (k[2] - 1 - c)];
+                                acc += iv * kv;
+                            }
+                        }
+                    }
+                    expect[(x * out_dims[1] + y) * out_dims[2] + z] = acc;
+                }
+            }
+        }
+        assert_allclose(&out, &expect, 1e-3, 1e-2, "conv theorem");
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch FFT machinery, including the paper's **pruned FFT**
+//! (§III) — the key primitive behind ZNNi's FFT-based convolution.
+//!
+//! * [`plan`] — mixed-radix planning, twiddle tables, FFT-optimal sizes
+//!   (`2^a·3^b·5^c·7^d`, §III.D).
+//! * [`dft`] — 1D complex FFT (recursive Cooley–Tukey with specialised
+//!   radix-2/3/4/5 butterflies), real↔complex wrappers including the
+//!   two-for-one packed real transform used for batched lines.
+//! * [`fft3d`] — the CPU pruned 3D scheme of §III.B: per-dimension 1D
+//!   passes that skip all-zero lines of the zero-padded input, cutting
+//!   kernel-transform cost from `C·n³·log n³` to
+//!   `C·n·log n·(k² + k·n + n²)`.
+//! * [`batched`] — the GPU scheme of §III.C: batched contiguous 1D
+//!   transforms interleaved with out-of-place 4D tensor permutes whose
+//!   index arithmetic uses magic-number division (§III.D).
+
+pub mod batched;
+pub mod dft;
+pub mod fft3d;
+pub mod plan;
+
+pub use dft::FftPlan;
+pub use fft3d::Fft3;
+pub use plan::{fft_optimal_size, fft_optimal_vec3, is_fft_fast_size};

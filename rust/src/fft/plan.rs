@@ -1,0 +1,169 @@
+//! FFT size planning: factorisation and "FFT-optimal" padded sizes.
+//!
+//! The paper pads images/kernels to sizes of the form
+//! `2^a·3^b·5^c·7^d` (cuFFT-friendly; §III.D) — optionally allowing one
+//! factor of 11 or 13 in fftw mode. Sizes outside this set still work
+//! (generic prime butterfly) but are slower; the planner never chooses
+//! them.
+
+/// Radices our butterflies specialise; the generic O(p²) butterfly
+/// handles any other prime as a fallback.
+pub const FAST_RADICES: [usize; 4] = [2, 3, 5, 7];
+
+/// Factorise `n` into prime factors, smallest first, preferring to emit
+/// 4s (pairs of 2s) since the radix-4 butterfly saves multiplies.
+pub fn factorize(mut n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    let mut fs = Vec::new();
+    // Pull out 4s first, then a leftover 2.
+    while n % 4 == 0 {
+        fs.push(4);
+        n /= 4;
+    }
+    if n % 2 == 0 {
+        fs.push(2);
+        n /= 2;
+    }
+    let mut p = 3;
+    while p * p <= n {
+        while n % p == 0 {
+            fs.push(p);
+            n /= p;
+        }
+        p += 2;
+    }
+    if n > 1 {
+        fs.push(n);
+    }
+    fs
+}
+
+/// Is `n` a product of 2, 3, 5, 7 only (cuFFT/MKL-fast, §III.D)?
+/// `allow_11_13` additionally permits a *single* factor of 11 or 13
+/// (the fftw constraint e+f ≤ 1 from the paper).
+pub fn is_fft_fast_size_ext(n: usize, allow_11_13: bool) -> bool {
+    if n == 0 {
+        return false;
+    }
+    let mut n = n;
+    for p in [2usize, 3, 5, 7] {
+        while n % p == 0 {
+            n /= p;
+        }
+    }
+    if allow_11_13 {
+        if n % 11 == 0 {
+            n /= 11;
+        } else if n % 13 == 0 {
+            n /= 13;
+        }
+    }
+    n == 1
+}
+
+/// Is `n` a product of 2, 3, 5, 7 only?
+pub fn is_fft_fast_size(n: usize) -> bool {
+    is_fft_fast_size_ext(n, false)
+}
+
+/// Smallest fast size ≥ `n` (FFT-OPTIMAL-SIZE in Algorithm 2).
+pub fn fft_optimal_size(n: usize) -> usize {
+    let mut m = n.max(1);
+    while !is_fft_fast_size(m) {
+        m += 1;
+    }
+    m
+}
+
+/// Per-dimension optimal padded extent.
+pub fn fft_optimal_vec3(n: [usize; 3]) -> [usize; 3] {
+    [fft_optimal_size(n[0]), fft_optimal_size(n[1]), fft_optimal_size(n[2])]
+}
+
+/// Analytic op count of a length-`n` 1D FFT: `C · n · log2 n` with the
+/// conventional C = 5 for real-world mixed radix (used only for cost
+/// *models*, never for timing).
+pub fn fft_1d_flops(n: usize) -> f64 {
+    let n = n as f64;
+    5.0 * n * n.log2().max(1.0)
+}
+
+/// Table I cost of a full (unpruned) 3D FFT of extent `n³`-like volume.
+pub fn fft_3d_flops_naive(n: [usize; 3]) -> f64 {
+    let [x, y, z] = n;
+    // y·z lines along x + x·z lines along y + x·y lines along z
+    (y * z) as f64 * fft_1d_flops(x)
+        + (x * z) as f64 * fft_1d_flops(y)
+        + (x * y) as f64 * fft_1d_flops(z)
+}
+
+/// §III.A pruned cost of transforming a `k`-extent image zero-padded to
+/// `n` extent: only `k²` lines along the first dimension, `k·n` along
+/// the second, `n²` along the last.
+pub fn fft_3d_flops_pruned(k: [usize; 3], n: [usize; 3]) -> f64 {
+    let [kx, ky, _kz] = k;
+    let [x, y, z] = n;
+    // Transform along z first (k_x·k_y lines), then y (k_x·z lines),
+    // then x (y·z lines) — mirrors Fft3::forward.
+    (kx * ky) as f64 * fft_1d_flops(z)
+        + (kx * z) as f64 * fft_1d_flops(y)
+        + (y * z) as f64 * fft_1d_flops(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorize_roundtrip() {
+        for n in 1..500usize {
+            let fs = factorize(n);
+            assert_eq!(fs.iter().product::<usize>(), n, "n={n} fs={fs:?}");
+        }
+    }
+
+    #[test]
+    fn factorize_prefers_radix4() {
+        assert_eq!(factorize(16), vec![4, 4]);
+        assert_eq!(factorize(8), vec![4, 2]);
+        assert_eq!(factorize(12), vec![4, 3]);
+    }
+
+    #[test]
+    fn fast_sizes() {
+        for n in [1, 2, 8, 27, 35, 48, 70, 105, 128, 210, 243, 245] {
+            assert!(is_fft_fast_size(n), "n={n}");
+        }
+        for n in [11, 13, 22, 121, 97, 101] {
+            assert!(!is_fft_fast_size(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fftw_mode_allows_one_11_or_13() {
+        assert!(is_fft_fast_size_ext(11, true));
+        assert!(is_fft_fast_size_ext(13 * 48, true));
+        assert!(!is_fft_fast_size_ext(11 * 13, true));
+        assert!(!is_fft_fast_size_ext(11 * 11, true));
+    }
+
+    #[test]
+    fn optimal_size_is_minimal_fast() {
+        for n in 1..300usize {
+            let m = fft_optimal_size(n);
+            assert!(m >= n);
+            assert!(is_fft_fast_size(m));
+            for c in n..m {
+                assert!(!is_fft_fast_size(c));
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_flops_below_naive_for_kernels() {
+        // A 5³ kernel padded to 64³: pruning must save roughly 2/3.
+        let pruned = fft_3d_flops_pruned([5, 5, 5], [64, 64, 64]);
+        let naive = fft_3d_flops_naive([64, 64, 64]);
+        assert!(pruned < naive / 2.0, "pruned={pruned} naive={naive}");
+    }
+}

@@ -1,0 +1,336 @@
+//! Sliding-window inference: fragment recombination and patch-based
+//! whole-volume execution (§II, §VI.A).
+//!
+//! An MPF network's output is `α` fragments per input; recombination
+//! interleaves them at the total pooling stride to reconstruct the
+//! dense sliding-window output. For volumes too large for one patch,
+//! the volume is divided into overlapping input patches (overlap-save:
+//! overlap = FoV − 1) whose recombined outputs tile the dense output
+//! exactly.
+
+use anyhow::{bail, Result};
+
+use crate::net::{LayerSpec, NetSpec, PoolingMode};
+use crate::tensor::{Shape5, Tensor5, Vec3};
+
+/// Fragment geometry of an all-MPF network: per-fragment offsets (in
+/// output-batch order) and the total stride.
+#[derive(Clone, Debug)]
+pub struct FragmentMap {
+    pub offsets: Vec<Vec3>,
+    pub stride: Vec3,
+}
+
+/// Compute the fragment offsets produced by the net's MPF layers, in
+/// the batch order the layers emit them (earlier layers are more
+/// significant). Requires every pooling layer to be MPF.
+pub fn fragment_map(net: &NetSpec, modes: &[PoolingMode]) -> Result<FragmentMap> {
+    let mut offsets: Vec<Vec3> = vec![[0, 0, 0]];
+    let mut stride: Vec3 = [1, 1, 1];
+    let mut pool_i = 0;
+    for l in &net.layers {
+        if let LayerSpec::Pool { p } = l {
+            if modes[pool_i] != PoolingMode::Mpf {
+                bail!("fragment recombination requires all pooling layers to be MPF");
+            }
+            pool_i += 1;
+            let mut next = Vec::with_capacity(offsets.len() * p[0] * p[1] * p[2]);
+            for base in &offsets {
+                for frag in crate::pool::mpf_fragment_order(*p) {
+                    next.push([
+                        base[0] + stride[0] * frag[0],
+                        base[1] + stride[1] * frag[1],
+                        base[2] + stride[2] * frag[2],
+                    ]);
+                }
+            }
+            offsets = next;
+            for d in 0..3 {
+                stride[d] *= p[d];
+            }
+        }
+    }
+    Ok(FragmentMap { offsets, stride })
+}
+
+/// Recombine an MPF net output (`α·S` fragments) into the dense
+/// sliding-window output: for each original input `s`, fragment values
+/// land at `offset + stride · t`. Output spatial extent is
+/// `stride · fragment_extent` per dimension (= n − FoV + 1).
+pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap) -> Tensor5 {
+    let osh = output.shape();
+    let alpha = map.offsets.len();
+    assert_eq!(osh.s, s_orig * alpha, "batch {} != {}·{}", osh.s, s_orig, alpha);
+    let dense = Shape5 {
+        s: s_orig,
+        f: osh.f,
+        x: osh.x * map.stride[0],
+        y: osh.y * map.stride[1],
+        z: osh.z * map.stride[2],
+    };
+    let mut out = Tensor5::zeros(dense);
+    for s in 0..s_orig {
+        for (fi, off) in map.offsets.iter().enumerate() {
+            for f in 0..osh.f {
+                let frag = output.image(s * alpha + fi, f);
+                for x in 0..osh.x {
+                    for y in 0..osh.y {
+                        for z in 0..osh.z {
+                            out.set(
+                                s,
+                                f,
+                                off[0] + map.stride[0] * x,
+                                off[1] + map.stride[1] * y,
+                                off[2] + map.stride[2] * z,
+                                frag[(x * osh.y + y) * osh.z + z],
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense sliding-window reference: run the net (max-pool modes, batch 1)
+/// independently on every FoV-sized window. O(positions × net) — only
+/// for validating recombination on tiny problems.
+pub fn dense_reference(
+    net: &NetSpec,
+    runner: &dyn Fn(Tensor5) -> Tensor5,
+    volume: &Tensor5,
+) -> Tensor5 {
+    let vsh = volume.shape();
+    assert_eq!(vsh.s, 1);
+    let fov = net.field_of_view();
+    let on = [vsh.x - fov[0] + 1, vsh.y - fov[1] + 1, vsh.z - fov[2] + 1];
+    let f_out = net.f_out();
+    let mut out = Tensor5::zeros(Shape5::from_spatial(1, f_out, on));
+    for ux in 0..on[0] {
+        for uy in 0..on[1] {
+            for uz in 0..on[2] {
+                let mut win = Tensor5::zeros(Shape5::from_spatial(1, vsh.f, fov));
+                for f in 0..vsh.f {
+                    for x in 0..fov[0] {
+                        for y in 0..fov[1] {
+                            for z in 0..fov[2] {
+                                win.set(0, f, x, y, z, volume.at(0, f, ux + x, uy + y, uz + z));
+                            }
+                        }
+                    }
+                }
+                let r = runner(win);
+                let rsh = r.shape();
+                assert_eq!((rsh.x, rsh.y, rsh.z), (1, 1, 1), "window must give one voxel");
+                for f in 0..f_out {
+                    out.set(0, f, ux, uy, uz, r.at(0, f, 0, 0, 0));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Patch-based whole-volume inference. `runner` maps one input patch
+/// (shape `1 × f × patch³`) to its recombined dense output patch
+/// (`1 × f' × (patch − fov + 1)³`). Patches overlap by `fov − 1`
+/// (overlap-save), the final patch is shifted inward so the output
+/// tiles exactly.
+pub fn infer_volume(
+    volume: &Tensor5,
+    fov: Vec3,
+    patch: Vec3,
+    f_out: usize,
+    runner: &dyn Fn(Tensor5) -> Tensor5,
+) -> Result<Tensor5> {
+    let vsh = volume.shape();
+    if vsh.s != 1 {
+        bail!("volume batch must be 1");
+    }
+    for d in 0..3 {
+        if patch[d] > [vsh.x, vsh.y, vsh.z][d] {
+            bail!("patch {patch:?} larger than volume");
+        }
+        if patch[d] < fov[d] {
+            bail!("patch {patch:?} smaller than FoV {fov:?}");
+        }
+    }
+    let vdims = [vsh.x, vsh.y, vsh.z];
+    let cover = [patch[0] - fov[0] + 1, patch[1] - fov[1] + 1, patch[2] - fov[2] + 1];
+    let odims = [vdims[0] - fov[0] + 1, vdims[1] - fov[1] + 1, vdims[2] - fov[2] + 1];
+    let mut out = Tensor5::zeros(Shape5::from_spatial(1, f_out, odims));
+
+    // Patch start positions per dim: multiples of `cover`, with the
+    // final start clamped so the patch stays in bounds.
+    let starts = |d: usize| -> Vec<usize> {
+        let mut v = Vec::new();
+        let mut s = 0;
+        loop {
+            if s + patch[d] >= vdims[d] {
+                v.push(vdims[d] - patch[d]);
+                break;
+            }
+            v.push(s);
+            s += cover[d];
+        }
+        v
+    };
+    for &sx in &starts(0) {
+        for &sy in &starts(1) {
+            for &sz in &starts(2) {
+                // Crop the input patch.
+                let mut pin = Tensor5::zeros(Shape5::from_spatial(1, vsh.f, patch));
+                for f in 0..vsh.f {
+                    for x in 0..patch[0] {
+                        for y in 0..patch[1] {
+                            let src_base =
+                                ((0 * vsh.f + f) * vsh.x + sx + x) * vsh.y * vsh.z + (sy + y) * vsh.z + sz;
+                            let dst_base = ((f) * patch[0] + x) * patch[1] * patch[2] + y * patch[2];
+                            pin.data_mut()[dst_base..dst_base + patch[2]]
+                                .copy_from_slice(&volume.data()[src_base..src_base + patch[2]]);
+                        }
+                    }
+                }
+                let pout = runner(pin);
+                let psh = pout.shape();
+                assert_eq!((psh.x, psh.y, psh.z), (cover[0], cover[1], cover[2]));
+                assert_eq!(psh.f, f_out);
+                for f in 0..f_out {
+                    for x in 0..cover[0] {
+                        for y in 0..cover[1] {
+                            for z in 0..cover[2] {
+                                out.set(0, f, sx + x, sy + y, sz + z, pout.at(0, f, x, y, z));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo::tiny_net;
+    use crate::optimizer::{compile, make_weights, Plan, PlanLayer};
+    use crate::memory::model::ConvAlgo;
+    use crate::util::pool::{ChipTopology, TaskPool};
+    use crate::util::quick::assert_allclose;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    /// Manual plan: direct conv everywhere with the given pool modes.
+    fn manual_plan(net: &NetSpec, input: Shape5, modes: &[PoolingMode]) -> Plan {
+        let shapes = net.shapes(input, modes).unwrap();
+        let mut mi = 0;
+        let layers = net
+            .layers
+            .iter()
+            .map(|l| match l {
+                LayerSpec::Conv { .. } => PlanLayer::Conv { algo: ConvAlgo::DirectMkl },
+                LayerSpec::Pool { .. } => {
+                    let m = modes[mi];
+                    mi += 1;
+                    PlanLayer::Pool { mode: m }
+                }
+            })
+            .collect();
+        let out = *shapes.last().unwrap();
+        Plan {
+            net_name: net.name.clone(),
+            input,
+            layers,
+            shapes,
+            est_secs: 1.0,
+            est_memory: 0,
+            out_voxels: (out.s * out.x * out.y * out.z) as u64,
+        }
+    }
+
+    #[test]
+    fn fragment_map_single_layer() {
+        let net = tiny_net(2);
+        let m = fragment_map(&net, &[PoolingMode::Mpf]).unwrap();
+        assert_eq!(m.stride, [2, 2, 2]);
+        assert_eq!(m.offsets.len(), 8);
+        assert_eq!(m.offsets[0], [0, 0, 0]);
+        assert_eq!(m.offsets[7], [1, 1, 1]);
+    }
+
+    #[test]
+    fn fragment_map_rejects_maxpool() {
+        let net = tiny_net(2);
+        assert!(fragment_map(&net, &[PoolingMode::MaxPool]).is_err());
+    }
+
+    /// THE golden test: MPF + recombination must equal the dense
+    /// sliding-window output computed window by window.
+    #[test]
+    fn mpf_recombination_equals_dense_sliding_window() {
+        let pool = tpool();
+        let net = tiny_net(2);
+        let weights = make_weights(&net, 77);
+        let fov = net.field_of_view(); // 10³ for tiny CPCC
+
+        // MPF path on a 13³ volume (valid: 13-2=11, (11+1)%2=0 ✓).
+        let n = 13;
+        let volume = Tensor5::random(Shape5::new(1, 1, n, n, n), 99);
+        let mpf_modes = vec![PoolingMode::Mpf];
+        let plan = manual_plan(&net, volume.shape(), &mpf_modes);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let raw = cp.run(volume.clone_tensor(), &pool);
+        let map = fragment_map(&net, &mpf_modes).unwrap();
+        let dense = recombine(&raw, 1, &map);
+        assert_eq!(
+            dense.shape(),
+            Shape5::new(1, 2, n - fov[0] + 1, n - fov[1] + 1, n - fov[2] + 1)
+        );
+
+        // Dense reference: run every FoV window through the max-pool net.
+        let mp_modes = vec![PoolingMode::MaxPool];
+        let wplan = manual_plan(&net, Shape5::from_spatial(1, 1, fov), &mp_modes);
+        let wcp = compile(&net, &wplan, &weights).unwrap();
+        let runner = |t: Tensor5| wcp.run(t, &pool);
+        let expect = dense_reference(&net, &runner, &volume);
+
+        assert_allclose(dense.data(), expect.data(), 1e-4, 1e-3, "MPF == dense");
+    }
+
+    #[test]
+    fn infer_volume_tiles_patches_seamlessly() {
+        let pool = tpool();
+        let net = tiny_net(2);
+        let weights = make_weights(&net, 31);
+        let fov = net.field_of_view();
+        let mpf_modes = vec![PoolingMode::Mpf];
+        let map = fragment_map(&net, &mpf_modes).unwrap();
+
+        // Whole volume in one patch vs split into smaller patches.
+        let volume = Tensor5::random(Shape5::new(1, 1, 17, 17, 17), 5);
+        let run_patch = |patch: Tensor5| {
+            let plan = manual_plan(&net, patch.shape(), &mpf_modes);
+            let cp = compile(&net, &plan, &weights).unwrap();
+            let raw = cp.run(patch, &pool);
+            recombine(&raw, 1, &map)
+        };
+        let whole = infer_volume(&volume, fov, [17, 17, 17], 2, &run_patch).unwrap();
+        let tiled = infer_volume(&volume, fov, [13, 13, 13], 2, &run_patch).unwrap();
+        assert_eq!(whole.shape(), tiled.shape());
+        assert_allclose(tiled.data(), whole.data(), 1e-5, 1e-5, "patch tiling");
+    }
+
+    #[test]
+    fn infer_volume_rejects_bad_patch() {
+        let net = tiny_net(2);
+        let fov = net.field_of_view();
+        let volume = Tensor5::random(Shape5::new(1, 1, 12, 12, 12), 1);
+        let nop = |t: Tensor5| t;
+        assert!(infer_volume(&volume, fov, [20, 20, 20], 2, &nop).is_err());
+        assert!(infer_volume(&volume, fov, [4, 4, 4], 2, &nop).is_err());
+    }
+}

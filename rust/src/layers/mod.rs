@@ -1,0 +1,301 @@
+//! Layer primitives — the composable units of Fig. 1.
+//!
+//! A ConvNet implementation is a choice of one primitive per layer
+//! (§VI). Every primitive knows its output shape (Table I), its peak
+//! memory (Table II) and its analytic FLOPs, so the optimizer can search
+//! plans without executing them; `execute` then runs the chosen plan.
+
+use std::sync::Arc;
+
+use crate::conv::{self, Activation, Weights};
+use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
+use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
+use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+
+/// Which device a primitive is meant for (§IV.A vs §IV.B). On this
+/// testbed the GPU is simulated — see `crate::device`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    Cpu,
+    Gpu,
+}
+
+/// A layer primitive: shape/cost metadata + execution.
+pub trait LayerPrimitive: Send + Sync {
+    /// Short display name (Table IV uses these tags).
+    fn name(&self) -> String;
+
+    /// Output shape for a given input shape (panics on invalid input —
+    /// use [`LayerPrimitive::accepts`] to probe).
+    fn out_shape(&self, input: Shape5) -> Shape5;
+
+    /// Whether this primitive can process the given input shape.
+    fn accepts(&self, input: Shape5) -> bool;
+
+    /// Peak memory (bytes) per Table II.
+    fn memory_bytes(&self, input: Shape5, threads: usize) -> u64;
+
+    /// Analytic FLOPs per Table I.
+    fn flops(&self, input: Shape5) -> f64;
+
+    /// CPU or GPU primitive.
+    fn placement(&self) -> Placement;
+
+    /// Run the layer.
+    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5;
+}
+
+/// Convolutional layer with a fixed algorithm choice.
+pub struct ConvLayer {
+    pub weights: Arc<Weights>,
+    pub algo: ConvAlgo,
+    pub act: Activation,
+}
+
+impl ConvLayer {
+    pub fn new(weights: Arc<Weights>, algo: ConvAlgo, act: Activation) -> Self {
+        ConvLayer { weights, algo, act }
+    }
+
+    fn dims(&self, input: Shape5) -> ConvDims {
+        ConvDims {
+            s: input.s,
+            f_in: self.weights.f_in,
+            f_out: self.weights.f_out,
+            n: input.spatial(),
+            k: self.weights.k,
+        }
+    }
+}
+
+impl LayerPrimitive for ConvLayer {
+    fn name(&self) -> String {
+        self.algo.tag().to_string()
+    }
+
+    fn out_shape(&self, input: Shape5) -> Shape5 {
+        conv::conv_out_shape(input, self.weights.f_out, self.weights.k)
+    }
+
+    fn accepts(&self, input: Shape5) -> bool {
+        input.f == self.weights.f_in
+            && input.x >= self.weights.k[0]
+            && input.y >= self.weights.k[1]
+            && input.z >= self.weights.k[2]
+    }
+
+    fn memory_bytes(&self, input: Shape5, threads: usize) -> u64 {
+        conv_memory_bytes(self.algo, &self.dims(input), threads)
+    }
+
+    fn flops(&self, input: Shape5) -> f64 {
+        let d = self.dims(input);
+        match self.algo {
+            ConvAlgo::DirectNaive
+            | ConvAlgo::DirectMkl
+            | ConvAlgo::GpuDenseNoWorkspace
+            | ConvAlgo::GpuDensePrecomp => d.direct_flops(),
+            ConvAlgo::FftDataParallel | ConvAlgo::FftTaskParallel | ConvAlgo::GpuFft => {
+                d.fft_flops()
+            }
+        }
+    }
+
+    fn placement(&self) -> Placement {
+        if self.algo.is_gpu() {
+            Placement::Gpu
+        } else {
+            Placement::Cpu
+        }
+    }
+
+    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
+        let w = &self.weights;
+        match self.algo {
+            ConvAlgo::DirectNaive => conv::direct::conv_direct_naive(&input, w, self.act, pool),
+            ConvAlgo::DirectMkl => conv::direct::conv_direct_mkl(&input, w, self.act, pool),
+            ConvAlgo::FftDataParallel => conv::fft_dp::conv_fft_dp(input, w, self.act, pool),
+            ConvAlgo::FftTaskParallel => conv::fft_tp::conv_fft_tp(input, w, self.act, pool),
+            // Dense-conv stand-ins for the two cuDNN primitives: the
+            // no-workspace variant is the slow/lean one, the precomp
+            // variant trades workspace memory for speed (§IV.B.1). The
+            // workspace registration makes the Table II difference
+            // observable to the ledger.
+            ConvAlgo::GpuDenseNoWorkspace => {
+                conv::direct::conv_direct_naive(&input, w, self.act, pool)
+            }
+            ConvAlgo::GpuDensePrecomp => {
+                let ish = input.shape();
+                let _workspace = crate::memory::TrackedVec::<f32>::zeroed(
+                    ish.len(),
+                    "cudnn-precomp workspace",
+                );
+                conv::direct::conv_direct_mkl(&input, w, self.act, pool)
+            }
+            ConvAlgo::GpuFft => conv::fft_gpu::conv_fft_gpu(input, w, self.act, pool),
+        }
+    }
+}
+
+/// Plain max-pooling layer.
+pub struct MaxPoolLayer {
+    pub window: Vec3,
+    pub placement: Placement,
+}
+
+impl LayerPrimitive for MaxPoolLayer {
+    fn name(&self) -> String {
+        "Pool".into()
+    }
+
+    fn out_shape(&self, input: Shape5) -> Shape5 {
+        max_pool_out_shape(input, self.window)
+    }
+
+    fn accepts(&self, input: Shape5) -> bool {
+        input.x % self.window[0] == 0
+            && input.y % self.window[1] == 0
+            && input.z % self.window[2] == 0
+            && input.x > 0
+    }
+
+    fn memory_bytes(&self, input: Shape5, _threads: usize) -> u64 {
+        pool_memory_bytes(input.s, input.f, input.spatial(), self.window)
+    }
+
+    fn flops(&self, input: Shape5) -> f64 {
+        // Table I: S·f·n³ comparisons.
+        input.len() as f64
+    }
+
+    fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
+        max_pool(&input, self.window, pool)
+    }
+}
+
+/// Max-pooling-fragments layer.
+pub struct MpfLayer {
+    pub window: Vec3,
+    pub placement: Placement,
+}
+
+impl LayerPrimitive for MpfLayer {
+    fn name(&self) -> String {
+        "MPF".into()
+    }
+
+    fn out_shape(&self, input: Shape5) -> Shape5 {
+        mpf_out_shape(input, self.window)
+    }
+
+    fn accepts(&self, input: Shape5) -> bool {
+        (input.x + 1) % self.window[0] == 0
+            && (input.y + 1) % self.window[1] == 0
+            && (input.z + 1) % self.window[2] == 0
+    }
+
+    fn memory_bytes(&self, input: Shape5, _threads: usize) -> u64 {
+        mpf_memory_bytes(input.s, input.f, input.spatial(), self.window)
+    }
+
+    fn flops(&self, input: Shape5) -> f64 {
+        // Table I: S·f·n³·p³.
+        input.len() as f64 * (self.window[0] * self.window[1] * self.window[2]) as f64
+    }
+
+    fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
+        mpf_forward(&input, self.window, pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    fn conv_layer(algo: ConvAlgo) -> ConvLayer {
+        ConvLayer::new(Arc::new(Weights::random(3, 2, [3, 3, 3], 1)), algo, Activation::Relu)
+    }
+
+    #[test]
+    fn all_conv_algos_agree() {
+        let p = tpool();
+        let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 2);
+        let reference =
+            conv::conv_layer_reference(&input, &conv_layer(ConvAlgo::DirectNaive).weights, Activation::Relu);
+        for algo in ConvAlgo::ALL {
+            let l = conv_layer(algo);
+            assert!(l.accepts(input.shape()));
+            assert_eq!(l.out_shape(input.shape()), reference.shape());
+            let out = l.execute(input.clone_tensor(), &p);
+            assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, l.name().as_str());
+        }
+    }
+
+    #[test]
+    fn conv_rejects_wrong_channels() {
+        let l = conv_layer(ConvAlgo::DirectNaive);
+        assert!(!l.accepts(Shape5::new(1, 3, 7, 7, 7)));
+        assert!(!l.accepts(Shape5::new(1, 2, 2, 7, 7)));
+    }
+
+    #[test]
+    fn memory_model_monotone_in_batch() {
+        let l = conv_layer(ConvAlgo::FftTaskParallel);
+        let m1 = l.memory_bytes(Shape5::new(1, 2, 9, 9, 9), 4);
+        let m2 = l.memory_bytes(Shape5::new(2, 2, 9, 9, 9), 4);
+        assert!(m2 > m1);
+    }
+
+    #[test]
+    fn pool_and_mpf_layer_shapes() {
+        let pl = MaxPoolLayer { window: [2, 2, 2], placement: Placement::Cpu };
+        assert!(pl.accepts(Shape5::new(1, 1, 4, 4, 4)));
+        assert!(!pl.accepts(Shape5::new(1, 1, 5, 4, 4)));
+        let ml = MpfLayer { window: [2, 2, 2], placement: Placement::Cpu };
+        assert!(ml.accepts(Shape5::new(1, 1, 5, 5, 5)));
+        assert!(!ml.accepts(Shape5::new(1, 1, 4, 5, 5)));
+        assert_eq!(ml.out_shape(Shape5::new(1, 1, 5, 5, 5)).s, 8);
+    }
+
+    #[test]
+    fn measured_memory_within_model() {
+        // The Table II model must upper-bound (within slack for
+        // planner pessimism) what the primitives actually allocate.
+        let p = tpool();
+        let sh = Shape5::new(1, 2, 9, 9, 9);
+        for algo in [
+            ConvAlgo::DirectNaive,
+            ConvAlgo::DirectMkl,
+            ConvAlgo::FftDataParallel,
+            ConvAlgo::FftTaskParallel,
+            ConvAlgo::GpuFft,
+        ] {
+            let l = conv_layer(algo);
+            let model = l.memory_bytes(sh, p.workers()) as i64;
+            let input = Tensor5::random(sh, 3);
+            let (_out, peak) = crate::memory::measure(|| l.execute(input, &p));
+            // `measure` reports extra bytes beyond entry; the input was
+            // allocated before, so add it back for the comparison.
+            let measured = peak as i64 + sh.bytes_f32() as i64;
+            assert!(
+                measured <= model + (crate::memory::model::GPU_FFT_K_BYTES as i64),
+                "{algo:?}: measured {measured} > model {model}"
+            );
+        }
+    }
+}

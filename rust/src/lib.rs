@@ -1,0 +1,46 @@
+//! # ZNNi — throughput-maximised 3D ConvNet inference
+//!
+//! Rust + JAX/Pallas reproduction of *"ZNNi – Maximizing the Inference
+//! Throughput of 3D Convolutional Networks on Multi-Core CPUs and GPUs"*
+//! (Zlateski, Lee, Seung; 2016).
+//!
+//! The crate provides:
+//!
+//! * pruned-FFT machinery ([`fft`], paper §III);
+//! * CPU and (simulated-)GPU layer primitives for convolution and
+//!   (fragment) pooling ([`conv`], [`pool`], [`layers`], §IV–V);
+//! * the Table II memory model and a peak-tracking ledger ([`memory`]);
+//! * the four benchmark networks and shape propagation ([`net`],
+//!   Tables I & III);
+//! * the throughput optimizer ([`optimizer`], §VI), GPU + host RAM
+//!   sub-layer execution ([`sublayer`], §VII.A–B) and the CPU–GPU
+//!   pipeline ([`pipeline`], §VII.C);
+//! * sliding-window patch inference with MPF fragment recombination
+//!   ([`inference`], §II);
+//! * baseline comparators ([`baselines`], §VIII) and a serving
+//!   coordinator ([`coordinator`]);
+//! * a PJRT runtime that loads the AOT-compiled JAX/Pallas artifacts
+//!   ([`runtime`]).
+
+pub mod approaches;
+pub mod baselines;
+pub mod conv;
+pub mod coordinator;
+pub mod device;
+pub mod fft;
+pub mod layers;
+pub mod memory;
+pub mod inference;
+pub mod net;
+pub mod optimizer;
+pub mod pipeline;
+pub mod runtime;
+pub mod pool;
+pub mod sublayer;
+pub mod tensor;
+pub mod util;
+
+/// Library version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,230 @@
+//! `znni` — CLI for the ZNNi inference framework.
+//!
+//! Subcommands:
+//!   info                      platform, topology, devices, artifacts
+//!   optimize  --net NAME      run the §VI.A search, print a Table IV-style plan
+//!   run       --net NAME      execute the optimized plan once, report throughput
+//!   serve     --net NAME      whole-volume serving demo through the coordinator
+//!   fov       --net NAME      field-of-view / valid-size info
+//!
+//! Common flags: --scale tiny|small|paper   --device cpu|gpu
+//!               --ram GIB   --max-extent N   --extent N   --volume N
+//!               --artifacts DIR
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use znni::coordinator::{Coordinator, InferenceRequest};
+use znni::device::Device;
+use znni::net::{net_by_name, NetScale, NetSpec};
+use znni::optimizer::{compile, make_weights, plan_table, search, CostModel, SearchSpace};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::TaskPool;
+use znni::util::{human_bytes, human_throughput};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn get_net(flags: &HashMap<String, String>) -> Result<NetSpec> {
+    let scale = match flags.get("scale").map(|s| s.as_str()) {
+        Some("paper") => NetScale::Paper,
+        Some("tiny") => NetScale::Tiny,
+        Some("small") | None => NetScale::Small,
+        Some(o) => bail!("unknown scale '{o}'"),
+    };
+    match flags.get("net").map(|s| s.as_str()) {
+        Some("tiny") | None => Ok(znni::net::zoo::tiny_net(4)),
+        Some(name) => {
+            if let Some(n) = net_by_name(name, scale) {
+                Ok(n)
+            } else if let Ok(text) = std::fs::read_to_string(name) {
+                NetSpec::parse(&text)
+            } else {
+                bail!("unknown net '{name}' (try n337/n537/n726/n926/tiny or a config file)")
+            }
+        }
+    }
+}
+
+fn get_device(flags: &HashMap<String, String>) -> (Device, bool) {
+    let gpu = flags.get("device").map(|d| d == "gpu").unwrap_or(false);
+    let mut dev = if gpu { Device::titan_x() } else { Device::host() };
+    if let Some(r) = flags.get("ram").and_then(|v| v.parse::<f64>().ok()) {
+        dev.ram_bytes = (r * (1u64 << 30) as f64) as u64;
+    }
+    (dev, gpu)
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    println!("znni {}", znni::version());
+    let topo = znni::util::pool::ChipTopology::detect();
+    println!("topology: {} chip(s) x {} core(s)", topo.chips, topo.cores_per_chip);
+    let host = Device::host();
+    println!("host:     {} ({})", host.name, human_bytes(host.ram_bytes));
+    let gpu = Device::titan_x();
+    println!(
+        "gpu:      {} ({}, {:.1} GB/s xfer, simulated)",
+        gpu.name,
+        human_bytes(gpu.ram_bytes),
+        gpu.transfer_bytes_per_sec / 1e9
+    );
+    let dir = flags.get("artifacts").map(|s| s.as_str()).unwrap_or("artifacts");
+    match znni::runtime::Runtime::open(dir) {
+        Ok(rt) => {
+            println!("pjrt:     platform={}", rt.platform());
+            for e in &rt.manifest.entries {
+                println!(
+                    "artifact: {} ({} args, out {:?})",
+                    e.name,
+                    e.arg_shapes.len(),
+                    e.output_shape
+                );
+            }
+        }
+        Err(e) => println!("pjrt:     artifacts unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
+    let net = get_net(flags)?;
+    let (dev, gpu) = get_device(flags);
+    let max_extent = flags
+        .get("max-extent")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if gpu { 49 } else { 41 });
+    let pool = TaskPool::global();
+    eprintln!("calibrating cost model...");
+    let cm = CostModel::calibrate(pool, 10);
+    let space = if gpu {
+        SearchSpace::gpu_only(dev.clone(), max_extent)
+    } else {
+        SearchSpace::cpu_only(dev.clone(), max_extent)
+    };
+    let plan = search(&net, &space, &cm)
+        .ok_or_else(|| anyhow!("no feasible plan under {}", human_bytes(dev.ram_bytes)))?;
+    println!("net {} on {} ({}):", net.name, dev.name, human_bytes(dev.ram_bytes));
+    for (k, v) in plan_table(&plan) {
+        println!("  {k:<12} {v}");
+    }
+    println!(
+        "  est: {:.3}s/patch, {} memory, {}",
+        plan.est_secs,
+        human_bytes(plan.est_memory),
+        human_throughput(plan.est_throughput())
+    );
+    Ok(())
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let net = get_net(flags)?;
+    let (dev, gpu) = get_device(flags);
+    let pool = TaskPool::global();
+    let cm = CostModel::calibrate(pool, 10);
+    let max_extent = flags.get("max-extent").and_then(|v| v.parse().ok()).unwrap_or(33);
+    let mut space = if gpu {
+        SearchSpace::gpu_only(dev, max_extent)
+    } else {
+        SearchSpace::cpu_only(dev, max_extent)
+    };
+    if let Some(n) = flags.get("extent").and_then(|v| v.parse().ok()) {
+        space.min_extent = n;
+        space.max_extent = n;
+    }
+    let plan = search(&net, &space, &cm).ok_or_else(|| anyhow!("no feasible plan"))?;
+    let weights = make_weights(&net, 42);
+    let cp = compile(&net, &plan, &weights)?;
+    let input = Tensor5::random(plan.input, 7);
+    let t0 = std::time::Instant::now();
+    let out = cp.run(input, pool);
+    let secs = t0.elapsed().as_secs_f64();
+    let osh = out.shape();
+    let vox = (osh.s * osh.x * osh.y * osh.z) as f64;
+    println!(
+        "{}: input {} -> output {} in {:.3}s = {}",
+        net.name,
+        plan.input,
+        osh,
+        secs,
+        human_throughput(vox / secs)
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let net = get_net(flags)?;
+    let (dev, _) = get_device(flags);
+    let pool = TaskPool::global();
+    let cm = CostModel::calibrate(pool, 10);
+    let max_extent = flags.get("max-extent").and_then(|v| v.parse().ok()).unwrap_or(21);
+    let space = SearchSpace::cpu_only(dev, max_extent);
+    let plan = search(&net, &space, &cm).ok_or_else(|| anyhow!("no feasible plan"))?;
+    let weights = make_weights(&net, 42);
+    let cp = compile(&net, &plan, &weights)?;
+    let coord = Coordinator::new(net, cp)?;
+    let v = flags.get("volume").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let count = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let reqs = (0..count)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            volume: Tensor5::random(Shape5::new(1, coord.net.f_in, v, v, v), i as u64),
+        })
+        .collect();
+    let (resps, metrics) = coord.serve(reqs, pool)?;
+    for r in &resps {
+        println!("request {}: output {} ({} voxels)", r.id, r.output.shape(), r.voxels);
+    }
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn cmd_fov(flags: &HashMap<String, String>) -> Result<()> {
+    let net = get_net(flags)?;
+    let modes = vec![znni::net::PoolingMode::Mpf; net.pool_count()];
+    println!("net {}: {} conv + {} pool layers", net.name, net.conv_count(), net.pool_count());
+    println!("field of view: {:?}", net.field_of_view());
+    println!("total stride:  {:?}", net.total_stride());
+    println!("fragments (all-MPF): {}", net.fragment_factor(&modes));
+    let valid = net.valid_extents(1, 64, &modes);
+    println!("valid MPF input extents <= 64: {valid:?}");
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("info");
+    let r = match cmd {
+        "info" => cmd_info(&flags),
+        "optimize" => cmd_optimize(&flags),
+        "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
+        "fov" => cmd_fov(&flags),
+        other => Err(anyhow!(
+            "unknown command '{other}' (try: info, optimize, run, serve, fov)"
+        )),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

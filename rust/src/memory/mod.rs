@@ -1,0 +1,143 @@
+//! Memory accounting: a process-wide peak-tracking allocator ledger and
+//! the paper's Table II analytic memory model.
+//!
+//! Throughput in ZNNi is memory-bound in an unusual sense: the *winning*
+//! primitive is often the one whose working set fits the biggest input
+//! patch (§II). Every [`crate::tensor`] allocation is registered here, so
+//! tests can verify the analytic model of Table II against measured
+//! peaks, and the optimizer can trust the model when it prunes plans.
+
+pub mod model;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CURRENT: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// Register `bytes` of live tensor memory.
+pub fn alloc(bytes: u64) {
+    let cur = CURRENT.fetch_add(bytes, Ordering::SeqCst) + bytes;
+    PEAK.fetch_max(cur, Ordering::SeqCst);
+}
+
+/// Unregister `bytes` of live tensor memory.
+pub fn free(bytes: u64) {
+    CURRENT.fetch_sub(bytes, Ordering::SeqCst);
+}
+
+/// Bytes currently registered.
+pub fn current() -> u64 {
+    CURRENT.load(Ordering::SeqCst)
+}
+
+/// High-water mark since the last [`reset_peak`].
+pub fn peak() -> u64 {
+    PEAK.load(Ordering::SeqCst)
+}
+
+/// Reset the high-water mark to the current level.
+pub fn reset_peak() {
+    PEAK.store(CURRENT.load(Ordering::SeqCst), Ordering::SeqCst);
+}
+
+/// A `Vec` whose backing allocation is registered with the ledger.
+/// Scratch buffers inside primitives use this so their contribution to
+/// the Table II peak is observable.
+pub struct TrackedVec<T> {
+    v: Vec<T>,
+    bytes: u64,
+    #[allow(dead_code)]
+    label: &'static str,
+}
+
+impl<T: Clone + Default> TrackedVec<T> {
+    /// Allocate `len` default-initialised elements.
+    pub fn zeroed(len: usize, label: &'static str) -> Self {
+        let bytes = (len * std::mem::size_of::<T>()) as u64;
+        alloc(bytes);
+        TrackedVec { v: vec![T::default(); len], bytes, label }
+    }
+}
+
+impl<T> TrackedVec<T> {
+    pub fn as_slice(&self) -> &[T] {
+        &self.v
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.v
+    }
+    pub fn as_mut_ptr(&mut self) -> *mut T {
+        self.v.as_mut_ptr()
+    }
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+}
+
+impl<T> Drop for TrackedVec<T> {
+    fn drop(&mut self) {
+        free(self.bytes);
+    }
+}
+
+impl<T> std::ops::Index<usize> for TrackedVec<T> {
+    type Output = T;
+    fn index(&self, i: usize) -> &T {
+        &self.v[i]
+    }
+}
+
+impl<T> std::ops::IndexMut<usize> for TrackedVec<T> {
+    fn index_mut(&mut self, i: usize) -> &mut T {
+        &mut self.v[i]
+    }
+}
+
+/// Run `f` and return `(result, peak_extra_bytes)` — the high-water mark
+/// of tensor memory *above* the level at entry, as observed during `f`.
+///
+/// The ledger is global, so concurrent measured sections interleave;
+/// tests that assert tight bounds run single-measurement.
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let base = current();
+    reset_peak();
+    let r = f();
+    let p = peak();
+    (r, p.saturating_sub(base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let base = current();
+        alloc(1000);
+        assert_eq!(current(), base + 1000);
+        free(1000);
+        assert_eq!(current(), base);
+    }
+
+    #[test]
+    fn measure_tracks_peak() {
+        let (_, peak) = measure(|| {
+            alloc(5000);
+            alloc(3000);
+            free(5000);
+            alloc(1000);
+            free(3000);
+            free(1000);
+        });
+        assert!(peak >= 8000, "peak={peak}");
+    }
+
+    #[test]
+    fn measure_of_noop_is_zero() {
+        let (_, peak) = measure(|| {});
+        assert_eq!(peak, 0);
+    }
+}

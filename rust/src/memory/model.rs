@@ -1,0 +1,273 @@
+//! Table II — the analytic memory model.
+//!
+//! Throughput optimisation (§VI.A) needs, for every candidate primitive
+//! and input shape, the peak memory the primitive will use *without
+//! running it*. These functions express Table II of the paper in bytes.
+//!
+//! Conventions (element counts, matching the paper):
+//! * `S`  — batch size;
+//! * `f`, `f'` — input / output images per tuple;
+//! * `n`, `n'` — voxels per input / output image;
+//! * `ñ`  — *float-equivalent* elements of one transformed image,
+//!   i.e. `2 · x̃ · ỹ · (z̃/2 + 1)` for padded extent `(x̃, ỹ, z̃)`;
+//! * `T`  — worker threads (CPU) / primary-thread buffers;
+//! * `K`  — the fixed sub-batch scratch the GPU FFT reserves (the
+//!   cuFFT-overhead constant of §III.D).
+
+use crate::fft::fft_optimal_vec3;
+use crate::tensor::Vec3;
+
+/// Bytes per f32 element.
+const B: u64 = 4;
+
+/// Which convolutional algorithm a memory estimate is for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ConvAlgo {
+    /// CPU direct convolution, naive accumulation.
+    DirectNaive,
+    /// CPU direct with per-thread temporary result image ("MKL" mode).
+    DirectMkl,
+    /// CPU FFT-based, data parallel (Algorithm 2 / "FFT algorithm 1").
+    FftDataParallel,
+    /// CPU FFT-based, task parallel ("FFT algorithm 2").
+    FftTaskParallel,
+    /// GPU dense conv without workspace (cuDNN default stand-in).
+    GpuDenseNoWorkspace,
+    /// GPU dense conv with precomputed-index workspace (cuDNN precomp).
+    GpuDensePrecomp,
+    /// GPU FFT-based (Algorithm 3).
+    GpuFft,
+}
+
+impl ConvAlgo {
+    pub const ALL: [ConvAlgo; 7] = [
+        ConvAlgo::DirectNaive,
+        ConvAlgo::DirectMkl,
+        ConvAlgo::FftDataParallel,
+        ConvAlgo::FftTaskParallel,
+        ConvAlgo::GpuDenseNoWorkspace,
+        ConvAlgo::GpuDensePrecomp,
+        ConvAlgo::GpuFft,
+    ];
+
+    pub fn is_gpu(&self) -> bool {
+        matches!(
+            self,
+            ConvAlgo::GpuDenseNoWorkspace | ConvAlgo::GpuDensePrecomp | ConvAlgo::GpuFft
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvAlgo::DirectNaive => "Direct (naive)",
+            ConvAlgo::DirectMkl => "Direct (MKL)",
+            ConvAlgo::FftDataParallel => "FFT data-parallel",
+            ConvAlgo::FftTaskParallel => "FFT task-parallel",
+            ConvAlgo::GpuDenseNoWorkspace => "CuDNN1 (no workspace)",
+            ConvAlgo::GpuDensePrecomp => "CuDNN2 (precomp)",
+            ConvAlgo::GpuFft => "GPU-FFT",
+        }
+    }
+
+    /// Short tag used in Table IV-style outputs.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ConvAlgo::DirectNaive => "DirectN",
+            ConvAlgo::DirectMkl => "DirectM",
+            ConvAlgo::FftDataParallel => "FFT-DP",
+            ConvAlgo::FftTaskParallel => "FFT-TP",
+            ConvAlgo::GpuDenseNoWorkspace => "CuDNN1",
+            ConvAlgo::GpuDensePrecomp => "CuDNN2",
+            ConvAlgo::GpuFft => "FFT",
+        }
+    }
+}
+
+/// Problem dimensions of one convolutional layer application.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvDims {
+    pub s: usize,
+    pub f_in: usize,
+    pub f_out: usize,
+    pub n: Vec3,
+    pub k: Vec3,
+}
+
+impl ConvDims {
+    pub fn out_n(&self) -> Vec3 {
+        [self.n[0] - self.k[0] + 1, self.n[1] - self.k[1] + 1, self.n[2] - self.k[2] + 1]
+    }
+
+    /// Voxels per input image.
+    pub fn n_elems(&self) -> u64 {
+        (self.n[0] * self.n[1] * self.n[2]) as u64
+    }
+
+    /// Voxels per output image.
+    pub fn n_out_elems(&self) -> u64 {
+        let o = self.out_n();
+        (o[0] * o[1] * o[2]) as u64
+    }
+
+    /// Float-equivalent elements of one transformed image (ñ).
+    pub fn n_tilde_elems(&self) -> u64 {
+        let p = fft_optimal_vec3(self.n);
+        2 * (p[0] * p[1] * (p[2] / 2 + 1)) as u64
+    }
+
+    /// FLOPs of the direct algorithm (Table I):
+    /// `S · f' · f · n'³ · k³` MACs, counted as 2 ops each.
+    pub fn direct_flops(&self) -> f64 {
+        2.0 * self.s as f64
+            * self.f_out as f64
+            * self.f_in as f64
+            * self.n_out_elems() as f64
+            * (self.k[0] * self.k[1] * self.k[2]) as f64
+    }
+
+    /// FLOPs of the FFT algorithm (Table I):
+    /// image transforms + point-wise MADs + pruned kernel transforms.
+    pub fn fft_flops(&self) -> f64 {
+        use crate::fft::plan::{fft_3d_flops_naive, fft_3d_flops_pruned};
+        let p = fft_optimal_vec3(self.n);
+        let s = self.s as f64;
+        let (f, fp) = (self.f_in as f64, self.f_out as f64);
+        let image_t = s * (f + fp) * fft_3d_flops_naive(p);
+        let mads = 8.0 * s * f * fp * (p[0] * p[1] * (p[2] / 2 + 1)) as f64;
+        let kernel_t = f * fp * fft_3d_flops_pruned(self.k, p);
+        image_t + mads + kernel_t
+    }
+}
+
+/// Fixed scratch constant for the GPU FFT sub-batching (K in Table II).
+pub const GPU_FFT_K_BYTES: u64 = 64 << 20;
+
+/// Peak bytes the given algorithm needs for the given layer dims,
+/// per Table II. `threads` is T (CPU algorithms only).
+pub fn conv_memory_bytes(algo: ConvAlgo, d: &ConvDims, threads: usize) -> u64 {
+    let s = d.s as u64;
+    let f = d.f_in as u64;
+    let fp = d.f_out as u64;
+    let n = d.n_elems();
+    let np = d.n_out_elems();
+    let nt = d.n_tilde_elems();
+    let t = threads as u64;
+    match algo {
+        // S·f·n + S·f'·n'
+        ConvAlgo::DirectNaive => B * (s * f * n + s * fp * np),
+        // + one temporary result image per thread
+        ConvAlgo::DirectMkl => B * (s * f * n + s * fp * np + t * np),
+        // max over the three stages of Algorithm 2:
+        //   input + input transforms;
+        //   output + input transforms + output accumulator + w̃;
+        //   output + output transforms (inverse stage)
+        ConvAlgo::FftDataParallel => {
+            let st1 = s * f * (n + nt);
+            let st2 = s * fp * np + (s * f + 1) * nt + s * nt;
+            let st3 = s * fp * np + s * f * nt + s * nt;
+            B * st1.max(st2).max(st3)
+        }
+        // max over the three stages of the task DAG:
+        //   input + input transforms;
+        //   input transforms + output transforms + per-primary buffers;
+        //   output transforms + outputs
+        ConvAlgo::FftTaskParallel => {
+            let st1 = s * f * (n + nt);
+            let st2 = s * (f + fp) * nt + t * nt;
+            let st3 = s * fp * (np + nt);
+            B * st1.max(st2).max(st3)
+        }
+        // S·f·n + S·f'·n'
+        ConvAlgo::GpuDenseNoWorkspace => B * (s * f * n + s * fp * np),
+        // 2·S·f·n + S·f'·n' (workspace for precomputed indices) plus
+        // the per-worker temporary the dense inner path uses
+        ConvAlgo::GpuDensePrecomp => B * (2 * s * f * n + s * fp * np + t * np),
+        // K + max of the three stages of Algorithm 3
+        ConvAlgo::GpuFft => {
+            let st1 = s * f * (n + nt) + f * nt;
+            let st2 = s * (f + fp) * nt + 2 * f * nt;
+            let st3 = s * fp * (np + nt) + fp * nt;
+            GPU_FFT_K_BYTES + B * st1.max(st2).max(st3)
+        }
+    }
+}
+
+/// Memory of a max-pooling layer: input + output (n/p³ per image).
+pub fn pool_memory_bytes(s: usize, f: usize, n: Vec3, p: Vec3) -> u64 {
+    let inp = (s * f * n[0] * n[1] * n[2]) as u64;
+    let out = (s * f * (n[0] / p[0]) * (n[1] / p[1]) * (n[2] / p[2])) as u64;
+    B * (inp + out)
+}
+
+/// Memory of an MPF layer: input + p³ fragments of ⌊n/p⌋³ each.
+pub fn mpf_memory_bytes(s: usize, f: usize, n: Vec3, p: Vec3) -> u64 {
+    let inp = (s * f * n[0] * n[1] * n[2]) as u64;
+    let frag = (n[0] / p[0]) * (n[1] / p[1]) * (n[2] / p[2]);
+    let out = (s * f * p[0] * p[1] * p[2] * frag) as u64;
+    B * (inp + out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ConvDims {
+        ConvDims { s: 2, f_in: 4, f_out: 8, n: [16, 16, 16], k: [3, 3, 3] }
+    }
+
+    #[test]
+    fn direct_is_cheapest_memory() {
+        let d = dims();
+        let naive = conv_memory_bytes(ConvAlgo::DirectNaive, &d, 4);
+        for a in [ConvAlgo::DirectMkl, ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel] {
+            assert!(conv_memory_bytes(a, &d, 4) >= naive, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn precomp_needs_more_than_default() {
+        let d = dims();
+        assert!(
+            conv_memory_bytes(ConvAlgo::GpuDensePrecomp, &d, 1)
+                > conv_memory_bytes(ConvAlgo::GpuDenseNoWorkspace, &d, 1)
+        );
+    }
+
+    #[test]
+    fn mkl_adds_thread_temporaries() {
+        let d = dims();
+        let m1 = conv_memory_bytes(ConvAlgo::DirectMkl, &d, 1);
+        let m8 = conv_memory_bytes(ConvAlgo::DirectMkl, &d, 8);
+        assert_eq!(m8 - m1, 7 * 4 * d.n_out_elems());
+    }
+
+    #[test]
+    fn out_shape_table1() {
+        let d = dims();
+        assert_eq!(d.out_n(), [14, 14, 14]);
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let mut d = dims();
+        let f1 = d.direct_flops();
+        d.s = 4;
+        assert!((d.direct_flops() / f1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_and_mpf_memory() {
+        // MPF keeps ~all voxels: p³ fragments of n/p³ each.
+        let pm = pool_memory_bytes(1, 2, [8, 8, 8], [2, 2, 2]);
+        let mm = mpf_memory_bytes(1, 2, [8, 8, 8], [2, 2, 2]);
+        assert_eq!(pm, 4 * (2 * 512 + 2 * 64));
+        assert_eq!(mm, 4 * (2 * 512 + 2 * 512));
+    }
+
+    #[test]
+    fn n_tilde_counts_float_equivalents() {
+        let d = ConvDims { s: 1, f_in: 1, f_out: 1, n: [8, 8, 8], k: [3, 3, 3] };
+        // padded 8×8×8 → complex 8·8·5 → 2·320 float equivalents
+        assert_eq!(d.n_tilde_elems(), 640);
+    }
+}

@@ -1,0 +1,14 @@
+//! Network specification, shape propagation and the benchmark zoo.
+//!
+//! [`spec`] defines the architecture description (a tiny config format
+//! plus programmatic builders), shape propagation per Table I including
+//! the MPF batch-size multiplication, field-of-view math, and valid
+//! input-size enumeration. [`zoo`] provides the four benchmarked
+//! architectures of Table III (n337, n537, n726, n926) at the paper's
+//! scale and at reduced test scales.
+
+pub mod spec;
+pub mod zoo;
+
+pub use spec::{LayerSpec, NetSpec, PoolingMode};
+pub use zoo::{benchmark_nets, net_by_name, NetScale};

@@ -1,0 +1,381 @@
+//! Architecture specs and shape propagation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{Shape5, Vec3};
+
+/// One layer of an architecture (Table III rows).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Convolution to `f_out` maps with kernel `k` (+ ReLU).
+    Conv { f_out: usize, k: Vec3 },
+    /// Pooling with window `p` — executed as max-pool or MPF depending
+    /// on the chosen [`PoolingMode`].
+    Pool { p: Vec3 },
+}
+
+/// How a pooling layer is realised (§V–VI: every max-pooling layer may
+/// be replaced by an MPF layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolingMode {
+    MaxPool,
+    Mpf,
+}
+
+/// A network architecture: input maps + layer list.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub name: String,
+    pub f_in: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetSpec {
+    /// Number of pooling layers (length of a pooling-mode assignment).
+    pub fn pool_count(&self) -> usize {
+        self.layers.iter().filter(|l| matches!(l, LayerSpec::Pool { .. })).count()
+    }
+
+    /// Number of conv layers.
+    pub fn conv_count(&self) -> usize {
+        self.layers.len() - self.pool_count()
+    }
+
+    /// Output maps of the final conv layer.
+    pub fn f_out(&self) -> usize {
+        self.layers
+            .iter()
+            .rev()
+            .find_map(|l| match l {
+                LayerSpec::Conv { f_out, .. } => Some(*f_out),
+                _ => None,
+            })
+            .unwrap_or(self.f_in)
+    }
+
+    /// Propagate shapes through the net for a given input shape and
+    /// per-pool-layer mode assignment. Returns the shape *after* each
+    /// layer (`result[i]` = output of layer i), or an error naming the
+    /// first layer whose constraint fails.
+    pub fn shapes(&self, input: Shape5, modes: &[PoolingMode]) -> Result<Vec<Shape5>> {
+        assert_eq!(modes.len(), self.pool_count(), "one mode per pooling layer");
+        let mut cur = input;
+        let mut pool_i = 0;
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (li, l) in self.layers.iter().enumerate() {
+            cur = match l {
+                LayerSpec::Conv { f_out, k } => {
+                    if cur.f
+                        != self.f_in_at(li)
+                    {
+                        bail!("layer {li}: channel mismatch");
+                    }
+                    if cur.x < k[0] || cur.y < k[1] || cur.z < k[2] {
+                        bail!("layer {li}: image {cur} smaller than kernel {k:?}");
+                    }
+                    Shape5 {
+                        s: cur.s,
+                        f: *f_out,
+                        x: cur.x - k[0] + 1,
+                        y: cur.y - k[1] + 1,
+                        z: cur.z - k[2] + 1,
+                    }
+                }
+                LayerSpec::Pool { p } => {
+                    let mode = modes[pool_i];
+                    pool_i += 1;
+                    match mode {
+                        PoolingMode::MaxPool => {
+                            if cur.x % p[0] != 0 || cur.y % p[1] != 0 || cur.z % p[2] != 0 {
+                                bail!("layer {li}: {cur} not divisible by pool {p:?}");
+                            }
+                            Shape5 {
+                                x: cur.x / p[0],
+                                y: cur.y / p[1],
+                                z: cur.z / p[2],
+                                ..cur
+                            }
+                        }
+                        PoolingMode::Mpf => {
+                            if (cur.x + 1) % p[0] != 0
+                                || (cur.y + 1) % p[1] != 0
+                                || (cur.z + 1) % p[2] != 0
+                            {
+                                bail!("layer {li}: {cur}+1 not divisible by MPF {p:?}");
+                            }
+                            Shape5 {
+                                s: cur.s * p[0] * p[1] * p[2],
+                                f: cur.f,
+                                x: cur.x / p[0],
+                                y: cur.y / p[1],
+                                z: cur.z / p[2],
+                            }
+                        }
+                    }
+                }
+            };
+            out.push(cur);
+        }
+        Ok(out)
+    }
+
+    /// Input maps expected by layer `li`.
+    pub fn f_in_at(&self, li: usize) -> usize {
+        self.layers[..li]
+            .iter()
+            .rev()
+            .find_map(|l| match l {
+                LayerSpec::Conv { f_out, .. } => Some(*f_out),
+                _ => None,
+            })
+            .unwrap_or(self.f_in)
+    }
+
+    /// Whether a cubic input of extent `n` (batch `s`) is valid for the
+    /// given pooling-mode assignment and yields non-empty output.
+    pub fn accepts_extent(&self, n: usize, s: usize, modes: &[PoolingMode]) -> bool {
+        self.shapes(Shape5::new(s, self.f_in, n, n, n), modes).is_ok()
+    }
+
+    /// All valid cubic input extents in `[lo, hi]` for the given modes.
+    pub fn valid_extents(&self, lo: usize, hi: usize, modes: &[PoolingMode]) -> Vec<usize> {
+        (lo..=hi).filter(|&n| self.accepts_extent(n, 1, modes)).collect()
+    }
+
+    /// Smallest valid cubic input extent (searches up to 4096).
+    pub fn min_extent(&self, modes: &[PoolingMode]) -> Option<usize> {
+        (1..=4096).find(|&n| self.accepts_extent(n, 1, modes))
+    }
+
+    /// Field of view of the sliding window: the input extent for which
+    /// the dense ConvNet yields exactly one output voxel. Computed per
+    /// dimension with the standard fov/stride recursion.
+    pub fn field_of_view(&self) -> Vec3 {
+        let mut fov = [1isize; 3];
+        let mut jump = [1isize; 3];
+        for l in &self.layers {
+            match l {
+                LayerSpec::Conv { k, .. } => {
+                    for d in 0..3 {
+                        fov[d] += (k[d] as isize - 1) * jump[d];
+                    }
+                }
+                LayerSpec::Pool { p } => {
+                    for d in 0..3 {
+                        fov[d] += (p[d] as isize - 1) * jump[d];
+                        jump[d] *= p[d] as isize;
+                    }
+                }
+            }
+        }
+        [fov[0] as usize, fov[1] as usize, fov[2] as usize]
+    }
+
+    /// Product of MPF fragment counts (α in §VI.A): how many fragments
+    /// one input produces when all `modes[i] == Mpf`.
+    pub fn fragment_factor(&self, modes: &[PoolingMode]) -> usize {
+        let mut a = 1;
+        let mut pool_i = 0;
+        for l in &self.layers {
+            if let LayerSpec::Pool { p } = l {
+                if modes[pool_i] == PoolingMode::Mpf {
+                    a *= p[0] * p[1] * p[2];
+                }
+                pool_i += 1;
+            }
+        }
+        a
+    }
+
+    /// Total stride of the sliding window (per dimension) — the product
+    /// of pooling windows; MPF recombination interleaves at this stride.
+    pub fn total_stride(&self) -> Vec3 {
+        let mut s = [1usize; 3];
+        for l in &self.layers {
+            if let LayerSpec::Pool { p } = l {
+                for d in 0..3 {
+                    s[d] *= p[d];
+                }
+            }
+        }
+        s
+    }
+
+    /// Parse the tiny config format:
+    ///
+    /// ```text
+    /// name n337
+    /// input 1
+    /// conv 80 2          # f_out, cubic kernel
+    /// pool 2             # cubic window
+    /// conv 80 3 3 3      # f_out, kx ky kz
+    /// ```
+    pub fn parse(text: &str) -> Result<NetSpec> {
+        let mut name = String::from("unnamed");
+        let mut f_in = None;
+        let mut layers = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let parse_dims = |nums: &[&str]| -> Result<Vec3> {
+                let v: Vec<usize> =
+                    nums.iter().map(|t| t.parse()).collect::<std::result::Result<_, _>>()?;
+                Ok(match v.len() {
+                    1 => [v[0], v[0], v[0]],
+                    3 => [v[0], v[1], v[2]],
+                    _ => bail!("line {}: expected 1 or 3 extents", ln + 1),
+                })
+            };
+            match toks[0] {
+                "name" => name = toks.get(1).ok_or_else(|| anyhow!("line {}: name?", ln + 1))?.to_string(),
+                "input" => {
+                    f_in = Some(
+                        toks.get(1)
+                            .ok_or_else(|| anyhow!("line {}: input maps?", ln + 1))?
+                            .parse()?,
+                    )
+                }
+                "conv" => {
+                    if toks.len() < 3 {
+                        bail!("line {}: conv F K", ln + 1);
+                    }
+                    layers.push(LayerSpec::Conv {
+                        f_out: toks[1].parse()?,
+                        k: parse_dims(&toks[2..])?,
+                    });
+                }
+                "pool" => {
+                    if toks.len() < 2 {
+                        bail!("line {}: pool P", ln + 1);
+                    }
+                    layers.push(LayerSpec::Pool { p: parse_dims(&toks[1..])? });
+                }
+                other => bail!("line {}: unknown directive '{other}'", ln + 1),
+            }
+        }
+        let f_in = f_in.ok_or_else(|| anyhow!("missing 'input' directive"))?;
+        if layers.is_empty() {
+            bail!("no layers");
+        }
+        Ok(NetSpec { name, f_in, layers })
+    }
+
+    /// Serialise back to the config format.
+    pub fn to_text(&self) -> String {
+        let mut s = format!("name {}\ninput {}\n", self.name, self.f_in);
+        for l in &self.layers {
+            match l {
+                LayerSpec::Conv { f_out, k } => {
+                    s.push_str(&format!("conv {} {} {} {}\n", f_out, k[0], k[1], k[2]))
+                }
+                LayerSpec::Pool { p } => {
+                    s.push_str(&format!("pool {} {} {}\n", p[0], p[1], p[2]))
+                }
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NetSpec {
+        NetSpec {
+            name: "tiny".into(),
+            f_in: 1,
+            layers: vec![
+                LayerSpec::Conv { f_out: 2, k: [3, 3, 3] },
+                LayerSpec::Pool { p: [2, 2, 2] },
+                LayerSpec::Conv { f_out: 1, k: [3, 3, 3] },
+            ],
+        }
+    }
+
+    #[test]
+    fn shape_propagation_maxpool() {
+        let net = tiny();
+        let shapes = net
+            .shapes(Shape5::new(1, 1, 10, 10, 10), &[PoolingMode::MaxPool])
+            .unwrap();
+        assert_eq!(shapes[0], Shape5::new(1, 2, 8, 8, 8));
+        assert_eq!(shapes[1], Shape5::new(1, 2, 4, 4, 4));
+        assert_eq!(shapes[2], Shape5::new(1, 1, 2, 2, 2));
+    }
+
+    #[test]
+    fn shape_propagation_mpf_multiplies_batch() {
+        let net = tiny();
+        let shapes = net.shapes(Shape5::new(1, 1, 11, 11, 11), &[PoolingMode::Mpf]).unwrap();
+        assert_eq!(shapes[0], Shape5::new(1, 2, 9, 9, 9));
+        assert_eq!(shapes[1], Shape5::new(8, 2, 4, 4, 4));
+        assert_eq!(shapes[2], Shape5::new(8, 1, 2, 2, 2));
+    }
+
+    #[test]
+    fn invalid_sizes_error() {
+        let net = tiny();
+        assert!(net.shapes(Shape5::new(1, 1, 9, 9, 9), &[PoolingMode::MaxPool]).is_err());
+        assert!(net.shapes(Shape5::new(1, 1, 10, 10, 10), &[PoolingMode::Mpf]).is_err());
+        assert!(net.shapes(Shape5::new(1, 1, 4, 4, 4), &[PoolingMode::MaxPool]).is_err());
+    }
+
+    #[test]
+    fn field_of_view_recursion() {
+        let net = tiny();
+        // conv3: fov 3; pool2: fov 4, jump 2; conv3: fov 4 + 2*2 = 8.
+        assert_eq!(net.field_of_view(), [8, 8, 8]);
+        // FoV input must produce output extent 1 in dense mode... the
+        // smallest valid MaxPool input is the FoV here.
+        assert_eq!(net.min_extent(&[PoolingMode::MaxPool]), Some(8));
+    }
+
+    #[test]
+    fn fragment_factor_and_stride() {
+        let net = tiny();
+        assert_eq!(net.fragment_factor(&[PoolingMode::Mpf]), 8);
+        assert_eq!(net.fragment_factor(&[PoolingMode::MaxPool]), 1);
+        assert_eq!(net.total_stride(), [2, 2, 2]);
+    }
+
+    #[test]
+    fn valid_extents_mpf() {
+        let net = tiny();
+        let v = net.valid_extents(1, 30, &[PoolingMode::Mpf]);
+        // Need (n-2)+1 ≡ 0 mod 2 → n odd; and fragments ≥ kernel.
+        assert!(v.iter().all(|n| n % 2 == 1));
+        assert!(v.contains(&11));
+        assert!(!v.contains(&7)); // fragment (7-2)/2=2 < kernel 3
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = "name t\ninput 1\nconv 4 3\npool 2\nconv 2 3 1 2\n";
+        let net = NetSpec::parse(text).unwrap();
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.layers[2], LayerSpec::Conv { f_out: 2, k: [3, 1, 2] });
+        let net2 = NetSpec::parse(&net.to_text()).unwrap();
+        assert_eq!(net.layers, net2.layers);
+        assert_eq!(net.f_in, net2.f_in);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(NetSpec::parse("input 1\nfrobnicate 3\n").is_err());
+        assert!(NetSpec::parse("conv 4 3\n").is_err()); // no input
+        assert!(NetSpec::parse("input 1\n").is_err()); // no layers
+        assert!(NetSpec::parse("input 1\nconv 4 3 3\n").is_err()); // 2 extents
+    }
+
+    #[test]
+    fn f_in_at_tracks_channels() {
+        let net = tiny();
+        assert_eq!(net.f_in_at(0), 1);
+        assert_eq!(net.f_in_at(1), 2);
+        assert_eq!(net.f_in_at(2), 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cost model: estimated execution time per primitive.
+//!
+//! The optimizer (§VI.A) ranks thousands of candidate plans; it cannot
+//! execute them all. Times are estimated as `FLOPs / effective-rate`,
+//! with per-algorithm effective rates that can be **calibrated** on the
+//! machine by running each primitive once at a probe size (the paper's
+//! search equally relies on per-primitive timing runs). GPU rates are
+//! additionally scaled by the device speed factor.
+
+use std::time::Instant;
+
+use crate::conv::{Activation, Weights};
+use crate::device::Device;
+use crate::layers::{ConvLayer, LayerPrimitive};
+use crate::memory::model::{ConvAlgo, ConvDims};
+use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+
+/// Effective throughput (FLOP/s) per algorithm plus pooling rates.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    rates: [(ConvAlgo, f64); 7],
+    /// voxels/s for pooling layers (comparisons are cheap; memory-bound)
+    pub pool_rate: f64,
+    pub threads: usize,
+}
+
+impl CostModel {
+    /// Static defaults: plausible single-machine rates (FLOP/s). These
+    /// keep ordering sane when calibration is skipped; benches always
+    /// calibrate.
+    pub fn default_rates(threads: usize) -> Self {
+        let t = threads as f64;
+        CostModel {
+            rates: [
+                (ConvAlgo::DirectNaive, 0.4e9 * t),
+                (ConvAlgo::DirectMkl, 0.8e9 * t),
+                (ConvAlgo::FftDataParallel, 0.5e9 * t),
+                (ConvAlgo::FftTaskParallel, 0.7e9 * t),
+                (ConvAlgo::GpuDenseNoWorkspace, 0.4e9 * t),
+                (ConvAlgo::GpuDensePrecomp, 0.9e9 * t),
+                (ConvAlgo::GpuFft, 0.6e9 * t),
+            ],
+            pool_rate: 200e6 * t,
+            threads,
+        }
+    }
+
+    /// Calibrate by timing each primitive once on a probe problem.
+    /// Rates are effective-FLOPs/s so they fold in each algorithm's
+    /// constants, cache behaviour and parallel efficiency.
+    pub fn calibrate(pool: &TaskPool, probe_extent: usize) -> Self {
+        let mut cm = Self::default_rates(pool.workers());
+        let n = [probe_extent; 3];
+        let k = [3usize, 3, 3];
+        let (f_in, f_out) = (4usize, 4usize);
+        let dims = ConvDims { s: 1, f_in, f_out, n, k };
+        let w = std::sync::Arc::new(Weights::random(f_out, f_in, k, 0xCA11));
+        for (algo, rate) in cm.rates.iter_mut() {
+            let layer = ConvLayer::new(w.clone(), *algo, Activation::Relu);
+            let flops = layer.flops(Shape5::from_spatial(1, f_in, n));
+            // One warmup + one timed run.
+            let mk = || Tensor5::random(Shape5::from_spatial(1, f_in, n), 7);
+            layer.execute(mk(), pool);
+            let t0 = Instant::now();
+            layer.execute(mk(), pool);
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            *rate = flops / secs;
+            let _ = dims;
+        }
+        // Pooling rate: voxels/s of an MPF probe.
+        {
+            let sh = Shape5::new(1, f_in, probe_extent | 1, probe_extent | 1, probe_extent | 1);
+            let t = Tensor5::random(sh, 9);
+            crate::pool::mpf_forward(&t, [2, 2, 2], pool);
+            let t0 = Instant::now();
+            let t2 = Tensor5::random(sh, 9);
+            crate::pool::mpf_forward(&t2, [2, 2, 2], pool);
+            cm.pool_rate = sh.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        }
+        cm
+    }
+
+    /// Effective rate for an algorithm (scaled by the device's modelled
+    /// speed factor for GPU placements).
+    pub fn rate(&self, algo: ConvAlgo, device: &Device) -> f64 {
+        let base = self
+            .rates
+            .iter()
+            .find(|(a, _)| *a == algo)
+            .map(|(_, r)| *r)
+            .unwrap_or(1e9);
+        if algo.is_gpu() {
+            base * device.speed_factor
+        } else {
+            base
+        }
+    }
+
+    /// Estimated seconds for a conv layer.
+    pub fn conv_secs(&self, algo: ConvAlgo, d: &ConvDims, device: &Device) -> f64 {
+        let flops = match algo {
+            ConvAlgo::DirectNaive
+            | ConvAlgo::DirectMkl
+            | ConvAlgo::GpuDenseNoWorkspace
+            | ConvAlgo::GpuDensePrecomp => d.direct_flops(),
+            _ => d.fft_flops(),
+        };
+        flops / self.rate(algo, device)
+    }
+
+    /// Estimated seconds for a pooling/MPF layer.
+    pub fn pool_secs(&self, s: usize, f: usize, n: Vec3, p: Vec3, mpf: bool) -> f64 {
+        let vox = (s * f * n[0] * n[1] * n[2]) as f64;
+        let mult = if mpf { (p[0] * p[1] * p[2]) as f64 } else { 1.0 };
+        vox * mult / self.pool_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::ChipTopology;
+
+    #[test]
+    fn default_rates_positive() {
+        let cm = CostModel::default_rates(4);
+        let host = Device::host_with_ram(1 << 30);
+        for algo in ConvAlgo::ALL {
+            assert!(cm.rate(algo, &host) > 0.0);
+        }
+    }
+
+    #[test]
+    fn conv_secs_scale_with_work() {
+        let cm = CostModel::default_rates(4);
+        let host = Device::host_with_ram(1 << 30);
+        let small = ConvDims { s: 1, f_in: 2, f_out: 2, n: [10; 3], k: [3; 3] };
+        let big = ConvDims { s: 1, f_in: 2, f_out: 2, n: [20; 3], k: [3; 3] };
+        assert!(
+            cm.conv_secs(ConvAlgo::DirectNaive, &big, &host)
+                > cm.conv_secs(ConvAlgo::DirectNaive, &small, &host)
+        );
+    }
+
+    #[test]
+    fn gpu_speed_factor_applies() {
+        let cm = CostModel::default_rates(4);
+        let d = ConvDims { s: 1, f_in: 2, f_out: 2, n: [12; 3], k: [3; 3] };
+        let slow = Device { speed_factor: 1.0, ..Device::titan_x() };
+        let fast = Device { speed_factor: 4.0, ..Device::titan_x() };
+        let t_slow = cm.conv_secs(ConvAlgo::GpuFft, &d, &slow);
+        let t_fast = cm.conv_secs(ConvAlgo::GpuFft, &d, &fast);
+        assert!((t_slow / t_fast - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn calibration_produces_finite_rates() {
+        let pool = TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 });
+        let cm = CostModel::calibrate(&pool, 8);
+        let host = Device::host_with_ram(1 << 30);
+        for algo in ConvAlgo::ALL {
+            let r = cm.rate(algo, &host);
+            assert!(r.is_finite() && r > 0.0, "{algo:?}: {r}");
+        }
+        assert!(cm.pool_rate > 0.0);
+    }
+}

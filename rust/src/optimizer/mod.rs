@@ -1,0 +1,448 @@
+//! Throughput optimizer — the exhaustive search of §VI.A.
+//!
+//! For a fixed choice of max-pool vs MPF per pooling layer and a fixed
+//! input shape, the time and memory of every candidate primitive per
+//! layer are uniquely determined — so the search:
+//!
+//! 1. loops over pooling-mode assignments,
+//! 2. loops over allowed input shapes (and batch sizes),
+//! 3. picks, per convolutional layer, the fastest primitive whose
+//!    Table II memory fits the device,
+//!
+//! and keeps the plan with the highest estimated throughput
+//! (`Size(I′) / Σ Time(primitiveᵢ, Iᵢ)`). Plans can then be *executed*
+//! to measure real throughput.
+
+pub mod cost;
+pub mod theory;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::conv::{Activation, Weights};
+use crate::device::Device;
+use crate::layers::{ConvLayer, LayerPrimitive, MaxPoolLayer, MpfLayer, Placement};
+use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
+use crate::net::{LayerSpec, NetSpec, PoolingMode};
+use crate::tensor::{Shape5, Tensor5};
+use crate::util::pool::TaskPool;
+
+pub use cost::CostModel;
+
+/// Per-layer decision of a plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanLayer {
+    Conv { algo: ConvAlgo },
+    Pool { mode: PoolingMode },
+}
+
+impl PlanLayer {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            PlanLayer::Conv { algo } => algo.tag(),
+            PlanLayer::Pool { mode } => match mode {
+                PoolingMode::Mpf => "MPF",
+                PoolingMode::MaxPool => "Pool",
+            },
+        }
+    }
+}
+
+/// A fully determined execution plan for one input patch.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub net_name: String,
+    pub input: Shape5,
+    pub layers: Vec<PlanLayer>,
+    /// Shape after each layer.
+    pub shapes: Vec<Shape5>,
+    /// Estimated seconds per patch (cost model).
+    pub est_secs: f64,
+    /// Peak Table II memory across layers (bytes).
+    pub est_memory: u64,
+    /// Output voxels per patch: S′ · x′·y′·z′ (spatial positions of the
+    /// sliding-window output covered by one patch).
+    pub out_voxels: u64,
+}
+
+impl Plan {
+    pub fn est_throughput(&self) -> f64 {
+        self.out_voxels as f64 / self.est_secs
+    }
+
+    /// Pooling modes of this plan in pool-layer order.
+    pub fn modes(&self) -> Vec<PoolingMode> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                PlanLayer::Pool { mode } => Some(*mode),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Search constraints: which algorithms may be used and on what device.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub device: Device,
+    pub algos: Vec<ConvAlgo>,
+    /// Allow max-pool (in addition to MPF) in the pooling assignment
+    /// loop. The paper's result is that MPF always wins; keeping both
+    /// lets the benches demonstrate that.
+    pub allow_maxpool: bool,
+    /// Candidate batch sizes (the paper finds S = 1 optimal for ≥2-pool
+    /// nets; Fig 4 sweeps this).
+    pub batch_sizes: Vec<usize>,
+    /// Inclusive range of cubic input extents to consider.
+    pub min_extent: usize,
+    pub max_extent: usize,
+    /// Cap on candidate extents actually evaluated (largest kept).
+    pub max_candidates: usize,
+}
+
+impl SearchSpace {
+    /// CPU-only search (§VI): CPU primitives against host RAM.
+    pub fn cpu_only(device: Device, max_extent: usize) -> Self {
+        SearchSpace {
+            device,
+            algos: vec![
+                ConvAlgo::DirectNaive,
+                ConvAlgo::DirectMkl,
+                ConvAlgo::FftDataParallel,
+                ConvAlgo::FftTaskParallel,
+            ],
+            allow_maxpool: false,
+            batch_sizes: vec![1],
+            min_extent: 1,
+            max_extent,
+            max_candidates: 12,
+        }
+    }
+
+    /// GPU-only search (§VI): GPU primitives against device RAM.
+    pub fn gpu_only(device: Device, max_extent: usize) -> Self {
+        SearchSpace {
+            device,
+            algos: vec![
+                ConvAlgo::GpuDenseNoWorkspace,
+                ConvAlgo::GpuDensePrecomp,
+                ConvAlgo::GpuFft,
+            ],
+            allow_maxpool: false,
+            batch_sizes: vec![1],
+            min_extent: 1,
+            max_extent,
+            max_candidates: 12,
+        }
+    }
+}
+
+/// All pooling-mode assignments (2^pools, or MPF-only).
+fn mode_assignments(pools: usize, allow_maxpool: bool) -> Vec<Vec<PoolingMode>> {
+    if !allow_maxpool {
+        return vec![vec![PoolingMode::Mpf; pools]];
+    }
+    (0..(1usize << pools))
+        .map(|mask| {
+            (0..pools)
+                .map(|i| {
+                    if mask & (1 << i) != 0 {
+                        PoolingMode::MaxPool
+                    } else {
+                        PoolingMode::Mpf
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Evaluate one (modes, input) candidate: per-layer fastest primitive
+/// under the memory constraint. Returns None if any layer has no
+/// feasible primitive.
+fn evaluate(
+    net: &NetSpec,
+    input: Shape5,
+    modes: &[PoolingMode],
+    space: &SearchSpace,
+    cost: &CostModel,
+) -> Option<Plan> {
+    let shapes = net.shapes(input, modes).ok()?;
+    let mut cur = input;
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut est_secs = 0.0;
+    let mut est_memory = 0u64;
+    let mut pool_i = 0;
+    for (li, l) in net.layers.iter().enumerate() {
+        match l {
+            LayerSpec::Conv { f_out, k } => {
+                let d = ConvDims {
+                    s: cur.s,
+                    f_in: net.f_in_at(li),
+                    f_out: *f_out,
+                    n: cur.spatial(),
+                    k: *k,
+                };
+                let mut best: Option<(ConvAlgo, f64, u64)> = None;
+                for &algo in &space.algos {
+                    let mem = conv_memory_bytes(algo, &d, cost.threads);
+                    if !space.device.fits(mem) {
+                        continue;
+                    }
+                    let t = cost.conv_secs(algo, &d, &space.device);
+                    if best.map(|(_, bt, _)| t < bt).unwrap_or(true) {
+                        best = Some((algo, t, mem));
+                    }
+                }
+                let (algo, t, mem) = best?;
+                layers.push(PlanLayer::Conv { algo });
+                est_secs += t;
+                est_memory = est_memory.max(mem);
+            }
+            LayerSpec::Pool { p } => {
+                let mode = modes[pool_i];
+                pool_i += 1;
+                let mem = match mode {
+                    PoolingMode::Mpf => mpf_memory_bytes(cur.s, cur.f, cur.spatial(), *p),
+                    PoolingMode::MaxPool => pool_memory_bytes(cur.s, cur.f, cur.spatial(), *p),
+                };
+                if !space.device.fits(mem) {
+                    return None;
+                }
+                layers.push(PlanLayer::Pool { mode });
+                est_secs +=
+                    cost.pool_secs(cur.s, cur.f, cur.spatial(), *p, mode == PoolingMode::Mpf);
+                est_memory = est_memory.max(mem);
+            }
+        }
+        cur = shapes[li];
+    }
+    let out = *shapes.last().unwrap();
+    Some(Plan {
+        net_name: net.name.clone(),
+        input,
+        layers,
+        shapes,
+        est_secs,
+        est_memory,
+        out_voxels: (out.s * out.x * out.y * out.z) as u64,
+    })
+}
+
+/// Exhaustive search per §VI.A. Returns the best plan (highest
+/// estimated throughput) if any candidate is feasible.
+pub fn search(net: &NetSpec, space: &SearchSpace, cost: &CostModel) -> Option<Plan> {
+    let mut best: Option<Plan> = None;
+    for modes in mode_assignments(net.pool_count(), space.allow_maxpool) {
+        let mut extents = net.valid_extents(space.min_extent, space.max_extent, &modes);
+        // Keep only the largest few candidates — throughput grows with
+        // input size until memory runs out (§II), so the optimum is at
+        // the memory frontier.
+        if extents.len() > space.max_candidates {
+            extents = extents.split_off(extents.len() - space.max_candidates);
+        }
+        for &s in &space.batch_sizes {
+            for &n in &extents {
+                let input = Shape5::new(s, net.f_in, n, n, n);
+                if let Some(p) = evaluate(net, input, &modes, space, cost) {
+                    if best.as_ref().map(|b| p.est_throughput() > b.est_throughput()).unwrap_or(true)
+                    {
+                        best = Some(p);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Materialised, executable plan: primitives + weights.
+pub struct CompiledPlan {
+    pub plan: Plan,
+    pub primitives: Vec<Box<dyn LayerPrimitive>>,
+    pub weights: Vec<Arc<Weights>>,
+}
+
+/// Build random (fixed-seed) weights for every conv layer of a net.
+pub fn make_weights(net: &NetSpec, seed: u64) -> Vec<Arc<Weights>> {
+    let mut out = Vec::new();
+    for (li, l) in net.layers.iter().enumerate() {
+        if let LayerSpec::Conv { f_out, k } = l {
+            out.push(Arc::new(Weights::random(
+                *f_out,
+                net.f_in_at(li),
+                *k,
+                seed.wrapping_add(li as u64),
+            )));
+        }
+    }
+    out
+}
+
+/// Compile a plan into executable primitives with the given weights
+/// (one entry per conv layer, in order).
+pub fn compile(net: &NetSpec, plan: &Plan, weights: &[Arc<Weights>]) -> Result<CompiledPlan> {
+    if weights.len() != net.conv_count() {
+        bail!("expected {} weight sets, got {}", net.conv_count(), weights.len());
+    }
+    let mut prims: Vec<Box<dyn LayerPrimitive>> = Vec::new();
+    let mut wi = 0;
+    for (l, pl) in net.layers.iter().zip(&plan.layers) {
+        match (l, pl) {
+            (LayerSpec::Conv { .. }, PlanLayer::Conv { algo }) => {
+                prims.push(Box::new(ConvLayer::new(
+                    weights[wi].clone(),
+                    *algo,
+                    Activation::Relu,
+                )));
+                wi += 1;
+            }
+            (LayerSpec::Pool { p }, PlanLayer::Pool { mode }) => {
+                let placement = Placement::Cpu;
+                match mode {
+                    PoolingMode::Mpf => prims.push(Box::new(MpfLayer { window: *p, placement })),
+                    PoolingMode::MaxPool => {
+                        prims.push(Box::new(MaxPoolLayer { window: *p, placement }))
+                    }
+                }
+            }
+            _ => bail!("plan does not match net layer kinds"),
+        }
+    }
+    Ok(CompiledPlan { plan: plan.clone(), primitives: prims, weights: weights.to_vec() })
+}
+
+impl CompiledPlan {
+    /// Execute the plan on one input patch.
+    pub fn run(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
+        let mut cur = input;
+        for p in &self.primitives {
+            debug_assert!(p.accepts(cur.shape()), "{} rejects {}", p.name(), cur.shape());
+            cur = p.execute(cur, pool);
+        }
+        cur
+    }
+
+    /// Device placement check: whether all conv layers are GPU
+    /// primitives (GPU-only plan).
+    pub fn is_gpu_plan(&self) -> bool {
+        self.primitives.iter().all(|p| {
+            p.placement() == Placement::Gpu || p.name() == "MPF" || p.name() == "Pool"
+        })
+    }
+}
+
+/// Format a plan as the Table IV rows (layer → primitive tag).
+pub fn plan_table(plan: &Plan) -> Vec<(String, String)> {
+    let mut rows = vec![("Input size".to_string(), format!("{}^3 (S={})", plan.input.x, plan.input.s))];
+    for (i, l) in plan.layers.iter().enumerate() {
+        rows.push((format!("Layer {}", i + 1), l.tag().to_string()));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo::tiny_net;
+    use crate::util::pool::ChipTopology;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    fn host(gb: u64) -> Device {
+        Device::host_with_ram(gb << 30)
+    }
+
+    #[test]
+    fn search_finds_feasible_plan() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let space = SearchSpace::cpu_only(host(4), 21);
+        let plan = search(&net, &space, &cm).expect("feasible plan");
+        assert_eq!(plan.layers.len(), net.layers.len());
+        assert!(plan.est_secs > 0.0);
+        assert!(plan.out_voxels > 0);
+        // MPF-only space ⇒ pool layer must be MPF.
+        assert!(matches!(plan.layers[1], PlanLayer::Pool { mode: PoolingMode::Mpf }));
+    }
+
+    #[test]
+    fn bigger_memory_bigger_input() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let small = search(&net, &SearchSpace::cpu_only(host(1), 41), &cm).unwrap();
+        let mut tight_space = SearchSpace::cpu_only(Device::host_with_ram(16 << 20), 41);
+        tight_space.max_candidates = 40;
+        let tight = search(&net, &tight_space, &cm).unwrap();
+        assert!(small.input.x >= tight.input.x, "{} vs {}", small.input.x, tight.input.x);
+        assert!(tight.est_memory <= 16 << 20);
+    }
+
+    #[test]
+    fn memory_constraint_respected() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        for gb in [1u64, 4] {
+            if let Some(p) = search(&net, &SearchSpace::cpu_only(host(gb), 41), &cm) {
+                assert!(p.est_memory <= gb << 30);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_space_returns_none() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        // 1 KiB of RAM fits nothing.
+        let space = SearchSpace::cpu_only(Device::host_with_ram(1024), 41);
+        assert!(search(&net, &space, &cm).is_none());
+    }
+
+    #[test]
+    fn compile_and_run_plan() {
+        let pool = tpool();
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(host(4), 13);
+        space.max_candidates = 2;
+        let plan = search(&net, &space, &cm).unwrap();
+        let weights = make_weights(&net, 1);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let input = Tensor5::random(plan.input, 2);
+        let out = cp.run(input, &pool);
+        assert_eq!(out.shape(), *plan.shapes.last().unwrap());
+    }
+
+    #[test]
+    fn gpu_space_uses_gpu_algos() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let space = SearchSpace::gpu_only(Device::titan_x(), 21);
+        let plan = search(&net, &space, &cm).unwrap();
+        for l in &plan.layers {
+            if let PlanLayer::Conv { algo } = l {
+                assert!(algo.is_gpu());
+            }
+        }
+    }
+
+    #[test]
+    fn mode_assignment_enumeration() {
+        assert_eq!(mode_assignments(2, false).len(), 1);
+        assert_eq!(mode_assignments(2, true).len(), 4);
+        assert_eq!(mode_assignments(0, true).len(), 1);
+    }
+
+    #[test]
+    fn plan_table_has_row_per_layer() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let plan = search(&net, &SearchSpace::cpu_only(host(4), 21), &cm).unwrap();
+        let rows = plan_table(&plan);
+        assert_eq!(rows.len(), net.layers.len() + 1);
+    }
+}

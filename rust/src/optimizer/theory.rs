@@ -1,0 +1,211 @@
+//! Theoretical speedup model — Fig. 4 (§VI.A).
+//!
+//! The paper defines theoretical speedup as the ratio of operations
+//! needed per output voxel by the naive approach (input = field of
+//! view, a single output voxel, max-pooling) to those needed by an MPF
+//! network at a given input size and batch size, using the FFT-based
+//! layer costs of Table I. Plotted against the memory the configuration
+//! requires, this shows why batch size 1 wins for ≥2-pool networks
+//! while 1-pool networks prefer larger batches.
+
+use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
+use crate::net::{LayerSpec, NetSpec, PoolingMode};
+use crate::tensor::Shape5;
+
+/// FFT-based op count of the whole net for one input (Table I rows 2/4).
+pub fn fft_ops(net: &NetSpec, input: Shape5, modes: &[PoolingMode]) -> Option<f64> {
+    let shapes = net.shapes(input, modes).ok()?;
+    let mut cur = input;
+    let mut ops = 0.0;
+    let mut pool_i = 0;
+    for (li, l) in net.layers.iter().enumerate() {
+        match l {
+            LayerSpec::Conv { f_out, k } => {
+                let d = ConvDims {
+                    s: cur.s,
+                    f_in: net.f_in_at(li),
+                    f_out: *f_out,
+                    n: cur.spatial(),
+                    k: *k,
+                };
+                ops += d.fft_flops();
+            }
+            LayerSpec::Pool { p } => {
+                let mult = if modes[pool_i] == PoolingMode::Mpf {
+                    (p[0] * p[1] * p[2]) as f64
+                } else {
+                    1.0
+                };
+                ops += cur.len() as f64 * mult;
+                pool_i += 1;
+            }
+        }
+        cur = shapes[li];
+    }
+    Some(ops)
+}
+
+/// Peak Table II memory of the net using the task-parallel FFT
+/// primitive everywhere (the Fig. 4 x-axis).
+pub fn fft_memory(net: &NetSpec, input: Shape5, modes: &[PoolingMode], threads: usize) -> Option<u64> {
+    let shapes = net.shapes(input, modes).ok()?;
+    let mut cur = input;
+    let mut mem = 0u64;
+    let mut pool_i = 0;
+    for (li, l) in net.layers.iter().enumerate() {
+        match l {
+            LayerSpec::Conv { f_out, k } => {
+                let d = ConvDims {
+                    s: cur.s,
+                    f_in: net.f_in_at(li),
+                    f_out: *f_out,
+                    n: cur.spatial(),
+                    k: *k,
+                };
+                mem = mem.max(conv_memory_bytes(ConvAlgo::FftTaskParallel, &d, threads));
+            }
+            LayerSpec::Pool { p } => {
+                let m = if modes[pool_i] == PoolingMode::Mpf {
+                    mpf_memory_bytes(cur.s, cur.f, cur.spatial(), *p)
+                } else {
+                    pool_memory_bytes(cur.s, cur.f, cur.spatial(), *p)
+                };
+                mem = mem.max(m);
+                pool_i += 1;
+            }
+        }
+        cur = shapes[li];
+    }
+    Some(mem)
+}
+
+/// Ops per output voxel of the naive approach: input = field of view,
+/// max-pooling everywhere, one output voxel.
+pub fn naive_ops_per_voxel(net: &NetSpec) -> f64 {
+    let fov = net.field_of_view();
+    let modes = vec![PoolingMode::MaxPool; net.pool_count()];
+    let input = Shape5::new(1, net.f_in, fov[0], fov[1], fov[2]);
+    fft_ops(net, input, &modes).expect("FoV input must be valid for max-pooling")
+}
+
+/// One Fig. 4 series: a batch size and its (memory, speedup) curve.
+#[derive(Clone, Debug)]
+pub struct SpeedupSeries {
+    pub batch: usize,
+    /// (memory bytes, theoretical speedup) per valid input extent.
+    pub points: Vec<(u64, f64)>,
+}
+
+/// Fig. 4: theoretical speedup vs memory for several batch sizes.
+pub fn speedup_series(
+    net: &NetSpec,
+    batch_sizes: &[usize],
+    max_extent: usize,
+    threads: usize,
+) -> Vec<SpeedupSeries> {
+    let naive = naive_ops_per_voxel(net);
+    let modes = vec![PoolingMode::Mpf; net.pool_count()];
+    batch_sizes
+        .iter()
+        .map(|&s| {
+            let mut points = Vec::new();
+            for n in net.valid_extents(1, max_extent, &modes) {
+                let input = Shape5::new(s, net.f_in, n, n, n);
+                let (Some(ops), Some(mem), Ok(shapes)) = (
+                    fft_ops(net, input, &modes),
+                    fft_memory(net, input, &modes, threads),
+                    net.shapes(input, &modes),
+                ) else {
+                    continue;
+                };
+                let out = shapes.last().unwrap();
+                let vox = (out.s * out.x * out.y * out.z) as f64;
+                points.push((mem, naive * vox / ops));
+            }
+            SpeedupSeries { batch: s, points }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo::tiny_net;
+    use crate::net::spec::LayerSpec;
+
+    /// A 1-pool and a 2-pool net as in Fig. 4.
+    fn one_pool() -> NetSpec {
+        NetSpec {
+            name: "p1".into(),
+            f_in: 1,
+            layers: vec![
+                LayerSpec::Conv { f_out: 4, k: [3; 3] },
+                LayerSpec::Pool { p: [2; 3] },
+                LayerSpec::Conv { f_out: 4, k: [3; 3] },
+                LayerSpec::Conv { f_out: 2, k: [3; 3] },
+            ],
+        }
+    }
+
+    fn two_pool() -> NetSpec {
+        NetSpec {
+            name: "p2".into(),
+            f_in: 1,
+            layers: vec![
+                LayerSpec::Conv { f_out: 4, k: [3; 3] },
+                LayerSpec::Pool { p: [2; 3] },
+                LayerSpec::Conv { f_out: 4, k: [3; 3] },
+                LayerSpec::Pool { p: [2; 3] },
+                LayerSpec::Conv { f_out: 2, k: [3; 3] },
+            ],
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_input_size() {
+        let s = speedup_series(&tiny_net(2), &[1], 41, 4);
+        let pts = &s[0].points;
+        assert!(pts.len() >= 3);
+        // Larger inputs (more memory) → more reuse → higher speedup.
+        assert!(pts.last().unwrap().1 > pts.first().unwrap().1);
+    }
+
+    #[test]
+    fn speedup_exceeds_one_for_reasonable_inputs() {
+        let s = speedup_series(&two_pool(), &[1], 60, 4);
+        assert!(s[0].points.last().unwrap().1 > 1.0);
+    }
+
+    #[test]
+    fn two_pool_prefers_batch_one_at_fixed_memory() {
+        // The paper's Fig. 4b finding: for 2-pool nets, at equal memory,
+        // S=1 achieves at least the speedup of larger batches.
+        let series = speedup_series(&two_pool(), &[1, 4], 80, 4);
+        let s1 = &series[0];
+        let s4 = &series[1];
+        // Compare at s4's top memory point against s1 interpolated at
+        // ≤ that memory.
+        let (m4, v4) = *s4.points.last().unwrap();
+        let v1 = s1
+            .points
+            .iter()
+            .filter(|(m, _)| *m <= m4)
+            .map(|(_, v)| *v)
+            .fold(0.0, f64::max);
+        assert!(v1 >= v4 * 0.95, "s1 best {v1} vs s4 {v4} at mem {m4}");
+    }
+
+    #[test]
+    fn one_pool_nets_have_series_too() {
+        let series = speedup_series(&one_pool(), &[1, 2, 4], 40, 4);
+        assert_eq!(series.len(), 3);
+        for s in &series {
+            assert!(!s.points.is_empty(), "batch {} empty", s.batch);
+        }
+    }
+
+    #[test]
+    fn naive_ops_positive() {
+        assert!(naive_ops_per_voxel(&tiny_net(2)) > 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! CPU–GPU producer–consumer pipeline — §VII.C.
+//!
+//! The first θ layers of the network run on the CPU; the remaining
+//! layers run on the (simulated) GPU. The CPU produces intermediate
+//! tensors onto a depth-1 queue; the GPU consumes them. The depth-1
+//! bound is the paper's backpressure rule: the CPU may not start the
+//! next input until the GPU has picked up the previous one, keeping the
+//! host-RAM overhead to a single in-flight intermediate.
+
+use std::sync::mpsc::sync_channel;
+
+use crate::layers::LayerPrimitive;
+use crate::tensor::Tensor5;
+use crate::util::pool::TaskPool;
+
+/// A two-stage pipeline over layer primitives.
+pub struct Pipeline {
+    /// Layers executed by the producer (CPU part, θ layers).
+    pub head: Vec<Box<dyn LayerPrimitive>>,
+    /// Layers executed by the consumer (GPU part).
+    pub tail: Vec<Box<dyn LayerPrimitive>>,
+}
+
+impl Pipeline {
+    /// Split point θ of a compiled layer stack.
+    pub fn split(mut layers: Vec<Box<dyn LayerPrimitive>>, theta: usize) -> Self {
+        assert!(theta <= layers.len());
+        let tail = layers.split_off(theta);
+        Pipeline { head: layers, tail }
+    }
+
+    /// Run a stream of inputs through the pipeline. The queue between
+    /// the stages holds at most one tensor.
+    pub fn run_stream(&self, inputs: Vec<Tensor5>, pool: &TaskPool) -> Vec<Tensor5> {
+        let n = inputs.len();
+        let (tx, rx) = sync_channel::<Tensor5>(1);
+        let mut outputs = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            // Producer: CPU part.
+            s.spawn(move || {
+                for input in inputs {
+                    let mut cur = input;
+                    for l in &self.head {
+                        cur = l.execute(cur, pool);
+                    }
+                    // Blocks while the queue is full — the paper's
+                    // "CPU waits until the GPU picked up the data".
+                    tx.send(cur).expect("consumer alive");
+                }
+                drop(tx);
+            });
+            // Consumer: GPU part (this thread).
+            while let Ok(mid) = rx.recv() {
+                let mut cur = mid;
+                for l in &self.tail {
+                    cur = l.execute(cur, pool);
+                }
+                outputs.push(cur);
+            }
+        });
+        outputs
+    }
+
+    /// Sequential reference (no overlap) for testing and speedup
+    /// accounting.
+    pub fn run_sequential(&self, inputs: Vec<Tensor5>, pool: &TaskPool) -> Vec<Tensor5> {
+        inputs
+            .into_iter()
+            .map(|input| {
+                let mut cur = input;
+                for l in self.head.iter().chain(self.tail.iter()) {
+                    cur = l.execute(cur, pool);
+                }
+                cur
+            })
+            .collect()
+    }
+}
+
+/// Choose θ by cost model: minimise max(head-time, tail-time) — the
+/// pipeline's steady-state period is the slower stage (§VII.C).
+pub fn best_theta(layer_secs_cpu: &[f64], layer_secs_gpu: &[f64]) -> usize {
+    assert_eq!(layer_secs_cpu.len(), layer_secs_gpu.len());
+    let n = layer_secs_cpu.len();
+    let mut best = (0usize, f64::INFINITY);
+    for theta in 0..=n {
+        let head: f64 = layer_secs_cpu[..theta].iter().sum();
+        let tail: f64 = layer_secs_gpu[theta..].iter().sum();
+        let period = head.max(tail);
+        if period < best.1 {
+            best = (theta, period);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{Activation, Weights};
+    use crate::layers::{ConvLayer, MpfLayer, Placement};
+    use crate::memory::model::ConvAlgo;
+    use crate::tensor::Shape5;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+    use std::sync::Arc;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    fn layers() -> Vec<Box<dyn LayerPrimitive>> {
+        vec![
+            Box::new(ConvLayer::new(
+                Arc::new(Weights::random(2, 1, [3, 3, 3], 1)),
+                ConvAlgo::DirectMkl,
+                Activation::Relu,
+            )),
+            Box::new(MpfLayer { window: [2, 2, 2], placement: Placement::Cpu }),
+            Box::new(ConvLayer::new(
+                Arc::new(Weights::random(1, 2, [3, 3, 3], 2)),
+                ConvAlgo::GpuFft,
+                Activation::Relu,
+            )),
+        ]
+    }
+
+    #[test]
+    fn pipeline_matches_sequential() {
+        let pool = tpool();
+        let pipe = Pipeline::split(layers(), 2);
+        let pipe2 = Pipeline::split(layers(), 2);
+        let inputs: Vec<Tensor5> =
+            (0..4).map(|i| Tensor5::random(Shape5::new(1, 1, 13, 13, 13), i)).collect();
+        let inputs2: Vec<Tensor5> =
+            (0..4).map(|i| Tensor5::random(Shape5::new(1, 1, 13, 13, 13), i)).collect();
+        let a = pipe.run_stream(inputs, &pool);
+        let b = pipe2.run_sequential(inputs2, &pool);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_allclose(x.data(), y.data(), 1e-5, 1e-5, "pipeline vs sequential");
+        }
+    }
+
+    #[test]
+    fn outputs_preserve_order() {
+        let pool = tpool();
+        let pipe = Pipeline::split(layers(), 1);
+        // Distinct inputs → distinct outputs; order must match.
+        let inputs: Vec<Tensor5> =
+            (0..3).map(|i| Tensor5::random(Shape5::new(1, 1, 13, 13, 13), 100 + i)).collect();
+        let seq_in: Vec<Tensor5> =
+            (0..3).map(|i| Tensor5::random(Shape5::new(1, 1, 13, 13, 13), 100 + i)).collect();
+        let a = pipe.run_stream(inputs, &pool);
+        let b = pipe.run_sequential(seq_in, &pool);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data(), y.data());
+        }
+    }
+
+    #[test]
+    fn theta_zero_and_full() {
+        let pool = tpool();
+        for theta in [0, 3] {
+            let pipe = Pipeline::split(layers(), theta);
+            let out = pipe.run_stream(
+                vec![Tensor5::random(Shape5::new(1, 1, 13, 13, 13), 7)],
+                &pool,
+            );
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].shape().f, 1);
+        }
+    }
+
+    #[test]
+    fn best_theta_balances_stages() {
+        // CPU times all 1.0; GPU times all 0.5: putting everything on
+        // the GPU (θ=0) gives period 1.5... θ=0 → tail 1.5, θ=3 → head 3.
+        let cpu = [1.0, 1.0, 1.0];
+        let gpu = [0.5, 0.5, 0.5];
+        let t = best_theta(&cpu, &gpu);
+        // θ=0: max(0, 1.5)=1.5 ; θ=1: max(1, 1)=1 ; θ=2: max(2, .5)=2.
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn best_theta_degenerate() {
+        assert_eq!(best_theta(&[], &[]), 0);
+        // GPU dominates: keep everything on GPU.
+        assert_eq!(best_theta(&[10.0], &[0.1]), 0);
+        // CPU dominates: everything on CPU.
+        assert_eq!(best_theta(&[0.1], &[10.0]), 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Plain max-pooling layer (§V): each image pooled independently in a
+//! parallel-for, window `p`, stride `p`.
+
+use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+/// Output shape of max-pooling (Table I row 3). Panics unless the
+/// spatial extent is divisible by the window.
+pub fn max_pool_out_shape(input: Shape5, p: Vec3) -> Shape5 {
+    assert!(
+        input.x % p[0] == 0 && input.y % p[1] == 0 && input.z % p[2] == 0,
+        "max-pool requires divisible extent ({input} by {p:?})"
+    );
+    Shape5 { x: input.x / p[0], y: input.y / p[1], z: input.z / p[2], ..input }
+}
+
+/// Max-pooling layer.
+pub fn max_pool(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
+    let ish = input.shape();
+    let osh = max_pool_out_shape(ish, p);
+    let mut out = Tensor5::zeros(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    let ol = osh.image_len();
+    pool.parallel_for(ish.s * ish.f, |sf| {
+        let (s, f) = (sf / ish.f, sf % ish.f);
+        let img = input.image(s, f);
+        let o = unsafe { outp.slice_mut(osh.image_offset(s, f), ol) };
+        pool_one(img, ish.spatial(), p, [0, 0, 0], osh.spatial(), o);
+    });
+    out
+}
+
+/// Max-pool a single image at a given offset with window/stride `p`,
+/// writing `odims` pooled voxels. Shared by max-pool (offset 0) and MPF
+/// (every offset).
+pub(crate) fn pool_one(img: &[f32], n: Vec3, p: Vec3, off: Vec3, odims: Vec3, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), odims[0] * odims[1] * odims[2]);
+    for x in 0..odims[0] {
+        let bx = off[0] + x * p[0];
+        for y in 0..odims[1] {
+            let by = off[1] + y * p[1];
+            for z in 0..odims[2] {
+                let bz = off[2] + z * p[2];
+                let mut m = f32::NEG_INFINITY;
+                for a in 0..p[0] {
+                    for b in 0..p[1] {
+                        let row = ((bx + a) * n[1] + (by + b)) * n[2] + bz;
+                        for c in 0..p[2] {
+                            let v = img[row + c];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                }
+                out[(x * odims[1] + y) * odims[2] + z] = m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::ChipTopology;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn shape_divides() {
+        let sh = max_pool_out_shape(Shape5::new(1, 2, 4, 6, 8), [2, 2, 2]);
+        assert_eq!(sh, Shape5::new(1, 2, 2, 3, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn shape_rejects_indivisible() {
+        max_pool_out_shape(Shape5::new(1, 1, 5, 4, 4), [2, 2, 2]);
+    }
+
+    #[test]
+    fn pools_max_of_each_block() {
+        let mut t = Tensor5::zeros(Shape5::new(1, 1, 2, 2, 2));
+        for (i, v) in [1.0, 8.0, 3.0, 4.0, 5.0, 6.0, 7.0, 2.0].iter().enumerate() {
+            t.data_mut()[i] = *v;
+        }
+        let out = max_pool(&t, [2, 2, 2], &tpool());
+        assert_eq!(out.shape(), Shape5::new(1, 1, 1, 1, 1));
+        assert_eq!(out.data(), &[8.0]);
+    }
+
+    #[test]
+    fn anisotropic_window() {
+        let t = Tensor5::random(Shape5::new(2, 2, 4, 2, 6), 7);
+        let out = max_pool(&t, [2, 1, 3], &tpool());
+        assert_eq!(out.shape(), Shape5::new(2, 2, 2, 2, 2));
+        // Check one block by hand.
+        let mut m = f32::NEG_INFINITY;
+        for a in 0..2 {
+            for c in 0..3 {
+                m = m.max(t.at(1, 1, 2 + a, 1, 3 + c));
+            }
+        }
+        assert_eq!(out.at(1, 1, 1, 1, 1), m);
+    }
+
+    #[test]
+    fn pooling_is_monotone_property() {
+        let p = tpool();
+        crate::util::quick::check("maxpool ≥ any element", |g| {
+            let n = [g.usize(1, 3) * 2, g.usize(1, 3) * 2, g.usize(1, 3) * 2];
+            let t = Tensor5::random(Shape5::from_spatial(1, 1, n), g.case as u64);
+            let out = max_pool(&t, [2, 2, 2], &p);
+            // Every output must be ≥ all 8 inputs of its block and equal
+            // to one of them.
+            let osh = out.shape();
+            for x in 0..osh.x {
+                for y in 0..osh.y {
+                    for z in 0..osh.z {
+                        let o = out.at(0, 0, x, y, z);
+                        let mut found = false;
+                        for a in 0..2 {
+                            for b in 0..2 {
+                                for c in 0..2 {
+                                    let v = t.at(0, 0, 2 * x + a, 2 * y + b, 2 * z + c);
+                                    assert!(o >= v);
+                                    found |= o == v;
+                                }
+                            }
+                        }
+                        assert!(found);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Max-pooling and max-pooling fragments (MPF) — §V.
+//!
+//! Plain max-pooling subsamples: an `n` image with window `p` yields an
+//! `n/p` image (n must be divisible by p). **MPF** instead produces all
+//! `p³` pooled *fragments* (one per offset), multiplying the batch
+//! dimension of the downstream layers by `p³` — this is what lets a
+//! sliding-window ConvNet reuse computation across window positions
+//! (equivalent to dilated convolution / strided kernels / max
+//! filtering). Fragments are uniform when `n + 1 ≡ 0 (mod p)`.
+
+mod maxpool;
+mod mpf;
+
+pub use maxpool::{max_pool, max_pool_out_shape};
+pub use mpf::{mpf_forward, mpf_fragment_order, mpf_out_shape};

@@ -1,0 +1,177 @@
+//! Max-pooling fragments (MPF) — §V.
+//!
+//! For window `p`, MPF performs max-pooling at every offset
+//! `(ox, oy, oz) ∈ [0,p)³`, producing `p³` fragments per input image.
+//! Fragments become extra entries in the *batch* dimension: an input of
+//! shape `(S, f, n³)` yields `(S·p³, f, ⌊n/p⌋³)` (Table I row 4). The
+//! fragment index is the least-significant part of the output batch
+//! index, so downstream layers see a contiguous per-input group —
+//! the recombination in `crate::inference` relies on this ordering.
+
+use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+use super::maxpool::pool_one;
+
+/// Output shape of an MPF layer. Requires `n + 1 ≡ 0 (mod p)` per
+/// dimension so every fragment has the same extent `⌊n/p⌋`.
+pub fn mpf_out_shape(input: Shape5, p: Vec3) -> Shape5 {
+    assert!(
+        (input.x + 1) % p[0] == 0 && (input.y + 1) % p[1] == 0 && (input.z + 1) % p[2] == 0,
+        "MPF requires n+1 divisible by p ({input} by {p:?})"
+    );
+    Shape5 {
+        s: input.s * p[0] * p[1] * p[2],
+        f: input.f,
+        x: input.x / p[0],
+        y: input.y / p[1],
+        z: input.z / p[2],
+    }
+}
+
+/// Enumerate fragment offsets in their batch order.
+pub fn mpf_fragment_order(p: Vec3) -> Vec<Vec3> {
+    let mut v = Vec::with_capacity(p[0] * p[1] * p[2]);
+    for ox in 0..p[0] {
+        for oy in 0..p[1] {
+            for oz in 0..p[2] {
+                v.push([ox, oy, oz]);
+            }
+        }
+    }
+    v
+}
+
+/// MPF layer: batch entry `s` of the input becomes entries
+/// `s·p³ .. (s+1)·p³` of the output, one per offset (in
+/// [`mpf_fragment_order`]).
+pub fn mpf_forward(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
+    let ish = input.shape();
+    let osh = mpf_out_shape(ish, p);
+    let frags = mpf_fragment_order(p);
+    let nf = frags.len();
+    let mut out = Tensor5::zeros(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    let ol = osh.image_len();
+    let odims = osh.spatial();
+    // Parallel over (s, f, fragment): each job writes one output image.
+    pool.parallel_for(ish.s * ish.f * nf, |idx| {
+        let s = idx / (ish.f * nf);
+        let rest = idx % (ish.f * nf);
+        let f = rest / nf;
+        let fi = rest % nf;
+        let off = frags[fi];
+        let os = s * nf + fi; // output batch index
+        let o = unsafe { outp.slice_mut(osh.image_offset(os, f), ol) };
+        pool_one(input.image(s, f), ish.spatial(), p, off, odims, o);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::ChipTopology;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn shape_multiplies_batch() {
+        let sh = mpf_out_shape(Shape5::new(2, 3, 7, 7, 7), [2, 2, 2]);
+        assert_eq!(sh, Shape5::new(16, 3, 3, 3, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "n+1 divisible")]
+    fn shape_rejects_bad_extent() {
+        mpf_out_shape(Shape5::new(1, 1, 8, 7, 7), [2, 2, 2]);
+    }
+
+    #[test]
+    fn fragment_order_is_row_major() {
+        let o = mpf_fragment_order([2, 1, 2]);
+        assert_eq!(o, vec![[0, 0, 0], [0, 0, 1], [1, 0, 0], [1, 0, 1]]);
+    }
+
+    #[test]
+    fn fragment_zero_equals_plain_pooling_region() {
+        // Fragment (0,0,0) of MPF on an n=7 image equals max-pooling the
+        // leading 6³ sub-volume.
+        let p = tpool();
+        let t = Tensor5::random(Shape5::new(1, 1, 7, 7, 7), 3);
+        let m = mpf_forward(&t, [2, 2, 2], &p);
+        for x in 0..3 {
+            for y in 0..3 {
+                for z in 0..3 {
+                    let mut expect = f32::NEG_INFINITY;
+                    for a in 0..2 {
+                        for b in 0..2 {
+                            for c in 0..2 {
+                                expect = expect.max(t.at(0, 0, 2 * x + a, 2 * y + b, 2 * z + c));
+                            }
+                        }
+                    }
+                    assert_eq!(m.at(0, 0, x, y, z), expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn each_fragment_is_offset_pooling() {
+        let p = tpool();
+        let t = Tensor5::random(Shape5::new(2, 2, 5, 5, 5), 5);
+        let m = mpf_forward(&t, [2, 2, 2], &p);
+        let order = mpf_fragment_order([2, 2, 2]);
+        for s in 0..2 {
+            for (fi, off) in order.iter().enumerate() {
+                for f in 0..2 {
+                    for x in 0..2 {
+                        for y in 0..2 {
+                            for z in 0..2 {
+                                let mut expect = f32::NEG_INFINITY;
+                                for a in 0..2 {
+                                    for b in 0..2 {
+                                        for c in 0..2 {
+                                            expect = expect.max(t.at(
+                                                s,
+                                                f,
+                                                off[0] + 2 * x + a,
+                                                off[1] + 2 * y + b,
+                                                off[2] + 2 * z + c,
+                                            ));
+                                        }
+                                    }
+                                }
+                                assert_eq!(m.at(s * 8 + fi, f, x, y, z), expect, "s={s} fi={fi}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn anisotropic_window_2x1x1() {
+        // The paper's illustration network uses 2×1×1 MPF windows.
+        let p = tpool();
+        let t = Tensor5::random(Shape5::new(1, 1, 5, 4, 4), 9);
+        let m = mpf_forward(&t, [2, 1, 1], &p);
+        assert_eq!(m.shape(), Shape5::new(2, 1, 2, 4, 4));
+        // Fragment 0: rows 0..2, 2..4 pooled along x; fragment 1: 1..3, 3..5.
+        for (fi, off) in [(0usize, 0usize), (1, 1)] {
+            for x in 0..2 {
+                for y in 0..4 {
+                    for z in 0..4 {
+                        let expect = t.at(0, 0, off + 2 * x, y, z).max(t.at(0, 0, off + 2 * x + 1, y, z));
+                        assert_eq!(m.at(fi, 0, x, y, z), expect);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the Rust hot path.
+//!
+//! `make artifacts` (build-time Python) lowers the Layer-2 graphs to
+//! HLO **text** (`artifacts/*.hlo.txt`) plus a line-oriented manifest;
+//! this module compiles them on the PJRT CPU client and executes them
+//! with tensors produced by the coordinator. Python never runs at
+//! request time. On this testbed the PJRT executables stand in for the
+//! GPU device's compiled kernels (see `crate::device`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{Shape5, Tensor5};
+
+/// One artifact: name, file, argument and output shapes.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse the line format emitted by `python/compile/aot.py`.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries: Vec<ArtifactSpec> = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks[0] {
+                "artifact" => {
+                    if toks.len() != 3 {
+                        bail!("manifest line {}: artifact NAME FILE", ln + 1);
+                    }
+                    entries.push(ArtifactSpec {
+                        name: toks[1].into(),
+                        file: toks[2].into(),
+                        arg_shapes: Vec::new(),
+                        output_shape: Vec::new(),
+                    });
+                }
+                "arg" | "out" => {
+                    let cur = entries
+                        .last_mut()
+                        .ok_or_else(|| anyhow!("manifest line {}: shape before artifact", ln + 1))?;
+                    let dims: Vec<usize> = toks[1..]
+                        .iter()
+                        .map(|t| t.parse())
+                        .collect::<std::result::Result<_, _>>()
+                        .with_context(|| format!("manifest line {}", ln + 1))?;
+                    if toks[0] == "arg" {
+                        cur.arg_shapes.push(dims);
+                    } else {
+                        cur.output_shape = dims;
+                    }
+                }
+                other => bail!("manifest line {}: unknown directive {other}", ln + 1),
+            }
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// PJRT runtime: lazily compiles artifacts on first use and caches the
+/// loaded executables.
+pub struct Runtime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    loaded: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { dir, manifest, client, loaded: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string of the PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_loaded(&self, name: &str) -> Result<()> {
+        let mut loaded = self.loaded.lock().unwrap();
+        if loaded.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling '{name}': {e:?}"))?;
+        loaded.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with flat f32 argument buffers (shapes per
+    /// the manifest). Returns the flat output buffer.
+    pub fn execute(&self, name: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
+        self.ensure_loaded(name)?;
+        let spec = self.manifest.get(name).unwrap().clone();
+        if args.len() != spec.arg_shapes.len() {
+            bail!(
+                "artifact '{name}' expects {} args, got {}",
+                spec.arg_shapes.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (buf, shape)) in args.iter().zip(&spec.arg_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                bail!("artifact '{name}' arg {i}: {} elems, want {want} ({shape:?})", buf.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape arg {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let loaded = self.loaded.lock().unwrap();
+        let exe = loaded.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // Lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute an artifact whose first arg is a 5D tensor and whose
+    /// output is 5D, with weight buffers appended.
+    pub fn execute_tensor(
+        &self,
+        name: &str,
+        input: &Tensor5,
+        weight_bufs: &[&[f32]],
+    ) -> Result<Tensor5> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let mut args: Vec<&[f32]> = vec![input.data()];
+        args.extend_from_slice(weight_bufs);
+        let flat = self.execute(name, &args)?;
+        if spec.output_shape.len() != 5 {
+            bail!("artifact '{name}' output is not 5D");
+        }
+        let sh = Shape5::new(
+            spec.output_shape[0],
+            spec.output_shape[1],
+            spec.output_shape[2],
+            spec.output_shape[3],
+            spec.output_shape[4],
+        );
+        Ok(Tensor5::from_vec(sh, flat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_line_format() {
+        let text = "artifact foo foo.hlo.txt\narg 1 1 4 4 4\narg 2 1 3 3 3\nout 1 2 2 2 2\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("foo").unwrap();
+        assert_eq!(e.arg_shapes.len(), 2);
+        assert_eq!(e.output_shape, vec![1, 2, 2, 2, 2]);
+        assert!(m.get("bar").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_lines() {
+        assert!(Manifest::parse("arg 1 2 3\n").is_err());
+        assert!(Manifest::parse("frob x y\n").is_err());
+        assert!(Manifest::parse("artifact a\n").is_err());
+    }
+
+    // Execution against real artifacts lives in
+    // rust/tests/integration_runtime.rs (requires `make artifacts`).
+}

@@ -1,0 +1,326 @@
+//! GPU + host RAM convolutional layers — §VII.A.
+//!
+//! A conv layer whose working set exceeds device RAM is decomposed into
+//! sub-layers over (batch × input-map × output-map) ranges; each
+//! sub-layer is a smaller conv layer run by a GPU-only primitive, with
+//! inputs streamed up from host RAM and results streamed back. The
+//! search over decompositions uses the paper's two pruning heuristics:
+//!
+//! 1. kernels ≤ 5³ consider only the dense (cuDNN) primitives, larger
+//!    kernels only the FFT primitive;
+//! 2. prefer sub-batch splits (`fᵢ = f`, `f'ᵢ = f'`, `Sᵢ ≤ S`) — each
+//!    input then moves to the device exactly once; only if no
+//!    sub-batch fits, fall back to `Sᵢ = 1` channel-block splits
+//!    (`fᵢ = f_α ≤ f`, `f'ᵢ = f'_α ≤ f'`), estimating time from the
+//!    distinct sub-shapes only.
+
+use crate::conv::{Activation, Weights};
+use crate::device::Device;
+use crate::layers::{ConvLayer, LayerPrimitive};
+use crate::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
+use crate::optimizer::CostModel;
+use crate::tensor::{Shape5, Tensor5};
+use crate::util::ceil_div;
+use crate::util::pool::TaskPool;
+
+/// One sub-layer: ranges into the batch and channel dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubPiece {
+    pub s0: usize,
+    pub s1: usize,
+    pub i0: usize,
+    pub i1: usize,
+    pub j0: usize,
+    pub j1: usize,
+}
+
+/// A decomposition of a conv layer into device-sized sub-layers.
+#[derive(Clone, Debug)]
+pub struct SubLayerPlan {
+    pub algo: ConvAlgo,
+    pub pieces: Vec<SubPiece>,
+    /// Estimated compute seconds (cost model, all pieces).
+    pub est_compute_secs: f64,
+    /// Modelled host↔device traffic for the whole layer.
+    pub transfer_bytes: u64,
+    /// Peak device memory of the largest piece.
+    pub gpu_mem: u64,
+}
+
+impl SubLayerPlan {
+    /// Estimated total seconds including modelled transfer time.
+    pub fn est_secs(&self, gpu: &Device) -> f64 {
+        self.est_compute_secs + gpu.transfer_secs(self.transfer_bytes)
+    }
+}
+
+/// Candidate GPU algorithms per the kernel-size heuristic.
+fn algo_candidates(k: [usize; 3]) -> Vec<ConvAlgo> {
+    if k[0] * k[1] * k[2] <= 125 {
+        vec![ConvAlgo::GpuDenseNoWorkspace, ConvAlgo::GpuDensePrecomp]
+    } else {
+        vec![ConvAlgo::GpuFft]
+    }
+}
+
+/// Transfer bytes of a piece: input slice up + output slice down (+
+/// kernels, negligible but counted).
+fn piece_transfer_bytes(d: &ConvDims, piece: &SubPiece) -> u64 {
+    let s = (piece.s1 - piece.s0) as u64;
+    let fi = (piece.i1 - piece.i0) as u64;
+    let fo = (piece.j1 - piece.j0) as u64;
+    let up = s * fi * d.n_elems() * 4 + fi * fo * (d.k[0] * d.k[1] * d.k[2]) as u64 * 4;
+    let down = s * fo * d.n_out_elems() * 4;
+    up + down
+}
+
+/// Find the best decomposition of layer `d` for device `gpu`, or None
+/// if even a 1×1×1-channel piece does not fit.
+pub fn decompose(d: &ConvDims, gpu: &Device, cost: &CostModel) -> Option<SubLayerPlan> {
+    let mut best: Option<SubLayerPlan> = None;
+    for algo in algo_candidates(d.k) {
+        // Heuristic 2a: largest sub-batch with full channels.
+        let mut chosen: Option<Vec<SubPiece>> = None;
+        for si in (1..=d.s).rev() {
+            let sub = ConvDims { s: si, ..*d };
+            if gpu.fits(conv_memory_bytes(algo, &sub, 1)) {
+                let mut pieces = Vec::new();
+                let mut s0 = 0;
+                while s0 < d.s {
+                    let s1 = (s0 + si).min(d.s);
+                    pieces.push(SubPiece { s0, s1, i0: 0, i1: d.f_in, j0: 0, j1: d.f_out });
+                    s0 = s1;
+                }
+                chosen = Some(pieces);
+                break;
+            }
+        }
+        // Heuristic 2b: S_i = 1 with channel blocks f_α × f'_α.
+        if chosen.is_none() {
+            let mut best_blocks: Option<(usize, usize, f64)> = None;
+            for fa in (1..=d.f_in).rev() {
+                for fpa in (1..=d.f_out).rev() {
+                    let sub = ConvDims { s: 1, f_in: fa, f_out: fpa, ..*d };
+                    if !gpu.fits(conv_memory_bytes(algo, &sub, 1)) {
+                        continue;
+                    }
+                    // #pieces × (compute + transfer) estimate; distinct
+                    // shapes only is implicit — all pieces share `sub`'s
+                    // shape modulo remainders.
+                    let npieces =
+                        (d.s * ceil_div(d.f_in, fa) * ceil_div(d.f_out, fpa)) as f64;
+                    let t = npieces
+                        * (cost.conv_secs(algo, &sub, gpu)
+                            + gpu.transfer_secs(piece_transfer_bytes(
+                                d,
+                                &SubPiece { s0: 0, s1: 1, i0: 0, i1: fa, j0: 0, j1: fpa },
+                            )));
+                    if best_blocks.map(|(_, _, bt)| t < bt).unwrap_or(true) {
+                        best_blocks = Some((fa, fpa, t));
+                    }
+                }
+            }
+            if let Some((fa, fpa, _)) = best_blocks {
+                let mut pieces = Vec::new();
+                for s in 0..d.s {
+                    let mut j0 = 0;
+                    while j0 < d.f_out {
+                        let j1 = (j0 + fpa).min(d.f_out);
+                        let mut i0 = 0;
+                        while i0 < d.f_in {
+                            let i1 = (i0 + fa).min(d.f_in);
+                            pieces.push(SubPiece { s0: s, s1: s + 1, i0, i1, j0, j1 });
+                            i0 = i1;
+                        }
+                        j0 = j1;
+                    }
+                }
+                chosen = Some(pieces);
+            }
+        }
+        let Some(pieces) = chosen else { continue };
+        // Cost the plan.
+        let mut compute = 0.0;
+        let mut transfer = 0u64;
+        let mut gpu_mem = 0u64;
+        for p in &pieces {
+            let sub = ConvDims {
+                s: p.s1 - p.s0,
+                f_in: p.i1 - p.i0,
+                f_out: p.j1 - p.j0,
+                n: d.n,
+                k: d.k,
+            };
+            compute += cost.conv_secs(algo, &sub, gpu);
+            transfer += piece_transfer_bytes(d, p);
+            gpu_mem = gpu_mem.max(conv_memory_bytes(algo, &sub, 1));
+        }
+        let plan = SubLayerPlan { algo, pieces, est_compute_secs: compute, transfer_bytes: transfer, gpu_mem };
+        if best
+            .as_ref()
+            .map(|b| plan.est_secs(gpu) < b.est_secs(gpu))
+            .unwrap_or(true)
+        {
+            best = Some(plan);
+        }
+    }
+    best
+}
+
+/// Execute a decomposed layer: pieces run on the (simulated) device,
+/// partial sums accumulate on the host, bias + activation applied once
+/// at the end. Returns the output and the bytes moved.
+pub fn execute(
+    input: &Tensor5,
+    w: &Weights,
+    plan: &SubLayerPlan,
+    act: Activation,
+    pool: &TaskPool,
+) -> (Tensor5, u64) {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in);
+    let osh = crate::conv::conv_out_shape(ish, w.f_out, w.k);
+    let mut out = Tensor5::zeros(osh);
+    let mut moved = 0u64;
+    let d = ConvDims { s: ish.s, f_in: w.f_in, f_out: w.f_out, n: ish.spatial(), k: w.k };
+    for p in &plan.pieces {
+        // Host→device: copy the input slice (the upload of Fig. 6).
+        let sub_ish = Shape5::from_spatial(p.s1 - p.s0, p.i1 - p.i0, ish.spatial());
+        let mut sub_in = Tensor5::zeros(sub_ish);
+        for (ss, s) in (p.s0..p.s1).enumerate() {
+            for (ii, i) in (p.i0..p.i1).enumerate() {
+                sub_in.image_mut(ss, ii).copy_from_slice(input.image(s, i));
+            }
+        }
+        // Sub-weights with zero bias — bias belongs to the final sum.
+        let mut sub_w = w.window(p.j0, p.j1 - p.j0, p.i0, p.i1 - p.i0);
+        for j in 0..sub_w.f_out {
+            sub_w.set_bias(j, 0.0);
+        }
+        let layer = ConvLayer::new(std::sync::Arc::new(sub_w), plan.algo, Activation::None);
+        let sub_out = layer.execute(sub_in, pool);
+        // Device→host: accumulate the partial result.
+        for (ss, s) in (p.s0..p.s1).enumerate() {
+            for (jj, j) in (p.j0..p.j1).enumerate() {
+                for (dst, src) in out.image_mut(s, j).iter_mut().zip(sub_out.image(ss, jj)) {
+                    *dst += *src;
+                }
+            }
+        }
+        moved += piece_transfer_bytes(&d, p);
+    }
+    for s in 0..osh.s {
+        for j in 0..w.f_out {
+            let b = w.bias(j);
+            for v in out.image_mut(s, j).iter_mut() {
+                *v = act.apply(*v + b);
+            }
+        }
+    }
+    (out, moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_layer_reference;
+    use crate::util::pool::ChipTopology;
+    use crate::util::quick::assert_allclose;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    fn dims() -> ConvDims {
+        ConvDims { s: 2, f_in: 4, f_out: 6, n: [8, 8, 8], k: [3, 3, 3] }
+    }
+
+    #[test]
+    fn whole_layer_fits_single_piece() {
+        let cm = CostModel::default_rates(2);
+        let plan = decompose(&dims(), &Device::titan_x(), &cm).unwrap();
+        assert_eq!(plan.pieces.len(), 1);
+        assert_eq!(plan.pieces[0], SubPiece { s0: 0, s1: 2, i0: 0, i1: 4, j0: 0, j1: 6 });
+    }
+
+    #[test]
+    fn tight_device_splits_batch_then_channels() {
+        let cm = CostModel::default_rates(2);
+        let d = dims();
+        // Budget that fits one batch entry but not two.
+        let one = conv_memory_bytes(ConvAlgo::GpuDensePrecomp, &ConvDims { s: 1, ..d }, 1);
+        let plan = decompose(&d, &Device::gpu_with_ram(one + 1024), &cm).unwrap();
+        assert!(plan.pieces.len() >= 2);
+        for p in &plan.pieces {
+            assert!(p.s1 - p.s0 <= 1 || (p.i1 - p.i0 == d.f_in && p.j1 - p.j0 == d.f_out));
+        }
+        // Channel-split fallback.
+        let tiny = conv_memory_bytes(
+            ConvAlgo::GpuDenseNoWorkspace,
+            &ConvDims { s: 1, f_in: 2, f_out: 2, ..d },
+            1,
+        );
+        let plan2 = decompose(&d, &Device::gpu_with_ram(tiny + 1024), &cm).unwrap();
+        assert!(plan2.pieces.len() > plan.pieces.len());
+        assert!(plan2.gpu_mem <= tiny + 1024);
+    }
+
+    #[test]
+    fn impossible_budget_returns_none() {
+        let cm = CostModel::default_rates(2);
+        assert!(decompose(&dims(), &Device::gpu_with_ram(1024), &cm).is_none());
+    }
+
+    #[test]
+    fn large_kernels_use_fft() {
+        let cm = CostModel::default_rates(2);
+        let d = ConvDims { k: [7, 7, 7], n: [12, 12, 12], ..dims() };
+        let plan = decompose(&d, &Device::titan_x(), &cm).unwrap();
+        assert_eq!(plan.algo, ConvAlgo::GpuFft);
+        let d_small = dims();
+        let plan2 = decompose(&d_small, &Device::titan_x(), &cm).unwrap();
+        assert!(matches!(
+            plan2.algo,
+            ConvAlgo::GpuDenseNoWorkspace | ConvAlgo::GpuDensePrecomp
+        ));
+    }
+
+    #[test]
+    fn execute_matches_reference_across_splits() {
+        let p = tpool();
+        let cm = CostModel::default_rates(2);
+        let d = dims();
+        let input = Tensor5::random(Shape5::from_spatial(d.s, d.f_in, d.n), 51);
+        let w = Weights::random(d.f_out, d.f_in, d.k, 52);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        for ram in [
+            Device::titan_x().ram_bytes,
+            conv_memory_bytes(ConvAlgo::GpuDensePrecomp, &ConvDims { s: 1, ..d }, 1) + 1024,
+            conv_memory_bytes(
+                ConvAlgo::GpuDenseNoWorkspace,
+                &ConvDims { s: 1, f_in: 2, f_out: 2, ..d },
+                1,
+            ) + 1024,
+        ] {
+            let gpu = Device::gpu_with_ram(ram);
+            let plan = decompose(&d, &gpu, &cm).unwrap();
+            let (out, moved) = execute(&input, &w, &plan, Activation::Relu, &p);
+            assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "sublayer exec");
+            assert_eq!(moved, plan.transfer_bytes);
+        }
+    }
+
+    #[test]
+    fn transfer_grows_with_splitting() {
+        let cm = CostModel::default_rates(2);
+        let d = dims();
+        let whole = decompose(&d, &Device::titan_x(), &cm).unwrap();
+        let tiny = conv_memory_bytes(
+            ConvAlgo::GpuDenseNoWorkspace,
+            &ConvDims { s: 1, f_in: 1, f_out: 1, ..d },
+            1,
+        );
+        let split = decompose(&d, &Device::gpu_with_ram(tiny + 1024), &cm).unwrap();
+        assert!(split.transfer_bytes > whole.transfer_bytes);
+    }
+}

@@ -1,0 +1,175 @@
+//! Minimal complex-f32 value type (no external num-complex dependency).
+
+use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A complex number with f32 parts. `#[repr(C)]` so slices of it can be
+/// reinterpreted as interleaved `[re, im]` f32 pairs for FFT I/O.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Complex32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex32 {
+    pub const ZERO: Complex32 = Complex32 { re: 0.0, im: 0.0 };
+    pub const ONE: Complex32 = Complex32 { re: 1.0, im: 0.0 };
+
+    #[inline(always)]
+    pub fn new(re: f32, im: f32) -> Self {
+        Complex32 { re, im }
+    }
+
+    /// e^{iθ}.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        Complex32 { re: theta.cos() as f32, im: theta.sin() as f32 }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        Complex32 { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline(always)]
+    pub fn abs(self) -> f32 {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline(always)]
+    pub fn scale(self, s: f32) -> Self {
+        Complex32 { re: self.re * s, im: self.im * s }
+    }
+
+    /// Fused multiply-accumulate: `self += a * b`. The hot op of the
+    /// FFT-conv point-wise stage (PARALLEL-MAD in Algorithm 2).
+    #[inline(always)]
+    pub fn mad(&mut self, a: Complex32, b: Complex32) {
+        self.re += a.re * b.re - a.im * b.im;
+        self.im += a.re * b.im + a.im * b.re;
+    }
+
+    /// Multiply by ±i without a full complex multiply.
+    #[inline(always)]
+    pub fn mul_i(self) -> Self {
+        Complex32 { re: -self.im, im: self.re }
+    }
+
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Self {
+        Complex32 { re: self.im, im: -self.re }
+    }
+}
+
+impl Add for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn add(self, o: Complex32) -> Complex32 {
+        Complex32 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn sub(self, o: Complex32) -> Complex32 {
+        Complex32 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn mul(self, o: Complex32) -> Complex32 {
+        Complex32 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Neg for Complex32 {
+    type Output = Complex32;
+    #[inline(always)]
+    fn neg(self) -> Complex32 {
+        Complex32 { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for Complex32 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: Complex32) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for Complex32 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: Complex32) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for Complex32 {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: Complex32) {
+        *self = *self * o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Complex32, b: Complex32) -> bool {
+        (a.re - b.re).abs() < 1e-6 && (a.im - b.im).abs() < 1e-6
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Complex32::new(1.0, 2.0);
+        let b = Complex32::new(3.0, -1.0);
+        assert!(close(a + b, Complex32::new(4.0, 1.0)));
+        assert!(close(a - b, Complex32::new(-2.0, 3.0)));
+        // (1+2i)(3-i) = 3 - i + 6i - 2i² = 5 + 5i
+        assert!(close(a * b, Complex32::new(5.0, 5.0)));
+    }
+
+    #[test]
+    fn mad_matches_mul_add() {
+        let mut acc = Complex32::new(0.5, -0.5);
+        let a = Complex32::new(1.5, 2.5);
+        let b = Complex32::new(-0.5, 1.0);
+        let expect = acc + a * b;
+        acc.mad(a, b);
+        assert!(close(acc, expect));
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        let z = Complex32::cis(std::f64::consts::FRAC_PI_2);
+        assert!(close(z, Complex32::new(0.0, 1.0)));
+        assert!((Complex32::cis(1.234).abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mul_i_identities() {
+        let a = Complex32::new(2.0, 3.0);
+        assert!(close(a.mul_i(), a * Complex32::new(0.0, 1.0)));
+        assert!(close(a.mul_neg_i(), a * Complex32::new(0.0, -1.0)));
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = Complex32::new(3.0, 4.0);
+        assert_eq!(a.abs(), 5.0);
+        assert!(close(a * a.conj(), Complex32::new(25.0, 0.0)));
+    }
+}

@@ -1,0 +1,17 @@
+//! 5D tensors (batch × feature-maps × x × y × z) in f32 and complex-f32.
+//!
+//! The paper treats a convolutional layer's input as a 5D tensor of size
+//! `S × f × n_x × n_y × n_z` (§IV); all layer primitives here operate on
+//! these types. Layout is row-major with **z contiguous** (the least
+//! significant dimension), matching the batched-FFT scheme of §III.C.
+//!
+//! Every allocation is registered with [`crate::memory`] so the Table II
+//! memory model can be validated against measured peaks.
+
+mod complex;
+mod shape;
+mod tensor5;
+
+pub use complex::Complex32;
+pub use shape::{Shape5, Vec3};
+pub use tensor5::{CTensor5, Tensor5};

@@ -1,0 +1,170 @@
+//! Shape types: 3D extents and the 5D `S × f × x × y × z` tensor shape.
+
+/// 3D extent (x, y, z).
+pub type Vec3 = [usize; 3];
+
+/// Element-wise ops on [`Vec3`] used by shape propagation (Table I).
+#[allow(dead_code)]
+pub trait Vec3Ext {
+    fn volume(&self) -> usize;
+    fn add(&self, o: Vec3) -> Vec3;
+    fn sub(&self, o: Vec3) -> Vec3;
+    fn div(&self, o: Vec3) -> Vec3;
+    fn mul(&self, o: Vec3) -> Vec3;
+    fn one() -> Vec3 {
+        [1, 1, 1]
+    }
+    fn splat(v: usize) -> Vec3 {
+        [v, v, v]
+    }
+    fn divisible_by(&self, o: Vec3) -> bool;
+}
+
+impl Vec3Ext for Vec3 {
+    fn volume(&self) -> usize {
+        self[0] * self[1] * self[2]
+    }
+    fn add(&self, o: Vec3) -> Vec3 {
+        [self[0] + o[0], self[1] + o[1], self[2] + o[2]]
+    }
+    fn sub(&self, o: Vec3) -> Vec3 {
+        [self[0] - o[0], self[1] - o[1], self[2] - o[2]]
+    }
+    fn div(&self, o: Vec3) -> Vec3 {
+        [self[0] / o[0], self[1] / o[1], self[2] / o[2]]
+    }
+    fn mul(&self, o: Vec3) -> Vec3 {
+        [self[0] * o[0], self[1] * o[1], self[2] * o[2]]
+    }
+    fn divisible_by(&self, o: Vec3) -> bool {
+        self[0] % o[0] == 0 && self[1] % o[1] == 0 && self[2] % o[2] == 0
+    }
+}
+
+/// Shape of a 5D tensor: batch `s`, feature maps `f`, spatial `x,y,z`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape5 {
+    pub s: usize,
+    pub f: usize,
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+}
+
+impl Shape5 {
+    pub fn new(s: usize, f: usize, x: usize, y: usize, z: usize) -> Self {
+        Shape5 { s, f, x, y, z }
+    }
+
+    pub fn from_spatial(s: usize, f: usize, n: Vec3) -> Self {
+        Shape5 { s, f, x: n[0], y: n[1], z: n[2] }
+    }
+
+    /// Spatial extent as a [`Vec3`].
+    pub fn spatial(&self) -> Vec3 {
+        [self.x, self.y, self.z]
+    }
+
+    /// Voxels in one image.
+    pub fn image_len(&self) -> usize {
+        self.x * self.y * self.z
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.s * self.f * self.image_len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat offset of element (s, f, x, y, z).
+    #[inline(always)]
+    pub fn idx(&self, s: usize, f: usize, x: usize, y: usize, z: usize) -> usize {
+        debug_assert!(s < self.s && f < self.f && x < self.x && y < self.y && z < self.z);
+        (((s * self.f + f) * self.x + x) * self.y + y) * self.z + z
+    }
+
+    /// Flat offset of the start of image (s, f).
+    #[inline(always)]
+    pub fn image_offset(&self, s: usize, f: usize) -> usize {
+        (s * self.f + f) * self.image_len()
+    }
+
+    /// Bytes for f32 storage.
+    pub fn bytes_f32(&self) -> u64 {
+        self.len() as u64 * 4
+    }
+
+    /// Bytes for complex-f32 storage.
+    pub fn bytes_c32(&self) -> u64 {
+        self.len() as u64 * 8
+    }
+}
+
+impl std::fmt::Display for Shape5 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}x{}x{}", self.s, self.f, self.x, self.y, self.z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_is_row_major_z_contiguous() {
+        let sh = Shape5::new(2, 3, 4, 5, 6);
+        assert_eq!(sh.idx(0, 0, 0, 0, 0), 0);
+        assert_eq!(sh.idx(0, 0, 0, 0, 1), 1);
+        assert_eq!(sh.idx(0, 0, 0, 1, 0), 6);
+        assert_eq!(sh.idx(0, 0, 1, 0, 0), 30);
+        assert_eq!(sh.idx(0, 1, 0, 0, 0), 120);
+        assert_eq!(sh.idx(1, 0, 0, 0, 0), 360);
+        assert_eq!(sh.len(), 720);
+    }
+
+    #[test]
+    fn idx_covers_all_without_collision() {
+        let sh = Shape5::new(2, 2, 3, 3, 3);
+        let mut seen = vec![false; sh.len()];
+        for s in 0..sh.s {
+            for f in 0..sh.f {
+                for x in 0..sh.x {
+                    for y in 0..sh.y {
+                        for z in 0..sh.z {
+                            let i = sh.idx(s, f, x, y, z);
+                            assert!(!seen[i]);
+                            seen[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn vec3_ops() {
+        let a: Vec3 = [6, 8, 10];
+        let b: Vec3 = [2, 4, 5];
+        assert_eq!(a.volume(), 480);
+        assert_eq!(a.add(b), [8, 12, 15]);
+        assert_eq!(a.sub(b), [4, 4, 5]);
+        assert_eq!(a.div(b), [3, 2, 2]);
+        assert_eq!(a.mul(b), [12, 32, 50]);
+        assert!(a.divisible_by(b));
+        assert!(!a.divisible_by([4, 4, 4]));
+    }
+
+    #[test]
+    fn image_offset_matches_idx() {
+        let sh = Shape5::new(3, 4, 2, 2, 2);
+        for s in 0..3 {
+            for f in 0..4 {
+                assert_eq!(sh.image_offset(s, f), sh.idx(s, f, 0, 0, 0));
+            }
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Owned 5D tensors with memory-ledger registration.
+
+use super::complex::Complex32;
+use super::shape::Shape5;
+use crate::memory;
+use crate::util::prng::Rng;
+
+/// Real f32 5D tensor. Allocation/deallocation is registered with the
+/// process memory ledger so Table II peaks can be measured.
+pub struct Tensor5 {
+    shape: Shape5,
+    data: Vec<f32>,
+}
+
+impl Tensor5 {
+    /// Zero-initialised tensor.
+    pub fn zeros(shape: Shape5) -> Self {
+        memory::alloc(shape.bytes_f32());
+        Tensor5 { shape, data: vec![0.0; shape.len()] }
+    }
+
+    /// Tensor filled with uniform random values in [-1, 1).
+    pub fn random(shape: Shape5, seed: u64) -> Self {
+        let mut t = Self::zeros(shape);
+        let mut rng = Rng::new(seed);
+        rng.fill_uniform(&mut t.data);
+        t
+    }
+
+    /// Build from existing data (length must match the shape).
+    pub fn from_vec(shape: Shape5, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.len(), "data length mismatch for {shape}");
+        memory::alloc(shape.bytes_f32());
+        Tensor5 { shape, data }
+    }
+
+    pub fn shape(&self) -> Shape5 {
+        self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One image (s, f) as a contiguous slice of `x*y*z` voxels.
+    pub fn image(&self, s: usize, f: usize) -> &[f32] {
+        let o = self.shape.image_offset(s, f);
+        &self.data[o..o + self.shape.image_len()]
+    }
+
+    pub fn image_mut(&mut self, s: usize, f: usize) -> &mut [f32] {
+        let o = self.shape.image_offset(s, f);
+        let l = self.shape.image_len();
+        &mut self.data[o..o + l]
+    }
+
+    #[inline(always)]
+    pub fn at(&self, s: usize, f: usize, x: usize, y: usize, z: usize) -> f32 {
+        self.data[self.shape.idx(s, f, x, y, z)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, s: usize, f: usize, x: usize, y: usize, z: usize, v: f32) {
+        let i = self.shape.idx(s, f, x, y, z);
+        self.data[i] = v;
+    }
+
+    /// Reinterpret the batch/feature dims: same data, new (s, f) split.
+    /// Used by MPF layers, which multiply the batch dimension (§V) — the
+    /// storage is identical, only the bookkeeping changes.
+    pub fn reshape_batch(mut self, s: usize, f: usize) -> Tensor5 {
+        assert_eq!(
+            s * f,
+            self.shape.s * self.shape.f,
+            "reshape_batch must preserve s*f ({}*{} -> {s}*{f})",
+            self.shape.s,
+            self.shape.f
+        );
+        self.shape = Shape5 { s, f, ..self.shape };
+        self
+    }
+
+    /// Max |a - b| against another tensor of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor5) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Apply ReLU in place (the paper's transfer function).
+    pub fn relu_inplace(&mut self) {
+        for v in self.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Deep copy.
+    pub fn clone_tensor(&self) -> Tensor5 {
+        Tensor5::from_vec(self.shape, self.data.clone())
+    }
+}
+
+impl Drop for Tensor5 {
+    fn drop(&mut self) {
+        memory::free(self.shape.bytes_f32());
+    }
+}
+
+impl std::fmt::Debug for Tensor5 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor5[{}]", self.shape)
+    }
+}
+
+/// Complex f32 5D tensor (FFT-domain images). The spatial shape is the
+/// *transformed* extent — e.g. `(x, y, z/2+1)` after a real-to-complex
+/// transform along z.
+pub struct CTensor5 {
+    shape: Shape5,
+    data: Vec<Complex32>,
+}
+
+impl CTensor5 {
+    pub fn zeros(shape: Shape5) -> Self {
+        memory::alloc(shape.bytes_c32());
+        CTensor5 { shape, data: vec![Complex32::ZERO; shape.len()] }
+    }
+
+    pub fn shape(&self) -> Shape5 {
+        self.shape
+    }
+
+    pub fn data(&self) -> &[Complex32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [Complex32] {
+        &mut self.data
+    }
+
+    pub fn image(&self, s: usize, f: usize) -> &[Complex32] {
+        let o = self.shape.image_offset(s, f);
+        &self.data[o..o + self.shape.image_len()]
+    }
+
+    pub fn image_mut(&mut self, s: usize, f: usize) -> &mut [Complex32] {
+        let o = self.shape.image_offset(s, f);
+        let l = self.shape.image_len();
+        &mut self.data[o..o + l]
+    }
+
+    /// Zero all elements (reuse without realloc).
+    pub fn clear(&mut self) {
+        self.data.fill(Complex32::ZERO);
+    }
+}
+
+impl Drop for CTensor5 {
+    fn drop(&mut self) {
+        memory::free(self.shape.bytes_c32());
+    }
+}
+
+impl std::fmt::Debug for CTensor5 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CTensor5[{}]", self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_set_get() {
+        let mut t = Tensor5::zeros(Shape5::new(1, 2, 3, 3, 3));
+        assert_eq!(t.at(0, 1, 2, 2, 2), 0.0);
+        t.set(0, 1, 2, 2, 2, 7.5);
+        assert_eq!(t.at(0, 1, 2, 2, 2), 7.5);
+    }
+
+    #[test]
+    fn memory_ledger_tracks_tensors() {
+        let base = memory::current();
+        {
+            let _t = Tensor5::zeros(Shape5::new(1, 1, 10, 10, 10));
+            assert_eq!(memory::current(), base + 4000);
+        }
+        assert_eq!(memory::current(), base);
+    }
+
+    #[test]
+    fn image_slice_is_contiguous() {
+        let sh = Shape5::new(2, 2, 2, 2, 2);
+        let mut t = Tensor5::zeros(sh);
+        t.set(1, 0, 0, 0, 0, 1.0);
+        t.set(1, 0, 1, 1, 1, 2.0);
+        let img = t.image(1, 0);
+        assert_eq!(img.len(), 8);
+        assert_eq!(img[0], 1.0);
+        assert_eq!(img[7], 2.0);
+    }
+
+    #[test]
+    fn reshape_batch_preserves_data() {
+        let sh = Shape5::new(1, 4, 2, 2, 2);
+        let t = Tensor5::random(sh, 1);
+        let before = t.data().to_vec();
+        let t = t.reshape_batch(2, 2);
+        assert_eq!(t.shape(), Shape5::new(2, 2, 2, 2, 2));
+        assert_eq!(t.data(), &before[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape_batch")]
+    fn reshape_batch_rejects_bad_split() {
+        let t = Tensor5::zeros(Shape5::new(1, 4, 2, 2, 2));
+        let _ = t.reshape_batch(3, 2);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut t = Tensor5::from_vec(
+            Shape5::new(1, 1, 1, 1, 4),
+            vec![-1.0, 2.0, -3.0, 0.5],
+        );
+        t.relu_inplace();
+        assert_eq!(t.data(), &[0.0, 2.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 42);
+        let b = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 42);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn ctensor_roundtrip() {
+        let mut c = CTensor5::zeros(Shape5::new(1, 1, 2, 2, 2));
+        c.data_mut()[3] = Complex32::new(1.0, -1.0);
+        assert_eq!(c.image(0, 0)[3], Complex32::new(1.0, -1.0));
+        c.clear();
+        assert_eq!(c.data()[3], Complex32::ZERO);
+    }
+}

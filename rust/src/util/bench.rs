@@ -1,0 +1,158 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warm-up + repeated timing with median/min/mean reporting and
+//! simple aligned-table printing used by every `rust/benches/*` target
+//! to regenerate the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub median: Duration,
+    pub min: Duration,
+    pub mean: Duration,
+    pub iters: usize,
+}
+
+impl Sample {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn time_n(warmup: usize, iters: usize, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    Sample { median, min, mean, iters: times.len() }
+}
+
+/// Adaptive timing: keep running until `budget` elapses (at least 3
+/// iterations), then report. Good for cases whose cost varies by 1000×
+/// across a parameter sweep.
+pub fn time_budget(budget: Duration, mut f: impl FnMut()) -> Sample {
+    // One calibration run.
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed();
+    let mut times = vec![first];
+    let deadline = Instant::now() + budget.saturating_sub(first);
+    while times.len() < 3 || (Instant::now() < deadline && times.len() < 1000) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if times.len() >= 3 && first > budget {
+            break; // huge case: 3 runs is all we afford
+        }
+    }
+    times.sort();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    Sample { median, min, mean, iters: times.len() }
+}
+
+/// Scale knob shared by the bench targets: `ZNNI_SCALE=paper` runs
+/// closer to the paper's sizes (slow), default `small` finishes in
+/// minutes on this testbed, `tiny` for CI smoke.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn from_env() -> Self {
+        match std::env::var("ZNNI_SCALE").as_deref() {
+            Ok("paper") => Scale::Paper,
+            Ok("tiny") => Scale::Tiny,
+            _ => Scale::Small,
+        }
+    }
+}
+
+/// Fixed-width table printer for bench output (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:width$} ", c, width = w[i]));
+            }
+            s.push('|');
+            s
+        };
+        println!("{}", line(&self.headers));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        println!("{}", line(&sep));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_n_counts_iters() {
+        let s = time_n(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median);
+    }
+
+    #[test]
+    fn time_budget_runs_at_least_three() {
+        let s = time_budget(Duration::from_millis(1), || {});
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // must not panic
+    }
+
+    #[test]
+    fn scale_default_small() {
+        std::env::remove_var("ZNNI_SCALE");
+        assert_eq!(Scale::from_env(), Scale::Small);
+    }
+}

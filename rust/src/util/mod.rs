@@ -1,0 +1,88 @@
+//! Shared infrastructure: PRNG, thread pool, magic-number division,
+//! a quickcheck-lite property-testing harness and a bench harness.
+//!
+//! The offline crate set contains only `xla` and `anyhow`, so rayon /
+//! tokio / criterion / proptest equivalents are provided here from
+//! scratch. This mirrors the paper's own approach: ZNNi implemented its
+//! task scheduling directly rather than relying on TBB's work stealing
+//! (§IV.A.3).
+
+pub mod bench;
+pub mod magic;
+pub mod pool;
+pub mod prng;
+pub mod quick;
+pub mod sendptr;
+
+pub use magic::MagicU64;
+pub use pool::{ChipTopology, TaskPool};
+pub use prng::Rng;
+
+/// Round `a` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(a: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    (a + m - 1) / m * m
+}
+
+/// Integer ceil division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Human-readable byte count (GiB/MiB/KiB).
+pub fn human_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= K * K * K {
+        format!("{:.2} GiB", b / (K * K * K))
+    } else if b >= K * K {
+        format!("{:.2} MiB", b / (K * K))
+    } else if b >= K {
+        format!("{:.2} KiB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Human-readable voxel throughput.
+pub fn human_throughput(voxels_per_sec: f64) -> String {
+    if voxels_per_sec >= 1e6 {
+        format!("{:.3} MVx/s", voxels_per_sec / 1e6)
+    } else if voxels_per_sec >= 1e3 {
+        format!("{:.2} kVx/s", voxels_per_sec / 1e3)
+    } else {
+        format!("{voxels_per_sec:.1} Vx/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+    }
+
+    #[test]
+    fn ceil_div_works() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert!(human_bytes(3 * 1024 * 1024).contains("MiB"));
+        assert!(human_bytes(5 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+}

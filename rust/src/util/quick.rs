@@ -1,0 +1,161 @@
+//! quickcheck-lite: property-based testing without external crates.
+//!
+//! A property is a closure over a [`Gen`]; the harness runs it for a
+//! configurable number of random cases with deterministic seeds and, on
+//! failure, reports the seed + case index so the exact case can be
+//! replayed (`ZNNI_QC_SEED`, `ZNNI_QC_CASES` override).
+
+use crate::util::prng::Rng;
+
+/// Per-case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    /// Random vec of f32 in [-1, 1).
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_uniform(&mut v);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f32) -> bool {
+        self.rng.f32() < p
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let cases = std::env::var("ZNNI_QC_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+        let seed = std::env::var("ZNNI_QC_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0x5EED_CAFE);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases; panics with the seed/case on
+/// the first failure (the property itself panics/asserts on violation).
+pub fn check_with(cfg: Config, name: &str, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = r {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay: ZNNI_QC_SEED={} ZNNI_QC_CASES={}): {msg}",
+                cfg.seed,
+                case + 1
+            );
+        }
+    }
+}
+
+/// Run with default config.
+pub fn check(name: &str, prop: impl FnMut(&mut Gen)) {
+    check_with(Config::default(), name, prop);
+}
+
+/// Assert two f32 slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    let mut worst = 0.0f32;
+    let mut worst_i = 0usize;
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let err = (x - y).abs();
+        let bound = atol + rtol * y.abs().max(x.abs());
+        let rel = if bound > 0.0 { err / bound } else { err };
+        if rel > worst {
+            worst = rel;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst <= 1.0,
+        "{what}: mismatch at index {worst_i}: {} vs {} (|d|={}, allowed atol={atol} rtol={rtol})",
+        a[worst_i],
+        b[worst_i],
+        (a[worst_i] - b[worst_i]).abs()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", |g| {
+            let a = g.f32(-10.0, 10.0);
+            let b = g.f32(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check_with(Config { cases: 3, seed: 1 }, "always fails", |_| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6, "eq");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[2.0], 1e-6, 1e-6, "far");
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("gen ranges", |g| {
+            let v = g.usize(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f32(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let xs = g.vec_f32(10);
+            assert_eq!(xs.len(), 10);
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! Raw-pointer wrapper for disjoint parallel writes.
+
+/// Wrapper that lets a raw mutable pointer cross closure boundaries into
+/// pool jobs. Safety contract: every job writes a disjoint index range.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor (rather than field access) so closures capture the
+    /// wrapper — which is Send/Sync — instead of the raw pointer.
+    #[inline(always)]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+
+    /// View `len` elements starting at `offset` as a mutable slice.
+    ///
+    /// # Safety
+    /// The range must be in bounds and not concurrently aliased.
+    #[inline(always)]
+    pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let pool = crate::util::pool::TaskPool::with_topology(
+            crate::util::pool::ChipTopology { chips: 1, cores_per_chip: 2 },
+        );
+        let mut v = vec![0u32; 100];
+        let p = SendPtr(v.as_mut_ptr());
+        pool.parallel_for(100, |i| unsafe {
+            *p.get().add(i) = i as u32;
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+}

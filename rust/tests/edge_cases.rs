@@ -1,0 +1,195 @@
+//! Edge cases and failure injection across the public API.
+
+use std::sync::Arc;
+
+use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::fft::fft3d::{Fft3, Fft3Scratch};
+use znni::fft::FftPlan;
+use znni::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
+use znni::memory::model::ConvAlgo;
+use znni::net::spec::{LayerSpec, NetSpec, PoolingMode};
+use znni::runtime::Manifest;
+use znni::tensor::{Complex32, Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::assert_allclose;
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+}
+
+#[test]
+fn fft_length_one() {
+    let plan = FftPlan::new(1);
+    let src = [Complex32::new(3.0, -2.0)];
+    let mut dst = [Complex32::ZERO];
+    plan.forward(&src, &mut dst);
+    assert_eq!(dst[0], src[0]);
+}
+
+#[test]
+fn fft3_degenerate_dims() {
+    // Plane (z extent 1) and line (y=z=1) volumes transform correctly.
+    let mut sc = Fft3Scratch::new();
+    for padded in [[4, 4, 1], [6, 1, 1], [1, 1, 8]] {
+        let plan = Fft3::new(padded);
+        let len = padded[0] * padded[1] * padded[2];
+        let img: Vec<f32> = (0..len).map(|i| i as f32 * 0.1 - 0.3).collect();
+        let mut freq = vec![Complex32::ZERO; plan.complex_len()];
+        plan.forward(&img, padded, &mut freq, &mut sc);
+        let mut back = vec![0.0f32; len];
+        plan.inverse_crop(&mut freq, [0, 0, 0], padded, &mut back, &mut sc);
+        assert_allclose(&back, &img, 1e-4, 1e-3, &format!("degenerate {padded:?}"));
+    }
+}
+
+#[test]
+fn conv_kernel_equals_image() {
+    // k == n gives a single output voxel per map.
+    let pool = tpool();
+    let input = Tensor5::random(Shape5::new(1, 2, 4, 4, 4), 1);
+    let w = Arc::new(Weights::random(3, 2, [4, 4, 4], 2));
+    let reference = conv_layer_reference(&input, &w, Activation::None);
+    assert_eq!(reference.shape(), Shape5::new(1, 3, 1, 1, 1));
+    for algo in ConvAlgo::ALL {
+        let out = ConvLayer::new(w.clone(), algo, Activation::None)
+            .execute(input.clone_tensor(), &pool);
+        assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, algo.name());
+    }
+}
+
+#[test]
+fn mpf_window_one_is_identity_batchwise() {
+    let pool = tpool();
+    let t = Tensor5::random(Shape5::new(2, 2, 3, 3, 3), 5);
+    let m = MpfLayer { window: [1, 1, 1], placement: Placement::Cpu };
+    assert!(m.accepts(t.shape()));
+    let out = m.execute(t.clone_tensor(), &pool);
+    assert_eq!(out.shape(), t.shape());
+    assert_eq!(out.data(), t.data());
+}
+
+#[test]
+fn anisotropic_mpf_net_roundtrip() {
+    // The paper's illustration: 2×1×1 pooling windows.
+    let net = NetSpec {
+        name: "aniso".into(),
+        f_in: 1,
+        layers: vec![
+            LayerSpec::Conv { f_out: 2, k: [2, 3, 3] },
+            LayerSpec::Pool { p: [2, 1, 1] },
+            LayerSpec::Conv { f_out: 1, k: [2, 2, 2] },
+        ],
+    };
+    let shapes = net
+        .shapes(Shape5::new(1, 1, 8, 8, 8), &[PoolingMode::Mpf])
+        .unwrap();
+    assert_eq!(shapes[1].s, 2); // two fragments from 2×1×1
+    let map = znni::inference::fragment_map(&net, &[PoolingMode::Mpf]).unwrap();
+    assert_eq!(map.offsets, vec![[0, 0, 0], [1, 0, 0]]);
+    assert_eq!(map.stride, [2, 1, 1]);
+}
+
+#[test]
+fn manifest_handles_empty_and_whitespace() {
+    let m = Manifest::parse("").unwrap();
+    assert!(m.entries.is_empty());
+    let m = Manifest::parse("\n\n  \n").unwrap();
+    assert!(m.entries.is_empty());
+}
+
+#[test]
+fn pipeline_empty_stream() {
+    let pool = tpool();
+    let pipe = znni::pipeline::Pipeline::split(vec![], 0);
+    let out = pipe.run_stream(vec![], &pool);
+    assert!(out.is_empty());
+}
+
+#[test]
+fn weights_zero_bias_default() {
+    let w = Weights::zeros(2, 2, [3, 3, 3]);
+    assert_eq!(w.bias(0), 0.0);
+    assert_eq!(w.raw().len(), 2 * 2 * 27);
+    assert!(w.raw().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn optimizer_single_extent_space() {
+    // min_extent == max_extent pins the search to one size.
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = znni::optimizer::CostModel::default_rates(2);
+    let mut space = znni::optimizer::SearchSpace::cpu_only(
+        znni::device::Device::host_with_ram(4 << 30),
+        13,
+    );
+    space.min_extent = 13;
+    let plan = znni::optimizer::search(&net, &space, &cm).unwrap();
+    assert_eq!(plan.input.x, 13);
+}
+
+#[test]
+fn coordinator_volume_equal_to_patch() {
+    // A volume exactly one patch big → a single patch, full cover.
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = znni::optimizer::CostModel::default_rates(2);
+    let mut space = znni::optimizer::SearchSpace::cpu_only(
+        znni::device::Device::host_with_ram(4 << 30),
+        15,
+    );
+    space.min_extent = 15;
+    let plan = znni::optimizer::search(&net, &space, &cm).unwrap();
+    let weights = znni::optimizer::make_weights(&net, 3);
+    let cp = znni::optimizer::compile(&net, &plan, &weights).unwrap();
+    let coord = znni::coordinator::Coordinator::new(net, cp).unwrap();
+    let vol = Tensor5::random(Shape5::new(1, 1, 15, 15, 15), 1);
+    let (resp, metrics) = coord
+        .serve(vec![znni::coordinator::InferenceRequest { id: 0, volume: vol }], &pool)
+        .unwrap();
+    assert_eq!(metrics.patches, 1);
+    let osh = resp[0].output.shape();
+    let fov = coord.net.field_of_view();
+    assert_eq!(osh.x, 15 - fov[0] + 1);
+}
+
+#[test]
+fn sublayer_single_channel_pieces() {
+    // Extreme split: 1×1 channel pieces still sum to the right answer.
+    let pool = tpool();
+    let cm = znni::optimizer::CostModel::default_rates(2);
+    let d = znni::memory::model::ConvDims {
+        s: 1,
+        f_in: 3,
+        f_out: 3,
+        n: [6, 6, 6],
+        k: [3, 3, 3],
+    };
+    let tiny = znni::memory::model::conv_memory_bytes(
+        ConvAlgo::GpuDenseNoWorkspace,
+        &znni::memory::model::ConvDims { f_in: 1, f_out: 1, ..d },
+        1,
+    );
+    let gpu = znni::device::Device::gpu_with_ram(tiny + 512);
+    let plan = znni::sublayer::decompose(&d, &gpu, &cm).unwrap();
+    // The search may pick any feasible block shape; it must split and
+    // must respect the device budget.
+    assert!(plan.pieces.len() > 1);
+    assert!(plan.gpu_mem <= gpu.ram_bytes);
+    let input = Tensor5::random(Shape5::from_spatial(1, 3, [6, 6, 6]), 7);
+    let w = Weights::random(3, 3, [3, 3, 3], 8);
+    let expect = conv_layer_reference(&input, &w, Activation::Relu);
+    let (out, _) = znni::sublayer::execute(&input, &w, &plan, Activation::Relu, &pool);
+    assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "1x1 pieces");
+}
+
+#[test]
+fn net_rejects_zero_layer_parse() {
+    assert!(NetSpec::parse("input 1\n").is_err());
+}
+
+#[test]
+fn theory_series_empty_when_no_valid_extent() {
+    let net = znni::net::zoo::tiny_net(2);
+    let s = znni::optimizer::theory::speedup_series(&net, &[1], 5, 4);
+    assert!(s[0].points.is_empty()); // FoV is 12; nothing valid ≤ 5
+}

@@ -1,0 +1,105 @@
+//! End-to-end: the four Table III architectures run through optimizer
+//! plans and produce consistent results across primitive choices.
+
+use std::sync::Arc;
+
+use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::device::Device;
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::{benchmark_nets, NetScale};
+use znni::net::PoolingMode;
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::assert_allclose;
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+#[test]
+fn all_benchmark_nets_execute_at_tiny_scale() {
+    let pool = tpool();
+    let cm = CostModel::default_rates(pool.workers());
+    for net in benchmark_nets(NetScale::Tiny) {
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let min = net.min_extent(&modes).unwrap();
+        let mut space = SearchSpace::cpu_only(Device::host_with_ram(8 << 30), min + 16);
+        space.min_extent = min;
+        space.max_candidates = 1;
+        let plan = search(&net, &space, &cm)
+            .unwrap_or_else(|| panic!("{}: no feasible plan", net.name));
+        let weights = make_weights(&net, 7);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let input = Tensor5::random(plan.input, 3);
+        let out = cp.run(input, &pool);
+        assert_eq!(out.shape(), *plan.shapes.last().unwrap(), "{}", net.name);
+        // The final conv layer has 3 output maps (affinity graph).
+        assert_eq!(out.shape().f, 3, "{}", net.name);
+        // MPF layers multiplied the batch by 8 per pool layer.
+        assert_eq!(out.shape().s, 8usize.pow(net.pool_count() as u32), "{}", net.name);
+    }
+}
+
+#[test]
+fn every_conv_algo_agrees_on_a_net337_layer() {
+    // Layer 3 of n337 at tiny scale: f = f' = 4, k = 3³.
+    let pool = tpool();
+    let w = Arc::new(Weights::random(4, 4, [3, 3, 3], 13));
+    let input = Tensor5::random(Shape5::new(2, 4, 9, 9, 9), 17);
+    let reference = conv_layer_reference(&input, &w, Activation::Relu);
+    for algo in ConvAlgo::ALL {
+        let layer = ConvLayer::new(w.clone(), algo, Activation::Relu);
+        let out = layer.execute(input.clone_tensor(), &pool);
+        assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, algo.name());
+    }
+}
+
+#[test]
+fn relu_applied_after_every_conv_layer() {
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(4);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(8 << 30), 13);
+    space.max_candidates = 1;
+    let plan = search(&net, &space, &cm).unwrap();
+    let weights = make_weights(&net, 3);
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let out = cp.run(Tensor5::random(plan.input, 5), &pool);
+    assert!(out.data().iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn batch_concatenation_property_whole_net() {
+    // §VII.B: net(concat(a, b)) == concat(net(a), net(b)).
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(8 << 30), 13);
+    space.max_candidates = 1;
+    space.batch_sizes = vec![2];
+    let plan = search(&net, &space, &cm).unwrap();
+    assert_eq!(plan.input.s, 2);
+    let weights = make_weights(&net, 9);
+    let cp = compile(&net, &plan, &weights).unwrap();
+
+    let a = Tensor5::random(Shape5 { s: 1, ..plan.input }, 100);
+    let b = Tensor5::random(Shape5 { s: 1, ..plan.input }, 200);
+    let mut cat = Tensor5::zeros(plan.input);
+    cat.data_mut()[..a.data().len()].copy_from_slice(a.data());
+    cat.data_mut()[a.data().len()..].copy_from_slice(b.data());
+
+    let out_cat = cp.run(cat, &pool);
+
+    let mut space1 = space.clone();
+    space1.batch_sizes = vec![1];
+    let plan1 = search(&net, &space1, &cm).unwrap();
+    let cp1 = compile(&net, &plan1, &weights).unwrap();
+    let oa = cp1.run(a, &pool);
+    let ob = cp1.run(b, &pool);
+
+    let half = out_cat.data().len() / 2;
+    assert_allclose(&out_cat.data()[..half], oa.data(), 1e-3, 1e-2, "first half");
+    assert_allclose(&out_cat.data()[half..], ob.data(), 1e-3, 1e-2, "second half");
+}

@@ -1,0 +1,107 @@
+//! Optimizer behaviour across devices and memory budgets — the
+//! structural findings of §VI (Table IV) and §II.
+
+use znni::device::Device;
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::{benchmark_nets, n537, NetScale};
+use znni::net::PoolingMode;
+use znni::optimizer::{search, CostModel, PlanLayer, SearchSpace};
+
+#[test]
+fn mpf_beats_maxpool_when_both_allowed() {
+    // §VI.B: the highest throughput always uses MPF for every pooling
+    // layer. Let the search choose freely and check it picks MPF.
+    let cm = CostModel::default_rates(4);
+    for net in benchmark_nets(NetScale::Tiny) {
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let min = net.min_extent(&modes).unwrap();
+        let mut space = SearchSpace::cpu_only(Device::host_with_ram(8 << 30), min + 24);
+        space.allow_maxpool = true;
+        space.max_candidates = 4;
+        let plan = search(&net, &space, &cm).unwrap();
+        for l in &plan.layers {
+            if let PlanLayer::Pool { mode } = l {
+                assert_eq!(*mode, PoolingMode::Mpf, "{}", net.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn throughput_grows_with_memory_budget() {
+    // §II / Fig 7: more RAM → larger inputs → higher estimated
+    // throughput (never lower).
+    let cm = CostModel::default_rates(4);
+    let net = n537(NetScale::Tiny);
+    let min = net.min_extent(&vec![PoolingMode::Mpf; net.pool_count()]).unwrap();
+    let mut last = 0.0;
+    for gb in [1u64, 2, 8] {
+        let mut space = SearchSpace::cpu_only(Device::host_with_ram(gb << 30), min + 48);
+        space.max_candidates = 30;
+        if let Some(plan) = search(&net, &space, &cm) {
+            assert!(
+                plan.est_throughput() >= last,
+                "throughput regressed at {gb} GiB"
+            );
+            last = plan.est_throughput();
+        }
+    }
+    assert!(last > 0.0);
+}
+
+#[test]
+fn gpu_plans_respect_device_ram() {
+    let cm = CostModel::default_rates(4);
+    for net in benchmark_nets(NetScale::Small) {
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let min = net.min_extent(&modes).unwrap();
+        let mut space = SearchSpace::gpu_only(Device::titan_x(), min + 16);
+        space.max_candidates = 6;
+        if let Some(plan) = search(&net, &space, &cm) {
+            assert!(plan.est_memory <= Device::titan_x().ram_bytes, "{}", net.name);
+            for l in &plan.layers {
+                if let PlanLayer::Conv { algo } = l {
+                    assert!(algo.is_gpu(), "{}", net.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn memory_frontier_prefers_lean_primitive() {
+    // Table IV's observation at the first layer: under a budget where
+    // the leaner primitive allows a larger input, the optimizer must
+    // not pick a plan that a leaner-primitive plan strictly dominates.
+    // We check the mechanism: restricting to the lean dense primitive
+    // can never achieve a *larger* best input than the full space.
+    let cm = CostModel::default_rates(4);
+    let net = n537(NetScale::Tiny);
+    let min = net.min_extent(&vec![PoolingMode::Mpf; net.pool_count()]).unwrap();
+    let budget = Device::gpu_with_ram(2 << 30);
+    let mut full = SearchSpace::gpu_only(budget.clone(), min + 32);
+    full.max_candidates = 30;
+    let plan_full = search(&net, &full, &cm).unwrap();
+    let mut lean = full.clone();
+    lean.algos = vec![ConvAlgo::GpuDenseNoWorkspace];
+    let plan_lean = search(&net, &lean, &cm).unwrap();
+    assert!(plan_full.input.x >= plan_lean.input.x);
+    // And the lean-only plan fits strictly less memory per layer.
+    assert!(plan_lean.est_memory <= plan_full.est_memory);
+}
+
+#[test]
+fn batch_one_wins_for_multi_pool_nets() {
+    // §VI.A: for ≥2-pool networks under a memory cap, S = 1 maximises
+    // estimated throughput.
+    let cm = CostModel::default_rates(4);
+    let net = n537(NetScale::Tiny); // 3 pooling layers
+    // Budget chosen so memory BINDS: larger batches can only afford
+    // smaller inputs (or nothing at all) — the §II trade-off.
+    let min = net.min_extent(&vec![PoolingMode::Mpf; net.pool_count()]).unwrap();
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(512 << 20), min + 40);
+    space.batch_sizes = vec![1, 2, 4];
+    space.max_candidates = 20;
+    let plan = search(&net, &space, &cm).unwrap();
+    assert_eq!(plan.input.s, 1);
+}

@@ -1,0 +1,95 @@
+//! §VII end-to-end: GPU + host RAM sub-layer execution and the CPU–GPU
+//! pipeline produce the same numbers as plain execution.
+
+use std::sync::Arc;
+
+use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::device::Device;
+use znni::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
+use znni::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
+use znni::optimizer::CostModel;
+use znni::pipeline::{best_theta, Pipeline};
+use znni::sublayer::{decompose, execute};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::assert_allclose;
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+#[test]
+fn gpu_host_ram_layer_equals_plain_layer_under_pressure() {
+    // A layer 4× too big for the device must still compute exactly.
+    let pool = tpool();
+    let cm = CostModel::default_rates(pool.workers());
+    let d = ConvDims { s: 1, f_in: 6, f_out: 8, n: [10, 10, 10], k: [3, 3, 3] };
+    let whole = conv_memory_bytes(ConvAlgo::GpuDensePrecomp, &d, 1);
+    let gpu = Device::gpu_with_ram(whole / 4);
+    let plan = decompose(&d, &gpu, &cm).expect("feasible decomposition");
+    assert!(plan.pieces.len() > 1);
+    assert!(plan.gpu_mem <= gpu.ram_bytes);
+
+    let input = Tensor5::random(Shape5::from_spatial(d.s, d.f_in, d.n), 5);
+    let w = Weights::random(d.f_out, d.f_in, d.k, 6);
+    let expect = conv_layer_reference(&input, &w, Activation::Relu);
+    let (out, moved) = execute(&input, &w, &plan, Activation::Relu, &pool);
+    assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "gpu+host layer");
+    assert!(moved > input.shape().bytes_f32(), "must have streamed data");
+}
+
+fn stack(seed: u64) -> Vec<Box<dyn LayerPrimitive>> {
+    vec![
+        Box::new(ConvLayer::new(
+            Arc::new(Weights::random(3, 1, [3, 3, 3], seed)),
+            ConvAlgo::FftDataParallel,
+            Activation::Relu,
+        )),
+        Box::new(MpfLayer { window: [2, 2, 2], placement: Placement::Cpu }),
+        Box::new(ConvLayer::new(
+            Arc::new(Weights::random(3, 3, [3, 3, 3], seed + 1)),
+            ConvAlgo::GpuFft,
+            Activation::Relu,
+        )),
+        Box::new(ConvLayer::new(
+            Arc::new(Weights::random(2, 3, [2, 2, 2], seed + 2)),
+            ConvAlgo::GpuDensePrecomp,
+            Activation::Relu,
+        )),
+    ]
+}
+
+#[test]
+fn pipeline_stream_equals_sequential_for_every_theta() {
+    let pool = tpool();
+    for theta in 0..=4 {
+        let pipe = Pipeline::split(stack(40), theta);
+        let reference = Pipeline::split(stack(40), 0);
+        let inputs: Vec<Tensor5> =
+            (0..3).map(|i| Tensor5::random(Shape5::new(1, 1, 15, 15, 15), 60 + i)).collect();
+        let inputs2: Vec<Tensor5> =
+            (0..3).map(|i| Tensor5::random(Shape5::new(1, 1, 15, 15, 15), 60 + i)).collect();
+        let got = pipe.run_stream(inputs, &pool);
+        let want = reference.run_sequential(inputs2, &pool);
+        for (g, w) in got.iter().zip(&want) {
+            assert_allclose(g.data(), w.data(), 1e-3, 1e-2, &format!("theta={theta}"));
+        }
+    }
+}
+
+#[test]
+fn theta_choice_is_consistent_with_costs() {
+    // Build per-layer cost estimates and verify the chosen split is a
+    // genuine argmin of max(head, tail).
+    let cpu = [0.4, 1.0, 2.0, 2.0];
+    let gpu = [0.2, 0.3, 0.9, 0.8];
+    let theta = best_theta(&cpu, &gpu);
+    let period = |t: usize| -> f64 {
+        let h: f64 = cpu[..t].iter().sum();
+        let g: f64 = gpu[t..].iter().sum();
+        h.max(g)
+    };
+    for t in 0..=4 {
+        assert!(period(theta) <= period(t) + 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Three-layer round trip: the JAX/Pallas artifacts (Layer 1–2) loaded
+//! through PJRT must agree numerically with the native Rust primitives
+//! (Layer 3) on identical weights. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use znni::conv::{Activation, Weights};
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::ConvAlgo;
+use znni::net::PoolingMode;
+use znni::optimizer::{compile, make_weights, Plan, PlanLayer};
+use znni::runtime::Runtime;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::assert_allclose;
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+}
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn conv_probe_artifact_matches_native_conv() {
+    let Some(rt) = runtime() else { return };
+    let pool = tpool();
+    // conv_probe: input (1,1,12,12,12), w (8,1,2,2,2), b (8).
+    let input = Tensor5::random(Shape5::new(1, 1, 12, 12, 12), 71);
+    let w = Weights::random(8, 1, [2, 2, 2], 72);
+    let got = rt
+        .execute_tensor("conv_probe", &input, &[w.raw(), w.raw_bias()])
+        .expect("artifact executes");
+    let layer = ConvLayer::new(Arc::new(w), ConvAlgo::DirectNaive, Activation::Relu);
+    let want = layer.execute(input, &pool);
+    assert_eq!(got.shape(), want.shape());
+    assert_allclose(got.data(), want.data(), 1e-4, 1e-3, "pallas artifact == native");
+}
+
+#[test]
+fn tiny_net_artifact_matches_compiled_plan() {
+    let Some(rt) = runtime() else { return };
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(4);
+    let weights = make_weights(&net, 73);
+    let input = Tensor5::random(Shape5::new(1, 1, 13, 13, 13), 74);
+
+    // PJRT path: x, w1, b1, w2, b2, w3, b3.
+    let bufs: Vec<&[f32]> = weights
+        .iter()
+        .flat_map(|w| [w.raw(), w.raw_bias()])
+        .collect();
+    let got = rt.execute_tensor("tiny_net13", &input, &bufs).expect("net artifact executes");
+
+    // Native path: same weights through the layer primitives.
+    let modes = vec![PoolingMode::Mpf];
+    let shapes = net.shapes(input.shape(), &modes).unwrap();
+    let out = *shapes.last().unwrap();
+    let plan = Plan {
+        net_name: net.name.clone(),
+        input: input.shape(),
+        layers: vec![
+            PlanLayer::Conv { algo: ConvAlgo::FftTaskParallel },
+            PlanLayer::Pool { mode: PoolingMode::Mpf },
+            PlanLayer::Conv { algo: ConvAlgo::DirectMkl },
+            PlanLayer::Conv { algo: ConvAlgo::GpuFft },
+        ],
+        shapes,
+        est_secs: 1.0,
+        est_memory: 0,
+        out_voxels: (out.s * out.x * out.y * out.z) as u64,
+    };
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let want = cp.run(input, &pool);
+    assert_eq!(got.shape(), want.shape());
+    assert_allclose(got.data(), want.data(), 1e-3, 1e-2, "whole-net artifact == native");
+}
+
+#[test]
+fn artifact_arg_validation() {
+    let Some(rt) = runtime() else { return };
+    let input = Tensor5::random(Shape5::new(1, 1, 12, 12, 12), 75);
+    // Wrong arg count.
+    assert!(rt.execute("conv_probe", &[input.data()]).is_err());
+    // Unknown artifact.
+    assert!(rt.execute("nope", &[]).is_err());
+    // Wrong shape.
+    let w = vec![0.0f32; 7];
+    let b = vec![0.0f32; 8];
+    assert!(rt.execute("conv_probe", &[input.data(), &w, &b]).is_err());
+}

@@ -1,0 +1,114 @@
+//! The paper's core semantic claim (§II, §V): an MPF network plus
+//! fragment recombination computes exactly the dense sliding-window
+//! output — including across patch boundaries and for 2-pool nets.
+
+use znni::inference::{dense_reference, fragment_map, infer_volume, recombine};
+use znni::memory::model::ConvAlgo;
+use znni::net::spec::{LayerSpec, NetSpec, PoolingMode};
+use znni::optimizer::{compile, make_weights, Plan, PlanLayer};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::assert_allclose;
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+fn manual_plan(net: &NetSpec, input: Shape5, modes: &[PoolingMode], algo: ConvAlgo) -> Plan {
+    let shapes = net.shapes(input, modes).unwrap();
+    let mut mi = 0;
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            LayerSpec::Conv { .. } => PlanLayer::Conv { algo },
+            LayerSpec::Pool { .. } => {
+                let m = modes[mi];
+                mi += 1;
+                PlanLayer::Pool { mode: m }
+            }
+        })
+        .collect();
+    let out = *shapes.last().unwrap();
+    Plan {
+        net_name: net.name.clone(),
+        input,
+        layers,
+        shapes,
+        est_secs: 1.0,
+        est_memory: 0,
+        out_voxels: (out.s * out.x * out.y * out.z) as u64,
+    }
+}
+
+/// 2-pool net (like n726's topology, tiny): C3 P2 C3 P2 C2.
+fn two_pool_net() -> NetSpec {
+    NetSpec {
+        name: "it-2pool".into(),
+        f_in: 1,
+        layers: vec![
+            LayerSpec::Conv { f_out: 3, k: [3, 3, 3] },
+            LayerSpec::Pool { p: [2, 2, 2] },
+            LayerSpec::Conv { f_out: 3, k: [3, 3, 3] },
+            LayerSpec::Pool { p: [2, 2, 2] },
+            LayerSpec::Conv { f_out: 2, k: [2, 2, 2] },
+        ],
+    }
+}
+
+#[test]
+fn two_pool_mpf_equals_dense_sliding_window() {
+    let pool = tpool();
+    let net = two_pool_net();
+    let weights = make_weights(&net, 55);
+    let fov = net.field_of_view();
+    let modes = vec![PoolingMode::Mpf; 2];
+
+    // Smallest valid MPF input with ≥2 windows of dense output.
+    let n = net
+        .valid_extents(fov[0] + 1, fov[0] + 16, &modes)
+        .first()
+        .copied()
+        .expect("valid extent");
+    let volume = Tensor5::random(Shape5::new(1, 1, n, n, n), 321);
+
+    let plan = manual_plan(&net, volume.shape(), &modes, ConvAlgo::FftTaskParallel);
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let raw = cp.run(volume.clone_tensor(), &pool);
+    let map = fragment_map(&net, &modes).unwrap();
+    assert_eq!(map.offsets.len(), 64); // 8 × 8 fragments
+    let dense = recombine(&raw, 1, &map);
+
+    let mp = vec![PoolingMode::MaxPool; 2];
+    let wplan = manual_plan(&net, Shape5::from_spatial(1, 1, fov), &mp, ConvAlgo::DirectMkl);
+    let wcp = compile(&net, &wplan, &weights).unwrap();
+    let runner = |t: Tensor5| wcp.run(t, &pool);
+    let expect = dense_reference(&net, &runner, &volume);
+
+    assert_allclose(dense.data(), expect.data(), 1e-3, 1e-2, "2-pool MPF == dense");
+}
+
+#[test]
+fn patched_inference_equals_single_patch_all_algos() {
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let weights = make_weights(&net, 77);
+    let fov = net.field_of_view();
+    let modes = vec![PoolingMode::Mpf];
+    let map = fragment_map(&net, &modes).unwrap();
+    let volume = Tensor5::random(Shape5::new(1, 1, 19, 19, 19), 88);
+
+    let mut results = Vec::new();
+    for algo in [ConvAlgo::DirectNaive, ConvAlgo::FftDataParallel, ConvAlgo::GpuFft] {
+        let run_patch = |patch: Tensor5| {
+            let plan = manual_plan(&net, patch.shape(), &modes, algo);
+            let cp = compile(&net, &plan, &weights).unwrap();
+            recombine(&cp.run(patch, &pool), 1, &map)
+        };
+        let out = infer_volume(&volume, fov, [15, 15, 15], 2, &run_patch).unwrap();
+        results.push(out);
+    }
+    for r in &results[1..] {
+        assert_allclose(r.data(), results[0].data(), 1e-3, 1e-2, "algo-independent volume");
+    }
+}

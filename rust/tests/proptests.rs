@@ -1,0 +1,135 @@
+//! Cross-module property tests: random nets, shapes and inputs.
+
+use std::sync::Arc;
+
+use znni::baselines::{run_baseline, Baseline};
+use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
+use znni::net::spec::{LayerSpec, NetSpec, PoolingMode};
+use znni::optimizer::make_weights;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::{assert_allclose, check_with, Config};
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+#[test]
+fn prop_all_conv_algorithms_agree() {
+    let pool = tpool();
+    check_with(Config { cases: 8, ..Default::default() }, "conv algos agree", |g| {
+        let s = g.usize(1, 2);
+        let fi = g.usize(1, 4);
+        let fo = g.usize(1, 4);
+        let k = [g.usize(1, 3), g.usize(1, 3), g.usize(1, 3)];
+        let n = [k[0] + g.usize(0, 5), k[1] + g.usize(0, 5), k[2] + g.usize(0, 5)];
+        let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64);
+        let w = Arc::new(Weights::random(fo, fi, k, g.case as u64 + 1000));
+        let reference = conv_layer_reference(&input, &w, Activation::Relu);
+        for algo in ConvAlgo::ALL {
+            let out = ConvLayer::new(w.clone(), algo, Activation::Relu)
+                .execute(input.clone_tensor(), &pool);
+            assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, algo.name());
+        }
+    });
+}
+
+#[test]
+fn prop_memory_model_upper_bounds_measured() {
+    // Table II must upper-bound the peak tensor bytes each primitive
+    // actually touches (serial execution so the global ledger is ours).
+    let pool = TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 1 });
+    check_with(Config { cases: 6, ..Default::default() }, "memory model bound", |g| {
+        let s = g.usize(1, 2);
+        let fi = g.usize(1, 3);
+        let fo = g.usize(1, 3);
+        let k = [g.usize(1, 3), g.usize(1, 3), g.usize(1, 3)];
+        let n = [k[0] + g.usize(2, 6), k[1] + g.usize(2, 6), k[2] + g.usize(2, 6)];
+        let d = ConvDims { s, f_in: fi, f_out: fo, n, k };
+        for algo in [
+            ConvAlgo::DirectNaive,
+            ConvAlgo::DirectMkl,
+            ConvAlgo::FftDataParallel,
+            ConvAlgo::FftTaskParallel,
+            ConvAlgo::GpuFft,
+        ] {
+            let w = Arc::new(Weights::random(fo, fi, k, g.case as u64));
+            let layer = ConvLayer::new(w, algo, Activation::Relu);
+            let model = conv_memory_bytes(algo, &d, pool.workers())
+                + znni::memory::model::GPU_FFT_K_BYTES;
+            let input = Tensor5::random(Shape5::from_spatial(s, fi, n), 3);
+            let in_bytes = input.shape().bytes_f32();
+            let (_o, peak) = znni::memory::measure(|| layer.execute(input, &pool));
+            assert!(
+                peak + in_bytes <= model,
+                "{algo:?}: measured {} > model {model} (dims {d:?})",
+                peak + in_bytes
+            );
+        }
+    });
+}
+
+/// Random small all-MPF nets: every baseline and the MPF pipeline must
+/// compute the same dense output.
+#[test]
+fn prop_random_nets_baselines_agree() {
+    let pool = tpool();
+    check_with(Config { cases: 4, ..Default::default() }, "random net baselines", |g| {
+        // Random CP(C)(P)C net with small maps.
+        let mut layers = vec![LayerSpec::Conv {
+            f_out: g.usize(1, 3),
+            k: [g.usize(1, 3); 3],
+        }];
+        layers.push(LayerSpec::Pool { p: [2, 2, 2] });
+        if g.bool(0.5) {
+            layers.push(LayerSpec::Conv { f_out: g.usize(1, 3), k: [2; 3] });
+        }
+        let last_f = g.usize(1, 2);
+        layers.push(LayerSpec::Conv { f_out: last_f, k: [g.usize(1, 2); 3] });
+        let net = NetSpec { name: format!("rand{}", g.case), f_in: 1, layers };
+        let weights = make_weights(&net, g.case as u64 + 9);
+
+        let fov = net.field_of_view();
+        // Pick a valid extent a bit above the FoV that the max-pool
+        // (subsampling) path also accepts in all offsets.
+        let modes = vec![PoolingMode::Mpf; net.pool_count()];
+        let Some(n) = net
+            .valid_extents(fov[0], fov[0] + 8, &modes)
+            .first()
+            .copied()
+        else {
+            return; // no valid extent in range; skip this case
+        };
+        let input = Tensor5::random(Shape5::new(1, 1, n, n, n), g.case as u64 + 77);
+
+        let reference = run_baseline(Baseline::NaiveCudnn, &net, &weights, &input, &pool).unwrap();
+        for b in [Baseline::CaffeStrided, Baseline::Elektronn, Baseline::Znn] {
+            let out = run_baseline(b, &net, &weights, &input, &pool).unwrap();
+            assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, b.name());
+        }
+    });
+}
+
+#[test]
+fn prop_mpf_then_recombine_is_lossless_permutation() {
+    // Recombination of MPF fragments of the *identity* net (no convs
+    // after pooling) is max-filtering: out[u] = max over window at u.
+    let pool = tpool();
+    check_with(Config { cases: 8, ..Default::default() }, "mpf ~ max filter", |g| {
+        let t = g.usize(1, 3);
+        let n = 2 * t + 1;
+        let input = Tensor5::random(Shape5::new(1, 1, n, n, n), g.case as u64);
+        let frags = znni::pool::mpf_forward(&input, [2, 2, 2], &pool);
+        let net = NetSpec {
+            name: "mpf-only".into(),
+            f_in: 1,
+            layers: vec![LayerSpec::Pool { p: [2, 2, 2] }],
+        };
+        let map = znni::inference::fragment_map(&net, &[PoolingMode::Mpf]).unwrap();
+        let dense = znni::inference::recombine(&frags, 1, &map);
+        let expect = znni::baselines::max_filter(&input, [2, 2, 2], &pool);
+        assert_allclose(dense.data(), expect.data(), 0.0, 0.0, "mpf == max filter");
+    });
+}
