@@ -1,0 +1,173 @@
+//! Scalar-vs-dispatched microbench for the SIMD kernel layer.
+//!
+//! Measures each kernel family on paper-sized workloads (the FFT-conv
+//! spectrum MAD on a conv2-scale spectrum, the direct-conv z-row axpy,
+//! the radix-2/4 butterfly combines, and the pooling row max), first
+//! with the dispatch forced to the scalar tier, then with the detected
+//! tier, and reports the speedup. Results are also written as JSON
+//! (default `../BENCH_simd.json`, i.e. the repository root when run via
+//! `cargo bench --bench simd_kernels`; override with `ZNNI_BENCH_OUT`).
+//!
+//! Acceptance target (ISSUE 1): dispatched `mad_spectra` ≥ 2× scalar on
+//! AVX2+FMA hardware.
+
+use std::time::Duration;
+
+use znni::simd::{self, Tier};
+use znni::tensor::Complex32;
+use znni::util::bench::{time_budget, Scale, Table};
+use znni::util::prng::Rng;
+
+struct Row {
+    name: &'static str,
+    elems: usize,
+    scalar_ns: f64,
+    simd_ns: f64,
+}
+
+fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.f32_range(-1.0, 1.0)).collect()
+}
+
+fn rand_c32(n: usize, seed: u64) -> Vec<Complex32> {
+    let mut r = Rng::new(seed);
+    (0..n)
+        .map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0)))
+        .collect()
+}
+
+/// Time `f` twice: forced-scalar and auto-dispatched.
+fn measure(budget: Duration, mut f: impl FnMut()) -> (f64, f64) {
+    simd::force(Some(Tier::Scalar));
+    let s = time_budget(budget, &mut f);
+    simd::force(None);
+    let v = time_budget(budget, &mut f);
+    simd::force(None);
+    (s.median.as_nanos() as f64, v.median.as_nanos() as f64)
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    // Spectrum size of an FFT-conv layer: padded x·y·(z/2+1) complex
+    // bins. `paper` ≈ a 96³ conv2 layer, `small` ≈ 48³, `tiny` for CI.
+    let (spec, rows, row_len, m2, m4, fft_n) = match scale {
+        Scale::Paper => (96 * 96 * 49, 512, 110, 512, 256, 1024),
+        Scale::Small => (48 * 48 * 25, 256, 110, 256, 128, 512),
+        Scale::Tiny => (16 * 16 * 9, 32, 30, 32, 16, 128),
+    };
+    let budget = match scale {
+        Scale::Paper => Duration::from_millis(500),
+        Scale::Small => Duration::from_millis(200),
+        Scale::Tiny => Duration::from_millis(50),
+    };
+
+    println!(
+        "simd_kernels: detected tier = {} (ZNNI_SIMD to override), scale = {scale:?}",
+        simd::detect().name()
+    );
+
+    let mut out: Vec<Row> = Vec::new();
+
+    // ---- mad_spectra: acc += a·b over a conv-layer spectrum ----
+    {
+        let a = rand_c32(spec, 1);
+        let b = rand_c32(spec, 2);
+        let mut acc = rand_c32(spec, 3);
+        let (s, v) = measure(budget, || simd::mad_spectra(&mut acc, &a, &b));
+        out.push(Row { name: "mad_spectra", elems: spec, scalar_ns: s, simd_ns: v });
+    }
+
+    // ---- cmul: dst = a·b (GPU-scheme PARALLEL-MULT) ----
+    {
+        let a = rand_c32(spec, 4);
+        let b = rand_c32(spec, 5);
+        let mut dst = vec![Complex32::ZERO; spec];
+        let (s, v) = measure(budget, || simd::cmul(&mut dst, &a, &b));
+        out.push(Row { name: "cmul", elems: spec, scalar_ns: s, simd_ns: v });
+    }
+
+    // ---- axpy: direct-conv z-row FMA over `rows` kernel taps ----
+    {
+        let img = rand_f32(rows * row_len, 6);
+        let mut dst = rand_f32(row_len, 7);
+        let (s, v) = measure(budget, || {
+            for r in 0..rows {
+                simd::axpy(&mut dst, &img[r * row_len..(r + 1) * row_len], 0.123);
+            }
+        });
+        out.push(Row { name: "axpy_rows", elems: rows * row_len, scalar_ns: s, simd_ns: v });
+    }
+
+    // ---- max rows: pooling element-wise max over `rows` rows ----
+    {
+        let img = rand_f32(rows * row_len, 8);
+        let mut dst = rand_f32(row_len, 9);
+        let (s, v) = measure(budget, || {
+            for r in 0..rows {
+                simd::max_assign(&mut dst, &img[r * row_len..(r + 1) * row_len]);
+            }
+        });
+        out.push(Row { name: "maxpool_rows", elems: rows * row_len, scalar_ns: s, simd_ns: v });
+    }
+
+    // ---- radix-2 / radix-4 butterfly combines ----
+    {
+        let tw: Vec<Complex32> = (0..fft_n)
+            .map(|j| Complex32::cis(-2.0 * std::f64::consts::PI * j as f64 / fft_n as f64))
+            .collect();
+        let d2 = rand_c32(2 * m2, 10);
+        let mut buf2 = d2.clone();
+        let (s, v) = measure(budget, || {
+            buf2.copy_from_slice(&d2);
+            simd::radix2_combine(&mut buf2, m2, &tw, fft_n / (2 * m2), fft_n);
+        });
+        out.push(Row { name: "radix2_combine", elems: 2 * m2, scalar_ns: s, simd_ns: v });
+
+        let d4 = rand_c32(4 * m4, 11);
+        let mut buf4 = d4.clone();
+        let (s, v) = measure(budget, || {
+            buf4.copy_from_slice(&d4);
+            simd::radix4_combine(&mut buf4, m4, &tw, fft_n / (4 * m4), fft_n);
+        });
+        out.push(Row { name: "radix4_combine", elems: 4 * m4, scalar_ns: s, simd_ns: v });
+    }
+
+    // ---- report ----
+    let mut table = Table::new(&["kernel", "elems", "scalar", "dispatched", "speedup"]);
+    for r in &out {
+        table.row(vec![
+            r.name.to_string(),
+            r.elems.to_string(),
+            format!("{:.1} µs", r.scalar_ns / 1e3),
+            format!("{:.1} µs", r.simd_ns / 1e3),
+            format!("{:.2}×", r.scalar_ns / r.simd_ns.max(1.0)),
+        ]);
+    }
+    table.print();
+
+    let path = std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_simd.json".into());
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"tier\": \"{}\",\n  \"arch\": \"{}\",\n  \"scale\": \"{:?}\",\n  \"kernels\": [\n",
+        simd::detect().name(),
+        std::env::consts::ARCH,
+        scale
+    ));
+    for (i, r) in out.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"elems\": {}, \"scalar_ns\": {:.0}, \"simd_ns\": {:.0}, \"speedup\": {:.3}}}{}\n",
+            r.name,
+            r.elems,
+            r.scalar_ns,
+            r.simd_ns,
+            r.scalar_ns / r.simd_ns.max(1.0),
+            if i + 1 < out.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -4,15 +4,19 @@
 //! output image of every batch entry is produced on its own worker.
 //! Two variants:
 //!
-//! * **naive** — textbook six-loop accumulation straight into the
-//!   output image; minimal memory (Table II row 1);
-//! * **"MKL"** — convolve into a per-thread temporary image with a
-//!   z-contiguous multiply-add inner loop, then accumulate; ~2× faster
-//!   at the cost of `T·n'` extra elements (Table II row 2). It mirrors
-//!   the paper's Intel-MKL-backed variant, which also trades a temp
-//!   image for speed.
+//! * **naive** — accumulates straight into the output image; minimal
+//!   memory (Table II row 1);
+//! * **"MKL"** — convolve into a per-thread temporary image, then
+//!   accumulate; ~2× faster at the cost of `T·n'` extra elements
+//!   (Table II row 2). It mirrors the paper's Intel-MKL-backed
+//!   variant, which also trades a temp image for speed.
+//!
+//! Both share the z-contiguous per-tap multiply-add inner loop, which
+//! dispatches through [`crate::simd::axpy`] (AVX2+FMA / SSE2 / NEON /
+//! scalar); the scalar six-loop oracle lives in
+//! [`super::convolve_valid_accumulate_scalar`].
 
-use crate::tensor::{Tensor5, Vec3};
+use crate::tensor::Tensor5;
 use crate::util::pool::TaskPool;
 use crate::util::sendptr::SendPtr;
 
@@ -61,7 +65,6 @@ pub fn conv_direct_mkl(
     let outp = SendPtr(out.data_mut().as_mut_ptr());
     let img_len = osh.image_len();
     let n = ish.spatial();
-    let on = osh.spatial();
     pool.parallel_for(ish.s * w.f_out, |sj| {
         let (s, j) = (sj / w.f_out, sj % w.f_out);
         let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
@@ -70,10 +73,8 @@ pub fn conv_direct_mkl(
         let mut tmp = crate::memory::TrackedVec::<f32>::zeroed(img_len, "direct-mkl temp");
         for i in 0..w.f_in {
             tmp.as_mut_slice().fill(0.0);
-            convolve_rows_fma(input.image(s, i), n, w.kernel(j, i), w.k, on, tmp.as_mut_slice());
-            for (d, t) in o.iter_mut().zip(tmp.as_slice()) {
-                *d += *t;
-            }
+            convolve_valid_accumulate(input.image(s, i), n, w.kernel(j, i), w.k, tmp.as_mut_slice());
+            crate::simd::add_assign(o, tmp.as_slice());
         }
         let b = w.bias(j);
         for v in o.iter_mut() {
@@ -81,33 +82,6 @@ pub fn conv_direct_mkl(
         }
     });
     out
-}
-
-/// Row-vectorised valid convolution: for each kernel tap, multiply-add a
-/// contiguous z-run of the input into the output row. The inner loop is
-/// a `[f32]` axpy the compiler auto-vectorises.
-fn convolve_rows_fma(img: &[f32], n: Vec3, ker: &[f32], k: Vec3, on: Vec3, out: &mut [f32]) {
-    for x in 0..on[0] {
-        for y in 0..on[1] {
-            let orow = &mut out[(x * on[1] + y) * on[2]..(x * on[1] + y) * on[2] + on[2]];
-            for a in 0..k[0] {
-                for b in 0..k[1] {
-                    let irow_base = ((x + a) * n[1] + (y + b)) * n[2];
-                    for c in 0..k[2] {
-                        let kv = ker[((k[0] - 1 - a) * k[1] + (k[1] - 1 - b)) * k[2]
-                            + (k[2] - 1 - c)];
-                        if kv == 0.0 {
-                            continue;
-                        }
-                        let irow = &img[irow_base + c..irow_base + c + on[2]];
-                        for (d, iv) in orow.iter_mut().zip(irow) {
-                            *d += kv * *iv;
-                        }
-                    }
-                }
-            }
-        }
-    }
 }
 
 #[cfg(test)]

@@ -66,10 +66,7 @@ pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPoo
                             return;
                         }
                         let dst = unsafe { pp.slice_mut(lo, hi - lo) };
-                        for (o, d) in dst.iter_mut().enumerate() {
-                            let e = lo + o;
-                            *d = it[ibase + e] * wt[e];
-                        }
+                        crate::simd::cmul(dst, &it[ibase + lo..ibase + hi], &wt[lo..hi]);
                     });
                 }
                 // PARALLEL-ACCUMULATE: Õ[s,j][e] = Σ_i s̃[i][e]

@@ -76,7 +76,6 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
         // One spectrum buffer per chip — the primary-thread temporaries.
         let mut bufs: Vec<TrackedVec<Complex32>> =
             (0..chips).map(|_| TrackedVec::zeroed(spec_len, "fft-tp primary buffer")).collect();
-        let kplan = Fft3::new(padded);
         let total_pairs = w.f_out * w.f_in;
         let col_blocks = w.f_out.div_ceil(chips);
         let itp = SendPtr(itrans.data_mut().as_mut_ptr());
@@ -93,7 +92,10 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
                 {
                     let bufp: Vec<SendPtr<Complex32>> =
                         bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
-                    let kplan = &kplan;
+                    // One plan serves both image and kernel transforms —
+                    // the twiddle tables are identical for a given
+                    // padded size, so there is no reason to build two.
+                    let kplan = &plan;
                     pool.scope(|sc| {
                         for &(c, j) in &active {
                             let bp = bufp[c];

@@ -127,10 +127,54 @@ pub fn conv_out_shape(input: Shape5, f_out: usize, k: Vec3) -> Shape5 {
     }
 }
 
-/// Reference single-image valid **convolution** (flipped kernel),
-/// accumulating into `out`. O(n³k³); used as the correctness oracle and
-/// by the naive direct primitive.
+/// Single-image valid **convolution** (flipped kernel), accumulating
+/// into `out`. For each kernel tap the z-contiguous run of the input is
+/// multiply-added into the output row through the SIMD kernel layer
+/// ([`crate::simd::axpy`]) — the paper's "MKL" inner-loop shape. Used by
+/// both direct primitives.
 pub fn convolve_valid_accumulate(
+    img: &[f32],
+    n: Vec3,
+    ker: &[f32],
+    k: Vec3,
+    out: &mut [f32],
+) {
+    let on = [n[0] - k[0] + 1, n[1] - k[1] + 1, n[2] - k[2] + 1];
+    debug_assert_eq!(img.len(), n[0] * n[1] * n[2]);
+    debug_assert_eq!(ker.len(), k[0] * k[1] * k[2]);
+    debug_assert_eq!(out.len(), on[0] * on[1] * on[2]);
+    // Resolve the dispatch tier once per image, not once per tap.
+    let tier = crate::simd::active();
+    for x in 0..on[0] {
+        for y in 0..on[1] {
+            let ob = (x * on[1] + y) * on[2];
+            let orow = &mut out[ob..ob + on[2]];
+            for a in 0..k[0] {
+                for b in 0..k[1] {
+                    let irow_base = ((x + a) * n[1] + (y + b)) * n[2];
+                    for c in 0..k[2] {
+                        let kv =
+                            ker[((k[0] - 1 - a) * k[1] + (k[1] - 1 - b)) * k[2] + (k[2] - 1 - c)];
+                        if kv == 0.0 {
+                            continue;
+                        }
+                        crate::simd::axpy_tier(
+                            tier,
+                            orow,
+                            &img[irow_base + c..irow_base + c + on[2]],
+                            kv,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scalar six-loop reference convolution (flipped kernel), accumulating
+/// into `out`. O(n³k³), no SIMD, no reassociation — this is the oracle
+/// every vectorised primitive is property-tested against.
+pub fn convolve_valid_accumulate_scalar(
     img: &[f32],
     n: Vec3,
     ker: &[f32],
@@ -162,7 +206,9 @@ pub fn convolve_valid_accumulate(
 }
 
 /// Single-threaded reference convolutional layer (oracle for every
-/// primitive): `O[s,j] = act(Σ_i w[j,i] * I[s,i] + bias[j])`.
+/// primitive): `O[s,j] = act(Σ_i w[j,i] * I[s,i] + bias[j])`. Built on
+/// the scalar inner loop so it stays independent of the SIMD dispatch
+/// it is used to validate.
 pub fn conv_layer_reference(input: &Tensor5, w: &Weights, act: Activation) -> Tensor5 {
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in);
@@ -171,7 +217,7 @@ pub fn conv_layer_reference(input: &Tensor5, w: &Weights, act: Activation) -> Te
     for s in 0..ish.s {
         for j in 0..w.f_out {
             for i in 0..w.f_in {
-                convolve_valid_accumulate(
+                convolve_valid_accumulate_scalar(
                     input.image(s, i),
                     ish.spatial(),
                     w.kernel(j, i),

@@ -204,52 +204,52 @@ impl FftPlan {
         for q in 0..r {
             self.rec(&src[q * stride..], stride * r, &mut dst[q * m..(q + 1) * m], m, fi + 1);
         }
-        // Combine r sub-transforms of length m.
+        // Combine r sub-transforms of length m. The radix-2/4 combines
+        // — the planned path's hot butterflies — go through the SIMD
+        // kernel layer (twiddle-multiply + butterfly vectorised over
+        // consecutive k2, with the scalar loop as remainder tail and
+        // fallback); odd radices keep the scalar gather loop.
         let tw_step = self.n / sub_n;
-        let mut t = [Complex32::ZERO; 8];
-        let mut tv: Vec<Complex32> = if r > 8 { vec![Complex32::ZERO; r] } else { Vec::new() };
-        for k2 in 0..m {
-            let t = if r <= 8 { &mut t[..r] } else { &mut tv[..] };
-            // Twiddle index q·k2·tw_step mod n by accumulation — no
-            // multiply/modulo in the gather loop (perf pass, see
-            // EXPERIMENTS.md §Perf), and the w = 1 case skipped.
-            let step = (k2 * tw_step) % self.n;
-            let mut w_idx = 0usize;
-            for q in 0..r {
-                let v = dst[q * m + k2];
-                t[q] = if w_idx == 0 { v } else { v * self.tw[w_idx] };
-                w_idx += step;
-                if w_idx >= self.n {
-                    w_idx -= self.n;
-                }
-            }
-            match r {
-                2 => {
-                    dst[k2] = t[0] + t[1];
-                    dst[m + k2] = t[0] - t[1];
-                }
-                3 => {
-                    let (x0, x1, x2) = bf3(t[0], t[1], t[2]);
-                    dst[k2] = x0;
-                    dst[m + k2] = x1;
-                    dst[2 * m + k2] = x2;
-                }
-                4 => {
-                    let (x0, x1, x2, x3) = bf4(t[0], t[1], t[2], t[3]);
-                    dst[k2] = x0;
-                    dst[m + k2] = x1;
-                    dst[2 * m + k2] = x2;
-                    dst[3 * m + k2] = x3;
-                }
-                _ => {
-                    // Generic radix: r-point naive DFT of t.
-                    let wr = self.n / r;
-                    for k3 in 0..r {
-                        let mut acc = t[0];
-                        for q in 1..r {
-                            acc.mad(t[q], self.tw[(q * k3 % r) * wr]);
+        match r {
+            2 => crate::simd::radix2_combine(&mut dst[..2 * m], m, &self.tw, tw_step, self.n),
+            4 => crate::simd::radix4_combine(&mut dst[..4 * m], m, &self.tw, tw_step, self.n),
+            _ => {
+                let mut t = [Complex32::ZERO; 8];
+                let mut tv: Vec<Complex32> =
+                    if r > 8 { vec![Complex32::ZERO; r] } else { Vec::new() };
+                for k2 in 0..m {
+                    let t = if r <= 8 { &mut t[..r] } else { &mut tv[..] };
+                    // Twiddle index q·k2·tw_step mod n by accumulation — no
+                    // multiply/modulo in the gather loop (perf pass, see
+                    // EXPERIMENTS.md §Perf), and the w = 1 case skipped.
+                    let step = (k2 * tw_step) % self.n;
+                    let mut w_idx = 0usize;
+                    for q in 0..r {
+                        let v = dst[q * m + k2];
+                        t[q] = if w_idx == 0 { v } else { v * self.tw[w_idx] };
+                        w_idx += step;
+                        if w_idx >= self.n {
+                            w_idx -= self.n;
                         }
-                        dst[k3 * m + k2] = acc;
+                    }
+                    match r {
+                        3 => {
+                            let (x0, x1, x2) = bf3(t[0], t[1], t[2]);
+                            dst[k2] = x0;
+                            dst[m + k2] = x1;
+                            dst[2 * m + k2] = x2;
+                        }
+                        _ => {
+                            // Generic radix: r-point naive DFT of t.
+                            let wr = self.n / r;
+                            for k3 in 0..r {
+                                let mut acc = t[0];
+                                for q in 1..r {
+                                    acc.mad(t[q], self.tw[(q * k3 % r) * wr]);
+                                }
+                                dst[k3 * m + k2] = acc;
+                            }
+                        }
                     }
                 }
             }

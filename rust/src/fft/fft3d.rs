@@ -479,20 +479,18 @@ impl Fft3 {
                 return;
             }
             let acc = unsafe { accp.slice_mut(lo, hi - lo) };
-            for (i, d) in acc.iter_mut().enumerate() {
-                d.mad(a[lo + i], b[lo + i]);
-            }
+            crate::simd::mad_spectra(acc, &a[lo..hi], &b[lo..hi]);
         });
     }
 
     /// Point-wise multiply-accumulate of two spectra: `acc += a · b`.
-    /// This is PARALLEL-MAD's inner kernel (Algorithm 2).
+    /// This is PARALLEL-MAD's inner kernel (Algorithm 2), dispatched to
+    /// the best SIMD tier at runtime (AVX2+FMA runs it as split-complex
+    /// pure-FMA tiles; see [`crate::simd`]).
     pub fn mad_spectra(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
         debug_assert_eq!(acc.len(), a.len());
         debug_assert_eq!(acc.len(), b.len());
-        for ((d, x), y) in acc.iter_mut().zip(a.iter()).zip(b.iter()) {
-            d.mad(*x, *y);
-        }
+        crate::simd::mad_spectra(acc, a, b);
     }
 }
 

@@ -20,7 +20,22 @@
 //! * baseline comparators ([`baselines`], §VIII) and a serving
 //!   coordinator ([`coordinator`]);
 //! * a PJRT runtime that loads the AOT-compiled JAX/Pallas artifacts
-//!   ([`runtime`]).
+//!   ([`runtime`]);
+//! * a SIMD kernel layer with runtime dispatch for the four CPU hot
+//!   loops ([`simd`]): AVX2+FMA → SSE2 → scalar on x86, NEON on
+//!   aarch64, forced via `ZNNI_SIMD` or [`simd::force`].
+
+// Style lints this from-scratch codebase deliberately trades away for
+// explicit index arithmetic in the kernel code (CI runs clippy with
+// `-D warnings`).
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_div_ceil,
+    clippy::new_without_default,
+    clippy::type_complexity,
+    clippy::uninlined_format_args
+)]
 
 pub mod approaches;
 pub mod baselines;
@@ -36,6 +51,7 @@ pub mod optimizer;
 pub mod pipeline;
 pub mod runtime;
 pub mod pool;
+pub mod simd;
 pub mod sublayer;
 pub mod tensor;
 pub mod util;

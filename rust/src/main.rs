@@ -11,6 +11,8 @@
 //!               --ram GIB   --max-extent N   --extent N   --volume N
 //!               --artifacts DIR
 
+#![allow(clippy::too_many_arguments, clippy::uninlined_format_args)]
+
 use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};

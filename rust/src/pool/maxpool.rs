@@ -31,10 +31,67 @@ pub fn max_pool(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
     out
 }
 
+thread_local! {
+    /// Per-worker z-row scratch for the vectorised pooling path.
+    static ROW_MAX: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Max-pool a single image at a given offset with window/stride `p`,
 /// writing `odims` pooled voxels. Shared by max-pool (offset 0) and MPF
 /// (every offset).
-pub(crate) fn pool_one(img: &[f32], n: Vec3, p: Vec3, off: Vec3, odims: Vec3, out: &mut [f32]) {
+///
+/// Restructured for SIMD: for each output (x, y) row the `p₀·p₁` window
+/// rows are reduced element-wise along contiguous z
+/// ([`crate::simd::max_assign`]), then each output voxel takes the max
+/// of its `p₂` strided survivors. Identical results to
+/// [`pool_one_scalar`] for non-NaN inputs (NaN ordering is
+/// tier-defined; see [`crate::simd::scalar::max_assign`]), which the
+/// property tests compare against.
+pub fn pool_one(img: &[f32], n: Vec3, p: Vec3, off: Vec3, odims: Vec3, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), odims[0] * odims[1] * odims[2]);
+    // Resolve the dispatch tier once per image, not once per window row.
+    let tier = crate::simd::active();
+    ROW_MAX.with(|c| {
+        let tmp = &mut *c.borrow_mut();
+        if tmp.len() < n[2] {
+            tmp.resize(n[2], 0.0);
+        }
+        let tmp = &mut tmp[..n[2]];
+        for x in 0..odims[0] {
+            let bx = off[0] + x * p[0];
+            for y in 0..odims[1] {
+                let by = off[1] + y * p[1];
+                let r0 = (bx * n[1] + by) * n[2];
+                tmp.copy_from_slice(&img[r0..r0 + n[2]]);
+                for a in 0..p[0] {
+                    for b in 0..p[1] {
+                        if a == 0 && b == 0 {
+                            continue;
+                        }
+                        let rb = ((bx + a) * n[1] + (by + b)) * n[2];
+                        crate::simd::max_assign_tier(tier, tmp, &img[rb..rb + n[2]]);
+                    }
+                }
+                let orow = (x * odims[1] + y) * odims[2];
+                for z in 0..odims[2] {
+                    let bz = off[2] + z * p[2];
+                    let mut m = tmp[bz];
+                    for c in 1..p[2] {
+                        let v = tmp[bz + c];
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                    out[orow + z] = m;
+                }
+            }
+        }
+    });
+}
+
+/// Scalar six-loop pooling oracle (the original inner loop): max over
+/// the full `p³` window per output voxel.
+pub fn pool_one_scalar(img: &[f32], n: Vec3, p: Vec3, off: Vec3, odims: Vec3, out: &mut [f32]) {
     debug_assert_eq!(out.len(), odims[0] * odims[1] * odims[2]);
     for x in 0..odims[0] {
         let bx = off[0] + x * p[0];
@@ -105,6 +162,26 @@ mod tests {
             }
         }
         assert_eq!(out.at(1, 1, 1, 1, 1), m);
+    }
+
+    #[test]
+    fn vectorised_pool_matches_scalar_oracle() {
+        crate::util::quick::check("pool_one == pool_one_scalar", |g| {
+            let p = [g.usize(1, 3), g.usize(1, 3), g.usize(1, 3)];
+            let odims = [g.usize(1, 4), g.usize(1, 4), g.usize(1, 4)];
+            let off = [g.usize(0, 2), g.usize(0, 2), g.usize(0, 2)];
+            let n = [
+                off[0] + odims[0] * p[0] + g.usize(0, 2),
+                off[1] + odims[1] * p[1] + g.usize(0, 2),
+                off[2] + odims[2] * p[2] + g.usize(0, 2),
+            ];
+            let img = g.vec_f32(n[0] * n[1] * n[2]);
+            let mut a = vec![0.0f32; odims[0] * odims[1] * odims[2]];
+            let mut b = a.clone();
+            pool_one(&img, n, p, off, odims, &mut a);
+            pool_one_scalar(&img, n, p, off, odims, &mut b);
+            crate::util::quick::assert_allclose(&a, &b, 0.0, 0.0, "pool parity");
+        });
     }
 
     #[test]

@@ -11,5 +11,5 @@
 mod maxpool;
 mod mpf;
 
-pub use maxpool::{max_pool, max_pool_out_shape};
+pub use maxpool::{max_pool, max_pool_out_shape, pool_one, pool_one_scalar};
 pub use mpf::{mpf_forward, mpf_fragment_order, mpf_out_shape};

@@ -8,13 +8,25 @@
 //! request time. On this testbed the PJRT executables stand in for the
 //! GPU device's compiled kernels (see `crate::device`).
 
+//! The PJRT client itself needs the offline `xla` crate, which is not
+//! present on every testbed: it is gated behind the `pjrt` cargo
+//! feature. Without it, [`Runtime::open`] returns an error and every
+//! caller (CLI `info`, quickstart, integration tests) degrades
+//! gracefully; the [`Manifest`] parser is always available.
+
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::tensor::{Shape5, Tensor5};
+#[cfg(feature = "pjrt")]
+use crate::tensor::Shape5;
+use crate::tensor::Tensor5;
 
 /// One artifact: name, file, argument and output shapes.
 #[derive(Clone, Debug)]
@@ -88,6 +100,7 @@ impl Manifest {
 
 /// PJRT runtime: lazily compiles artifacts on first use and caches the
 /// loaded executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     dir: PathBuf,
     pub manifest: Manifest,
@@ -95,6 +108,7 @@ pub struct Runtime {
     loaded: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (default `artifacts/`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -195,6 +209,47 @@ impl Runtime {
             spec.output_shape[4],
         );
         Ok(Tensor5::from_vec(sh, flat))
+    }
+}
+
+/// Stub runtime when built without the `pjrt` feature: `open` always
+/// fails with a descriptive error, so callers fall back to the CPU
+/// primitives (every call site already handles the error path).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    const UNAVAILABLE: &'static str =
+        "PJRT runtime unavailable: znni was built without the `pjrt` cargo feature \
+         (requires the offline `xla` crate)";
+
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = dir;
+        bail!("{}", Self::UNAVAILABLE)
+    }
+
+    /// Platform string of the PJRT client.
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Execute an artifact with flat f32 argument buffers.
+    pub fn execute(&self, _name: &str, _args: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!("{}", Self::UNAVAILABLE)
+    }
+
+    /// Execute an artifact on a 5D tensor plus weight buffers.
+    pub fn execute_tensor(
+        &self,
+        _name: &str,
+        _input: &Tensor5,
+        _weight_bufs: &[&[f32]],
+    ) -> Result<Tensor5> {
+        bail!("{}", Self::UNAVAILABLE)
     }
 }
 

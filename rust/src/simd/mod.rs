@@ -1,0 +1,557 @@
+//! Portable SIMD kernel layer with runtime dispatch.
+//!
+//! ZNNi's CPU throughput rests on four hot loops — the FFT-conv
+//! point-wise multiply-accumulate, the direct-conv z-contiguous FMA,
+//! the radix-2/4 FFT butterflies, and the pooling comparisons. This
+//! module provides each of them as a *kernel* with one scalar reference
+//! implementation ([`scalar`], also the property-test oracle) and
+//! vector implementations selected at runtime:
+//!
+//! | tier       | arch      | requirement                |
+//! |------------|-----------|----------------------------|
+//! | `avx2+fma` | x86/x86_64| AVX2 and FMA detected      |
+//! | `sse2`     | x86/x86_64| SSE2 detected (baseline)   |
+//! | `neon`     | aarch64   | always (NEON is baseline)  |
+//! | `scalar`   | any       | —                          |
+//!
+//! Dispatch resolves once (CPUID + the `ZNNI_SIMD` environment
+//! variable, values `scalar | sse2 | avx2 | neon | auto`) and can be
+//! overridden programmatically with [`force`] — benches use that to
+//! measure scalar-vs-vector on the same machine, tests to prove parity
+//! on every supported tier. Each kernel also has an explicit-tier
+//! `*_with` variant that bypasses the global state entirely.
+//!
+//! Building with `RUSTFLAGS="-C target-cpu=native"` additionally lets
+//! the compiler use the same ISA in the surrounding scalar code; the
+//! kernels here do not require it.
+
+pub mod scalar;
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::tensor::Complex32;
+
+/// An instruction-set tier a kernel can be dispatched to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Tier {
+    /// Plain Rust loops — always available, and the parity oracle.
+    Scalar = 1,
+    /// 128-bit SSE2 (x86 baseline): no FMA, add/mul/max only.
+    Sse2 = 2,
+    /// 256-bit AVX2 with fused multiply-add.
+    Avx2Fma = 3,
+    /// 128-bit NEON with fused multiply-add (aarch64 baseline).
+    Neon = 4,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse2 => "sse2",
+            Tier::Avx2Fma => "avx2+fma",
+            Tier::Neon => "neon",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Tier> {
+        match v {
+            1 => Some(Tier::Scalar),
+            2 => Some(Tier::Sse2),
+            3 => Some(Tier::Avx2Fma),
+            4 => Some(Tier::Neon),
+            _ => None,
+        }
+    }
+
+    /// Parse a `ZNNI_SIMD` value.
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Tier::Scalar),
+            "sse2" | "sse" => Some(Tier::Sse2),
+            "avx2" | "avx2+fma" | "fma" => Some(Tier::Avx2Fma),
+            "neon" => Some(Tier::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Highest tier this CPU supports.
+pub fn detect() -> Tier {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            Tier::Avx2Fma
+        } else if std::arch::is_x86_feature_detected!("sse2") {
+            Tier::Sse2
+        } else {
+            Tier::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Tier::Neon
+    }
+    #[cfg(not(any(target_arch = "x86", target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Tier::Scalar
+    }
+}
+
+/// Is `t` runnable on this CPU?
+pub fn supported(t: Tier) -> bool {
+    match t {
+        Tier::Scalar => true,
+        Tier::Sse2 | Tier::Avx2Fma => {
+            cfg!(any(target_arch = "x86", target_arch = "x86_64")) && t <= detect()
+        }
+        Tier::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// All tiers runnable on this CPU, scalar first.
+pub fn supported_tiers() -> Vec<Tier> {
+    [Tier::Scalar, Tier::Sse2, Tier::Avx2Fma, Tier::Neon]
+        .into_iter()
+        .filter(|&t| supported(t))
+        .collect()
+}
+
+const TIER_UNSET: u8 = 0;
+static FORCED: AtomicU8 = AtomicU8::new(TIER_UNSET);
+static RESOLVED: OnceLock<Tier> = OnceLock::new();
+
+/// The tier dispatching kernels currently use: the [`force`]d tier if
+/// set, else `ZNNI_SIMD` (read once), else the detected maximum.
+pub fn active() -> Tier {
+    match Tier::from_u8(FORCED.load(Ordering::Relaxed)) {
+        Some(t) => t,
+        None => *RESOLVED.get_or_init(|| {
+            let hw = detect();
+            match std::env::var("ZNNI_SIMD") {
+                Ok(v) if !v.trim().is_empty() && v.trim() != "auto" => match Tier::parse(&v) {
+                    Some(t) if supported(t) => t,
+                    Some(t) => {
+                        eprintln!(
+                            "znni: ZNNI_SIMD={} not supported on this CPU, using {}",
+                            t.name(),
+                            hw.name()
+                        );
+                        hw
+                    }
+                    None => {
+                        eprintln!("znni: unknown ZNNI_SIMD value {v:?}, using {}", hw.name());
+                        hw
+                    }
+                },
+                _ => hw,
+            }
+        }),
+    }
+}
+
+/// Force every subsequent dispatch to `t` (must be [`supported`]), or
+/// restore auto-detection with `None`. Used by the parity tests and the
+/// scalar-vs-vector microbenches.
+pub fn force(t: Option<Tier>) {
+    match t {
+        Some(t) => {
+            assert!(supported(t), "tier {} not supported on this CPU", t.name());
+            FORCED.store(t as u8, Ordering::Relaxed);
+        }
+        None => FORCED.store(TIER_UNSET, Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel entry points. Each `foo` dispatches on `active()`; each
+// `foo_with` takes the tier explicitly (asserting it is supported) so
+// tests can exercise every tier without touching global state.
+// ---------------------------------------------------------------------
+
+/// `dst[i] += k · src[i]`.
+#[inline]
+pub fn axpy(dst: &mut [f32], src: &[f32], k: f32) {
+    axpy_tier(active(), dst, src, k);
+}
+
+pub fn axpy_with(tier: Tier, dst: &mut [f32], src: &[f32], k: f32) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    axpy_tier(tier, dst, src, k);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn axpy_tier(tier: Tier, dst: &mut [f32], src: &[f32], k: f32) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::axpy_avx2(dst, src, k) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::axpy_sse2(dst, src, k) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::axpy_neon(dst, src, k) },
+        _ => scalar::axpy(dst, src, k),
+    }
+}
+
+/// `dst[i] += src[i]`.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    add_assign_tier(active(), dst, src);
+}
+
+pub fn add_assign_with(tier: Tier, dst: &mut [f32], src: &[f32]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    add_assign_tier(tier, dst, src);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn add_assign_tier(tier: Tier, dst: &mut [f32], src: &[f32]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::add_assign_avx2(dst, src) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::add_assign_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::add_assign_neon(dst, src) },
+        _ => scalar::add_assign(dst, src),
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])`.
+#[inline]
+pub fn max_assign(dst: &mut [f32], src: &[f32]) {
+    max_assign_tier(active(), dst, src);
+}
+
+pub fn max_assign_with(tier: Tier, dst: &mut [f32], src: &[f32]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    max_assign_tier(tier, dst, src);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn max_assign_tier(tier: Tier, dst: &mut [f32], src: &[f32]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::max_assign_avx2(dst, src) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::max_assign_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::max_assign_neon(dst, src) },
+        _ => scalar::max_assign(dst, src),
+    }
+}
+
+/// `acc[i] += a[i] · b[i]` (complex) — the FFT-conv Stage-2 kernel. The
+/// AVX2 tier deinterleaves 8-complex tiles to split-complex (SoA)
+/// registers so the complex MAD becomes four pure FMAs.
+#[inline]
+pub fn mad_spectra(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    mad_spectra_tier(active(), acc, a, b);
+}
+
+pub fn mad_spectra_with(tier: Tier, acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    mad_spectra_tier(tier, acc, a, b);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn mad_spectra_tier(tier: Tier, acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    debug_assert!(supported(tier));
+    assert_eq!(acc.len(), a.len());
+    assert_eq!(acc.len(), b.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::mad_spectra_avx2(acc, a, b) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::mad_spectra_sse2(acc, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::mad_spectra_neon(acc, a, b) },
+        _ => scalar::mad_spectra(acc, a, b),
+    }
+}
+
+/// `dst[i] = a[i] · b[i]` (complex) — the GPU scheme's PARALLEL-MULT.
+#[inline]
+pub fn cmul(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    cmul_tier(active(), dst, a, b);
+}
+
+pub fn cmul_with(tier: Tier, dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    cmul_tier(tier, dst, a, b);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn cmul_tier(tier: Tier, dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), a.len());
+    assert_eq!(dst.len(), b.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::cmul_avx2_slices(dst, a, b) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::cmul_sse2_slices(dst, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::cmul_neon(dst, a, b) },
+        _ => scalar::cmul(dst, a, b),
+    }
+}
+
+/// Radix-2 DIT combine (see [`scalar::radix2_combine`] for semantics).
+/// NEON currently falls back to scalar here; the butterflies are
+/// memory-bound on 128-bit ISAs.
+#[inline]
+pub fn radix2_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {
+    radix2_combine_tier(active(), dst, m, tw, step, n);
+}
+
+pub fn radix2_combine_with(
+    tier: Tier,
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    radix2_combine_tier(tier, dst, m, tw, step, n);
+}
+
+#[inline]
+pub(crate) fn radix2_combine_tier(
+    tier: Tier,
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    debug_assert!(supported(tier));
+    assert!(dst.len() >= 2 * m);
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::radix2_combine_avx2(dst, m, tw, step, n) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::radix2_combine_sse2(dst, m, tw, step, n) },
+        _ => scalar::radix2_combine(dst, m, tw, step, n),
+    }
+}
+
+/// Radix-4 DIT combine (see [`scalar::radix4_combine`] for semantics).
+#[inline]
+pub fn radix4_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {
+    radix4_combine_tier(active(), dst, m, tw, step, n);
+}
+
+pub fn radix4_combine_with(
+    tier: Tier,
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    radix4_combine_tier(tier, dst, m, tw, step, n);
+}
+
+#[inline]
+pub(crate) fn radix4_combine_tier(
+    tier: Tier,
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    debug_assert!(supported(tier));
+    assert!(dst.len() >= 4 * m);
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::radix4_combine_avx2(dst, m, tw, step, n) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::radix4_combine_sse2(dst, m, tw, step, n) },
+        _ => scalar::radix4_combine(dst, m, tw, step, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::quick::assert_allclose;
+
+    fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.f32_range(-1.0, 1.0)).collect()
+    }
+
+    fn rand_c32(n: usize, seed: u64) -> Vec<Complex32> {
+        let mut r = Rng::new(seed);
+        (0..n)
+            .map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0)))
+            .collect()
+    }
+
+    fn flat(v: &[Complex32]) -> Vec<f32> {
+        v.iter().flat_map(|c| [c.re, c.im]).collect()
+    }
+
+    fn twiddles(n: usize) -> Vec<Complex32> {
+        (0..n)
+            .map(|j| Complex32::cis(-2.0 * std::f64::consts::PI * j as f64 / n as f64))
+            .collect()
+    }
+
+    #[test]
+    fn detection_is_consistent() {
+        let hw = detect();
+        assert!(supported(hw));
+        assert!(supported(Tier::Scalar));
+        assert!(supported_tiers().contains(&Tier::Scalar));
+        assert!(supported_tiers().contains(&hw));
+        // active() resolves to something supported.
+        assert!(supported(active()));
+    }
+
+    #[test]
+    fn parse_accepts_aliases() {
+        assert_eq!(Tier::parse("scalar"), Some(Tier::Scalar));
+        assert_eq!(Tier::parse(" SSE2 "), Some(Tier::Sse2));
+        assert_eq!(Tier::parse("avx2"), Some(Tier::Avx2Fma));
+        assert_eq!(Tier::parse("avx2+fma"), Some(Tier::Avx2Fma));
+        assert_eq!(Tier::parse("neon"), Some(Tier::Neon));
+        assert_eq!(Tier::parse("mmx"), None);
+    }
+
+    #[test]
+    fn f32_kernels_match_scalar_on_every_tier() {
+        // Odd lengths on purpose: exercise the remainder tails.
+        for n in [0usize, 1, 3, 7, 8, 15, 16, 17, 31, 33, 64, 100, 129] {
+            let src = rand_f32(n, n as u64);
+            let base = rand_f32(n, n as u64 + 500);
+            for tier in supported_tiers() {
+                let mut want = base.clone();
+                scalar::axpy(&mut want, &src, 0.37);
+                let mut got = base.clone();
+                axpy_with(tier, &mut got, &src, 0.37);
+                assert_allclose(&got, &want, 1e-6, 1e-5, &format!("axpy {tier:?} n={n}"));
+
+                let mut want = base.clone();
+                scalar::add_assign(&mut want, &src);
+                let mut got = base.clone();
+                add_assign_with(tier, &mut got, &src);
+                assert_allclose(&got, &want, 0.0, 0.0, &format!("add {tier:?} n={n}"));
+
+                let mut want = base.clone();
+                scalar::max_assign(&mut want, &src);
+                let mut got = base.clone();
+                max_assign_with(tier, &mut got, &src);
+                assert_allclose(&got, &want, 0.0, 0.0, &format!("max {tier:?} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn complex_kernels_match_scalar_on_every_tier() {
+        for n in [0usize, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 40, 65] {
+            let a = rand_c32(n, n as u64);
+            let b = rand_c32(n, n as u64 + 90);
+            let acc0 = rand_c32(n, n as u64 + 180);
+            for tier in supported_tiers() {
+                let mut want = acc0.clone();
+                scalar::mad_spectra(&mut want, &a, &b);
+                let mut got = acc0.clone();
+                mad_spectra_with(tier, &mut got, &a, &b);
+                assert_allclose(
+                    &flat(&got),
+                    &flat(&want),
+                    1e-6,
+                    1e-4,
+                    &format!("mad {tier:?} n={n}"),
+                );
+
+                let mut want = acc0.clone();
+                scalar::cmul(&mut want, &a, &b);
+                let mut got = acc0.clone();
+                cmul_with(tier, &mut got, &a, &b);
+                assert_allclose(
+                    &flat(&got),
+                    &flat(&want),
+                    1e-6,
+                    1e-4,
+                    &format!("cmul {tier:?} n={n}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn radix_combines_match_scalar_on_every_tier() {
+        for (m, fft_n, step) in [
+            (1usize, 8usize, 1usize),
+            (2, 8, 2),
+            (3, 12, 1),
+            (4, 16, 1),
+            (5, 40, 2),
+            (8, 32, 1),
+            (13, 104, 2),
+            (16, 64, 1),
+            (30, 240, 2),
+        ] {
+            let tw = twiddles(fft_n);
+            let d2 = rand_c32(2 * m, (m + fft_n) as u64);
+            let d4 = rand_c32(4 * m, (m * fft_n) as u64);
+            for tier in supported_tiers() {
+                let mut want = d2.clone();
+                scalar::radix2_combine(&mut want, m, &tw, step, fft_n);
+                let mut got = d2.clone();
+                radix2_combine_with(tier, &mut got, m, &tw, step, fft_n);
+                assert_allclose(
+                    &flat(&got),
+                    &flat(&want),
+                    1e-6,
+                    1e-4,
+                    &format!("radix2 {tier:?} m={m}"),
+                );
+
+                let mut want = d4.clone();
+                scalar::radix4_combine(&mut want, m, &tw, step, fft_n);
+                let mut got = d4.clone();
+                radix4_combine_with(tier, &mut got, m, &tw, step, fft_n);
+                assert_allclose(
+                    &flat(&got),
+                    &flat(&want),
+                    1e-6,
+                    1e-4,
+                    &format!("radix4 {tier:?} m={m}"),
+                );
+            }
+        }
+    }
+}

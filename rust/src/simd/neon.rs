@@ -1,0 +1,98 @@
+//! NEON kernel implementations (aarch64).
+//!
+//! NEON is baseline on aarch64, so these are always dispatchable there.
+//! The complex kernels use `vld2q`/`vst2q` structured loads, which
+//! deinterleave to split-complex (SoA) registers for free — the complex
+//! multiply-accumulate is then four fused multiply-adds, the same shape
+//! as the AVX2 tile. The radix butterflies currently fall back to
+//! scalar (see `simd::radix2_combine_with`).
+
+#![allow(clippy::missing_safety_doc)]
+
+use crate::tensor::Complex32;
+
+use super::scalar;
+
+use core::arch::aarch64::*;
+
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy_neon(dst: &mut [f32], src: &[f32], k: f32) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let kv = vdupq_n_f32(k);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let r = vfmaq_f32(vld1q_f32(d.add(i)), vld1q_f32(s.add(i)), kv);
+        vst1q_f32(d.add(i), r);
+        i += 4;
+    }
+    scalar::axpy(&mut dst[i..], &src[i..], k);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn add_assign_neon(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vst1q_f32(d.add(i), vaddq_f32(vld1q_f32(d.add(i)), vld1q_f32(s.add(i))));
+        i += 4;
+    }
+    scalar::add_assign(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn max_assign_neon(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vst1q_f32(d.add(i), vmaxq_f32(vld1q_f32(d.add(i)), vld1q_f32(s.add(i))));
+        i += 4;
+    }
+    scalar::max_assign(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn mad_spectra_neon(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    let n = acc.len();
+    let ap = a.as_ptr() as *const f32;
+    let bp = b.as_ptr() as *const f32;
+    let cp = acc.as_mut_ptr() as *mut f32;
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let f = 2 * i;
+        let av = vld2q_f32(ap.add(f)); // .0 = re lanes, .1 = im lanes
+        let bv = vld2q_f32(bp.add(f));
+        let mut cv = vld2q_f32(cp.add(f));
+        cv.0 = vfmaq_f32(cv.0, av.0, bv.0);
+        cv.0 = vfmsq_f32(cv.0, av.1, bv.1);
+        cv.1 = vfmaq_f32(cv.1, av.0, bv.1);
+        cv.1 = vfmaq_f32(cv.1, av.1, bv.0);
+        vst2q_f32(cp.add(f), cv);
+        i += 4;
+    }
+    scalar::mad_spectra(&mut acc[i..], &a[i..], &b[i..]);
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn cmul_neon(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    let n = dst.len();
+    let ap = a.as_ptr() as *const f32;
+    let bp = b.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let f = 2 * i;
+        let av = vld2q_f32(ap.add(f));
+        let bv = vld2q_f32(bp.add(f));
+        let re = vfmsq_f32(vmulq_f32(av.0, bv.0), av.1, bv.1);
+        let im = vfmaq_f32(vmulq_f32(av.0, bv.1), av.1, bv.0);
+        vst2q_f32(dp.add(f), float32x4x2_t(re, im));
+        i += 4;
+    }
+    scalar::cmul(&mut dst[i..], &a[i..], &b[i..]);
+}

@@ -1,0 +1,152 @@
+//! Scalar reference implementations of every SIMD kernel.
+//!
+//! These are the dispatch fallback for unknown ISAs *and* the oracle the
+//! property tests compare every vector tier against. Keep them boring:
+//! straight loops, no manual unrolling, semantics identical to the code
+//! they replaced in `fft`, `conv` and `pool`.
+
+use crate::tensor::Complex32;
+
+/// `dst[i] += k · src[i]` — the z-contiguous direct-convolution axpy.
+pub fn axpy(dst: &mut [f32], src: &[f32], k: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += k * *s;
+    }
+}
+
+/// `dst[i] += src[i]` — per-channel accumulation of temp images.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])` — the pooling comparison sweep.
+///
+/// NaN handling mirrors x86 `maxps(dst, src)`: when either operand is
+/// NaN the *src* operand is taken (`!(d > s) → s`), so the scalar and
+/// SSE2/AVX2 tiers agree bit-for-bit even on NaN inputs. NEON `vmax`
+/// instead propagates NaN from either side — NaN inputs are outside
+/// the cross-tier parity contract (pooling a NaN image is ill-defined
+/// anyway; all finite inputs agree exactly on every tier).
+pub fn max_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        if !(*d > *s) {
+            *d = *s;
+        }
+    }
+}
+
+/// `acc[i] += a[i] · b[i]` over complex spectra — PARALLEL-MAD's inner
+/// kernel (Algorithm 2), the hot loop of every FFT-conv primitive.
+pub fn mad_spectra(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    debug_assert_eq!(acc.len(), a.len());
+    debug_assert_eq!(acc.len(), b.len());
+    for ((d, x), y) in acc.iter_mut().zip(a).zip(b) {
+        d.mad(*x, *y);
+    }
+}
+
+/// `dst[i] = a[i] · b[i]` over complex spectra — the GPU scheme's
+/// PARALLEL-MULT stage.
+pub fn cmul(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    for ((d, x), y) in dst.iter_mut().zip(a).zip(b) {
+        *d = *x * *y;
+    }
+}
+
+/// Radix-2 DIT combine over `m` butterflies: for each `k2 < m`
+///
+/// ```text
+/// t0 = dst[k2];  t1 = dst[m + k2] · tw[(k2·step) mod n]
+/// dst[k2] = t0 + t1;  dst[m + k2] = t0 - t1
+/// ```
+///
+/// Twiddle indices are accumulated rather than multiplied, mirroring the
+/// loop this replaced in `fft::dft`.
+pub fn radix2_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {
+    radix2_combine_from(dst, m, tw, step, n, 0);
+}
+
+/// [`radix2_combine`] restricted to `k2 ∈ [k0, m)` — the remainder-tail
+/// entry point shared with the vector tiers.
+pub fn radix2_combine_from(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+    k0: usize,
+) {
+    debug_assert!(dst.len() >= 2 * m);
+    let step = step % n;
+    let (lo, hi) = dst.split_at_mut(m);
+    let mut w_idx = (k0 * step) % n;
+    for k2 in k0..m {
+        let t0 = lo[k2];
+        let t1 = if w_idx == 0 { hi[k2] } else { hi[k2] * tw[w_idx] };
+        lo[k2] = t0 + t1;
+        hi[k2] = t0 - t1;
+        w_idx += step;
+        if w_idx >= n {
+            w_idx -= n;
+        }
+    }
+}
+
+/// Radix-4 DIT combine over `m` butterflies (twiddles `w^q` for rows
+/// `q = 1, 2, 3`, then the ±1/±i butterfly).
+pub fn radix4_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {
+    radix4_combine_from(dst, m, tw, step, n, 0);
+}
+
+/// [`radix4_combine`] restricted to `k2 ∈ [k0, m)`.
+pub fn radix4_combine_from(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+    k0: usize,
+) {
+    debug_assert!(dst.len() >= 4 * m);
+    let step = step % n;
+    let mut w1 = (k0 * step) % n;
+    for k2 in k0..m {
+        let t0 = dst[k2];
+        let (t1, t2, t3) = if w1 == 0 {
+            (dst[m + k2], dst[2 * m + k2], dst[3 * m + k2])
+        } else {
+            let mut w2 = w1 + w1;
+            if w2 >= n {
+                w2 -= n;
+            }
+            let mut w3 = w2 + w1;
+            if w3 >= n {
+                w3 -= n;
+            }
+            (
+                dst[m + k2] * tw[w1],
+                dst[2 * m + k2] * tw[w2],
+                dst[3 * m + k2] * tw[w3],
+            )
+        };
+        let a = t0 + t2;
+        let b = t0 - t2;
+        let c = t1 + t3;
+        let d = (t1 - t3).mul_neg_i();
+        dst[k2] = a + c;
+        dst[m + k2] = b + d;
+        dst[2 * m + k2] = a - c;
+        dst[3 * m + k2] = b - d;
+        w1 += step;
+        if w1 >= n {
+            w1 -= n;
+        }
+    }
+}

@@ -1,0 +1,460 @@
+//! AVX2+FMA and SSE2 kernel implementations.
+//!
+//! Every function here is `unsafe` because it is compiled with a
+//! `#[target_feature]` the caller must have verified at runtime
+//! (`simd::detect` / `simd::supported`); all memory access is
+//! bounds-derived from the slice arguments with unaligned loads, so
+//! there are no alignment preconditions.
+//!
+//! Complex layout note: `Complex32` is `#[repr(C)] { re, im }`, so a
+//! `&[Complex32]` reinterprets as interleaved `[re, im]` f32 pairs. The
+//! AVX2 `mad_spectra` deinterleaves 8-complex tiles into split-complex
+//! (SoA) registers — the complex multiply-accumulate then runs as four
+//! pure FMAs — and reinterleaves on store. The butterfly/multiply
+//! kernels stay interleaved and use `fmaddsub`-style sign tricks.
+
+#![allow(clippy::missing_safety_doc)]
+
+use crate::tensor::Complex32;
+
+use super::scalar;
+
+#[cfg(target_arch = "x86")]
+use core::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+// ---------------------------------------------------------------- f32
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], k: f32) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let kv = _mm256_set1_ps(k);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let r0 = _mm256_fmadd_ps(kv, _mm256_loadu_ps(s.add(i)), _mm256_loadu_ps(d.add(i)));
+        let r1 = _mm256_fmadd_ps(
+            kv,
+            _mm256_loadu_ps(s.add(i + 8)),
+            _mm256_loadu_ps(d.add(i + 8)),
+        );
+        _mm256_storeu_ps(d.add(i), r0);
+        _mm256_storeu_ps(d.add(i + 8), r1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let r = _mm256_fmadd_ps(kv, _mm256_loadu_ps(s.add(i)), _mm256_loadu_ps(d.add(i)));
+        _mm256_storeu_ps(d.add(i), r);
+        i += 8;
+    }
+    scalar::axpy(&mut dst[i..], &src[i..], k);
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn axpy_sse2(dst: &mut [f32], src: &[f32], k: f32) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let kv = _mm_set1_ps(k);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let r = _mm_add_ps(_mm_loadu_ps(d.add(i)), _mm_mul_ps(kv, _mm_loadu_ps(s.add(i))));
+        _mm_storeu_ps(d.add(i), r);
+        i += 4;
+    }
+    scalar::axpy(&mut dst[i..], &src[i..], k);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let r = _mm256_add_ps(_mm256_loadu_ps(d.add(i)), _mm256_loadu_ps(s.add(i)));
+        _mm256_storeu_ps(d.add(i), r);
+        i += 8;
+    }
+    scalar::add_assign(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn add_assign_sse2(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let r = _mm_add_ps(_mm_loadu_ps(d.add(i)), _mm_loadu_ps(s.add(i)));
+        _mm_storeu_ps(d.add(i), r);
+        i += 4;
+    }
+    scalar::add_assign(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn max_assign_avx2(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let r = _mm256_max_ps(_mm256_loadu_ps(d.add(i)), _mm256_loadu_ps(s.add(i)));
+        _mm256_storeu_ps(d.add(i), r);
+        i += 8;
+    }
+    scalar::max_assign(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn max_assign_sse2(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let r = _mm_max_ps(_mm_loadu_ps(d.add(i)), _mm_loadu_ps(s.add(i)));
+        _mm_storeu_ps(d.add(i), r);
+        i += 4;
+    }
+    scalar::max_assign(&mut dst[i..], &src[i..]);
+}
+
+// ----------------------------------------------------------- complex
+
+/// Deinterleave two 4-complex vectors into (re, im) SoA registers.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn deinterleave(v0: __m256, v1: __m256) -> (__m256, __m256) {
+    // v0 = [r0 i0 r1 i1 | r2 i2 r3 i3], v1 = [r4 i4 r5 i5 | r6 i6 r7 i7]
+    let p0 = _mm256_permute2f128_ps::<0x20>(v0, v1); // [r0 i0 r1 i1 | r4 i4 r5 i5]
+    let p1 = _mm256_permute2f128_ps::<0x31>(v0, v1); // [r2 i2 r3 i3 | r6 i6 r7 i7]
+    (
+        _mm256_shuffle_ps::<0b10_00_10_00>(p0, p1), // [r0..r3 | r4..r7]
+        _mm256_shuffle_ps::<0b11_01_11_01>(p0, p1), // [i0..i3 | i4..i7]
+    )
+}
+
+/// Inverse of [`deinterleave`].
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn interleave(re: __m256, im: __m256) -> (__m256, __m256) {
+    let lo = _mm256_unpacklo_ps(re, im); // [r0 i0 r1 i1 | r4 i4 r5 i5]
+    let hi = _mm256_unpackhi_ps(re, im); // [r2 i2 r3 i3 | r6 i6 r7 i7]
+    (
+        _mm256_permute2f128_ps::<0x20>(lo, hi),
+        _mm256_permute2f128_ps::<0x31>(lo, hi),
+    )
+}
+
+/// Interleaved complex multiply of 4 pairs: `a · b` per complex lane.
+#[inline]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn cmul4(a: __m256, b: __m256) -> __m256 {
+    let ar = _mm256_moveldup_ps(a); // [a.re a.re ...]
+    let ai = _mm256_movehdup_ps(a); // [a.im a.im ...]
+    let bs = _mm256_permute_ps::<0xB1>(b); // [b.im b.re ...]
+    // even lanes: ar·br − ai·bi ; odd lanes: ar·bi + ai·br
+    _mm256_fmaddsub_ps(ar, b, _mm256_mul_ps(ai, bs))
+}
+
+/// `v · (−i)` per complex lane: (re, im) → (im, −re).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_neg_i4(v: __m256) -> __m256 {
+    let sw = _mm256_permute_ps::<0xB1>(v); // (im, re)
+    // Flip the sign of the odd (imaginary) lanes.
+    const S: i32 = i32::MIN;
+    let neg_odd = _mm256_castsi256_ps(_mm256_set_epi32(S, 0, S, 0, S, 0, S, 0));
+    _mm256_xor_ps(sw, neg_odd)
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn mad_spectra_avx2(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    let n = acc.len();
+    let ap = a.as_ptr() as *const f32;
+    let bp = b.as_ptr() as *const f32;
+    let cp = acc.as_mut_ptr() as *mut f32;
+    let mut i = 0usize; // complex index
+    while i + 8 <= n {
+        let f = 2 * i;
+        let (ar, ai) = deinterleave(_mm256_loadu_ps(ap.add(f)), _mm256_loadu_ps(ap.add(f + 8)));
+        let (br, bi) = deinterleave(_mm256_loadu_ps(bp.add(f)), _mm256_loadu_ps(bp.add(f + 8)));
+        let (mut cr, mut ci) =
+            deinterleave(_mm256_loadu_ps(cp.add(f)), _mm256_loadu_ps(cp.add(f + 8)));
+        cr = _mm256_fmadd_ps(ar, br, cr);
+        cr = _mm256_fnmadd_ps(ai, bi, cr);
+        ci = _mm256_fmadd_ps(ar, bi, ci);
+        ci = _mm256_fmadd_ps(ai, br, ci);
+        let (o0, o1) = interleave(cr, ci);
+        _mm256_storeu_ps(cp.add(f), o0);
+        _mm256_storeu_ps(cp.add(f + 8), o1);
+        i += 8;
+    }
+    scalar::mad_spectra(&mut acc[i..], &a[i..], &b[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn cmul_avx2_slices(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    let n = dst.len();
+    let ap = a.as_ptr() as *const f32;
+    let bp = b.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let f = 2 * i;
+        let r = cmul4(_mm256_loadu_ps(ap.add(f)), _mm256_loadu_ps(bp.add(f)));
+        _mm256_storeu_ps(dp.add(f), r);
+        i += 4;
+    }
+    scalar::cmul(&mut dst[i..], &a[i..], &b[i..]);
+}
+
+/// Sign mask flipping the even (real) lanes — emulates `addsub` on SSE2.
+#[inline]
+#[target_feature(enable = "sse2")]
+unsafe fn sign_even_sse2() -> __m128 {
+    const S: i32 = i32::MIN;
+    _mm_castsi128_ps(_mm_set_epi32(0, S, 0, S))
+}
+
+/// Interleaved complex multiply of 2 pairs (SSE2, no FMA/addsub).
+#[inline]
+#[target_feature(enable = "sse2")]
+unsafe fn cmul2(a: __m128, b: __m128) -> __m128 {
+    let ar = _mm_shuffle_ps::<0xA0>(a, a); // [a0.re a0.re a1.re a1.re]
+    let ai = _mm_shuffle_ps::<0xF5>(a, a); // [a0.im a0.im a1.im a1.im]
+    let bs = _mm_shuffle_ps::<0xB1>(b, b); // [b0.im b0.re b1.im b1.re]
+    let t = _mm_xor_ps(_mm_mul_ps(ai, bs), sign_even_sse2()); // [−ai·bi, ai·br, ...]
+    _mm_add_ps(_mm_mul_ps(ar, b), t)
+}
+
+/// `v · (−i)` per complex lane (SSE2).
+#[inline]
+#[target_feature(enable = "sse2")]
+unsafe fn mul_neg_i2(v: __m128) -> __m128 {
+    let sw = _mm_shuffle_ps::<0xB1>(v, v);
+    const S: i32 = i32::MIN;
+    let neg_odd = _mm_castsi128_ps(_mm_set_epi32(S, 0, S, 0));
+    _mm_xor_ps(sw, neg_odd)
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn mad_spectra_sse2(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    let n = acc.len();
+    let ap = a.as_ptr() as *const f32;
+    let bp = b.as_ptr() as *const f32;
+    let cp = acc.as_mut_ptr() as *mut f32;
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let f = 2 * i;
+        let prod = cmul2(_mm_loadu_ps(ap.add(f)), _mm_loadu_ps(bp.add(f)));
+        _mm_storeu_ps(cp.add(f), _mm_add_ps(_mm_loadu_ps(cp.add(f)), prod));
+        i += 2;
+    }
+    scalar::mad_spectra(&mut acc[i..], &a[i..], &b[i..]);
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn cmul_sse2_slices(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+    let n = dst.len();
+    let ap = a.as_ptr() as *const f32;
+    let bp = b.as_ptr() as *const f32;
+    let dp = dst.as_mut_ptr() as *mut f32;
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let f = 2 * i;
+        let r = cmul2(_mm_loadu_ps(ap.add(f)), _mm_loadu_ps(bp.add(f)));
+        _mm_storeu_ps(dp.add(f), r);
+        i += 2;
+    }
+    scalar::cmul(&mut dst[i..], &a[i..], &b[i..]);
+}
+
+// -------------------------------------------------------- butterflies
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn radix2_combine_avx2(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    let base = dst.as_mut_ptr() as *mut f32;
+    let lo = base;
+    let hi = base.add(2 * m);
+    let mut wbuf = [Complex32::ZERO; 4];
+    // Twiddle index (k2·step) mod n by accumulation — no per-butterfly
+    // multiply/modulo in the gather (mirrors the scalar path).
+    let step = step % n;
+    let mut w = 0usize;
+    let mut k2 = 0usize;
+    while k2 + 4 <= m {
+        for slot in wbuf.iter_mut() {
+            *slot = tw[w];
+            w += step;
+            if w >= n {
+                w -= n;
+            }
+        }
+        let wv = _mm256_loadu_ps(wbuf.as_ptr() as *const f32);
+        let t0 = _mm256_loadu_ps(lo.add(2 * k2));
+        let t1 = cmul4(_mm256_loadu_ps(hi.add(2 * k2)), wv);
+        _mm256_storeu_ps(lo.add(2 * k2), _mm256_add_ps(t0, t1));
+        _mm256_storeu_ps(hi.add(2 * k2), _mm256_sub_ps(t0, t1));
+        k2 += 4;
+    }
+    scalar::radix2_combine_from(dst, m, tw, step, n, k2);
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn radix2_combine_sse2(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    let base = dst.as_mut_ptr() as *mut f32;
+    let lo = base;
+    let hi = base.add(2 * m);
+    let mut wbuf = [Complex32::ZERO; 2];
+    let step = step % n;
+    let mut w = 0usize;
+    let mut k2 = 0usize;
+    while k2 + 2 <= m {
+        for slot in wbuf.iter_mut() {
+            *slot = tw[w];
+            w += step;
+            if w >= n {
+                w -= n;
+            }
+        }
+        let wv = _mm_loadu_ps(wbuf.as_ptr() as *const f32);
+        let t0 = _mm_loadu_ps(lo.add(2 * k2));
+        let t1 = cmul2(_mm_loadu_ps(hi.add(2 * k2)), wv);
+        _mm_storeu_ps(lo.add(2 * k2), _mm_add_ps(t0, t1));
+        _mm_storeu_ps(hi.add(2 * k2), _mm_sub_ps(t0, t1));
+        k2 += 2;
+    }
+    scalar::radix2_combine_from(dst, m, tw, step, n, k2);
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn radix4_combine_avx2(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    let base = dst.as_mut_ptr() as *mut f32;
+    let d0 = base;
+    let d1 = base.add(2 * m);
+    let d2 = base.add(4 * m);
+    let d3 = base.add(6 * m);
+    // Gathered twiddles: w¹[4], w²[4], w³[4]. The w¹ index accumulates
+    // (no per-butterfly multiply/modulo); w² and w³ are additions with
+    // a conditional wrap.
+    let mut wbuf = [Complex32::ZERO; 12];
+    let step = step % n;
+    let mut w1 = 0usize;
+    let mut k2 = 0usize;
+    while k2 + 4 <= m {
+        for j in 0..4 {
+            let mut w2 = w1 + w1;
+            if w2 >= n {
+                w2 -= n;
+            }
+            let mut w3 = w2 + w1;
+            if w3 >= n {
+                w3 -= n;
+            }
+            wbuf[j] = tw[w1];
+            wbuf[4 + j] = tw[w2];
+            wbuf[8 + j] = tw[w3];
+            w1 += step;
+            if w1 >= n {
+                w1 -= n;
+            }
+        }
+        let wp = wbuf.as_ptr() as *const f32;
+        let t0 = _mm256_loadu_ps(d0.add(2 * k2));
+        let t1 = cmul4(_mm256_loadu_ps(d1.add(2 * k2)), _mm256_loadu_ps(wp));
+        let t2 = cmul4(_mm256_loadu_ps(d2.add(2 * k2)), _mm256_loadu_ps(wp.add(8)));
+        let t3 = cmul4(_mm256_loadu_ps(d3.add(2 * k2)), _mm256_loadu_ps(wp.add(16)));
+        let a = _mm256_add_ps(t0, t2);
+        let b = _mm256_sub_ps(t0, t2);
+        let c = _mm256_add_ps(t1, t3);
+        let d = mul_neg_i4(_mm256_sub_ps(t1, t3));
+        _mm256_storeu_ps(d0.add(2 * k2), _mm256_add_ps(a, c));
+        _mm256_storeu_ps(d1.add(2 * k2), _mm256_add_ps(b, d));
+        _mm256_storeu_ps(d2.add(2 * k2), _mm256_sub_ps(a, c));
+        _mm256_storeu_ps(d3.add(2 * k2), _mm256_sub_ps(b, d));
+        k2 += 4;
+    }
+    scalar::radix4_combine_from(dst, m, tw, step, n, k2);
+}
+
+#[target_feature(enable = "sse2")]
+pub unsafe fn radix4_combine_sse2(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    let base = dst.as_mut_ptr() as *mut f32;
+    let d0 = base;
+    let d1 = base.add(2 * m);
+    let d2 = base.add(4 * m);
+    let d3 = base.add(6 * m);
+    let mut wbuf = [Complex32::ZERO; 6];
+    let step = step % n;
+    let mut w1 = 0usize;
+    let mut k2 = 0usize;
+    while k2 + 2 <= m {
+        for j in 0..2 {
+            let mut w2 = w1 + w1;
+            if w2 >= n {
+                w2 -= n;
+            }
+            let mut w3 = w2 + w1;
+            if w3 >= n {
+                w3 -= n;
+            }
+            wbuf[j] = tw[w1];
+            wbuf[2 + j] = tw[w2];
+            wbuf[4 + j] = tw[w3];
+            w1 += step;
+            if w1 >= n {
+                w1 -= n;
+            }
+        }
+        let wp = wbuf.as_ptr() as *const f32;
+        let t0 = _mm_loadu_ps(d0.add(2 * k2));
+        let t1 = cmul2(_mm_loadu_ps(d1.add(2 * k2)), _mm_loadu_ps(wp));
+        let t2 = cmul2(_mm_loadu_ps(d2.add(2 * k2)), _mm_loadu_ps(wp.add(4)));
+        let t3 = cmul2(_mm_loadu_ps(d3.add(2 * k2)), _mm_loadu_ps(wp.add(8)));
+        let a = _mm_add_ps(t0, t2);
+        let b = _mm_sub_ps(t0, t2);
+        let c = _mm_add_ps(t1, t3);
+        let d = mul_neg_i2(_mm_sub_ps(t1, t3));
+        _mm_storeu_ps(d0.add(2 * k2), _mm_add_ps(a, c));
+        _mm_storeu_ps(d1.add(2 * k2), _mm_add_ps(b, d));
+        _mm_storeu_ps(d2.add(2 * k2), _mm_sub_ps(a, c));
+        _mm_storeu_ps(d3.add(2 * k2), _mm_sub_ps(b, d));
+        k2 += 2;
+    }
+    scalar::radix4_combine_from(dst, m, tw, step, n, k2);
+}

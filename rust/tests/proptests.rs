@@ -112,6 +112,195 @@ fn prop_random_nets_baselines_agree() {
     });
 }
 
+// ---------------------------------------------------------------------
+// SIMD kernel layer: every vector tier must match the scalar oracle on
+// every kernel family, including odd lengths and remainder tails.
+// ---------------------------------------------------------------------
+
+use znni::simd;
+use znni::tensor::Complex32;
+
+fn flat_c(v: &[Complex32]) -> Vec<f32> {
+    v.iter().flat_map(|c| [c.re, c.im]).collect()
+}
+
+fn gen_c32(g: &mut znni::util::quick::Gen, n: usize) -> Vec<Complex32> {
+    (0..n)
+        .map(|_| Complex32::new(g.f32(-1.0, 1.0), g.f32(-1.0, 1.0)))
+        .collect()
+}
+
+#[test]
+fn prop_simd_f32_kernels_match_scalar_every_tier() {
+    let tiers = simd::supported_tiers();
+    check_with(Config { cases: 32, ..Default::default() }, "simd f32 parity", |g| {
+        // Odd lengths force the vector remainder tails.
+        let n = g.usize(0, 70);
+        let src = g.vec_f32(n);
+        let base = g.vec_f32(n);
+        let k = g.f32(-2.0, 2.0);
+        for &tier in &tiers {
+            let mut want = base.clone();
+            znni::simd::scalar::axpy(&mut want, &src, k);
+            let mut got = base.clone();
+            simd::axpy_with(tier, &mut got, &src, k);
+            assert_allclose(&got, &want, 1e-6, 1e-4, &format!("axpy {tier:?} n={n}"));
+
+            let mut want = base.clone();
+            znni::simd::scalar::add_assign(&mut want, &src);
+            let mut got = base.clone();
+            simd::add_assign_with(tier, &mut got, &src);
+            assert_allclose(&got, &want, 0.0, 0.0, &format!("add_assign {tier:?} n={n}"));
+
+            let mut want = base.clone();
+            znni::simd::scalar::max_assign(&mut want, &src);
+            let mut got = base.clone();
+            simd::max_assign_with(tier, &mut got, &src);
+            assert_allclose(&got, &want, 0.0, 0.0, &format!("max_assign {tier:?} n={n}"));
+        }
+    });
+}
+
+#[test]
+fn prop_simd_complex_kernels_match_scalar_every_tier() {
+    let tiers = simd::supported_tiers();
+    check_with(Config { cases: 32, ..Default::default() }, "simd complex parity", |g| {
+        let n = g.usize(0, 45);
+        let a = gen_c32(g, n);
+        let b = gen_c32(g, n);
+        let acc = gen_c32(g, n);
+        for &tier in &tiers {
+            let mut want = acc.clone();
+            znni::simd::scalar::mad_spectra(&mut want, &a, &b);
+            let mut got = acc.clone();
+            simd::mad_spectra_with(tier, &mut got, &a, &b);
+            assert_allclose(
+                &flat_c(&got),
+                &flat_c(&want),
+                1e-6,
+                1e-4,
+                &format!("mad_spectra {tier:?} n={n}"),
+            );
+
+            let mut want = acc.clone();
+            znni::simd::scalar::cmul(&mut want, &a, &b);
+            let mut got = acc.clone();
+            simd::cmul_with(tier, &mut got, &a, &b);
+            assert_allclose(
+                &flat_c(&got),
+                &flat_c(&want),
+                1e-6,
+                1e-4,
+                &format!("cmul {tier:?} n={n}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_simd_butterflies_match_scalar_every_tier() {
+    let tiers = simd::supported_tiers();
+    check_with(Config { cases: 32, ..Default::default() }, "simd butterfly parity", |g| {
+        let m = g.usize(1, 20);
+        let fft_n = m * 4 * g.usize(1, 4); // a plausible transform size
+        let step = g.usize(0, fft_n - 1);
+        let tw: Vec<Complex32> = (0..fft_n)
+            .map(|j| Complex32::cis(-2.0 * std::f64::consts::PI * j as f64 / fft_n as f64))
+            .collect();
+        let d2 = gen_c32(g, 2 * m);
+        let d4 = gen_c32(g, 4 * m);
+        for &tier in &tiers {
+            let mut want = d2.clone();
+            znni::simd::scalar::radix2_combine(&mut want, m, &tw, step, fft_n);
+            let mut got = d2.clone();
+            simd::radix2_combine_with(tier, &mut got, m, &tw, step, fft_n);
+            assert_allclose(
+                &flat_c(&got),
+                &flat_c(&want),
+                1e-6,
+                1e-4,
+                &format!("radix2 {tier:?} m={m}"),
+            );
+
+            let mut want = d4.clone();
+            znni::simd::scalar::radix4_combine(&mut want, m, &tw, step, fft_n);
+            let mut got = d4.clone();
+            simd::radix4_combine_with(tier, &mut got, m, &tw, step, fft_n);
+            assert_allclose(
+                &flat_c(&got),
+                &flat_c(&want),
+                1e-6,
+                1e-4,
+                &format!("radix4 {tier:?} m={m}"),
+            );
+        }
+    });
+}
+
+/// End-to-end parity: force each supported dispatch tier globally and
+/// run the full primitives against the (tier-independent) scalar
+/// oracles — conv via `conv_layer_reference`, pooling via
+/// `pool_one_scalar`, plus an FFT round-trip.
+#[test]
+fn simd_forced_tiers_end_to_end() {
+    let pool = tpool();
+    for tier in simd::supported_tiers() {
+        simd::force(Some(tier));
+        let label = |what: &str| format!("{what} under {tier:?}");
+
+        // Direct + FFT convolution primitives.
+        let input = Tensor5::random(Shape5::new(2, 3, 7, 6, 9), 42);
+        let w = Weights::random(3, 3, [3, 2, 3], 43);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = znni::conv::direct::conv_direct_mkl(&input, &w, Activation::Relu, &pool);
+        assert_allclose(got.data(), expect.data(), 1e-4, 1e-3, &label("direct-mkl"));
+        let got = znni::conv::direct::conv_direct_naive(&input, &w, Activation::Relu, &pool);
+        assert_allclose(got.data(), expect.data(), 1e-4, 1e-3, &label("direct-naive"));
+        let got = znni::conv::fft_tp::conv_fft_tp(
+            input.clone_tensor(),
+            &w,
+            Activation::Relu,
+            &pool,
+        );
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, &label("fft-tp"));
+        let got = znni::conv::fft_dp::conv_fft_dp(
+            input.clone_tensor(),
+            &w,
+            Activation::Relu,
+            &pool,
+        );
+        assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, &label("fft-dp"));
+
+        // Pooling: max_pool against the scalar per-image oracle.
+        let t = Tensor5::random(Shape5::new(1, 2, 4, 6, 8), 7);
+        let mp = znni::pool::max_pool(&t, [2, 2, 2], &pool);
+        for f in 0..2 {
+            let mut want = vec![0.0f32; 2 * 3 * 4];
+            znni::pool::pool_one_scalar(
+                t.image(0, f),
+                [4, 6, 8],
+                [2, 2, 2],
+                [0, 0, 0],
+                [2, 3, 4],
+                &mut want,
+            );
+            assert_allclose(mp.image(0, f), &want, 0.0, 0.0, &label("max_pool"));
+        }
+
+        // FFT round-trip under the forced tier.
+        let plan = znni::fft::Fft3::new([8, 9, 10]);
+        let mut sc = znni::fft::fft3d::Fft3Scratch::new();
+        let dims = [6, 7, 8];
+        let img = Tensor5::random(Shape5::from_spatial(1, 1, dims), 11);
+        let mut freq = vec![Complex32::ZERO; plan.complex_len()];
+        plan.forward(img.image(0, 0), dims, &mut freq, &mut sc);
+        let mut back = vec![0.0f32; dims[0] * dims[1] * dims[2]];
+        plan.inverse_crop(&mut freq, [0, 0, 0], dims, &mut back, &mut sc);
+        assert_allclose(&back, img.image(0, 0), 1e-4, 1e-3, &label("fft roundtrip"));
+    }
+    simd::force(None);
+}
+
 #[test]
 fn prop_mpf_then_recombine_is_lossless_permutation() {
     // Recombination of MPF fragments of the *identity* net (no convs

@@ -1,0 +1,130 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The testbed has no crates.io access, so this vendored shim provides
+//! the small API surface the workspace actually uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros and the [`Context`]
+//! extension trait. Errors carry a message chain only (no backtraces,
+//! no downcasting) — enough for CLI reporting and tests.
+
+use std::fmt::{self, Display};
+
+/// A message-carrying error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, `anyhow`-style (`context: cause`).
+    pub fn context<C: Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option`, converting the error side
+/// into [`Error`].
+pub trait Context<T> {
+    fn context<C: Display>(self, c: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // via the blanket From
+        if v == 0 {
+            bail!("zero is not allowed");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_bail() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("0").unwrap_err().to_string(), "zero is not allowed");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Result<()> = Err(anyhow!("inner")).context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: inner");
+        let o: Result<u32> = None.with_context(|| "missing");
+        assert_eq!(o.unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn display_and_debug_agree() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        assert_eq!(format!("{e:?}"), "x = 3");
+    }
+}
