@@ -128,8 +128,9 @@ fn main() -> anyhow::Result<()> {
         out_voxels: 1,
     };
     let wcp = compile(&net, &wplan, &weights)?;
-    let runner = |t: Tensor5| wcp.run(t, pool);
-    let expect = dense_reference(&net, &runner, &corner);
+    let mut wctx = znni::exec::ExecCtx::new(pool);
+    let mut runner = |t: Tensor5| wcp.run(t, &mut wctx);
+    let expect = dense_reference(&net, &mut runner, &corner);
     let mut worst = 0.0f32;
     let esh = expect.shape();
     for f in 0..esh.f {

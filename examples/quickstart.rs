@@ -25,12 +25,14 @@ fn main() -> anyhow::Result<()> {
         println!("  {k:<12} {v}");
     }
 
-    // 3. Compile with weights and run a patch.
+    // 3. Compile with weights; size the execution arena from the plan
+    //    (same Table II model the search used) and run a patch.
     let weights = make_weights(&net, 42);
     let cp = compile(&net, &plan, &weights)?;
+    let mut ctx = cp.make_ctx(pool)?;
     let input = Tensor5::random(plan.input, 7);
     let t0 = std::time::Instant::now();
-    let out = cp.run(input, pool);
+    let out = cp.run(input, &mut ctx);
     let secs = t0.elapsed().as_secs_f64();
     let osh = out.shape();
     println!(
@@ -49,7 +51,7 @@ fn main() -> anyhow::Result<()> {
             let bufs: Vec<&[f32]> =
                 weights.iter().flat_map(|w| [w.raw(), w.raw_bias()]).collect();
             let pjrt_out = rt.execute_tensor("tiny_net13", &input, &bufs)?;
-            let native = cp.run(input, pool);
+            let native = cp.run(input, &mut ctx);
             let diff = pjrt_out.max_abs_diff(&native);
             println!("PJRT artifact vs native primitives: max |Δ| = {diff:.2e}");
         }

@@ -1,6 +1,10 @@
 //! Serving demo: the coordinator takes whole-volume requests, splits
 //! them into patches (overlap-save), runs the optimized plan, and
-//! reassembles — reporting serving metrics.
+//! reassembles — reporting serving metrics, including the steady-state
+//! memory discipline of the arena-backed execution contexts: after a
+//! warmup round the patch loop performs zero transient allocations, and
+//! the per-worker arena high-water mark stays within the plan's
+//! Table II workspace requirement.
 //!
 //!     cargo run --release --example serve [volume_extent] [num_requests]
 
@@ -8,6 +12,7 @@ use znni::coordinator::{Coordinator, InferenceRequest};
 use znni::device::Device;
 use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
 use znni::tensor::{Shape5, Tensor5};
+use znni::util::human_bytes;
 use znni::util::pool::TaskPool;
 
 fn main() -> anyhow::Result<()> {
@@ -21,21 +26,41 @@ fn main() -> anyhow::Result<()> {
     let weights = make_weights(&net, 11);
     let cp = compile(&net, &plan, &weights)?;
     let coord = Coordinator::new(net, cp)?;
+    let planned = coord.workspace_req(pool.workers());
     println!(
-        "serving {requests} request(s) of {n}³ with patch {}³ (cover {:?})",
+        "serving {requests} request(s) of {n}³ with patch {}³ (cover {:?}), planned arena {} / worker",
         coord.net.field_of_view()[0].max(plan.input.x),
-        coord.cover()
+        coord.cover(),
+        human_bytes(planned.bytes),
     );
-    let reqs = (0..requests)
-        .map(|i| InferenceRequest {
-            id: i as u64,
-            volume: Tensor5::random(Shape5::new(1, 1, n, n, n), i as u64),
-        })
-        .collect();
-    let (resps, metrics) = coord.serve(reqs, pool)?;
+
+    let mk_reqs = |base: u64| -> Vec<InferenceRequest> {
+        (0..requests)
+            .map(|i| InferenceRequest {
+                id: base + i as u64,
+                volume: Tensor5::random(Shape5::new(1, 1, n, n, n), base + i as u64),
+            })
+            .collect()
+    };
+
+    // Round 1: cold — the arenas warm up (transient allocations here
+    // are the one-time working-set build).
+    let (resps, warm) = coord.serve(mk_reqs(0), pool)?;
     for r in &resps {
         println!("  request {} -> {} ({} voxels)", r.id, r.output.shape(), r.voxels);
     }
-    println!("{}", metrics.report());
+    println!("warmup : {}", warm.report());
+
+    // Round 2: steady state — every buffer comes from the warm arenas.
+    let (_, steady) = coord.serve(mk_reqs(1000), pool)?;
+    println!("steady : {}", steady.report());
+    println!(
+        "steady-state: {} transient allocations after warmup; worker cache footprint {} \
+         (per-layer Table II plan {}), process arena hwm {}",
+        steady.arena_fresh_allocs,
+        human_bytes(steady.arena_hwm_bytes),
+        human_bytes(planned.bytes),
+        human_bytes(znni::memory::arena_hwm()),
+    );
     Ok(())
 }

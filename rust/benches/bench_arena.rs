@@ -1,0 +1,94 @@
+//! Warm-ctx vs alloc-per-call microbench for the arena-backed
+//! execution contexts (ISSUE 2).
+//!
+//! Runs one task-parallel FFT conv layer (the paper's flagship CPU
+//! primitive and the heaviest allocator customer: input spectra, output
+//! spectra, per-chip primary buffers, the output tensor) two ways:
+//!
+//! * **alloc-per-call** — a fresh `ExecCtx` per execute, so every
+//!   spectrum/workspace/output is a fresh heap allocation (the
+//!   pre-arena behaviour);
+//! * **warm-ctx** — one `ExecCtx` reused across calls; after the first
+//!   call every take hits the arena free lists.
+//!
+//! Results go to stdout and `BENCH_arena.json` (default
+//! `../BENCH_arena.json`, i.e. the repository root when run via
+//! `cargo bench --bench bench_arena`; override with `ZNNI_BENCH_OUT`).
+
+use std::time::Duration;
+
+use znni::conv::{fft_tp::conv_fft_tp, Activation, Weights};
+use znni::exec::ExecCtx;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::{time_budget, Scale, Table};
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    let scale = Scale::from_env();
+    let (n, f, s) = match scale {
+        Scale::Paper => (48usize, 16usize, 2usize),
+        Scale::Small => (24, 8, 1),
+        Scale::Tiny => (12, 4, 1),
+    };
+    let budget = match scale {
+        Scale::Paper => Duration::from_millis(1500),
+        Scale::Small => Duration::from_millis(700),
+        Scale::Tiny => Duration::from_millis(300),
+    };
+    let sh = Shape5::new(s, f, n, n, n);
+    let w = Weights::random(f, f, [3, 3, 3], 7);
+    println!("== Arena microbench: fft_tp layer {n}³, f=f'={f}, S={s} ==");
+
+    // Alloc-per-call: cold context every execute.
+    let cold = time_budget(budget, || {
+        let mut ctx = ExecCtx::new(pool);
+        let t = Tensor5::random(sh, 3);
+        let out = conv_fft_tp(t, &w, Activation::Relu, &mut ctx);
+        std::hint::black_box(&out);
+    });
+
+    // Warm context: one arena for the whole stream.
+    let mut ctx = ExecCtx::new(pool);
+    let warm = time_budget(budget, || {
+        let t = Tensor5::random(sh, 3);
+        let out = conv_fft_tp(t, &w, Activation::Relu, &mut ctx);
+        ctx.retire(out);
+    });
+    let stats = ctx.arena.stats();
+
+    let cold_ms = cold.secs() * 1e3;
+    let warm_ms = warm.secs() * 1e3;
+    let mut table = Table::new(&["mode", "ms/layer", "speedup", "arena fresh", "arena reuses"]);
+    table.row(vec!["alloc-per-call".into(), format!("{cold_ms:.2}"), "1.00×".into(), "-".into(), "-".into()]);
+    table.row(vec![
+        "warm-ctx".into(),
+        format!("{warm_ms:.2}"),
+        format!("{:.2}×", cold_ms / warm_ms.max(1e-9)),
+        stats.fresh_allocs.to_string(),
+        stats.reuses.to_string(),
+    ]);
+    table.print();
+    println!(
+        "arena hwm {} (held {} / outstanding {})",
+        znni::util::human_bytes(stats.hwm_bytes),
+        znni::util::human_bytes(stats.held_bytes),
+        znni::util::human_bytes(stats.outstanding_bytes),
+    );
+
+    let path = std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_arena.json".into());
+    let json = format!(
+        "{{\n  \"scale\": \"{:?}\",\n  \"layer\": \"fft_tp {n}^3 f={f} S={s}\",\n  \"alloc_per_call_ms\": {:.3},\n  \"warm_ctx_ms\": {:.3},\n  \"speedup\": {:.3},\n  \"arena_fresh_allocs\": {},\n  \"arena_reuses\": {},\n  \"arena_hwm_bytes\": {}\n}}\n",
+        scale,
+        cold_ms,
+        warm_ms,
+        cold_ms / warm_ms.max(1e-9),
+        stats.fresh_allocs,
+        stats.reuses,
+        stats.hwm_bytes,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

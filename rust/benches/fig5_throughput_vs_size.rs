@@ -47,9 +47,10 @@ fn main() {
                 match search(&net, &space, &cm) {
                     Some(plan) => {
                         let cp = compile(&net, &plan, &weights).unwrap();
+                        let mut ctx = cp.make_ctx(pool).unwrap();
                         let input = Tensor5::random(plan.input, 3);
                         let t0 = std::time::Instant::now();
-                        let out = cp.run(input, pool);
+                        let out = cp.run(input, &mut ctx);
                         let mut secs = t0.elapsed().as_secs_f64();
                         if gpu_mode {
                             secs += gpu.transfer_secs(

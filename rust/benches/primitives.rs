@@ -8,6 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use znni::conv::{Activation, Weights};
+use znni::exec::ExecCtx;
 use znni::layers::{ConvLayer, LayerPrimitive};
 use znni::memory::model::ConvAlgo;
 use znni::tensor::{Shape5, Tensor5};
@@ -16,6 +17,7 @@ use znni::util::pool::TaskPool;
 
 fn main() {
     let pool = TaskPool::global();
+    let mut ctx = ExecCtx::new(pool);
     let scale = Scale::from_env();
     let (n, f, s) = match scale {
         Scale::Paper => (48, 16, 2),
@@ -40,7 +42,7 @@ fn main() {
             let flops = layer.flops(sh);
             let sample = time_budget(budget, || {
                 let t = Tensor5::random(sh, 3);
-                std::hint::black_box(layer.execute(t, pool));
+                std::hint::black_box(layer.execute(t, &mut ctx));
             });
             let ms = sample.secs() * 1e3;
             if algo == ConvAlgo::DirectNaive {

@@ -47,6 +47,7 @@ fn main() {
 
     println!("\n== time ∝ FLOPs check (GFLOP/s should be ~flat per algo) ==");
     let pool = TaskPool::global();
+    let mut ctx = znni::exec::ExecCtx::new(pool);
     let mut t2 = Table::new(&["algo", "n", "FLOPs", "ms", "GFLOP/s"]);
     let budget = Duration::from_millis(400);
     for algo in [ConvAlgo::DirectMkl, ConvAlgo::FftTaskParallel] {
@@ -57,7 +58,7 @@ fn main() {
             let flops = layer.flops(sh);
             let s = time_budget(budget, || {
                 let inp = Tensor5::random(sh, 3);
-                std::hint::black_box(layer.execute(inp, pool));
+                std::hint::black_box(layer.execute(inp, &mut ctx));
             });
             t2.row(vec![
                 algo.tag().into(),

@@ -23,7 +23,12 @@ fn main() {
         let model = conv_memory_bytes(algo, &d, pool.workers());
         let input = Tensor5::random(sh, 5);
         let in_bytes = sh.bytes_f32();
-        let (_out, peak) = znni::memory::measure(|| layer.execute(input, pool));
+        // Cold context per measurement so arena takes register like the
+        // direct allocations they replaced.
+        let (_out, peak) = znni::memory::measure(|| {
+            let mut ctx = znni::exec::ExecCtx::new(pool);
+            layer.execute(input, &mut ctx)
+        });
         let measured = peak + in_bytes;
         t.row(vec![
             algo.name().into(),

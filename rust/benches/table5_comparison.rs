@@ -44,7 +44,7 @@ fn main() {
         let input = Tensor5::random(Shape5::new(1, net.f_in, n, n, n), 3);
         for b in Baseline::ALL {
             let t0 = std::time::Instant::now();
-            match run_baseline(b, &net, &weights, &input, pool) {
+            match run_baseline(b, &net, &weights, &input, &mut znni::exec::ExecCtx::new(pool)) {
                 Ok(out) => {
                     let secs = t0.elapsed().as_secs_f64();
                     let osh = out.shape();

@@ -14,6 +14,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::conv::{Activation, Weights};
 use crate::device::Device;
+use crate::exec::ExecCtx;
 use crate::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
 use crate::memory::model::{ConvAlgo, ConvDims};
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
@@ -83,9 +84,10 @@ pub fn run_cpu_only(
     space.max_candidates = 6;
     let plan = search(net, &space, cm).ok_or_else(|| anyhow!("no feasible CPU plan"))?;
     let cp = compile(net, &plan, weights)?;
+    let mut ctx = cp.make_ctx(pool)?;
     let input = Tensor5::random(plan.input, 1);
     let t0 = Instant::now();
-    let out = cp.run(input, pool);
+    let out = cp.run(input, &mut ctx);
     Ok(ApproachResult {
         approach: Approach::CpuOnly,
         input_extent: plan.input.x,
@@ -110,10 +112,11 @@ pub fn run_gpu_only(
     space.max_candidates = 6;
     let plan = search(net, &space, cm).ok_or_else(|| anyhow!("no feasible GPU plan"))?;
     let cp = compile(net, &plan, weights)?;
+    let mut ctx = cp.make_ctx(pool)?;
     let input = Tensor5::random(plan.input, 1);
     let in_bytes = input.shape().bytes_f32();
     let t0 = Instant::now();
-    let out = cp.run(input, pool);
+    let out = cp.run(input, &mut ctx);
     let compute = t0.elapsed().as_secs_f64();
     let transfer = gpu.transfer_secs(in_bytes + out.shape().bytes_f32());
     Ok(ApproachResult {
@@ -173,6 +176,7 @@ pub fn run_gpu_host_ram(
     }
     let n = chosen.ok_or_else(|| anyhow!("no feasible GPU+host plan"))?;
     let input_sh = Shape5::new(1, net.f_in, n, n, n);
+    let mut ctx = ExecCtx::new(pool);
     let mut cur = Tensor5::random(input_sh, 1);
     let mut wi = 0;
     let mut compute = 0.0f64;
@@ -193,16 +197,19 @@ pub fn run_gpu_host_ram(
                 peak_mem = peak_mem.max(ish.bytes_f32() * 2);
                 let t0 = Instant::now();
                 let (out, moved) =
-                    crate::sublayer::execute(&cur, &weights[wi], &plan, Activation::Relu, pool);
+                    crate::sublayer::execute(&cur, &weights[wi], &plan, Activation::Relu, &mut ctx);
                 compute += t0.elapsed().as_secs_f64();
                 transfer_bytes += moved;
+                ctx.retire(cur);
                 cur = out;
                 wi += 1;
             }
             LayerSpec::Pool { p } => {
                 let t0 = Instant::now();
-                cur = crate::pool::mpf_forward(&cur, *p, pool);
+                let out = crate::pool::mpf_forward(&cur, *p, &mut ctx);
                 compute += t0.elapsed().as_secs_f64();
+                ctx.retire(cur);
+                cur = out;
             }
         }
     }
@@ -442,6 +449,7 @@ pub fn run_gpu_host_theta(
     let theta = theta.clamp(1, net.layers.len());
 
     // --- head: θ layers, one at a time (as run_gpu_host_ram) ---
+    let mut ctx = ExecCtx::new(pool);
     let mut cur = Tensor5::random(input_sh, 1);
     let mut wi = 0;
     let mut compute = 0.0f64;
@@ -461,16 +469,19 @@ pub fn run_gpu_host_theta(
                     .ok_or_else(|| anyhow!("layer does not fit the device"))?;
                 let t0 = Instant::now();
                 let (out, moved) =
-                    crate::sublayer::execute(&cur, &weights[wi], &plan, Activation::Relu, pool);
+                    crate::sublayer::execute(&cur, &weights[wi], &plan, Activation::Relu, &mut ctx);
                 compute += t0.elapsed().as_secs_f64();
                 transfer_bytes += moved;
+                ctx.retire(cur);
                 cur = out;
                 wi += 1;
             }
             LayerSpec::Pool { p } => {
                 let t0 = Instant::now();
-                cur = crate::pool::mpf_forward(&cur, *p, pool);
+                let out = crate::pool::mpf_forward(&cur, *p, &mut ctx);
                 compute += t0.elapsed().as_secs_f64();
+                ctx.retire(cur);
+                cur = out;
             }
         }
     }
@@ -559,9 +570,13 @@ pub fn run_gpu_host_theta(
                     };
                     let layer = ConvLayer::new(weights[twi].clone(), algo, Activation::Relu);
                     twi += 1;
-                    layer.execute(x, pool)
+                    layer.execute(x, &mut ctx)
                 }
-                LayerSpec::Pool { p } => crate::pool::mpf_forward(&x, *p, pool),
+                LayerSpec::Pool { p } => {
+                    let out = crate::pool::mpf_forward(&x, *p, &mut ctx);
+                    ctx.retire(x);
+                    out
+                }
             };
         }
         compute += t0.elapsed().as_secs_f64();

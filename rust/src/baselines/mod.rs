@@ -17,6 +17,7 @@
 //!   with kernels dilated by the cumulative pooling stride.
 
 use crate::conv::{Activation, Weights};
+use crate::exec::ExecCtx;
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
 use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::pool::TaskPool;
@@ -117,12 +118,12 @@ pub fn run_baseline(
     net: &NetSpec,
     weights: &[std::sync::Arc<Weights>],
     input: &Tensor5,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> anyhow::Result<Tensor5> {
     match b {
-        Baseline::NaiveCudnn => run_naive_subsampling(net, weights, input, pool),
-        Baseline::CaffeStrided | Baseline::Znn => run_dilated(b, net, weights, input, pool),
-        Baseline::Elektronn => run_elektronn(net, weights, input, pool),
+        Baseline::NaiveCudnn => run_naive_subsampling(net, weights, input, ctx),
+        Baseline::CaffeStrided | Baseline::Znn => run_dilated(b, net, weights, input, ctx),
+        Baseline::Elektronn => run_elektronn(net, weights, input, ctx),
     }
 }
 
@@ -132,7 +133,7 @@ fn run_naive_subsampling(
     net: &NetSpec,
     weights: &[std::sync::Arc<Weights>],
     input: &Tensor5,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> anyhow::Result<Tensor5> {
     let ish = input.shape();
     let fov = net.field_of_view();
@@ -170,7 +171,7 @@ fn run_naive_subsampling(
                         }
                     }
                 }
-                let res = forward_plain(net, weights, sub, PoolingMode::MaxPool, pool)?;
+                let res = forward_plain(net, weights, sub, PoolingMode::MaxPool, ctx)?;
                 let rsh = res.shape();
                 debug_assert_eq!([rsh.x, rsh.y, rsh.z], cnt);
                 for f in 0..rsh.f {
@@ -201,22 +202,24 @@ fn forward_plain(
     weights: &[std::sync::Arc<Weights>],
     input: Tensor5,
     mode: PoolingMode,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> anyhow::Result<Tensor5> {
     let mut cur = input;
     let mut wi = 0;
     for l in &net.layers {
-        cur = match l {
+        let out = match l {
             LayerSpec::Conv { .. } => {
                 let w = &weights[wi];
                 wi += 1;
-                crate::conv::direct::conv_direct_mkl(&cur, w, Activation::Relu, pool)
+                crate::conv::direct::conv_direct_mkl(&cur, w, Activation::Relu, ctx)
             }
             LayerSpec::Pool { p } => match mode {
-                PoolingMode::MaxPool => crate::pool::max_pool(&cur, *p, pool),
-                PoolingMode::Mpf => crate::pool::mpf_forward(&cur, *p, pool),
+                PoolingMode::MaxPool => crate::pool::max_pool(&cur, *p, ctx),
+                PoolingMode::Mpf => crate::pool::mpf_forward(&cur, *p, ctx),
             },
         };
+        ctx.retire(cur);
+        cur = out;
     }
     Ok(cur)
 }
@@ -231,7 +234,7 @@ fn run_dilated(
     net: &NetSpec,
     weights: &[std::sync::Arc<Weights>],
     input: &Tensor5,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> anyhow::Result<Tensor5> {
     let mut cur = input.clone_tensor();
     let mut dil: Vec3 = [1, 1, 1];
@@ -246,19 +249,25 @@ fn run_dilated(
                     // kernel's zero taps cost nothing in the spectrum
                     // product; the pruned FFT skips their lines.
                     Baseline::Znn => {
-                        crate::conv::fft_tp::conv_fft_tp(cur, &w, Activation::Relu, pool)
+                        crate::conv::fft_tp::conv_fft_tp(cur, &w, Activation::Relu, ctx)
                     }
                     // Caffe: dense direct convolution of the dilated
                     // kernel (zero taps skipped in the inner loop).
-                    _ => crate::conv::direct::conv_direct_mkl(&cur, &w, Activation::Relu, pool),
+                    _ => {
+                        let out =
+                            crate::conv::direct::conv_direct_mkl(&cur, &w, Activation::Relu, ctx);
+                        ctx.retire(cur);
+                        out
+                    }
                 }
             }
             LayerSpec::Pool { p } => {
                 let pd = [p[0] * dil[0] - dil[0] + 1, p[1] * dil[1] - dil[1] + 1, p[2] * dil[2] - dil[2] + 1];
-                let filtered = max_filter(&cur, pd, pool);
+                let filtered = max_filter(&cur, pd, ctx.pool());
                 for d in 0..3 {
                     dil[d] *= p[d];
                 }
+                ctx.retire(cur);
                 filtered
             }
         };
@@ -272,12 +281,14 @@ fn run_elektronn(
     net: &NetSpec,
     weights: &[std::sync::Arc<Weights>],
     input: &Tensor5,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> anyhow::Result<Tensor5> {
     let modes = vec![PoolingMode::Mpf; net.pool_count()];
-    let raw = forward_plain(net, weights, input.clone_tensor(), PoolingMode::Mpf, pool)?;
+    let raw = forward_plain(net, weights, input.clone_tensor(), PoolingMode::Mpf, ctx)?;
     let map = crate::inference::fragment_map(net, &modes)?;
-    Ok(crate::inference::recombine(&raw, 1, &map))
+    let dense = crate::inference::recombine(&raw, 1, &map, ctx);
+    ctx.retire(raw);
+    Ok(dense)
 }
 
 /// Memory-model estimate for a baseline on a cubic input (for the
@@ -384,17 +395,19 @@ mod tests {
     #[test]
     fn all_baselines_agree_on_dense_output() {
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let net = tiny_net(2);
         let weights = make_weights(&net, 11);
         let input = Tensor5::random(Shape5::new(1, 1, 15, 15, 15), 13);
-        let reference = run_baseline(Baseline::NaiveCudnn, &net, &weights, &input, &p).unwrap();
+        let reference =
+            run_baseline(Baseline::NaiveCudnn, &net, &weights, &input, &mut ctx).unwrap();
         let fov = net.field_of_view();
         assert_eq!(
             reference.shape(),
             Shape5::new(1, 2, 15 - fov[0] + 1, 15 - fov[1] + 1, 15 - fov[2] + 1)
         );
         for b in [Baseline::CaffeStrided, Baseline::Elektronn, Baseline::Znn] {
-            let out = run_baseline(b, &net, &weights, &input, &p).unwrap();
+            let out = run_baseline(b, &net, &weights, &input, &mut ctx).unwrap();
             assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, b.name());
         }
     }

@@ -6,18 +6,21 @@
 //!
 //! * **naive** — accumulates straight into the output image; minimal
 //!   memory (Table II row 1);
-//! * **"MKL"** — convolve into a per-thread temporary image, then
+//! * **"MKL"** — convolve into a per-worker temporary image, then
 //!   accumulate; ~2× faster at the cost of `T·n'` extra elements
 //!   (Table II row 2). It mirrors the paper's Intel-MKL-backed
-//!   variant, which also trades a temp image for speed.
+//!   variant, which also trades a temp image for speed. The temporaries
+//!   are drawn from the execution context's arena (one per worker, via
+//!   [`TaskPool::parallel_for_with_worker`]) instead of allocated per
+//!   call.
 //!
 //! Both share the z-contiguous per-tap multiply-add inner loop, which
 //! dispatches through [`crate::simd::axpy`] (AVX2+FMA / SSE2 / NEON /
 //! scalar); the scalar six-loop oracle lives in
 //! [`super::convolve_valid_accumulate_scalar`].
 
+use crate::exec::ExecCtx;
 use crate::tensor::Tensor5;
-use crate::util::pool::TaskPool;
 use crate::util::sendptr::SendPtr;
 
 use super::{conv_out_shape, convolve_valid_accumulate, Activation, Weights};
@@ -27,12 +30,13 @@ pub fn conv_direct_naive(
     input: &Tensor5,
     w: &Weights,
     act: Activation,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
-    let mut out = Tensor5::zeros(osh);
+    let mut out = ctx.tensor5(osh);
     let outp = SendPtr(out.data_mut().as_mut_ptr());
     let img_len = osh.image_len();
     // parallel over (s, j) pairs — Algorithm 1's two parallel-for loops.
@@ -50,37 +54,48 @@ pub fn conv_direct_naive(
     out
 }
 
-/// Direct convolutional layer, optimised ("MKL") inner loop: per-thread
+/// Direct convolutional layer, optimised ("MKL") inner loop: per-worker
 /// temporary image, z-contiguous fused multiply-add over kernel taps.
 pub fn conv_direct_mkl(
     input: &Tensor5,
     w: &Weights,
     act: Activation,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
-    let mut out = Tensor5::zeros(osh);
+    let mut out = ctx.tensor5(osh);
     let outp = SendPtr(out.data_mut().as_mut_ptr());
     let img_len = osh.image_len();
     let n = ish.spatial();
-    pool.parallel_for(ish.s * w.f_out, |sj| {
-        let (s, j) = (sj / w.f_out, sj % w.f_out);
-        let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
-        // The temporary image (the T·n' of Table II) is tracked so the
-        // memory-model test observes it.
-        let mut tmp = crate::memory::TrackedVec::<f32>::zeroed(img_len, "direct-mkl temp");
-        for i in 0..w.f_in {
-            tmp.as_mut_slice().fill(0.0);
-            convolve_valid_accumulate(input.image(s, i), n, w.kernel(j, i), w.k, tmp.as_mut_slice());
-            crate::simd::add_assign(o, tmp.as_slice());
-        }
-        let b = w.bias(j);
-        for v in o.iter_mut() {
-            *v = act.apply(*v + b);
-        }
-    });
+    // One temporary image per worker (the T·n' of Table II), drawn from
+    // the arena so steady-state calls allocate nothing. A worker runs
+    // one job at a time, so indexing by worker id is race-free.
+    let mut tmps: Vec<Vec<f32>> =
+        (0..pool.workers()).map(|_| ctx.take_f32_raw(img_len)).collect();
+    let tmpp: Vec<SendPtr<f32>> = tmps.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+    {
+        let tmpp = &tmpp;
+        pool.parallel_for_with_worker(ish.s * w.f_out, |worker, sj| {
+            let (s, j) = (sj / w.f_out, sj % w.f_out);
+            let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
+            let tmp = unsafe { tmpp[worker].slice_mut(0, img_len) };
+            for i in 0..w.f_in {
+                tmp.fill(0.0);
+                convolve_valid_accumulate(input.image(s, i), n, w.kernel(j, i), w.k, tmp);
+                crate::simd::add_assign(o, tmp);
+            }
+            let b = w.bias(j);
+            for v in o.iter_mut() {
+                *v = act.apply(*v + b);
+            }
+        });
+    }
+    for t in tmps {
+        ctx.put_f32(t);
+    }
     out
 }
 
@@ -89,7 +104,7 @@ mod tests {
     use super::*;
     use crate::conv::conv_layer_reference;
     use crate::tensor::Shape5;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
     use crate::util::quick::assert_allclose;
 
     fn pool() -> TaskPool {
@@ -99,32 +114,35 @@ mod tests {
     #[test]
     fn naive_matches_reference() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 1);
         let w = Weights::random(4, 3, [3, 2, 3], 2);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_direct_naive(&input, &w, Activation::Relu, &p);
+        let got = conv_direct_naive(&input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "direct naive");
     }
 
     #[test]
     fn mkl_matches_reference() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 3);
         let w = Weights::random(4, 3, [3, 3, 3], 4);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_direct_mkl(&input, &w, Activation::Relu, &p);
+        let got = conv_direct_mkl(&input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "direct mkl");
     }
 
     #[test]
     fn asymmetric_kernels_ok() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 2, 5, 8, 6), 5);
         let w = Weights::random(2, 2, [1, 4, 2], 6);
         let expect = conv_layer_reference(&input, &w, Activation::None);
         for got in [
-            conv_direct_naive(&input, &w, Activation::None, &p),
-            conv_direct_mkl(&input, &w, Activation::None, &p),
+            conv_direct_naive(&input, &w, Activation::None, &mut ctx),
+            conv_direct_mkl(&input, &w, Activation::None, &mut ctx),
         ] {
             assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "asym");
         }
@@ -133,6 +151,7 @@ mod tests {
     #[test]
     fn property_direct_variants_agree() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         crate::util::quick::check("direct naive == mkl", |g| {
             let s = g.usize(1, 2);
             let fi = g.usize(1, 3);
@@ -145,8 +164,8 @@ mod tests {
             ];
             let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64);
             let w = Weights::random(fo, fi, k, g.case as u64 + 100);
-            let a = conv_direct_naive(&input, &w, Activation::Relu, &p);
-            let b = conv_direct_mkl(&input, &w, Activation::Relu, &p);
+            let a = conv_direct_naive(&input, &w, Activation::Relu, &mut ctx);
+            let b = conv_direct_mkl(&input, &w, Activation::Relu, &mut ctx);
             assert_allclose(b.data(), a.data(), 1e-5, 1e-4, "variants");
         });
     }

@@ -8,68 +8,81 @@
 //! touching shared data — the paper measures it up to 10× slower than
 //! the task-parallel algorithm when `f·S` is large, yet it remains the
 //! best choice for the first layer where `f = S = 1`.
+//!
+//! Buffers (input spectra, the Õ accumulator, the w̃ spectrum, the
+//! output tensor) are drawn from the [`ExecCtx`] arena and returned at
+//! the same points the originals were freed, so ledger peaks match the
+//! Table II staging while a warm context re-executes allocation-free.
+//! The FFT plan comes from the shared plan cache — one plan serves the
+//! image and kernel transforms alike (identical twiddle tables for a
+//! given padded size).
 
+use crate::exec::ExecCtx;
 use crate::fft::fft3d::Fft3;
 use crate::fft::fft_optimal_vec3;
-use crate::memory::TrackedVec;
-use crate::tensor::{CTensor5, Complex32, Shape5, Tensor5};
-use crate::util::pool::TaskPool;
+use crate::tensor::{Complex32, Shape5, Tensor5};
 
 use super::{conv_out_shape, Activation, Weights};
 
 /// FFT-based convolutional layer, data-parallel variant.
 ///
-/// Consumes `input` (Algorithm 2 frees I after the forward transforms).
-pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool) -> Tensor5 {
+/// Consumes `input` (Algorithm 2 frees I after the forward transforms —
+/// here its backing store is retired into the arena at that point).
+pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let n = ish.spatial();
     let padded = fft_optimal_vec3(n);
-    let plan = Fft3::new(padded);
-    let kplan = Fft3::new(padded);
+    let plan = ctx.fft3(padded);
     let zc = plan.zc();
+    let spec_len = plan.complex_len();
     let csh = Shape5::new(ish.s, ish.f, padded[0], padded[1], zc);
 
     // Stage 1 — forward transforms of all input images (each transform
-    // internally parallel), then free the input.
-    let mut itrans = CTensor5::zeros(csh);
+    // internally parallel), then retire the input. Raw takes: forward
+    // transforms overwrite the full spectrum, Õ is zero-filled per
+    // output map below.
+    let mut itrans = ctx.take_c32_raw(csh.len());
     for s in 0..ish.s {
         for i in 0..ish.f {
-            let img = input.image(s, i);
-            let spec = itrans.image_mut(s, i);
-            plan.forward_par(img, n, spec, pool);
+            let off = csh.image_offset(s, i);
+            plan.forward_par(input.image(s, i), n, &mut itrans[off..off + spec_len], pool);
         }
     }
-    drop(input);
+    ctx.retire(input);
 
     // Stage 2 — for each output map: transform its kernels one at a
     // time (w̃ is a single spectrum buffer), multiply-add into the
     // per-batch accumulator Õ, then inverse-transform into O.
-    let mut out = Tensor5::zeros(osh);
-    let spec_len = plan.complex_len();
-    let mut otrans: TrackedVec<Complex32> = TrackedVec::zeroed(ish.s * spec_len, "fft-dp Otilde");
-    let mut wtrans: TrackedVec<Complex32> = TrackedVec::zeroed(spec_len, "fft-dp wtilde");
+    let mut out = ctx.tensor5(osh);
+    let mut otrans = ctx.take_c32_raw(ish.s * spec_len);
+    let mut wtrans = ctx.take_c32_raw(spec_len);
     let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
     let crop = [osh.x, osh.y, osh.z];
     for j in 0..w.f_out {
-        otrans.as_mut_slice().fill(Complex32::ZERO);
+        otrans.fill(Complex32::ZERO);
         for i in 0..w.f_in {
-            kplan.forward_par(w.kernel(j, i), w.k, wtrans.as_mut_slice(), pool);
+            plan.forward_par(w.kernel(j, i), w.k, &mut wtrans, pool);
             for s in 0..ish.s {
-                let acc = &mut otrans.as_mut_slice()[s * spec_len..(s + 1) * spec_len];
-                Fft3::mad_spectra_par(acc, itrans.image(s, i), wtrans.as_slice(), pool);
+                let acc = &mut otrans[s * spec_len..(s + 1) * spec_len];
+                let ioff = csh.image_offset(s, i);
+                Fft3::mad_spectra_par(acc, &itrans[ioff..ioff + spec_len], &wtrans, pool);
             }
         }
         let b = w.bias(j);
         for s in 0..ish.s {
-            let acc = &mut otrans.as_mut_slice()[s * spec_len..(s + 1) * spec_len];
+            let acc = &mut otrans[s * spec_len..(s + 1) * spec_len];
             plan.inverse_crop_par(acc, crop_off, crop, out.image_mut(s, j), pool);
             for v in out.image_mut(s, j).iter_mut() {
                 *v = act.apply(*v + b);
             }
         }
     }
+    ctx.put_c32(wtrans);
+    ctx.put_c32(otrans);
+    ctx.put_c32(itrans);
     out
 }
 
@@ -77,7 +90,7 @@ pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
 mod tests {
     use super::*;
     use crate::conv::conv_layer_reference;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
     use crate::util::quick::assert_allclose;
 
     fn pool() -> TaskPool {
@@ -87,10 +100,11 @@ mod tests {
     #[test]
     fn matches_reference_small() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 11);
         let w = Weights::random(4, 3, [3, 2, 3], 12);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_dp(input, &w, Activation::Relu, &p);
+        let got = conv_fft_dp(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-dp");
     }
 
@@ -98,16 +112,18 @@ mod tests {
     fn first_layer_shape_s1_f1() {
         // The configuration the paper finds FFT-DP optimal for.
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 1, 12, 12, 12), 13);
         let w = Weights::random(5, 1, [4, 4, 4], 14);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_dp(input, &w, Activation::Relu, &p);
+        let got = conv_fft_dp(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-dp first layer");
     }
 
     #[test]
     fn property_matches_reference() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         crate::util::quick::check_with(
             crate::util::quick::Config { cases: 12, ..Default::default() },
             "fft-dp == reference",
@@ -124,7 +140,7 @@ mod tests {
                 let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64 + 3);
                 let w = Weights::random(fo, fi, k, g.case as u64 + 200);
                 let expect = conv_layer_reference(&input, &w, Activation::None);
-                let got = conv_fft_dp(input, &w, Activation::None, &p);
+                let got = conv_fft_dp(input, &w, Activation::None, &mut ctx);
                 assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "prop fft-dp");
             },
         );

@@ -8,54 +8,75 @@
 //! simulated device (see `crate::device`), preserving Algorithm 3's
 //! three-stage structure and its Table II memory behaviour, including
 //! the reuse of the FFT scratch `s̃` for the point-wise products.
+//!
+//! The two batched plans (image-sized and kernel-sized pruning) come
+//! from the shared plan cache; Ĩ, Õ, w̃, s̃ and the FFT permute
+//! scratches are arena takes from the [`ExecCtx`].
 
-use crate::fft::batched::BatchedFft3;
+use crate::exec::ExecCtx;
 use crate::fft::fft_optimal_vec3;
-use crate::memory::TrackedVec;
 use crate::tensor::{Complex32, Tensor5};
-use crate::util::pool::TaskPool;
 use crate::util::sendptr::SendPtr;
 
 use super::{conv_out_shape, Activation, Weights};
 
 /// FFT-based convolutional layer, GPU scheme. Consumes `input`.
-pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool) -> Tensor5 {
+pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let n = ish.spatial();
     let padded = fft_optimal_vec3(n);
-    let plan_img = BatchedFft3::new(n, padded);
-    let plan_ker = BatchedFft3::new(w.k, padded);
+    let plan_img = ctx.batched_fft3(n, padded);
+    let plan_ker = ctx.batched_fft3(w.k, padded);
     let spec = plan_img.spectrum_len();
     let (s_n, f_in, f_out) = (ish.s, w.f_in, w.f_out);
 
-    // Stage 1 — transform all input batches (f images at a time).
-    let mut itrans: TrackedVec<Complex32> = TrackedVec::zeroed(s_n * f_in * spec, "gpu-fft Itilde");
-    for s in 0..s_n {
-        let imgs = &input.data()
-            [ish.image_offset(s, 0)..ish.image_offset(s, 0) + f_in * ish.image_len()];
-        plan_img.forward(f_in, imgs, &mut itrans.as_mut_slice()[s * f_in * spec..(s + 1) * f_in * spec], pool);
+    // Stage 1 — transform all input batches (f images at a time). Raw
+    // takes throughout: the batched transforms fully overwrite their
+    // outputs/scratches, PARALLEL-MULT assigns s̃, and
+    // PARALLEL-ACCUMULATE assigns (not accumulates into) Õ.
+    let mut itrans = ctx.take_c32_raw(s_n * f_in * spec);
+    {
+        let mut s1 = ctx.take_c32_raw(plan_img.forward_scratch1_len(f_in));
+        let mut s2 = ctx.take_c32_raw(plan_img.forward_scratch2_len(f_in));
+        for s in 0..s_n {
+            let imgs = &input.data()
+                [ish.image_offset(s, 0)..ish.image_offset(s, 0) + f_in * ish.image_len()];
+            plan_img.forward_scratch(
+                f_in,
+                imgs,
+                &mut itrans[s * f_in * spec..(s + 1) * f_in * spec],
+                &mut s1,
+                &mut s2,
+                pool,
+            );
+        }
+        ctx.put_c32(s2);
+        ctx.put_c32(s1);
     }
-    drop(input);
+    ctx.retire(input);
 
     // Stage 2 — per output map: batched kernel transform, point-wise
     // products into the scratch s̃, accumulate over input maps.
-    let mut otrans: TrackedVec<Complex32> = TrackedVec::zeroed(s_n * f_out * spec, "gpu-fft Otilde");
+    let mut otrans = ctx.take_c32_raw(s_n * f_out * spec);
     {
-        let mut wtrans: TrackedVec<Complex32> = TrackedVec::zeroed(f_in * spec, "gpu-fft wtilde");
-        let mut prod: TrackedVec<Complex32> = TrackedVec::zeroed(f_in * spec, "gpu-fft stilde");
+        let mut wtrans = ctx.take_c32_raw(f_in * spec);
+        let mut prod = ctx.take_c32_raw(f_in * spec);
+        let mut k1 = ctx.take_c32_raw(plan_ker.forward_scratch1_len(f_in));
+        let mut k2 = ctx.take_c32_raw(plan_ker.forward_scratch2_len(f_in));
         let klen = w.klen();
         for j in 0..f_out {
             let kbatch = &w.raw()[j * f_in * klen..(j + 1) * f_in * klen];
-            plan_ker.forward(f_in, kbatch, wtrans.as_mut_slice(), pool);
+            plan_ker.forward_scratch(f_in, kbatch, &mut wtrans, &mut k1, &mut k2, pool);
             for s in 0..s_n {
                 let ibase = s * f_in * spec;
                 // PARALLEL-MULT: s̃[i][e] = Ĩ[s,i][e] · w̃[i][e]
                 {
                     let pp = SendPtr(prod.as_mut_ptr());
-                    let it = itrans.as_slice();
-                    let wt = wtrans.as_slice();
+                    let it = &itrans;
+                    let wt = &wtrans;
                     let total = f_in * spec;
                     let chunks = (pool.workers() * 4).min(total.max(1));
                     let per = total.div_ceil(chunks);
@@ -73,7 +94,7 @@ pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPoo
                 {
                     let ob = (s * f_out + j) * spec;
                     let op = SendPtr(otrans.as_mut_ptr());
-                    let pr = prod.as_slice();
+                    let pr = &prod;
                     let chunks = (pool.workers() * 4).min(spec.max(1));
                     let per = spec.div_ceil(chunks);
                     pool.parallel_for(chunks, |c| {
@@ -95,33 +116,46 @@ pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPoo
                 }
             }
         }
+        ctx.put_c32(k2);
+        ctx.put_c32(k1);
+        ctx.put_c32(prod);
+        ctx.put_c32(wtrans);
     }
-    drop(itrans);
+    ctx.put_c32(itrans);
 
     // Stage 3 — batched inverse transforms, crop to the valid region,
     // bias + transfer function.
-    let mut out = Tensor5::zeros(osh);
+    let mut out = ctx.tensor5(osh);
     let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
     let crop = [osh.x, osh.y, osh.z];
-    for s in 0..s_n {
-        let ob = s * f_out * spec;
-        let img_base = osh.image_offset(s, 0);
-        let img_len = f_out * osh.image_len();
-        plan_img.inverse_crop(
-            f_out,
-            &mut otrans.as_mut_slice()[ob..ob + f_out * spec],
-            crop_off,
-            crop,
-            &mut out.data_mut()[img_base..img_base + img_len],
-            pool,
-        );
-        for j in 0..f_out {
-            let b = w.bias(j);
-            for v in out.image_mut(s, j).iter_mut() {
-                *v = act.apply(*v + b);
+    {
+        let mut s1 = ctx.take_c32_raw(plan_img.inverse_scratch1_len(f_out, crop[0], crop[1]));
+        let mut s2 = ctx.take_c32_raw(plan_img.inverse_scratch2_len(f_out, crop[0]));
+        for s in 0..s_n {
+            let ob = s * f_out * spec;
+            let img_base = osh.image_offset(s, 0);
+            let img_len = f_out * osh.image_len();
+            plan_img.inverse_crop_scratch(
+                f_out,
+                &mut otrans[ob..ob + f_out * spec],
+                crop_off,
+                crop,
+                &mut out.data_mut()[img_base..img_base + img_len],
+                &mut s1,
+                &mut s2,
+                pool,
+            );
+            for j in 0..f_out {
+                let b = w.bias(j);
+                for v in out.image_mut(s, j).iter_mut() {
+                    *v = act.apply(*v + b);
+                }
             }
         }
+        ctx.put_c32(s2);
+        ctx.put_c32(s1);
     }
+    ctx.put_c32(otrans);
     out
 }
 
@@ -130,7 +164,7 @@ mod tests {
     use super::*;
     use crate::conv::conv_layer_reference;
     use crate::tensor::Shape5;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
     use crate::util::quick::assert_allclose;
 
     fn pool() -> TaskPool {
@@ -140,26 +174,29 @@ mod tests {
     #[test]
     fn matches_reference_small() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 31);
         let w = Weights::random(4, 3, [3, 2, 3], 32);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_gpu(input, &w, Activation::Relu, &p);
+        let got = conv_fft_gpu(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "gpu-fft");
     }
 
     #[test]
     fn larger_kernels() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 2, 11, 11, 11), 33);
         let w = Weights::random(3, 2, [5, 5, 5], 34);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_gpu(input, &w, Activation::Relu, &p);
+        let got = conv_fft_gpu(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "gpu-fft k5");
     }
 
     #[test]
     fn property_matches_reference() {
         let p = pool();
+        let mut ctx = ExecCtx::new(&p);
         crate::util::quick::check_with(
             crate::util::quick::Config { cases: 10, ..Default::default() },
             "gpu-fft == reference",
@@ -176,7 +213,7 @@ mod tests {
                 let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64 + 17);
                 let w = Weights::random(fo, fi, k, g.case as u64 + 400);
                 let expect = conv_layer_reference(&input, &w, Activation::None);
-                let got = conv_fft_gpu(input, &w, Activation::None, &p);
+                let got = conv_fft_gpu(input, &w, Activation::None, &mut ctx);
                 assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "prop gpu-fft");
             },
         );

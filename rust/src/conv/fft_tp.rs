@@ -7,7 +7,7 @@
 //! allocation — executed in three stages:
 //!
 //! 1. **Input transforms**: `S·f` independent serial 3D FFTs, any
-//!    worker. The sync task then frees the input and allocates Õ.
+//!    worker. The sync task then retires the input and takes Õ.
 //! 2. **Kernel transforms + multiply-adds**: kernel (j, i) spectra are
 //!    computed by *primary* workers (one per chip, each owning a single
 //!    ñ-sized buffer — the `T·ñ` of Table II) and their dependent MADs
@@ -25,35 +25,40 @@
 //! Wave assignment gives each chip a disjoint set of output columns per
 //! wave, so no two chips ever accumulate into the same `Õ[s,j]` — the
 //! races the paper avoids by task dependencies are avoided structurally.
+//!
+//! All five sync-task allocations (Ĩ, Õ, per-chip primary buffers, the
+//! output tensor) are arena takes from the [`ExecCtx`], released at the
+//! same points the paper's sync tasks free them; the FFT plan is shared
+//! through the process-wide plan cache.
 
+use crate::exec::ExecCtx;
 use crate::fft::fft3d::{with_tl_scratch, Fft3};
 use crate::fft::fft_optimal_vec3;
-use crate::memory::TrackedVec;
-use crate::tensor::{CTensor5, Complex32, Shape5, Tensor5};
-use crate::util::pool::TaskPool;
+use crate::tensor::{Complex32, Shape5, Tensor5};
 use crate::util::sendptr::SendPtr;
 
 use super::{conv_out_shape, Activation, Weights};
 
 /// FFT-based convolutional layer, task-parallel variant. Consumes
-/// `input` (the second sync task frees it).
-pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool) -> Tensor5 {
+/// `input` (the second sync task retires it into the arena).
+pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let n = ish.spatial();
     let padded = fft_optimal_vec3(n);
-    let plan = Fft3::new(padded);
+    let plan = ctx.fft3(padded);
     let spec_len = plan.complex_len();
     let chips = pool.topology().chips;
 
     // ---- Stage 1: input image transform tasks (S·f, any worker) ----
     let csh = Shape5::new(ish.s, ish.f, padded[0], padded[1], plan.zc());
-    let mut itrans = CTensor5::zeros(csh);
+    let mut itrans = ctx.take_c32_raw(csh.len());
     {
-        let itp = SendPtr(itrans.data_mut().as_mut_ptr());
+        let itp = SendPtr(itrans.as_mut_ptr());
         let input = &input;
-        let plan = &plan;
+        let plan = &*plan;
         pool.scope(|sc| {
             for s in 0..ish.s {
                 for i in 0..ish.f {
@@ -66,20 +71,22 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
             }
         });
     }
-    // Sync task 2: free the input, allocate output transforms.
-    drop(input);
+    // Sync task 2: retire the input, take the output transforms. Õ is
+    // accumulated into by the MAD tasks, so it must come back zeroed
+    // (the non-raw take).
+    ctx.retire(input);
     let otsh = Shape5::new(ish.s, w.f_out, padded[0], padded[1], plan.zc());
-    let mut otrans = CTensor5::zeros(otsh);
+    let mut otrans = ctx.take_c32(otsh.len());
 
     // ---- Stage 2: kernel transforms (primary-only) + MADs (chip) ----
     {
         // One spectrum buffer per chip — the primary-thread temporaries.
-        let mut bufs: Vec<TrackedVec<Complex32>> =
-            (0..chips).map(|_| TrackedVec::zeroed(spec_len, "fft-tp primary buffer")).collect();
+        let mut bufs: Vec<Vec<Complex32>> =
+            (0..chips).map(|_| ctx.take_c32_raw(spec_len)).collect();
         let total_pairs = w.f_out * w.f_in;
         let col_blocks = w.f_out.div_ceil(chips);
-        let itp = SendPtr(itrans.data_mut().as_mut_ptr());
-        let otp = SendPtr(otrans.data_mut().as_mut_ptr());
+        let itp = SendPtr(itrans.as_mut_ptr());
+        let otp = SendPtr(otrans.as_mut_ptr());
         // Waves over (input row i, column block jb).
         for i in 0..w.f_in {
             for jb in 0..col_blocks {
@@ -92,10 +99,10 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
                 {
                     let bufp: Vec<SendPtr<Complex32>> =
                         bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
-                    // One plan serves both image and kernel transforms —
-                    // the twiddle tables are identical for a given
-                    // padded size, so there is no reason to build two.
-                    let kplan = &plan;
+                    // One cached plan serves both image and kernel
+                    // transforms — the twiddle tables are identical for
+                    // a given padded size.
+                    let kplan = &*plan;
                     pool.scope(|sc| {
                         for &(c, j) in &active {
                             let bp = bufp[c];
@@ -136,20 +143,24 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
                 }
             }
         }
+        // Sync task 3 (first half): release the primary buffers.
+        for b in bufs {
+            ctx.put_c32(b);
+        }
     }
-    // Sync task 3: free primary buffers (scope above) and the input
-    // transforms; allocate the output.
-    drop(itrans);
-    let mut out = Tensor5::zeros(osh);
+    // Sync task 3 (second half): release the input transforms; take the
+    // output tensor.
+    ctx.put_c32(itrans);
+    let mut out = ctx.tensor5(osh);
 
     // ---- Stage 3: output image transform tasks (S·f', any worker) ----
     {
         let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
         let crop = [osh.x, osh.y, osh.z];
-        let otp = SendPtr(otrans.data_mut().as_mut_ptr());
+        let otp = SendPtr(otrans.as_mut_ptr());
         let outp = SendPtr(out.data_mut().as_mut_ptr());
         let img_len = osh.image_len();
-        let plan = &plan;
+        let plan = &*plan;
         pool.scope(|sc| {
             for s in 0..ish.s {
                 for j in 0..w.f_out {
@@ -166,8 +177,8 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
             }
         });
     }
-    // Final sync task frees the output transforms.
-    drop(otrans);
+    // Final sync task releases the output transforms.
+    ctx.put_c32(otrans);
     out
 }
 
@@ -175,7 +186,7 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, pool: &TaskPool
 mod tests {
     use super::*;
     use crate::conv::conv_layer_reference;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
     use crate::util::quick::assert_allclose;
 
     fn pool(chips: usize, cores: usize) -> TaskPool {
@@ -185,10 +196,11 @@ mod tests {
     #[test]
     fn matches_reference_small() {
         let p = pool(2, 2);
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 21);
         let w = Weights::random(4, 3, [3, 2, 3], 22);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_tp(input, &w, Activation::Relu, &p);
+        let got = conv_fft_tp(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp");
     }
 
@@ -197,36 +209,40 @@ mod tests {
         // The regime the task-parallel algorithm targets: f·S, f'·S ≥
         // worker count.
         let p = pool(2, 2);
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(2, 6, 8, 8, 8), 23);
         let w = Weights::random(6, 6, [3, 3, 3], 24);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_tp(input, &w, Activation::Relu, &p);
+        let got = conv_fft_tp(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp large");
     }
 
     #[test]
     fn single_chip_topology() {
         let p = pool(1, 3);
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 4, 7, 7, 7), 25);
         let w = Weights::random(3, 4, [2, 2, 2], 26);
         let expect = conv_layer_reference(&input, &w, Activation::None);
-        let got = conv_fft_tp(input, &w, Activation::None, &p);
+        let got = conv_fft_tp(input, &w, Activation::None, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp 1chip");
     }
 
     #[test]
     fn more_chips_than_outputs() {
         let p = pool(4, 1);
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 2, 6, 6, 6), 27);
         let w = Weights::random(2, 2, [3, 3, 3], 28);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = conv_fft_tp(input, &w, Activation::Relu, &p);
+        let got = conv_fft_tp(input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, "fft-tp 4chip");
     }
 
     #[test]
     fn property_matches_dp_variant() {
         let p = pool(2, 2);
+        let mut ctx = ExecCtx::new(&p);
         crate::util::quick::check_with(
             crate::util::quick::Config { cases: 10, ..Default::default() },
             "fft-tp == fft-dp",
@@ -244,9 +260,9 @@ mod tests {
                 let w = Weights::random(fo, fi, k, g.case as u64 + 300);
                 let a = {
                     let inp = input.clone_tensor();
-                    crate::conv::fft_dp::conv_fft_dp(inp, &w, Activation::Relu, &p)
+                    crate::conv::fft_dp::conv_fft_dp(inp, &w, Activation::Relu, &mut ctx)
                 };
-                let b = conv_fft_tp(input, &w, Activation::Relu, &p);
+                let b = conv_fft_tp(input, &w, Activation::Relu, &mut ctx);
                 assert_allclose(b.data(), a.data(), 1e-3, 1e-2, "tp vs dp");
             },
         );

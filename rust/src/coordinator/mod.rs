@@ -6,22 +6,30 @@
 //! inference):
 //!
 //! ```text
-//!  requests ──► patcher ──► patch queue ──► worker(s) ──► assembler
-//!               (overlap-save split)        (compiled      (writes into
-//!                                            plan + MPF     per-request
-//!                                            recombine)     output volume)
+//!  requests ──► job list ──► worker(s) ─────────► per-request outputs
+//!               (start        crop patch from      (mutex-guarded;
+//!                coords        volume, compiled     workers write their
+//!                only)         plan, MPF            cover region, then
+//!                              recombine)           retire the buffer)
 //! ```
 //!
-//! Workers share the process [`TaskPool`]; the queue applies
-//! backpressure (bounded channel) so host memory holds a bounded number
-//! of in-flight patches — the same memory discipline as §VII.C.
+//! Memory discipline: each worker keeps one long-lived [`Arena`]
+//! (persisted across `serve` calls). Patch inputs, every intermediate
+//! tensor, FFT spectrum/workspace, and the recombined dense output are
+//! all drawn from it; the dense buffer is retired right back after its
+//! cover region is copied into the request output. The whole buffer
+//! cycle therefore stays inside one worker — after a one-patch warmup
+//! a serve loop performs **zero transient allocations**, and at most
+//! `workers` patches of data are in flight (a tighter bound than the
+//! old pre-cropped patch queue).
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::exec::{Arena, ExecCtx};
 use crate::inference::{fragment_map, recombine, FragmentMap};
 use crate::net::{NetSpec, PoolingMode};
 use crate::optimizer::CompiledPlan;
@@ -51,6 +59,13 @@ pub struct Metrics {
     pub voxels: u64,
     pub busy_secs: f64,
     pub wall_secs: f64,
+    /// Max arena footprint (held + outstanding bytes) across the
+    /// workers of this serve call.
+    pub arena_hwm_bytes: u64,
+    /// Arena takes this serve call served with *fresh* allocations —
+    /// zero on a warm coordinator means the steady state ran
+    /// allocation-free.
+    pub arena_fresh_allocs: u64,
 }
 
 impl Metrics {
@@ -64,28 +79,17 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={}",
+            "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={} arena_hwm={} arena_fresh_allocs={}",
             self.requests,
             self.patches,
             self.voxels,
             self.wall_secs,
             self.busy_secs,
             crate::util::human_throughput(self.throughput()),
+            crate::util::human_bytes(self.arena_hwm_bytes),
+            self.arena_fresh_allocs,
         )
     }
-}
-
-struct PatchJob {
-    req: usize,
-    start: Vec3,
-    input: Tensor5,
-}
-
-struct PatchResult {
-    req: usize,
-    start: Vec3,
-    output: Tensor5,
-    secs: f64,
 }
 
 /// The coordinator: a compiled plan + patch geometry + worker loop.
@@ -95,10 +99,14 @@ pub struct Coordinator {
     fmap: FragmentMap,
     fov: Vec3,
     patch: Vec3,
-    /// Bound on in-flight patches (queue depth).
+    /// Retained for API compatibility; patch results are written in
+    /// place by workers, so in-flight data is bounded by `workers`.
     pub queue_depth: usize,
     /// Number of worker threads pulling patches.
     pub workers: usize,
+    /// Warm per-worker arenas, persisted across `serve` calls so the
+    /// second and later calls run allocation-free from the first patch.
+    arenas: Mutex<Vec<Arena>>,
 }
 
 impl Coordinator {
@@ -112,7 +120,22 @@ impl Coordinator {
         let fmap = fragment_map(&net, &modes)?;
         let fov = net.field_of_view();
         let patch = [plan.plan.input.x, plan.plan.input.y, plan.plan.input.z];
-        Ok(Coordinator { net, plan: Arc::new(plan), fmap, fov, patch, queue_depth: 2, workers: 1 })
+        Ok(Coordinator {
+            net,
+            plan: Arc::new(plan),
+            fmap,
+            fov,
+            patch,
+            queue_depth: 2,
+            workers: 1,
+            arenas: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The compiled plan's arena requirement per worker (Table II max
+    /// across layers) — what each worker's warm arena converges to.
+    pub fn workspace_req(&self, threads: usize) -> crate::exec::WorkspaceReq {
+        self.plan.workspace_req(threads)
     }
 
     /// Patch cover extent (dense output voxels per patch per dim).
@@ -163,7 +186,8 @@ impl Coordinator {
         let cover = self.cover();
         let f_out = self.net.f_out();
 
-        // Pre-validate and allocate outputs.
+        // Pre-validate and allocate outputs (one per request; these are
+        // the only per-request allocations of the serve loop).
         let mut outputs = Vec::new();
         let mut req_meta = Vec::new();
         for r in &requests {
@@ -181,27 +205,54 @@ impl Coordinator {
             req_meta.push((r.id, Instant::now()));
         }
 
-        let (jtx, jrx): (SyncSender<PatchJob>, Receiver<PatchJob>) =
-            sync_channel(self.queue_depth.max(1));
-        let (rtx, rrx) = sync_channel::<PatchResult>(self.queue_depth.max(1));
-        let jrx = Arc::new(Mutex::new(jrx));
+        // The job list is start coordinates only — workers crop from
+        // the request volumes on demand, into arena buffers.
+        let mut jobs: Vec<(usize, Vec3)> = Vec::new();
+        for (ri, r) in requests.iter().enumerate() {
+            let vsh = r.volume.shape();
+            for start in self.patch_starts([vsh.x, vsh.y, vsh.z]) {
+                jobs.push((ri, start));
+            }
+        }
+        let next = AtomicUsize::new(0);
 
-        let mut total_patches = 0usize;
-        let mut busy = 0.0f64;
-        let mut voxels = 0u64;
-        std::thread::scope(|s| -> Result<()> {
-            // Patcher thread: crop patches and feed the queue.
-            let reqs = &requests;
-            let patch = self.patch;
-            s.spawn(move || {
-                for (ri, r) in reqs.iter().enumerate() {
-                    let vsh = r.volume.shape();
-                    for start in self.patch_starts([vsh.x, vsh.y, vsh.z]) {
-                        let mut pin = Tensor5::zeros(Shape5::from_spatial(1, vsh.f, patch));
+        let arena_hwm = AtomicU64::new(0);
+        let arena_fresh = AtomicU64::new(0);
+        let patches = AtomicUsize::new(0);
+        let voxels = AtomicU64::new(0);
+        // busy seconds in microseconds (atomics carry no f64).
+        let busy_us = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            // Workers: crop patch → compiled plan → recombination →
+            // in-place assembly, all against a long-lived per-worker
+            // context whose buffers cycle locally.
+            for _ in 0..self.workers.max(1) {
+                let plan = self.plan.clone();
+                let fmap = &self.fmap;
+                let reqs = &requests;
+                let jobs = &jobs;
+                let next = &next;
+                let outputs = &outputs;
+                let patch = self.patch;
+                let arena_hwm = &arena_hwm;
+                let arena_fresh = &arena_fresh;
+                let patches = &patches;
+                let voxels = &voxels;
+                let busy_us = &busy_us;
+                s.spawn(move || {
+                    let arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+                    let fresh_before = arena.stats().fresh_allocs;
+                    let mut ctx = ExecCtx::from_arena(pool, arena);
+                    loop {
+                        let idx = next.fetch_add(1, Ordering::SeqCst);
+                        let Some(&(ri, start)) = jobs.get(idx) else { break };
+                        let r = &reqs[ri];
+                        let vsh = r.volume.shape();
+                        let mut pin = ctx.tensor5(Shape5::from_spatial(1, vsh.f, patch));
                         for f in 0..vsh.f {
                             for x in 0..patch[0] {
                                 for y in 0..patch[1] {
-                                    let src = ((f) * vsh.x + start[0] + x) * vsh.y * vsh.z
+                                    let src = (f * vsh.x + start[0] + x) * vsh.y * vsh.z
                                         + (start[1] + y) * vsh.z
                                         + start[2];
                                     let dst = (f * patch[0] + x) * patch[1] * patch[2]
@@ -211,66 +262,45 @@ impl Coordinator {
                                 }
                             }
                         }
-                        if jtx.send(PatchJob { req: ri, start, input: pin }).is_err() {
-                            return;
-                        }
-                    }
-                }
-                drop(jtx);
-            });
-            // Workers: run the compiled plan + recombination.
-            for _ in 0..self.workers.max(1) {
-                let jrx = jrx.clone();
-                let rtx = rtx.clone();
-                let plan = self.plan.clone();
-                let fmap = &self.fmap;
-                s.spawn(move || loop {
-                    let job = {
-                        let g = jrx.lock().unwrap();
-                        g.recv()
-                    };
-                    let Ok(job) = job else { break };
-                    let t0 = Instant::now();
-                    let raw = plan.run(job.input, pool);
-                    let dense = recombine(&raw, 1, fmap);
-                    let secs = t0.elapsed().as_secs_f64();
-                    if rtx
-                        .send(PatchResult { req: job.req, start: job.start, output: dense, secs })
-                        .is_err()
-                    {
-                        break;
-                    }
-                });
-            }
-            drop(rtx);
-            // Assembler (this thread): write patch outputs into volumes.
-            while let Ok(res) = rrx.recv() {
-                total_patches += 1;
-                busy += res.secs;
-                let osh = res.output.shape();
-                voxels += (osh.x * osh.y * osh.z) as u64;
-                let mut out = outputs[res.req].lock().unwrap();
-                let vsh = out.shape();
-                for f in 0..f_out {
-                    for x in 0..cover[0] {
-                        for y in 0..cover[1] {
-                            for z in 0..cover[2] {
-                                out.set(
-                                    0,
-                                    f,
-                                    res.start[0] + x,
-                                    res.start[1] + y,
-                                    res.start[2] + z,
-                                    res.output.at(0, f, x, y, z),
-                                );
+                        let t0 = Instant::now();
+                        let raw = plan.run(pin, &mut ctx);
+                        let dense = recombine(&raw, 1, fmap, &mut ctx);
+                        ctx.retire(raw);
+                        busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::SeqCst);
+                        // Assemble in place: this patch's cover region.
+                        // Overlapping regions (clamped final patches)
+                        // receive identical values; the per-request
+                        // mutex keeps concurrent workers exclusive.
+                        {
+                            let mut out = outputs[ri].lock().unwrap();
+                            let osh = out.shape();
+                            for f in 0..f_out {
+                                for x in 0..cover[0] {
+                                    for y in 0..cover[1] {
+                                        let srow = ((f * cover[0] + x) * cover[1] + y) * cover[2];
+                                        let drow = ((f * osh.x + start[0] + x) * osh.y
+                                            + start[1]
+                                            + y)
+                                            * osh.z
+                                            + start[2];
+                                        out.data_mut()[drow..drow + cover[2]].copy_from_slice(
+                                            &dense.data()[srow..srow + cover[2]],
+                                        );
+                                    }
+                                }
                             }
                         }
+                        ctx.retire(dense);
+                        patches.fetch_add(1, Ordering::SeqCst);
+                        voxels.fetch_add((cover[0] * cover[1] * cover[2]) as u64, Ordering::SeqCst);
                     }
-                }
-                let _ = vsh;
+                    let st = ctx.arena.stats();
+                    arena_hwm.fetch_max(st.hwm_bytes, Ordering::SeqCst);
+                    arena_fresh.fetch_add(st.fresh_allocs - fresh_before, Ordering::SeqCst);
+                    self.arenas.lock().unwrap().push(ctx.into_arena());
+                });
             }
-            Ok(())
-        })?;
+        });
 
         let wall = t_wall.elapsed();
         let mut responses = Vec::new();
@@ -287,10 +317,12 @@ impl Coordinator {
         }
         let metrics = Metrics {
             requests: responses.len(),
-            patches: total_patches,
-            voxels,
-            busy_secs: busy,
+            patches: patches.load(Ordering::SeqCst),
+            voxels: voxels.load(Ordering::SeqCst),
+            busy_secs: busy_us.load(Ordering::SeqCst) as f64 / 1e6,
             wall_secs: wall.as_secs_f64(),
+            arena_hwm_bytes: arena_hwm.load(Ordering::SeqCst),
+            arena_fresh_allocs: arena_fresh.load(Ordering::SeqCst),
         };
         Ok((responses, metrics))
     }
@@ -334,6 +366,7 @@ mod tests {
         assert_eq!((osh.x, osh.y, osh.z), (20 - fov[0] + 1, 20 - fov[1] + 1, 20 - fov[2] + 1));
         assert!(metrics.patches >= 1);
         assert!(metrics.throughput() > 0.0);
+        assert!(metrics.arena_hwm_bytes > 0);
     }
 
     #[test]
@@ -345,16 +378,19 @@ mod tests {
 
         // Reference through inference::infer_volume with the same plan.
         let fmap = fragment_map(&c.net, &c.plan.plan.modes()).unwrap();
-        let runner = |t: Tensor5| {
-            let raw = c.plan.run(t, &pool);
-            recombine(&raw, 1, &fmap)
+        let mut ctx = ExecCtx::new(&pool);
+        let mut runner = |t: Tensor5| {
+            let raw = c.plan.run(t, &mut ctx);
+            let dense = recombine(&raw, 1, &fmap, &mut ctx);
+            ctx.retire(raw);
+            dense
         };
         let expect = crate::inference::infer_volume(
             &vol2,
             c.net.field_of_view(),
             c.patch,
             c.net.f_out(),
-            &runner,
+            &mut runner,
         )
         .unwrap();
         assert_allclose(resp[0].output.data(), expect.data(), 1e-5, 1e-5, "serve == infer");
@@ -380,5 +416,41 @@ mod tests {
         let (c, pool) = make_coordinator(7);
         let vol = Tensor5::random(Shape5::new(1, 1, 5, 5, 5), 2);
         assert!(c.serve(vec![InferenceRequest { id: 0, volume: vol }], &pool).is_err());
+    }
+
+    #[test]
+    fn multi_worker_serve_matches_single_worker() {
+        let (mut c, pool) = make_coordinator(13);
+        let vol = Tensor5::random(Shape5::new(1, 1, 22, 22, 22), 4);
+        let vol2 = vol.clone_tensor();
+        let (single, _) = c.serve(vec![InferenceRequest { id: 0, volume: vol }], &pool).unwrap();
+        c.workers = 3;
+        let (multi, m) = c.serve(vec![InferenceRequest { id: 0, volume: vol2 }], &pool).unwrap();
+        assert!(m.patches >= 2);
+        assert_eq!(single[0].output.data(), multi[0].output.data());
+    }
+
+    #[test]
+    fn warm_serve_is_allocation_free() {
+        // THE steady-state assertion: after the first serve call warms
+        // the per-worker arena, a second serve over the same shapes
+        // performs zero transient allocations per patch — every take
+        // hits a recycled buffer.
+        let (c, pool) = make_coordinator(11);
+        let mk = |seed| Tensor5::random(Shape5::new(1, 1, 20, 20, 20), seed);
+        let (_, warmup) = c
+            .serve(vec![InferenceRequest { id: 0, volume: mk(1) }], &pool)
+            .unwrap();
+        assert!(warmup.arena_fresh_allocs > 0, "cold serve must allocate");
+        let (resp, steady) = c
+            .serve(vec![InferenceRequest { id: 1, volume: mk(2) }], &pool)
+            .unwrap();
+        assert!(steady.patches >= 1);
+        assert_eq!(
+            steady.arena_fresh_allocs, 0,
+            "warm serve must run allocation-free (hwm={} patches={})",
+            steady.arena_hwm_bytes, steady.patches
+        );
+        assert!(resp[0].output.data().iter().any(|&v| v != 0.0));
     }
 }

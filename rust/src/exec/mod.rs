@@ -1,0 +1,658 @@
+//! Execution contexts: plan memory once, allocate never on the hot path.
+//!
+//! The paper's central claim is that memory overhead caps throughput —
+//! the winning primitive is the one whose working set fits the biggest
+//! patch (§II, Table II). That only pays off in steady-state serving if
+//! execution *stays inside* that working set instead of churning the
+//! allocator on every patch. This module brings the statically planned
+//! buffer-reuse discipline of PZnet (Popovych et al. 2019) and the ZNN
+//! training pipelines (Zlateski et al. 2015) to the whole stack:
+//!
+//! * [`Arena`] — a slab of reusable `f32` / [`Complex32`] buffers keyed
+//!   by exact length. Buffers cycle take → use → put/retire; after a
+//!   one-patch warmup a fixed workload allocates nothing.
+//! * [`ExecCtx`] — what every [`crate::layers::LayerPrimitive`] executes
+//!   against: the [`TaskPool`] plus an arena. Output tensors, FFT
+//!   spectra and workspaces are all drawn from it.
+//! * [`WorkspaceReq`] — the plan-time contract: `optimizer::compile`
+//!   sizes the arena up front from the same Table II model the search
+//!   ranks plans with ([`crate::optimizer::CompiledPlan::workspace_req`]).
+//!   An undersized budget fails loudly at [`ExecCtx::reserve`] time —
+//!   never mid-execution.
+//! * a process-wide FFT plan cache keyed by (padded shape, algorithm
+//!   family) — twiddle tables are built once per shape, not per call.
+//!
+//! Ledger contract (see [`crate::memory`]): bytes handed out by an arena
+//! are registered with the process ledger exactly like direct
+//! allocations, so Table II peak measurements are unchanged; bytes
+//! *idle* in an arena free list are tracked by the arena gauges instead
+//! (`memory::arena_hwm`, `memory::arena_fresh_allocs`). Reused buffers
+//! register via `memory::alloc_recycled`, which does not count an
+//! allocation event — `memory::alloc_events()` therefore counts exactly
+//! the transient (fresh) allocations a workload performs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::fft::batched::BatchedFft3;
+use crate::fft::Fft3;
+use crate::memory;
+use crate::tensor::{Complex32, Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+
+/// Bytes an execution needs from the arena, computed at plan time from
+/// the Table II model (input + output + transients of the worst layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkspaceReq {
+    pub bytes: u64,
+}
+
+impl WorkspaceReq {
+    pub const ZERO: WorkspaceReq = WorkspaceReq { bytes: 0 };
+
+    /// Pointwise maximum — layers of one plan share the arena, so the
+    /// plan's requirement is the max, not the sum.
+    pub fn max(self, other: WorkspaceReq) -> WorkspaceReq {
+        WorkspaceReq { bytes: self.bytes.max(other.bytes) }
+    }
+}
+
+/// Snapshot of an arena's accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    /// Takes that had to allocate fresh backing store.
+    pub fresh_allocs: u64,
+    /// Takes served from the free lists.
+    pub reuses: u64,
+    /// Bytes idle in the free lists right now.
+    pub held_bytes: u64,
+    /// Raw workspace bytes handed out and not yet `put_*` back.
+    /// Tensor-backing bytes are transferred out of this count at
+    /// creation (a tensor may outlive the arena or be retired into a
+    /// different one), so the gauge stays drift-free on long streams.
+    pub outstanding_bytes: u64,
+    /// High-water mark of `held + outstanding`.
+    pub hwm_bytes: u64,
+    /// The plan-time budget, if one was set.
+    pub planned_bytes: Option<u64>,
+}
+
+impl ArenaStats {
+    /// Bytes by which the arena's cache footprint exceeded the
+    /// plan-time budget (0 when unbudgeted or within plan).
+    /// Informational: the budget is the per-layer Table II max that
+    /// gates plan admission, while the footprint is the union of layer
+    /// working sets cached across a plan — some overshoot on
+    /// multi-layer plans is expected and bounded by the bucket cap.
+    pub fn over_budget_bytes(&self) -> u64 {
+        match self.planned_bytes {
+            Some(b) => self.hwm_bytes.saturating_sub(b),
+            None => 0,
+        }
+    }
+}
+
+/// Default per-length free-list cap; raised to the worker count by
+/// [`ExecCtx`] so per-worker buffer sets (e.g. the direct conv's T
+/// temporaries) survive a full put/take cycle on any pool size.
+const DEFAULT_BUCKET_CAP: usize = 8;
+
+/// A slab arena of reusable buffers, keyed by exact element count.
+///
+/// Exact-length bucketing keeps the ledger arithmetic precise and fits
+/// the steady-state serving shape: every patch of a compiled plan takes
+/// the same sequence of buffer sizes, so after one warm patch every
+/// take hits. Free lists keep at most `bucket_cap` buffers per length;
+/// beyond that a returned buffer is genuinely dropped, bounding idle
+/// memory.
+pub struct Arena {
+    f32_free: HashMap<usize, Vec<Vec<f32>>>,
+    c32_free: HashMap<usize, Vec<Vec<Complex32>>>,
+    budget: Option<u64>,
+    bucket_cap: usize,
+    held: u64,
+    outstanding: u64,
+    hwm: u64,
+    fresh: u64,
+    reuses: u64,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Arena {
+            f32_free: HashMap::new(),
+            c32_free: HashMap::new(),
+            budget: None,
+            bucket_cap: DEFAULT_BUCKET_CAP,
+            held: 0,
+            outstanding: 0,
+            hwm: 0,
+            fresh: 0,
+            reuses: 0,
+        }
+    }
+}
+
+impl Arena {
+    pub fn new() -> Self {
+        Arena::default()
+    }
+
+    /// Ensure per-length free lists can hold at least `n` buffers.
+    /// Contexts raise this to the pool's worker count so per-worker
+    /// buffer sets (one temp image per worker, one spectrum per chip)
+    /// are fully retained across the put/take cycle.
+    pub fn set_bucket_cap_at_least(&mut self, n: usize) {
+        if n > self.bucket_cap {
+            self.bucket_cap = n;
+        }
+    }
+
+    /// Arena with a plan-time byte budget. The budget is enforced by
+    /// [`Arena::reserve`] *at plan time*; execution never panics on it —
+    /// overshoot is recorded in [`ArenaStats::over_budget_bytes`].
+    pub fn with_budget(bytes: u64) -> Self {
+        Arena { budget: Some(bytes), ..Arena::default() }
+    }
+
+    /// Plan-time admission check: fail loudly *before* execution if the
+    /// planned working set cannot fit the budget.
+    pub fn reserve(&mut self, req: &WorkspaceReq) -> Result<()> {
+        if let Some(budget) = self.budget {
+            if req.bytes > budget {
+                bail!(
+                    "arena undersized at plan time: workspace requires {} bytes, budget is {} bytes",
+                    req.bytes,
+                    budget
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            fresh_allocs: self.fresh,
+            reuses: self.reuses,
+            held_bytes: self.held,
+            outstanding_bytes: self.outstanding,
+            hwm_bytes: self.hwm,
+            planned_bytes: self.budget,
+        }
+    }
+
+    fn note_hwm(&mut self) {
+        let footprint = self.held + self.outstanding;
+        if footprint > self.hwm {
+            self.hwm = footprint;
+        }
+    }
+
+    /// f32 buffer of exactly `len` elements with **unspecified**
+    /// contents (recycled data). For workspaces the caller fully
+    /// overwrites before reading — skips a working-set-sized memset on
+    /// the hot path. Use [`Arena::take_f32`] when zeroing matters.
+    pub fn take_f32_raw(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let bytes = (len * 4) as u64;
+        if let Some(v) = self.f32_free.get_mut(&len).and_then(Vec::pop) {
+            self.held -= bytes;
+            self.outstanding += bytes;
+            self.reuses += 1;
+            memory::alloc_recycled(bytes);
+            memory::arena_gauge(-(bytes as i64), bytes as i64);
+            self.note_hwm();
+            return v;
+        }
+        self.outstanding += bytes;
+        self.fresh += 1;
+        memory::alloc(bytes);
+        memory::arena_fresh_event();
+        memory::arena_gauge(0, bytes as i64);
+        self.note_hwm();
+        vec![0.0; len]
+    }
+
+    /// Zeroed f32 buffer of exactly `len` elements.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_f32_raw(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Return an f32 buffer to the free list.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        let len = v.len();
+        if len == 0 {
+            return;
+        }
+        let bytes = (len * 4) as u64;
+        memory::free(bytes);
+        let dec = bytes.min(self.outstanding);
+        self.outstanding -= dec;
+        let bucket = self.f32_free.entry(len).or_default();
+        if bucket.len() < self.bucket_cap {
+            bucket.push(v);
+            self.held += bytes;
+            memory::arena_gauge(bytes as i64, -(dec as i64));
+        } else {
+            memory::arena_gauge(0, -(dec as i64));
+        }
+        self.note_hwm();
+    }
+
+    /// Complex buffer of exactly `len` elements with **unspecified**
+    /// contents — see [`Arena::take_f32_raw`].
+    pub fn take_c32_raw(&mut self, len: usize) -> Vec<Complex32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let bytes = (len * 8) as u64;
+        if let Some(v) = self.c32_free.get_mut(&len).and_then(Vec::pop) {
+            self.held -= bytes;
+            self.outstanding += bytes;
+            self.reuses += 1;
+            memory::alloc_recycled(bytes);
+            memory::arena_gauge(-(bytes as i64), bytes as i64);
+            self.note_hwm();
+            return v;
+        }
+        self.outstanding += bytes;
+        self.fresh += 1;
+        memory::alloc(bytes);
+        memory::arena_fresh_event();
+        memory::arena_gauge(0, bytes as i64);
+        self.note_hwm();
+        vec![Complex32::ZERO; len]
+    }
+
+    /// Zeroed complex buffer of exactly `len` elements.
+    pub fn take_c32(&mut self, len: usize) -> Vec<Complex32> {
+        let mut v = self.take_c32_raw(len);
+        v.fill(Complex32::ZERO);
+        v
+    }
+
+    /// Return a complex buffer to the free list.
+    pub fn put_c32(&mut self, v: Vec<Complex32>) {
+        let len = v.len();
+        if len == 0 {
+            return;
+        }
+        let bytes = (len * 8) as u64;
+        memory::free(bytes);
+        let dec = bytes.min(self.outstanding);
+        self.outstanding -= dec;
+        let bucket = self.c32_free.entry(len).or_default();
+        if bucket.len() < self.bucket_cap {
+            bucket.push(v);
+            self.held += bytes;
+            memory::arena_gauge(bytes as i64, -(dec as i64));
+        } else {
+            memory::arena_gauge(0, -(dec as i64));
+        }
+        self.note_hwm();
+    }
+
+    /// Mark `bytes` of a just-taken buffer as transferred out of this
+    /// arena's custody (ownership moves to a tensor that may outlive
+    /// the arena). Keeps `outstanding` balanced by raw workspace
+    /// takes/puts alone, so long streams whose output tensors migrate
+    /// to other owners do not drift the footprint gauges.
+    fn note_transfer(&mut self, bytes: u64) {
+        let dec = bytes.min(self.outstanding);
+        self.outstanding -= dec;
+        memory::arena_gauge(0, -(dec as i64));
+    }
+
+    /// Zeroed tensor-backing buffer: a take whose bytes immediately
+    /// leave the arena's outstanding count (see [`Arena::note_transfer`]).
+    pub(crate) fn take_tensor_f32(&mut self, len: usize) -> Vec<f32> {
+        let v = self.take_f32(len);
+        self.note_transfer((len * 4) as u64);
+        v
+    }
+
+    /// Retire a tensor's backing store into the free list (the arena
+    /// analogue of dropping it — the ledger sees the same `free`).
+    /// Tensors were transferred out of `outstanding` at creation (and
+    /// may come from *another* context entirely), so this only stashes
+    /// the buffer.
+    pub fn retire_tensor(&mut self, t: Tensor5) {
+        let (_, data) = t.into_raw();
+        let len = data.len();
+        if len == 0 {
+            return;
+        }
+        let bytes = (len * 4) as u64;
+        memory::free(bytes);
+        let bucket = self.f32_free.entry(len).or_default();
+        if bucket.len() < self.bucket_cap {
+            bucket.push(data);
+            self.held += bytes;
+            memory::arena_gauge(bytes as i64, 0);
+        }
+        self.note_hwm();
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        // Idle buffers are dropped with the arena; outstanding buffers
+        // now live entirely outside any arena — stop gauging both.
+        memory::arena_gauge(-(self.held as i64), -(self.outstanding as i64));
+    }
+}
+
+/// Everything a primitive needs to execute: the worker pool plus an
+/// arena of reusable buffers. One per pipeline stage / coordinator
+/// worker; reused across patches so steady state allocates nothing.
+pub struct ExecCtx<'p> {
+    pool: &'p TaskPool,
+    pub arena: Arena,
+}
+
+impl<'p> ExecCtx<'p> {
+    pub fn new(pool: &'p TaskPool) -> ExecCtx<'p> {
+        Self::from_arena(pool, Arena::new())
+    }
+
+    /// Context with a plan-time byte budget (see [`Arena::with_budget`]).
+    pub fn with_budget(pool: &'p TaskPool, bytes: u64) -> ExecCtx<'p> {
+        Self::from_arena(pool, Arena::with_budget(bytes))
+    }
+
+    /// Rehydrate a context from a warm arena (coordinator workers keep
+    /// arenas across `serve` calls). The arena's per-length cap is
+    /// raised to the pool's worker count so per-worker buffer sets
+    /// survive the put/take cycle on any topology.
+    pub fn from_arena(pool: &'p TaskPool, mut arena: Arena) -> ExecCtx<'p> {
+        arena.set_bucket_cap_at_least(pool.workers());
+        ExecCtx { pool, arena }
+    }
+
+    /// Take the arena back out (to persist it past this context).
+    pub fn into_arena(self) -> Arena {
+        self.arena
+    }
+
+    /// The worker pool. The returned reference carries the pool's own
+    /// lifetime, so holding it does not borrow the context.
+    pub fn pool(&self) -> &'p TaskPool {
+        self.pool
+    }
+
+    /// Plan-time admission check — see [`Arena::reserve`].
+    pub fn reserve(&mut self, req: &WorkspaceReq) -> Result<()> {
+        self.arena.reserve(req)
+    }
+
+    /// Zeroed tensor whose backing store comes from the arena.
+    pub fn tensor5(&mut self, shape: Shape5) -> Tensor5 {
+        let data = self.arena.take_tensor_f32(shape.len());
+        Tensor5::from_arena(shape, data)
+    }
+
+    /// Recycle a tensor's backing store into the arena.
+    pub fn retire(&mut self, t: Tensor5) {
+        self.arena.retire_tensor(t);
+    }
+
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        self.arena.take_f32(len)
+    }
+
+    /// Unzeroed workspace take — caller fully overwrites before reading.
+    pub fn take_f32_raw(&mut self, len: usize) -> Vec<f32> {
+        self.arena.take_f32_raw(len)
+    }
+
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.arena.put_f32(v)
+    }
+
+    pub fn take_c32(&mut self, len: usize) -> Vec<Complex32> {
+        self.arena.take_c32(len)
+    }
+
+    /// Unzeroed workspace take — caller fully overwrites before reading.
+    pub fn take_c32_raw(&mut self, len: usize) -> Vec<Complex32> {
+        self.arena.take_c32_raw(len)
+    }
+
+    pub fn put_c32(&mut self, v: Vec<Complex32>) {
+        self.arena.put_c32(v)
+    }
+
+    /// Cached serial/parallel 3D FFT plan for the given padded extent.
+    pub fn fft3(&mut self, padded: Vec3) -> Arc<Fft3> {
+        fft3_plan(padded)
+    }
+
+    /// Cached batched (GPU-scheme) 3D FFT plan.
+    pub fn batched_fft3(&mut self, dims: Vec3, padded: Vec3) -> Arc<BatchedFft3> {
+        batched_fft3_plan(dims, padded)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-wide FFT plan cache. Plans are immutable (twiddle tables +
+// factorisations), so sharing one Arc per key across all contexts and
+// workers is sound; building them per call was pure waste.
+// ---------------------------------------------------------------------
+
+fn fft3_cache() -> &'static Mutex<HashMap<Vec3, Arc<Fft3>>> {
+    static CACHE: OnceLock<Mutex<HashMap<Vec3, Arc<Fft3>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn batched_cache() -> &'static Mutex<HashMap<(Vec3, Vec3), Arc<BatchedFft3>>> {
+    static CACHE: OnceLock<Mutex<HashMap<(Vec3, Vec3), Arc<BatchedFft3>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Shared plan for serial/data-parallel 3D FFTs padded to `padded`.
+pub fn fft3_plan(padded: Vec3) -> Arc<Fft3> {
+    let mut c = fft3_cache().lock().unwrap();
+    c.entry(padded).or_insert_with(|| Arc::new(Fft3::new(padded))).clone()
+}
+
+/// Shared plan for the batched GPU-scheme FFT of `dims` padded to
+/// `padded` (the kernel and image transforms of one layer are distinct
+/// keys because their pruning differs).
+pub fn batched_fft3_plan(dims: Vec3, padded: Vec3) -> Arc<BatchedFft3> {
+    let mut c = batched_cache().lock().unwrap();
+    c.entry((dims, padded)).or_insert_with(|| Arc::new(BatchedFft3::new(dims, padded))).clone()
+}
+
+/// Number of cached plans (both families) — observability for tests.
+pub fn plan_cache_len() -> usize {
+    fft3_cache().lock().unwrap().len() + batched_cache().lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::ChipTopology;
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn take_put_reuses_backing_store() {
+        let mut a = Arena::new();
+        let v = a.take_f32(100);
+        assert_eq!(v.len(), 100);
+        assert_eq!(a.stats().fresh_allocs, 1);
+        a.put_f32(v);
+        assert_eq!(a.stats().held_bytes, 400);
+        let v2 = a.take_f32(100);
+        assert_eq!(a.stats().fresh_allocs, 1, "second take must reuse");
+        assert_eq!(a.stats().reuses, 1);
+        assert!(v2.iter().all(|&x| x == 0.0), "reused buffers are zeroed");
+        a.put_f32(v2);
+    }
+
+    #[test]
+    fn distinct_lengths_do_not_alias() {
+        let mut a = Arena::new();
+        let v = a.take_f32(10);
+        a.put_f32(v);
+        let _w = a.take_f32(11);
+        assert_eq!(a.stats().fresh_allocs, 2);
+        assert_eq!(a.stats().held_bytes, 40);
+    }
+
+    #[test]
+    fn tensor_retire_cycle_is_allocation_free() {
+        let pool = tpool();
+        let mut ctx = ExecCtx::new(&pool);
+        let sh = Shape5::new(1, 2, 3, 3, 3);
+        let t = ctx.tensor5(sh);
+        assert_eq!(t.shape(), sh);
+        ctx.retire(t);
+        let base_fresh = ctx.arena.stats().fresh_allocs;
+        for _ in 0..5 {
+            let t = ctx.tensor5(sh);
+            ctx.retire(t);
+        }
+        assert_eq!(ctx.arena.stats().fresh_allocs, base_fresh);
+    }
+
+    #[test]
+    fn arena_accounting_is_balanced() {
+        // The global ledger is shared with concurrently running tests,
+        // so this asserts on the arena's own (race-free) accounting:
+        // take/put cycles must leave outstanding at zero and held equal
+        // to the cached bytes.
+        let mut a = Arena::new();
+        let v = a.take_f32(50);
+        assert_eq!(a.stats().outstanding_bytes, 200);
+        a.put_f32(v);
+        assert_eq!(a.stats().outstanding_bytes, 0);
+        assert_eq!(a.stats().held_bytes, 200);
+        let v = a.take_c32(50);
+        assert_eq!(a.stats().outstanding_bytes, 400);
+        a.put_c32(v);
+        assert_eq!(a.stats().outstanding_bytes, 0);
+        assert_eq!(a.stats().held_bytes, 600);
+        assert_eq!(a.stats().hwm_bytes, 600);
+    }
+
+    #[test]
+    fn undersized_budget_fails_at_plan_time() {
+        let pool = tpool();
+        let mut ctx = ExecCtx::with_budget(&pool, 1024);
+        let err = ctx.reserve(&WorkspaceReq { bytes: 1 << 20 }).unwrap_err();
+        assert!(err.to_string().contains("undersized"), "{err}");
+        // Within budget is fine.
+        assert!(ctx.reserve(&WorkspaceReq { bytes: 512 }).is_ok());
+    }
+
+    #[test]
+    fn over_budget_is_recorded_not_fatal() {
+        let mut a = Arena::with_budget(100);
+        let v = a.take_f32(1000); // 4000 bytes > 100-byte budget
+        assert_eq!(a.stats().over_budget_bytes(), 3900);
+        a.put_f32(v);
+    }
+
+    #[test]
+    fn bucket_cap_bounds_idle_memory() {
+        let mut a = Arena::new();
+        let bufs: Vec<_> = (0..2 * DEFAULT_BUCKET_CAP).map(|_| a.take_f32(8)).collect();
+        for b in bufs {
+            a.put_f32(b);
+        }
+        assert_eq!(a.stats().held_bytes, (DEFAULT_BUCKET_CAP * 8 * 4) as u64);
+    }
+
+    #[test]
+    fn tensor_bytes_transfer_out_of_outstanding() {
+        // Tensors leave `outstanding` at creation, so streams whose
+        // outputs migrate to another owner do not drift the gauges —
+        // and retiring a foreign tensor just stashes its buffer.
+        let pool = tpool();
+        let mut producer = ExecCtx::new(&pool);
+        let t = producer.tensor5(Shape5::new(1, 1, 3, 3, 3));
+        assert_eq!(producer.arena.stats().outstanding_bytes, 0);
+        let mut consumer = ExecCtx::new(&pool);
+        consumer.retire(t);
+        assert_eq!(consumer.arena.stats().held_bytes, 108);
+        assert_eq!(consumer.arena.stats().outstanding_bytes, 0);
+        // The consumer now serves that size from its free list.
+        let _v = consumer.take_f32(27);
+        assert_eq!(consumer.arena.stats().reuses, 1);
+    }
+
+    #[test]
+    fn bucket_cap_rises_with_pool_workers() {
+        // A context built on an n-worker pool must retain n same-length
+        // buffers (the direct conv's per-worker temporaries).
+        let pool = TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 6 });
+        let mut ctx = ExecCtx::new(&pool);
+        let bufs: Vec<_> = (0..12).map(|_| ctx.take_f32(8)).collect();
+        for b in bufs {
+            ctx.put_f32(b);
+        }
+        assert_eq!(ctx.arena.stats().held_bytes, 12 * 8 * 4);
+        let fresh = ctx.arena.stats().fresh_allocs;
+        let bufs: Vec<_> = (0..12).map(|_| ctx.take_f32(8)).collect();
+        assert_eq!(ctx.arena.stats().fresh_allocs, fresh, "all 12 must reuse");
+        for b in bufs {
+            ctx.put_f32(b);
+        }
+    }
+
+    #[test]
+    fn raw_take_skips_zeroing_on_reuse() {
+        let mut a = Arena::new();
+        let mut v = a.take_f32_raw(4);
+        v.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        a.put_f32(v);
+        let raw = a.take_f32_raw(4);
+        assert_eq!(raw, vec![1.0, 2.0, 3.0, 4.0], "raw take keeps recycled contents");
+        a.put_f32(raw);
+        let zeroed = a.take_f32(4);
+        assert_eq!(zeroed, vec![0.0; 4]);
+        a.put_f32(zeroed);
+    }
+
+    #[test]
+    fn plan_cache_shares_arcs() {
+        let a = fft3_plan([6, 6, 6]);
+        let b = fft3_plan([6, 6, 6]);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = batched_fft3_plan([3, 3, 3], [6, 6, 6]);
+        let d = batched_fft3_plan([3, 3, 3], [6, 6, 6]);
+        assert!(Arc::ptr_eq(&c, &d));
+        let e = batched_fft3_plan([2, 3, 3], [6, 6, 6]);
+        assert!(!Arc::ptr_eq(&c, &e));
+        assert!(plan_cache_len() >= 3);
+    }
+
+    #[test]
+    fn workspace_req_max() {
+        let a = WorkspaceReq { bytes: 10 };
+        let b = WorkspaceReq { bytes: 20 };
+        assert_eq!(a.max(b).bytes, 20);
+        assert_eq!(WorkspaceReq::ZERO.max(a).bytes, 10);
+    }
+
+    #[test]
+    fn ctx_into_arena_keeps_warmth() {
+        let pool = tpool();
+        let mut ctx = ExecCtx::new(&pool);
+        let v = ctx.take_f32(64);
+        ctx.put_f32(v);
+        let arena = ctx.into_arena();
+        let mut ctx2 = ExecCtx::from_arena(&pool, arena);
+        let _v = ctx2.take_f32(64);
+        assert_eq!(ctx2.arena.stats().reuses, 1);
+    }
+}

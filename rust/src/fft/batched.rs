@@ -80,21 +80,63 @@ impl BatchedFft3 {
         b * x * y * self.zc + b * x * self.zc * py
     }
 
+    /// Complex elements of the pass-1 scratch (Ĩ¹) for a batch of `b`.
+    pub fn forward_scratch1_len(&self, b: usize) -> usize {
+        b * self.dims[0] * self.dims[1] * self.zc
+    }
+
+    /// Complex elements of the pass-2 scratch (Ĩ²) for a batch of `b`.
+    pub fn forward_scratch2_len(&self, b: usize) -> usize {
+        b * self.dims[0] * self.zc * self.padded[1]
+    }
+
+    /// Complex elements of the inverse pass-2 scratch for crop `cx`.
+    pub fn inverse_scratch2_len(&self, b: usize, cx: usize) -> usize {
+        b * cx * self.zc * self.padded[1]
+    }
+
+    /// Complex elements of the inverse pass-1 scratch for crop `(cx, cy)`.
+    pub fn inverse_scratch1_len(&self, b: usize, cx: usize, cy: usize) -> usize {
+        b * cx * cy * self.zc
+    }
+
     /// Forward transform of `b` images (`input` is `b·x·y·z` reals) into
-    /// `out` (`b` spectra of [`Self::spectrum_len`] each).
+    /// `out` (`b` spectra of [`Self::spectrum_len`] each). Allocates its
+    /// two permute scratches internally; hot paths pass arena buffers to
+    /// [`Self::forward_scratch`] instead.
     pub fn forward(&self, b: usize, input: &[f32], out: &mut [Complex32], pool: &TaskPool) {
+        let mut i1: TrackedVec<Complex32> =
+            TrackedVec::zeroed(self.forward_scratch1_len(b), "batched-fft I1");
+        let mut i2: TrackedVec<Complex32> =
+            TrackedVec::zeroed(self.forward_scratch2_len(b), "batched-fft I2");
+        self.forward_scratch(b, input, out, i1.as_mut_slice(), i2.as_mut_slice(), pool);
+    }
+
+    /// [`Self::forward`] with caller-provided permute scratches: `s1` of
+    /// [`Self::forward_scratch1_len`] and `s2` of
+    /// [`Self::forward_scratch2_len`] elements (contents ignored).
+    pub fn forward_scratch(
+        &self,
+        b: usize,
+        input: &[f32],
+        out: &mut [Complex32],
+        s1: &mut [Complex32],
+        s2: &mut [Complex32],
+        pool: &TaskPool,
+    ) {
         let [x, y, z] = self.dims;
         let [px, py, _pz] = self.padded;
         let zc = self.zc;
         assert_eq!(input.len(), b * x * y * z);
         assert_eq!(out.len(), b * self.spectrum_len());
+        assert_eq!(s1.len(), self.forward_scratch1_len(b));
+        assert_eq!(s2.len(), self.forward_scratch2_len(b));
         // The final permute writes only source elements; the zero-fill
         // provides the x-extension (callers may reuse `out`).
         out.fill(Complex32::ZERO);
 
         // Pass 1 — r2c along z: b·x·y contiguous lines → Ĩ¹ b×x×y×z''.
-        let mut i1: TrackedVec<Complex32> =
-            TrackedVec::zeroed(b * x * y * zc, "batched-fft I1");
+        let i1 = s1;
         {
             let lines = b * x * y;
             let i1s = SendPtr(i1.as_mut_ptr());
@@ -130,29 +172,29 @@ impl BatchedFft3 {
         }
 
         // Pass 2 — permute Ĩ¹[i,j,k,l] → Ĩ²[i,j,l,k] (b×x×z''×y',
-        // zero-extended in y), then c2c along y'.
-        let mut i2: TrackedVec<Complex32> =
-            TrackedVec::zeroed(b * x * zc * py, "batched-fft I2");
-        permute_magic(i1.as_slice(), i2.as_mut_slice(), [b, x, y, zc], PermuteMap::SwapLast(py), pool);
-        drop(i1);
-        self.c2c_pass(i2.as_mut_slice(), b * x * zc, &self.py, pool);
+        // zero-extended in y), then c2c along y'. The permute writes
+        // only source elements, so the scratch must be pre-zeroed.
+        let i2 = s2;
+        i2.fill(Complex32::ZERO);
+        permute_magic(i1, i2, [b, x, y, zc], PermuteMap::SwapLast(py), pool);
+        self.c2c_pass(i2, b * x * zc, &self.py, pool);
 
         // Pass 3 — permute Ĩ²[i,j,k,l] → Ĩ³[i,k,l,j] (b×z''×y'×x',
         // zero-extended in x), then c2c along x'.
         permute_magic(
-            i2.as_slice(),
+            i2,
             out,
             [b, x, zc, py],
             PermuteMap::RotateLeft3(px),
             pool,
         );
-        drop(i2);
         self.c2c_pass(out, b * zc * py, &self.px, pool);
     }
 
     /// Inverse of [`Self::forward`] with crop: recover, for each of the
     /// `b` images, the window `offset..offset+crop` of the padded
-    /// volume. `freq` is consumed.
+    /// volume. `freq` is consumed. Allocates its permute scratches
+    /// internally; hot paths use [`Self::inverse_crop_scratch`].
     pub fn inverse_crop(
         &self,
         b: usize,
@@ -162,6 +204,36 @@ impl BatchedFft3 {
         out: &mut [f32],
         pool: &TaskPool,
     ) {
+        let mut i2: TrackedVec<Complex32> =
+            TrackedVec::zeroed(self.inverse_scratch2_len(b, crop[0]), "batched-ifft I2");
+        let mut i1: TrackedVec<Complex32> =
+            TrackedVec::zeroed(self.inverse_scratch1_len(b, crop[0], crop[1]), "batched-ifft I1");
+        self.inverse_crop_scratch(
+            b,
+            freq,
+            offset,
+            crop,
+            out,
+            i1.as_mut_slice(),
+            i2.as_mut_slice(),
+            pool,
+        );
+    }
+
+    /// [`Self::inverse_crop`] with caller-provided permute scratches:
+    /// `s1` of [`Self::inverse_scratch1_len`] and `s2` of
+    /// [`Self::inverse_scratch2_len`] elements (contents ignored).
+    pub fn inverse_crop_scratch(
+        &self,
+        b: usize,
+        freq: &mut [Complex32],
+        offset: Vec3,
+        crop: Vec3,
+        out: &mut [f32],
+        s1: &mut [Complex32],
+        s2: &mut [Complex32],
+        pool: &TaskPool,
+    ) {
         let [px, py, pz] = self.padded;
         let zc = self.zc;
         let [ox, oy, oz] = offset;
@@ -169,17 +241,19 @@ impl BatchedFft3 {
         assert!(ox + cx <= px && oy + cy <= py && oz + cz <= pz);
         assert_eq!(freq.len(), b * self.spectrum_len());
         assert_eq!(out.len(), b * cx * cy * cz);
+        assert_eq!(s1.len(), self.inverse_scratch1_len(b, cx, cy));
+        assert_eq!(s2.len(), self.inverse_scratch2_len(b, cx));
 
         // Inverse along x (contiguous in the transformed representation).
         self.c2c_pass_inv(freq, b * zc * py, &self.px, pool);
 
         // Permute Ĩ³[i,k,l,j] → Ĩ²[i,j,k,l], keeping only x within the
         // crop: b×cx×z''×y'.
-        let mut i2: TrackedVec<Complex32> =
-            TrackedVec::zeroed(b * cx * zc * py, "batched-ifft I2");
+        let i2 = s2;
+        i2.fill(Complex32::ZERO);
         {
             let src = freq;
-            let dst = i2.as_mut_slice();
+            let dst = &mut *i2;
             // src layout [i,k,l,j] = b×zc×py×px ; dst [i,j',k,l] with
             // j' = j - ox over cx values.
             let m_j = MagicU64::new(px as u64);
@@ -208,15 +282,15 @@ impl BatchedFft3 {
             });
         }
         // Inverse along y.
-        self.c2c_pass_inv(i2.as_mut_slice(), b * cx * zc, &self.py, pool);
+        self.c2c_pass_inv(i2, b * cx * zc, &self.py, pool);
 
         // Permute Ĩ²[i,j,k,l] → Ĩ¹[i,j,l,k], keeping only y in crop:
         // b×cx×cy×z''.
-        let mut i1: TrackedVec<Complex32> =
-            TrackedVec::zeroed(b * cx * cy * zc, "batched-ifft I1");
+        let i1 = s1;
+        i1.fill(Complex32::ZERO);
         {
-            let src = i2.as_slice();
-            let dst = i1.as_mut_slice();
+            let src = &*i2;
+            let dst = &mut *i1;
             let m_l = MagicU64::new(py as u64);
             let m_k = MagicU64::new(zc as u64);
             let dsts = SendPtr(dst.as_mut_ptr());
@@ -237,12 +311,10 @@ impl BatchedFft3 {
                 }
             });
         }
-        drop(i2);
-
         // c2r along z, cropping [oz, oz+cz).
         {
             let lines = b * cx * cy;
-            let src = i1.as_slice();
+            let src = &*i1;
             let outp = SendPtr(out.as_mut_ptr());
             pool.parallel_for(lines.div_ceil(2), |pair| {
                 TL.with(|tl| {

@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::exec::ExecCtx;
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
 use crate::tensor::{Shape5, Tensor5, Vec3};
 
@@ -57,7 +58,15 @@ pub fn fragment_map(net: &NetSpec, modes: &[PoolingMode]) -> Result<FragmentMap>
 /// sliding-window output: for each original input `s`, fragment values
 /// land at `offset + stride · t`. Output spatial extent is
 /// `stride · fragment_extent` per dimension (= n − FoV + 1).
-pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap) -> Tensor5 {
+///
+/// Each fragment z-row is contiguous in the fragment; at z-stride 1 it
+/// is also contiguous in the dense output, so whole rows move as one
+/// `copy_from_slice` (a vectorised memcpy). At larger strides the row
+/// base is still computed once and the scatter walks a precomputed
+/// stride — the old voxel-by-voxel `out.set(..)` recomputed the full
+/// 5-D index per element. The dense tensor comes from the context's
+/// arena.
+pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap, ctx: &mut ExecCtx<'_>) -> Tensor5 {
     let osh = output.shape();
     let alpha = map.offsets.len();
     assert_eq!(osh.s, s_orig * alpha, "batch {} != {}·{}", osh.s, s_orig, alpha);
@@ -68,22 +77,30 @@ pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap) -> Tensor5 
         y: osh.y * map.stride[1],
         z: osh.z * map.stride[2],
     };
-    let mut out = Tensor5::zeros(dense);
+    let mut out = ctx.tensor5(dense);
+    if osh.image_len() == 0 {
+        return out;
+    }
+    let [sx, sy, sz] = map.stride;
+    let (dy, dz) = (dense.y, dense.z);
     for s in 0..s_orig {
         for (fi, off) in map.offsets.iter().enumerate() {
             for f in 0..osh.f {
                 let frag = output.image(s * alpha + fi, f);
+                let oimg = out.image_mut(s, f);
                 for x in 0..osh.x {
+                    let ox = off[0] + sx * x;
                     for y in 0..osh.y {
-                        for z in 0..osh.z {
-                            out.set(
-                                s,
-                                f,
-                                off[0] + map.stride[0] * x,
-                                off[1] + map.stride[1] * y,
-                                off[2] + map.stride[2] * z,
-                                frag[(x * osh.y + y) * osh.z + z],
-                            );
+                        let oy = off[1] + sy * y;
+                        let frow = &frag[(x * osh.y + y) * osh.z..(x * osh.y + y) * osh.z + osh.z];
+                        let obase = (ox * dy + oy) * dz + off[2];
+                        if sz == 1 {
+                            oimg[obase..obase + osh.z].copy_from_slice(frow);
+                        } else {
+                            let orow = &mut oimg[obase..obase + (osh.z - 1) * sz + 1];
+                            for (zi, &v) in frow.iter().enumerate() {
+                                orow[zi * sz] = v;
+                            }
                         }
                     }
                 }
@@ -95,10 +112,11 @@ pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap) -> Tensor5 
 
 /// Dense sliding-window reference: run the net (max-pool modes, batch 1)
 /// independently on every FoV-sized window. O(positions × net) — only
-/// for validating recombination on tiny problems.
+/// for validating recombination on tiny problems. The runner owns its
+/// execution context (capture an `&mut ExecCtx` in the closure).
 pub fn dense_reference(
     net: &NetSpec,
-    runner: &dyn Fn(Tensor5) -> Tensor5,
+    runner: &mut dyn FnMut(Tensor5) -> Tensor5,
     volume: &Tensor5,
 ) -> Tensor5 {
     let vsh = volume.shape();
@@ -134,15 +152,15 @@ pub fn dense_reference(
 
 /// Patch-based whole-volume inference. `runner` maps one input patch
 /// (shape `1 × f × patch³`) to its recombined dense output patch
-/// (`1 × f' × (patch − fov + 1)³`). Patches overlap by `fov − 1`
-/// (overlap-save), the final patch is shifted inward so the output
-/// tiles exactly.
+/// (`1 × f' × (patch − fov + 1)³`) and owns its execution context.
+/// Patches overlap by `fov − 1` (overlap-save), the final patch is
+/// shifted inward so the output tiles exactly.
 pub fn infer_volume(
     volume: &Tensor5,
     fov: Vec3,
     patch: Vec3,
     f_out: usize,
-    runner: &dyn Fn(Tensor5) -> Tensor5,
+    runner: &mut dyn FnMut(Tensor5) -> Tensor5,
 ) -> Result<Tensor5> {
     let vsh = volume.shape();
     if vsh.s != 1 {
@@ -273,6 +291,7 @@ mod tests {
     #[test]
     fn mpf_recombination_equals_dense_sliding_window() {
         let pool = tpool();
+        let mut ctx = ExecCtx::new(&pool);
         let net = tiny_net(2);
         let weights = make_weights(&net, 77);
         let fov = net.field_of_view(); // 10³ for tiny CPCC
@@ -283,9 +302,9 @@ mod tests {
         let mpf_modes = vec![PoolingMode::Mpf];
         let plan = manual_plan(&net, volume.shape(), &mpf_modes);
         let cp = compile(&net, &plan, &weights).unwrap();
-        let raw = cp.run(volume.clone_tensor(), &pool);
+        let raw = cp.run(volume.clone_tensor(), &mut ctx);
         let map = fragment_map(&net, &mpf_modes).unwrap();
-        let dense = recombine(&raw, 1, &map);
+        let dense = recombine(&raw, 1, &map, &mut ctx);
         assert_eq!(
             dense.shape(),
             Shape5::new(1, 2, n - fov[0] + 1, n - fov[1] + 1, n - fov[2] + 1)
@@ -295,8 +314,9 @@ mod tests {
         let mp_modes = vec![PoolingMode::MaxPool];
         let wplan = manual_plan(&net, Shape5::from_spatial(1, 1, fov), &mp_modes);
         let wcp = compile(&net, &wplan, &weights).unwrap();
-        let runner = |t: Tensor5| wcp.run(t, &pool);
-        let expect = dense_reference(&net, &runner, &volume);
+        let mut wctx = ExecCtx::new(&pool);
+        let mut runner = |t: Tensor5| wcp.run(t, &mut wctx);
+        let expect = dense_reference(&net, &mut runner, &volume);
 
         assert_allclose(dense.data(), expect.data(), 1e-4, 1e-3, "MPF == dense");
     }
@@ -312,14 +332,17 @@ mod tests {
 
         // Whole volume in one patch vs split into smaller patches.
         let volume = Tensor5::random(Shape5::new(1, 1, 17, 17, 17), 5);
-        let run_patch = |patch: Tensor5| {
+        let mut rctx = ExecCtx::new(&pool);
+        let mut run_patch = |patch: Tensor5| {
             let plan = manual_plan(&net, patch.shape(), &mpf_modes);
             let cp = compile(&net, &plan, &weights).unwrap();
-            let raw = cp.run(patch, &pool);
-            recombine(&raw, 1, &map)
+            let raw = cp.run(patch, &mut rctx);
+            let dense = recombine(&raw, 1, &map, &mut rctx);
+            rctx.retire(raw);
+            dense
         };
-        let whole = infer_volume(&volume, fov, [17, 17, 17], 2, &run_patch).unwrap();
-        let tiled = infer_volume(&volume, fov, [13, 13, 13], 2, &run_patch).unwrap();
+        let whole = infer_volume(&volume, fov, [17, 17, 17], 2, &mut run_patch).unwrap();
+        let tiled = infer_volume(&volume, fov, [13, 13, 13], 2, &mut run_patch).unwrap();
         assert_eq!(whole.shape(), tiled.shape());
         assert_allclose(tiled.data(), whole.data(), 1e-5, 1e-5, "patch tiling");
     }
@@ -329,8 +352,54 @@ mod tests {
         let net = tiny_net(2);
         let fov = net.field_of_view();
         let volume = Tensor5::random(Shape5::new(1, 1, 12, 12, 12), 1);
-        let nop = |t: Tensor5| t;
-        assert!(infer_volume(&volume, fov, [20, 20, 20], 2, &nop).is_err());
-        assert!(infer_volume(&volume, fov, [4, 4, 4], 2, &nop).is_err());
+        let mut nop = |t: Tensor5| t;
+        assert!(infer_volume(&volume, fov, [20, 20, 20], 2, &mut nop).is_err());
+        assert!(infer_volume(&volume, fov, [4, 4, 4], 2, &mut nop).is_err());
+    }
+
+    #[test]
+    fn recombine_strided_and_contiguous_rows_agree_with_setwise() {
+        // The z-row fast path must reproduce the voxel-by-voxel law:
+        // out[s, f, off + stride·t] = frag[t].
+        let pool = tpool();
+        let mut ctx = ExecCtx::new(&pool);
+        for stride in [[2usize, 2, 2], [2, 1, 1], [1, 1, 1], [1, 2, 3]] {
+            let (fx, fy, fz) = (2usize, 3usize, 2usize);
+            let alpha = stride[0] * stride[1] * stride[2];
+            let mut offsets = Vec::new();
+            for a in 0..stride[0] {
+                for b in 0..stride[1] {
+                    for c in 0..stride[2] {
+                        offsets.push([a, b, c]);
+                    }
+                }
+            }
+            let map = FragmentMap { offsets: offsets.clone(), stride };
+            let raw = Tensor5::random(Shape5::new(2 * alpha, 2, fx, fy, fz), 7);
+            let dense = recombine(&raw, 2, &map, &mut ctx);
+            for s in 0..2 {
+                for (fi, off) in offsets.iter().enumerate() {
+                    for f in 0..2 {
+                        for x in 0..fx {
+                            for y in 0..fy {
+                                for z in 0..fz {
+                                    assert_eq!(
+                                        dense.at(
+                                            s,
+                                            f,
+                                            off[0] + stride[0] * x,
+                                            off[1] + stride[1] * y,
+                                            off[2] + stride[2] * z,
+                                        ),
+                                        raw.at(s * alpha + fi, f, x, y, z),
+                                        "stride {stride:?}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -3,15 +3,20 @@
 //! A ConvNet implementation is a choice of one primitive per layer
 //! (§VI). Every primitive knows its output shape (Table I), its peak
 //! memory (Table II) and its analytic FLOPs, so the optimizer can search
-//! plans without executing them; `execute` then runs the chosen plan.
+//! plans without executing them; `execute` then runs the chosen plan
+//! against an [`ExecCtx`], drawing every output tensor and workspace
+//! from the context's arena. [`LayerPrimitive::plan_workspace`] reports
+//! the same Table II working set as bytes so `optimizer::compile` can
+//! size the arena up front from the model the search already ranked
+//! plans with.
 
 use std::sync::Arc;
 
 use crate::conv::{self, Activation, Weights};
+use crate::exec::{ExecCtx, WorkspaceReq};
 use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
 use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
 use crate::tensor::{Shape5, Tensor5, Vec3};
-use crate::util::pool::TaskPool;
 
 /// Which device a primitive is meant for (§IV.A vs §IV.B). On this
 /// testbed the GPU is simulated — see `crate::device`.
@@ -36,14 +41,23 @@ pub trait LayerPrimitive: Send + Sync {
     /// Peak memory (bytes) per Table II.
     fn memory_bytes(&self, input: Shape5, threads: usize) -> u64;
 
+    /// Arena bytes this layer draws while executing on `input` — the
+    /// Table II working set (input + output + transients). Plans take
+    /// the max across layers; see
+    /// [`crate::optimizer::CompiledPlan::workspace_req`].
+    fn plan_workspace(&self, input: Shape5, threads: usize) -> WorkspaceReq {
+        WorkspaceReq { bytes: self.memory_bytes(input, threads) }
+    }
+
     /// Analytic FLOPs per Table I.
     fn flops(&self, input: Shape5) -> f64;
 
     /// CPU or GPU primitive.
     fn placement(&self) -> Placement;
 
-    /// Run the layer.
-    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5;
+    /// Run the layer. Consumes `input` (its backing store is retired
+    /// into the context's arena) and draws the output from the arena.
+    fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5;
 }
 
 /// Convolutional layer with a fixed algorithm choice.
@@ -110,30 +124,41 @@ impl LayerPrimitive for ConvLayer {
         }
     }
 
-    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
+    fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
         let w = &self.weights;
         match self.algo {
-            ConvAlgo::DirectNaive => conv::direct::conv_direct_naive(&input, w, self.act, pool),
-            ConvAlgo::DirectMkl => conv::direct::conv_direct_mkl(&input, w, self.act, pool),
-            ConvAlgo::FftDataParallel => conv::fft_dp::conv_fft_dp(input, w, self.act, pool),
-            ConvAlgo::FftTaskParallel => conv::fft_tp::conv_fft_tp(input, w, self.act, pool),
+            ConvAlgo::DirectNaive => {
+                let out = conv::direct::conv_direct_naive(&input, w, self.act, ctx);
+                ctx.retire(input);
+                out
+            }
+            ConvAlgo::DirectMkl => {
+                let out = conv::direct::conv_direct_mkl(&input, w, self.act, ctx);
+                ctx.retire(input);
+                out
+            }
+            ConvAlgo::FftDataParallel => conv::fft_dp::conv_fft_dp(input, w, self.act, ctx),
+            ConvAlgo::FftTaskParallel => conv::fft_tp::conv_fft_tp(input, w, self.act, ctx),
             // Dense-conv stand-ins for the two cuDNN primitives: the
             // no-workspace variant is the slow/lean one, the precomp
             // variant trades workspace memory for speed (§IV.B.1). The
-            // workspace registration makes the Table II difference
-            // observable to the ledger.
+            // workspace is drawn from the arena so the Table II
+            // difference stays observable to the ledger.
             ConvAlgo::GpuDenseNoWorkspace => {
-                conv::direct::conv_direct_naive(&input, w, self.act, pool)
+                let out = conv::direct::conv_direct_naive(&input, w, self.act, ctx);
+                ctx.retire(input);
+                out
             }
             ConvAlgo::GpuDensePrecomp => {
                 let ish = input.shape();
-                let _workspace = crate::memory::TrackedVec::<f32>::zeroed(
-                    ish.len(),
-                    "cudnn-precomp workspace",
-                );
-                conv::direct::conv_direct_mkl(&input, w, self.act, pool)
+                // Stand-in workspace: sized like the input, never read.
+                let workspace = ctx.take_f32_raw(ish.len());
+                let out = conv::direct::conv_direct_mkl(&input, w, self.act, ctx);
+                ctx.put_f32(workspace);
+                ctx.retire(input);
+                out
             }
-            ConvAlgo::GpuFft => conv::fft_gpu::conv_fft_gpu(input, w, self.act, pool),
+            ConvAlgo::GpuFft => conv::fft_gpu::conv_fft_gpu(input, w, self.act, ctx),
         }
     }
 }
@@ -154,10 +179,15 @@ impl LayerPrimitive for MaxPoolLayer {
     }
 
     fn accepts(&self, input: Shape5) -> bool {
-        input.x % self.window[0] == 0
+        // All three spatial extents must be non-zero: a zero extent
+        // passes the divisibility test (0 % p == 0) but has no voxels
+        // to pool.
+        input.x > 0
+            && input.y > 0
+            && input.z > 0
+            && input.x % self.window[0] == 0
             && input.y % self.window[1] == 0
             && input.z % self.window[2] == 0
-            && input.x > 0
     }
 
     fn memory_bytes(&self, input: Shape5, _threads: usize) -> u64 {
@@ -173,8 +203,10 @@ impl LayerPrimitive for MaxPoolLayer {
         self.placement
     }
 
-    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
-        max_pool(&input, self.window, pool)
+    fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+        let out = max_pool(&input, self.window, ctx);
+        ctx.retire(input);
+        out
     }
 }
 
@@ -212,15 +244,17 @@ impl LayerPrimitive for MpfLayer {
         self.placement
     }
 
-    fn execute(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
-        mpf_forward(&input, self.window, pool)
+    fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+        let out = mpf_forward(&input, self.window, ctx);
+        ctx.retire(input);
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
     use crate::util::quick::assert_allclose;
 
     fn tpool() -> TaskPool {
@@ -234,6 +268,7 @@ mod tests {
     #[test]
     fn all_conv_algos_agree() {
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 2);
         let reference =
             conv::conv_layer_reference(&input, &conv_layer(ConvAlgo::DirectNaive).weights, Activation::Relu);
@@ -241,7 +276,7 @@ mod tests {
             let l = conv_layer(algo);
             assert!(l.accepts(input.shape()));
             assert_eq!(l.out_shape(input.shape()), reference.shape());
-            let out = l.execute(input.clone_tensor(), &p);
+            let out = l.execute(input.clone_tensor(), &mut ctx);
             assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, l.name().as_str());
         }
     }
@@ -262,6 +297,15 @@ mod tests {
     }
 
     #[test]
+    fn plan_workspace_matches_table2_model() {
+        for algo in ConvAlgo::ALL {
+            let l = conv_layer(algo);
+            let sh = Shape5::new(1, 2, 9, 9, 9);
+            assert_eq!(l.plan_workspace(sh, 4).bytes, l.memory_bytes(sh, 4));
+        }
+    }
+
+    #[test]
     fn pool_and_mpf_layer_shapes() {
         let pl = MaxPoolLayer { window: [2, 2, 2], placement: Placement::Cpu };
         assert!(pl.accepts(Shape5::new(1, 1, 4, 4, 4)));
@@ -273,9 +317,24 @@ mod tests {
     }
 
     #[test]
+    fn maxpool_rejects_zero_extent_on_every_axis() {
+        // Regression: `accepts` used to check > 0 only on x, so a zero
+        // y or z extent (which trivially divides any window) slipped
+        // through to a panicking execute.
+        let pl = MaxPoolLayer { window: [2, 2, 2], placement: Placement::Cpu };
+        assert!(!pl.accepts(Shape5::new(1, 1, 0, 4, 4)));
+        assert!(!pl.accepts(Shape5::new(1, 1, 4, 0, 4)));
+        assert!(!pl.accepts(Shape5::new(1, 1, 4, 4, 0)));
+        assert!(pl.accepts(Shape5::new(1, 1, 2, 2, 2)));
+    }
+
+    #[test]
     fn measured_memory_within_model() {
         // The Table II model must upper-bound (within slack for
-        // planner pessimism) what the primitives actually allocate.
+        // planner pessimism) what the primitives actually allocate. A
+        // cold context is created inside the measured section so arena
+        // takes register exactly like the direct allocations they
+        // replaced.
         let p = tpool();
         let sh = Shape5::new(1, 2, 9, 9, 9);
         for algo in [
@@ -288,7 +347,10 @@ mod tests {
             let l = conv_layer(algo);
             let model = l.memory_bytes(sh, p.workers()) as i64;
             let input = Tensor5::random(sh, 3);
-            let (_out, peak) = crate::memory::measure(|| l.execute(input, &p));
+            let (_out, peak) = crate::memory::measure(|| {
+                let mut ctx = ExecCtx::new(&p);
+                l.execute(input, &mut ctx)
+            });
             // `measure` reports extra bytes beyond entry; the input was
             // allocated before, so add it back for the comparison.
             let measured = peak as i64 + sh.bytes_f32() as i64;

@@ -23,7 +23,11 @@
 //!   ([`runtime`]);
 //! * a SIMD kernel layer with runtime dispatch for the four CPU hot
 //!   loops ([`simd`]): AVX2+FMA → SSE2 → scalar on x86, NEON on
-//!   aarch64, forced via `ZNNI_SIMD` or [`simd::force`].
+//!   aarch64, forced via `ZNNI_SIMD` or [`simd::force`];
+//! * arena-backed execution contexts ([`exec`]): primitives draw output
+//!   tensors, FFT spectra and workspaces from a reusable [`exec::Arena`]
+//!   sized at plan time from the Table II model, so steady-state serving
+//!   performs zero transient allocations after a one-patch warmup.
 
 // Style lints this from-scratch codebase deliberately trades away for
 // explicit index arithmetic in the kernel code (CI runs clippy with
@@ -42,6 +46,7 @@ pub mod baselines;
 pub mod conv;
 pub mod coordinator;
 pub mod device;
+pub mod exec;
 pub mod fft;
 pub mod layers;
 pub mod memory;

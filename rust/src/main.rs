@@ -155,9 +155,10 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let plan = search(&net, &space, &cm).ok_or_else(|| anyhow!("no feasible plan"))?;
     let weights = make_weights(&net, 42);
     let cp = compile(&net, &plan, &weights)?;
+    let mut ctx = cp.make_ctx(pool)?;
     let input = Tensor5::random(plan.input, 7);
     let t0 = std::time::Instant::now();
-    let out = cp.run(input, pool);
+    let out = cp.run(input, &mut ctx);
     let secs = t0.elapsed().as_secs_f64();
     let osh = out.shape();
     let vox = (osh.s * osh.x * osh.y * osh.z) as f64;

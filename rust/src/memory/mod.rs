@@ -9,13 +9,32 @@
 
 pub mod model;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 static CURRENT: AtomicU64 = AtomicU64::new(0);
 static PEAK: AtomicU64 = AtomicU64::new(0);
+/// Count of *fresh* allocation events (not bytes): every `alloc` call.
+/// Arena reuse goes through [`alloc_recycled`] instead, so after a warm
+/// patch a steady workload advances this counter by zero — the "0
+/// transient allocations after warmup" assertion reads it.
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+/// Arena gauges: bytes idle in arena free lists + outstanding takes,
+/// aggregated over every live [`crate::exec::Arena`].
+static ARENA_FOOTPRINT: AtomicI64 = AtomicI64::new(0);
+static ARENA_HWM: AtomicU64 = AtomicU64::new(0);
+static ARENA_FRESH: AtomicU64 = AtomicU64::new(0);
 
-/// Register `bytes` of live tensor memory.
+/// Register `bytes` of live tensor memory (fresh backing store).
 pub fn alloc(bytes: u64) {
+    ALLOC_EVENTS.fetch_add(1, Ordering::SeqCst);
+    let cur = CURRENT.fetch_add(bytes, Ordering::SeqCst) + bytes;
+    PEAK.fetch_max(cur, Ordering::SeqCst);
+}
+
+/// Register `bytes` of live tensor memory whose backing store was
+/// recycled from an arena — counts toward the peak like [`alloc`], but
+/// is *not* an allocation event.
+pub fn alloc_recycled(bytes: u64) {
     let cur = CURRENT.fetch_add(bytes, Ordering::SeqCst) + bytes;
     PEAK.fetch_max(cur, Ordering::SeqCst);
 }
@@ -23,6 +42,45 @@ pub fn alloc(bytes: u64) {
 /// Unregister `bytes` of live tensor memory.
 pub fn free(bytes: u64) {
     CURRENT.fetch_sub(bytes, Ordering::SeqCst);
+}
+
+/// Fresh allocation events since process start (monotone).
+pub fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::SeqCst)
+}
+
+/// Adjust the aggregate arena footprint gauge (held + outstanding
+/// bytes across all arenas) and fold it into the arena high-water mark.
+/// Called by [`crate::exec::Arena`] only.
+pub fn arena_gauge(held_delta: i64, outstanding_delta: i64) {
+    let now = ARENA_FOOTPRINT.fetch_add(held_delta + outstanding_delta, Ordering::SeqCst)
+        + held_delta
+        + outstanding_delta;
+    if now > 0 {
+        ARENA_HWM.fetch_max(now as u64, Ordering::SeqCst);
+    }
+}
+
+/// Count one arena take that required fresh backing store.
+pub fn arena_fresh_event() {
+    ARENA_FRESH.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Current aggregate arena footprint in bytes (held + outstanding).
+pub fn arena_footprint() -> u64 {
+    ARENA_FOOTPRINT.load(Ordering::SeqCst).max(0) as u64
+}
+
+/// High-water mark of the aggregate arena footprint (monotone).
+pub fn arena_hwm() -> u64 {
+    ARENA_HWM.load(Ordering::SeqCst)
+}
+
+/// Arena takes served by fresh allocations since process start
+/// (monotone) — zero growth across a window means the window ran
+/// entirely out of recycled buffers.
+pub fn arena_fresh_allocs() -> u64 {
+    ARENA_FRESH.load(Ordering::SeqCst)
 }
 
 /// Bytes currently registered.
@@ -139,5 +197,31 @@ mod tests {
     fn measure_of_noop_is_zero() {
         let (_, peak) = measure(|| {});
         assert_eq!(peak, 0);
+    }
+
+    #[test]
+    fn recycled_alloc_counts_bytes_not_events() {
+        // The counters are process-global and other tests run
+        // concurrently, so only monotone properties are asserted.
+        let e0 = alloc_events();
+        alloc_recycled(500);
+        free(500);
+        alloc(500);
+        free(500);
+        let e1 = alloc_events();
+        assert!(e1 >= e0 + 1, "alloc must count an event");
+    }
+
+    #[test]
+    fn arena_gauges_are_monotone_and_balanced() {
+        // Gauges are global and other tests run concurrently, so only
+        // monotone properties are asserted here.
+        let h0 = arena_hwm();
+        let f0 = arena_fresh_allocs();
+        arena_gauge(1000, 0);
+        arena_fresh_event();
+        arena_gauge(-1000, 0);
+        assert!(arena_hwm() >= h0);
+        assert!(arena_fresh_allocs() >= f0 + 1);
     }
 }

@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use crate::conv::{Activation, Weights};
 use crate::device::Device;
+use crate::exec::ExecCtx;
 use crate::layers::{ConvLayer, LayerPrimitive};
 use crate::memory::model::{ConvAlgo, ConvDims};
 use crate::tensor::{Shape5, Tensor5, Vec3};
@@ -56,14 +57,18 @@ impl CostModel {
         let (f_in, f_out) = (4usize, 4usize);
         let dims = ConvDims { s: 1, f_in, f_out, n, k };
         let w = std::sync::Arc::new(Weights::random(f_out, f_in, k, 0xCA11));
+        // One context for all probes: the warmup run also warms the
+        // arena, so the timed run measures steady-state (allocation-
+        // free) execution — the regime the optimizer plans for.
+        let mut ctx = ExecCtx::new(pool);
         for (algo, rate) in cm.rates.iter_mut() {
             let layer = ConvLayer::new(w.clone(), *algo, Activation::Relu);
             let flops = layer.flops(Shape5::from_spatial(1, f_in, n));
             // One warmup + one timed run.
             let mk = || Tensor5::random(Shape5::from_spatial(1, f_in, n), 7);
-            layer.execute(mk(), pool);
+            layer.execute(mk(), &mut ctx);
             let t0 = Instant::now();
-            layer.execute(mk(), pool);
+            layer.execute(mk(), &mut ctx);
             let secs = t0.elapsed().as_secs_f64().max(1e-9);
             *rate = flops / secs;
             let _ = dims;
@@ -72,10 +77,10 @@ impl CostModel {
         {
             let sh = Shape5::new(1, f_in, probe_extent | 1, probe_extent | 1, probe_extent | 1);
             let t = Tensor5::random(sh, 9);
-            crate::pool::mpf_forward(&t, [2, 2, 2], pool);
+            crate::pool::mpf_forward(&t, [2, 2, 2], &mut ctx);
             let t0 = Instant::now();
             let t2 = Tensor5::random(sh, 9);
-            crate::pool::mpf_forward(&t2, [2, 2, 2], pool);
+            crate::pool::mpf_forward(&t2, [2, 2, 2], &mut ctx);
             cm.pool_rate = sh.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
         }
         cm

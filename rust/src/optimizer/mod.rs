@@ -22,6 +22,7 @@ use anyhow::{bail, Result};
 
 use crate::conv::{Activation, Weights};
 use crate::device::Device;
+use crate::exec::{ExecCtx, WorkspaceReq};
 use crate::layers::{ConvLayer, LayerPrimitive, MaxPoolLayer, MpfLayer, Placement};
 use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
@@ -315,14 +316,41 @@ pub fn compile(net: &NetSpec, plan: &Plan, weights: &[Arc<Weights>]) -> Result<C
 }
 
 impl CompiledPlan {
-    /// Execute the plan on one input patch.
-    pub fn run(&self, input: Tensor5, pool: &TaskPool) -> Tensor5 {
+    /// Execute the plan on one input patch against an execution
+    /// context. Every intermediate tensor cycles through the context's
+    /// arena, so a warm context re-executes without allocating.
+    pub fn run(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
         let mut cur = input;
         for p in &self.primitives {
             debug_assert!(p.accepts(cur.shape()), "{} rejects {}", p.name(), cur.shape());
-            cur = p.execute(cur, pool);
+            cur = p.execute(cur, ctx);
         }
         cur
+    }
+
+    /// Arena bytes this plan needs — the max of every layer's Table II
+    /// working set at its planned input shape. This is the same model
+    /// `search` ranked the plan with, so the arena is sized from the
+    /// numbers the optimizer already trusts (planned size ≤
+    /// `plan.est_memory` whenever `threads` matches the cost model's).
+    pub fn workspace_req(&self, threads: usize) -> WorkspaceReq {
+        let mut req = WorkspaceReq::ZERO;
+        let mut cur = self.plan.input;
+        for (li, p) in self.primitives.iter().enumerate() {
+            req = req.max(p.plan_workspace(cur, threads));
+            cur = self.plan.shapes[li];
+        }
+        req
+    }
+
+    /// Build an execution context whose arena budget is this plan's
+    /// [`CompiledPlan::workspace_req`]. The reserve check runs at plan
+    /// time — an infeasible budget errors here, never mid-execution.
+    pub fn make_ctx<'p>(&self, pool: &'p TaskPool) -> Result<ExecCtx<'p>> {
+        let req = self.workspace_req(pool.workers());
+        let mut ctx = ExecCtx::with_budget(pool, req.bytes);
+        ctx.reserve(&req)?;
+        Ok(ctx)
     }
 
     /// Device placement check: whether all conv layers are GPU
@@ -412,9 +440,32 @@ mod tests {
         let plan = search(&net, &space, &cm).unwrap();
         let weights = make_weights(&net, 1);
         let cp = compile(&net, &plan, &weights).unwrap();
+        let mut ctx = cp.make_ctx(&pool).unwrap();
         let input = Tensor5::random(plan.input, 2);
-        let out = cp.run(input, &pool);
+        let out = cp.run(input, &mut ctx);
         assert_eq!(out.shape(), *plan.shapes.last().unwrap());
+    }
+
+    #[test]
+    fn workspace_req_within_table2_estimate() {
+        // The arena's planned size must stay within the optimizer's own
+        // Table II estimate when computed with the same thread count.
+        let net = tiny_net(2);
+        let threads = 2;
+        let cm = CostModel::default_rates(threads);
+        let mut space = SearchSpace::cpu_only(host(4), 15);
+        space.max_candidates = 2;
+        let plan = search(&net, &space, &cm).unwrap();
+        let weights = make_weights(&net, 1);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let req = cp.workspace_req(threads);
+        assert!(req.bytes > 0);
+        assert!(
+            req.bytes <= plan.est_memory,
+            "planned arena {} exceeds Table II estimate {}",
+            req.bytes,
+            plan.est_memory
+        );
     }
 
     #[test]

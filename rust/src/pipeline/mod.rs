@@ -9,6 +9,7 @@
 
 use std::sync::mpsc::sync_channel;
 
+use crate::exec::ExecCtx;
 use crate::layers::LayerPrimitive;
 use crate::tensor::Tensor5;
 use crate::util::pool::TaskPool;
@@ -30,18 +31,26 @@ impl Pipeline {
     }
 
     /// Run a stream of inputs through the pipeline. The queue between
-    /// the stages holds at most one tensor.
+    /// the stages holds at most one tensor. Each stage owns a private
+    /// [`ExecCtx`], reused across the whole stream, so head and tail
+    /// never contend on one arena. The tail's working set is fully
+    /// recycled after its first item; the head re-takes its egress
+    /// tensor per item (ownership crosses the stage boundary and the
+    /// buffer is retired into the *tail's* arena, which caps what it
+    /// keeps), so the steady per-item cost of the head is one buffer
+    /// allocation — bounded by the depth-1 queue, not accumulating.
     pub fn run_stream(&self, inputs: Vec<Tensor5>, pool: &TaskPool) -> Vec<Tensor5> {
         let n = inputs.len();
         let (tx, rx) = sync_channel::<Tensor5>(1);
         let mut outputs = Vec::with_capacity(n);
         std::thread::scope(|s| {
-            // Producer: CPU part.
+            // Producer: CPU part, with its own context.
             s.spawn(move || {
+                let mut ctx = ExecCtx::new(pool);
                 for input in inputs {
                     let mut cur = input;
                     for l in &self.head {
-                        cur = l.execute(cur, pool);
+                        cur = l.execute(cur, &mut ctx);
                     }
                     // Blocks while the queue is full — the paper's
                     // "CPU waits until the GPU picked up the data".
@@ -49,11 +58,12 @@ impl Pipeline {
                 }
                 drop(tx);
             });
-            // Consumer: GPU part (this thread).
+            // Consumer: GPU part (this thread), its own context.
+            let mut ctx = ExecCtx::new(pool);
             while let Ok(mid) = rx.recv() {
                 let mut cur = mid;
                 for l in &self.tail {
-                    cur = l.execute(cur, pool);
+                    cur = l.execute(cur, &mut ctx);
                 }
                 outputs.push(cur);
             }
@@ -64,12 +74,13 @@ impl Pipeline {
     /// Sequential reference (no overlap) for testing and speedup
     /// accounting.
     pub fn run_sequential(&self, inputs: Vec<Tensor5>, pool: &TaskPool) -> Vec<Tensor5> {
+        let mut ctx = ExecCtx::new(pool);
         inputs
             .into_iter()
             .map(|input| {
                 let mut cur = input;
                 for l in self.head.iter().chain(self.tail.iter()) {
-                    cur = l.execute(cur, pool);
+                    cur = l.execute(cur, &mut ctx);
                 }
                 cur
             })

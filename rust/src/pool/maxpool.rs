@@ -1,8 +1,9 @@
 //! Plain max-pooling layer (§V): each image pooled independently in a
-//! parallel-for, window `p`, stride `p`.
+//! parallel-for, window `p`, stride `p`. The output tensor is drawn
+//! from the [`ExecCtx`] arena.
 
+use crate::exec::ExecCtx;
 use crate::tensor::{Shape5, Tensor5, Vec3};
-use crate::util::pool::TaskPool;
 use crate::util::sendptr::SendPtr;
 
 /// Output shape of max-pooling (Table I row 3). Panics unless the
@@ -16,10 +17,11 @@ pub fn max_pool_out_shape(input: Shape5, p: Vec3) -> Shape5 {
 }
 
 /// Max-pooling layer.
-pub fn max_pool(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
+pub fn max_pool(input: &Tensor5, p: Vec3, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     let osh = max_pool_out_shape(ish, p);
-    let mut out = Tensor5::zeros(osh);
+    let mut out = ctx.tensor5(osh);
     let outp = SendPtr(out.data_mut().as_mut_ptr());
     let ol = osh.image_len();
     pool.parallel_for(ish.s * ish.f, |sf| {
@@ -120,7 +122,7 @@ pub fn pool_one_scalar(img: &[f32], n: Vec3, p: Vec3, off: Vec3, odims: Vec3, ou
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
 
     fn tpool() -> TaskPool {
         TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
@@ -144,15 +146,19 @@ mod tests {
         for (i, v) in [1.0, 8.0, 3.0, 4.0, 5.0, 6.0, 7.0, 2.0].iter().enumerate() {
             t.data_mut()[i] = *v;
         }
-        let out = max_pool(&t, [2, 2, 2], &tpool());
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
+        let out = max_pool(&t, [2, 2, 2], &mut ctx);
         assert_eq!(out.shape(), Shape5::new(1, 1, 1, 1, 1));
         assert_eq!(out.data(), &[8.0]);
     }
 
     #[test]
     fn anisotropic_window() {
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let t = Tensor5::random(Shape5::new(2, 2, 4, 2, 6), 7);
-        let out = max_pool(&t, [2, 1, 3], &tpool());
+        let out = max_pool(&t, [2, 1, 3], &mut ctx);
         assert_eq!(out.shape(), Shape5::new(2, 2, 2, 2, 2));
         // Check one block by hand.
         let mut m = f32::NEG_INFINITY;
@@ -187,10 +193,11 @@ mod tests {
     #[test]
     fn pooling_is_monotone_property() {
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         crate::util::quick::check("maxpool ≥ any element", |g| {
             let n = [g.usize(1, 3) * 2, g.usize(1, 3) * 2, g.usize(1, 3) * 2];
             let t = Tensor5::random(Shape5::from_spatial(1, 1, n), g.case as u64);
-            let out = max_pool(&t, [2, 2, 2], &p);
+            let out = max_pool(&t, [2, 2, 2], &mut ctx);
             // Every output must be ≥ all 8 inputs of its block and equal
             // to one of them.
             let osh = out.shape();

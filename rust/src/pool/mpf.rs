@@ -8,8 +8,8 @@
 //! index, so downstream layers see a contiguous per-input group —
 //! the recombination in `crate::inference` relies on this ordering.
 
+use crate::exec::ExecCtx;
 use crate::tensor::{Shape5, Tensor5, Vec3};
-use crate::util::pool::TaskPool;
 use crate::util::sendptr::SendPtr;
 
 use super::maxpool::pool_one;
@@ -46,12 +46,13 @@ pub fn mpf_fragment_order(p: Vec3) -> Vec<Vec3> {
 /// MPF layer: batch entry `s` of the input becomes entries
 /// `s·p³ .. (s+1)·p³` of the output, one per offset (in
 /// [`mpf_fragment_order`]).
-pub fn mpf_forward(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
+pub fn mpf_forward(input: &Tensor5, p: Vec3, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    let pool = ctx.pool();
     let ish = input.shape();
     let osh = mpf_out_shape(ish, p);
     let frags = mpf_fragment_order(p);
     let nf = frags.len();
-    let mut out = Tensor5::zeros(osh);
+    let mut out = ctx.tensor5(osh);
     let outp = SendPtr(out.data_mut().as_mut_ptr());
     let ol = osh.image_len();
     let odims = osh.spatial();
@@ -72,7 +73,7 @@ pub fn mpf_forward(input: &Tensor5, p: Vec3, pool: &TaskPool) -> Tensor5 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
 
     fn tpool() -> TaskPool {
         TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
@@ -101,8 +102,9 @@ mod tests {
         // Fragment (0,0,0) of MPF on an n=7 image equals max-pooling the
         // leading 6³ sub-volume.
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let t = Tensor5::random(Shape5::new(1, 1, 7, 7, 7), 3);
-        let m = mpf_forward(&t, [2, 2, 2], &p);
+        let m = mpf_forward(&t, [2, 2, 2], &mut ctx);
         for x in 0..3 {
             for y in 0..3 {
                 for z in 0..3 {
@@ -123,8 +125,9 @@ mod tests {
     #[test]
     fn each_fragment_is_offset_pooling() {
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let t = Tensor5::random(Shape5::new(2, 2, 5, 5, 5), 5);
-        let m = mpf_forward(&t, [2, 2, 2], &p);
+        let m = mpf_forward(&t, [2, 2, 2], &mut ctx);
         let order = mpf_fragment_order([2, 2, 2]);
         for s in 0..2 {
             for (fi, off) in order.iter().enumerate() {
@@ -159,8 +162,9 @@ mod tests {
     fn anisotropic_window_2x1x1() {
         // The paper's illustration network uses 2×1×1 MPF windows.
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let t = Tensor5::random(Shape5::new(1, 1, 5, 4, 4), 9);
-        let m = mpf_forward(&t, [2, 1, 1], &p);
+        let m = mpf_forward(&t, [2, 1, 1], &mut ctx);
         assert_eq!(m.shape(), Shape5::new(2, 1, 2, 4, 4));
         // Fragment 0: rows 0..2, 2..4 pooled along x; fragment 1: 1..3, 3..5.
         for (fi, off) in [(0usize, 0usize), (1, 1)] {

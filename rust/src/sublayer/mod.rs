@@ -16,12 +16,12 @@
 
 use crate::conv::{Activation, Weights};
 use crate::device::Device;
+use crate::exec::ExecCtx;
 use crate::layers::{ConvLayer, LayerPrimitive};
 use crate::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
 use crate::optimizer::CostModel;
 use crate::tensor::{Shape5, Tensor5};
 use crate::util::ceil_div;
-use crate::util::pool::TaskPool;
 
 /// One sub-layer: ranges into the batch and channel dimensions.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -175,18 +175,18 @@ pub fn execute(
     w: &Weights,
     plan: &SubLayerPlan,
     act: Activation,
-    pool: &TaskPool,
+    ctx: &mut ExecCtx<'_>,
 ) -> (Tensor5, u64) {
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in);
     let osh = crate::conv::conv_out_shape(ish, w.f_out, w.k);
-    let mut out = Tensor5::zeros(osh);
+    let mut out = ctx.tensor5(osh);
     let mut moved = 0u64;
     let d = ConvDims { s: ish.s, f_in: w.f_in, f_out: w.f_out, n: ish.spatial(), k: w.k };
     for p in &plan.pieces {
         // Host→device: copy the input slice (the upload of Fig. 6).
         let sub_ish = Shape5::from_spatial(p.s1 - p.s0, p.i1 - p.i0, ish.spatial());
-        let mut sub_in = Tensor5::zeros(sub_ish);
+        let mut sub_in = ctx.tensor5(sub_ish);
         for (ss, s) in (p.s0..p.s1).enumerate() {
             for (ii, i) in (p.i0..p.i1).enumerate() {
                 sub_in.image_mut(ss, ii).copy_from_slice(input.image(s, i));
@@ -198,7 +198,7 @@ pub fn execute(
             sub_w.set_bias(j, 0.0);
         }
         let layer = ConvLayer::new(std::sync::Arc::new(sub_w), plan.algo, Activation::None);
-        let sub_out = layer.execute(sub_in, pool);
+        let sub_out = layer.execute(sub_in, ctx);
         // Device→host: accumulate the partial result.
         for (ss, s) in (p.s0..p.s1).enumerate() {
             for (jj, j) in (p.j0..p.j1).enumerate() {
@@ -207,6 +207,7 @@ pub fn execute(
                 }
             }
         }
+        ctx.retire(sub_out);
         moved += piece_transfer_bytes(&d, p);
     }
     for s in 0..osh.s {
@@ -224,7 +225,7 @@ pub fn execute(
 mod tests {
     use super::*;
     use crate::conv::conv_layer_reference;
-    use crate::util::pool::ChipTopology;
+    use crate::util::pool::{ChipTopology, TaskPool};
     use crate::util::quick::assert_allclose;
 
     fn tpool() -> TaskPool {
@@ -288,6 +289,7 @@ mod tests {
     #[test]
     fn execute_matches_reference_across_splits() {
         let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
         let cm = CostModel::default_rates(2);
         let d = dims();
         let input = Tensor5::random(Shape5::from_spatial(d.s, d.f_in, d.n), 51);
@@ -304,7 +306,7 @@ mod tests {
         ] {
             let gpu = Device::gpu_with_ram(ram);
             let plan = decompose(&d, &gpu, &cm).unwrap();
-            let (out, moved) = execute(&input, &w, &plan, Activation::Relu, &p);
+            let (out, moved) = execute(&input, &w, &plan, Activation::Relu, &mut ctx);
             assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "sublayer exec");
             assert_eq!(moved, plan.transfer_bytes);
         }

@@ -34,6 +34,25 @@ impl Tensor5 {
         Tensor5 { shape, data }
     }
 
+    /// Build from a buffer drawn from an [`crate::exec::Arena`]. The
+    /// arena already registered the bytes with the ledger when it handed
+    /// the buffer out, so this does *not* call `memory::alloc`; `Drop`
+    /// still frees, which matches the arena's accounting (a dropped
+    /// arena tensor genuinely releases its memory, a retired one hands
+    /// the registered bytes back through `Arena::put_f32`).
+    pub(crate) fn from_arena(shape: Shape5, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.len(), "arena buffer length mismatch for {shape}");
+        Tensor5 { shape, data }
+    }
+
+    /// Decompose into shape + backing store without running `Drop` (the
+    /// ledger keeps the bytes registered; the arena's `put` releases
+    /// them). Crate-internal: only `exec::Arena` retires tensors.
+    pub(crate) fn into_raw(self) -> (Shape5, Vec<f32>) {
+        let mut me = std::mem::ManuallyDrop::new(self);
+        (me.shape, std::mem::take(&mut me.data))
+    }
+
     pub fn shape(&self) -> Shape5 {
         self.shape
     }

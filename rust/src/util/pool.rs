@@ -199,13 +199,24 @@ impl TaskPool {
     /// This is the `parallel for` of the paper's data-parallel
     /// primitives (Algorithm 1/2).
     pub fn parallel_for(&self, n: usize, f: impl Fn(usize) + Sync) {
+        self.parallel_for_with_worker(n, |_w, i| f(i));
+    }
+
+    /// Like [`TaskPool::parallel_for`], but the body also receives the
+    /// executing worker's pool-wide index (`0..workers()`). This lets
+    /// callers maintain **per-worker** scratch buffers (e.g. the direct
+    /// convolution's arena-backed temporary images) without
+    /// thread-locals: a worker runs one job at a time, so two chunks
+    /// never touch the same slot concurrently. The inline fast path
+    /// (n == 1 or a single worker) reports worker 0.
+    pub fn parallel_for_with_worker(&self, n: usize, f: impl Fn(usize, usize) + Sync) {
         if n == 0 {
             return;
         }
         let workers = self.workers();
         if n == 1 || workers <= 1 {
             for i in 0..n {
-                f(i);
+                f(0, i);
             }
             return;
         }
@@ -219,9 +230,9 @@ impl TaskPool {
                 let len = per + usize::from(c < extra);
                 let range = start..start + len;
                 start += len;
-                s.submit(move |_| {
+                s.submit(move |ctx| {
                     for i in range {
-                        f(i);
+                        f(ctx.worker, i);
                     }
                 });
             }
@@ -506,6 +517,22 @@ mod tests {
             }
         });
         assert_eq!(*order.lock().unwrap(), vec!["high", "mid", "low"]);
+    }
+
+    #[test]
+    fn parallel_for_with_worker_covers_all_and_reports_valid_ids() {
+        let pool = small_pool();
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        let bad_worker = AtomicUsize::new(0);
+        let nw = pool.workers();
+        pool.parallel_for_with_worker(500, |w, i| {
+            if w >= nw {
+                bad_worker.fetch_add(1, Ordering::SeqCst);
+            }
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert_eq!(bad_worker.load(Ordering::SeqCst), 0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use std::sync::Arc;
 
 use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::exec::ExecCtx;
 use znni::fft::fft3d::{Fft3, Fft3Scratch};
 use znni::fft::FftPlan;
 use znni::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
@@ -46,13 +47,14 @@ fn fft3_degenerate_dims() {
 fn conv_kernel_equals_image() {
     // k == n gives a single output voxel per map.
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     let input = Tensor5::random(Shape5::new(1, 2, 4, 4, 4), 1);
     let w = Arc::new(Weights::random(3, 2, [4, 4, 4], 2));
     let reference = conv_layer_reference(&input, &w, Activation::None);
     assert_eq!(reference.shape(), Shape5::new(1, 3, 1, 1, 1));
     for algo in ConvAlgo::ALL {
         let out = ConvLayer::new(w.clone(), algo, Activation::None)
-            .execute(input.clone_tensor(), &pool);
+            .execute(input.clone_tensor(), &mut ctx);
         assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, algo.name());
     }
 }
@@ -60,10 +62,11 @@ fn conv_kernel_equals_image() {
 #[test]
 fn mpf_window_one_is_identity_batchwise() {
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     let t = Tensor5::random(Shape5::new(2, 2, 3, 3, 3), 5);
     let m = MpfLayer { window: [1, 1, 1], placement: Placement::Cpu };
     assert!(m.accepts(t.shape()));
-    let out = m.execute(t.clone_tensor(), &pool);
+    let out = m.execute(t.clone_tensor(), &mut ctx);
     assert_eq!(out.shape(), t.shape());
     assert_eq!(out.data(), t.data());
 }
@@ -178,7 +181,8 @@ fn sublayer_single_channel_pieces() {
     let input = Tensor5::random(Shape5::from_spatial(1, 3, [6, 6, 6]), 7);
     let w = Weights::random(3, 3, [3, 3, 3], 8);
     let expect = conv_layer_reference(&input, &w, Activation::Relu);
-    let (out, _) = znni::sublayer::execute(&input, &w, &plan, Activation::Relu, &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let (out, _) = znni::sublayer::execute(&input, &w, &plan, Activation::Relu, &mut ctx);
     assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "1x1 pieces");
 }
 

@@ -1,0 +1,197 @@
+//! Arena-backed execution contexts: correctness and steady-state
+//! allocation discipline.
+//!
+//! * Every primitive must be **bit-identical** under a fresh context vs
+//!   a warm (reused) one — buffer recycling may never leak state.
+//! * A deliberately undersized arena budget must fail loudly at *plan*
+//!   time (`reserve`), never mid-execution.
+//! * The compiled plan's arena sizing must stay within the optimizer's
+//!   own Table II estimate, and a warm `Coordinator::serve` must
+//!   perform zero transient allocations per patch (memory-ledger
+//!   backed arena counters).
+
+use std::sync::Arc;
+
+use znni::conv::{Activation, Weights};
+use znni::coordinator::{Coordinator, InferenceRequest};
+use znni::device::Device;
+use znni::exec::{ExecCtx, WorkspaceReq};
+use znni::layers::{ConvLayer, LayerPrimitive, MaxPoolLayer, MpfLayer, Placement};
+use znni::memory::model::ConvAlgo;
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+/// Warm vs fresh context: every conv algorithm, max-pool and MPF must
+/// produce bit-identical outputs (exact equality, not tolerance) when
+/// re-run against a context whose arena already holds recycled buffers.
+#[test]
+fn warm_ctx_outputs_bit_identical_to_fresh() {
+    let pool = tpool();
+    let input = Tensor5::random(Shape5::new(2, 3, 7, 7, 7), 42);
+    let w = Arc::new(Weights::random(3, 3, [3, 3, 3], 43));
+
+    let mut layers: Vec<Box<dyn LayerPrimitive>> = ConvAlgo::ALL
+        .iter()
+        .map(|&algo| {
+            Box::new(ConvLayer::new(w.clone(), algo, Activation::Relu)) as Box<dyn LayerPrimitive>
+        })
+        .collect();
+    layers.push(Box::new(MpfLayer { window: [2, 2, 2], placement: Placement::Cpu }));
+
+    for layer in &layers {
+        // Fresh context, single run.
+        let fresh_out = {
+            let mut ctx = ExecCtx::new(&pool);
+            layer.execute(input.clone_tensor(), &mut ctx)
+        };
+        // One context reused three times; all runs must match exactly.
+        let mut warm = ExecCtx::new(&pool);
+        for round in 0..3 {
+            let out = layer.execute(input.clone_tensor(), &mut warm);
+            assert_eq!(
+                out.data(),
+                fresh_out.data(),
+                "{} round {round}: warm ctx output diverged",
+                layer.name()
+            );
+            warm.retire(out);
+        }
+        let st = warm.arena.stats();
+        assert!(st.reuses > 0, "{}: warm runs must hit the arena", layer.name());
+    }
+
+    // Max-pool needs a divisible extent; test it separately.
+    let pin = Tensor5::random(Shape5::new(1, 2, 6, 6, 6), 44);
+    let mp = MaxPoolLayer { window: [2, 2, 2], placement: Placement::Cpu };
+    let fresh_out = {
+        let mut ctx = ExecCtx::new(&pool);
+        mp.execute(pin.clone_tensor(), &mut ctx)
+    };
+    let mut warm = ExecCtx::new(&pool);
+    for _ in 0..3 {
+        let out = mp.execute(pin.clone_tensor(), &mut warm);
+        assert_eq!(out.data(), fresh_out.data(), "max-pool warm ctx diverged");
+        warm.retire(out);
+    }
+}
+
+/// A compiled plan re-run against the same warm context is bit-identical
+/// and, from the second patch on, allocation-free.
+#[test]
+fn compiled_plan_warm_rerun_identical_and_allocation_free() {
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 13);
+    space.max_candidates = 1;
+    let plan = search(&net, &space, &cm).unwrap();
+    let weights = make_weights(&net, 5);
+    let cp = compile(&net, &plan, &weights).unwrap();
+
+    let mut ctx = cp.make_ctx(&pool).unwrap();
+    let mk = || Tensor5::random(plan.input, 9);
+    // Two warmup runs: the first builds the working set; holding both
+    // outputs at once forces a second output-sized buffer into
+    // circulation before the steady measurement.
+    let first = cp.run(mk(), &mut ctx);
+    let second = cp.run(mk(), &mut ctx);
+    assert_eq!(first.data(), second.data(), "warm plan rerun must be bit-identical");
+    ctx.retire(first);
+    ctx.retire(second);
+    let fresh_after_warmup = ctx.arena.stats().fresh_allocs;
+    let third = cp.run(mk(), &mut ctx);
+    assert_eq!(
+        ctx.arena.stats().fresh_allocs,
+        fresh_after_warmup,
+        "steady-state plan execution must not allocate"
+    );
+    ctx.retire(third);
+}
+
+/// Undersized arena: the failure happens at plan (reserve) time with a
+/// clear message — execution never starts.
+#[test]
+fn undersized_arena_fails_at_plan_time_not_mid_execution() {
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 13);
+    space.max_candidates = 1;
+    let plan = search(&net, &space, &cm).unwrap();
+    let weights = make_weights(&net, 5);
+    let cp = compile(&net, &plan, &weights).unwrap();
+
+    let req = cp.workspace_req(pool.workers());
+    assert!(req.bytes > 1024);
+    let mut ctx = ExecCtx::with_budget(&pool, 1024);
+    let err = ctx.reserve(&req).expect_err("undersized budget must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("undersized") && msg.contains("1024"), "{msg}");
+    // A correctly sized budget passes the same gate.
+    let mut ok = ExecCtx::with_budget(&pool, req.bytes);
+    assert!(ok.reserve(&req).is_ok());
+}
+
+/// Acceptance: the arena's planned size is within the optimizer's
+/// Table II estimate for the compiled plan (same thread count).
+#[test]
+fn planned_arena_within_optimizer_estimate() {
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).unwrap();
+    let weights = make_weights(&net, 7);
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let req: WorkspaceReq = cp.workspace_req(pool.workers());
+    assert!(req.bytes > 0);
+    assert!(
+        req.bytes <= plan.est_memory,
+        "planned arena {} exceeds the search's Table II estimate {}",
+        req.bytes,
+        plan.est_memory
+    );
+}
+
+/// Acceptance: after a one-patch warmup, `Coordinator::serve` performs
+/// zero transient Tensor5/workspace allocations per patch. The counters
+/// are the memory ledger's arena instrumentation, surfaced per serve
+/// call through `Metrics`.
+#[test]
+fn coordinator_steady_state_zero_transient_allocations() {
+    let pool = tpool();
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).unwrap();
+    let weights = make_weights(&net, 21);
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let coord = Coordinator::new(net, cp).unwrap();
+
+    let mk = |seed: u64| Tensor5::random(Shape5::new(1, 1, 20, 20, 20), seed);
+    let (_, warm) = coord.serve(vec![InferenceRequest { id: 0, volume: mk(1) }], &pool).unwrap();
+    assert!(warm.arena_fresh_allocs > 0, "cold serve builds the working set");
+    assert!(warm.arena_hwm_bytes > 0);
+
+    // Multi-patch steady round: more patches than the warmup had is
+    // fine — every buffer shape repeats per patch.
+    let (resp, steady) =
+        coord.serve(vec![InferenceRequest { id: 1, volume: mk(2) }], &pool).unwrap();
+    assert!(steady.patches >= 2, "volume must split into several patches");
+    assert_eq!(
+        steady.arena_fresh_allocs, 0,
+        "warm serve must perform zero transient allocations per patch \
+         ({} patches, hwm {})",
+        steady.patches, steady.arena_hwm_bytes
+    );
+    // The ledger-side gauges saw the same activity.
+    assert!(znni::memory::arena_hwm() >= steady.arena_hwm_bytes);
+    assert!(resp[0].output.data().iter().any(|&v| v != 0.0));
+}

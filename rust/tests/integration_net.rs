@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use znni::conv::{conv_layer_reference, Activation, Weights};
 use znni::device::Device;
+use znni::exec::ExecCtx;
 use znni::layers::{ConvLayer, LayerPrimitive};
 use znni::memory::model::ConvAlgo;
 use znni::net::zoo::{benchmark_nets, NetScale};
@@ -21,6 +22,7 @@ fn tpool() -> TaskPool {
 #[test]
 fn all_benchmark_nets_execute_at_tiny_scale() {
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     let cm = CostModel::default_rates(pool.workers());
     for net in benchmark_nets(NetScale::Tiny) {
         let modes = vec![PoolingMode::Mpf; net.pool_count()];
@@ -33,7 +35,7 @@ fn all_benchmark_nets_execute_at_tiny_scale() {
         let weights = make_weights(&net, 7);
         let cp = compile(&net, &plan, &weights).unwrap();
         let input = Tensor5::random(plan.input, 3);
-        let out = cp.run(input, &pool);
+        let out = cp.run(input, &mut ctx);
         assert_eq!(out.shape(), *plan.shapes.last().unwrap(), "{}", net.name);
         // The final conv layer has 3 output maps (affinity graph).
         assert_eq!(out.shape().f, 3, "{}", net.name);
@@ -46,12 +48,13 @@ fn all_benchmark_nets_execute_at_tiny_scale() {
 fn every_conv_algo_agrees_on_a_net337_layer() {
     // Layer 3 of n337 at tiny scale: f = f' = 4, k = 3³.
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     let w = Arc::new(Weights::random(4, 4, [3, 3, 3], 13));
     let input = Tensor5::random(Shape5::new(2, 4, 9, 9, 9), 17);
     let reference = conv_layer_reference(&input, &w, Activation::Relu);
     for algo in ConvAlgo::ALL {
         let layer = ConvLayer::new(w.clone(), algo, Activation::Relu);
-        let out = layer.execute(input.clone_tensor(), &pool);
+        let out = layer.execute(input.clone_tensor(), &mut ctx);
         assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, algo.name());
     }
 }
@@ -66,7 +69,8 @@ fn relu_applied_after_every_conv_layer() {
     let plan = search(&net, &space, &cm).unwrap();
     let weights = make_weights(&net, 3);
     let cp = compile(&net, &plan, &weights).unwrap();
-    let out = cp.run(Tensor5::random(plan.input, 5), &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let out = cp.run(Tensor5::random(plan.input, 5), &mut ctx);
     assert!(out.data().iter().all(|&v| v >= 0.0));
 }
 
@@ -90,14 +94,15 @@ fn batch_concatenation_property_whole_net() {
     cat.data_mut()[..a.data().len()].copy_from_slice(a.data());
     cat.data_mut()[a.data().len()..].copy_from_slice(b.data());
 
-    let out_cat = cp.run(cat, &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let out_cat = cp.run(cat, &mut ctx);
 
     let mut space1 = space.clone();
     space1.batch_sizes = vec![1];
     let plan1 = search(&net, &space1, &cm).unwrap();
     let cp1 = compile(&net, &plan1, &weights).unwrap();
-    let oa = cp1.run(a, &pool);
-    let ob = cp1.run(b, &pool);
+    let oa = cp1.run(a, &mut ctx);
+    let ob = cp1.run(b, &mut ctx);
 
     let half = out_cat.data().len() / 2;
     assert_allclose(&out_cat.data()[..half], oa.data(), 1e-3, 1e-2, "first half");

@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use znni::conv::{conv_layer_reference, Activation, Weights};
 use znni::device::Device;
+use znni::exec::ExecCtx;
 use znni::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
 use znni::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
 use znni::optimizer::CostModel;
@@ -33,7 +34,8 @@ fn gpu_host_ram_layer_equals_plain_layer_under_pressure() {
     let input = Tensor5::random(Shape5::from_spatial(d.s, d.f_in, d.n), 5);
     let w = Weights::random(d.f_out, d.f_in, d.k, 6);
     let expect = conv_layer_reference(&input, &w, Activation::Relu);
-    let (out, moved) = execute(&input, &w, &plan, Activation::Relu, &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let (out, moved) = execute(&input, &w, &plan, Activation::Relu, &mut ctx);
     assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "gpu+host layer");
     assert!(moved > input.shape().bytes_f32(), "must have streamed data");
 }

@@ -5,6 +5,7 @@
 use std::sync::Arc;
 
 use znni::conv::{Activation, Weights};
+use znni::exec::ExecCtx;
 use znni::layers::{ConvLayer, LayerPrimitive};
 use znni::memory::model::ConvAlgo;
 use znni::net::PoolingMode;
@@ -39,7 +40,8 @@ fn conv_probe_artifact_matches_native_conv() {
         .execute_tensor("conv_probe", &input, &[w.raw(), w.raw_bias()])
         .expect("artifact executes");
     let layer = ConvLayer::new(Arc::new(w), ConvAlgo::DirectNaive, Activation::Relu);
-    let want = layer.execute(input, &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let want = layer.execute(input, &mut ctx);
     assert_eq!(got.shape(), want.shape());
     assert_allclose(got.data(), want.data(), 1e-4, 1e-3, "pallas artifact == native");
 }
@@ -78,7 +80,8 @@ fn tiny_net_artifact_matches_compiled_plan() {
         out_voxels: (out.s * out.x * out.y * out.z) as u64,
     };
     let cp = compile(&net, &plan, &weights).unwrap();
-    let want = cp.run(input, &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let want = cp.run(input, &mut ctx);
     assert_eq!(got.shape(), want.shape());
     assert_allclose(got.data(), want.data(), 1e-3, 1e-2, "whole-net artifact == native");
 }

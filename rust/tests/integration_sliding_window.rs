@@ -2,6 +2,7 @@
 //! fragment recombination computes exactly the dense sliding-window
 //! output — including across patch boundaries and for 2-pool nets.
 
+use znni::exec::ExecCtx;
 use znni::inference::{dense_reference, fragment_map, infer_volume, recombine};
 use znni::memory::model::ConvAlgo;
 use znni::net::spec::{LayerSpec, NetSpec, PoolingMode};
@@ -74,16 +75,18 @@ fn two_pool_mpf_equals_dense_sliding_window() {
 
     let plan = manual_plan(&net, volume.shape(), &modes, ConvAlgo::FftTaskParallel);
     let cp = compile(&net, &plan, &weights).unwrap();
-    let raw = cp.run(volume.clone_tensor(), &pool);
+    let mut ctx = ExecCtx::new(&pool);
+    let raw = cp.run(volume.clone_tensor(), &mut ctx);
     let map = fragment_map(&net, &modes).unwrap();
     assert_eq!(map.offsets.len(), 64); // 8 × 8 fragments
-    let dense = recombine(&raw, 1, &map);
+    let dense = recombine(&raw, 1, &map, &mut ctx);
 
     let mp = vec![PoolingMode::MaxPool; 2];
     let wplan = manual_plan(&net, Shape5::from_spatial(1, 1, fov), &mp, ConvAlgo::DirectMkl);
     let wcp = compile(&net, &wplan, &weights).unwrap();
-    let runner = |t: Tensor5| wcp.run(t, &pool);
-    let expect = dense_reference(&net, &runner, &volume);
+    let mut wctx = ExecCtx::new(&pool);
+    let mut runner = |t: Tensor5| wcp.run(t, &mut wctx);
+    let expect = dense_reference(&net, &mut runner, &volume);
 
     assert_allclose(dense.data(), expect.data(), 1e-3, 1e-2, "2-pool MPF == dense");
 }
@@ -100,12 +103,16 @@ fn patched_inference_equals_single_patch_all_algos() {
 
     let mut results = Vec::new();
     for algo in [ConvAlgo::DirectNaive, ConvAlgo::FftDataParallel, ConvAlgo::GpuFft] {
-        let run_patch = |patch: Tensor5| {
+        let mut ctx = ExecCtx::new(&pool);
+        let mut run_patch = |patch: Tensor5| {
             let plan = manual_plan(&net, patch.shape(), &modes, algo);
             let cp = compile(&net, &plan, &weights).unwrap();
-            recombine(&cp.run(patch, &pool), 1, &map)
+            let raw = cp.run(patch, &mut ctx);
+            let dense = recombine(&raw, 1, &map, &mut ctx);
+            ctx.retire(raw);
+            dense
         };
-        let out = infer_volume(&volume, fov, [15, 15, 15], 2, &run_patch).unwrap();
+        let out = infer_volume(&volume, fov, [15, 15, 15], 2, &mut run_patch).unwrap();
         results.push(out);
     }
     for r in &results[1..] {

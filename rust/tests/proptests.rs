@@ -4,6 +4,7 @@ use std::sync::Arc;
 
 use znni::baselines::{run_baseline, Baseline};
 use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::exec::ExecCtx;
 use znni::layers::{ConvLayer, LayerPrimitive};
 use znni::memory::model::{conv_memory_bytes, ConvAlgo, ConvDims};
 use znni::net::spec::{LayerSpec, NetSpec, PoolingMode};
@@ -19,6 +20,7 @@ fn tpool() -> TaskPool {
 #[test]
 fn prop_all_conv_algorithms_agree() {
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     check_with(Config { cases: 8, ..Default::default() }, "conv algos agree", |g| {
         let s = g.usize(1, 2);
         let fi = g.usize(1, 4);
@@ -30,7 +32,7 @@ fn prop_all_conv_algorithms_agree() {
         let reference = conv_layer_reference(&input, &w, Activation::Relu);
         for algo in ConvAlgo::ALL {
             let out = ConvLayer::new(w.clone(), algo, Activation::Relu)
-                .execute(input.clone_tensor(), &pool);
+                .execute(input.clone_tensor(), &mut ctx);
             assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, algo.name());
         }
     });
@@ -61,7 +63,12 @@ fn prop_memory_model_upper_bounds_measured() {
                 + znni::memory::model::GPU_FFT_K_BYTES;
             let input = Tensor5::random(Shape5::from_spatial(s, fi, n), 3);
             let in_bytes = input.shape().bytes_f32();
-            let (_o, peak) = znni::memory::measure(|| layer.execute(input, &pool));
+            // A cold context per measurement: arena takes then register
+            // exactly like the direct allocations they replaced.
+            let (_o, peak) = znni::memory::measure(|| {
+                let mut ctx = ExecCtx::new(&pool);
+                layer.execute(input, &mut ctx)
+            });
             assert!(
                 peak + in_bytes <= model,
                 "{algo:?}: measured {} > model {model} (dims {d:?})",
@@ -76,6 +83,7 @@ fn prop_memory_model_upper_bounds_measured() {
 #[test]
 fn prop_random_nets_baselines_agree() {
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     check_with(Config { cases: 4, ..Default::default() }, "random net baselines", |g| {
         // Random CP(C)(P)C net with small maps.
         let mut layers = vec![LayerSpec::Conv {
@@ -104,9 +112,10 @@ fn prop_random_nets_baselines_agree() {
         };
         let input = Tensor5::random(Shape5::new(1, 1, n, n, n), g.case as u64 + 77);
 
-        let reference = run_baseline(Baseline::NaiveCudnn, &net, &weights, &input, &pool).unwrap();
+        let reference =
+            run_baseline(Baseline::NaiveCudnn, &net, &weights, &input, &mut ctx).unwrap();
         for b in [Baseline::CaffeStrided, Baseline::Elektronn, Baseline::Znn] {
-            let out = run_baseline(b, &net, &weights, &input, &pool).unwrap();
+            let out = run_baseline(b, &net, &weights, &input, &mut ctx).unwrap();
             assert_allclose(out.data(), reference.data(), 1e-3, 1e-2, b.name());
         }
     });
@@ -244,6 +253,7 @@ fn prop_simd_butterflies_match_scalar_every_tier() {
 #[test]
 fn simd_forced_tiers_end_to_end() {
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     for tier in simd::supported_tiers() {
         simd::force(Some(tier));
         let label = |what: &str| format!("{what} under {tier:?}");
@@ -252,28 +262,28 @@ fn simd_forced_tiers_end_to_end() {
         let input = Tensor5::random(Shape5::new(2, 3, 7, 6, 9), 42);
         let w = Weights::random(3, 3, [3, 2, 3], 43);
         let expect = conv_layer_reference(&input, &w, Activation::Relu);
-        let got = znni::conv::direct::conv_direct_mkl(&input, &w, Activation::Relu, &pool);
+        let got = znni::conv::direct::conv_direct_mkl(&input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-4, 1e-3, &label("direct-mkl"));
-        let got = znni::conv::direct::conv_direct_naive(&input, &w, Activation::Relu, &pool);
+        let got = znni::conv::direct::conv_direct_naive(&input, &w, Activation::Relu, &mut ctx);
         assert_allclose(got.data(), expect.data(), 1e-4, 1e-3, &label("direct-naive"));
         let got = znni::conv::fft_tp::conv_fft_tp(
             input.clone_tensor(),
             &w,
             Activation::Relu,
-            &pool,
+            &mut ctx,
         );
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, &label("fft-tp"));
         let got = znni::conv::fft_dp::conv_fft_dp(
             input.clone_tensor(),
             &w,
             Activation::Relu,
-            &pool,
+            &mut ctx,
         );
         assert_allclose(got.data(), expect.data(), 1e-3, 1e-2, &label("fft-dp"));
 
         // Pooling: max_pool against the scalar per-image oracle.
         let t = Tensor5::random(Shape5::new(1, 2, 4, 6, 8), 7);
-        let mp = znni::pool::max_pool(&t, [2, 2, 2], &pool);
+        let mp = znni::pool::max_pool(&t, [2, 2, 2], &mut ctx);
         for f in 0..2 {
             let mut want = vec![0.0f32; 2 * 3 * 4];
             znni::pool::pool_one_scalar(
@@ -306,18 +316,19 @@ fn prop_mpf_then_recombine_is_lossless_permutation() {
     // Recombination of MPF fragments of the *identity* net (no convs
     // after pooling) is max-filtering: out[u] = max over window at u.
     let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
     check_with(Config { cases: 8, ..Default::default() }, "mpf ~ max filter", |g| {
         let t = g.usize(1, 3);
         let n = 2 * t + 1;
         let input = Tensor5::random(Shape5::new(1, 1, n, n, n), g.case as u64);
-        let frags = znni::pool::mpf_forward(&input, [2, 2, 2], &pool);
+        let frags = znni::pool::mpf_forward(&input, [2, 2, 2], &mut ctx);
         let net = NetSpec {
             name: "mpf-only".into(),
             f_in: 1,
             layers: vec![LayerSpec::Pool { p: [2, 2, 2] }],
         };
         let map = znni::inference::fragment_map(&net, &[PoolingMode::Mpf]).unwrap();
-        let dense = znni::inference::recombine(&frags, 1, &map);
+        let dense = znni::inference::recombine(&frags, 1, &map, &mut ctx);
         let expect = znni::baselines::max_filter(&input, [2, 2, 2], &pool);
         assert_allclose(dense.data(), expect.data(), 0.0, 0.0, "mpf == max filter");
     });
