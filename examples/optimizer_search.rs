@@ -57,6 +57,7 @@ fn main() {
             table.row(row);
         }
         table.print();
-        println!("(memory budget: GPU {} / host {})", human_bytes(gpu.ram_bytes), human_bytes(host.ram_bytes));
+        let (g, h) = (human_bytes(gpu.ram_bytes), human_bytes(host.ram_bytes));
+        println!("(memory budget: GPU {g} / host {h})");
     }
 }

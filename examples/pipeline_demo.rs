@@ -40,8 +40,9 @@ fn main() {
     let patches = 6;
     println!("pipeline: head = first {theta} layers (CPU), tail = rest (sim-GPU); {patches} patches of {n}³");
 
-    let mk_inputs =
-        || (0..patches).map(|i| Tensor5::random(Shape5::new(1, 1, n, n, n), i as u64)).collect::<Vec<_>>();
+    let mk_inputs = || -> Vec<Tensor5> {
+        (0..patches).map(|i| Tensor5::random(Shape5::new(1, 1, n, n, n), i as u64)).collect()
+    };
 
     let pipe = Pipeline::split(stack(), theta);
     let t0 = std::time::Instant::now();

@@ -1,66 +1,116 @@
-//! Serving demo: the coordinator takes whole-volume requests, splits
-//! them into patches (overlap-save), runs the optimized plan, and
-//! reassembles — reporting serving metrics, including the steady-state
-//! memory discipline of the arena-backed execution contexts: after a
-//! warmup round the patch loop performs zero transient allocations, and
-//! the per-worker arena high-water mark stays within the plan's
-//! Table II workspace requirement.
+//! Serving demo: the async batched frontend under closed-loop load.
 //!
-//!     cargo run --release --example serve [volume_extent] [num_requests]
+//! One `optimizer::search_serving` call picks the execution plan *and*
+//! the serving configuration (shards, queue depth, batch wait) from the
+//! same Table II model. The demo then:
+//!
+//! 1. measures a **serial** coordinator (one request per serve call,
+//!    all workers) on a request stream,
+//! 2. starts the sharded batched [`znni::server::Server`] and drives it
+//!    with a closed-loop multi-client load generator (submit → wait →
+//!    repeat, retrying on backpressure) over the same stream,
+//!
+//! and reports both throughputs plus the serving metrics: queue-depth
+//! high-water mark, p50/p99 latency, batch occupancy, per-shard steals
+//! and arena gauges — and the steady-state allocation discipline
+//! (zero transient allocations after warmup).
+//!
+//!     cargo run --release --example serve [volume_extent] [clients] [rounds]
 
-use znni::coordinator::{Coordinator, InferenceRequest};
+use std::sync::Arc;
+
+use znni::approaches::run_server;
 use znni::device::Device;
-use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::optimizer::{compile, make_weights, plan_table, search_serving, CostModel, SearchSpace};
+use znni::server::{Server, ServingLoad};
 use znni::tensor::{Shape5, Tensor5};
-use znni::util::human_bytes;
 use znni::util::pool::TaskPool;
+use znni::util::{human_bytes, human_throughput};
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(32);
-    let requests: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(3);
-    let pool = TaskPool::global();
+    let clients: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let rounds: usize = std::env::args().nth(3).and_then(|a| a.parse().ok()).unwrap_or(3);
+    let pool = Arc::new(TaskPool::new());
     let net = znni::net::zoo::tiny_net(4);
-    let cm = CostModel::calibrate(pool, 8);
-    let space = SearchSpace::cpu_only(Device::host(), n.min(23));
-    let plan = search(&net, &space, &cm).expect("feasible plan");
-    let weights = make_weights(&net, 11);
-    let cp = compile(&net, &plan, &weights)?;
-    let coord = Coordinator::new(net, cp)?;
-    let planned = coord.workspace_req(pool.workers());
-    println!(
-        "serving {requests} request(s) of {n}³ with patch {}³ (cover {:?}), planned arena {} / worker",
-        coord.net.field_of_view()[0].max(plan.input.x),
-        coord.cover(),
-        human_bytes(planned.bytes),
-    );
+    let cm = CostModel::calibrate(&pool, 8);
+    let host = Device::host();
+    let load = ServingLoad { clients, volume_extent: n };
 
-    let mk_reqs = |base: u64| -> Vec<InferenceRequest> {
-        (0..requests)
-            .map(|i| InferenceRequest {
-                id: base + i as u64,
-                volume: Tensor5::random(Shape5::new(1, 1, n, n, n), base + i as u64),
-            })
-            .collect()
-    };
-
-    // Round 1: cold — the arenas warm up (transient allocations here
-    // are the one-time working-set build).
-    let (resps, warm) = coord.serve(mk_reqs(0), pool)?;
-    for r in &resps {
-        println!("  request {} -> {} ({} voxels)", r.id, r.output.shape(), r.voxels);
+    // Plan + serving config from one search call.
+    let space = SearchSpace::cpu_only(host.clone(), n.min(23));
+    let (plan, cfg) = search_serving(&net, &space, &cm, &load).expect("feasible serving plan");
+    for (k, v) in plan_table(&plan) {
+        println!("  {k:<12} {v}");
     }
-    println!("warmup : {}", warm.report());
-
-    // Round 2: steady state — every buffer comes from the warm arenas.
-    let (_, steady) = coord.serve(mk_reqs(1000), pool)?;
-    println!("steady : {}", steady.report());
     println!(
-        "steady-state: {} transient allocations after warmup; worker cache footprint {} \
-         (per-layer Table II plan {}), process arena hwm {}",
-        steady.arena_fresh_allocs,
-        human_bytes(steady.arena_hwm_bytes),
-        human_bytes(planned.bytes),
-        human_bytes(znni::memory::arena_hwm()),
+        "searched config: shards={} queue_depth={} max_batch={} batch_wait={:?} budget={}",
+        cfg.shards,
+        cfg.queue_depth,
+        cfg.max_batch_requests,
+        cfg.max_batch_wait,
+        human_bytes(cfg.memory_budget),
     );
+
+    // Closed-loop load generator: serial reference vs batched server.
+    // (run_server searches its own plan/config; report the config the
+    // measurement actually ran with, which may differ from the above.)
+    let weights = make_weights(&net, 11);
+    let r = run_server(&net, &weights, &host, &cm, pool.clone(), n.min(23), &load, rounds)?;
+    println!(
+        "measured config: shards={} queue_depth={} max_batch={} batch_wait={:?}",
+        r.config.shards,
+        r.config.queue_depth,
+        r.config.max_batch_requests,
+        r.config.max_batch_wait,
+    );
+    println!(
+        "serial  : {} requests, {} voxels in {:.3}s -> {}",
+        r.requests,
+        r.serial_voxels,
+        r.serial_wall_secs,
+        human_throughput(r.serial_throughput()),
+    );
+    println!(
+        "batched : {} requests, {} voxels in {:.3}s -> {} ({:.2}x serial)",
+        r.requests,
+        r.voxels,
+        r.wall_secs,
+        human_throughput(r.throughput()),
+        r.throughput() / r.serial_throughput().max(1e-12),
+    );
+    println!(
+        "latency : p50={:.3}ms p99={:.3}ms occupancy={:.2} rejected={} expired={} failed={}",
+        r.p50_latency.as_secs_f64() * 1e3,
+        r.p99_latency.as_secs_f64() * 1e3,
+        r.batch_occupancy,
+        r.rejected,
+        r.expired,
+        r.failed,
+    );
+
+    // Steady-state allocation discipline through the server: warm one
+    // round, then verify a second round allocates nothing.
+    let cp = compile(&net, &plan, &weights)?;
+    let server = Server::start(net.clone(), cp, cfg, pool)?;
+    let mk = |seed: u64| Tensor5::random(Shape5::new(1, net.f_in, n, n, n), seed);
+    for round in 0..2u64 {
+        let tickets: Vec<_> = (0..clients.max(1) as u64)
+            .map(|i| server.submit(mk(round * 100 + i)).expect("admitted"))
+            .collect();
+        for t in tickets {
+            t.wait().expect("served");
+        }
+        let m = server.metrics();
+        let fresh: u64 = m.per_shard.iter().map(|s| s.arena_fresh_allocs).sum();
+        let label = if round == 0 { "warmup" } else { "steady" };
+        println!("{label} : {}", m.report());
+        if round == 1 {
+            println!(
+                "steady-state: arena fresh allocs so far {fresh}, process arena hwm {}",
+                human_bytes(znni::memory::arena_hwm()),
+            );
+        }
+    }
     Ok(())
 }

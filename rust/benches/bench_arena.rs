@@ -60,7 +60,13 @@ fn main() {
     let cold_ms = cold.secs() * 1e3;
     let warm_ms = warm.secs() * 1e3;
     let mut table = Table::new(&["mode", "ms/layer", "speedup", "arena fresh", "arena reuses"]);
-    table.row(vec!["alloc-per-call".into(), format!("{cold_ms:.2}"), "1.00×".into(), "-".into(), "-".into()]);
+    table.row(vec![
+        "alloc-per-call".into(),
+        format!("{cold_ms:.2}"),
+        "1.00×".into(),
+        "-".into(),
+        "-".into(),
+    ]);
     table.row(vec![
         "warm-ctx".into(),
         format!("{warm_ms:.2}"),

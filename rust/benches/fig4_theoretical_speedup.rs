@@ -22,7 +22,8 @@ fn net(pools: usize) -> NetSpec {
 fn main() {
     for pools in [1usize, 2] {
         let n = net(pools);
-        println!("\n== Fig 4{}: {} (batch sizes 1/2/4/8) ==", if pools == 1 { 'a' } else { 'b' }, n.name);
+        let tag = if pools == 1 { 'a' } else { 'b' };
+        println!("\n== Fig 4{}: {} (batch sizes 1/2/4/8) ==", tag, n.name);
         let series = speedup_series(&n, &[1, 2, 4, 8], 61, 4);
         let mut t = Table::new(&["memory", "S=1", "S=2", "S=4", "S=8"]);
         // Align by memory decade: print each S's speedup at its points;

@@ -39,7 +39,8 @@ fn main() {
         let weights: Vec<Arc<_>> = znni::optimizer::make_weights(&net, 5);
         let modes = vec![PoolingMode::Mpf; net.pool_count()];
         let min = net.min_extent(&modes).unwrap();
-        let mut t = Table::new(&["host RAM", "dev RAM", "CPU-only", "GPU-only", "GPU+host", "CPU-GPU"]);
+        let mut t =
+            Table::new(&["host RAM", "dev RAM", "CPU-only", "GPU-only", "GPU+host", "CPU-GPU"]);
         for &(host_b, gpu_b) in budgets {
             let host = Device::host_with_ram(host_b);
             let gpu = Device::gpu_with_ram(gpu_b);

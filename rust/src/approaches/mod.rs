@@ -7,19 +7,22 @@
 //! kept separate so reports stay honest about what is measured vs
 //! modelled).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::conv::{Activation, Weights};
+use crate::coordinator::{Coordinator, InferenceRequest};
 use crate::device::Device;
 use crate::exec::ExecCtx;
 use crate::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
 use crate::memory::model::{ConvAlgo, ConvDims};
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
-use crate::optimizer::{compile, search, CostModel, PlanLayer, SearchSpace};
+use crate::optimizer::{compile, search, search_serving, CostModel, PlanLayer, SearchSpace};
 use crate::pipeline::{best_theta, Pipeline};
+use crate::server::{RejectReason, Server, ServerConfig, ServingLoad};
 use crate::tensor::{Shape5, Tensor5};
 use crate::util::pool::TaskPool;
 
@@ -262,7 +265,9 @@ pub fn run_cpu_gpu(
                     n: cur.spatial(),
                     k: *k,
                 };
-                let best_cpu = [ConvAlgo::DirectMkl, ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel]
+                let cpu_algos =
+                    [ConvAlgo::DirectMkl, ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel];
+                let best_cpu = cpu_algos
                     .iter()
                     .map(|&a| cm.conv_secs(a, &d, host))
                     .fold(f64::INFINITY, f64::min);
@@ -274,7 +279,8 @@ pub fn run_cpu_gpu(
                 gpu_secs.push(best_gpu);
             }
             LayerSpec::Pool { p } => {
-                let t = cm.pool_secs(cur.s, cur.f, cur.spatial(), *p, modes[pool_i] == PoolingMode::Mpf);
+                let mpf = modes[pool_i] == PoolingMode::Mpf;
+                let t = cm.pool_secs(cur.s, cur.f, cur.spatial(), *p, mpf);
                 pool_i += 1;
                 cpu_secs.push(t);
                 gpu_secs.push(t); // MPF stays on CPU either way (§VII.B)
@@ -333,6 +339,163 @@ pub fn run_cpu_gpu(
         compute_secs: per_patch,
         transfer_secs: gpu.transfer_secs(boundary_bytes + out_bytes),
         memory_bytes: cpu_plan.est_memory,
+    })
+}
+
+/// Outcome of the closed-loop serving harness ([`run_server`]).
+#[derive(Clone, Debug)]
+pub struct ServerRunResult {
+    /// The serving config the optimizer chose.
+    pub config: ServerConfig,
+    /// Requests completed through the batched server.
+    pub requests: u64,
+    /// Dense output voxels produced by the batched server.
+    pub voxels: u64,
+    /// Wall seconds of the batched measurement window.
+    pub wall_secs: f64,
+    pub rejected: u64,
+    pub expired: u64,
+    /// Closed-loop requests that ended in a non-backpressure rejection
+    /// or a serve error — nonzero means the throughput numbers cover
+    /// fewer requests than offered.
+    pub failed: u64,
+    pub p50_latency: Duration,
+    pub p99_latency: Duration,
+    pub batch_occupancy: f64,
+    /// Serial reference: one request per `Coordinator::serve` call.
+    pub serial_voxels: u64,
+    pub serial_wall_secs: f64,
+}
+
+impl ServerRunResult {
+    /// Batched-server throughput (voxels/s).
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.voxels as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Serial-coordinator throughput on the same request stream.
+    pub fn serial_throughput(&self) -> f64 {
+        if self.serial_wall_secs > 0.0 {
+            self.serial_voxels as f64 / self.serial_wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Serving throughput harness: search plan + [`ServerConfig`] in one
+/// call ([`search_serving`]), measure a **serial** coordinator on the
+/// request stream (one request per serve call, warm arenas), then start
+/// the sharded batched [`Server`] and drive it with `load.clients`
+/// closed-loop load-generator threads (submit → wait → repeat,
+/// retrying briefly on backpressure) over the same stream. Both sides
+/// are warmed before their measurement window.
+pub fn run_server(
+    net: &NetSpec,
+    weights: &[Arc<Weights>],
+    host: &Device,
+    cm: &CostModel,
+    pool: Arc<TaskPool>,
+    max_extent: usize,
+    load: &ServingLoad,
+    rounds: usize,
+) -> Result<ServerRunResult> {
+    let mut space = SearchSpace::cpu_only(host.clone(), max_extent);
+    space.max_candidates = 4;
+    let (plan, cfg) =
+        search_serving(net, &space, cm, load).ok_or_else(|| anyhow!("no feasible serving plan"))?;
+    let n = load.volume_extent;
+    let rounds = rounds.max(1);
+    let total = load.clients.max(1) * rounds;
+    let mk = |seed: u64| Tensor5::random(Shape5::new(1, net.f_in, n, n, n), seed);
+
+    // --- serial reference: same stream, one request per serve call,
+    // with the whole machine's workers (fair comparison) ---
+    let mut serial = Coordinator::new(net.clone(), compile(net, &plan, weights)?)?;
+    serial.workers = pool.workers();
+    serial.serve(vec![InferenceRequest { id: u64::MAX, volume: mk(9000) }], &pool)?;
+    let t0 = Instant::now();
+    let mut serial_voxels = 0u64;
+    for i in 0..total {
+        let (r, _) =
+            serial.serve(vec![InferenceRequest { id: i as u64, volume: mk(i as u64) }], &pool)?;
+        serial_voxels += r[0].voxels;
+    }
+    let serial_wall_secs = t0.elapsed().as_secs_f64();
+
+    // --- batched server on the same stream ---
+    let server = Server::start(net.clone(), compile(net, &plan, weights)?, cfg.clone(), pool)?;
+    // Warm every shard's arenas (spread by round-robin + stealing).
+    for i in 0..cfg.shards {
+        let t = server
+            .submit(mk(9100 + i as u64))
+            .map_err(|r| anyhow!("warmup rejected: {:?}", r.reason))?;
+        t.wait().map_err(|e| anyhow!("warmup failed: {e}"))?;
+    }
+    let voxels = AtomicU64::new(0);
+    let served = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..load.clients.max(1) {
+            let server = &server;
+            let voxels = &voxels;
+            let served = &served;
+            let failed = &failed;
+            let mk = &mk;
+            s.spawn(move || {
+                for r in 0..rounds {
+                    let mut vol = mk((c * rounds + r) as u64);
+                    loop {
+                        match server.submit(vol) {
+                            Ok(t) => {
+                                match t.wait() {
+                                    Ok(resp) => {
+                                        voxels.fetch_add(resp.voxels, Ordering::SeqCst);
+                                        served.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                    Err(_) => {
+                                        failed.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                }
+                                break;
+                            }
+                            Err(rej) => match rej.reason {
+                                RejectReason::QueueFull { .. } => {
+                                    // Backpressure: brief pause, retry.
+                                    vol = rej.volume;
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                                _ => {
+                                    failed.fetch_add(1, Ordering::SeqCst);
+                                    break;
+                                }
+                            },
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    Ok(ServerRunResult {
+        config: cfg,
+        requests: served.load(Ordering::SeqCst),
+        voxels: voxels.load(Ordering::SeqCst),
+        wall_secs,
+        rejected: m.rejected,
+        expired: m.expired,
+        failed: failed.load(Ordering::SeqCst),
+        p50_latency: m.p50_latency,
+        p99_latency: m.p99_latency,
+        batch_occupancy: m.batch_occupancy(),
+        serial_voxels,
+        serial_wall_secs,
     })
 }
 
@@ -410,6 +573,21 @@ mod tests {
                 layerwise.transfer_secs
             );
         }
+    }
+
+    #[test]
+    fn server_harness_runs_and_reports() {
+        let (net, weights, host, _gpu, cm, pool) = setup();
+        let pool = Arc::new(pool);
+        let load = ServingLoad { clients: 2, volume_extent: 18 };
+        let r = run_server(&net, &weights, &host, &cm, pool, 15, &load, 2).unwrap();
+        assert_eq!(r.requests, 4, "every closed-loop request must complete");
+        assert!(r.voxels > 0);
+        assert!(r.throughput() > 0.0);
+        assert!(r.serial_throughput() > 0.0);
+        assert!(r.batch_occupancy >= 1.0);
+        assert_eq!(r.expired, 0);
+        assert_eq!(r.failed, 0);
     }
 
     #[test]

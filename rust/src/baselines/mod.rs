@@ -262,7 +262,11 @@ fn run_dilated(
                 }
             }
             LayerSpec::Pool { p } => {
-                let pd = [p[0] * dil[0] - dil[0] + 1, p[1] * dil[1] - dil[1] + 1, p[2] * dil[2] - dil[2] + 1];
+                let pd = [
+                    p[0] * dil[0] - dil[0] + 1,
+                    p[1] * dil[1] - dil[1] + 1,
+                    p[2] * dil[2] - dil[2] + 1,
+                ];
                 let filtered = max_filter(&cur, pd, ctx.pool());
                 for d in 0..3 {
                     dil[d] *= p[d];

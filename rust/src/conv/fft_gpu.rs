@@ -21,7 +21,12 @@ use crate::util::sendptr::SendPtr;
 use super::{conv_out_shape, Activation, Weights};
 
 /// FFT-based convolutional layer, GPU scheme. Consumes `input`.
-pub fn conv_fft_gpu(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+pub fn conv_fft_gpu(
+    input: Tensor5,
+    w: &Weights,
+    act: Activation,
+    ctx: &mut ExecCtx<'_>,
+) -> Tensor5 {
     let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");

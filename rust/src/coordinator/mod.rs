@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::exec::{Arena, ExecCtx};
-use crate::inference::{fragment_map, recombine, FragmentMap};
+use crate::inference::{dense_output_shape, fragment_map, recombine, FragmentMap};
 use crate::net::{NetSpec, PoolingMode};
 use crate::optimizer::CompiledPlan;
 use crate::tensor::{Shape5, Tensor5, Vec3};
@@ -66,6 +66,11 @@ pub struct Metrics {
     /// zero on a warm coordinator means the steady state ran
     /// allocation-free.
     pub arena_fresh_allocs: u64,
+    /// Seconds workers spent *waiting* to acquire output-assembly band
+    /// locks (summed across workers). Assembly is banded per output
+    /// region, so this should stay near zero even at high shard/worker
+    /// counts; a large value flags contention worth re-banding.
+    pub assembly_lock_wait_secs: f64,
 }
 
 impl Metrics {
@@ -79,7 +84,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={} arena_hwm={} arena_fresh_allocs={}",
+            "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={} arena_hwm={} arena_fresh_allocs={} assembly_lock_wait={:.6}s",
             self.requests,
             self.patches,
             self.voxels,
@@ -88,7 +93,24 @@ impl Metrics {
             crate::util::human_throughput(self.throughput()),
             crate::util::human_bytes(self.arena_hwm_bytes),
             self.arena_fresh_allocs,
+            self.assembly_lock_wait_secs,
         )
+    }
+
+    /// Fold another serve call's metrics into this one. Aggregation is
+    /// over *sequential* serve calls (one shard's batches run one after
+    /// another), so wall seconds sum like the counters do and
+    /// `throughput()` on the merged value stays honest; only the arena
+    /// high-water mark takes the max.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.patches += other.patches;
+        self.voxels += other.voxels;
+        self.busy_secs += other.busy_secs;
+        self.wall_secs += other.wall_secs;
+        self.arena_hwm_bytes = self.arena_hwm_bytes.max(other.arena_hwm_bytes);
+        self.arena_fresh_allocs += other.arena_fresh_allocs;
+        self.assembly_lock_wait_secs += other.assembly_lock_wait_secs;
     }
 }
 
@@ -113,6 +135,14 @@ impl Coordinator {
     /// Build a coordinator for an all-MPF compiled plan. The patch
     /// extent is the plan's input extent.
     pub fn new(net: NetSpec, plan: CompiledPlan) -> Result<Coordinator> {
+        Self::with_shared_plan(net, Arc::new(plan))
+    }
+
+    /// Build a coordinator over an already-shared compiled plan.
+    /// [`crate::server::Server`] replicates one plan across N shards —
+    /// each shard gets its own warm arena set while the primitives,
+    /// weights and the process-wide FFT plan cache stay shared.
+    pub fn with_shared_plan(net: NetSpec, plan: Arc<CompiledPlan>) -> Result<Coordinator> {
         let modes = plan.plan.modes();
         if modes.iter().any(|m| *m != PoolingMode::Mpf) {
             bail!("coordinator requires an all-MPF plan");
@@ -122,7 +152,7 @@ impl Coordinator {
         let patch = [plan.plan.input.x, plan.plan.input.y, plan.plan.input.z];
         Ok(Coordinator {
             net,
-            plan: Arc::new(plan),
+            plan,
             fmap,
             fov,
             patch,
@@ -130,6 +160,16 @@ impl Coordinator {
             workers: 1,
             arenas: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Patch extent per dimension (the plan's input extent).
+    pub fn patch(&self) -> Vec3 {
+        self.patch
+    }
+
+    /// The compiled plan this coordinator executes.
+    pub fn plan(&self) -> &Arc<CompiledPlan> {
+        &self.plan
     }
 
     /// The compiled plan's arena requirement per worker (Table II max
@@ -188,8 +228,8 @@ impl Coordinator {
 
         // Pre-validate and allocate outputs (one per request; these are
         // the only per-request allocations of the serve loop).
-        let mut outputs = Vec::new();
-        let mut req_meta = Vec::new();
+        let mut outputs: Vec<Tensor5> = Vec::new();
+        let mut out_shapes: Vec<Shape5> = Vec::new();
         for r in &requests {
             let sh = r.volume.shape();
             if sh.s != 1 || sh.f != self.net.f_in {
@@ -200,10 +240,29 @@ impl Coordinator {
                     bail!("request {}: volume smaller than patch {:?}", r.id, self.patch);
                 }
             }
-            let odims = [sh.x - fov[0] + 1, sh.y - fov[1] + 1, sh.z - fov[2] + 1];
-            outputs.push(Mutex::new(Tensor5::zeros(Shape5::from_spatial(1, f_out, odims))));
-            req_meta.push((r.id, Instant::now()));
+            let osh = dense_output_shape(sh, fov, f_out);
+            out_shapes.push(osh);
+            outputs.push(Tensor5::zeros(osh));
         }
+
+        // Assembly bands: each dense output is split into contiguous
+        // chunks of whole (f, x) planes with one lock per chunk, so
+        // concurrent workers serialize only on the region they actually
+        // write instead of contending on one per-request mutex. A row
+        // always lies inside one plane, hence inside one chunk.
+        let chunk_lens: Vec<usize> = out_shapes
+            .iter()
+            .map(|osh| {
+                let plane = osh.y * osh.z;
+                let planes = osh.f * osh.x;
+                crate::util::ceil_div(planes, self.workers.max(1) * 8).max(1) * plane
+            })
+            .collect();
+        let bands: Vec<Vec<Mutex<&mut [f32]>>> = outputs
+            .iter_mut()
+            .zip(&chunk_lens)
+            .map(|(t, &cl)| t.data_mut().chunks_mut(cl).map(Mutex::new).collect())
+            .collect();
 
         // The job list is start coordinates only — workers crop from
         // the request volumes on demand, into arena buffers.
@@ -220,8 +279,10 @@ impl Coordinator {
         let arena_fresh = AtomicU64::new(0);
         let patches = AtomicUsize::new(0);
         let voxels = AtomicU64::new(0);
-        // busy seconds in microseconds (atomics carry no f64).
+        // busy / lock-wait seconds in micro/nanoseconds (atomics carry
+        // no f64).
         let busy_us = AtomicU64::new(0);
+        let assembly_ns = AtomicU64::new(0);
         std::thread::scope(|s| {
             // Workers: crop patch → compiled plan → recombination →
             // in-place assembly, all against a long-lived per-worker
@@ -232,17 +293,21 @@ impl Coordinator {
                 let reqs = &requests;
                 let jobs = &jobs;
                 let next = &next;
-                let outputs = &outputs;
+                let bands = &bands;
+                let chunk_lens = &chunk_lens;
+                let out_shapes = &out_shapes;
                 let patch = self.patch;
                 let arena_hwm = &arena_hwm;
                 let arena_fresh = &arena_fresh;
                 let patches = &patches;
                 let voxels = &voxels;
                 let busy_us = &busy_us;
+                let assembly_ns = &assembly_ns;
                 s.spawn(move || {
                     let arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
                     let fresh_before = arena.stats().fresh_allocs;
                     let mut ctx = ExecCtx::from_arena(pool, arena);
+                    let mut lock_ns = 0u64;
                     loop {
                         let idx = next.fetch_add(1, Ordering::SeqCst);
                         let Some(&(ri, start)) = jobs.get(idx) else { break };
@@ -269,21 +334,29 @@ impl Coordinator {
                         busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::SeqCst);
                         // Assemble in place: this patch's cover region.
                         // Overlapping regions (clamped final patches)
-                        // receive identical values; the per-request
-                        // mutex keeps concurrent workers exclusive.
+                        // receive identical values; the per-chunk band
+                        // locks keep concurrent writers exclusive while
+                        // letting patches of disjoint regions proceed
+                        // in parallel.
                         {
-                            let mut out = outputs[ri].lock().unwrap();
-                            let osh = out.shape();
+                            let osh = out_shapes[ri];
+                            let chunk_len = chunk_lens[ri];
+                            let bands_r = &bands[ri];
                             for f in 0..f_out {
                                 for x in 0..cover[0] {
+                                    let drow0 = ((f * osh.x + start[0] + x) * osh.y + start[1])
+                                        * osh.z
+                                        + start[2];
+                                    let chunk = drow0 / chunk_len;
+                                    let base = chunk * chunk_len;
+                                    let t_lock = Instant::now();
+                                    let mut band = bands_r[chunk].lock().unwrap();
+                                    lock_ns += t_lock.elapsed().as_nanos() as u64;
+                                    let buf: &mut [f32] = &mut band;
                                     for y in 0..cover[1] {
                                         let srow = ((f * cover[0] + x) * cover[1] + y) * cover[2];
-                                        let drow = ((f * osh.x + start[0] + x) * osh.y
-                                            + start[1]
-                                            + y)
-                                            * osh.z
-                                            + start[2];
-                                        out.data_mut()[drow..drow + cover[2]].copy_from_slice(
+                                        let drow = drow0 + y * osh.z;
+                                        buf[drow - base..drow - base + cover[2]].copy_from_slice(
                                             &dense.data()[srow..srow + cover[2]],
                                         );
                                     }
@@ -294,6 +367,7 @@ impl Coordinator {
                         patches.fetch_add(1, Ordering::SeqCst);
                         voxels.fetch_add((cover[0] * cover[1] * cover[2]) as u64, Ordering::SeqCst);
                     }
+                    assembly_ns.fetch_add(lock_ns, Ordering::SeqCst);
                     let st = ctx.arena.stats();
                     arena_hwm.fetch_max(st.hwm_bytes, Ordering::SeqCst);
                     arena_fresh.fetch_add(st.fresh_allocs - fresh_before, Ordering::SeqCst);
@@ -303,12 +377,12 @@ impl Coordinator {
         });
 
         let wall = t_wall.elapsed();
+        drop(bands);
         let mut responses = Vec::new();
-        for (ri, out) in outputs.into_iter().enumerate() {
-            let output = out.into_inner().unwrap();
+        for (ri, output) in outputs.into_iter().enumerate() {
             let osh = output.shape();
             responses.push(InferenceResponse {
-                id: req_meta[ri].0,
+                id: requests[ri].id,
                 output,
                 latency: wall, // batch-level latency on this testbed
                 patches: 0,
@@ -323,6 +397,7 @@ impl Coordinator {
             wall_secs: wall.as_secs_f64(),
             arena_hwm_bytes: arena_hwm.load(Ordering::SeqCst),
             arena_fresh_allocs: arena_fresh.load(Ordering::SeqCst),
+            assembly_lock_wait_secs: assembly_ns.load(Ordering::SeqCst) as f64 / 1e9,
         };
         Ok((responses, metrics))
     }
@@ -428,6 +503,30 @@ mod tests {
         let (multi, m) = c.serve(vec![InferenceRequest { id: 0, volume: vol2 }], &pool).unwrap();
         assert!(m.patches >= 2);
         assert_eq!(single[0].output.data(), multi[0].output.data());
+    }
+
+    #[test]
+    fn concurrent_banded_assembly_bit_identical() {
+        // Regression for the per-request assembly mutex split: many
+        // workers racing to assemble several requests through the
+        // banded region locks must produce outputs bit-identical to a
+        // single worker, and the lock-wait gauge must be reported.
+        let (mut c, pool) = make_coordinator(17);
+        let mk = |seed: u64| Tensor5::random(Shape5::new(1, 1, 24, 24, 24), seed);
+        let reqs = |base: u64| {
+            (0..3)
+                .map(|i| InferenceRequest { id: base + i, volume: mk(i + 40) })
+                .collect::<Vec<_>>()
+        };
+        c.workers = 1;
+        let (serial, _) = c.serve(reqs(0), &pool).unwrap();
+        c.workers = 4;
+        let (concurrent, m) = c.serve(reqs(100), &pool).unwrap();
+        assert!(m.patches >= 8, "want several patches in flight, got {}", m.patches);
+        assert!(m.assembly_lock_wait_secs >= 0.0);
+        for (a, b) in serial.iter().zip(&concurrent) {
+            assert_eq!(a.output.data(), b.output.data(), "banded assembly diverged");
+        }
     }
 
     #[test]

@@ -110,7 +110,8 @@ pub fn detect_host_ram() -> u64 {
     if let Ok(s) = std::fs::read_to_string("/proc/meminfo") {
         for line in s.lines() {
             if let Some(rest) = line.strip_prefix("MemTotal:") {
-                if let Some(kb) = rest.trim().split_whitespace().next().and_then(|v| v.parse::<u64>().ok()) {
+                let kb = rest.trim().split_whitespace().next().and_then(|v| v.parse::<u64>().ok());
+                if let Some(kb) = kb {
                     return kb * 1024;
                 }
             }

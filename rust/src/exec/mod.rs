@@ -57,6 +57,13 @@ impl WorkspaceReq {
     pub fn max(self, other: WorkspaceReq) -> WorkspaceReq {
         WorkspaceReq { bytes: self.bytes.max(other.bytes) }
     }
+
+    /// Requirement of `n` independent copies of this working set —
+    /// e.g. the warm per-worker arenas of one coordinator shard, which
+    /// do *not* share buffers and therefore sum, not max.
+    pub fn times(self, n: usize) -> WorkspaceReq {
+        WorkspaceReq { bytes: self.bytes.saturating_mul(n as u64) }
+    }
 }
 
 /// Snapshot of an arena's accounting.
@@ -642,6 +649,8 @@ mod tests {
         let b = WorkspaceReq { bytes: 20 };
         assert_eq!(a.max(b).bytes, 20);
         assert_eq!(WorkspaceReq::ZERO.max(a).bytes, 10);
+        assert_eq!(a.times(3).bytes, 30);
+        assert_eq!(WorkspaceReq { bytes: u64::MAX }.times(2).bytes, u64::MAX);
     }
 
     #[test]

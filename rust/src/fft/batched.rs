@@ -25,12 +25,22 @@ use crate::util::MagicU64;
 
 use super::dft::{FftPlan, FftScratch};
 
+/// Per-worker scratch tuple: FFT scratch, spectrum line, two real
+/// lines, two complex lines.
+type TlBufs = (FftScratch, Vec<Complex32>, Vec<f32>, Vec<f32>, Vec<Complex32>, Vec<Complex32>);
+
 thread_local! {
     /// Per-worker line buffers for the batched passes — the per-line
     /// `vec![...]` allocations dominated pass time on profile (perf
     /// pass, EXPERIMENTS.md §Perf).
-    static TL: std::cell::RefCell<(FftScratch, Vec<Complex32>, Vec<f32>, Vec<f32>, Vec<Complex32>, Vec<Complex32>)> =
-        std::cell::RefCell::new((FftScratch::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new()));
+    static TL: std::cell::RefCell<TlBufs> = std::cell::RefCell::new((
+        FftScratch::new(),
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+    ));
 }
 
 /// Plan for batched transforms of images with extent `dims`, padded to
@@ -143,7 +153,8 @@ impl BatchedFft3 {
             pool.parallel_for(lines.div_ceil(2), |pair| {
                 TL.with(|tl| {
                     let tlr = &mut *tl.borrow_mut();
-                    let (sc, _, ra, rb, la, lb) = (&mut tlr.0, (), &mut tlr.2, &mut tlr.3, &mut tlr.4, &mut tlr.5);
+                    let (sc, ra, rb, la, lb) =
+                        (&mut tlr.0, &mut tlr.2, &mut tlr.3, &mut tlr.4, &mut tlr.5);
                     ra.resize(self.padded[2], 0.0);
                     rb.resize(self.padded[2], 0.0);
                     la.resize(zc, Complex32::ZERO);
@@ -329,13 +340,15 @@ impl BatchedFft3 {
                     let sb = &src[l1 * zc..(l1 + 1) * zc];
                     self.pz.c2r_pair(sa, sb, ra, rb, sc);
                     unsafe {
-                        std::ptr::copy_nonoverlapping(ra.as_ptr().add(oz), outp.get().add(l0 * cz), cz);
-                        std::ptr::copy_nonoverlapping(rb.as_ptr().add(oz), outp.get().add(l1 * cz), cz);
+                        let (pa, pb) = (ra.as_ptr().add(oz), rb.as_ptr().add(oz));
+                        std::ptr::copy_nonoverlapping(pa, outp.get().add(l0 * cz), cz);
+                        std::ptr::copy_nonoverlapping(pb, outp.get().add(l1 * cz), cz);
                     }
                 } else {
                     self.pz.c2r(sa, ra, sc);
                     unsafe {
-                        std::ptr::copy_nonoverlapping(ra.as_ptr().add(oz), outp.get().add(l0 * cz), cz);
+                        let pa = ra.as_ptr().add(oz);
+                        std::ptr::copy_nonoverlapping(pa, outp.get().add(l0 * cz), cz);
                     }
                 }
                 });

@@ -189,7 +189,14 @@ impl FftPlan {
     /// Recursive decimation-in-time step: FFT of `src` (strided) into
     /// contiguous `dst[0..sub_n]`. `fi` indexes the factor used at this
     /// level; twiddle stride is `self.n / sub_n`.
-    fn rec(&self, src: &[Complex32], stride: usize, dst: &mut [Complex32], sub_n: usize, fi: usize) {
+    fn rec(
+        &self,
+        src: &[Complex32],
+        stride: usize,
+        dst: &mut [Complex32],
+        sub_n: usize,
+        fi: usize,
+    ) {
         if sub_n == 1 {
             dst[0] = src[0];
             return;
@@ -330,7 +337,8 @@ mod tests {
             .map(|k| {
                 let mut acc = Complex32::ZERO;
                 for (j, s) in src.iter().enumerate() {
-                    let w = Complex32::cis(sign * 2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64);
+                    let theta = sign * 2.0 * std::f64::consts::PI * (j * k % n) as f64;
+                    let w = Complex32::cis(theta / n as f64);
                     acc.mad(*s, w);
                 }
                 acc
@@ -349,7 +357,11 @@ mod tests {
 
     #[test]
     fn forward_matches_naive_many_sizes() {
-        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 10, 12, 15, 16, 20, 21, 24, 25, 27, 30, 32, 35, 36, 48, 49, 60, 64, 11, 13, 22, 26, 33] {
+        let sizes = [
+            1usize, 2, 3, 4, 5, 6, 7, 8, 9, 10, 12, 15, 16, 20, 21, 24, 25, 27, 30, 32, 35, 36,
+            48, 49, 60, 64, 11, 13, 22, 26, 33,
+        ];
+        for n in sizes {
             let plan = FftPlan::new(n);
             let src = rand_complex(n, n as u64);
             let mut dst = vec![Complex32::ZERO; n];

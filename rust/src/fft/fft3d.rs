@@ -163,7 +163,13 @@ impl Fft3 {
     }
 
     /// Unpruned forward (reference / baseline): transforms every line.
-    pub fn forward_naive(&self, img: &[f32], dims: Vec3, out: &mut [Complex32], sc: &mut Fft3Scratch) {
+    pub fn forward_naive(
+        &self,
+        img: &[f32],
+        dims: Vec3,
+        out: &mut [Complex32],
+        sc: &mut Fft3Scratch,
+    ) {
         let [nx, ny, nz] = dims;
         let [px, py, pz] = self.padded;
         let zc = self.zc;
@@ -430,7 +436,14 @@ impl Fft3 {
     }
 
     /// Gather a strided complex line, forward-transform, scatter back.
-    fn c2c_line(&self, buf: &mut [Complex32], start: usize, stride: usize, plan: &FftPlan, sc: &mut Fft3Scratch) {
+    fn c2c_line(
+        &self,
+        buf: &mut [Complex32],
+        start: usize,
+        stride: usize,
+        plan: &FftPlan,
+        sc: &mut Fft3Scratch,
+    ) {
         let n = plan.len();
         for i in 0..n {
             sc.line_a[i] = buf[start + i * stride];
@@ -444,7 +457,14 @@ impl Fft3 {
         }
     }
 
-    fn c2c_line_inv(&self, buf: &mut [Complex32], start: usize, stride: usize, plan: &FftPlan, sc: &mut Fft3Scratch) {
+    fn c2c_line_inv(
+        &self,
+        buf: &mut [Complex32],
+        start: usize,
+        stride: usize,
+        plan: &FftPlan,
+        sc: &mut Fft3Scratch,
+    ) {
         let n = plan.len();
         for i in 0..n {
             sc.line_a[i] = buf[start + i * stride];
@@ -665,10 +685,9 @@ mod tests {
         );
         let mut r = Rng::new(77);
         let n = 1000;
-        let a: Vec<Complex32> =
-            (0..n).map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0))).collect();
-        let b: Vec<Complex32> =
-            (0..n).map(|_| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0))).collect();
+        let rand_c32 = |r: &mut Rng| Complex32::new(r.f32_range(-1.0, 1.0), r.f32_range(-1.0, 1.0));
+        let a: Vec<Complex32> = (0..n).map(|_| rand_c32(&mut r)).collect();
+        let b: Vec<Complex32> = (0..n).map(|_| rand_c32(&mut r)).collect();
         let mut acc1 = vec![Complex32::new(0.1, 0.2); n];
         let mut acc2 = acc1.clone();
         Fft3::mad_spectra(&mut acc1, &a, &b);

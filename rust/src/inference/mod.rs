@@ -66,7 +66,12 @@ pub fn fragment_map(net: &NetSpec, modes: &[PoolingMode]) -> Result<FragmentMap>
 /// stride — the old voxel-by-voxel `out.set(..)` recomputed the full
 /// 5-D index per element. The dense tensor comes from the context's
 /// arena.
-pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+pub fn recombine(
+    output: &Tensor5,
+    s_orig: usize,
+    map: &FragmentMap,
+    ctx: &mut ExecCtx<'_>,
+) -> Tensor5 {
     let osh = output.shape();
     let alpha = map.offsets.len();
     assert_eq!(osh.s, s_orig * alpha, "batch {} != {}·{}", osh.s, s_orig, alpha);
@@ -108,6 +113,18 @@ pub fn recombine(output: &Tensor5, s_orig: usize, map: &FragmentMap, ctx: &mut E
         }
     }
     out
+}
+
+/// Shape of the dense sliding-window output for a whole-volume request:
+/// one value per valid FoV placement, `f_out` images, batch 1. Shared by
+/// the coordinator (output allocation), the serving frontend (admission
+/// sizing) and the Table II request model so they can never disagree.
+pub fn dense_output_shape(vshape: Shape5, fov: Vec3, f_out: usize) -> Shape5 {
+    Shape5::from_spatial(
+        vshape.s,
+        f_out,
+        [vshape.x - fov[0] + 1, vshape.y - fov[1] + 1, vshape.z - fov[2] + 1],
+    )
 }
 
 /// Dense sliding-window reference: run the net (max-pool modes, batch 1)
@@ -202,9 +219,11 @@ pub fn infer_volume(
                 for f in 0..vsh.f {
                     for x in 0..patch[0] {
                         for y in 0..patch[1] {
-                            let src_base =
-                                ((0 * vsh.f + f) * vsh.x + sx + x) * vsh.y * vsh.z + (sy + y) * vsh.z + sz;
-                            let dst_base = ((f) * patch[0] + x) * patch[1] * patch[2] + y * patch[2];
+                            let src_base = (f * vsh.x + sx + x) * vsh.y * vsh.z
+                                + (sy + y) * vsh.z
+                                + sz;
+                            let dst_base =
+                                (f * patch[0] + x) * patch[1] * patch[2] + y * patch[2];
                             pin.data_mut()[dst_base..dst_base + patch[2]]
                                 .copy_from_slice(&volume.data()[src_base..src_base + patch[2]]);
                         }

@@ -14,7 +14,9 @@ use std::sync::Arc;
 
 use crate::conv::{self, Activation, Weights};
 use crate::exec::{ExecCtx, WorkspaceReq};
-use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
+use crate::memory::model::{
+    conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims,
+};
 use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
 use crate::tensor::{Shape5, Tensor5, Vec3};
 
@@ -270,8 +272,8 @@ mod tests {
         let p = tpool();
         let mut ctx = ExecCtx::new(&p);
         let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 2);
-        let reference =
-            conv::conv_layer_reference(&input, &conv_layer(ConvAlgo::DirectNaive).weights, Activation::Relu);
+        let w = &conv_layer(ConvAlgo::DirectNaive).weights;
+        let reference = conv::conv_layer_reference(&input, w, Activation::Relu);
         for algo in ConvAlgo::ALL {
             let l = conv_layer(algo);
             assert!(l.accepts(input.shape()));

@@ -27,7 +27,12 @@
 //! * arena-backed execution contexts ([`exec`]): primitives draw output
 //!   tensors, FFT spectra and workspaces from a reusable [`exec::Arena`]
 //!   sized at plan time from the Table II model, so steady-state serving
-//!   performs zero transient allocations after a one-patch warmup.
+//!   performs zero transient allocations after a one-patch warmup;
+//! * an asynchronous batched serving frontend ([`server`]): sharded
+//!   coordinators with bounded admission queues (reject, never block),
+//!   per-request deadlines, Table II-budgeted micro-batching and
+//!   work-stealing between shards; [`optimizer::search_serving`]
+//!   derives the plan and the [`server::ServerConfig`] in one call.
 
 // Style lints this from-scratch codebase deliberately trades away for
 // explicit index arithmetic in the kernel code (CI runs clippy with
@@ -56,6 +61,7 @@ pub mod optimizer;
 pub mod pipeline;
 pub mod runtime;
 pub mod pool;
+pub mod server;
 pub mod simd;
 pub mod sublayer;
 pub mod tensor;

@@ -207,6 +207,27 @@ pub fn mpf_memory_bytes(s: usize, f: usize, n: Vec3, p: Vec3) -> u64 {
     B * (inp + out)
 }
 
+/// Serving-side Table II footprint of one whole-volume request: the
+/// dense input plus the dense sliding-window output, both f32. The
+/// serving frontend's micro-batcher admits requests against this — the
+/// same analytic model the optimizer ranks plans with — so admission
+/// and plan search never disagree about what fits. The output dims come
+/// from [`crate::inference::dense_output_shape`] — the function the
+/// coordinator allocates outputs with — so sizing and allocation share
+/// one law; a volume smaller than the FoV simply has no output term.
+pub fn request_memory_bytes(f_in: usize, f_out: usize, vdims: Vec3, fov: Vec3) -> u64 {
+    use crate::tensor::Shape5;
+    let inp = (f_in * vdims[0] * vdims[1] * vdims[2]) as u64;
+    let out = if (0..3).all(|d| vdims[d] >= fov[d]) {
+        let osh =
+            crate::inference::dense_output_shape(Shape5::from_spatial(1, f_in, vdims), fov, f_out);
+        (osh.f * osh.x * osh.y * osh.z) as u64
+    } else {
+        0
+    };
+    B * (inp + out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +283,15 @@ mod tests {
         let mm = mpf_memory_bytes(1, 2, [8, 8, 8], [2, 2, 2]);
         assert_eq!(pm, 4 * (2 * 512 + 2 * 64));
         assert_eq!(mm, 4 * (2 * 512 + 2 * 512));
+    }
+
+    #[test]
+    fn request_memory_counts_input_and_dense_output() {
+        // 1-channel 10³ input, FoV 3³ → 2-channel 8³ output.
+        let b = request_memory_bytes(1, 2, [10, 10, 10], [3, 3, 3]);
+        assert_eq!(b, 4 * (1000 + 2 * 512));
+        // A volume smaller than the FoV has no valid output placement.
+        assert_eq!(request_memory_bytes(1, 2, [2, 2, 2], [3, 3, 3]), 4 * 8);
     }
 
     #[test]

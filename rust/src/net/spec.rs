@@ -230,7 +230,9 @@ impl NetSpec {
                 })
             };
             match toks[0] {
-                "name" => name = toks.get(1).ok_or_else(|| anyhow!("line {}: name?", ln + 1))?.to_string(),
+                "name" => {
+                    name = toks.get(1).ok_or_else(|| anyhow!("line {}: name?", ln + 1))?.to_string()
+                }
                 "input" => {
                     f_in = Some(
                         toks.get(1)

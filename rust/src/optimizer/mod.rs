@@ -24,7 +24,9 @@ use crate::conv::{Activation, Weights};
 use crate::device::Device;
 use crate::exec::{ExecCtx, WorkspaceReq};
 use crate::layers::{ConvLayer, LayerPrimitive, MaxPoolLayer, MpfLayer, Placement};
-use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
+use crate::memory::model::{
+    conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims,
+};
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
 use crate::tensor::{Shape5, Tensor5};
 use crate::util::pool::TaskPool;
@@ -248,8 +250,8 @@ pub fn search(net: &NetSpec, space: &SearchSpace, cost: &CostModel) -> Option<Pl
             for &n in &extents {
                 let input = Shape5::new(s, net.f_in, n, n, n);
                 if let Some(p) = evaluate(net, input, &modes, space, cost) {
-                    if best.as_ref().map(|b| p.est_throughput() > b.est_throughput()).unwrap_or(true)
-                    {
+                    let cur_best = best.as_ref().map(|b| b.est_throughput());
+                    if cur_best.map(|b| p.est_throughput() > b).unwrap_or(true) {
                         best = Some(p);
                     }
                 }
@@ -257,6 +259,90 @@ pub fn search(net: &NetSpec, space: &SearchSpace, cost: &CostModel) -> Option<Pl
         }
     }
     best
+}
+
+/// Search the plan **and** the serving configuration in one call.
+///
+/// The serving layer obeys the same law the plan search does: amortize
+/// fixed overheads over the largest workload the memory budget admits
+/// (§III, Fig. 5) — at the request level that means picking how many
+/// coordinator shards run, how deep the admission queues are and how
+/// long the micro-batcher waits. This coarse search models, per shard
+/// count `c` (powers of two up to the cost model's threads):
+///
+/// * **memory** — every worker keeps one warm Table II arena
+///   (`plan.est_memory`), plus one in-flight request (input + dense
+///   output, [`crate::memory::model::request_memory_bytes`]) per busy
+///   shard; candidates that do not fit the device are discarded;
+/// * **time** — per-patch seconds scale with the thread share a shard
+///   gets, plus a fixed per-batch dispatch overhead that more shards
+///   amortize across concurrent clients.
+///
+/// Queue depth (Little's-law-style: two outstanding requests per
+/// client, split across shards, capped by spare RAM), the batch cap and
+/// the batch wait are then derived from the winning shard count.
+pub fn search_serving(
+    net: &NetSpec,
+    space: &SearchSpace,
+    cost: &CostModel,
+    load: &crate::server::ServingLoad,
+) -> Option<(Plan, crate::server::ServerConfig)> {
+    use std::time::Duration;
+
+    let plan = search(net, space, cost)?;
+    let fov = net.field_of_view();
+    let vd = [load.volume_extent; 3];
+    let req_bytes =
+        crate::memory::model::request_memory_bytes(net.f_in, net.f_out(), vd, fov).max(1);
+    let threads = cost.threads.max(1);
+    let per_worker_ws = plan.est_memory.max(1);
+    let clients = load.clients.max(1);
+    // Fixed per-batch dispatch cost (worker spawn + assembly) — the
+    // request-level analogue of the per-patch fixed overheads the paper
+    // amortizes with bigger images.
+    const DISPATCH_OVERHEAD_SECS: f64 = 200e-6;
+
+    let mut best: Option<(usize, f64)> = None;
+    let mut shards = 1usize;
+    while shards <= threads {
+        let shard_workers = (threads / shards).max(1);
+        let arenas = per_worker_ws.saturating_mul((shard_workers * shards) as u64);
+        let concurrency = shards.min(clients);
+        let inflight = req_bytes.saturating_mul(concurrency as u64);
+        if space.device.fits(arenas.saturating_add(inflight)) {
+            let patch_secs = plan.est_secs * threads as f64 / shard_workers as f64;
+            let tp =
+                concurrency as f64 * plan.out_voxels as f64 / (patch_secs + DISPATCH_OVERHEAD_SECS);
+            if best.map(|(_, b)| tp > b).unwrap_or(true) {
+                best = Some((shards, tp));
+            }
+        }
+        shards *= 2;
+    }
+    let (shards, _) = best?;
+    let shard_workers = (threads / shards).max(1);
+    let shard_arena = per_worker_ws.saturating_mul(shard_workers as u64);
+    let arenas = shard_arena.saturating_mul(shards as u64);
+    let spare = space.device.ram_bytes.saturating_sub(arenas);
+    let depth_by_mem = ((spare / req_bytes).max(1) as usize).min(1 << 16);
+    let queue_depth = crate::util::ceil_div(2 * clients, shards).clamp(1, depth_by_mem);
+    let max_batch_requests = depth_by_mem.min(clients).clamp(1, 8);
+    let patch_secs = plan.est_secs * threads as f64 / shard_workers as f64;
+    let max_batch_wait = Duration::from_secs_f64((patch_secs / 8.0).clamp(200e-6, 10e-3));
+    // Per-shard batch budget: an even share of device RAM, but always
+    // enough for the shard's warm arenas plus one typical request (the
+    // start-time admission gate requires strict headroom).
+    let memory_budget = (space.device.ram_bytes / shards as u64)
+        .max(shard_arena.saturating_add(req_bytes).saturating_add(1));
+    let cfg = crate::server::ServerConfig {
+        shards,
+        queue_depth,
+        max_batch_requests,
+        max_batch_wait,
+        memory_budget,
+        default_deadline: None,
+    };
+    Some((plan, cfg))
 }
 
 /// Materialised, executable plan: primitives + weights.
@@ -364,7 +450,8 @@ impl CompiledPlan {
 
 /// Format a plan as the Table IV rows (layer → primitive tag).
 pub fn plan_table(plan: &Plan) -> Vec<(String, String)> {
-    let mut rows = vec![("Input size".to_string(), format!("{}^3 (S={})", plan.input.x, plan.input.s))];
+    let input_row = format!("{}^3 (S={})", plan.input.x, plan.input.s);
+    let mut rows = vec![("Input size".to_string(), input_row)];
     for (i, l) in plan.layers.iter().enumerate() {
         rows.push((format!("Layer {}", i + 1), l.tag().to_string()));
     }
@@ -466,6 +553,42 @@ mod tests {
             req.bytes,
             plan.est_memory
         );
+    }
+
+    #[test]
+    fn search_serving_returns_plan_and_config() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(4);
+        let space = SearchSpace::cpu_only(host(4), 15);
+        let load = crate::server::ServingLoad { clients: 4, volume_extent: 20 };
+        let (plan, cfg) = search_serving(&net, &space, &cm, &load).expect("feasible");
+        assert!(plan.est_secs > 0.0);
+        assert!(cfg.shards >= 1 && cfg.shards <= 4);
+        assert!(cfg.queue_depth >= 1);
+        assert!(cfg.max_batch_requests >= 1);
+        assert!(cfg.max_batch_wait > std::time::Duration::ZERO);
+        // The budget must admit the shard's arenas plus one request —
+        // the Server::start gate relies on this.
+        let shard_workers = (cm.threads / cfg.shards).max(1);
+        assert!(cfg.memory_budget > plan.est_memory * shard_workers as u64);
+    }
+
+    #[test]
+    fn search_serving_scales_shards_with_clients() {
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(8);
+        let space = SearchSpace::cpu_only(host(8), 15);
+        let one = crate::server::ServingLoad { clients: 1, volume_extent: 20 };
+        let many = crate::server::ServingLoad { clients: 16, volume_extent: 20 };
+        let (_, c1) = search_serving(&net, &space, &cm, &one).unwrap();
+        let (_, c16) = search_serving(&net, &space, &cm, &many).unwrap();
+        assert!(
+            c16.shards >= c1.shards,
+            "more clients must not shrink the shard count ({} vs {})",
+            c16.shards,
+            c1.shards
+        );
+        assert!(c16.shards * c16.queue_depth >= c1.shards * c1.queue_depth);
     }
 
     #[test]

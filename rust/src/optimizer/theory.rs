@@ -8,7 +8,9 @@
 //! requires, this shows why batch size 1 wins for ≥2-pool networks
 //! while 1-pool networks prefer larger batches.
 
-use crate::memory::model::{conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims};
+use crate::memory::model::{
+    conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims,
+};
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
 use crate::tensor::Shape5;
 
@@ -47,7 +49,12 @@ pub fn fft_ops(net: &NetSpec, input: Shape5, modes: &[PoolingMode]) -> Option<f6
 
 /// Peak Table II memory of the net using the task-parallel FFT
 /// primitive everywhere (the Fig. 4 x-axis).
-pub fn fft_memory(net: &NetSpec, input: Shape5, modes: &[PoolingMode], threads: usize) -> Option<u64> {
+pub fn fft_memory(
+    net: &NetSpec,
+    input: Shape5,
+    modes: &[PoolingMode],
+    threads: usize,
+) -> Option<u64> {
     let shapes = net.shapes(input, modes).ok()?;
     let mut cur = input;
     let mut mem = 0u64;

@@ -171,7 +171,9 @@ mod tests {
             for x in 0..2 {
                 for y in 0..4 {
                     for z in 0..4 {
-                        let expect = t.at(0, 0, off + 2 * x, y, z).max(t.at(0, 0, off + 2 * x + 1, y, z));
+                        let lo = t.at(0, 0, off + 2 * x, y, z);
+                        let hi = t.at(0, 0, off + 2 * x + 1, y, z);
+                        let expect = lo.max(hi);
                         assert_eq!(m.at(fi, 0, x, y, z), expect);
                     }
                 }

@@ -1,0 +1,801 @@
+//! Asynchronous batched serving frontend: sharded coordinators with
+//! admission control.
+//!
+//! The paper's law — throughput is maximized by amortizing fixed
+//! overheads over the largest workload the memory budget admits (§III,
+//! Fig. 5) — applies at the *request* level too: aggregating many small
+//! inference requests into large coordinator batches is the serving
+//! analogue of processing a bigger image. This module is the L4 front
+//! that turns a stream of independent client requests into batched
+//! [`Coordinator::serve`] calls (threads + channels, zero external
+//! deps), in the spirit of PZnet's production scheduling layer
+//! (Popovych et al. 2019) and ZNN's work-stealing shards (Zlateski et
+//! al. 2015):
+//!
+//! ```text
+//!  clients ──► submit() ──► per-shard bounded queues ──► shard loop
+//!              (reject on     (round-robin admission,     (steal when
+//!               full/too       Table II byte check)        idle, micro-
+//!               large)                                     batch, serve)
+//! ```
+//!
+//! * **Admission control** — every shard queue is bounded
+//!   ([`ServerConfig::queue_depth`]); a saturated server *rejects*
+//!   ([`RejectReason::QueueFull`]) instead of blocking, returning the
+//!   volume to the caller for retry. Requests are sized at submit time
+//!   with the same Table II model the optimizer ranks plans with
+//!   ([`crate::memory::model::request_memory_bytes`]); a request that
+//!   cannot ever fit the shard budget is rejected up front.
+//! * **Micro-batching** — a shard coalesces queued requests (waiting at
+//!   most [`ServerConfig::max_batch_wait`]) into the largest batch the
+//!   memory budget admits: Σ request bytes + the shard's warm worker
+//!   arenas ([`crate::optimizer::CompiledPlan::workspace_req`] ×
+//!   workers) must stay within [`ServerConfig::memory_budget`].
+//! * **Shards + work stealing** — each shard owns a [`Coordinator`]
+//!   replica (its own warm per-worker arena set) over one shared
+//!   [`CompiledPlan`]; FFT twiddle tables live in the process-wide plan
+//!   cache. An idle shard steals from the tail of a busy sibling's
+//!   queue before sleeping.
+//! * **Deadlines** — a request may carry a deadline; the batcher drops
+//!   expired requests at dispatch time and answers
+//!   [`ServeError::DeadlineExceeded`] instead of wasting compute.
+//!
+//! Use [`crate::optimizer::search_serving`] to derive both the plan and
+//! the [`ServerConfig`] from one search call.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
+use crate::memory::model::request_memory_bytes;
+use crate::net::NetSpec;
+use crate::optimizer::CompiledPlan;
+use crate::tensor::{Tensor5, Vec3};
+use crate::util::pool::TaskPool;
+
+/// Latency samples retained for the p50/p99 estimate (ring buffer).
+const LATENCY_CAP: usize = 1 << 14;
+
+/// Serving configuration — searched coarsely by
+/// [`crate::optimizer::search_serving`] alongside the execution plan.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Number of coordinator shards (each with its own warm arena set).
+    pub shards: usize,
+    /// Bound of each shard's admission queue; a submit that finds every
+    /// queue at this depth is rejected, never blocked.
+    pub queue_depth: usize,
+    /// Maximum requests coalesced into one coordinator batch.
+    pub max_batch_requests: usize,
+    /// How long a shard waits for co-batchable requests before
+    /// dispatching a partial batch.
+    pub max_batch_wait: Duration,
+    /// Byte budget one shard's batch may occupy: Σ request (input +
+    /// dense output) bytes plus the shard's warm worker arenas.
+    pub memory_budget: u64,
+    /// Deadline applied by [`Server::submit`] when the caller gives
+    /// none. `None` ⇒ requests never expire.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            shards: 1,
+            queue_depth: 8,
+            max_batch_requests: 4,
+            max_batch_wait: Duration::from_millis(2),
+            memory_budget: u64::MAX,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Offered load the serving-config search models: how many closed-loop
+/// clients drive the server and the cubic extent of their volumes.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingLoad {
+    pub clients: usize,
+    pub volume_extent: usize,
+}
+
+/// Why a submit was turned away at the door.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Every shard queue is at `queue_depth` — backpressure; retry.
+    QueueFull { depth: usize },
+    /// The request's Table II footprint cannot fit the shard budget
+    /// even alone — it will never be admitted.
+    TooLarge { bytes: u64, budget: u64 },
+    /// Volume shape does not match the served network / patch.
+    BadShape { detail: String },
+    /// The server is shutting down.
+    ShuttingDown,
+}
+
+/// A rejected submit: the volume comes back so the caller can retry.
+pub struct Rejected {
+    pub volume: Tensor5,
+    pub reason: RejectReason,
+}
+
+impl std::fmt::Debug for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Rejected")
+            .field("volume", &self.volume.shape())
+            .field("reason", &self.reason)
+            .finish()
+    }
+}
+
+/// Why an admitted request did not produce an output.
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// The request sat in the queue past its deadline.
+    DeadlineExceeded { waited: Duration },
+    /// The underlying coordinator batch failed.
+    Failed(String),
+    /// The server dropped before answering.
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { waited } => {
+                write!(f, "deadline exceeded after {:?} in queue", waited)
+            }
+            ServeError::Failed(msg) => write!(f, "serve failed: {msg}"),
+            ServeError::Disconnected => write!(f, "server disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Handle for one admitted request; redeem with [`Ticket::wait`].
+pub struct Ticket {
+    pub id: u64,
+    rx: Receiver<Result<InferenceResponse, ServeError>>,
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket").field("id", &self.id).finish()
+    }
+}
+
+impl Ticket {
+    /// Block until the response (or error) arrives.
+    pub fn wait(self) -> Result<InferenceResponse, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Disconnected),
+        }
+    }
+}
+
+/// One queued request.
+struct Queued {
+    id: u64,
+    volume: Tensor5,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    /// Table II request footprint (input + dense output bytes).
+    bytes: u64,
+    tx: Sender<Result<InferenceResponse, ServeError>>,
+}
+
+#[derive(Default)]
+struct ShardStats {
+    batches: u64,
+    requests: u64,
+    steals: u64,
+    metrics: Metrics,
+}
+
+struct Shard {
+    queue: Mutex<VecDeque<Queued>>,
+    cvar: Condvar,
+    stats: Mutex<ShardStats>,
+}
+
+struct Inner {
+    cfg: ServerConfig,
+    pool: Arc<TaskPool>,
+    coordinators: Vec<Coordinator>,
+    shards: Vec<Shard>,
+    /// Bytes of one shard's warm worker arenas (workspace_req × workers)
+    /// — the fixed term of the batch admission inequality.
+    shard_ws_bytes: u64,
+    f_in: usize,
+    f_out: usize,
+    fov: Vec3,
+    patch: Vec3,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    expired: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batch_requests: AtomicU64,
+    queue_depth_hwm: AtomicUsize,
+    latencies: Mutex<LatencyRing>,
+}
+
+#[derive(Default)]
+struct LatencyRing {
+    samples_us: Vec<u64>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn record(&mut self, us: u64) {
+        if self.samples_us.len() < LATENCY_CAP {
+            self.samples_us.push(us);
+        } else {
+            self.samples_us[self.next % LATENCY_CAP] = us;
+        }
+        self.next = (self.next + 1) % LATENCY_CAP;
+    }
+
+    /// Percentiles from one sorted pass. Callers snapshot the samples
+    /// under the lock and sort outside it (see [`Server::metrics`]) so
+    /// the response path never waits on a 16K-element sort.
+    fn percentiles(samples: &mut [u64], qs: [f64; 2]) -> [Duration; 2] {
+        if samples.is_empty() {
+            return [Duration::ZERO; 2];
+        }
+        samples.sort_unstable();
+        qs.map(|q| {
+            let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+            Duration::from_micros(samples[idx.min(samples.len() - 1)])
+        })
+    }
+}
+
+/// Per-shard observability snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ShardSnapshot {
+    pub batches: u64,
+    pub requests: u64,
+    pub steals: u64,
+    pub queue_len: usize,
+    pub patches: usize,
+    pub voxels: u64,
+    pub busy_secs: f64,
+    pub arena_hwm_bytes: u64,
+    pub arena_fresh_allocs: u64,
+    pub assembly_lock_wait_secs: f64,
+}
+
+/// Aggregate server metrics: admission counters, latency percentiles,
+/// batch occupancy and per-shard arena gauges.
+#[derive(Clone, Debug, Default)]
+pub struct ServerMetrics {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub batch_requests: u64,
+    /// Deepest any shard queue has been since start.
+    pub queue_depth_hwm: usize,
+    /// Current total queued requests across shards.
+    pub queued_now: usize,
+    pub p50_latency: Duration,
+    pub p99_latency: Duration,
+    pub voxels: u64,
+    pub per_shard: Vec<ShardSnapshot>,
+}
+
+impl ServerMetrics {
+    /// Mean requests per dispatched batch — the request-level analogue
+    /// of the paper's "bigger image" amortization.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let fresh: u64 = self.per_shard.iter().map(|s| s.arena_fresh_allocs).sum();
+        let hwm = self.per_shard.iter().map(|s| s.arena_hwm_bytes).max().unwrap_or(0);
+        let steals: u64 = self.per_shard.iter().map(|s| s.steals).sum();
+        format!(
+            "submitted={} completed={} rejected={} expired={} batches={} occupancy={:.2} \
+             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.expired,
+            self.batches,
+            self.batch_occupancy(),
+            self.queue_depth_hwm,
+            self.queued_now,
+            self.p50_latency.as_secs_f64() * 1e3,
+            self.p99_latency.as_secs_f64() * 1e3,
+            steals,
+            crate::util::human_bytes(hwm),
+            fresh,
+        )
+    }
+}
+
+/// The serving frontend. Construct with [`Server::start`]; dropping it
+/// drains the queues gracefully (every queued request is served) and
+/// joins the shard threads.
+pub struct Server {
+    inner: Arc<Inner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start `cfg.shards` shard threads over replicas of one compiled
+    /// plan. Fails at start (plan time) if the memory budget cannot
+    /// hold even one shard's warm arenas — never mid-serve.
+    pub fn start(
+        net: NetSpec,
+        plan: CompiledPlan,
+        cfg: ServerConfig,
+        pool: Arc<TaskPool>,
+    ) -> Result<Server> {
+        if cfg.shards == 0 || cfg.queue_depth == 0 || cfg.max_batch_requests == 0 {
+            bail!("server config must have at least one shard, queue slot and batch slot");
+        }
+        let plan = Arc::new(plan);
+        let shard_workers = (pool.workers() / cfg.shards).max(1);
+        let shard_ws_bytes = plan.workspace_req(shard_workers).times(shard_workers).bytes;
+        if shard_ws_bytes >= cfg.memory_budget {
+            bail!(
+                "server memory budget {} cannot hold one shard's warm arenas {} — \
+                 no request is admissible",
+                cfg.memory_budget,
+                shard_ws_bytes
+            );
+        }
+        let fov = net.field_of_view();
+        let f_out = net.f_out();
+        let mut coordinators = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let mut c = Coordinator::with_shared_plan(net.clone(), plan.clone())?;
+            c.workers = shard_workers;
+            coordinators.push(c);
+        }
+        let patch = coordinators[0].patch();
+        let shards = (0..cfg.shards)
+            .map(|_| Shard {
+                queue: Mutex::new(VecDeque::new()),
+                cvar: Condvar::new(),
+                stats: Mutex::new(ShardStats::default()),
+            })
+            .collect();
+        let inner = Arc::new(Inner {
+            cfg,
+            pool,
+            coordinators,
+            shards,
+            shard_ws_bytes,
+            f_in: net.f_in,
+            f_out,
+            fov,
+            patch,
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_requests: AtomicU64::new(0),
+            queue_depth_hwm: AtomicUsize::new(0),
+            latencies: Mutex::new(LatencyRing::default()),
+        });
+        let handles = (0..inner.cfg.shards)
+            .map(|si| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("znni-shard{si}"))
+                    .spawn(move || inner.shard_loop(si))
+                    .expect("spawn shard thread")
+            })
+            .collect();
+        Ok(Server { inner, handles })
+    }
+
+    /// The serving configuration.
+    pub fn config(&self) -> &ServerConfig {
+        &self.inner.cfg
+    }
+
+    /// Patch extent the shards execute (the plan's input extent).
+    pub fn patch(&self) -> Vec3 {
+        self.inner.patch
+    }
+
+    /// Submit with the config's default deadline. Never blocks: a full
+    /// server answers [`RejectReason::QueueFull`] immediately.
+    pub fn submit(&self, volume: Tensor5) -> Result<Ticket, Rejected> {
+        self.submit_with_deadline(volume, self.inner.cfg.default_deadline)
+    }
+
+    /// Submit with an explicit deadline (measured from now).
+    pub fn submit_with_deadline(
+        &self,
+        volume: Tensor5,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, Rejected> {
+        let inner = &*self.inner;
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return Err(Rejected { volume, reason: RejectReason::ShuttingDown });
+        }
+        let sh = volume.shape();
+        if sh.s != 1 || sh.f != inner.f_in {
+            let detail = format!("expected shape (1, {}, ...), got {}", inner.f_in, sh);
+            return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
+        }
+        for d in 0..3 {
+            if inner.patch[d] > [sh.x, sh.y, sh.z][d] {
+                let detail = format!("volume {} smaller than patch {:?}", sh, inner.patch);
+                return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
+            }
+        }
+        let bytes = request_memory_bytes(inner.f_in, inner.f_out, [sh.x, sh.y, sh.z], inner.fov);
+        if bytes.saturating_add(inner.shard_ws_bytes) > inner.cfg.memory_budget {
+            return Err(Rejected {
+                volume,
+                reason: RejectReason::TooLarge { bytes, budget: inner.cfg.memory_budget },
+            });
+        }
+        let id = inner.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let mut item = Some(Queued {
+            id,
+            volume,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            bytes,
+            tx,
+        });
+        // Round-robin admission with fallback scan: the request lands
+        // on the first shard with a free slot; all full ⇒ reject.
+        let start = inner.rr.fetch_add(1, Ordering::SeqCst);
+        for k in 0..inner.shards.len() {
+            let si = (start + k) % inner.shards.len();
+            let shard = &inner.shards[si];
+            let mut q = shard.queue.lock().unwrap();
+            if q.len() < inner.cfg.queue_depth {
+                q.push_back(item.take().unwrap());
+                let depth = q.len();
+                drop(q);
+                inner.queue_depth_hwm.fetch_max(depth, Ordering::SeqCst);
+                inner.submitted.fetch_add(1, Ordering::SeqCst);
+                shard.cvar.notify_one();
+                return Ok(Ticket { id, rx });
+            }
+        }
+        inner.rejected.fetch_add(1, Ordering::SeqCst);
+        let volume = item.take().unwrap().volume;
+        Err(Rejected { volume, reason: RejectReason::QueueFull { depth: inner.cfg.queue_depth } })
+    }
+
+    /// Snapshot the serving metrics.
+    pub fn metrics(&self) -> ServerMetrics {
+        let inner = &*self.inner;
+        let per_shard: Vec<ShardSnapshot> = inner
+            .shards
+            .iter()
+            .map(|sh| {
+                let st = sh.stats.lock().unwrap();
+                ShardSnapshot {
+                    batches: st.batches,
+                    requests: st.requests,
+                    steals: st.steals,
+                    queue_len: sh.queue.lock().unwrap().len(),
+                    patches: st.metrics.patches,
+                    voxels: st.metrics.voxels,
+                    busy_secs: st.metrics.busy_secs,
+                    arena_hwm_bytes: st.metrics.arena_hwm_bytes,
+                    arena_fresh_allocs: st.metrics.arena_fresh_allocs,
+                    assembly_lock_wait_secs: st.metrics.assembly_lock_wait_secs,
+                }
+            })
+            .collect();
+        let mut samples = inner.latencies.lock().unwrap().samples_us.clone();
+        let [p50, p99] = LatencyRing::percentiles(&mut samples, [0.50, 0.99]);
+        ServerMetrics {
+            submitted: inner.submitted.load(Ordering::SeqCst),
+            rejected: inner.rejected.load(Ordering::SeqCst),
+            expired: inner.expired.load(Ordering::SeqCst),
+            completed: inner.completed.load(Ordering::SeqCst),
+            batches: inner.batches.load(Ordering::SeqCst),
+            batch_requests: inner.batch_requests.load(Ordering::SeqCst),
+            queue_depth_hwm: inner.queue_depth_hwm.load(Ordering::SeqCst),
+            queued_now: per_shard.iter().map(|s| s.queue_len).sum(),
+            p50_latency: p50,
+            p99_latency: p99,
+            voxels: per_shard.iter().map(|s| s.voxels).sum(),
+            per_shard,
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for sh in &self.inner.shards {
+            sh.cvar.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Inner {
+    /// Pop from the shard's own queue head.
+    fn try_pop_local(&self, si: usize) -> Option<Queued> {
+        self.shards[si].queue.lock().unwrap().pop_front()
+    }
+
+    /// Steal one request from the tail of a sibling's queue.
+    fn try_steal(&self, si: usize) -> Option<Queued> {
+        let n = self.shards.len();
+        for k in 1..n {
+            let vi = (si + k) % n;
+            let stolen = self.shards[vi].queue.lock().unwrap().pop_back();
+            if let Some(q) = stolen {
+                self.shards[si].stats.lock().unwrap().steals += 1;
+                return Some(q);
+            }
+        }
+        None
+    }
+
+    /// Block until a request is available (own queue, then steal).
+    /// Returns `None` on shutdown once every queue this shard can reach
+    /// is drained.
+    fn next_request(&self, si: usize) -> Option<Queued> {
+        loop {
+            if let Some(q) = self.try_pop_local(si) {
+                return Some(q);
+            }
+            if let Some(q) = self.try_steal(si) {
+                return Some(q);
+            }
+            let shard = &self.shards[si];
+            let guard = shard.queue.lock().unwrap();
+            if !guard.is_empty() {
+                continue;
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            // Bounded sleep so steals and shutdown are re-polled.
+            let (g, _) = shard.cvar.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            drop(g);
+        }
+    }
+
+    fn shard_loop(&self, si: usize) {
+        loop {
+            let Some(first) = self.next_request(si) else { return };
+            let mut batch_bytes = first.bytes;
+            let mut batch = vec![first];
+            let wait_until = Instant::now() + self.cfg.max_batch_wait;
+            // Coalesce from the local queue while the Table II budget,
+            // the batch cap and the wait window allow.
+            while batch.len() < self.cfg.max_batch_requests {
+                match self.try_pop_local(si) {
+                    Some(q) => {
+                        if batch_bytes
+                            .saturating_add(q.bytes)
+                            .saturating_add(self.shard_ws_bytes)
+                            > self.cfg.memory_budget
+                        {
+                            // Does not fit this batch — back to the head.
+                            self.shards[si].queue.lock().unwrap().push_front(q);
+                            break;
+                        }
+                        batch_bytes += q.bytes;
+                        batch.push(q);
+                    }
+                    None => {
+                        let now = Instant::now();
+                        if now >= wait_until || self.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let shard = &self.shards[si];
+                        let guard = shard.queue.lock().unwrap();
+                        if guard.is_empty() {
+                            let (g, _) = shard.cvar.wait_timeout(guard, wait_until - now).unwrap();
+                            drop(g);
+                        }
+                    }
+                }
+            }
+            self.run_batch(si, batch);
+        }
+    }
+
+    fn run_batch(&self, si: usize, batch: Vec<Queued>) {
+        // Expire requests whose deadline passed while queued.
+        let now = Instant::now();
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut metas = Vec::with_capacity(batch.len());
+        for q in batch {
+            if let Some(d) = q.deadline {
+                if now > d {
+                    self.expired.fetch_add(1, Ordering::SeqCst);
+                    let waited = q.enqueued.elapsed();
+                    let _ = q.tx.send(Err(ServeError::DeadlineExceeded { waited }));
+                    continue;
+                }
+            }
+            reqs.push(InferenceRequest { id: q.id, volume: q.volume });
+            metas.push((q.tx, q.enqueued));
+        }
+        if reqs.is_empty() {
+            return;
+        }
+        let n = reqs.len();
+        match self.coordinators[si].serve(reqs, &self.pool) {
+            Ok((resps, m)) => {
+                self.batches.fetch_add(1, Ordering::SeqCst);
+                self.batch_requests.fetch_add(n as u64, Ordering::SeqCst);
+                {
+                    let mut st = self.shards[si].stats.lock().unwrap();
+                    st.batches += 1;
+                    st.requests += n as u64;
+                    st.metrics.merge(&m);
+                }
+                for (mut resp, (tx, enqueued)) in resps.into_iter().zip(metas) {
+                    let lat = enqueued.elapsed();
+                    resp.latency = lat;
+                    self.latencies.lock().unwrap().record(lat.as_micros() as u64);
+                    self.completed.fetch_add(1, Ordering::SeqCst);
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                // Submit-time validation makes per-request failures
+                // unreachable; a batch error here is systemic and is
+                // reported to every member.
+                let msg = e.to_string();
+                for (tx, _) in metas {
+                    let _ = tx.send(Err(ServeError::Failed(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+    use crate::tensor::Shape5;
+    use crate::util::pool::ChipTopology;
+
+    fn setup() -> (NetSpec, CompiledPlan, Arc<TaskPool>) {
+        let net = crate::net::zoo::tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+        space.max_candidates = 2;
+        let plan = search(&net, &space, &cm).unwrap();
+        let weights = make_weights(&net, 3);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 }));
+        (net, cp, pool)
+    }
+
+    #[test]
+    fn serves_one_request_end_to_end() {
+        let (net, cp, pool) = setup();
+        let fov = net.field_of_view();
+        let server = Server::start(net, cp, ServerConfig::default(), pool).unwrap();
+        let vol = Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5);
+        let resp = server.submit(vol).unwrap().wait().unwrap();
+        let osh = resp.output.shape();
+        assert_eq!((osh.x, osh.y, osh.z), (18 - fov[0] + 1, 18 - fov[1] + 1, 18 - fov[2] + 1));
+        assert!(resp.latency > Duration::ZERO);
+        let m = server.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.rejected, 0);
+        assert!(m.batch_occupancy() >= 1.0);
+    }
+
+    #[test]
+    fn bad_shape_rejected_at_submit() {
+        let (net, cp, pool) = setup();
+        let server = Server::start(net, cp, ServerConfig::default(), pool).unwrap();
+        // Wrong feature count.
+        let bad = Tensor5::random(Shape5::new(1, 3, 18, 18, 18), 5);
+        let r = server.submit(bad).unwrap_err();
+        assert!(matches!(r.reason, RejectReason::BadShape { .. }));
+        assert_eq!(r.volume.shape().f, 3, "volume must come back intact");
+        // Smaller than the patch.
+        let tiny = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 5);
+        let r = server.submit(tiny).unwrap_err();
+        assert!(matches!(r.reason, RejectReason::BadShape { .. }));
+    }
+
+    #[test]
+    fn oversized_request_rejected_up_front() {
+        let (net, cp, pool) = setup();
+        let ws = cp.workspace_req(pool.workers()).times(pool.workers()).bytes;
+        let cfg = ServerConfig { memory_budget: ws + 1024, ..ServerConfig::default() };
+        let server = Server::start(net, cp, cfg, pool).unwrap();
+        // 18³ input + dense output is far beyond 1 KiB of batch room.
+        let vol = Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5);
+        let r = server.submit(vol).unwrap_err();
+        assert!(matches!(r.reason, RejectReason::TooLarge { .. }));
+    }
+
+    #[test]
+    fn undersized_budget_fails_at_start() {
+        let (net, cp, pool) = setup();
+        let cfg = ServerConfig { memory_budget: 16, ..ServerConfig::default() };
+        assert!(Server::start(net, cp, cfg, pool).is_err());
+    }
+
+    #[test]
+    fn deadline_already_expired_is_reported() {
+        let (net, cp, pool) = setup();
+        let server = Server::start(net, cp, ServerConfig::default(), pool).unwrap();
+        let vol = Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5);
+        let t = server.submit_with_deadline(vol, Some(Duration::ZERO)).unwrap();
+        match t.wait() {
+            Err(ServeError::DeadlineExceeded { .. }) => {}
+            Err(other) => panic!("expected deadline error, got {other}"),
+            Ok(_) => panic!("expected deadline error, got a response"),
+        }
+        assert_eq!(server.metrics().expired, 1);
+    }
+
+    #[test]
+    fn sharded_server_answers_many_clients() {
+        let (net, cp, pool) = setup();
+        let cfg = ServerConfig { shards: 2, queue_depth: 16, ..ServerConfig::default() };
+        let server = Server::start(net, cp, cfg, pool).unwrap();
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|i| server.submit(Tensor5::random(Shape5::new(1, 1, 18, 18, 18), i)).unwrap())
+            .collect();
+        for t in tickets {
+            let resp = t.wait().unwrap();
+            assert!(resp.output.data().iter().any(|&v| v != 0.0));
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed, 6);
+        assert!(m.batches >= 1);
+        assert_eq!(m.per_shard.len(), 2);
+        assert!(m.p99_latency >= m.p50_latency);
+    }
+
+    #[test]
+    fn latency_ring_percentiles() {
+        let mut r = LatencyRing::default();
+        for us in [1000u64, 30, 10, 40, 20] {
+            r.record(us);
+        }
+        let mut s = r.samples_us.clone();
+        let [p50, p99] = LatencyRing::percentiles(&mut s, [0.50, 0.99]);
+        assert_eq!(p50, Duration::from_micros(30));
+        assert_eq!(p99, Duration::from_micros(1000));
+        let [z50, _] = LatencyRing::percentiles(&mut [], [0.50, 0.99]);
+        assert_eq!(z50, Duration::ZERO);
+    }
+}

@@ -278,7 +278,12 @@ pub fn mad_spectra_with(tier: Tier, acc: &mut [Complex32], a: &[Complex32], b: &
 /// Crate-internal dispatch: `tier` must be supported (hot loops hoist
 /// `active()` once and call this per row).
 #[inline]
-pub(crate) fn mad_spectra_tier(tier: Tier, acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
+pub(crate) fn mad_spectra_tier(
+    tier: Tier,
+    acc: &mut [Complex32],
+    a: &[Complex32],
+    b: &[Complex32],
+) {
     debug_assert!(supported(tier));
     assert_eq!(acc.len(), a.len());
     assert_eq!(acc.len(), b.len());

@@ -155,7 +155,13 @@ pub fn decompose(d: &ConvDims, gpu: &Device, cost: &CostModel) -> Option<SubLaye
             transfer += piece_transfer_bytes(d, p);
             gpu_mem = gpu_mem.max(conv_memory_bytes(algo, &sub, 1));
         }
-        let plan = SubLayerPlan { algo, pieces, est_compute_secs: compute, transfer_bytes: transfer, gpu_mem };
+        let plan = SubLayerPlan {
+            algo,
+            pieces,
+            est_compute_secs: compute,
+            transfer_bytes: transfer,
+            gpu_mem,
+        };
         if best
             .as_ref()
             .map(|b| plan.est_secs(gpu) < b.est_secs(gpu))
