@@ -1,0 +1,94 @@
+//! Measured autotuning demo: calibrate every primitive on this
+//! machine, persist the profile, and show what the measurement changes.
+//!
+//! Runs `CostModel::calibrate_full_report` — each conv/pool primitive
+//! micro-benchmarked through a warm `ExecCtx` at a ladder of extents,
+//! plus the real per-batch dispatch overhead — prints the evidence,
+//! saves `znni-profile.json`, round-trips it, and compares the serving
+//! config searched with measured numbers against the static defaults.
+//!
+//!     cargo run --release --example calibrate [profile_path]
+
+use znni::device::Device;
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::tiny_net;
+use znni::optimizer::{search_serving, CostModel, SearchSpace};
+use znni::server::ServingLoad;
+use znni::util::bench::{Scale, Table};
+use znni::util::human_throughput;
+use znni::util::pool::TaskPool;
+
+fn main() -> anyhow::Result<()> {
+    let path =
+        std::env::args().nth(1).unwrap_or_else(|| "znni-profile.json".to_string());
+    let pool = TaskPool::global();
+    let ladder: &[usize] = match Scale::from_env() {
+        Scale::Tiny => &[6, 8],
+        Scale::Small => &[8, 12, 16],
+        Scale::Paper => &[16, 24, 32, 48],
+    };
+    println!(
+        "calibrating {} primitives on {} workers, ladder {:?}...",
+        ConvAlgo::ALL.len(),
+        pool.workers(),
+        ladder
+    );
+    let (cm, report) = CostModel::calibrate_full_report(pool, ladder);
+
+    let mut t = Table::new(&["primitive", "extent", "work", "secs", "rate"]);
+    for (algo, samples) in &report.conv {
+        for s in samples {
+            t.row(vec![
+                algo.name().to_string(),
+                format!("{}^3", s.extent),
+                format!("{:.3e}", s.work),
+                format!("{:.6}", s.secs),
+                format!("{:.3e}/s", s.rate()),
+            ]);
+        }
+    }
+    for s in &report.pool {
+        t.row(vec![
+            "MPF (voxels)".to_string(),
+            format!("{}^3", s.extent),
+            format!("{:.3e}", s.work),
+            format!("{:.6}", s.secs),
+            format!("{:.3e}/s", s.rate()),
+        ]);
+    }
+    t.print();
+    println!(
+        "dispatch overhead: {:.1} us/batch (replaces the {:.0} us default)",
+        report.dispatch_overhead_secs * 1e6,
+        znni::optimizer::cost::DEFAULT_DISPATCH_OVERHEAD_SECS * 1e6,
+    );
+
+    // Persist + round-trip.
+    cm.save_profile(&path)?;
+    let loaded = CostModel::load_profile(&path)?;
+    assert_eq!(loaded.dispatch_overhead_secs, cm.dispatch_overhead_secs);
+    println!("profile saved to {path} (round-trip verified)");
+
+    // What the measurement changes: serving config under measured vs
+    // default cost models.
+    let net = tiny_net(4);
+    let host = Device::host();
+    let load = ServingLoad { clients: 8, volume_extent: 32 };
+    let space = SearchSpace::cpu_only(host, 23);
+    let defaults = CostModel::default_rates(pool.workers());
+    for (label, model) in [("default", &defaults), ("measured", &loaded)] {
+        if let Some((plan, cfg)) = search_serving(&net, &space, model, &load) {
+            println!(
+                "{label:>8}: input {}^3, est {} -> shards={} queue_depth={} \
+                 max_batch={} batch_wait={:?}",
+                plan.input.x,
+                human_throughput(plan.est_throughput()),
+                cfg.shards,
+                cfg.queue_depth,
+                cfg.max_batch_requests,
+                cfg.max_batch_wait,
+            );
+        }
+    }
+    Ok(())
+}

@@ -33,7 +33,33 @@ fn main() -> anyhow::Result<()> {
     let rounds: usize = std::env::args().nth(3).and_then(|a| a.parse().ok()).unwrap_or(3);
     let pool = Arc::new(TaskPool::new());
     let net = znni::net::zoo::tiny_net(4);
-    let cm = CostModel::calibrate(&pool, 8);
+    // Reuse a saved calibration profile when one exists (see
+    // `examples/calibrate.rs`); otherwise measure a quick ladder now.
+    // Either way the serving-config search below runs on measured
+    // rates and this machine's real batch-dispatch overhead. A profile
+    // taken with a different worker count would mis-size the shard
+    // search, so a mismatched (or unreadable) one triggers a fresh
+    // calibration instead of being trusted silently.
+    let cm = match CostModel::load_profile("znni-profile.json") {
+        Ok(cm) if cm.threads == pool.workers() => {
+            println!("calibration: loaded znni-profile.json");
+            cm
+        }
+        Ok(cm) => {
+            println!(
+                "calibration: znni-profile.json was taken with {} threads, pool has {} — \
+                 recalibrating",
+                cm.threads,
+                pool.workers()
+            );
+            CostModel::calibrate_full(&pool, &[8, 12])
+        }
+        Err(e) => {
+            println!("calibration: no usable profile ({e}) — measuring a quick ladder");
+            CostModel::calibrate_full(&pool, &[8, 12])
+        }
+    };
+    println!("calibration: dispatch overhead {:.1} us/batch", cm.dispatch_overhead_secs * 1e6);
     let host = Device::host();
     let load = ServingLoad { clients, volume_extent: n };
 

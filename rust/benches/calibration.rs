@@ -1,0 +1,114 @@
+//! Measured-autotuner bench: run the full calibration ladder and
+//! record what the measurement changes (ISSUE 4).
+//!
+//! Runs `CostModel::calibrate_full_report`, prints the fitted rate per
+//! algorithm family plus the measured per-batch dispatch overhead, and
+//! compares `optimizer::search_serving`'s chosen serving config under
+//! the measured model vs the static defaults.
+//!
+//! Results go to stdout and `BENCH_calibration.json` (default
+//! `../BENCH_calibration.json`, i.e. the repository root when run via
+//! `cargo bench --bench calibration`; override with `ZNNI_BENCH_OUT`).
+
+use znni::device::Device;
+use znni::net::zoo::tiny_net;
+use znni::optimizer::cost::DEFAULT_DISPATCH_OVERHEAD_SECS;
+use znni::optimizer::{search_serving, CostModel, SearchSpace};
+use znni::server::ServingLoad;
+use znni::util::bench::{Scale, Table};
+use znni::util::json::Json;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    let scale = Scale::from_env();
+    let ladder: Vec<usize> = match scale {
+        Scale::Paper => vec![16, 24, 32, 48],
+        Scale::Small => vec![8, 12, 16],
+        Scale::Tiny => vec![6, 8],
+    };
+    println!("== Calibration ladder {ladder:?} on {} workers ==", pool.workers());
+    let (cm, report) = CostModel::calibrate_full_report(pool, &ladder);
+
+    let host = Device::host_with_ram(8 << 30);
+    let mut table = Table::new(&["algorithm", "fitted rate", "probes"]);
+    let mut rates_json: Vec<(String, Json)> = Vec::new();
+    for (algo, samples) in &report.conv {
+        let fitted = cm.rate(*algo, &host);
+        table.row(vec![
+            algo.name().to_string(),
+            format!("{fitted:.3e} FLOP/s"),
+            samples
+                .iter()
+                .map(|s| format!("{}^3:{:.2e}/s", s.extent, s.rate()))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+        rates_json.push((algo.tag().to_string(), Json::Num(fitted)));
+    }
+    table.row(vec![
+        "MPF pooling".to_string(),
+        format!("{:.3e} vox/s", cm.pool_rate),
+        report
+            .pool
+            .iter()
+            .map(|s| format!("{}^3:{:.2e}/s", s.extent, s.rate()))
+            .collect::<Vec<_>>()
+            .join(" "),
+    ]);
+    table.print();
+    println!(
+        "dispatch overhead: {:.1} us/batch measured (default assumption {:.0} us)",
+        report.dispatch_overhead_secs * 1e6,
+        DEFAULT_DISPATCH_OVERHEAD_SECS * 1e6,
+    );
+
+    // Serving-config deltas: measured model vs static defaults.
+    let net = tiny_net(4);
+    let load = ServingLoad { clients: 8, volume_extent: 32 };
+    let space = SearchSpace::cpu_only(host.clone(), 23);
+    let defaults = CostModel::default_rates(pool.workers());
+    let d_cfg = search_serving(&net, &space, &defaults, &load).map(|(_, c)| c);
+    let m_cfg = search_serving(&net, &space, &cm, &load).map(|(_, c)| c);
+    for (label, cfg) in [("default", &d_cfg), ("measured", &m_cfg)] {
+        match cfg {
+            Some(c) => println!(
+                "{label:>8}: shards={} queue_depth={} max_batch={} batch_wait={:?}",
+                c.shards, c.queue_depth, c.max_batch_requests, c.max_batch_wait
+            ),
+            None => println!("{label:>8}: no feasible config"),
+        }
+    }
+
+    let doc = Json::Object(vec![
+        ("scale".into(), Json::Str(format!("{scale:?}"))),
+        ("workers".into(), Json::Num(pool.workers() as f64)),
+        (
+            "ladder".into(),
+            Json::Array(ladder.iter().map(|&e| Json::Num(e as f64)).collect()),
+        ),
+        ("rates_flops_per_sec".into(), Json::Object(rates_json)),
+        ("pool_rate_voxels_per_sec".into(), Json::Num(cm.pool_rate)),
+        ("dispatch_overhead_secs".into(), Json::Num(report.dispatch_overhead_secs)),
+        (
+            "default_dispatch_overhead_secs".into(),
+            Json::Num(DEFAULT_DISPATCH_OVERHEAD_SECS),
+        ),
+        // 0 = no feasible config (never `null`: the CI artifact check
+        // greps the emitted JSONs for unpopulated fields).
+        (
+            "serving_shards_default".into(),
+            Json::Num(d_cfg.as_ref().map(|c| c.shards as f64).unwrap_or(0.0)),
+        ),
+        (
+            "serving_shards_measured".into(),
+            Json::Num(m_cfg.as_ref().map(|c| c.shards as f64).unwrap_or(0.0)),
+        ),
+    ]);
+    let path =
+        std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_calibration.json".into());
+    match std::fs::write(&path, doc.to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

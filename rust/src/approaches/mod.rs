@@ -29,16 +29,22 @@ use crate::util::pool::TaskPool;
 /// Which §VI–VII execution mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Approach {
+    /// §VI CPU-only: CPU primitives within host RAM.
     CpuOnly,
+    /// §VI GPU-only: GPU primitives within device RAM.
     GpuOnly,
+    /// §VII.A-B GPU + host RAM via sub-layer decomposition.
     GpuHostRam,
+    /// §VII.C CPU-GPU pipeline.
     CpuGpu,
 }
 
 impl Approach {
+    /// All four approaches, in Table V order.
     pub const ALL: [Approach; 4] =
         [Approach::CpuOnly, Approach::GpuOnly, Approach::GpuHostRam, Approach::CpuGpu];
 
+    /// Display name (Table V row).
     pub fn name(&self) -> &'static str {
         match self {
             Approach::CpuOnly => "CPU-Only",
@@ -52,7 +58,9 @@ impl Approach {
 /// Outcome of running one approach on one net.
 #[derive(Clone, Debug)]
 pub struct ApproachResult {
+    /// Which approach produced this result.
     pub approach: Approach,
+    /// Chosen cubic input extent.
     pub input_extent: usize,
     /// Output voxels produced per patch (α·S·x'·y'·z').
     pub out_voxels: u64,
@@ -65,6 +73,7 @@ pub struct ApproachResult {
 }
 
 impl ApproachResult {
+    /// Measured throughput: output voxels per (compute + transfer) second.
     pub fn throughput(&self) -> f64 {
         self.out_voxels as f64 / (self.compute_secs + self.transfer_secs)
     }
@@ -347,23 +356,33 @@ pub fn run_cpu_gpu(
 pub struct ServerRunResult {
     /// The serving config the optimizer chose.
     pub config: ServerConfig,
+    /// Per-batch dispatch overhead (seconds) the serving-config search
+    /// charged — measured when the cost model came from
+    /// [`CostModel::calibrate_full`], otherwise the default constant.
+    pub dispatch_overhead_secs: f64,
     /// Requests completed through the batched server.
     pub requests: u64,
     /// Dense output voxels produced by the batched server.
     pub voxels: u64,
     /// Wall seconds of the batched measurement window.
     pub wall_secs: f64,
+    /// Submits rejected by backpressure during the window.
     pub rejected: u64,
+    /// Requests whose deadline expired in the queue.
     pub expired: u64,
     /// Closed-loop requests that ended in a non-backpressure rejection
     /// or a serve error — nonzero means the throughput numbers cover
     /// fewer requests than offered.
     pub failed: u64,
+    /// Median request latency.
     pub p50_latency: Duration,
+    /// 99th-percentile request latency.
     pub p99_latency: Duration,
+    /// Mean requests per dispatched batch.
     pub batch_occupancy: f64,
     /// Serial reference: one request per `Coordinator::serve` call.
     pub serial_voxels: u64,
+    /// Wall seconds of the serial reference window.
     pub serial_wall_secs: f64,
 }
 
@@ -394,6 +413,11 @@ impl ServerRunResult {
 /// closed-loop load-generator threads (submit → wait → repeat,
 /// retrying briefly on backpressure) over the same stream. Both sides
 /// are warmed before their measurement window.
+///
+/// Pass a [`CostModel::calibrate_full`]-calibrated (or
+/// [`CostModel::load_profile`]-loaded) cost model to make the config
+/// search use this machine's measured rates and dispatch overhead; an
+/// uncalibrated model falls back to the static defaults.
 pub fn run_server(
     net: &NetSpec,
     weights: &[Arc<Weights>],
@@ -485,6 +509,7 @@ pub fn run_server(
     let m = server.metrics();
     Ok(ServerRunResult {
         config: cfg,
+        dispatch_overhead_secs: cm.dispatch_overhead_secs,
         requests: served.load(Ordering::SeqCst),
         voxels: voxels.load(Ordering::SeqCst),
         wall_secs,

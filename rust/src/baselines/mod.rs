@@ -26,16 +26,22 @@ use crate::util::sendptr::SendPtr;
 /// Which baseline algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Baseline {
+    /// Per-patch cuDNN-style dense conv, no reuse (Table V).
     NaiveCudnn,
+    /// Caffe-style strided patching.
     CaffeStrided,
+    /// ELEKTRONN-style dense inference.
     Elektronn,
+    /// ZNN FFT-based CPU inference.
     Znn,
 }
 
 impl Baseline {
+    /// All baselines, in Table V order.
     pub const ALL: [Baseline; 4] =
         [Baseline::NaiveCudnn, Baseline::CaffeStrided, Baseline::Elektronn, Baseline::Znn];
 
+    /// Display name (Table V row).
     pub fn name(&self) -> &'static str {
         match self {
             Baseline::NaiveCudnn => "Baseline (cuDNN)",

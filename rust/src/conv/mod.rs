@@ -18,12 +18,15 @@ use crate::util::prng::Rng;
 /// every primitive (the paper applies ReLU after each conv layer).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
+    /// Identity.
     None,
+    /// max(0, x) - the paper's transfer function.
     Relu,
 }
 
 impl Activation {
     #[inline]
+    /// Apply to one value.
     pub fn apply(&self, v: f32) -> f32 {
         match self {
             Activation::None => v,
@@ -35,14 +38,18 @@ impl Activation {
 /// Weights of one convolutional layer: `f' × f` kernels of extent `k`
 /// plus one bias per output map.
 pub struct Weights {
+    /// Output maps (f').
     pub f_out: usize,
+    /// Input maps (f).
     pub f_in: usize,
+    /// Kernel extent per dimension.
     pub k: Vec3,
     data: Vec<f32>,
     bias: Vec<f32>,
 }
 
 impl Weights {
+    /// All-zero weights of the given geometry.
     pub fn zeros(f_out: usize, f_in: usize, k: Vec3) -> Self {
         Weights {
             f_out,
@@ -68,6 +75,7 @@ impl Weights {
         w
     }
 
+    /// Elements in one kernel (k^3).
     pub fn klen(&self) -> usize {
         self.k[0] * self.k[1] * self.k[2]
     }
@@ -78,16 +86,19 @@ impl Weights {
         &self.data[o..o + self.klen()]
     }
 
+    /// Mutable kernel w[j][i].
     pub fn kernel_mut(&mut self, j: usize, i: usize) -> &mut [f32] {
         let l = self.klen();
         let o = (j * self.f_in + i) * l;
         &mut self.data[o..o + l]
     }
 
+    /// Bias of output map j.
     pub fn bias(&self, j: usize) -> f32 {
         self.bias[j]
     }
 
+    /// Set the bias of output map j.
     pub fn set_bias(&mut self, j: usize, b: f32) {
         self.bias[j] = b;
     }
@@ -97,6 +108,7 @@ impl Weights {
         &self.data
     }
 
+    /// All biases, flat (f').
     pub fn raw_bias(&self) -> &[f32] {
         &self.bias
     }

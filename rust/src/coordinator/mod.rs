@@ -38,26 +38,38 @@ use crate::util::pool::TaskPool;
 
 /// A whole-volume inference request.
 pub struct InferenceRequest {
+    /// Caller-chosen request id (echoed in the response).
     pub id: u64,
+    /// The whole input volume (1 x f_in x X x Y x Z).
     pub volume: Tensor5,
 }
 
 /// The served result.
 pub struct InferenceResponse {
+    /// Id of the request this answers.
     pub id: u64,
+    /// Dense sliding-window output.
     pub output: Tensor5,
+    /// Serve latency (batch-level on this testbed).
     pub latency: Duration,
+    /// Patches executed for this request (0 = batch-level accounting).
     pub patches: usize,
+    /// Output voxels produced.
     pub voxels: u64,
 }
 
 /// Aggregate serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Requests served.
     pub requests: usize,
+    /// Patches executed.
     pub patches: usize,
+    /// Dense output voxels produced.
     pub voxels: u64,
+    /// Summed worker compute seconds.
     pub busy_secs: f64,
+    /// Wall-clock seconds of the serve call.
     pub wall_secs: f64,
     /// Max arena footprint (held + outstanding bytes) across the
     /// workers of this serve call.
@@ -74,6 +86,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Voxels per wall second.
     pub fn throughput(&self) -> f64 {
         if self.wall_secs > 0.0 {
             self.voxels as f64 / self.wall_secs
@@ -82,6 +95,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={} arena_hwm={} arena_fresh_allocs={} assembly_lock_wait={:.6}s",
@@ -116,6 +130,7 @@ impl Metrics {
 
 /// The coordinator: a compiled plan + patch geometry + worker loop.
 pub struct Coordinator {
+    /// The served network architecture.
     pub net: NetSpec,
     plan: Arc<CompiledPlan>,
     fmap: FragmentMap,

@@ -22,14 +22,18 @@ use crate::tensor::Shape5;
 /// Kind of execution resource.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DeviceKind {
+    /// Host cores.
     Cpu,
+    /// (Simulated) accelerator.
     Gpu,
 }
 
 /// A device with a memory budget and a transfer cost model.
 #[derive(Clone, Debug)]
 pub struct Device {
+    /// Kind of execution resource.
     pub kind: DeviceKind,
+    /// Display name.
     pub name: String,
     /// RAM available to primitives on this device.
     pub ram_bytes: u64,

@@ -30,6 +30,20 @@
 //! register via `memory::alloc_recycled`, which does not count an
 //! allocation event — `memory::alloc_events()` therefore counts exactly
 //! the transient (fresh) allocations a workload performs.
+//!
+//! ```
+//! use znni::exec::ExecCtx;
+//! use znni::tensor::Shape5;
+//! use znni::util::pool::{ChipTopology, TaskPool};
+//!
+//! let pool = TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 });
+//! let mut ctx = ExecCtx::new(&pool);
+//! let t = ctx.tensor5(Shape5::new(1, 1, 4, 4, 4)); // drawn from the arena
+//! ctx.retire(t); // recycle the backing store
+//! assert_eq!(ctx.arena.stats().fresh_allocs, 1);
+//! let _warm = ctx.tensor5(Shape5::new(1, 1, 4, 4, 4));
+//! assert_eq!(ctx.arena.stats().fresh_allocs, 1); // same length: reused, not allocated
+//! ```
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -46,10 +60,12 @@ use crate::util::pool::TaskPool;
 /// the Table II model (input + output + transients of the worst layer).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkspaceReq {
+    /// Total bytes of the working set.
     pub bytes: u64,
 }
 
 impl WorkspaceReq {
+    /// The empty requirement.
     pub const ZERO: WorkspaceReq = WorkspaceReq { bytes: 0 };
 
     /// Pointwise maximum — layers of one plan share the arena, so the
@@ -143,6 +159,7 @@ impl Default for Arena {
 }
 
 impl Arena {
+    /// Empty, unbudgeted arena.
     pub fn new() -> Self {
         Arena::default()
     }
@@ -179,6 +196,7 @@ impl Arena {
         Ok(())
     }
 
+    /// Snapshot the accounting counters.
     pub fn stats(&self) -> ArenaStats {
         ArenaStats {
             fresh_allocs: self.fresh,
@@ -360,10 +378,12 @@ impl Drop for Arena {
 /// worker; reused across patches so steady state allocates nothing.
 pub struct ExecCtx<'p> {
     pool: &'p TaskPool,
+    /// The buffer arena (public so callers can snapshot its stats).
     pub arena: Arena,
 }
 
 impl<'p> ExecCtx<'p> {
+    /// Context over a fresh, unbudgeted arena.
     pub fn new(pool: &'p TaskPool) -> ExecCtx<'p> {
         Self::from_arena(pool, Arena::new())
     }
@@ -409,6 +429,7 @@ impl<'p> ExecCtx<'p> {
         self.arena.retire_tensor(t);
     }
 
+    /// Zeroed f32 buffer from the arena.
     pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
         self.arena.take_f32(len)
     }
@@ -418,10 +439,12 @@ impl<'p> ExecCtx<'p> {
         self.arena.take_f32_raw(len)
     }
 
+    /// Recycle an f32 buffer into the arena.
     pub fn put_f32(&mut self, v: Vec<f32>) {
         self.arena.put_f32(v)
     }
 
+    /// Zeroed complex buffer from the arena.
     pub fn take_c32(&mut self, len: usize) -> Vec<Complex32> {
         self.arena.take_c32(len)
     }
@@ -431,6 +454,7 @@ impl<'p> ExecCtx<'p> {
         self.arena.take_c32_raw(len)
     }
 
+    /// Recycle a complex buffer into the arena.
     pub fn put_c32(&mut self, v: Vec<Complex32>) {
         self.arena.put_c32(v)
     }

@@ -55,6 +55,7 @@ pub struct BatchedFft3 {
 }
 
 impl BatchedFft3 {
+    /// Plan for images of extent `dims`, padded to `padded`.
     pub fn new(dims: Vec3, padded: Vec3) -> Self {
         assert!(dims[0] <= padded[0] && dims[1] <= padded[1] && dims[2] <= padded[2]);
         BatchedFft3 {
@@ -67,10 +68,12 @@ impl BatchedFft3 {
         }
     }
 
+    /// Unpadded image extent.
     pub fn dims(&self) -> Vec3 {
         self.dims
     }
 
+    /// Padded transform extent.
     pub fn padded(&self) -> Vec3 {
         self.padded
     }

@@ -16,6 +16,7 @@ pub struct FftScratch {
 }
 
 impl FftScratch {
+    /// Empty scratch.
     pub fn new() -> Self {
         Self::default()
     }
@@ -37,6 +38,7 @@ pub struct FftPlan {
 }
 
 impl FftPlan {
+    /// Plan a length-`n` transform (twiddle table + factorization).
     pub fn new(n: usize) -> Self {
         assert!(n > 0, "FFT length must be positive");
         let tw = (0..n)
@@ -45,10 +47,12 @@ impl FftPlan {
         FftPlan { n, tw, factors: factorize(n) }
     }
 
+    /// Transform length n.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Always false - plans have positive length.
     pub fn is_empty(&self) -> bool {
         false
     }

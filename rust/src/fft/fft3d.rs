@@ -31,6 +31,7 @@ thread_local! {
 
 /// Scratch for one in-flight 3D transform. One per worker thread.
 pub struct Fft3Scratch {
+    /// 1D scratch shared by the line transforms.
     pub fft: FftScratch,
     line_a: Vec<Complex32>,
     line_b: Vec<Complex32>,
@@ -39,6 +40,7 @@ pub struct Fft3Scratch {
 }
 
 impl Fft3Scratch {
+    /// Empty scratch.
     pub fn new() -> Self {
         Fft3Scratch {
             fft: FftScratch::new(),
@@ -75,6 +77,7 @@ pub struct Fft3 {
 }
 
 impl Fft3 {
+    /// Plan 3D transforms padded to `padded`.
     pub fn new(padded: Vec3) -> Self {
         let [x, y, z] = padded;
         Fft3 {
@@ -86,6 +89,7 @@ impl Fft3 {
         }
     }
 
+    /// Padded transform extent.
     pub fn padded(&self) -> Vec3 {
         self.padded
     }

@@ -18,7 +18,9 @@ use crate::tensor::{Shape5, Tensor5, Vec3};
 /// output-batch order) and the total stride.
 #[derive(Clone, Debug)]
 pub struct FragmentMap {
+    /// Per-fragment output offsets, in output-batch order.
     pub offsets: Vec<Vec3>,
+    /// Total fragment stride (product of the MPF windows).
     pub stride: Vec3,
 }
 

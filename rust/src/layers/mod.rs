@@ -24,7 +24,9 @@ use crate::tensor::{Shape5, Tensor5, Vec3};
 /// testbed the GPU is simulated — see `crate::device`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Placement {
+    /// CPU primitive (§IV.A).
     Cpu,
+    /// (Simulated) GPU primitive (§IV.B).
     Gpu,
 }
 
@@ -64,12 +66,16 @@ pub trait LayerPrimitive: Send + Sync {
 
 /// Convolutional layer with a fixed algorithm choice.
 pub struct ConvLayer {
+    /// Shared layer weights.
     pub weights: Arc<Weights>,
+    /// Algorithm choice (fixed per plan).
     pub algo: ConvAlgo,
+    /// Post-convolution activation.
     pub act: Activation,
 }
 
 impl ConvLayer {
+    /// Layer from weights + algorithm + activation.
     pub fn new(weights: Arc<Weights>, algo: ConvAlgo, act: Activation) -> Self {
         ConvLayer { weights, algo, act }
     }
@@ -167,7 +173,9 @@ impl LayerPrimitive for ConvLayer {
 
 /// Plain max-pooling layer.
 pub struct MaxPoolLayer {
+    /// Pooling window p.
     pub window: Vec3,
+    /// Device placement.
     pub placement: Placement,
 }
 
@@ -214,7 +222,9 @@ impl LayerPrimitive for MaxPoolLayer {
 
 /// Max-pooling-fragments layer.
 pub struct MpfLayer {
+    /// Pooling window p.
     pub window: Vec3,
+    /// Device placement.
     pub placement: Placement,
 }
 

@@ -30,9 +30,35 @@
 //!   performs zero transient allocations after a one-patch warmup;
 //! * an asynchronous batched serving frontend ([`server`]): sharded
 //!   coordinators with bounded admission queues (reject, never block),
-//!   per-request deadlines, Table II-budgeted micro-batching and
-//!   work-stealing between shards; [`optimizer::search_serving`]
-//!   derives the plan and the [`server::ServerConfig`] in one call.
+//!   earliest-deadline-first queue ordering with deadline-miss
+//!   counters, Table II-budgeted micro-batching and work-stealing
+//!   between shards; [`optimizer::search_serving`] derives the plan and
+//!   the [`server::ServerConfig`] in one call;
+//! * a measured autotuner ([`optimizer::cost`]):
+//!   [`optimizer::CostModel::calibrate_full`] micro-benchmarks every
+//!   primitive through a warm execution context at a ladder of sizes,
+//!   measures the real batch-dispatch overhead, and persists the result
+//!   as a JSON profile so serving startup can reuse a prior run.
+//!
+//! The one-minute tour — search a plan, compile it, run a patch:
+//!
+//! ```
+//! use znni::device::Device;
+//! use znni::net::zoo::tiny_net;
+//! use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+//! use znni::tensor::Tensor5;
+//! use znni::util::pool::{ChipTopology, TaskPool};
+//!
+//! let net = tiny_net(2);
+//! let cm = CostModel::default_rates(2);
+//! let space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+//! let plan = search(&net, &space, &cm).expect("a feasible plan");
+//! let cp = compile(&net, &plan, &make_weights(&net, 1)).unwrap();
+//! let pool = TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 });
+//! let mut ctx = cp.make_ctx(&pool).unwrap();
+//! let out = cp.run(Tensor5::random(plan.input, 7), &mut ctx);
+//! assert_eq!(out.shape(), *plan.shapes.last().unwrap());
+//! ```
 
 // Style lints this from-scratch codebase deliberately trades away for
 // explicit index arithmetic in the kernel code (CI runs clippy with
@@ -45,6 +71,9 @@
     clippy::type_complexity,
     clippy::uninlined_format_args
 )]
+// Every public item carries documentation; `cargo doc` is kept
+// warning-free by the CI docs job (RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 
 pub mod approaches;
 pub mod baselines;

@@ -118,18 +118,23 @@ impl<T: Clone + Default> TrackedVec<T> {
 }
 
 impl<T> TrackedVec<T> {
+    /// Borrow the elements.
     pub fn as_slice(&self) -> &[T] {
         &self.v
     }
+    /// Mutably borrow the elements.
     pub fn as_mut_slice(&mut self) -> &mut [T] {
         &mut self.v
     }
+    /// Raw mutable pointer to the first element.
     pub fn as_mut_ptr(&mut self) -> *mut T {
         self.v.as_mut_ptr()
     }
+    /// Element count.
     pub fn len(&self) -> usize {
         self.v.len()
     }
+    /// Whether there are no elements.
     pub fn is_empty(&self) -> bool {
         self.v.is_empty()
     }

@@ -40,6 +40,7 @@ pub enum ConvAlgo {
 }
 
 impl ConvAlgo {
+    /// Every algorithm, in Table II row order.
     pub const ALL: [ConvAlgo; 7] = [
         ConvAlgo::DirectNaive,
         ConvAlgo::DirectMkl,
@@ -50,6 +51,7 @@ impl ConvAlgo {
         ConvAlgo::GpuFft,
     ];
 
+    /// Whether this is a GPU-placed primitive.
     pub fn is_gpu(&self) -> bool {
         matches!(
             self,
@@ -57,6 +59,7 @@ impl ConvAlgo {
         )
     }
 
+    /// Human-readable name (Table II row labels).
     pub fn name(&self) -> &'static str {
         match self {
             ConvAlgo::DirectNaive => "Direct (naive)",
@@ -81,19 +84,32 @@ impl ConvAlgo {
             ConvAlgo::GpuFft => "FFT",
         }
     }
+
+    /// Inverse of [`ConvAlgo::tag`] — used by the calibration-profile
+    /// loader ([`crate::optimizer::CostModel::load_profile`]) to map
+    /// persisted keys back to algorithms.
+    pub fn from_tag(tag: &str) -> Option<ConvAlgo> {
+        ConvAlgo::ALL.into_iter().find(|a| a.tag() == tag)
+    }
 }
 
 /// Problem dimensions of one convolutional layer application.
 #[derive(Clone, Copy, Debug)]
 pub struct ConvDims {
+    /// Batch size (S).
     pub s: usize,
+    /// Input images per tuple (f).
     pub f_in: usize,
+    /// Output images per tuple (f').
     pub f_out: usize,
+    /// Input extent per dimension (n).
     pub n: Vec3,
+    /// Kernel extent per dimension (k).
     pub k: Vec3,
 }
 
 impl ConvDims {
+    /// Output extent per dimension (n - k + 1).
     pub fn out_n(&self) -> Vec3 {
         [self.n[0] - self.k[0] + 1, self.n[1] - self.k[1] + 1, self.n[2] - self.k[2] + 1]
     }

@@ -7,26 +7,39 @@ use crate::tensor::{Shape5, Vec3};
 /// One layer of an architecture (Table III rows).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum LayerSpec {
-    /// Convolution to `f_out` maps with kernel `k` (+ ReLU).
-    Conv { f_out: usize, k: Vec3 },
-    /// Pooling with window `p` — executed as max-pool or MPF depending
-    /// on the chosen [`PoolingMode`].
-    Pool { p: Vec3 },
+    /// Convolution (+ ReLU).
+    Conv {
+        /// Output maps (f').
+        f_out: usize,
+        /// Kernel extent per dimension.
+        k: Vec3,
+    },
+    /// Pooling — executed as max-pool or MPF depending on the chosen
+    /// [`PoolingMode`].
+    Pool {
+        /// Pooling window per dimension.
+        p: Vec3,
+    },
 }
 
 /// How a pooling layer is realised (§V–VI: every max-pooling layer may
 /// be replaced by an MPF layer).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PoolingMode {
+    /// Plain max-pooling (stride = window).
     MaxPool,
+    /// Max-pooling fragments: all p^3 offsets, multiplying the batch (§V).
     Mpf,
 }
 
 /// A network architecture: input maps + layer list.
 #[derive(Clone, Debug)]
 pub struct NetSpec {
+    /// Display name (Tables I/III).
     pub name: String,
+    /// Input images of the first layer.
     pub f_in: usize,
+    /// Layer list, input to output.
     pub layers: Vec<LayerSpec>,
 }
 

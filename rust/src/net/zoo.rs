@@ -26,6 +26,7 @@ pub enum NetScale {
 }
 
 impl NetScale {
+    /// Feature maps per hidden layer at this scale.
     pub fn fmaps(&self) -> usize {
         match self {
             NetScale::Paper => 80,
@@ -34,6 +35,7 @@ impl NetScale {
         }
     }
 
+    /// Read the scale from `ZNNI_SCALE` (paper|small|tiny; default small).
     pub fn from_env() -> Self {
         match std::env::var("ZNNI_SCALE").as_deref() {
             Ok("paper") => NetScale::Paper,

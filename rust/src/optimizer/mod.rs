@@ -12,6 +12,18 @@
 //! and keeps the plan with the highest estimated throughput
 //! (`Size(I′) / Σ Time(primitiveᵢ, Iᵢ)`). Plans can then be *executed*
 //! to measure real throughput.
+//!
+//! ```
+//! use znni::device::Device;
+//! use znni::net::zoo::tiny_net;
+//! use znni::optimizer::{search, CostModel, SearchSpace};
+//!
+//! let net = tiny_net(2);
+//! let space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+//! let plan = search(&net, &space, &CostModel::default_rates(2)).expect("feasible");
+//! assert_eq!(plan.layers.len(), net.layers.len());
+//! assert!(plan.est_throughput() > 0.0);
+//! ```
 
 pub mod cost;
 pub mod theory;
@@ -36,11 +48,20 @@ pub use cost::CostModel;
 /// Per-layer decision of a plan.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum PlanLayer {
-    Conv { algo: ConvAlgo },
-    Pool { mode: PoolingMode },
+    /// A convolutional layer executed with the chosen algorithm.
+    Conv {
+        /// The algorithm the search picked for this layer.
+        algo: ConvAlgo,
+    },
+    /// A pooling layer realised in the chosen mode.
+    Pool {
+        /// Max-pool or MPF.
+        mode: PoolingMode,
+    },
 }
 
 impl PlanLayer {
+    /// Short Table IV tag of this decision.
     pub fn tag(&self) -> &'static str {
         match self {
             PlanLayer::Conv { algo } => algo.tag(),
@@ -55,8 +76,11 @@ impl PlanLayer {
 /// A fully determined execution plan for one input patch.
 #[derive(Clone, Debug)]
 pub struct Plan {
+    /// Name of the planned network.
     pub net_name: String,
+    /// Chosen input patch shape.
     pub input: Shape5,
+    /// Per-layer decisions, in layer order.
     pub layers: Vec<PlanLayer>,
     /// Shape after each layer.
     pub shapes: Vec<Shape5>,
@@ -70,6 +94,7 @@ pub struct Plan {
 }
 
 impl Plan {
+    /// Estimated throughput: output voxels per estimated second.
     pub fn est_throughput(&self) -> f64 {
         self.out_voxels as f64 / self.est_secs
     }
@@ -89,7 +114,9 @@ impl Plan {
 /// Search constraints: which algorithms may be used and on what device.
 #[derive(Clone, Debug)]
 pub struct SearchSpace {
+    /// Device whose RAM constrains every candidate.
     pub device: Device,
+    /// Conv algorithms the search may choose from.
     pub algos: Vec<ConvAlgo>,
     /// Allow max-pool (in addition to MPF) in the pooling assignment
     /// loop. The paper's result is that MPF always wins; keeping both
@@ -100,6 +127,7 @@ pub struct SearchSpace {
     pub batch_sizes: Vec<usize>,
     /// Inclusive range of cubic input extents to consider.
     pub min_extent: usize,
+    /// Largest cubic input extent to consider.
     pub max_extent: usize,
     /// Cap on candidate extents actually evaluated (largest kept).
     pub max_candidates: usize,
@@ -275,8 +303,14 @@ pub fn search(net: &NetSpec, space: &SearchSpace, cost: &CostModel) -> Option<Pl
 ///   output, [`crate::memory::model::request_memory_bytes`]) per busy
 ///   shard; candidates that do not fit the device are discarded;
 /// * **time** — per-patch seconds scale with the thread share a shard
-///   gets, plus a fixed per-batch dispatch overhead that more shards
-///   amortize across concurrent clients.
+///   gets, plus the per-batch dispatch overhead
+///   ([`CostModel::dispatch_overhead_secs`]) that more shards amortize
+///   across concurrent clients. The overhead is a *measured* quantity:
+///   [`cost::measure_dispatch_overhead`] (run by
+///   [`CostModel::calibrate_full`]) times the worker spawn + hand-off
+///   this machine actually pays, replacing the old fixed 200 µs
+///   assumption; uncalibrated models fall back to
+///   [`cost::DEFAULT_DISPATCH_OVERHEAD_SECS`].
 ///
 /// Queue depth (Little's-law-style: two outstanding requests per
 /// client, split across shards, capped by spare RAM), the batch cap and
@@ -299,8 +333,16 @@ pub fn search_serving(
     let clients = load.clients.max(1);
     // Fixed per-batch dispatch cost (worker spawn + assembly) — the
     // request-level analogue of the per-patch fixed overheads the paper
-    // amortizes with bigger images.
-    const DISPATCH_OVERHEAD_SECS: f64 = 200e-6;
+    // amortizes with bigger images. Measured by the calibration harness
+    // (`CostModel::calibrate_full`) for the *full* pool; a shard's
+    // batch only spawns its own worker share, and thread spawn/join
+    // dominates the measurement, so the charge scales linearly with the
+    // shard's worker count (floored at one thread's worth).
+    let measured_overhead = cost.dispatch_overhead_secs.max(0.0);
+    let overhead_for = |shard_workers: usize| {
+        (measured_overhead * shard_workers as f64 / threads as f64)
+            .max(measured_overhead / threads as f64)
+    };
 
     let mut best: Option<(usize, f64)> = None;
     let mut shards = 1usize;
@@ -311,8 +353,8 @@ pub fn search_serving(
         let inflight = req_bytes.saturating_mul(concurrency as u64);
         if space.device.fits(arenas.saturating_add(inflight)) {
             let patch_secs = plan.est_secs * threads as f64 / shard_workers as f64;
-            let tp =
-                concurrency as f64 * plan.out_voxels as f64 / (patch_secs + DISPATCH_OVERHEAD_SECS);
+            let tp = concurrency as f64 * plan.out_voxels as f64
+                / (patch_secs + overhead_for(shard_workers));
             if best.map(|(_, b)| tp > b).unwrap_or(true) {
                 best = Some((shards, tp));
             }
@@ -328,7 +370,11 @@ pub fn search_serving(
     let queue_depth = crate::util::ceil_div(2 * clients, shards).clamp(1, depth_by_mem);
     let max_batch_requests = depth_by_mem.min(clients).clamp(1, 8);
     let patch_secs = plan.est_secs * threads as f64 / shard_workers as f64;
-    let max_batch_wait = Duration::from_secs_f64((patch_secs / 8.0).clamp(200e-6, 10e-3));
+    // Waiting less than one dispatch overhead for co-batchable requests
+    // cannot pay for itself, so the winning shard size's measured
+    // overhead floors the wait.
+    let wait_floor = overhead_for(shard_workers).clamp(50e-6, 5e-3);
+    let max_batch_wait = Duration::from_secs_f64((patch_secs / 8.0).clamp(wait_floor, 10e-3));
     // Per-shard batch budget: an even share of device RAM, but always
     // enough for the shard's warm arenas plus one typical request (the
     // start-time admission gate requires strict headroom).
@@ -347,8 +393,11 @@ pub fn search_serving(
 
 /// Materialised, executable plan: primitives + weights.
 pub struct CompiledPlan {
+    /// The plan this was compiled from.
     pub plan: Plan,
+    /// Executable primitive per layer, in order.
     pub primitives: Vec<Box<dyn LayerPrimitive>>,
+    /// Weights per conv layer, in order.
     pub weights: Vec<Arc<Weights>>,
 }
 

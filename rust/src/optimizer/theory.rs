@@ -98,6 +98,7 @@ pub fn naive_ops_per_voxel(net: &NetSpec) -> f64 {
 /// One Fig. 4 series: a batch size and its (memory, speedup) curve.
 #[derive(Clone, Debug)]
 pub struct SpeedupSeries {
+    /// Batch size (S) of this series.
     pub batch: usize,
     /// (memory bytes, theoretical speedup) per valid input extent.
     pub points: Vec<(u64, f64)>,

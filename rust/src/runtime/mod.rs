@@ -31,15 +31,20 @@ use crate::tensor::Tensor5;
 /// One artifact: name, file, argument and output shapes.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (layer id).
     pub name: String,
+    /// File name inside the artifact directory.
     pub file: String,
+    /// Argument shapes, in call order.
     pub arg_shapes: Vec<Vec<usize>>,
+    /// Output shape.
     pub output_shape: Vec<usize>,
 }
 
 /// Parsed `manifest.txt`.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// All artifacts, in manifest order.
     pub entries: Vec<ArtifactSpec>,
 }
 
@@ -86,6 +91,7 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
+    /// Load `manifest.txt` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -93,6 +99,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Find an artifact by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.entries.iter().find(|e| e.name == name)
     }
@@ -103,6 +110,7 @@ impl Manifest {
 #[cfg(feature = "pjrt")]
 pub struct Runtime {
     dir: PathBuf,
+    /// Parsed artifact manifest.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     loaded: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
@@ -217,6 +225,7 @@ impl Runtime {
 /// primitives (every call site already handles the error path).
 #[cfg(not(feature = "pjrt"))]
 pub struct Runtime {
+    /// Parsed artifact manifest.
     pub manifest: Manifest,
 }
 

@@ -36,12 +36,45 @@
 //!   [`CompiledPlan`]; FFT twiddle tables live in the process-wide plan
 //!   cache. An idle shard steals from the tail of a busy sibling's
 //!   queue before sleeping.
-//! * **Deadlines** — a request may carry a deadline; the batcher drops
-//!   expired requests at dispatch time and answers
-//!   [`ServeError::DeadlineExceeded`] instead of wasting compute.
+//! * **Deadlines + EDF** — a request may carry a deadline. Each shard
+//!   queue is kept in **earliest-deadline-first** order (deadline-free
+//!   requests sort last, FIFO among ties), so the micro-batcher always
+//!   dispatches the most urgent admissible batch; stealing takes from
+//!   the *tail* — the victim's least urgent work. The batcher drops
+//!   already-expired requests at dispatch time and answers
+//!   [`ServeError::DeadlineExceeded`] instead of wasting compute;
+//!   requests that complete past their deadline count into
+//!   [`ServerMetrics::completed_late`]. Both kinds of miss aggregate in
+//!   [`ServerMetrics::deadline_misses`].
 //!
 //! Use [`crate::optimizer::search_serving`] to derive both the plan and
-//! the [`ServerConfig`] from one search call.
+//! the [`ServerConfig`] from one search call; with a
+//! [`crate::optimizer::CostModel::calibrate_full`]-calibrated cost
+//! model, its shard/batch trade-offs use this machine's *measured*
+//! dispatch overhead.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use znni::device::Device;
+//! use znni::net::zoo::tiny_net;
+//! use znni::optimizer::{compile, make_weights, search_serving, CostModel, SearchSpace};
+//! use znni::server::{Server, ServingLoad};
+//! use znni::tensor::{Shape5, Tensor5};
+//! use znni::util::pool::{ChipTopology, TaskPool};
+//!
+//! let net = tiny_net(2);
+//! let cm = CostModel::default_rates(2); // or CostModel::calibrate_full / load_profile
+//! let space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+//! let load = ServingLoad { clients: 2, volume_extent: 18 };
+//! let (plan, cfg) = search_serving(&net, &space, &cm, &load).expect("feasible");
+//! let cp = compile(&net, &plan, &make_weights(&net, 1)).unwrap();
+//! let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 }));
+//! let server = Server::start(net, cp, cfg, pool).unwrap();
+//! let ticket = server.submit(Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5)).unwrap();
+//! let response = ticket.wait().unwrap();
+//! assert!(response.output.shape().x > 0);
+//! assert_eq!(server.metrics().completed, 1);
+//! ```
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -101,7 +134,9 @@ impl Default for ServerConfig {
 /// clients drive the server and the cubic extent of their volumes.
 #[derive(Clone, Copy, Debug)]
 pub struct ServingLoad {
+    /// Closed-loop clients driving the server.
     pub clients: usize,
+    /// Cubic extent of each client's request volumes.
     pub volume_extent: usize,
 }
 
@@ -109,19 +144,32 @@ pub struct ServingLoad {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RejectReason {
     /// Every shard queue is at `queue_depth` — backpressure; retry.
-    QueueFull { depth: usize },
+    QueueFull {
+        /// The configured per-shard queue bound that was hit.
+        depth: usize,
+    },
     /// The request's Table II footprint cannot fit the shard budget
     /// even alone — it will never be admitted.
-    TooLarge { bytes: u64, budget: u64 },
+    TooLarge {
+        /// The request's Table II footprint.
+        bytes: u64,
+        /// The configured per-shard batch budget.
+        budget: u64,
+    },
     /// Volume shape does not match the served network / patch.
-    BadShape { detail: String },
+    BadShape {
+        /// What was wrong with the shape.
+        detail: String,
+    },
     /// The server is shutting down.
     ShuttingDown,
 }
 
 /// A rejected submit: the volume comes back so the caller can retry.
 pub struct Rejected {
+    /// The volume, returned intact so the caller can retry.
     pub volume: Tensor5,
+    /// Why the request was turned away.
     pub reason: RejectReason,
 }
 
@@ -138,7 +186,10 @@ impl std::fmt::Debug for Rejected {
 #[derive(Clone, Debug)]
 pub enum ServeError {
     /// The request sat in the queue past its deadline.
-    DeadlineExceeded { waited: Duration },
+    DeadlineExceeded {
+        /// How long the request waited before being dropped.
+        waited: Duration,
+    },
     /// The underlying coordinator batch failed.
     Failed(String),
     /// The server dropped before answering.
@@ -161,6 +212,7 @@ impl std::error::Error for ServeError {}
 
 /// Handle for one admitted request; redeem with [`Ticket::wait`].
 pub struct Ticket {
+    /// Request id assigned at submit time.
     pub id: u64,
     rx: Receiver<Result<InferenceResponse, ServeError>>,
 }
@@ -192,11 +244,31 @@ struct Queued {
     tx: Sender<Result<InferenceResponse, ServeError>>,
 }
 
+/// EDF order: does `a` dispatch no later than `b`? Deadline-free
+/// requests sort last; ties (including two `None`s) are FIFO because
+/// [`edf_insert`] places a new request *after* its equals.
+fn edf_le(a: Option<Instant>, b: Option<Instant>) -> bool {
+    match (a, b) {
+        (Some(x), Some(y)) => x <= y,
+        (Some(_), None) => true,
+        (None, d) => d.is_none(),
+    }
+}
+
+/// Insert into a deadline-sorted queue, keeping earliest-deadline-first
+/// order with FIFO tie-breaking. The queue head is therefore always the
+/// most urgent request; the tail is what work stealing takes.
+fn edf_insert(q: &mut VecDeque<Queued>, item: Queued) {
+    let idx = q.partition_point(|x| edf_le(x.deadline, item.deadline));
+    q.insert(idx, item);
+}
+
 #[derive(Default)]
 struct ShardStats {
     batches: u64,
     requests: u64,
     steals: u64,
+    expired: u64,
     metrics: Metrics,
 }
 
@@ -224,6 +296,7 @@ struct Inner {
     submitted: AtomicU64,
     rejected: AtomicU64,
     expired: AtomicU64,
+    completed_late: AtomicU64,
     completed: AtomicU64,
     batches: AtomicU64,
     batch_requests: AtomicU64,
@@ -265,15 +338,28 @@ impl LatencyRing {
 /// Per-shard observability snapshot.
 #[derive(Clone, Debug, Default)]
 pub struct ShardSnapshot {
+    /// Batches this shard dispatched.
     pub batches: u64,
+    /// Requests this shard served.
     pub requests: u64,
+    /// Requests stolen from siblings' queue tails.
     pub steals: u64,
+    /// Requests this shard dropped at dispatch because their deadline
+    /// had already passed in the queue.
+    pub expired: u64,
+    /// Current admission-queue length.
     pub queue_len: usize,
+    /// Patches executed (coordinator metric).
     pub patches: usize,
+    /// Dense output voxels produced.
     pub voxels: u64,
+    /// Summed worker compute seconds.
     pub busy_secs: f64,
+    /// Max arena footprint across the shard's workers.
     pub arena_hwm_bytes: u64,
+    /// Arena takes that needed fresh memory (0 once warm).
     pub arena_fresh_allocs: u64,
+    /// Seconds spent waiting on output-assembly band locks.
     pub assembly_lock_wait_secs: f64,
 }
 
@@ -281,19 +367,33 @@ pub struct ShardSnapshot {
 /// batch occupancy and per-shard arena gauges.
 #[derive(Clone, Debug, Default)]
 pub struct ServerMetrics {
+    /// Requests admitted past the door.
     pub submitted: u64,
+    /// Submits turned away (backpressure, size or shape).
     pub rejected: u64,
+    /// Requests dropped at dispatch because their deadline passed in queue.
     pub expired: u64,
+    /// Requests that were dispatched in time but whose response was
+    /// only produced after the deadline had passed — the batch-level
+    /// deadline misses EDF ordering works to minimize.
+    pub completed_late: u64,
+    /// Requests answered with an output.
     pub completed: u64,
+    /// Coordinator batches dispatched.
     pub batches: u64,
+    /// Total requests across all dispatched batches.
     pub batch_requests: u64,
     /// Deepest any shard queue has been since start.
     pub queue_depth_hwm: usize,
     /// Current total queued requests across shards.
     pub queued_now: usize,
+    /// Median submit-to-response latency over the sample ring.
     pub p50_latency: Duration,
+    /// 99th-percentile submit-to-response latency.
     pub p99_latency: Duration,
+    /// Dense output voxels produced by all shards.
     pub voxels: u64,
+    /// Per-shard observability snapshots.
     pub per_shard: Vec<ShardSnapshot>,
 }
 
@@ -308,17 +408,25 @@ impl ServerMetrics {
         }
     }
 
+    /// Total deadline misses: requests expired in the queue (dropped at
+    /// dispatch) plus requests completed past their deadline.
+    pub fn deadline_misses(&self) -> u64 {
+        self.expired + self.completed_late
+    }
+
+    /// One-line human-readable summary of the counters.
     pub fn report(&self) -> String {
         let fresh: u64 = self.per_shard.iter().map(|s| s.arena_fresh_allocs).sum();
         let hwm = self.per_shard.iter().map(|s| s.arena_hwm_bytes).max().unwrap_or(0);
         let steals: u64 = self.per_shard.iter().map(|s| s.steals).sum();
         format!(
-            "submitted={} completed={} rejected={} expired={} batches={} occupancy={:.2} \
+            "submitted={} completed={} rejected={} expired={} late={} batches={} occupancy={:.2} \
              queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={}",
             self.submitted,
             self.completed,
             self.rejected,
             self.expired,
+            self.completed_late,
             self.batches,
             self.batch_occupancy(),
             self.queue_depth_hwm,
@@ -396,6 +504,7 @@ impl Server {
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             expired: AtomicU64::new(0),
+            completed_late: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_requests: AtomicU64::new(0),
@@ -470,14 +579,16 @@ impl Server {
             tx,
         });
         // Round-robin admission with fallback scan: the request lands
-        // on the first shard with a free slot; all full ⇒ reject.
+        // on the first shard with a free slot (inserted in EDF order,
+        // so the shard's head is always its most urgent request); all
+        // full ⇒ reject.
         let start = inner.rr.fetch_add(1, Ordering::SeqCst);
         for k in 0..inner.shards.len() {
             let si = (start + k) % inner.shards.len();
             let shard = &inner.shards[si];
             let mut q = shard.queue.lock().unwrap();
             if q.len() < inner.cfg.queue_depth {
-                q.push_back(item.take().unwrap());
+                edf_insert(&mut q, item.take().unwrap());
                 let depth = q.len();
                 drop(q);
                 inner.queue_depth_hwm.fetch_max(depth, Ordering::SeqCst);
@@ -503,6 +614,7 @@ impl Server {
                     batches: st.batches,
                     requests: st.requests,
                     steals: st.steals,
+                    expired: st.expired,
                     queue_len: sh.queue.lock().unwrap().len(),
                     patches: st.metrics.patches,
                     voxels: st.metrics.voxels,
@@ -519,6 +631,7 @@ impl Server {
             submitted: inner.submitted.load(Ordering::SeqCst),
             rejected: inner.rejected.load(Ordering::SeqCst),
             expired: inner.expired.load(Ordering::SeqCst),
+            completed_late: inner.completed_late.load(Ordering::SeqCst),
             completed: inner.completed.load(Ordering::SeqCst),
             batches: inner.batches.load(Ordering::SeqCst),
             batch_requests: inner.batch_requests.load(Ordering::SeqCst),
@@ -545,12 +658,15 @@ impl Drop for Server {
 }
 
 impl Inner {
-    /// Pop from the shard's own queue head.
+    /// Pop from the shard's own queue head — the earliest deadline,
+    /// since [`edf_insert`] keeps the queue EDF-ordered.
     fn try_pop_local(&self, si: usize) -> Option<Queued> {
         self.shards[si].queue.lock().unwrap().pop_front()
     }
 
-    /// Steal one request from the tail of a sibling's queue.
+    /// Steal one request from the tail of a sibling's queue — the
+    /// victim's *least* urgent work, so stealing never takes a request
+    /// the victim was about to dispatch against a deadline.
     fn try_steal(&self, si: usize) -> Option<Queued> {
         let n = self.shards.len();
         for k in 1..n {
@@ -605,8 +721,12 @@ impl Inner {
                             .saturating_add(self.shard_ws_bytes)
                             > self.cfg.memory_budget
                         {
-                            // Does not fit this batch — back to the head.
-                            self.shards[si].queue.lock().unwrap().push_front(q);
+                            // Does not fit this batch — put it back. A
+                            // concurrent submit may have inserted an
+                            // earlier deadline since the pop, so the
+                            // position is recomputed under the lock
+                            // (push_front could break the EDF order).
+                            edf_insert(&mut self.shards[si].queue.lock().unwrap(), q);
                             break;
                         }
                         batch_bytes += q.bytes;
@@ -635,9 +755,11 @@ impl Inner {
         let now = Instant::now();
         let mut reqs = Vec::with_capacity(batch.len());
         let mut metas = Vec::with_capacity(batch.len());
+        let mut expired_here = 0u64;
         for q in batch {
             if let Some(d) = q.deadline {
                 if now > d {
+                    expired_here += 1;
                     self.expired.fetch_add(1, Ordering::SeqCst);
                     let waited = q.enqueued.elapsed();
                     let _ = q.tx.send(Err(ServeError::DeadlineExceeded { waited }));
@@ -645,7 +767,10 @@ impl Inner {
                 }
             }
             reqs.push(InferenceRequest { id: q.id, volume: q.volume });
-            metas.push((q.tx, q.enqueued));
+            metas.push((q.tx, q.enqueued, q.deadline));
+        }
+        if expired_here > 0 {
+            self.shards[si].stats.lock().unwrap().expired += expired_here;
         }
         if reqs.is_empty() {
             return;
@@ -661,9 +786,16 @@ impl Inner {
                     st.requests += n as u64;
                     st.metrics.merge(&m);
                 }
-                for (mut resp, (tx, enqueued)) in resps.into_iter().zip(metas) {
-                    let lat = enqueued.elapsed();
+                let done = Instant::now();
+                for (mut resp, (tx, enqueued, deadline)) in resps.into_iter().zip(metas) {
+                    let lat = done.duration_since(enqueued);
                     resp.latency = lat;
+                    if deadline.map(|d| done > d).unwrap_or(false) {
+                        // Dispatched in time but finished late — the
+                        // response still goes out (the work is done),
+                        // and the miss is recorded.
+                        self.completed_late.fetch_add(1, Ordering::SeqCst);
+                    }
                     self.latencies.lock().unwrap().record(lat.as_micros() as u64);
                     self.completed.fetch_add(1, Ordering::SeqCst);
                     let _ = tx.send(Ok(resp));
@@ -674,7 +806,7 @@ impl Inner {
                 // unreachable; a batch error here is systemic and is
                 // reported to every member.
                 let msg = e.to_string();
-                for (tx, _) in metas {
+                for (tx, _, _) in metas {
                     let _ = tx.send(Err(ServeError::Failed(msg.clone())));
                 }
             }
@@ -783,6 +915,47 @@ mod tests {
         assert!(m.batches >= 1);
         assert_eq!(m.per_shard.len(), 2);
         assert!(m.p99_latency >= m.p50_latency);
+    }
+
+    #[test]
+    fn edf_insert_orders_queue() {
+        let now = Instant::now();
+        let mk = |id: u64, deadline: Option<Duration>| {
+            let (tx, _rx) = channel();
+            Queued {
+                id,
+                volume: Tensor5::zeros(Shape5::new(1, 1, 1, 1, 1)),
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+                bytes: 0,
+                tx,
+            }
+        };
+        let mut q = VecDeque::new();
+        edf_insert(&mut q, mk(0, Some(Duration::from_secs(10)))); // far
+        edf_insert(&mut q, mk(1, None)); // no deadline: last
+        edf_insert(&mut q, mk(2, Some(Duration::from_secs(1)))); // near
+        edf_insert(&mut q, mk(3, Some(Duration::from_secs(5)))); // mid
+        edf_insert(&mut q, mk(4, None)); // FIFO among deadline-free
+        edf_insert(&mut q, mk(5, Some(Duration::from_secs(1)))); // FIFO tie after id 2
+        let order: Vec<u64> = q.iter().map(|x| x.id).collect();
+        assert_eq!(order, vec![2, 5, 3, 0, 1, 4]);
+        // Head = most urgent (what the shard dispatches), tail = least
+        // urgent (what a sibling steals).
+        assert_eq!(q.pop_front().unwrap().id, 2);
+        assert_eq!(q.pop_back().unwrap().id, 4);
+    }
+
+    #[test]
+    fn expired_requests_count_as_deadline_misses() {
+        let (net, cp, pool) = setup();
+        let server = Server::start(net, cp, ServerConfig::default(), pool).unwrap();
+        let vol = Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5);
+        let t = server.submit_with_deadline(vol, Some(Duration::ZERO)).unwrap();
+        assert!(t.wait().is_err());
+        let m = server.metrics();
+        assert_eq!(m.deadline_misses(), 1);
+        assert_eq!(m.per_shard.iter().map(|s| s.expired).sum::<u64>(), 1);
     }
 
     #[test]

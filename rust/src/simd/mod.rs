@@ -24,6 +24,16 @@
 //! Building with `RUSTFLAGS="-C target-cpu=native"` additionally lets
 //! the compiler use the same ISA in the surrounding scalar code; the
 //! kernels here do not require it.
+//!
+//! ```
+//! use znni::simd::{self, Tier};
+//!
+//! let mut dst = vec![1.0f32; 9]; // odd length: exercises the tail loop
+//! let src = vec![2.0f32; 9];
+//! simd::axpy(&mut dst, &src, 0.5); // best tier for this CPU
+//! simd::axpy_with(Tier::Scalar, &mut dst, &src, 0.5); // forced tier
+//! assert!(dst.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+//! ```
 
 pub mod scalar;
 
@@ -53,6 +63,7 @@ pub enum Tier {
 }
 
 impl Tier {
+    /// Lower-case tier name (the `ZNNI_SIMD` values).
     pub fn name(self) -> &'static str {
         match self {
             Tier::Scalar => "scalar",
@@ -184,6 +195,7 @@ pub fn axpy(dst: &mut [f32], src: &[f32], k: f32) {
     axpy_tier(active(), dst, src, k);
 }
 
+/// [`axpy`] on an explicit tier (asserts it is supported).
 pub fn axpy_with(tier: Tier, dst: &mut [f32], src: &[f32], k: f32) {
     assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
     axpy_tier(tier, dst, src, k);
@@ -212,6 +224,7 @@ pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     add_assign_tier(active(), dst, src);
 }
 
+/// [`add_assign`] on an explicit tier (asserts it is supported).
 pub fn add_assign_with(tier: Tier, dst: &mut [f32], src: &[f32]) {
     assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
     add_assign_tier(tier, dst, src);
@@ -240,6 +253,7 @@ pub fn max_assign(dst: &mut [f32], src: &[f32]) {
     max_assign_tier(active(), dst, src);
 }
 
+/// [`max_assign`] on an explicit tier (asserts it is supported).
 pub fn max_assign_with(tier: Tier, dst: &mut [f32], src: &[f32]) {
     assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
     max_assign_tier(tier, dst, src);
@@ -270,6 +284,7 @@ pub fn mad_spectra(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     mad_spectra_tier(active(), acc, a, b);
 }
 
+/// [`mad_spectra`] on an explicit tier (asserts it is supported).
 pub fn mad_spectra_with(tier: Tier, acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
     mad_spectra_tier(tier, acc, a, b);
@@ -304,6 +319,7 @@ pub fn cmul(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     cmul_tier(active(), dst, a, b);
 }
 
+/// [`cmul`] on an explicit tier (asserts it is supported).
 pub fn cmul_with(tier: Tier, dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
     cmul_tier(tier, dst, a, b);
@@ -335,6 +351,7 @@ pub fn radix2_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: u
     radix2_combine_tier(active(), dst, m, tw, step, n);
 }
 
+/// [`radix2_combine`] on an explicit tier (asserts it is supported).
 pub fn radix2_combine_with(
     tier: Tier,
     dst: &mut [Complex32],
@@ -373,6 +390,7 @@ pub fn radix4_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: u
     radix4_combine_tier(active(), dst, m, tw, step, n);
 }
 
+/// [`radix4_combine`] on an explicit tier (asserts it is supported).
 pub fn radix4_combine_with(
     tier: Tier,
     dst: &mut [Complex32],

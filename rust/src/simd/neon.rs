@@ -16,6 +16,7 @@ use super::scalar;
 use core::arch::aarch64::*;
 
 #[target_feature(enable = "neon")]
+/// NEON `dst[i] += k * src[i]`.
 pub unsafe fn axpy_neon(dst: &mut [f32], src: &[f32], k: f32) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -31,6 +32,7 @@ pub unsafe fn axpy_neon(dst: &mut [f32], src: &[f32], k: f32) {
 }
 
 #[target_feature(enable = "neon")]
+/// NEON `dst[i] += src[i]`.
 pub unsafe fn add_assign_neon(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -44,6 +46,7 @@ pub unsafe fn add_assign_neon(dst: &mut [f32], src: &[f32]) {
 }
 
 #[target_feature(enable = "neon")]
+/// NEON `dst[i] = max(dst[i], src[i])`.
 pub unsafe fn max_assign_neon(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -57,6 +60,7 @@ pub unsafe fn max_assign_neon(dst: &mut [f32], src: &[f32]) {
 }
 
 #[target_feature(enable = "neon")]
+/// NEON complex `acc[i] += a[i] * b[i]` (vld2q split-complex).
 pub unsafe fn mad_spectra_neon(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     let n = acc.len();
     let ap = a.as_ptr() as *const f32;
@@ -79,6 +83,7 @@ pub unsafe fn mad_spectra_neon(acc: &mut [Complex32], a: &[Complex32], b: &[Comp
 }
 
 #[target_feature(enable = "neon")]
+/// NEON complex `dst[i] = a[i] * b[i]`.
 pub unsafe fn cmul_neon(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     let n = dst.len();
     let ap = a.as_ptr() as *const f32;

@@ -28,6 +28,7 @@ use core::arch::x86_64::*;
 
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
+/// AVX2+FMA `dst[i] += k * src[i]`.
 pub unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], k: f32) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -54,6 +55,7 @@ pub unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], k: f32) {
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] += k * src[i]`.
 pub unsafe fn axpy_sse2(dst: &mut [f32], src: &[f32], k: f32) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -69,6 +71,7 @@ pub unsafe fn axpy_sse2(dst: &mut [f32], src: &[f32], k: f32) {
 }
 
 #[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] += src[i]`.
 pub unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -83,6 +86,7 @@ pub unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] += src[i]`.
 pub unsafe fn add_assign_sse2(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -97,6 +101,7 @@ pub unsafe fn add_assign_sse2(dst: &mut [f32], src: &[f32]) {
 }
 
 #[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = max(dst[i], src[i])`.
 pub unsafe fn max_assign_avx2(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -111,6 +116,7 @@ pub unsafe fn max_assign_avx2(dst: &mut [f32], src: &[f32]) {
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] = max(dst[i], src[i])`.
 pub unsafe fn max_assign_sse2(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();
     let d = dst.as_mut_ptr();
@@ -176,6 +182,7 @@ unsafe fn mul_neg_i4(v: __m256) -> __m256 {
 
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
+/// AVX2+FMA complex `acc[i] += a[i] * b[i]` (split-complex tiles).
 pub unsafe fn mad_spectra_avx2(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     let n = acc.len();
     let ap = a.as_ptr() as *const f32;
@@ -202,6 +209,7 @@ pub unsafe fn mad_spectra_avx2(acc: &mut [Complex32], a: &[Complex32], b: &[Comp
 
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
+/// AVX2+FMA complex `dst[i] = a[i] * b[i]`.
 pub unsafe fn cmul_avx2_slices(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     let n = dst.len();
     let ap = a.as_ptr() as *const f32;
@@ -247,6 +255,7 @@ unsafe fn mul_neg_i2(v: __m128) -> __m128 {
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 complex `acc[i] += a[i] * b[i]`.
 pub unsafe fn mad_spectra_sse2(acc: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     let n = acc.len();
     let ap = a.as_ptr() as *const f32;
@@ -263,6 +272,7 @@ pub unsafe fn mad_spectra_sse2(acc: &mut [Complex32], a: &[Complex32], b: &[Comp
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 complex `dst[i] = a[i] * b[i]`.
 pub unsafe fn cmul_sse2_slices(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {
     let n = dst.len();
     let ap = a.as_ptr() as *const f32;
@@ -282,6 +292,7 @@ pub unsafe fn cmul_sse2_slices(dst: &mut [Complex32], a: &[Complex32], b: &[Comp
 
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
+/// AVX2 radix-2 butterfly combine.
 pub unsafe fn radix2_combine_avx2(
     dst: &mut [Complex32],
     m: usize,
@@ -317,6 +328,7 @@ pub unsafe fn radix2_combine_avx2(
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 radix-2 butterfly combine.
 pub unsafe fn radix2_combine_sse2(
     dst: &mut [Complex32],
     m: usize,
@@ -351,6 +363,7 @@ pub unsafe fn radix2_combine_sse2(
 
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
+/// AVX2 radix-4 butterfly combine.
 pub unsafe fn radix4_combine_avx2(
     dst: &mut [Complex32],
     m: usize,
@@ -407,6 +420,7 @@ pub unsafe fn radix4_combine_avx2(
 }
 
 #[target_feature(enable = "sse2")]
+/// SSE2 radix-4 butterfly combine.
 pub unsafe fn radix4_combine_sse2(
     dst: &mut [Complex32],
     m: usize,

@@ -26,18 +26,26 @@ use crate::util::ceil_div;
 /// One sub-layer: ranges into the batch and channel dimensions.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SubPiece {
+    /// Batch range start.
     pub s0: usize,
+    /// Batch range end (exclusive).
     pub s1: usize,
+    /// Input-map range start.
     pub i0: usize,
+    /// Input-map range end (exclusive).
     pub i1: usize,
+    /// Output-map range start.
     pub j0: usize,
+    /// Output-map range end (exclusive).
     pub j1: usize,
 }
 
 /// A decomposition of a conv layer into device-sized sub-layers.
 #[derive(Clone, Debug)]
 pub struct SubLayerPlan {
+    /// GPU algorithm every piece runs.
     pub algo: ConvAlgo,
+    /// Sub-layer pieces covering the full layer.
     pub pieces: Vec<SubPiece>,
     /// Estimated compute seconds (cost model, all pieces).
     pub est_compute_secs: f64,

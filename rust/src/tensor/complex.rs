@@ -7,15 +7,20 @@ use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub, SubAssign};
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 #[repr(C)]
 pub struct Complex32 {
+    /// Real part.
     pub re: f32,
+    /// Imaginary part.
     pub im: f32,
 }
 
 impl Complex32 {
+    /// 0 + 0i.
     pub const ZERO: Complex32 = Complex32 { re: 0.0, im: 0.0 };
+    /// 1 + 0i.
     pub const ONE: Complex32 = Complex32 { re: 1.0, im: 0.0 };
 
     #[inline(always)]
+    /// Complex number from parts.
     pub fn new(re: f32, im: f32) -> Self {
         Complex32 { re, im }
     }
@@ -27,21 +32,25 @@ impl Complex32 {
     }
 
     #[inline(always)]
+    /// Complex conjugate.
     pub fn conj(self) -> Self {
         Complex32 { re: self.re, im: -self.im }
     }
 
     #[inline(always)]
+    /// Squared magnitude.
     pub fn norm_sqr(self) -> f32 {
         self.re * self.re + self.im * self.im
     }
 
     #[inline(always)]
+    /// Magnitude.
     pub fn abs(self) -> f32 {
         self.norm_sqr().sqrt()
     }
 
     #[inline(always)]
+    /// Multiply both parts by a real scalar.
     pub fn scale(self, s: f32) -> Self {
         Complex32 { re: self.re * s, im: self.im * s }
     }
@@ -61,6 +70,7 @@ impl Complex32 {
     }
 
     #[inline(always)]
+    /// Multiply by -i without a full complex multiply.
     pub fn mul_neg_i(self) -> Self {
         Complex32 { re: self.im, im: -self.re }
     }

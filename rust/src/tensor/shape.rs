@@ -6,11 +6,17 @@ pub type Vec3 = [usize; 3];
 /// Element-wise ops on [`Vec3`] used by shape propagation (Table I).
 #[allow(dead_code)]
 pub trait Vec3Ext {
+    /// Product of the three extents.
     fn volume(&self) -> usize;
+    /// Element-wise sum.
     fn add(&self, o: Vec3) -> Vec3;
+    /// Element-wise difference.
     fn sub(&self, o: Vec3) -> Vec3;
+    /// Element-wise integer division.
     fn div(&self, o: Vec3) -> Vec3;
+    /// Element-wise product.
     fn mul(&self, o: Vec3) -> Vec3;
+    /// `[1, 1, 1]`.
     fn one() -> Vec3 {
         [1, 1, 1]
     }
@@ -44,18 +50,25 @@ impl Vec3Ext for Vec3 {
 /// Shape of a 5D tensor: batch `s`, feature maps `f`, spatial `x,y,z`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Shape5 {
+    /// Batch (S).
     pub s: usize,
+    /// Feature maps (f).
     pub f: usize,
+    /// Spatial extent x.
     pub x: usize,
+    /// Spatial extent y.
     pub y: usize,
+    /// Spatial extent z.
     pub z: usize,
 }
 
 impl Shape5 {
+    /// Shape from the five extents.
     pub fn new(s: usize, f: usize, x: usize, y: usize, z: usize) -> Self {
         Shape5 { s, f, x, y, z }
     }
 
+    /// Shape from batch, maps and a spatial [`Vec3`].
     pub fn from_spatial(s: usize, f: usize, n: Vec3) -> Self {
         Shape5 { s, f, x: n[0], y: n[1], z: n[2] }
     }
@@ -75,6 +88,7 @@ impl Shape5 {
         self.s * self.f * self.image_len()
     }
 
+    /// Whether any extent is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -53,14 +53,17 @@ impl Tensor5 {
         (me.shape, std::mem::take(&mut me.data))
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> Shape5 {
         self.shape
     }
 
+    /// Flat element slice (s-major, z-minor).
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
@@ -71,6 +74,7 @@ impl Tensor5 {
         &self.data[o..o + self.shape.image_len()]
     }
 
+    /// Mutable image (s, f) as a contiguous slice.
     pub fn image_mut(&mut self, s: usize, f: usize) -> &mut [f32] {
         let o = self.shape.image_offset(s, f);
         let l = self.shape.image_len();
@@ -78,11 +82,13 @@ impl Tensor5 {
     }
 
     #[inline(always)]
+    /// Element at (s, f, x, y, z).
     pub fn at(&self, s: usize, f: usize, x: usize, y: usize, z: usize) -> f32 {
         self.data[self.shape.idx(s, f, x, y, z)]
     }
 
     #[inline(always)]
+    /// Set the element at (s, f, x, y, z).
     pub fn set(&mut self, s: usize, f: usize, x: usize, y: usize, z: usize, v: f32) {
         let i = self.shape.idx(s, f, x, y, z);
         self.data[i] = v;
@@ -149,28 +155,34 @@ pub struct CTensor5 {
 }
 
 impl CTensor5 {
+    /// Zeroed complex tensor (ledger-registered).
     pub fn zeros(shape: Shape5) -> Self {
         memory::alloc(shape.bytes_c32());
         CTensor5 { shape, data: vec![Complex32::ZERO; shape.len()] }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> Shape5 {
         self.shape
     }
 
+    /// Flat element slice (s-major, z-minor).
     pub fn data(&self) -> &[Complex32] {
         &self.data
     }
 
+    /// Mutable flat element slice.
     pub fn data_mut(&mut self) -> &mut [Complex32] {
         &mut self.data
     }
 
+    /// Image (s, f) as a contiguous slice.
     pub fn image(&self, s: usize, f: usize) -> &[Complex32] {
         let o = self.shape.image_offset(s, f);
         &self.data[o..o + self.shape.image_len()]
     }
 
+    /// Mutable image (s, f) as a contiguous slice.
     pub fn image_mut(&mut self, s: usize, f: usize) -> &mut [Complex32] {
         let o = self.shape.image_offset(s, f);
         let l = self.shape.image_len();

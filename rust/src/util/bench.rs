@@ -9,13 +9,18 @@ use std::time::{Duration, Instant};
 /// Result of timing one benchmark case.
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {
+    /// Median of the timed runs.
     pub median: Duration,
+    /// Fastest timed run.
     pub min: Duration,
+    /// Mean of the timed runs.
     pub mean: Duration,
+    /// Number of timed runs.
     pub iters: usize,
 }
 
 impl Sample {
+    /// Median seconds.
     pub fn secs(&self) -> f64 {
         self.median.as_secs_f64()
     }
@@ -69,12 +74,16 @@ pub fn time_budget(budget: Duration, mut f: impl FnMut()) -> Sample {
 /// minutes on this testbed, `tiny` for CI smoke.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
+    /// CI smoke scale.
     Tiny,
+    /// Minutes-scale runs on this testbed (default).
     Small,
+    /// Close to the paper's sizes (slow).
     Paper,
 }
 
 impl Scale {
+    /// Read `ZNNI_SCALE` (tiny|small|paper; default small).
     pub fn from_env() -> Self {
         match std::env::var("ZNNI_SCALE").as_deref() {
             Ok("paper") => Scale::Paper,
@@ -91,15 +100,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Print with aligned columns.
     pub fn print(&self) {
         let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {

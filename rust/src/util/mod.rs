@@ -8,6 +8,7 @@
 //! (§IV.A.3).
 
 pub mod bench;
+pub mod json;
 pub mod magic;
 pub mod pool;
 pub mod prng;

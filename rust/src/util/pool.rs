@@ -26,7 +26,9 @@ use std::thread::JoinHandle;
 /// Logical machine topology: `chips` NUMA nodes × `cores_per_chip`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChipTopology {
+    /// NUMA chips.
     pub chips: usize,
+    /// Worker cores per chip.
     pub cores_per_chip: usize,
 }
 
@@ -66,8 +68,11 @@ type Job = Box<dyn FnOnce(&WorkerCtx) + Send + 'static>;
 /// Identity handed to every job: which worker slot is running it.
 #[derive(Clone, Copy, Debug)]
 pub struct WorkerCtx {
+    /// Pool-wide worker index.
     pub worker: usize,
+    /// Chip this worker is pinned to.
     pub chip: usize,
+    /// Whether this worker is a chip primary.
     pub primary: bool,
 }
 

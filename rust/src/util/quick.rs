@@ -10,6 +10,7 @@ use crate::util::prng::Rng;
 /// Per-case generator handed to properties.
 pub struct Gen {
     rng: Rng,
+    /// Index of the current case (0-based).
     pub case: usize,
 }
 
@@ -49,7 +50,9 @@ impl Gen {
 
 /// Configuration for a property run.
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed; case i derives its own from it.
     pub seed: u64,
 }
 

@@ -1,0 +1,183 @@
+//! Integration tests for the measured autotuner (ISSUE 4): calibration
+//! profile persistence, the serving-config search under measured vs
+//! default dispatch overheads, and EDF scheduling through the server's
+//! public API.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use znni::device::Device;
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::tiny_net;
+use znni::optimizer::{compile, make_weights, search, search_serving, CostModel, SearchSpace};
+use znni::server::{Server, ServerConfig, ServingLoad};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+}
+
+fn host(gb: u64) -> Device {
+    Device::host_with_ram(gb << 30)
+}
+
+#[test]
+fn calibration_profile_round_trips_through_a_file() {
+    let pool = tpool();
+    let cm = CostModel::calibrate_full(&pool, &[6, 8]);
+    let path = std::env::temp_dir().join(format!("znni-profile-test-{}.json", std::process::id()));
+    cm.save_profile(&path).expect("save profile");
+    let loaded = CostModel::load_profile(&path).expect("load profile");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.threads, cm.threads);
+    assert_eq!(loaded.pool_rate, cm.pool_rate);
+    assert_eq!(loaded.dispatch_overhead_secs, cm.dispatch_overhead_secs);
+    let h = host(1);
+    for algo in ConvAlgo::ALL {
+        assert_eq!(loaded.rate(algo, &h), cm.rate(algo, &h), "{algo:?}");
+    }
+}
+
+#[test]
+fn loading_a_missing_or_corrupt_profile_fails_cleanly() {
+    assert!(CostModel::load_profile("/nonexistent/znni-profile.json").is_err());
+    let path = std::env::temp_dir().join(format!("znni-profile-bad-{}.json", std::process::id()));
+    std::fs::write(&path, "{\"version\": 1}").unwrap();
+    assert!(CostModel::load_profile(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn search_serving_uses_the_model_dispatch_overhead() {
+    let net = tiny_net(2);
+    let space = SearchSpace::cpu_only(host(4), 15);
+    let load = ServingLoad { clients: 4, volume_extent: 20 };
+
+    // Default overhead: valid config.
+    let default_cm = CostModel::default_rates(4);
+    let (plan_d, cfg_d) = search_serving(&net, &space, &default_cm, &load).expect("default");
+    assert!(cfg_d.shards >= 1 && cfg_d.queue_depth >= 1 && cfg_d.max_batch_requests >= 1);
+
+    // A measured (here: injected) 5 ms overhead: still a valid config,
+    // and the batch-wait floor rises to the winning shard size's share
+    // of the measured overhead — waiting less than one dispatch cannot
+    // pay for itself.
+    let slow_dispatch = CostModel::default_rates(4).with_dispatch_overhead(5e-3);
+    let (plan_m, cfg_m) = search_serving(&net, &space, &slow_dispatch, &load).expect("measured");
+    assert_eq!(plan_d.input, plan_m.input, "overhead must not change the per-patch plan");
+    assert!(cfg_m.shards >= 1 && cfg_m.queue_depth >= 1);
+    let shard_workers = (4 / cfg_m.shards).max(1);
+    let floor = (5e-3 * shard_workers as f64 / 4.0).clamp(50e-6, 5e-3);
+    assert!(
+        cfg_m.max_batch_wait >= Duration::from_secs_f64(floor),
+        "batch wait {:?} must not be below the scaled dispatch overhead {floor}s",
+        cfg_m.max_batch_wait
+    );
+    assert!(
+        cfg_m.max_batch_wait >= cfg_d.max_batch_wait,
+        "a 25x larger measured overhead must not shrink the batch wait"
+    );
+}
+
+#[test]
+fn calibrated_model_searches_a_servable_config() {
+    // End-to-end: calibrate on this machine (tiny ladder), search the
+    // serving config with the measured model, start the server with it
+    // and serve one request.
+    let pool = Arc::new(tpool());
+    let cm = CostModel::calibrate_full(&pool, &[6, 8]);
+    assert!(cm.dispatch_overhead_secs > 0.0);
+    let net = tiny_net(2);
+    let space = SearchSpace::cpu_only(host(4), 15);
+    let load = ServingLoad { clients: 2, volume_extent: 18 };
+    let (plan, cfg) = search_serving(&net, &space, &cm, &load).expect("calibrated search");
+    let cp = compile(&net, &plan, &make_weights(&net, 3)).unwrap();
+    let server = Server::start(net, cp, cfg, pool).unwrap();
+    let resp = server
+        .submit(Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5))
+        .expect("admitted")
+        .wait()
+        .expect("served");
+    assert!(resp.output.data().iter().any(|&v| v != 0.0));
+}
+
+fn edf_server(queue_depth: usize) -> (Server, usize) {
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(2);
+    let mut space = SearchSpace::cpu_only(host(4), 15);
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).unwrap();
+    let cp = compile(&net, &plan, &make_weights(&net, 3)).unwrap();
+    let pool = Arc::new(tpool());
+    // One shard, one request per batch, no batch wait: dispatch order
+    // through the queue is exactly EDF order.
+    let cfg = ServerConfig {
+        shards: 1,
+        queue_depth,
+        max_batch_requests: 1,
+        max_batch_wait: Duration::ZERO,
+        ..ServerConfig::default()
+    };
+    let extent = plan.input.x;
+    (Server::start(net, cp, cfg, pool).unwrap(), extent)
+}
+
+#[test]
+fn near_deadline_request_dispatches_before_earlier_far_deadline_one() {
+    let (server, _) = edf_server(16);
+    let mk = |seed: u64, n: usize| Tensor5::random(Shape5::new(1, 1, n, n, n), seed);
+
+    // Occupy the single shard with a deadline-free request big enough
+    // that the two probes below are both queued while it computes.
+    let blocker = server.submit(mk(1, 26)).expect("blocker admitted");
+    // FIFO arrival order: far-deadline first, near-deadline second.
+    let far = server.submit_with_deadline(mk(2, 18), Some(Duration::from_secs(60))).unwrap();
+    let near = server.submit_with_deadline(mk(3, 18), Some(Duration::from_secs(10))).unwrap();
+
+    let finished: Arc<Mutex<Vec<(&'static str, Instant)>>> = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|s| {
+        for (label, ticket) in [("far", far), ("near", near)] {
+            let finished = finished.clone();
+            s.spawn(move || {
+                ticket.wait().expect("served in time");
+                finished.lock().unwrap().push((label, Instant::now()));
+            });
+        }
+        blocker.wait().expect("blocker served");
+    });
+    let order = finished.lock().unwrap();
+    let t = |label: &str| order.iter().find(|(l, _)| *l == label).map(|(_, t)| *t).unwrap();
+    assert!(
+        t("near") < t("far"),
+        "EDF must dispatch the near-deadline request first despite later arrival"
+    );
+    let m = server.metrics();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.deadline_misses(), 0, "both deadlines were generous: {}", m.report());
+}
+
+#[test]
+fn deadline_misses_increment_the_counter() {
+    let (server, _) = edf_server(16);
+    // A deadline the compute cannot possibly meet: either it expires in
+    // the queue (dropped at dispatch) or it completes late — both are
+    // misses and exactly one of the two counters advances.
+    let vol = Tensor5::random(Shape5::new(1, 1, 22, 22, 22), 9);
+    let ticket = server.submit_with_deadline(vol, Some(Duration::from_millis(2))).unwrap();
+    let result = ticket.wait();
+    let m = server.metrics();
+    assert_eq!(
+        m.deadline_misses(),
+        1,
+        "one miss expected (expired={} late={}), wait() -> {:?}",
+        m.expired,
+        m.completed_late,
+        result.as_ref().map(|r| r.id)
+    );
+    assert_eq!(m.expired + m.completed_late, m.deadline_misses());
+    match result {
+        Ok(_) => assert_eq!(m.completed_late, 1, "an answered request past deadline is late"),
+        Err(_) => assert_eq!(m.expired, 1, "a dropped request counts as expired"),
+    }
+}
