@@ -116,6 +116,7 @@ fn main() -> anyhow::Result<()> {
             .map(|l| match l {
                 znni::net::LayerSpec::Conv { .. } => znni::optimizer::PlanLayer::Conv {
                     algo: znni::memory::model::ConvAlgo::DirectMkl,
+                    cache_kernels: false,
                 },
                 znni::net::LayerSpec::Pool { .. } => znni::optimizer::PlanLayer::Pool {
                     mode: PoolingMode::MaxPool,
@@ -125,6 +126,7 @@ fn main() -> anyhow::Result<()> {
         shapes: wshapes,
         est_secs: 1.0,
         est_memory: 0,
+        kernel_cache_bytes: 0,
         out_voxels: 1,
     };
     let wcp = compile(&net, &wplan, &weights)?;

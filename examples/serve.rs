@@ -136,6 +136,17 @@ fn main() -> anyhow::Result<()> {
                 "steady-state: arena fresh allocs so far {fresh}, process arena hwm {}",
                 human_bytes(znni::memory::arena_hwm()),
             );
+            // The RAM the weight-spectrum cache is buying throughput
+            // with (0 when the plan chose to recompute or
+            // ZNNI_KERNEL_CACHE=off): one shared allocation across all
+            // shards, reported beside the per-worker arena footprint.
+            println!(
+                "footprint : kernel-spectra cache {} (plan budgeted {}), \
+                 per-worker Table II arena {}",
+                human_bytes(m.kernel_cache_bytes),
+                human_bytes(plan.kernel_cache_bytes),
+                human_bytes(plan.est_memory - plan.kernel_cache_bytes),
+            );
         }
     }
     Ok(())

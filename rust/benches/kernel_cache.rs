@@ -1,0 +1,118 @@
+//! Cached vs recomputed kernel spectra, warm-path patch time per FFT
+//! family (ISSUE 5).
+//!
+//! Runs one conv layer per FFT family (FFT-DP, FFT-TP, GPU-FFT) two
+//! ways through the *same* warm `ExecCtx`:
+//!
+//! * **recompute** — the pre-cache behaviour: every execute
+//!   forward-transforms all `f'·f` kernels again;
+//! * **cached** — the layer's [`znni::conv::precomp::PrecomputedKernels`]
+//!   is built once up front (as `CompiledPlan::warm_kernel_caches`
+//!   would) and every execute reads the resident spectra.
+//!
+//! Both paths are warmed before timing, so the numbers compare
+//! steady-state patch time — the regime the optimizer's
+//! `conv_secs_cached` models when it drops the kernel-transform FLOPs.
+//!
+//! Results go to stdout and `BENCH_kernel_cache.json` (default
+//! `../BENCH_kernel_cache.json`, i.e. the repository root when run via
+//! `cargo bench --bench kernel_cache`; override with `ZNNI_BENCH_OUT`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use znni::conv::precomp::{force_cache_mode, CacheMode};
+use znni::conv::{Activation, Weights};
+use znni::exec::ExecCtx;
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::ConvAlgo;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::{time_budget, Scale, Table};
+use znni::util::json::Json;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    let scale = Scale::from_env();
+    let (n, f) = match scale {
+        Scale::Paper => (48usize, 16usize),
+        Scale::Small => (20, 8),
+        Scale::Tiny => (10, 4),
+    };
+    let budget = match scale {
+        Scale::Paper => Duration::from_millis(1500),
+        Scale::Small => Duration::from_millis(600),
+        Scale::Tiny => Duration::from_millis(250),
+    };
+    // The bench *is* the cache measurement — pin the mode so an
+    // inherited ZNNI_KERNEL_CACHE=off cannot silently turn the cached
+    // column into a second recompute column.
+    force_cache_mode(Some(CacheMode::Force));
+    let sh = Shape5::new(1, f, n, n, n);
+    println!("== Kernel-spectra cache: {n}³ patches, f=f'={f}, k=3³ ==");
+
+    let mut table = Table::new(&["family", "recompute ms", "cached ms", "speedup", "cache bytes"]);
+    let mut doc: Vec<(String, Json)> = vec![
+        ("scale".into(), Json::Str(format!("{scale:?}"))),
+        ("extent".into(), Json::Num(n as f64)),
+        ("maps".into(), Json::Num(f as f64)),
+        ("workers".into(), Json::Num(pool.workers() as f64)),
+    ];
+    for algo in [ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel, ConvAlgo::GpuFft] {
+        let w = Arc::new(Weights::random(f, f, [3, 3, 3], 0xCACE));
+        let plain = ConvLayer::new(w.clone(), algo, Activation::Relu);
+        let cached = ConvLayer::new(w, algo, Activation::Relu).with_kernel_cache(true);
+        cached.warm(sh, pool); // build spectra outside the timed region
+
+        let mut ctx = ExecCtx::new(pool);
+        // Warm the arena + FFT plan cache on both paths before timing.
+        for layer in [&plain, &cached] {
+            let out = layer.execute(Tensor5::random(sh, 1), &mut ctx);
+            ctx.retire(out);
+        }
+        // The input is generated once; each timed iteration only copies
+        // it into an arena-recycled tensor (execute consumes its
+        // input), so RNG cost does not dilute the cached-vs-recompute
+        // ratio — the columns compare conv time, not input synthesis.
+        let base = Tensor5::random(sh, 3);
+        let mut run = |layer: &ConvLayer| {
+            time_budget(budget, || {
+                let mut t = ctx.tensor5(sh);
+                t.data_mut().copy_from_slice(base.data());
+                let out = layer.execute(t, &mut ctx);
+                ctx.retire(out);
+            })
+        };
+        let recompute = run(&plain);
+        let cached_t = run(&cached);
+
+        let (r_ms, c_ms) = (recompute.secs() * 1e3, cached_t.secs() * 1e3);
+        let speedup = r_ms / c_ms.max(1e-9);
+        let bytes = cached.kernel_cache_bytes();
+        table.row(vec![
+            algo.name().to_string(),
+            format!("{r_ms:.3}"),
+            format!("{c_ms:.3}"),
+            format!("{speedup:.2}×"),
+            znni::util::human_bytes(bytes),
+        ]);
+        doc.push((
+            algo.tag().to_string(),
+            Json::Object(vec![
+                ("recompute_secs".into(), Json::Num(recompute.secs())),
+                ("cached_secs".into(), Json::Num(cached_t.secs())),
+                ("speedup".into(), Json::Num(speedup)),
+                ("cache_bytes".into(), Json::Num(bytes as f64)),
+            ]),
+        ));
+    }
+    table.print();
+    force_cache_mode(None);
+
+    let path =
+        std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_kernel_cache.json".into());
+    match std::fs::write(&path, Json::Object(doc).to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -307,12 +307,12 @@ pub fn run_cpu_gpu(
             LayerSpec::Conv { .. } => {
                 let algo = if li < theta {
                     match cpu_plan.layers[li] {
-                        PlanLayer::Conv { algo } => algo,
+                        PlanLayer::Conv { algo, .. } => algo,
                         _ => ConvAlgo::FftTaskParallel,
                     }
                 } else {
                     match gpu_plan.as_ref().map(|p| &p.layers[li]) {
-                        Some(PlanLayer::Conv { algo }) => *algo,
+                        Some(PlanLayer::Conv { algo, .. }) => *algo,
                         _ => ConvAlgo::GpuFft,
                     }
                 };

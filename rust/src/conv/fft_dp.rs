@@ -22,19 +22,40 @@ use crate::fft::fft3d::Fft3;
 use crate::fft::fft_optimal_vec3;
 use crate::tensor::{Complex32, Shape5, Tensor5};
 
+use super::precomp::{PrecomputedKernels, SpectraLayout};
 use super::{conv_out_shape, Activation, Weights};
+
+/// FFT-based convolutional layer, data-parallel variant, transforming
+/// every kernel on the fly. See [`conv_fft_dp_with`] for the
+/// cached-spectra entry point.
+pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    conv_fft_dp_with(input, w, act, ctx, None)
+}
 
 /// FFT-based convolutional layer, data-parallel variant.
 ///
 /// Consumes `input` (Algorithm 2 frees I after the forward transforms —
 /// here its backing store is retired into the arena at that point).
-pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+/// When `kernels` holds a [`PrecomputedKernels`] built for this layer's
+/// padded FFT shape, stage 2 reads the cached `w̃(j,i)` spectra instead
+/// of re-transforming each kernel per output map — bit-identical output
+/// (the cache was built with the same transform path), minus
+/// `f'·f` pruned kernel FFTs per call. A mismatched cache (different
+/// padded shape) silently falls back to on-the-fly transforms.
+pub fn conv_fft_dp_with(
+    input: Tensor5,
+    w: &Weights,
+    act: Activation,
+    ctx: &mut ExecCtx<'_>,
+    kernels: Option<&PrecomputedKernels>,
+) -> Tensor5 {
     let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let n = ish.spatial();
     let padded = fft_optimal_vec3(n);
+    let kernels = kernels.filter(|c| c.matches(SpectraLayout::Cpu, padded, w.f_out, w.f_in));
     let plan = ctx.fft3(padded);
     let zc = plan.zc();
     let spec_len = plan.complex_len();
@@ -54,21 +75,29 @@ pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecC
     ctx.retire(input);
 
     // Stage 2 — for each output map: transform its kernels one at a
-    // time (w̃ is a single spectrum buffer), multiply-add into the
-    // per-batch accumulator Õ, then inverse-transform into O.
+    // time (w̃ is a single spectrum buffer) — or read the precomputed
+    // spectrum when the cache is live — multiply-add into the per-batch
+    // accumulator Õ, then inverse-transform into O.
     let mut out = ctx.tensor5(osh);
     let mut otrans = ctx.take_c32_raw(ish.s * spec_len);
-    let mut wtrans = ctx.take_c32_raw(spec_len);
+    // The w̃ scratch is only needed on the recompute path.
+    let mut wtrans = if kernels.is_none() { ctx.take_c32_raw(spec_len) } else { Vec::new() };
     let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
     let crop = [osh.x, osh.y, osh.z];
     for j in 0..w.f_out {
         otrans.fill(Complex32::ZERO);
         for i in 0..w.f_in {
-            plan.forward_par(w.kernel(j, i), w.k, &mut wtrans, pool);
+            let wspec: &[Complex32] = match kernels {
+                Some(c) => c.spectrum(j, i),
+                None => {
+                    plan.forward_par(w.kernel(j, i), w.k, &mut wtrans, pool);
+                    &wtrans
+                }
+            };
             for s in 0..ish.s {
                 let acc = &mut otrans[s * spec_len..(s + 1) * spec_len];
                 let ioff = csh.image_offset(s, i);
-                Fft3::mad_spectra_par(acc, &itrans[ioff..ioff + spec_len], &wtrans, pool);
+                Fft3::mad_spectra_par(acc, &itrans[ioff..ioff + spec_len], wspec, pool);
             }
         }
         let b = w.bias(j);

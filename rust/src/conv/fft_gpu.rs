@@ -18,14 +18,35 @@ use crate::fft::fft_optimal_vec3;
 use crate::tensor::{Complex32, Tensor5};
 use crate::util::sendptr::SendPtr;
 
+use super::precomp::{PrecomputedKernels, SpectraLayout};
 use super::{conv_out_shape, Activation, Weights};
 
-/// FFT-based convolutional layer, GPU scheme. Consumes `input`.
+/// FFT-based convolutional layer, GPU scheme, transforming every kernel
+/// batch on the fly. See [`conv_fft_gpu_with`] for the cached-spectra
+/// entry point.
 pub fn conv_fft_gpu(
     input: Tensor5,
     w: &Weights,
     act: Activation,
     ctx: &mut ExecCtx<'_>,
+) -> Tensor5 {
+    conv_fft_gpu_with(input, w, act, ctx, None)
+}
+
+/// FFT-based convolutional layer, GPU scheme. Consumes `input`.
+///
+/// When `kernels` holds a [`PrecomputedKernels`] in the batched (GPU)
+/// layout for this layer's padded FFT shape, stage 2's per-output-map
+/// kernel transforms are skipped: PARALLEL-MULT reads the cached `w̃`
+/// slab directly and the `w̃`/permute scratches are never taken. Output
+/// is bit-identical to the recompute path; a mismatched cache silently
+/// falls back.
+pub fn conv_fft_gpu_with(
+    input: Tensor5,
+    w: &Weights,
+    act: Activation,
+    ctx: &mut ExecCtx<'_>,
+    kernels: Option<&PrecomputedKernels>,
 ) -> Tensor5 {
     let pool = ctx.pool();
     let ish = input.shape();
@@ -33,6 +54,7 @@ pub fn conv_fft_gpu(
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let n = ish.spatial();
     let padded = fft_optimal_vec3(n);
+    let kernels = kernels.filter(|c| c.matches(SpectraLayout::Gpu, padded, w.f_out, w.f_in));
     let plan_img = ctx.batched_fft3(n, padded);
     let plan_ker = ctx.batched_fft3(w.k, padded);
     let spec = plan_img.spectrum_len();
@@ -63,25 +85,39 @@ pub fn conv_fft_gpu(
     }
     ctx.retire(input);
 
-    // Stage 2 — per output map: batched kernel transform, point-wise
-    // products into the scratch s̃, accumulate over input maps.
+    // Stage 2 — per output map: batched kernel transform (or the cached
+    // w̃ slab), point-wise products into the scratch s̃, accumulate over
+    // input maps.
     let mut otrans = ctx.take_c32_raw(s_n * f_out * spec);
     {
-        let mut wtrans = ctx.take_c32_raw(f_in * spec);
+        // w̃ and its permute scratches are only needed when the spectra
+        // are recomputed per call.
+        let (mut wtrans, mut k1, mut k2) = if kernels.is_none() {
+            (
+                ctx.take_c32_raw(f_in * spec),
+                ctx.take_c32_raw(plan_ker.forward_scratch1_len(f_in)),
+                ctx.take_c32_raw(plan_ker.forward_scratch2_len(f_in)),
+            )
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
         let mut prod = ctx.take_c32_raw(f_in * spec);
-        let mut k1 = ctx.take_c32_raw(plan_ker.forward_scratch1_len(f_in));
-        let mut k2 = ctx.take_c32_raw(plan_ker.forward_scratch2_len(f_in));
         let klen = w.klen();
         for j in 0..f_out {
-            let kbatch = &w.raw()[j * f_in * klen..(j + 1) * f_in * klen];
-            plan_ker.forward_scratch(f_in, kbatch, &mut wtrans, &mut k1, &mut k2, pool);
+            let wt: &[Complex32] = match kernels {
+                Some(c) => c.batch(j),
+                None => {
+                    let kbatch = &w.raw()[j * f_in * klen..(j + 1) * f_in * klen];
+                    plan_ker.forward_scratch(f_in, kbatch, &mut wtrans, &mut k1, &mut k2, pool);
+                    &wtrans
+                }
+            };
             for s in 0..s_n {
                 let ibase = s * f_in * spec;
                 // PARALLEL-MULT: s̃[i][e] = Ĩ[s,i][e] · w̃[i][e]
                 {
                     let pp = SendPtr(prod.as_mut_ptr());
                     let it = &itrans;
-                    let wt = &wtrans;
                     let total = f_in * spec;
                     let chunks = (pool.workers() * 4).min(total.max(1));
                     let per = total.div_ceil(chunks);

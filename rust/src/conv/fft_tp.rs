@@ -37,17 +37,40 @@ use crate::fft::fft_optimal_vec3;
 use crate::tensor::{Complex32, Shape5, Tensor5};
 use crate::util::sendptr::SendPtr;
 
+use super::precomp::{PrecomputedKernels, SpectraLayout};
 use super::{conv_out_shape, Activation, Weights};
+
+/// FFT-based convolutional layer, task-parallel variant, transforming
+/// every kernel on the fly. See [`conv_fft_tp_with`] for the
+/// cached-spectra entry point.
+pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+    conv_fft_tp_with(input, w, act, ctx, None)
+}
 
 /// FFT-based convolutional layer, task-parallel variant. Consumes
 /// `input` (the second sync task retires it into the arena).
-pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+///
+/// When `kernels` holds a [`PrecomputedKernels`] built for this layer's
+/// padded FFT shape, stage 2 skips the primary-worker kernel transforms
+/// entirely: the per-chip `T·ñ` buffers are never taken and the MAD
+/// tasks read the cached `w̃(j,i)` spectra directly. The wave structure
+/// (and therefore the per-`Õ[s,j]` accumulation order) is unchanged, so
+/// the output is bit-identical to the on-the-fly path. A mismatched
+/// cache silently falls back to recomputation.
+pub fn conv_fft_tp_with(
+    input: Tensor5,
+    w: &Weights,
+    act: Activation,
+    ctx: &mut ExecCtx<'_>,
+    kernels: Option<&PrecomputedKernels>,
+) -> Tensor5 {
     let pool = ctx.pool();
     let ish = input.shape();
     assert_eq!(ish.f, w.f_in, "channel mismatch");
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let n = ish.spatial();
     let padded = fft_optimal_vec3(n);
+    let kernels = kernels.filter(|c| c.matches(SpectraLayout::Cpu, padded, w.f_out, w.f_in));
     let plan = ctx.fft3(padded);
     let spec_len = plan.complex_len();
     let chips = pool.topology().chips;
@@ -81,13 +104,21 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecC
     // ---- Stage 2: kernel transforms (primary-only) + MADs (chip) ----
     {
         // One spectrum buffer per chip — the primary-thread temporaries.
-        let mut bufs: Vec<Vec<Complex32>> =
-            (0..chips).map(|_| ctx.take_c32_raw(spec_len)).collect();
+        // With a live kernel cache the transforms are skipped and the
+        // buffers never taken (the Table II `T·ñ` term disappears).
+        let mut bufs: Vec<Vec<Complex32>> = if kernels.is_none() {
+            (0..chips).map(|_| ctx.take_c32_raw(spec_len)).collect()
+        } else {
+            Vec::new()
+        };
         let total_pairs = w.f_out * w.f_in;
         let col_blocks = w.f_out.div_ceil(chips);
         let itp = SendPtr(itrans.as_mut_ptr());
         let otp = SendPtr(otrans.as_mut_ptr());
-        // Waves over (input row i, column block jb).
+        // Waves over (input row i, column block jb). The wave order —
+        // and with it the accumulation order into each Õ[s,j] — is the
+        // same on the cached and recompute paths, keeping them
+        // bit-identical.
         for i in 0..w.f_in {
             for jb in 0..col_blocks {
                 // Which (chip, j) pairs are active this wave.
@@ -95,8 +126,9 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecC
                     .map(|c| (c, jb * chips + c))
                     .filter(|&(_, j)| j < w.f_out)
                     .collect();
-                // Kernel transforms: primary workers, one per chip.
-                {
+                // Kernel transforms: primary workers, one per chip —
+                // skipped entirely when the spectra are precomputed.
+                if kernels.is_none() {
                     let bufp: Vec<SendPtr<Complex32>> =
                         bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
                     // One cached plan serves both image and kernel
@@ -114,18 +146,22 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecC
                         }
                     });
                 }
-                // Multiply-add tasks: same chip as their kernel's primary.
+                // Multiply-add tasks: same chip as their kernel's primary
+                // (cache hit: same chip the transform would have run on).
                 {
                     let bufp: Vec<SendPtr<Complex32>> =
                         bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
                     pool.scope(|sc| {
                         for &(c, j) in &active {
                             for s in 0..ish.s {
-                                let bp = bufp[c];
+                                let wbuf: &[Complex32] = match kernels {
+                                    Some(cache) => cache.spectrum(j, i),
+                                    None => unsafe {
+                                        std::slice::from_raw_parts(bufp[c].get(), spec_len)
+                                    },
+                                };
                                 let prio = (total_pairs - (j * w.f_in + i)) as i64;
                                 sc.submit_chip(c, prio, move |_| {
-                                    let wbuf =
-                                        unsafe { std::slice::from_raw_parts(bp.get(), spec_len) };
                                     let acc = unsafe {
                                         otp.slice_mut(otsh.image_offset(s, j), spec_len)
                                     };

@@ -10,6 +10,7 @@ pub mod direct;
 pub mod fft_dp;
 pub mod fft_gpu;
 pub mod fft_tp;
+pub mod precomp;
 
 use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::prng::Rng;

@@ -1,0 +1,387 @@
+//! Precomputed kernel spectra — amortize weight FFTs across every
+//! patch, request, and shard.
+//!
+//! At inference the weights never change, yet the FFT-conv primitives
+//! historically re-transformed every kernel `w(j,i)` on every `execute`
+//! call — per output map per patch in `fft_dp`, per kernel wave in
+//! `fft_tp`, per output map in `fft_gpu`. The training-oriented ZNN
+//! ancestor (Zlateski et al. 2015) had to pay that cost because weights
+//! update every iteration; inference does not, and inference-specialized
+//! systems like PZnet (Popovych et al. 2019) eliminate it by
+//! compile-time specialization.
+//!
+//! [`PrecomputedKernels`] is that specialization as a *planned, budgeted*
+//! memory row: all `f'·f` kernel spectra of one layer, transformed once
+//! (keyed by the plan's padded FFT shape) and shared through an `Arc`
+//! across coordinator workers and server shards. Spectra cost
+//! `f'·f·complex_len` complex words of RAM — exactly the paper's central
+//! currency — so whether a layer caches is a decision the optimizer
+//! searches ([`crate::optimizer::search`] weighs the spectra row against
+//! spending the same bytes on a larger input image; see
+//! [`crate::memory::model::kernel_spectra_bytes`]). The bytes are
+//! registered with the process ledger and the
+//! [`crate::memory::kernel_cache_bytes`] gauge, never drawn from the
+//! execution arena: the cache outlives every [`crate::exec::ExecCtx`]
+//! that consumes it.
+//!
+//! Bit-identity contract: the cache builder runs the *same* transform
+//! code path the on-the-fly fallback uses (`Fft3::forward` line
+//! transforms for the CPU primitives — `forward` and `forward_par` pair
+//! lines identically — and `BatchedFft3::forward_scratch` for the GPU
+//! scheme, which is deterministic per element regardless of the pool),
+//! so cached and recomputed executions produce identical outputs down to
+//! the last bit under any fixed SIMD tier.
+//!
+//! The `ZNNI_KERNEL_CACHE` environment variable (`off | auto | on`,
+//! read once) gates the whole subsystem; [`force_cache_mode`] overrides
+//! it programmatically for tests and benches.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::fft::fft3d::Fft3Scratch;
+use crate::memory;
+use crate::memory::model::ConvAlgo;
+use crate::tensor::{Complex32, Vec3};
+use crate::util::pool::TaskPool;
+use crate::util::sendptr::SendPtr;
+
+use super::Weights;
+
+/// Which spectrum layout a cache holds — the two FFT plan families store
+/// transformed kernels differently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpectraLayout {
+    /// [`crate::fft::Fft3`] layout (`[x][y][zc]`, one spectrum per
+    /// kernel) — consumed by `fft_dp` and `fft_tp`.
+    Cpu,
+    /// [`crate::fft::batched::BatchedFft3`] transformed representation
+    /// (`[zc][y'][x']`, one batch of `f` spectra per output map) —
+    /// consumed by `fft_gpu`'s PARALLEL-MULT.
+    Gpu,
+}
+
+impl SpectraLayout {
+    /// The layout the given algorithm consumes, or `None` if the
+    /// algorithm performs no kernel transforms (direct / dense conv).
+    pub fn for_algo(algo: ConvAlgo) -> Option<SpectraLayout> {
+        match algo {
+            ConvAlgo::FftDataParallel | ConvAlgo::FftTaskParallel => Some(SpectraLayout::Cpu),
+            ConvAlgo::GpuFft => Some(SpectraLayout::Gpu),
+            _ => None,
+        }
+    }
+}
+
+/// All `f'·f` kernel spectra of one convolutional layer, transformed
+/// once for a fixed padded FFT shape. Immutable after construction, so
+/// one `Arc<PrecomputedKernels>` is safely shared by every worker of
+/// every shard.
+pub struct PrecomputedKernels {
+    layout: SpectraLayout,
+    padded: Vec3,
+    f_out: usize,
+    f_in: usize,
+    /// Complex elements per kernel spectrum (both layouts:
+    /// `x̃·ỹ·(z̃/2+1)`).
+    spec_len: usize,
+    data: Vec<Complex32>,
+    bytes: u64,
+}
+
+impl PrecomputedKernels {
+    /// Transform every kernel of `w` for FFTs padded to `padded`.
+    ///
+    /// CPU layout: each kernel is forward-transformed with the shared
+    /// [`crate::exec::fft3_plan`] (the same plan — hence the same
+    /// twiddle tables and line pairing — the on-the-fly paths use),
+    /// fanned out over the pool. GPU layout: each output map's kernel
+    /// batch goes through the shared kernel-pruned
+    /// [`crate::exec::batched_fft3_plan`], exactly as `fft_gpu` stage 2
+    /// would. The spectra bytes are registered with the ledger and the
+    /// [`crate::memory::kernel_cache_bytes`] gauge until drop.
+    pub fn build(w: &Weights, layout: SpectraLayout, padded: Vec3, pool: &TaskPool) -> Self {
+        match layout {
+            SpectraLayout::Cpu => Self::build_cpu(w, padded, pool),
+            SpectraLayout::Gpu => Self::build_gpu(w, padded, pool),
+        }
+    }
+
+    fn register(spec_len: usize, f_out: usize, f_in: usize) -> (Vec<Complex32>, u64) {
+        let elems = f_out * f_in * spec_len;
+        let bytes = (elems * std::mem::size_of::<Complex32>()) as u64;
+        memory::alloc(bytes);
+        memory::kernel_cache_gauge(bytes as i64);
+        (vec![Complex32::ZERO; elems], bytes)
+    }
+
+    fn build_cpu(w: &Weights, padded: Vec3, pool: &TaskPool) -> Self {
+        let plan = crate::exec::fft3_plan(padded);
+        let spec_len = plan.complex_len();
+        let (mut data, bytes) = Self::register(spec_len, w.f_out, w.f_in);
+        {
+            let dp = SendPtr(data.as_mut_ptr());
+            let plan = &*plan;
+            pool.scope(|sc| {
+                for j in 0..w.f_out {
+                    for i in 0..w.f_in {
+                        let off = (j * w.f_in + i) * spec_len;
+                        sc.submit(move |_| {
+                            let dst = unsafe { dp.slice_mut(off, spec_len) };
+                            let mut tls = Fft3Scratch::new();
+                            plan.forward(w.kernel(j, i), w.k, dst, &mut tls);
+                        });
+                    }
+                }
+            });
+        }
+        PrecomputedKernels {
+            layout: SpectraLayout::Cpu,
+            padded,
+            f_out: w.f_out,
+            f_in: w.f_in,
+            spec_len,
+            data,
+            bytes,
+        }
+    }
+
+    fn build_gpu(w: &Weights, padded: Vec3, pool: &TaskPool) -> Self {
+        let plan_ker = crate::exec::batched_fft3_plan(w.k, padded);
+        let spec = plan_ker.spectrum_len();
+        let (mut data, bytes) = Self::register(spec, w.f_out, w.f_in);
+        // One-off build scratches (not arena buffers: this runs at plan
+        // build time, not on the hot path).
+        let mut s1 = vec![Complex32::ZERO; plan_ker.forward_scratch1_len(w.f_in)];
+        let mut s2 = vec![Complex32::ZERO; plan_ker.forward_scratch2_len(w.f_in)];
+        let klen = w.klen();
+        for j in 0..w.f_out {
+            let kbatch = &w.raw()[j * w.f_in * klen..(j + 1) * w.f_in * klen];
+            let out = &mut data[j * w.f_in * spec..(j + 1) * w.f_in * spec];
+            plan_ker.forward_scratch(w.f_in, kbatch, out, &mut s1, &mut s2, pool);
+        }
+        PrecomputedKernels {
+            layout: SpectraLayout::Gpu,
+            padded,
+            f_out: w.f_out,
+            f_in: w.f_in,
+            spec_len: spec,
+            data,
+            bytes,
+        }
+    }
+
+    /// Whether this cache serves the given layout, padded FFT shape and
+    /// layer geometry. A primitive executed at a shape other than the
+    /// one the cache was built for falls back to on-the-fly transforms.
+    pub fn matches(&self, layout: SpectraLayout, padded: Vec3, f_out: usize, f_in: usize) -> bool {
+        self.layout == layout && self.padded == padded && self.f_out == f_out && self.f_in == f_in
+    }
+
+    /// The spectrum of kernel `w(j, i)` (CPU layout only).
+    pub fn spectrum(&self, j: usize, i: usize) -> &[Complex32] {
+        debug_assert_eq!(self.layout, SpectraLayout::Cpu);
+        let off = (j * self.f_in + i) * self.spec_len;
+        &self.data[off..off + self.spec_len]
+    }
+
+    /// The batched spectra of all `f` kernels of output map `j` (GPU
+    /// layout only) — the `w̃` slab `fft_gpu`'s PARALLEL-MULT consumes.
+    pub fn batch(&self, j: usize) -> &[Complex32] {
+        debug_assert_eq!(self.layout, SpectraLayout::Gpu);
+        let off = j * self.f_in * self.spec_len;
+        &self.data[off..off + self.f_in * self.spec_len]
+    }
+
+    /// Resident bytes of this cache (what the optimizer budgeted).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Padded FFT shape the spectra were transformed at.
+    pub fn padded(&self) -> Vec3 {
+        self.padded
+    }
+
+    /// The layout this cache stores.
+    pub fn layout(&self) -> SpectraLayout {
+        self.layout
+    }
+}
+
+impl Drop for PrecomputedKernels {
+    fn drop(&mut self) {
+        memory::free(self.bytes);
+        memory::kernel_cache_gauge(-(self.bytes as i64));
+    }
+}
+
+/// Whether the kernel-spectra cache may be used, and who decides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CacheMode {
+    /// Never cache — every execute re-transforms kernels (the pre-cache
+    /// behaviour; also the runtime kill switch).
+    Off = 1,
+    /// The cost model decides per layer under the memory budget (the
+    /// default). With the analytic model a cached layer is always at
+    /// least as fast as recomputation, so today `auto` caches exactly
+    /// like [`CacheMode::Force`] wherever the budget admits — the modes
+    /// differ in *contract*, not (currently) in outcome: `auto` defers
+    /// to whatever the model says, and would stop caching if a future
+    /// measured model ever charged the cache more than it saves.
+    Auto = 2,
+    /// Cache every FFT layer the memory budget admits, unconditionally
+    /// — a pledge independent of the cost model (the recompute
+    /// candidate is not even considered).
+    Force = 3,
+}
+
+impl CacheMode {
+    /// Parse a `ZNNI_KERNEL_CACHE` value.
+    pub fn parse(s: &str) -> Option<CacheMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "never" => Some(CacheMode::Off),
+            "auto" => Some(CacheMode::Auto),
+            "on" | "1" | "force" | "always" => Some(CacheMode::Force),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<CacheMode> {
+        match v {
+            1 => Some(CacheMode::Off),
+            2 => Some(CacheMode::Auto),
+            3 => Some(CacheMode::Force),
+            _ => None,
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+static FORCED_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+static RESOLVED_MODE: OnceLock<CacheMode> = OnceLock::new();
+
+/// The cache mode in effect: the [`force_cache_mode`]d mode if set, else
+/// `ZNNI_KERNEL_CACHE` (read once), else [`CacheMode::Auto`].
+pub fn cache_mode() -> CacheMode {
+    match CacheMode::from_u8(FORCED_MODE.load(Ordering::Relaxed)) {
+        Some(m) => m,
+        None => *RESOLVED_MODE.get_or_init(|| {
+            match std::env::var("ZNNI_KERNEL_CACHE") {
+                Ok(v) if !v.trim().is_empty() => match CacheMode::parse(&v) {
+                    Some(m) => m,
+                    None => {
+                        eprintln!("znni: unknown ZNNI_KERNEL_CACHE value {v:?}, using auto");
+                        CacheMode::Auto
+                    }
+                },
+                _ => CacheMode::Auto,
+            }
+        }),
+    }
+}
+
+/// Force the cache mode for every subsequent decision (tests and the
+/// cached-vs-recompute benches), or restore env/default resolution with
+/// `None`.
+pub fn force_cache_mode(mode: Option<CacheMode>) {
+    match mode {
+        Some(m) => FORCED_MODE.store(m as u8, Ordering::Relaxed),
+        None => FORCED_MODE.store(MODE_UNSET, Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fft_optimal_vec3;
+    use crate::util::pool::{ChipTopology, TaskPool};
+
+    fn tpool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn cpu_cache_matches_direct_transform() {
+        let pool = tpool();
+        let w = Weights::random(3, 2, [3, 2, 3], 77);
+        let padded = fft_optimal_vec3([8, 7, 9]);
+        let cache = PrecomputedKernels::build(&w, SpectraLayout::Cpu, padded, &pool);
+        assert!(cache.matches(SpectraLayout::Cpu, padded, 3, 2));
+        assert!(!cache.matches(SpectraLayout::Cpu, [4, 4, 4], 3, 2));
+        assert!(!cache.matches(SpectraLayout::Gpu, padded, 3, 2));
+        let plan = crate::exec::fft3_plan(padded);
+        let mut sc = Fft3Scratch::new();
+        let mut expect = vec![Complex32::ZERO; plan.complex_len()];
+        for j in 0..3 {
+            for i in 0..2 {
+                plan.forward(w.kernel(j, i), w.k, &mut expect, &mut sc);
+                let got = cache.spectrum(j, i);
+                assert_eq!(got.len(), expect.len());
+                for (g, e) in got.iter().zip(&expect) {
+                    assert_eq!((g.re, g.im), (e.re, e.im), "spectrum ({j},{i}) bit-identical");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_cache_matches_batched_transform() {
+        let pool = tpool();
+        let w = Weights::random(2, 3, [2, 2, 2], 78);
+        let padded = fft_optimal_vec3([6, 6, 6]);
+        let cache = PrecomputedKernels::build(&w, SpectraLayout::Gpu, padded, &pool);
+        let plan_ker = crate::exec::batched_fft3_plan(w.k, padded);
+        let spec = plan_ker.spectrum_len();
+        let mut expect = vec![Complex32::ZERO; 3 * spec];
+        let mut s1 = vec![Complex32::ZERO; plan_ker.forward_scratch1_len(3)];
+        let mut s2 = vec![Complex32::ZERO; plan_ker.forward_scratch2_len(3)];
+        let klen = w.klen();
+        for j in 0..2 {
+            let kbatch = &w.raw()[j * 3 * klen..(j + 1) * 3 * klen];
+            plan_ker.forward_scratch(3, kbatch, &mut expect, &mut s1, &mut s2, &pool);
+            let got = cache.batch(j);
+            for (g, e) in got.iter().zip(&expect) {
+                assert_eq!((g.re, g.im), (e.re, e.im), "batch {j} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_bytes_register_with_ledger_and_gauge() {
+        let pool = tpool();
+        let w = Weights::random(2, 2, [3, 3, 3], 79);
+        let padded = [4, 4, 4];
+        let cache = PrecomputedKernels::build(&w, SpectraLayout::Cpu, padded, &pool);
+        // 2·2 spectra of 4·4·3 complex bins, 8 bytes each.
+        assert_eq!(cache.bytes(), 2 * 2 * (4 * 4 * 3 * 8) as u64);
+        // The gauge is global (other tests build and drop caches
+        // concurrently), but it sums *live* caches — so while ours is
+        // alive it is a lower bound.
+        assert!(memory::kernel_cache_bytes() >= cache.bytes());
+        drop(cache);
+    }
+
+    #[test]
+    fn mode_parse() {
+        // `force_cache_mode` is process-global, so flipping it here
+        // would race concurrently running search tests; the force path
+        // is exercised (serialized) in tests/integration_kernel_cache.rs.
+        assert_eq!(CacheMode::parse("off"), Some(CacheMode::Off));
+        assert_eq!(CacheMode::parse("0"), Some(CacheMode::Off));
+        assert_eq!(CacheMode::parse(" AUTO "), Some(CacheMode::Auto));
+        assert_eq!(CacheMode::parse("on"), Some(CacheMode::Force));
+        assert_eq!(CacheMode::parse("1"), Some(CacheMode::Force));
+        assert_eq!(CacheMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn layout_for_algo() {
+        assert_eq!(SpectraLayout::for_algo(ConvAlgo::FftDataParallel), Some(SpectraLayout::Cpu));
+        assert_eq!(SpectraLayout::for_algo(ConvAlgo::FftTaskParallel), Some(SpectraLayout::Cpu));
+        assert_eq!(SpectraLayout::for_algo(ConvAlgo::GpuFft), Some(SpectraLayout::Gpu));
+        assert_eq!(SpectraLayout::for_algo(ConvAlgo::DirectMkl), None);
+        assert_eq!(SpectraLayout::for_algo(ConvAlgo::GpuDensePrecomp), None);
+    }
+}

@@ -83,6 +83,10 @@ pub struct Metrics {
     /// region, so this should stay near zero even at high shard/worker
     /// counts; a large value flags contention worth re-banding.
     pub assembly_lock_wait_secs: f64,
+    /// Resident bytes of the plan's precomputed kernel-spectra caches —
+    /// the RAM the weight-spectrum cache is buying throughput with. One
+    /// shared `Arc` per layer (not per worker), so merge takes the max.
+    pub kernel_cache_bytes: u64,
 }
 
 impl Metrics {
@@ -98,7 +102,7 @@ impl Metrics {
     /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
-            "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={} arena_hwm={} arena_fresh_allocs={} assembly_lock_wait={:.6}s",
+            "requests={} patches={} voxels={} wall={:.3}s busy={:.3}s throughput={} arena_hwm={} arena_fresh_allocs={} assembly_lock_wait={:.6}s kernel_cache={}",
             self.requests,
             self.patches,
             self.voxels,
@@ -108,6 +112,7 @@ impl Metrics {
             crate::util::human_bytes(self.arena_hwm_bytes),
             self.arena_fresh_allocs,
             self.assembly_lock_wait_secs,
+            crate::util::human_bytes(self.kernel_cache_bytes),
         )
     }
 
@@ -125,6 +130,8 @@ impl Metrics {
         self.arena_hwm_bytes = self.arena_hwm_bytes.max(other.arena_hwm_bytes);
         self.arena_fresh_allocs += other.arena_fresh_allocs;
         self.assembly_lock_wait_secs += other.assembly_lock_wait_secs;
+        // One shared cache, reported by every serve call: max, not sum.
+        self.kernel_cache_bytes = self.kernel_cache_bytes.max(other.kernel_cache_bytes);
     }
 }
 
@@ -236,6 +243,12 @@ impl Coordinator {
         requests: Vec<InferenceRequest>,
         pool: &TaskPool,
     ) -> Result<(Vec<InferenceResponse>, Metrics)> {
+        // Build any planned kernel-spectra caches before the clock
+        // starts and the workers spawn (idempotent — a no-op once
+        // built), so the one-off transforms land in neither a worker's
+        // patch loop nor this serve call's wall-clock/throughput
+        // metrics.
+        let kernel_cache_bytes = self.plan.warm_kernel_caches(pool);
         let t_wall = Instant::now();
         let fov = self.fov;
         let cover = self.cover();
@@ -413,6 +426,7 @@ impl Coordinator {
             arena_hwm_bytes: arena_hwm.load(Ordering::SeqCst),
             arena_fresh_allocs: arena_fresh.load(Ordering::SeqCst),
             assembly_lock_wait_secs: assembly_ns.load(Ordering::SeqCst) as f64 / 1e9,
+            kernel_cache_bytes,
         };
         Ok((responses, metrics))
     }

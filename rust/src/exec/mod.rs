@@ -57,28 +57,59 @@ use crate::tensor::{Complex32, Shape5, Tensor5, Vec3};
 use crate::util::pool::TaskPool;
 
 /// Bytes an execution needs from the arena, computed at plan time from
-/// the Table II model (input + output + transients of the worst layer).
+/// the Table II model (input + output + transients of the worst layer),
+/// plus the resident kernel-spectra row the weight-spectrum cache adds.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkspaceReq {
-    /// Total bytes of the working set.
+    /// Arena bytes of the working set (cycled per patch).
     pub bytes: u64,
+    /// Long-lived precomputed kernel-spectra bytes
+    /// ([`crate::conv::precomp::PrecomputedKernels`]) resident beside
+    /// the arena for the plan's lifetime. Never drawn from the arena —
+    /// excluded from [`Arena::reserve`]'s budget check — and shared via
+    /// `Arc` across workers and shards, so [`WorkspaceReq::times`] does
+    /// not multiply it.
+    pub resident_bytes: u64,
 }
 
 impl WorkspaceReq {
     /// The empty requirement.
-    pub const ZERO: WorkspaceReq = WorkspaceReq { bytes: 0 };
+    pub const ZERO: WorkspaceReq = WorkspaceReq { bytes: 0, resident_bytes: 0 };
 
-    /// Pointwise maximum — layers of one plan share the arena, so the
-    /// plan's requirement is the max, not the sum.
+    /// Pointwise maximum of both rows.
     pub fn max(self, other: WorkspaceReq) -> WorkspaceReq {
-        WorkspaceReq { bytes: self.bytes.max(other.bytes) }
+        WorkspaceReq {
+            bytes: self.bytes.max(other.bytes),
+            resident_bytes: self.resident_bytes.max(other.resident_bytes),
+        }
+    }
+
+    /// Combine the requirements of two layers of one plan: arena bytes
+    /// take the max (layers share the arena), resident kernel-spectra
+    /// bytes sum (every cached layer's spectra stay live for the whole
+    /// run).
+    pub fn stack(self, other: WorkspaceReq) -> WorkspaceReq {
+        WorkspaceReq {
+            bytes: self.bytes.max(other.bytes),
+            resident_bytes: self.resident_bytes.saturating_add(other.resident_bytes),
+        }
     }
 
     /// Requirement of `n` independent copies of this working set —
     /// e.g. the warm per-worker arenas of one coordinator shard, which
-    /// do *not* share buffers and therefore sum, not max.
+    /// do *not* share buffers and therefore sum, not max. The resident
+    /// kernel-spectra row is one shared allocation and stays unscaled.
     pub fn times(self, n: usize) -> WorkspaceReq {
-        WorkspaceReq { bytes: self.bytes.saturating_mul(n as u64) }
+        WorkspaceReq {
+            bytes: self.bytes.saturating_mul(n as u64),
+            resident_bytes: self.resident_bytes,
+        }
+    }
+
+    /// Everything this requirement pins in RAM: arena working set plus
+    /// the resident kernel-spectra row.
+    pub fn total(self) -> u64 {
+        self.bytes.saturating_add(self.resident_bytes)
     }
 }
 
@@ -579,10 +610,12 @@ mod tests {
     fn undersized_budget_fails_at_plan_time() {
         let pool = tpool();
         let mut ctx = ExecCtx::with_budget(&pool, 1024);
-        let err = ctx.reserve(&WorkspaceReq { bytes: 1 << 20 }).unwrap_err();
+        let err =
+            ctx.reserve(&WorkspaceReq { bytes: 1 << 20, resident_bytes: 0 }).unwrap_err();
         assert!(err.to_string().contains("undersized"), "{err}");
-        // Within budget is fine.
-        assert!(ctx.reserve(&WorkspaceReq { bytes: 512 }).is_ok());
+        // Within budget is fine; resident (kernel-spectra) bytes live
+        // outside the arena and do not count against its budget.
+        assert!(ctx.reserve(&WorkspaceReq { bytes: 512, resident_bytes: 1 << 30 }).is_ok());
     }
 
     #[test]
@@ -669,12 +702,30 @@ mod tests {
 
     #[test]
     fn workspace_req_max() {
-        let a = WorkspaceReq { bytes: 10 };
-        let b = WorkspaceReq { bytes: 20 };
+        let a = WorkspaceReq { bytes: 10, resident_bytes: 0 };
+        let b = WorkspaceReq { bytes: 20, resident_bytes: 0 };
         assert_eq!(a.max(b).bytes, 20);
         assert_eq!(WorkspaceReq::ZERO.max(a).bytes, 10);
         assert_eq!(a.times(3).bytes, 30);
-        assert_eq!(WorkspaceReq { bytes: u64::MAX }.times(2).bytes, u64::MAX);
+        let huge = WorkspaceReq { bytes: u64::MAX, resident_bytes: 0 };
+        assert_eq!(huge.times(2).bytes, u64::MAX);
+    }
+
+    #[test]
+    fn workspace_req_stacks_resident_and_shares_it_across_copies() {
+        // Two layers: arena bytes take the max, kernel-spectra rows sum.
+        let a = WorkspaceReq { bytes: 100, resident_bytes: 40 };
+        let b = WorkspaceReq { bytes: 60, resident_bytes: 25 };
+        let plan = a.stack(b);
+        assert_eq!(plan.bytes, 100);
+        assert_eq!(plan.resident_bytes, 65);
+        assert_eq!(plan.total(), 165);
+        // N warm worker arenas multiply the working set but share the
+        // one Arc'd spectra cache.
+        let fleet = plan.times(4);
+        assert_eq!(fleet.bytes, 400);
+        assert_eq!(fleet.resident_bytes, 65);
+        assert_eq!(fleet.total(), 465);
     }
 
     #[test]

@@ -271,7 +271,9 @@ mod tests {
             .layers
             .iter()
             .map(|l| match l {
-                LayerSpec::Conv { .. } => PlanLayer::Conv { algo: ConvAlgo::DirectMkl },
+                LayerSpec::Conv { .. } => {
+                    PlanLayer::Conv { algo: ConvAlgo::DirectMkl, cache_kernels: false }
+                }
                 LayerSpec::Pool { .. } => {
                     let m = modes[mi];
                     mi += 1;
@@ -287,6 +289,7 @@ mod tests {
             shapes,
             est_secs: 1.0,
             est_memory: 0,
+            kernel_cache_bytes: 0,
             out_voxels: (out.s * out.x * out.y * out.z) as u64,
         }
     }

@@ -10,15 +10,19 @@
 //! size the arena up front from the model the search already ranked
 //! plans with.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::conv::precomp::{cache_mode, CacheMode, PrecomputedKernels, SpectraLayout};
 use crate::conv::{self, Activation, Weights};
 use crate::exec::{ExecCtx, WorkspaceReq};
+use crate::fft::fft_optimal_vec3;
 use crate::memory::model::{
-    conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims,
+    conv_memory_bytes, kernel_spectra_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo,
+    ConvDims,
 };
 use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
 use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::pool::TaskPool;
 
 /// Which device a primitive is meant for (§IV.A vs §IV.B). On this
 /// testbed the GPU is simulated — see `crate::device`.
@@ -46,11 +50,13 @@ pub trait LayerPrimitive: Send + Sync {
     fn memory_bytes(&self, input: Shape5, threads: usize) -> u64;
 
     /// Arena bytes this layer draws while executing on `input` — the
-    /// Table II working set (input + output + transients). Plans take
-    /// the max across layers; see
+    /// Table II working set (input + output + transients) — plus any
+    /// resident kernel-spectra row. Plans take the max of the arena
+    /// bytes and the sum of the resident rows across layers
+    /// ([`WorkspaceReq::stack`]); see
     /// [`crate::optimizer::CompiledPlan::workspace_req`].
     fn plan_workspace(&self, input: Shape5, threads: usize) -> WorkspaceReq {
-        WorkspaceReq { bytes: self.memory_bytes(input, threads) }
+        WorkspaceReq { bytes: self.memory_bytes(input, threads), resident_bytes: 0 }
     }
 
     /// Analytic FLOPs per Table I.
@@ -62,6 +68,19 @@ pub trait LayerPrimitive: Send + Sync {
     /// Run the layer. Consumes `input` (its backing store is retired
     /// into the context's arena) and draws the output from the arena.
     fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5;
+
+    /// Precompute any weight-derived resident state for the given input
+    /// shape (idempotent). [`ConvLayer`] builds its kernel-spectra
+    /// cache here; everything else is a no-op. Called by
+    /// [`crate::optimizer::CompiledPlan::warm_kernel_caches`] so the
+    /// one-off cost lands at plan-build time.
+    fn warm(&self, _input: Shape5, _pool: &TaskPool) {}
+
+    /// Resident bytes of precomputed kernel spectra this layer has
+    /// built (0 for layers without a cache, or before warming).
+    fn kernel_cache_bytes(&self) -> u64 {
+        0
+    }
 }
 
 /// Convolutional layer with a fixed algorithm choice.
@@ -72,12 +91,56 @@ pub struct ConvLayer {
     pub algo: ConvAlgo,
     /// Post-convolution activation.
     pub act: Activation,
+    /// Whether this layer precomputes its kernel spectra (the plan's
+    /// per-layer cache decision; see [`ConvLayer::with_kernel_cache`]).
+    cache_enabled: bool,
+    /// The spectra, built once on first use (or
+    /// [`LayerPrimitive::warm`]) and shared via `Arc` across every
+    /// worker and shard from then on.
+    kernel_cache: OnceLock<Arc<PrecomputedKernels>>,
 }
 
 impl ConvLayer {
-    /// Layer from weights + algorithm + activation.
+    /// Layer from weights + algorithm + activation (kernel-spectra
+    /// caching off — the searched plan enables it via
+    /// [`ConvLayer::with_kernel_cache`]).
     pub fn new(weights: Arc<Weights>, algo: ConvAlgo, act: Activation) -> Self {
-        ConvLayer { weights, algo, act }
+        ConvLayer { weights, algo, act, cache_enabled: false, kernel_cache: OnceLock::new() }
+    }
+
+    /// Enable (or disable) the precomputed kernel-spectra cache for
+    /// this layer. Only meaningful for the FFT families; ignored by
+    /// algorithms that transform no kernels. The runtime kill switch
+    /// `ZNNI_KERNEL_CACHE=off` overrides an enabled cache.
+    pub fn with_kernel_cache(mut self, enabled: bool) -> Self {
+        self.cache_enabled = enabled && self.algo.uses_kernel_cache();
+        self
+    }
+
+    /// Whether the plan enabled kernel-spectra caching for this layer.
+    pub fn kernel_cache_enabled(&self) -> bool {
+        self.cache_enabled
+    }
+
+    /// The cache to execute against for `input`, building it on first
+    /// use. Returns `None` when caching is off (plan decision or the
+    /// `ZNNI_KERNEL_CACHE=off` kill switch) or when the cache was built
+    /// for a different padded FFT shape than `input` needs — the
+    /// primitive then falls back to on-the-fly transforms.
+    fn kernels_for(&self, input: Shape5, pool: &TaskPool) -> Option<Arc<PrecomputedKernels>> {
+        if !self.cache_enabled || cache_mode() == CacheMode::Off {
+            return None;
+        }
+        let layout = SpectraLayout::for_algo(self.algo)?;
+        let padded = fft_optimal_vec3(input.spatial());
+        let cache = self.kernel_cache.get_or_init(|| {
+            Arc::new(PrecomputedKernels::build(&self.weights, layout, padded, pool))
+        });
+        if cache.matches(layout, padded, self.weights.f_out, self.weights.f_in) {
+            Some(cache.clone())
+        } else {
+            None
+        }
     }
 
     fn dims(&self, input: Shape5) -> ConvDims {
@@ -111,6 +174,20 @@ impl LayerPrimitive for ConvLayer {
         conv_memory_bytes(self.algo, &self.dims(input), threads)
     }
 
+    fn plan_workspace(&self, input: Shape5, threads: usize) -> WorkspaceReq {
+        WorkspaceReq {
+            bytes: self.memory_bytes(input, threads),
+            // The spectra row is resident beside the arena when the
+            // plan enabled caching — the analytic size, so the plan's
+            // requirement is known before anything is built.
+            resident_bytes: if self.cache_enabled {
+                kernel_spectra_bytes(self.algo, &self.dims(input))
+            } else {
+                0
+            },
+        }
+    }
+
     fn flops(&self, input: Shape5) -> f64 {
         let d = self.dims(input);
         match self.algo {
@@ -132,6 +209,14 @@ impl LayerPrimitive for ConvLayer {
         }
     }
 
+    fn warm(&self, input: Shape5, pool: &TaskPool) {
+        let _ = self.kernels_for(input, pool);
+    }
+
+    fn kernel_cache_bytes(&self) -> u64 {
+        self.kernel_cache.get().map(|c| c.bytes()).unwrap_or(0)
+    }
+
     fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
         let w = &self.weights;
         match self.algo {
@@ -145,8 +230,14 @@ impl LayerPrimitive for ConvLayer {
                 ctx.retire(input);
                 out
             }
-            ConvAlgo::FftDataParallel => conv::fft_dp::conv_fft_dp(input, w, self.act, ctx),
-            ConvAlgo::FftTaskParallel => conv::fft_tp::conv_fft_tp(input, w, self.act, ctx),
+            ConvAlgo::FftDataParallel => {
+                let kern = self.kernels_for(input.shape(), ctx.pool());
+                conv::fft_dp::conv_fft_dp_with(input, w, self.act, ctx, kern.as_deref())
+            }
+            ConvAlgo::FftTaskParallel => {
+                let kern = self.kernels_for(input.shape(), ctx.pool());
+                conv::fft_tp::conv_fft_tp_with(input, w, self.act, ctx, kern.as_deref())
+            }
             // Dense-conv stand-ins for the two cuDNN primitives: the
             // no-workspace variant is the slow/lean one, the precomp
             // variant trades workspace memory for speed (§IV.B.1). The
@@ -166,7 +257,10 @@ impl LayerPrimitive for ConvLayer {
                 ctx.retire(input);
                 out
             }
-            ConvAlgo::GpuFft => conv::fft_gpu::conv_fft_gpu(input, w, self.act, ctx),
+            ConvAlgo::GpuFft => {
+                let kern = self.kernels_for(input.shape(), ctx.pool());
+                conv::fft_gpu::conv_fft_gpu_with(input, w, self.act, ctx, kern.as_deref())
+            }
         }
     }
 }
@@ -314,7 +408,56 @@ mod tests {
             let l = conv_layer(algo);
             let sh = Shape5::new(1, 2, 9, 9, 9);
             assert_eq!(l.plan_workspace(sh, 4).bytes, l.memory_bytes(sh, 4));
+            assert_eq!(l.plan_workspace(sh, 4).resident_bytes, 0, "cache off by default");
         }
+    }
+
+    #[test]
+    fn plan_workspace_adds_resident_spectra_row_when_cached() {
+        let sh = Shape5::new(1, 2, 9, 9, 9);
+        for algo in ConvAlgo::ALL {
+            let l = conv_layer(algo).with_kernel_cache(true);
+            let req = l.plan_workspace(sh, 4);
+            assert_eq!(req.bytes, l.memory_bytes(sh, 4), "{algo:?}: arena row unchanged");
+            let expect = kernel_spectra_bytes(algo, &l.dims(sh));
+            assert_eq!(req.resident_bytes, expect, "{algo:?}");
+            if algo.uses_kernel_cache() {
+                assert!(req.resident_bytes > 0, "{algo:?}");
+            } else {
+                assert_eq!(req.resident_bytes, 0, "{algo:?}: nothing to cache");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_layer_matches_uncached_and_reports_bytes() {
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
+        let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 6);
+        for algo in [ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel, ConvAlgo::GpuFft] {
+            let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 2));
+            let plain = ConvLayer::new(w.clone(), algo, Activation::Relu);
+            let cached = ConvLayer::new(w, algo, Activation::Relu).with_kernel_cache(true);
+            assert!(cached.kernel_cache_enabled());
+            assert_eq!(cached.kernel_cache_bytes(), 0, "nothing built before warm");
+            cached.warm(input.shape(), &p);
+            // The kill switch may disable the cache in this process
+            // (ZNNI_KERNEL_CACHE=off); outputs must agree either way.
+            let a = plain.execute(input.clone_tensor(), &mut ctx);
+            let b = cached.execute(input.clone_tensor(), &mut ctx);
+            assert_eq!(a.data(), b.data(), "{algo:?}: cached path must be bit-identical");
+            ctx.retire(a);
+            ctx.retire(b);
+        }
+    }
+
+    #[test]
+    fn with_kernel_cache_ignored_for_non_fft_algos() {
+        let l = conv_layer(ConvAlgo::DirectMkl).with_kernel_cache(true);
+        assert!(!l.kernel_cache_enabled());
+        let p = tpool();
+        l.warm(Shape5::new(1, 2, 7, 7, 7), &p);
+        assert_eq!(l.kernel_cache_bytes(), 0);
     }
 
     #[test]

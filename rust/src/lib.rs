@@ -38,7 +38,13 @@
 //!   [`optimizer::CostModel::calibrate_full`] micro-benchmarks every
 //!   primitive through a warm execution context at a ladder of sizes,
 //!   measures the real batch-dispatch overhead, and persists the result
-//!   as a JSON profile so serving startup can reuse a prior run.
+//!   as a JSON profile so serving startup can reuse a prior run;
+//! * a weight-spectrum cache ([`conv::precomp`]): kernel FFTs are
+//!   precomputed once per layer and shared via `Arc` across every
+//!   worker and shard (bit-identical to on-the-fly transforms), with
+//!   caching a per-layer decision the optimizer searches under the
+//!   memory budget — resident spectra compete with larger input images
+//!   for the same RAM (`ZNNI_KERNEL_CACHE` gates it at runtime).
 //!
 //! The one-minute tour — search a plan, compile it, run a patch:
 //!

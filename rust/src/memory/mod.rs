@@ -23,6 +23,10 @@ static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
 static ARENA_FOOTPRINT: AtomicI64 = AtomicI64::new(0);
 static ARENA_HWM: AtomicU64 = AtomicU64::new(0);
 static ARENA_FRESH: AtomicU64 = AtomicU64::new(0);
+/// Resident precomputed kernel-spectra bytes
+/// ([`crate::conv::precomp::PrecomputedKernels`]) currently live — the
+/// RAM the weight-spectrum cache is trading for throughput.
+static KERNEL_CACHE: AtomicI64 = AtomicI64::new(0);
 
 /// Register `bytes` of live tensor memory (fresh backing store).
 pub fn alloc(bytes: u64) {
@@ -81,6 +85,21 @@ pub fn arena_hwm() -> u64 {
 /// entirely out of recycled buffers.
 pub fn arena_fresh_allocs() -> u64 {
     ARENA_FRESH.load(Ordering::SeqCst)
+}
+
+/// Adjust the kernel-spectra cache gauge. Called by
+/// [`crate::conv::precomp::PrecomputedKernels`] only (positive at
+/// build, negative at drop); the bytes also register with the ledger
+/// via [`alloc`]/[`free`] so Table II peak measurements see them.
+pub fn kernel_cache_gauge(delta: i64) {
+    KERNEL_CACHE.fetch_add(delta, Ordering::SeqCst);
+}
+
+/// Resident precomputed kernel-spectra bytes currently live across the
+/// process — the planned, budgeted RAM row the weight-spectrum cache
+/// occupies (see `docs/ARCHITECTURE.md`, "The weight-spectrum cache").
+pub fn kernel_cache_bytes() -> u64 {
+    KERNEL_CACHE.load(Ordering::SeqCst).max(0) as u64
 }
 
 /// Bytes currently registered.

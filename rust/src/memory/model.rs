@@ -91,6 +91,16 @@ impl ConvAlgo {
     pub fn from_tag(tag: &str) -> Option<ConvAlgo> {
         ConvAlgo::ALL.into_iter().find(|a| a.tag() == tag)
     }
+
+    /// Whether this algorithm transforms kernels to the frequency domain
+    /// and can therefore consume a precomputed weight-spectrum cache
+    /// ([`crate::conv::precomp::PrecomputedKernels`]).
+    pub fn uses_kernel_cache(&self) -> bool {
+        matches!(
+            self,
+            ConvAlgo::FftDataParallel | ConvAlgo::FftTaskParallel | ConvAlgo::GpuFft
+        )
+    }
 }
 
 /// Problem dimensions of one convolutional layer application.
@@ -144,14 +154,24 @@ impl ConvDims {
     /// FLOPs of the FFT algorithm (Table I):
     /// image transforms + point-wise MADs + pruned kernel transforms.
     pub fn fft_flops(&self) -> f64 {
-        use crate::fft::plan::{fft_3d_flops_naive, fft_3d_flops_pruned};
+        use crate::fft::plan::fft_3d_flops_naive;
         let p = fft_optimal_vec3(self.n);
         let s = self.s as f64;
         let (f, fp) = (self.f_in as f64, self.f_out as f64);
         let image_t = s * (f + fp) * fft_3d_flops_naive(p);
         let mads = 8.0 * s * f * fp * (p[0] * p[1] * (p[2] / 2 + 1)) as f64;
-        let kernel_t = f * fp * fft_3d_flops_pruned(self.k, p);
-        image_t + mads + kernel_t
+        image_t + mads + self.fft_kernel_flops()
+    }
+
+    /// The kernel-transform component of [`ConvDims::fft_flops`]:
+    /// `f·f'` pruned kernel FFTs. This is the work a precomputed
+    /// weight-spectrum cache removes from every call — the optimizer
+    /// subtracts it when ranking a cached layer
+    /// ([`crate::optimizer::CostModel::conv_secs_cached`]).
+    pub fn fft_kernel_flops(&self) -> f64 {
+        use crate::fft::plan::fft_3d_flops_pruned;
+        let p = fft_optimal_vec3(self.n);
+        (self.f_in * self.f_out) as f64 * fft_3d_flops_pruned(self.k, p)
     }
 }
 
@@ -206,6 +226,24 @@ pub fn conv_memory_bytes(algo: ConvAlgo, d: &ConvDims, threads: usize) -> u64 {
             GPU_FFT_K_BYTES + B * st1.max(st2).max(st3)
         }
     }
+}
+
+/// Resident bytes of one layer's precomputed kernel-spectra row — the
+/// Table II extension the weight-spectrum cache adds: `f'·f` transformed
+/// kernels of `ñ` float-equivalent elements each (both the CPU and the
+/// batched GPU layout store `x̃·ỹ·(z̃/2+1)` complex bins per kernel).
+/// Zero for algorithms that do no kernel transforms. Unlike every other
+/// Table II row this one is *resident for the plan's lifetime* and
+/// *shared* across workers and shards (one `Arc`), so the optimizer
+/// sums it across layers and adds it once — never per worker — when
+/// checking a candidate against the device
+/// ([`crate::exec::WorkspaceReq::resident_bytes`] carries it through
+/// plan compilation).
+pub fn kernel_spectra_bytes(algo: ConvAlgo, d: &ConvDims) -> u64 {
+    if !algo.uses_kernel_cache() {
+        return 0;
+    }
+    B * (d.f_in * d.f_out) as u64 * d.n_tilde_elems()
 }
 
 /// Memory of a max-pooling layer: input + output (n/p³ per image).
@@ -308,6 +346,28 @@ mod tests {
         assert_eq!(b, 4 * (1000 + 2 * 512));
         // A volume smaller than the FoV has no valid output placement.
         assert_eq!(request_memory_bytes(1, 2, [2, 2, 2], [3, 3, 3]), 4 * 8);
+    }
+
+    #[test]
+    fn kernel_spectra_row_counts_all_kernels() {
+        let d = ConvDims { s: 1, f_in: 3, f_out: 5, n: [8, 8, 8], k: [3, 3, 3] };
+        // 3·5 kernels × ñ = 640 float-equivalents × 4 bytes.
+        assert_eq!(kernel_spectra_bytes(ConvAlgo::FftTaskParallel, &d), 15 * 640 * 4);
+        assert_eq!(
+            kernel_spectra_bytes(ConvAlgo::FftDataParallel, &d),
+            kernel_spectra_bytes(ConvAlgo::GpuFft, &d)
+        );
+        // Direct algorithms have no spectra to cache.
+        assert_eq!(kernel_spectra_bytes(ConvAlgo::DirectMkl, &d), 0);
+        assert_eq!(kernel_spectra_bytes(ConvAlgo::GpuDensePrecomp, &d), 0);
+    }
+
+    #[test]
+    fn fft_kernel_flops_is_the_cacheable_share() {
+        let d = dims();
+        let kf = d.fft_kernel_flops();
+        assert!(kf > 0.0);
+        assert!(kf < d.fft_flops(), "kernel transforms are a strict share of the total");
     }
 
     #[test]

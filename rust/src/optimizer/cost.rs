@@ -413,6 +413,21 @@ impl CostModel {
         flops / self.rate(algo, device)
     }
 
+    /// Estimated seconds for a conv layer executing against a
+    /// precomputed weight-spectrum cache: the FFT families drop their
+    /// per-call kernel-transform FLOPs
+    /// ([`ConvDims::fft_kernel_flops`] — amortized to zero once the
+    /// spectra are resident); algorithms that transform no kernels cost
+    /// the same as [`CostModel::conv_secs`].
+    pub fn conv_secs_cached(&self, algo: ConvAlgo, d: &ConvDims, device: &Device) -> f64 {
+        let full = self.conv_secs(algo, d, device);
+        if algo.uses_kernel_cache() {
+            (full - d.fft_kernel_flops() / self.rate(algo, device)).max(0.0)
+        } else {
+            full
+        }
+    }
+
     /// Estimated seconds for a pooling/MPF layer.
     pub fn pool_secs(&self, s: usize, f: usize, n: Vec3, p: Vec3, mpf: bool) -> f64 {
         let vox = (s * f * n[0] * n[1] * n[2]) as f64;
@@ -446,6 +461,23 @@ mod tests {
             cm.conv_secs(ConvAlgo::DirectNaive, &big, &host)
                 > cm.conv_secs(ConvAlgo::DirectNaive, &small, &host)
         );
+    }
+
+    #[test]
+    fn cached_kernels_strictly_cheaper_for_fft_families() {
+        let cm = CostModel::default_rates(4);
+        let host = Device::host_with_ram(1 << 30);
+        let d = ConvDims { s: 1, f_in: 4, f_out: 4, n: [16; 3], k: [3; 3] };
+        for algo in ConvAlgo::ALL {
+            let full = cm.conv_secs(algo, &d, &host);
+            let cached = cm.conv_secs_cached(algo, &d, &host);
+            if algo.uses_kernel_cache() {
+                assert!(cached < full, "{algo:?}: cache must drop kernel-transform time");
+                assert!(cached >= 0.0);
+            } else {
+                assert_eq!(cached, full, "{algo:?}: no kernel transforms to drop");
+            }
+        }
     }
 
     #[test]

@@ -52,6 +52,13 @@ pub enum PlanLayer {
     Conv {
         /// The algorithm the search picked for this layer.
         algo: ConvAlgo,
+        /// Whether this layer precomputes its kernel spectra
+        /// ([`crate::conv::precomp::PrecomputedKernels`]) — a decision
+        /// the search makes per layer under the memory budget: spending
+        /// RAM on resident spectra competes directly with spending it
+        /// on a larger input image. Always `false` for non-FFT
+        /// algorithms.
+        cache_kernels: bool,
     },
     /// A pooling layer realised in the chosen mode.
     Pool {
@@ -64,7 +71,7 @@ impl PlanLayer {
     /// Short Table IV tag of this decision.
     pub fn tag(&self) -> &'static str {
         match self {
-            PlanLayer::Conv { algo } => algo.tag(),
+            PlanLayer::Conv { algo, .. } => algo.tag(),
             PlanLayer::Pool { mode } => match mode {
                 PoolingMode::Mpf => "MPF",
                 PoolingMode::MaxPool => "Pool",
@@ -86,8 +93,13 @@ pub struct Plan {
     pub shapes: Vec<Shape5>,
     /// Estimated seconds per patch (cost model).
     pub est_secs: f64,
-    /// Peak Table II memory across layers (bytes).
+    /// Peak Table II memory across layers (bytes), including the
+    /// resident kernel-spectra row ([`Plan::kernel_cache_bytes`]).
     pub est_memory: u64,
+    /// Resident precomputed kernel-spectra bytes summed over the layers
+    /// the search chose to cache (0 when nothing is cached). A shared
+    /// allocation: counted once per plan, not per worker.
+    pub kernel_cache_bytes: u64,
     /// Output voxels per patch: S′ · x′·y′·z′ (spatial positions of the
     /// sliding-window output covered by one patch).
     pub out_voxels: u64,
@@ -190,9 +202,38 @@ fn mode_assignments(pools: usize, allow_maxpool: bool) -> Vec<Vec<PoolingMode>> 
         .collect()
 }
 
+/// One conv-layer candidate during [`evaluate`]: algorithm, whether the
+/// kernel spectra are precomputed, and the modelled cost of each choice.
+#[derive(Clone, Copy)]
+struct ConvChoice {
+    algo: ConvAlgo,
+    cached: bool,
+    secs: f64,
+    mem: u64,
+    /// Resident spectra bytes when `cached` (0 otherwise).
+    cache_bytes: u64,
+    /// Seconds added back if the cache is later dropped (the per-call
+    /// kernel-transform time).
+    drop_penalty: f64,
+}
+
 /// Evaluate one (modes, input) candidate: per-layer fastest primitive
-/// under the memory constraint. Returns None if any layer has no
-/// feasible primitive.
+/// under the memory constraint, with kernel-spectra caching searched
+/// per FFT layer. Returns None if any layer has no feasible primitive.
+///
+/// Caching discipline: cached spectra are resident for the whole run,
+/// so a plan's peak is `max(layer working sets) + Σ cached spectra`.
+/// Layers are chosen greedily in order (each candidate checked against
+/// the spectra already committed); a final pass re-verifies the true
+/// peak and drops caches — largest row first, adding the kernel
+/// transform time back — until the plan fits (the per-layer fallback
+/// to recomputation). `ZNNI_KERNEL_CACHE` (see
+/// [`crate::conv::precomp::cache_mode`]) gates the whole axis: `off`
+/// never caches, `on` caches every FFT layer the budget admits without
+/// consulting the cost model, `auto` (default) lets the cost model
+/// decide — which, under the analytic model, also caches wherever the
+/// budget admits (cached layers are strictly cheaper), so `auto` and
+/// `on` only diverge if a future measured model charges the cache.
 fn evaluate(
     net: &NetSpec,
     input: Shape5,
@@ -200,11 +241,19 @@ fn evaluate(
     space: &SearchSpace,
     cost: &CostModel,
 ) -> Option<Plan> {
+    use crate::conv::precomp::{cache_mode, CacheMode};
+    use crate::memory::model::kernel_spectra_bytes;
+
+    let mode = cache_mode();
     let shapes = net.shapes(input, modes).ok()?;
     let mut cur = input;
     let mut layers = Vec::with_capacity(net.layers.len());
     let mut est_secs = 0.0;
-    let mut est_memory = 0u64;
+    let mut max_mem = 0u64;
+    let mut cache_total = 0u64;
+    // (index into `layers`, the choice) for every cached conv layer —
+    // the candidates of the final drop-to-fit pass.
+    let mut cached_layers: Vec<(usize, ConvChoice)> = Vec::new();
     let mut pool_i = 0;
     for (li, l) in net.layers.iter().enumerate() {
         match l {
@@ -216,39 +265,95 @@ fn evaluate(
                     n: cur.spatial(),
                     k: *k,
                 };
-                let mut best: Option<(ConvAlgo, f64, u64)> = None;
+                let mut best: Option<ConvChoice> = None;
+                let consider = |c: ConvChoice, best: &mut Option<ConvChoice>| {
+                    if best.map(|b| c.secs < b.secs).unwrap_or(true) {
+                        *best = Some(c);
+                    }
+                };
                 for &algo in &space.algos {
                     let mem = conv_memory_bytes(algo, &d, cost.threads);
-                    if !space.device.fits(mem) {
-                        continue;
+                    let secs = cost.conv_secs(algo, &d, &space.device);
+                    let mut cached_feasible = false;
+                    if algo.uses_kernel_cache() && mode != CacheMode::Off {
+                        let cb = kernel_spectra_bytes(algo, &d);
+                        // A cached candidate must afford its own row on
+                        // top of the spectra already committed.
+                        if space.device.fits(mem.saturating_add(cache_total).saturating_add(cb)) {
+                            cached_feasible = true;
+                            let cached_secs = cost.conv_secs_cached(algo, &d, &space.device);
+                            consider(
+                                ConvChoice {
+                                    algo,
+                                    cached: true,
+                                    secs: cached_secs,
+                                    mem,
+                                    cache_bytes: cb,
+                                    drop_penalty: secs - cached_secs,
+                                },
+                                &mut best,
+                            );
+                        }
                     }
-                    let t = cost.conv_secs(algo, &d, &space.device);
-                    if best.map(|(_, bt, _)| t < bt).unwrap_or(true) {
-                        best = Some((algo, t, mem));
+                    // The recompute candidate — checked against the
+                    // device alone (the final drop-to-fit pass owns the
+                    // cache/working-set interaction, so caching can
+                    // never make a previously feasible plan infeasible);
+                    // suppressed in `on` (force) mode when a cached
+                    // variant of the same algorithm is admissible.
+                    if space.device.fits(mem) && !(mode == CacheMode::Force && cached_feasible) {
+                        consider(
+                            ConvChoice {
+                                algo,
+                                cached: false,
+                                secs,
+                                mem,
+                                cache_bytes: 0,
+                                drop_penalty: 0.0,
+                            },
+                            &mut best,
+                        );
                     }
                 }
-                let (algo, t, mem) = best?;
-                layers.push(PlanLayer::Conv { algo });
-                est_secs += t;
-                est_memory = est_memory.max(mem);
+                let c = best?;
+                if c.cached {
+                    cache_total += c.cache_bytes;
+                    cached_layers.push((layers.len(), c));
+                }
+                layers.push(PlanLayer::Conv { algo: c.algo, cache_kernels: c.cached });
+                est_secs += c.secs;
+                max_mem = max_mem.max(c.mem);
             }
             LayerSpec::Pool { p } => {
-                let mode = modes[pool_i];
+                let mode_p = modes[pool_i];
                 pool_i += 1;
-                let mem = match mode {
+                let mem = match mode_p {
                     PoolingMode::Mpf => mpf_memory_bytes(cur.s, cur.f, cur.spatial(), *p),
                     PoolingMode::MaxPool => pool_memory_bytes(cur.s, cur.f, cur.spatial(), *p),
                 };
                 if !space.device.fits(mem) {
                     return None;
                 }
-                layers.push(PlanLayer::Pool { mode });
+                layers.push(PlanLayer::Pool { mode: mode_p });
                 est_secs +=
-                    cost.pool_secs(cur.s, cur.f, cur.spatial(), *p, mode == PoolingMode::Mpf);
-                est_memory = est_memory.max(mem);
+                    cost.pool_secs(cur.s, cur.f, cur.spatial(), *p, mode_p == PoolingMode::Mpf);
+                max_mem = max_mem.max(mem);
             }
         }
         cur = shapes[li];
+    }
+    // Per-layer fallback: caches committed early may no longer fit once
+    // later layers raised the peak or added their own spectra. Drop the
+    // largest rows first until the true peak fits, paying each layer's
+    // kernel-transform time back.
+    cached_layers.sort_by(|a, b| a.1.cache_bytes.cmp(&b.1.cache_bytes));
+    while !space.device.fits(max_mem.saturating_add(cache_total)) {
+        let Some((idx, c)) = cached_layers.pop() else {
+            return None; // infeasible even with every cache dropped
+        };
+        cache_total -= c.cache_bytes;
+        est_secs += c.drop_penalty;
+        layers[idx] = PlanLayer::Conv { algo: c.algo, cache_kernels: false };
     }
     let out = *shapes.last().unwrap();
     Some(Plan {
@@ -257,7 +362,8 @@ fn evaluate(
         layers,
         shapes,
         est_secs,
-        est_memory,
+        est_memory: max_mem.saturating_add(cache_total),
+        kernel_cache_bytes: cache_total,
         out_voxels: (out.s * out.x * out.y * out.z) as u64,
     })
 }
@@ -329,6 +435,11 @@ pub fn search_serving(
     let req_bytes =
         crate::memory::model::request_memory_bytes(net.f_in, net.f_out(), vd, fov).max(1);
     let threads = cost.threads.max(1);
+    // `est_memory` includes the plan's resident kernel-spectra row.
+    // That row is one shared Arc (not per worker), so charging it per
+    // worker here over-reserves slightly — a deliberately conservative
+    // admission model (the Server::start gate uses the exact split via
+    // `WorkspaceReq::times`, which leaves resident bytes unscaled).
     let per_worker_ws = plan.est_memory.max(1);
     let clients = load.clients.max(1);
     // Fixed per-batch dispatch cost (worker spawn + assembly) — the
@@ -427,12 +538,11 @@ pub fn compile(net: &NetSpec, plan: &Plan, weights: &[Arc<Weights>]) -> Result<C
     let mut wi = 0;
     for (l, pl) in net.layers.iter().zip(&plan.layers) {
         match (l, pl) {
-            (LayerSpec::Conv { .. }, PlanLayer::Conv { algo }) => {
-                prims.push(Box::new(ConvLayer::new(
-                    weights[wi].clone(),
-                    *algo,
-                    Activation::Relu,
-                )));
+            (LayerSpec::Conv { .. }, PlanLayer::Conv { algo, cache_kernels }) => {
+                prims.push(Box::new(
+                    ConvLayer::new(weights[wi].clone(), *algo, Activation::Relu)
+                        .with_kernel_cache(*cache_kernels),
+                ));
                 wi += 1;
             }
             (LayerSpec::Pool { p }, PlanLayer::Pool { mode }) => {
@@ -464,25 +574,53 @@ impl CompiledPlan {
     }
 
     /// Arena bytes this plan needs — the max of every layer's Table II
-    /// working set at its planned input shape. This is the same model
-    /// `search` ranked the plan with, so the arena is sized from the
-    /// numbers the optimizer already trusts (planned size ≤
-    /// `plan.est_memory` whenever `threads` matches the cost model's).
+    /// working set at its planned input shape, stacked with the sum of
+    /// the resident kernel-spectra rows of every cached layer
+    /// ([`WorkspaceReq::stack`]). This is the same model `search` ranked
+    /// the plan with, so the arena is sized from the numbers the
+    /// optimizer already trusts (planned arena size ≤ `plan.est_memory`
+    /// whenever `threads` matches the cost model's).
     pub fn workspace_req(&self, threads: usize) -> WorkspaceReq {
         let mut req = WorkspaceReq::ZERO;
         let mut cur = self.plan.input;
         for (li, p) in self.primitives.iter().enumerate() {
-            req = req.max(p.plan_workspace(cur, threads));
+            req = req.stack(p.plan_workspace(cur, threads));
             cur = self.plan.shapes[li];
         }
         req
     }
 
+    /// Build every layer's precomputed kernel spectra now (idempotent —
+    /// each layer's cache is built at most once and shared via `Arc`
+    /// from then on). Called by [`CompiledPlan::make_ctx`],
+    /// [`crate::coordinator::Coordinator::serve`] and
+    /// [`crate::server::Server::start`], so the one-off transform cost
+    /// lands at plan-build time, never on a request's critical path.
+    /// Returns [`CompiledPlan::kernel_cache_bytes`] after warming.
+    pub fn warm_kernel_caches(&self, pool: &TaskPool) -> u64 {
+        let mut cur = self.plan.input;
+        for (li, p) in self.primitives.iter().enumerate() {
+            p.warm(cur, pool);
+            cur = self.plan.shapes[li];
+        }
+        self.kernel_cache_bytes()
+    }
+
+    /// Resident bytes of the kernel-spectra caches built so far across
+    /// this plan's layers (0 before warming / when nothing caches).
+    pub fn kernel_cache_bytes(&self) -> u64 {
+        self.primitives.iter().map(|p| p.kernel_cache_bytes()).sum()
+    }
+
     /// Build an execution context whose arena budget is this plan's
     /// [`CompiledPlan::workspace_req`]. The reserve check runs at plan
     /// time — an infeasible budget errors here, never mid-execution.
+    /// Kernel-spectra caches are warmed here too (they live beside the
+    /// arena, not in it), so execution starts with both the buffers
+    /// planned and the spectra resident.
     pub fn make_ctx<'p>(&self, pool: &'p TaskPool) -> Result<ExecCtx<'p>> {
         let req = self.workspace_req(pool.workers());
+        self.warm_kernel_caches(pool);
         let mut ctx = ExecCtx::with_budget(pool, req.bytes);
         ctx.reserve(&req)?;
         Ok(ctx)
@@ -647,8 +785,71 @@ mod tests {
         let space = SearchSpace::gpu_only(Device::titan_x(), 21);
         let plan = search(&net, &space, &cm).unwrap();
         for l in &plan.layers {
-            if let PlanLayer::Conv { algo } = l {
+            if let PlanLayer::Conv { algo, .. } = l {
                 assert!(algo.is_gpu());
+            }
+        }
+    }
+
+    #[test]
+    fn search_accounts_kernel_cache_in_memory() {
+        // Force the FFT family so the cache axis is exercised: with
+        // ample RAM the searched plan caches its kernel spectra, the
+        // spectra bytes land in est_memory, and workspace_req carries
+        // them as the resident row.
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(host(4), 15);
+        space.algos = vec![ConvAlgo::FftTaskParallel];
+        space.max_candidates = 2;
+        let plan = search(&net, &space, &cm).expect("feasible");
+        assert!(plan.kernel_cache_bytes > 0, "ample RAM must admit the spectra cache");
+        assert!(plan.est_memory > plan.kernel_cache_bytes);
+        let conv_cached: Vec<bool> = plan
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                PlanLayer::Conv { cache_kernels, .. } => Some(*cache_kernels),
+                _ => None,
+            })
+            .collect();
+        assert!(conv_cached.iter().all(|&c| c), "every FFT layer should cache under 4 GiB");
+        let weights = make_weights(&net, 1);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let req = cp.workspace_req(cm.threads);
+        assert_eq!(req.resident_bytes, plan.kernel_cache_bytes);
+        assert!(req.total() <= plan.est_memory);
+    }
+
+    #[test]
+    fn over_budget_cache_falls_back_to_recompute() {
+        // Pin the candidate to one extent, find the uncached footprint,
+        // then offer exactly that much RAM: the cached variant no longer
+        // fits, so the search must return the same plan with
+        // cache_kernels = false instead of failing.
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(host(4), 15);
+        space.algos = vec![ConvAlgo::FftTaskParallel];
+        space.max_candidates = 1;
+        let roomy = search(&net, &space, &cm).expect("feasible");
+        assert!(roomy.kernel_cache_bytes > 0);
+        let uncached_peak = roomy.est_memory - roomy.kernel_cache_bytes;
+        let mut tight = space.clone();
+        tight.device = Device::host_with_ram(uncached_peak);
+        tight.min_extent = roomy.input.x;
+        tight.max_extent = roomy.input.x;
+        let fallback = search(&net, &tight, &cm).expect("recompute fallback must be feasible");
+        assert_eq!(fallback.input, roomy.input);
+        assert_eq!(fallback.kernel_cache_bytes, 0, "over-budget cache must be rejected");
+        assert!(fallback.est_memory <= uncached_peak);
+        assert!(
+            fallback.est_secs > roomy.est_secs,
+            "dropping the cache pays the kernel transforms back"
+        );
+        for l in &fallback.layers {
+            if let PlanLayer::Conv { cache_kernels, .. } = l {
+                assert!(!cache_kernels);
             }
         }
     }

@@ -361,6 +361,10 @@ pub struct ShardSnapshot {
     pub arena_fresh_allocs: u64,
     /// Seconds spent waiting on output-assembly band locks.
     pub assembly_lock_wait_secs: f64,
+    /// Resident bytes of the shared kernel-spectra caches as seen by
+    /// this shard (one `Arc` per layer, shared across shards — every
+    /// shard reports the same allocation).
+    pub kernel_cache_bytes: u64,
 }
 
 /// Aggregate server metrics: admission counters, latency percentiles,
@@ -393,6 +397,11 @@ pub struct ServerMetrics {
     pub p99_latency: Duration,
     /// Dense output voxels produced by all shards.
     pub voxels: u64,
+    /// Resident bytes of the plan's precomputed kernel-spectra caches —
+    /// shared across every shard via `Arc`, so this is the max (not the
+    /// sum) of the per-shard reports: the RAM the weight-spectrum cache
+    /// is buying throughput with.
+    pub kernel_cache_bytes: u64,
     /// Per-shard observability snapshots.
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -421,7 +430,7 @@ impl ServerMetrics {
         let steals: u64 = self.per_shard.iter().map(|s| s.steals).sum();
         format!(
             "submitted={} completed={} rejected={} expired={} late={} batches={} occupancy={:.2} \
-             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={}",
+             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={} kernel_cache={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -436,6 +445,7 @@ impl ServerMetrics {
             steals,
             crate::util::human_bytes(hwm),
             fresh,
+            crate::util::human_bytes(self.kernel_cache_bytes),
         )
     }
 }
@@ -463,7 +473,11 @@ impl Server {
         }
         let plan = Arc::new(plan);
         let shard_workers = (pool.workers() / cfg.shards).max(1);
-        let shard_ws_bytes = plan.workspace_req(shard_workers).times(shard_workers).bytes;
+        // Warm arenas multiply per worker; the resident kernel-spectra
+        // row is one shared Arc and is charged once per shard (see
+        // `WorkspaceReq::times`). Building the spectra happens below,
+        // at start — never on a request's critical path.
+        let shard_ws_bytes = plan.workspace_req(shard_workers).times(shard_workers).total();
         if shard_ws_bytes >= cfg.memory_budget {
             bail!(
                 "server memory budget {} cannot hold one shard's warm arenas {} — \
@@ -472,6 +486,7 @@ impl Server {
                 shard_ws_bytes
             );
         }
+        plan.warm_kernel_caches(&pool);
         let fov = net.field_of_view();
         let f_out = net.f_out();
         let mut coordinators = Vec::with_capacity(cfg.shards);
@@ -622,6 +637,7 @@ impl Server {
                     arena_hwm_bytes: st.metrics.arena_hwm_bytes,
                     arena_fresh_allocs: st.metrics.arena_fresh_allocs,
                     assembly_lock_wait_secs: st.metrics.assembly_lock_wait_secs,
+                    kernel_cache_bytes: st.metrics.kernel_cache_bytes,
                 }
             })
             .collect();
@@ -640,6 +656,7 @@ impl Server {
             p50_latency: p50,
             p99_latency: p99,
             voxels: per_shard.iter().map(|s| s.voxels).sum(),
+            kernel_cache_bytes: per_shard.iter().map(|s| s.kernel_cache_bytes).max().unwrap_or(0),
             per_shard,
         }
     }
@@ -868,7 +885,7 @@ mod tests {
     #[test]
     fn oversized_request_rejected_up_front() {
         let (net, cp, pool) = setup();
-        let ws = cp.workspace_req(pool.workers()).times(pool.workers()).bytes;
+        let ws = cp.workspace_req(pool.workers()).times(pool.workers()).total();
         let cfg = ServerConfig { memory_budget: ws + 1024, ..ServerConfig::default() };
         let server = Server::start(net, cp, cfg, pool).unwrap();
         // 18³ input + dense output is far beyond 1 KiB of batch room.
@@ -944,6 +961,36 @@ mod tests {
         // urgent (what a sibling steals).
         assert_eq!(q.pop_front().unwrap().id, 2);
         assert_eq!(q.pop_back().unwrap().id, 4);
+    }
+
+    #[test]
+    fn kernel_cache_bytes_surface_in_metrics() {
+        // Force the FFT family so the searched plan caches its kernel
+        // spectra; the resident bytes must be visible in the aggregate
+        // and per-shard metrics (same shared Arc, so max == per-shard).
+        let net = crate::net::zoo::tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+        space.algos = vec![crate::memory::model::ConvAlgo::FftTaskParallel];
+        space.max_candidates = 2;
+        let plan = search(&net, &space, &cm).unwrap();
+        let cached_planned = plan.kernel_cache_bytes;
+        let weights = make_weights(&net, 3);
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 }));
+        let cfg = ServerConfig { shards: 2, queue_depth: 8, ..ServerConfig::default() };
+        let server = Server::start(net, cp, cfg, pool).unwrap();
+        let vol = Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 5);
+        server.submit(vol).unwrap().wait().unwrap();
+        let m = server.metrics();
+        // The kill switch (ZNNI_KERNEL_CACHE=off) zeroes both sides;
+        // either way the gauge must agree with the plan's decision.
+        use crate::conv::precomp::{cache_mode, CacheMode};
+        if cached_planned > 0 && cache_mode() != CacheMode::Off {
+            assert_eq!(m.kernel_cache_bytes, cached_planned);
+        } else {
+            assert_eq!(m.kernel_cache_bytes, 0);
+        }
     }
 
     #[test]

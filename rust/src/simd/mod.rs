@@ -344,8 +344,6 @@ pub(crate) fn cmul_tier(tier: Tier, dst: &mut [Complex32], a: &[Complex32], b: &
 }
 
 /// Radix-2 DIT combine (see [`scalar::radix2_combine`] for semantics).
-/// NEON currently falls back to scalar here; the butterflies are
-/// memory-bound on 128-bit ISAs.
 #[inline]
 pub fn radix2_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {
     radix2_combine_tier(active(), dst, m, tw, step, n);
@@ -380,6 +378,8 @@ pub(crate) fn radix2_combine_tier(
         Tier::Avx2Fma => unsafe { x86::radix2_combine_avx2(dst, m, tw, step, n) },
         #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
         Tier::Sse2 => unsafe { x86::radix2_combine_sse2(dst, m, tw, step, n) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::radix2_combine_neon(dst, m, tw, step, n) },
         _ => scalar::radix2_combine(dst, m, tw, step, n),
     }
 }
@@ -419,6 +419,8 @@ pub(crate) fn radix4_combine_tier(
         Tier::Avx2Fma => unsafe { x86::radix4_combine_avx2(dst, m, tw, step, n) },
         #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
         Tier::Sse2 => unsafe { x86::radix4_combine_sse2(dst, m, tw, step, n) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::radix4_combine_neon(dst, m, tw, step, n) },
         _ => scalar::radix4_combine(dst, m, tw, step, n),
     }
 }

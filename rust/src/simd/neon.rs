@@ -4,8 +4,11 @@
 //! The complex kernels use `vld2q`/`vst2q` structured loads, which
 //! deinterleave to split-complex (SoA) registers for free — the complex
 //! multiply-accumulate is then four fused multiply-adds, the same shape
-//! as the AVX2 tile. The radix butterflies currently fall back to
-//! scalar (see `simd::radix2_combine_with`).
+//! as the AVX2 tile. The radix-2/4 butterfly combines run four
+//! butterflies per iteration on the same split-complex representation
+//! (twiddles gathered scalar-side exactly like the x86 tiers, so the
+//! accumulated-index arithmetic matches the scalar oracle bit for bit);
+//! remainder tails fall through to `scalar::radix*_combine_from`.
 
 #![allow(clippy::missing_safety_doc)]
 
@@ -80,6 +83,133 @@ pub unsafe fn mad_spectra_neon(acc: &mut [Complex32], a: &[Complex32], b: &[Comp
         i += 4;
     }
     scalar::mad_spectra(&mut acc[i..], &a[i..], &b[i..]);
+}
+
+/// Split-complex multiply of four packed complexes: `a · b` with re/im
+/// in separate lanes (the `vld2q` representation).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cmul4(a: float32x4x2_t, b: float32x4x2_t) -> float32x4x2_t {
+    let re = vfmsq_f32(vmulq_f32(a.0, b.0), a.1, b.1);
+    let im = vfmaq_f32(vmulq_f32(a.0, b.1), a.1, b.0);
+    float32x4x2_t(re, im)
+}
+
+/// Split-complex add of four packed complexes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cadd4(a: float32x4x2_t, b: float32x4x2_t) -> float32x4x2_t {
+    float32x4x2_t(vaddq_f32(a.0, b.0), vaddq_f32(a.1, b.1))
+}
+
+/// Split-complex subtract of four packed complexes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn csub4(a: float32x4x2_t, b: float32x4x2_t) -> float32x4x2_t {
+    float32x4x2_t(vsubq_f32(a.0, b.0), vsubq_f32(a.1, b.1))
+}
+
+/// Split-complex multiply by `-i`: `(re, im) → (im, -re)` — mirrors
+/// `Complex32::mul_neg_i`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn cmul_neg_i4(a: float32x4x2_t) -> float32x4x2_t {
+    float32x4x2_t(a.1, vnegq_f32(a.0))
+}
+
+#[target_feature(enable = "neon")]
+/// NEON radix-2 DIT combine: four butterflies per iteration, scalar
+/// remainder tail (see `scalar::radix2_combine` for semantics).
+pub unsafe fn radix2_combine_neon(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    let base = dst.as_mut_ptr() as *mut f32;
+    let lo = base;
+    let hi = base.add(2 * m);
+    let mut wbuf = [Complex32::ZERO; 4];
+    // Twiddle index (k2·step) mod n by accumulation — no per-butterfly
+    // multiply/modulo in the gather (mirrors the scalar path).
+    let step = step % n;
+    let mut w = 0usize;
+    let mut k2 = 0usize;
+    while k2 + 4 <= m {
+        for slot in wbuf.iter_mut() {
+            *slot = tw[w];
+            w += step;
+            if w >= n {
+                w -= n;
+            }
+        }
+        let wv = vld2q_f32(wbuf.as_ptr() as *const f32);
+        let t0 = vld2q_f32(lo.add(2 * k2));
+        let t1 = cmul4(vld2q_f32(hi.add(2 * k2)), wv);
+        vst2q_f32(lo.add(2 * k2), cadd4(t0, t1));
+        vst2q_f32(hi.add(2 * k2), csub4(t0, t1));
+        k2 += 4;
+    }
+    scalar::radix2_combine_from(dst, m, tw, step, n, k2);
+}
+
+#[target_feature(enable = "neon")]
+/// NEON radix-4 DIT combine: four butterflies per iteration, scalar
+/// remainder tail (see `scalar::radix4_combine` for semantics).
+pub unsafe fn radix4_combine_neon(
+    dst: &mut [Complex32],
+    m: usize,
+    tw: &[Complex32],
+    step: usize,
+    n: usize,
+) {
+    let base = dst.as_mut_ptr() as *mut f32;
+    let d0 = base;
+    let d1 = base.add(2 * m);
+    let d2 = base.add(4 * m);
+    let d3 = base.add(6 * m);
+    // Gathered twiddles: w¹[4], w²[4], w³[4]. The w¹ index accumulates;
+    // w² and w³ are additions with a conditional wrap (same arithmetic
+    // as the scalar oracle, so indices agree exactly).
+    let mut wbuf = [Complex32::ZERO; 12];
+    let step = step % n;
+    let mut w1 = 0usize;
+    let mut k2 = 0usize;
+    while k2 + 4 <= m {
+        for j in 0..4 {
+            let mut w2 = w1 + w1;
+            if w2 >= n {
+                w2 -= n;
+            }
+            let mut w3 = w2 + w1;
+            if w3 >= n {
+                w3 -= n;
+            }
+            wbuf[j] = tw[w1];
+            wbuf[4 + j] = tw[w2];
+            wbuf[8 + j] = tw[w3];
+            w1 += step;
+            if w1 >= n {
+                w1 -= n;
+            }
+        }
+        let wp = wbuf.as_ptr() as *const f32;
+        let t0 = vld2q_f32(d0.add(2 * k2));
+        let t1 = cmul4(vld2q_f32(d1.add(2 * k2)), vld2q_f32(wp));
+        let t2 = cmul4(vld2q_f32(d2.add(2 * k2)), vld2q_f32(wp.add(8)));
+        let t3 = cmul4(vld2q_f32(d3.add(2 * k2)), vld2q_f32(wp.add(16)));
+        let a = cadd4(t0, t2);
+        let b = csub4(t0, t2);
+        let c = cadd4(t1, t3);
+        let d = cmul_neg_i4(csub4(t1, t3));
+        vst2q_f32(d0.add(2 * k2), cadd4(a, c));
+        vst2q_f32(d1.add(2 * k2), cadd4(b, d));
+        vst2q_f32(d2.add(2 * k2), csub4(a, c));
+        vst2q_f32(d3.add(2 * k2), csub4(b, d));
+        k2 += 4;
+    }
+    scalar::radix4_combine_from(dst, m, tw, step, n, k2);
 }
 
 #[target_feature(enable = "neon")]

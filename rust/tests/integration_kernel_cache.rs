@@ -1,0 +1,217 @@
+//! The weight-spectrum cache end to end (ISSUE 5): precomputed kernel
+//! spectra must be bit-identical to on-the-fly transforms for every FFT
+//! family on every supported SIMD tier, the memory ledger must see
+//! exactly the planned `workspace_req + kernel-spectra row`, and the
+//! optimizer must treat caching as a searched, budgeted decision.
+//!
+//! `simd::force`, `precomp::force_cache_mode` and the process ledger are
+//! global, so every test in this binary that touches them serializes on
+//! one mutex.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use znni::conv::precomp::{force_cache_mode, CacheMode, PrecomputedKernels, SpectraLayout};
+use znni::conv::{conv_layer_reference, Activation, Weights};
+use znni::exec::ExecCtx;
+use znni::layers::{ConvLayer, LayerPrimitive};
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::tiny_net;
+use znni::optimizer::{compile, make_weights, search, CostModel, PlanLayer, SearchSpace};
+use znni::simd;
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+use znni::util::quick::assert_allclose;
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicking test poisons the mutex; the remaining tests still
+    // need to run serialized, so take the guard either way.
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+const FFT_FAMILIES: [ConvAlgo; 3] =
+    [ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel, ConvAlgo::GpuFft];
+
+/// Acceptance: cached-kernel execution is bit-identical to on-the-fly
+/// for all three FFT primitives, across every SIMD tier this CPU
+/// supports, including warm-ctx reuse across calls (the second round
+/// runs entirely out of recycled arena buffers on both paths).
+#[test]
+fn cached_spectra_bit_identical_across_tiers_and_warm_reuse() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let pool = tpool();
+    for algo in FFT_FAMILIES {
+        for tier in simd::supported_tiers() {
+            simd::force(Some(tier));
+            // Fresh layers per tier: the cache must be built under the
+            // same tier the on-the-fly path transforms with.
+            let w = Arc::new(Weights::random(4, 3, [3, 2, 3], 91));
+            let plain = ConvLayer::new(w.clone(), algo, Activation::Relu);
+            let cached = ConvLayer::new(w.clone(), algo, Activation::Relu).with_kernel_cache(true);
+            let input = Tensor5::random(Shape5::new(2, 3, 7, 8, 9), 17);
+            let mut ctx = ExecCtx::new(&pool);
+            for round in 0..2 {
+                let a = plain.execute(input.clone_tensor(), &mut ctx);
+                let b = cached.execute(input.clone_tensor(), &mut ctx);
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{algo:?} on {tier:?} round {round}: cached != recomputed"
+                );
+                if round == 0 {
+                    // And both are *correct*, not just mutually equal.
+                    let expect = conv_layer_reference(&input, &w, Activation::Relu);
+                    assert_allclose(b.data(), expect.data(), 1e-3, 1e-2, "cached vs reference");
+                }
+                ctx.retire(a);
+                ctx.retire(b);
+            }
+            assert!(cached.kernel_cache_bytes() > 0, "{algo:?}: cache must be resident");
+            simd::force(None);
+        }
+    }
+    force_cache_mode(None);
+}
+
+/// A cache built for one padded FFT shape must not poison executions at
+/// another shape — the primitive falls back to on-the-fly transforms.
+#[test]
+fn mismatched_shape_falls_back_to_recompute() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let pool = tpool();
+    for algo in FFT_FAMILIES {
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 5));
+        let cached = ConvLayer::new(w.clone(), algo, Activation::None).with_kernel_cache(true);
+        // Build the cache at 8³ …
+        cached.warm(Shape5::new(1, 2, 8, 8, 8), &pool);
+        let built = cached.kernel_cache_bytes();
+        assert!(built > 0);
+        // … then execute at 11³: the padded shape differs, so the layer
+        // must recompute (and still be correct).
+        let input = Tensor5::random(Shape5::new(1, 2, 11, 11, 11), 6);
+        let mut ctx = ExecCtx::new(&pool);
+        let out = cached.execute(input.clone_tensor(), &mut ctx);
+        let expect = conv_layer_reference(&input, &w, Activation::None);
+        assert_allclose(out.data(), expect.data(), 1e-3, 1e-2, "fallback correctness");
+        assert_eq!(cached.kernel_cache_bytes(), built, "no rebuild at the wrong shape");
+    }
+    force_cache_mode(None);
+}
+
+/// The `ZNNI_KERNEL_CACHE` kill switch (forced programmatically here):
+/// `off` must keep even an enabled layer from building spectra.
+#[test]
+fn off_mode_disables_enabled_layers() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Off));
+    let pool = tpool();
+    let w = Arc::new(Weights::random(2, 2, [3, 3, 3], 7));
+    let layer = ConvLayer::new(w, ConvAlgo::FftTaskParallel, Activation::Relu)
+        .with_kernel_cache(true);
+    layer.warm(Shape5::new(1, 2, 9, 9, 9), &pool);
+    assert_eq!(layer.kernel_cache_bytes(), 0, "off mode must build nothing");
+    let mut ctx = ExecCtx::new(&pool);
+    let out = layer.execute(Tensor5::random(Shape5::new(1, 2, 9, 9, 9), 8), &mut ctx);
+    assert_eq!(layer.kernel_cache_bytes(), 0, "execute must not build under off mode");
+    ctx.retire(out);
+    force_cache_mode(None);
+}
+
+/// Memory-model regression (acceptance): with caching enabled, the
+/// ledger's measured peak stays within `workspace_req` plus the new
+/// kernel-spectra row — no hidden allocations — and an undersized arena
+/// budget still fails at `ExecCtx::reserve` (plan time), never
+/// mid-execution.
+#[test]
+fn ledger_peak_matches_workspace_plus_spectra_row() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let pool = tpool();
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(znni::device::Device::host_with_ram(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 1;
+    let plan = search(&net, &space, &cm).expect("feasible");
+    assert!(plan.kernel_cache_bytes > 0, "plan must choose to cache under 4 GiB");
+    let weights = make_weights(&net, 9);
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let req = cp.workspace_req(pool.workers());
+    assert_eq!(req.resident_bytes, plan.kernel_cache_bytes, "planned row == searched row");
+
+    let input = Tensor5::random(plan.input, 10);
+    let input_bytes = plan.input.bytes_f32();
+    let (out, peak) = znni::memory::measure(|| {
+        // Cold context *and* cache build inside the measured section:
+        // the spectra register with the ledger like any allocation.
+        let mut ctx = cp.make_ctx(&pool).expect("budget admits the plan");
+        cp.run(input, &mut ctx)
+    });
+    assert_eq!(cp.kernel_cache_bytes(), plan.kernel_cache_bytes, "built == planned");
+    let measured = peak + input_bytes;
+    assert!(
+        measured <= req.total() + input_bytes,
+        "measured peak {measured} exceeds workspace {} + spectra row {} + input {input_bytes}",
+        req.bytes,
+        req.resident_bytes
+    );
+    assert_eq!(out.shape(), *plan.shapes.last().unwrap());
+
+    // Undersized budget: rejected at reserve, before execution.
+    let mut tiny_ctx = ExecCtx::with_budget(&pool, req.bytes / 2);
+    let err = tiny_ctx.reserve(&req).expect_err("undersized budget must fail at plan time");
+    assert!(err.to_string().contains("undersized"), "{err}");
+    force_cache_mode(None);
+}
+
+/// Acceptance: `on` (force) mode caches every admissible FFT layer even
+/// when the cost model would not bother, and the plan accounts for it.
+#[test]
+fn force_mode_caches_every_fft_layer() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Force));
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(2);
+    let mut space = SearchSpace::cpu_only(znni::device::Device::host_with_ram(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel];
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).expect("feasible");
+    for l in &plan.layers {
+        if let PlanLayer::Conv { algo, cache_kernels } = l {
+            assert!(algo.uses_kernel_cache());
+            assert!(*cache_kernels, "force mode must cache every FFT layer");
+        }
+    }
+    assert!(plan.kernel_cache_bytes > 0);
+    assert!(plan.est_memory >= plan.kernel_cache_bytes);
+    force_cache_mode(None);
+}
+
+/// The raw store: a CPU-layout cache and a GPU-layout cache for the
+/// same weights are distinct allocations with the expected geometry.
+#[test]
+fn store_layouts_are_independent() {
+    let _g = guard();
+    let pool = tpool();
+    let w = Weights::random(3, 2, [2, 2, 2], 13);
+    let padded = [6, 6, 6];
+    let cpu = PrecomputedKernels::build(&w, SpectraLayout::Cpu, padded, &pool);
+    let gpu = PrecomputedKernels::build(&w, SpectraLayout::Gpu, padded, &pool);
+    assert_eq!(cpu.layout(), SpectraLayout::Cpu);
+    assert_eq!(gpu.layout(), SpectraLayout::Gpu);
+    assert_eq!(cpu.padded(), padded);
+    // Same element count per kernel (x̃·ỹ·(z̃/2+1) complex bins), so the
+    // resident rows agree — the single `kernel_spectra_bytes` law.
+    assert_eq!(cpu.bytes(), gpu.bytes());
+    assert_eq!(cpu.spectrum(2, 1).len(), 6 * 6 * 4);
+    assert_eq!(gpu.batch(2).len(), 2 * 6 * 6 * 4);
+}

@@ -60,7 +60,7 @@ fn gpu_plans_respect_device_ram() {
         if let Some(plan) = search(&net, &space, &cm) {
             assert!(plan.est_memory <= Device::titan_x().ram_bytes, "{}", net.name);
             for l in &plan.layers {
-                if let PlanLayer::Conv { algo } = l {
+                if let PlanLayer::Conv { algo, .. } = l {
                     assert!(algo.is_gpu(), "{}", net.name);
                 }
             }

@@ -69,14 +69,15 @@ fn tiny_net_artifact_matches_compiled_plan() {
         net_name: net.name.clone(),
         input: input.shape(),
         layers: vec![
-            PlanLayer::Conv { algo: ConvAlgo::FftTaskParallel },
+            PlanLayer::Conv { algo: ConvAlgo::FftTaskParallel, cache_kernels: false },
             PlanLayer::Pool { mode: PoolingMode::Mpf },
-            PlanLayer::Conv { algo: ConvAlgo::DirectMkl },
-            PlanLayer::Conv { algo: ConvAlgo::GpuFft },
+            PlanLayer::Conv { algo: ConvAlgo::DirectMkl, cache_kernels: false },
+            PlanLayer::Conv { algo: ConvAlgo::GpuFft, cache_kernels: false },
         ],
         shapes,
         est_secs: 1.0,
         est_memory: 0,
+        kernel_cache_bytes: 0,
         out_voxels: (out.s * out.x * out.y * out.z) as u64,
     };
     let cp = compile(&net, &plan, &weights).unwrap();

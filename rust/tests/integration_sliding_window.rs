@@ -22,7 +22,7 @@ fn manual_plan(net: &NetSpec, input: Shape5, modes: &[PoolingMode], algo: ConvAl
         .layers
         .iter()
         .map(|l| match l {
-            LayerSpec::Conv { .. } => PlanLayer::Conv { algo },
+            LayerSpec::Conv { .. } => PlanLayer::Conv { algo, cache_kernels: false },
             LayerSpec::Pool { .. } => {
                 let m = modes[mi];
                 mi += 1;
@@ -38,6 +38,7 @@ fn manual_plan(net: &NetSpec, input: Shape5, modes: &[PoolingMode], algo: ConvAl
         shapes,
         est_secs: 1.0,
         est_memory: 0,
+        kernel_cache_bytes: 0,
         out_voxels: (out.s * out.x * out.y * out.z) as u64,
     }
 }
