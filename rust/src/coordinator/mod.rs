@@ -34,7 +34,9 @@ use crate::inference::{dense_output_shape, fragment_map, recombine, FragmentMap}
 use crate::net::{NetSpec, PoolingMode};
 use crate::optimizer::CompiledPlan;
 use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
+use crate::util::sync::recover_lock;
 
 /// A whole-volume inference request.
 pub struct InferenceRequest {
@@ -194,6 +196,15 @@ impl Coordinator {
         &self.plan
     }
 
+    /// Drop every warm per-worker arena. The shard supervisor calls
+    /// this after a panic: an unwinding worker loses its checked-out
+    /// arena mid-flight, so the survivors are dropped too and the next
+    /// serve call re-warms a consistent set (their backing memory is
+    /// released through the global ledger as usual).
+    pub fn reset_arenas(&self) {
+        recover_lock(&self.arenas).clear();
+    }
+
     /// The compiled plan's arena requirement per worker (Table II max
     /// across layers) — what each worker's warm arena converges to.
     pub fn workspace_req(&self, threads: usize) -> crate::exec::WorkspaceReq {
@@ -315,6 +326,7 @@ impl Coordinator {
             // Workers: crop patch → compiled plan → recombination →
             // in-place assembly, all against a long-lived per-worker
             // context whose buffers cycle locally.
+            let mut handles = Vec::with_capacity(self.workers.max(1));
             for _ in 0..self.workers.max(1) {
                 let plan = self.plan.clone();
                 let fmap = &self.fmap;
@@ -331,14 +343,19 @@ impl Coordinator {
                 let voxels = &voxels;
                 let busy_us = &busy_us;
                 let assembly_ns = &assembly_ns;
-                s.spawn(move || {
-                    let arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+                handles.push(s.spawn(move || {
+                    let arena = recover_lock(&self.arenas).pop().unwrap_or_default();
                     let fresh_before = arena.stats().fresh_allocs;
                     let mut ctx = ExecCtx::from_arena(pool, arena);
                     let mut lock_ns = 0u64;
                     loop {
                         let idx = next.fetch_add(1, Ordering::SeqCst);
                         let Some(&(ri, start)) = jobs.get(idx) else { break };
+                        // Failpoint: a panic here unwinds this worker
+                        // (losing its arena), propagates through the
+                        // scope, and must surface as a typed error —
+                        // never a hung ticket.
+                        faults::fire(FaultSite::WorkerPatch);
                         let r = &reqs[ri];
                         let vsh = r.volume.shape();
                         let mut pin = ctx.tensor5(Shape5::from_spatial(1, vsh.f, patch));
@@ -378,7 +395,7 @@ impl Coordinator {
                                     let chunk = drow0 / chunk_len;
                                     let base = chunk * chunk_len;
                                     let t_lock = Instant::now();
-                                    let mut band = bands_r[chunk].lock().unwrap();
+                                    let mut band = recover_lock(&bands_r[chunk]);
                                     lock_ns += t_lock.elapsed().as_nanos() as u64;
                                     let buf: &mut [f32] = &mut band;
                                     for y in 0..cover[1] {
@@ -399,8 +416,18 @@ impl Coordinator {
                     let st = ctx.arena.stats();
                     arena_hwm.fetch_max(st.hwm_bytes, Ordering::SeqCst);
                     arena_fresh.fetch_add(st.fresh_allocs - fresh_before, Ordering::SeqCst);
-                    self.arenas.lock().unwrap().push(ctx.into_arena());
-                });
+                    recover_lock(&self.arenas).push(ctx.into_arena());
+                }));
+            }
+            // Join explicitly and re-raise the first panic with its
+            // original payload: `std::thread::scope` alone would replace
+            // it with a generic "a scoped thread panicked" message,
+            // losing the failpoint site the server's supervisor reports
+            // in `ServeError::Internal`.
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    std::panic::resume_unwind(payload);
+                }
             }
         });
 

@@ -54,7 +54,9 @@ use crate::fft::batched::BatchedFft3;
 use crate::fft::Fft3;
 use crate::memory;
 use crate::tensor::{Complex32, Shape5, Tensor5, Vec3};
+use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
+use crate::util::sync::recover_lock;
 
 /// Bytes an execution needs from the arena, computed at plan time from
 /// the Table II model (input + output + transients of the worst layer),
@@ -254,6 +256,7 @@ impl Arena {
         if len == 0 {
             return Vec::new();
         }
+        faults::fire(FaultSite::ArenaTake);
         let bytes = (len * 4) as u64;
         if let Some(v) = self.f32_free.get_mut(&len).and_then(Vec::pop) {
             self.held -= bytes;
@@ -307,6 +310,7 @@ impl Arena {
         if len == 0 {
             return Vec::new();
         }
+        faults::fire(FaultSite::ArenaTake);
         let bytes = (len * 8) as u64;
         if let Some(v) = self.c32_free.get_mut(&len).and_then(Vec::pop) {
             self.held -= bytes;
@@ -519,7 +523,7 @@ fn batched_cache() -> &'static Mutex<HashMap<(Vec3, Vec3), Arc<BatchedFft3>>> {
 
 /// Shared plan for serial/data-parallel 3D FFTs padded to `padded`.
 pub fn fft3_plan(padded: Vec3) -> Arc<Fft3> {
-    let mut c = fft3_cache().lock().unwrap();
+    let mut c = recover_lock(fft3_cache());
     c.entry(padded).or_insert_with(|| Arc::new(Fft3::new(padded))).clone()
 }
 
@@ -527,13 +531,13 @@ pub fn fft3_plan(padded: Vec3) -> Arc<Fft3> {
 /// `padded` (the kernel and image transforms of one layer are distinct
 /// keys because their pruning differs).
 pub fn batched_fft3_plan(dims: Vec3, padded: Vec3) -> Arc<BatchedFft3> {
-    let mut c = batched_cache().lock().unwrap();
+    let mut c = recover_lock(batched_cache());
     c.entry((dims, padded)).or_insert_with(|| Arc::new(BatchedFft3::new(dims, padded))).clone()
 }
 
 /// Number of cached plans (both families) — observability for tests.
 pub fn plan_cache_len() -> usize {
-    fft3_cache().lock().unwrap().len() + batched_cache().lock().unwrap().len()
+    recover_lock(fft3_cache()).len() + recover_lock(batched_cache()).len()
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@
 //! size the arena up front from the model the search already ranked
 //! plans with.
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex};
 
 use crate::conv::precomp::{cache_mode, CacheMode, PrecomputedKernels, SpectraLayout};
 use crate::conv::{self, Activation, Weights};
@@ -22,7 +22,9 @@ use crate::memory::model::{
 };
 use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
 use crate::tensor::{Shape5, Tensor5, Vec3};
+use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
+use crate::util::sync::recover_lock;
 
 /// Which device a primitive is meant for (§IV.A vs §IV.B). On this
 /// testbed the GPU is simulated — see `crate::device`.
@@ -81,6 +83,27 @@ pub trait LayerPrimitive: Send + Sync {
     fn kernel_cache_bytes(&self) -> u64 {
         0
     }
+
+    /// Drop any resident kernel-spectra cache to relieve memory
+    /// pressure, returning the bytes released (0 when nothing is
+    /// resident). A shed layer falls back to on-the-fly kernel
+    /// transforms and must *not* rebuild the cache until
+    /// [`LayerPrimitive::restore_kernel_cache`] — otherwise the next
+    /// warm call would immediately re-allocate under the same pressure.
+    fn shed_kernel_cache(&self) -> u64 {
+        0
+    }
+
+    /// Allow a shed kernel-spectra cache to rebuild lazily on next use
+    /// (called once memory pressure has cleared).
+    fn restore_kernel_cache(&self) {}
+}
+
+/// Shed-aware kernel-spectra cache state: the built spectra plus a
+/// pressure flag blocking rebuilds while shed.
+struct KernelCacheState {
+    built: Option<Arc<PrecomputedKernels>>,
+    shed: bool,
 }
 
 /// Convolutional layer with a fixed algorithm choice.
@@ -94,10 +117,10 @@ pub struct ConvLayer {
     /// Whether this layer precomputes its kernel spectra (the plan's
     /// per-layer cache decision; see [`ConvLayer::with_kernel_cache`]).
     cache_enabled: bool,
-    /// The spectra, built once on first use (or
-    /// [`LayerPrimitive::warm`]) and shared via `Arc` across every
-    /// worker and shard from then on.
-    kernel_cache: OnceLock<Arc<PrecomputedKernels>>,
+    /// The spectra, built on first use (or [`LayerPrimitive::warm`])
+    /// and shared via `Arc` across every worker and shard; shed under
+    /// memory pressure (see [`LayerPrimitive::shed_kernel_cache`]).
+    kernel_cache: Mutex<KernelCacheState>,
 }
 
 impl ConvLayer {
@@ -105,7 +128,13 @@ impl ConvLayer {
     /// caching off — the searched plan enables it via
     /// [`ConvLayer::with_kernel_cache`]).
     pub fn new(weights: Arc<Weights>, algo: ConvAlgo, act: Activation) -> Self {
-        ConvLayer { weights, algo, act, cache_enabled: false, kernel_cache: OnceLock::new() }
+        ConvLayer {
+            weights,
+            algo,
+            act,
+            cache_enabled: false,
+            kernel_cache: Mutex::new(KernelCacheState { built: None, shed: false }),
+        }
     }
 
     /// Enable (or disable) the precomputed kernel-spectra cache for
@@ -123,19 +152,27 @@ impl ConvLayer {
     }
 
     /// The cache to execute against for `input`, building it on first
-    /// use. Returns `None` when caching is off (plan decision or the
-    /// `ZNNI_KERNEL_CACHE=off` kill switch) or when the cache was built
-    /// for a different padded FFT shape than `input` needs — the
-    /// primitive then falls back to on-the-fly transforms.
+    /// use. Returns `None` when caching is off (plan decision, the
+    /// `ZNNI_KERNEL_CACHE=off` kill switch, or the cache is currently
+    /// shed under memory pressure) or when the cache was built for a
+    /// different padded FFT shape than `input` needs — the primitive
+    /// then falls back to on-the-fly transforms.
     fn kernels_for(&self, input: Shape5, pool: &TaskPool) -> Option<Arc<PrecomputedKernels>> {
         if !self.cache_enabled || cache_mode() == CacheMode::Off {
             return None;
         }
         let layout = SpectraLayout::for_algo(self.algo)?;
         let padded = fft_optimal_vec3(input.spatial());
-        let cache = self.kernel_cache.get_or_init(|| {
-            Arc::new(PrecomputedKernels::build(&self.weights, layout, padded, pool))
-        });
+        let mut st = recover_lock(&self.kernel_cache);
+        if st.shed {
+            return None;
+        }
+        if st.built.is_none() {
+            faults::fire(FaultSite::KernelCacheWarm);
+            st.built =
+                Some(Arc::new(PrecomputedKernels::build(&self.weights, layout, padded, pool)));
+        }
+        let cache = st.built.as_ref().expect("just built");
         if cache.matches(layout, padded, self.weights.f_out, self.weights.f_in) {
             Some(cache.clone())
         } else {
@@ -214,7 +251,23 @@ impl LayerPrimitive for ConvLayer {
     }
 
     fn kernel_cache_bytes(&self) -> u64 {
-        self.kernel_cache.get().map(|c| c.bytes()).unwrap_or(0)
+        recover_lock(&self.kernel_cache).built.as_ref().map(|c| c.bytes()).unwrap_or(0)
+    }
+
+    fn shed_kernel_cache(&self) -> u64 {
+        let mut st = recover_lock(&self.kernel_cache);
+        let bytes = st.built.as_ref().map(|c| c.bytes()).unwrap_or(0);
+        if bytes > 0 {
+            // Drop our Arc (workers mid-execute keep theirs alive until
+            // their batch finishes) and block rebuilds until restored.
+            st.built = None;
+            st.shed = true;
+        }
+        bytes
+    }
+
+    fn restore_kernel_cache(&self) {
+        recover_lock(&self.kernel_cache).shed = false;
     }
 
     fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
@@ -449,6 +502,32 @@ mod tests {
             ctx.retire(a);
             ctx.retire(b);
         }
+    }
+
+    #[test]
+    fn shed_blocks_rebuild_until_restore() {
+        let p = tpool();
+        let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 6);
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 2));
+        let cached =
+            ConvLayer::new(w, ConvAlgo::FftTaskParallel, Activation::Relu).with_kernel_cache(true);
+        cached.warm(input.shape(), &p);
+        let bytes = cached.kernel_cache_bytes();
+        // (Under ZNNI_KERNEL_CACHE=off nothing is resident and shed is
+        // a no-op returning 0 — every assertion below still holds.)
+        assert_eq!(cached.shed_kernel_cache(), bytes);
+        assert_eq!(cached.kernel_cache_bytes(), 0, "shed must release the row");
+        cached.warm(input.shape(), &p);
+        assert_eq!(cached.kernel_cache_bytes(), 0, "warm must not rebuild while shed");
+        let mut ctx = ExecCtx::new(&p);
+        let a = cached.execute(input.clone_tensor(), &mut ctx);
+        cached.restore_kernel_cache();
+        cached.warm(input.shape(), &p);
+        assert_eq!(cached.kernel_cache_bytes(), bytes, "restore re-admits the rebuild");
+        let b = cached.execute(input.clone_tensor(), &mut ctx);
+        assert_eq!(a.data(), b.data(), "shed fallback must be bit-identical");
+        ctx.retire(a);
+        ctx.retire(b);
     }
 
     #[test]

@@ -612,6 +612,32 @@ impl CompiledPlan {
         self.primitives.iter().map(|p| p.kernel_cache_bytes()).sum()
     }
 
+    /// Shed the single largest resident kernel-spectra cache row to
+    /// relieve memory pressure, returning the bytes released (0 when
+    /// nothing is resident). Largest-first mirrors the order `search`'s
+    /// evaluate fallback drops over-budget cache rows in: the rows
+    /// buying the least throughput per byte go first, and the layer
+    /// falls back to on-the-fly kernel transforms without affecting
+    /// outputs. The shed layer does not rebuild until
+    /// [`CompiledPlan::restore_kernel_caches`].
+    pub fn shed_largest_kernel_cache(&self) -> u64 {
+        let largest = self
+            .primitives
+            .iter()
+            .max_by_key(|p| p.kernel_cache_bytes())
+            .filter(|p| p.kernel_cache_bytes() > 0);
+        largest.map(|p| p.shed_kernel_cache()).unwrap_or(0)
+    }
+
+    /// Re-admit lazy rebuilds of every shed kernel-spectra cache — the
+    /// next [`CompiledPlan::warm_kernel_caches`] (every serve call runs
+    /// one) builds them back. Called once memory pressure clears.
+    pub fn restore_kernel_caches(&self) {
+        for p in &self.primitives {
+            p.restore_kernel_cache();
+        }
+    }
+
     /// Build an execution context whose arena budget is this plan's
     /// [`CompiledPlan::workspace_req`]. The reserve check runs at plan
     /// time — an infeasible budget errors here, never mid-execution.

@@ -132,7 +132,7 @@ impl Runtime {
     }
 
     fn ensure_loaded(&self, name: &str) -> Result<()> {
-        let mut loaded = self.loaded.lock().unwrap();
+        let mut loaded = crate::util::sync::recover_lock(&self.loaded);
         if loaded.contains_key(name) {
             return Ok(());
         }
@@ -178,7 +178,7 @@ impl Runtime {
                 .map_err(|e| anyhow!("reshape arg {i}: {e:?}"))?;
             literals.push(lit);
         }
-        let loaded = self.loaded.lock().unwrap();
+        let loaded = crate::util::sync::recover_lock(&self.loaded);
         let exe = loaded.get(name).unwrap();
         let result = exe
             .execute::<xla::Literal>(&literals)

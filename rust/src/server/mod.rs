@@ -46,6 +46,18 @@
 //!   requests that complete past their deadline count into
 //!   [`ServerMetrics::completed_late`]. Both kinds of miss aggregate in
 //!   [`ServerMetrics::deadline_misses`].
+//! * **Fault tolerance** — every batch dispatch runs under
+//!   `catch_unwind`: a panic anywhere in a shard's compute path answers
+//!   each batch member with a typed [`ServeError::Internal`] (no ticket
+//!   ever hangs) and a per-shard **supervisor** restarts the serving
+//!   loop with fresh warm arenas, leaving undispatched requests in the
+//!   EDF queue. Memory pressure (ledger over budget, or an injected
+//!   `arena_take:reserve_fail` failpoint from [`crate::util::faults`])
+//!   degrades gracefully instead of panicking: admission tightens
+//!   ([`RejectReason::MemoryPressure`]), the largest resident
+//!   kernel-spectra cache row is shed (the optimizer's fallback order)
+//!   and the micro-batch cap halves until pressure clears. See
+//!   `docs/ARCHITECTURE.md`, "Fault tolerance & degradation".
 //!
 //! Use [`crate::optimizer::search_serving`] to derive both the plan and
 //! the [`ServerConfig`] from one search call; with a
@@ -77,8 +89,9 @@
 //! ```
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -90,10 +103,23 @@ use crate::memory::model::request_memory_bytes;
 use crate::net::NetSpec;
 use crate::optimizer::CompiledPlan;
 use crate::tensor::{Tensor5, Vec3};
+use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
+use crate::util::sync::{recover_lock, recover_wait_timeout};
 
 /// Latency samples retained for the p50/p99 estimate (ring buffer).
 const LATENCY_CAP: usize = 1 << 14;
+
+/// Idle backstop for the shard dispatch wait. Submits and shutdown
+/// notify the shard condvar directly, so this bound only limits how
+/// long a missed *steal* opportunity (work queued on a sibling) can
+/// wait before the idle shard re-polls.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// Consecutive pressure-free batches a shard must observe before the
+/// halved micro-batch cap is doubled one step back toward
+/// [`ServerConfig::max_batch_requests`].
+const PRESSURE_CLEAR_STREAK: usize = 4;
 
 /// Serving configuration — searched coarsely by
 /// [`crate::optimizer::search_serving`] alongside the execution plan.
@@ -161,6 +187,13 @@ pub enum RejectReason {
         /// What was wrong with the shape.
         detail: String,
     },
+    /// The server is shedding load because its shards are running under
+    /// memory pressure: admission operates at a reduced queue depth
+    /// until pressure clears. Backpressure; retry later.
+    MemoryPressure {
+        /// The reduced per-shard admission depth in effect.
+        depth: usize,
+    },
     /// The server is shutting down.
     ShuttingDown,
 }
@@ -192,6 +225,21 @@ pub enum ServeError {
     },
     /// The underlying coordinator batch failed.
     Failed(String),
+    /// The shard serving this request panicked. The panic was isolated
+    /// by `catch_unwind` — every batch member gets this typed answer
+    /// instead of a hung ticket — and the supervisor restarted the
+    /// shard with fresh warm arenas.
+    Internal {
+        /// The failpoint site (or raw panic message) the fault was
+        /// attributed to.
+        site: String,
+    },
+    /// [`Ticket::wait_timeout`] gave up before the response arrived.
+    /// The request is still in flight; waiting again may succeed.
+    TimedOut {
+        /// How long the caller waited before giving up.
+        waited: Duration,
+    },
     /// The server dropped before answering.
     Disconnected,
 }
@@ -203,6 +251,12 @@ impl std::fmt::Display for ServeError {
                 write!(f, "deadline exceeded after {:?} in queue", waited)
             }
             ServeError::Failed(msg) => write!(f, "serve failed: {msg}"),
+            ServeError::Internal { site } => {
+                write!(f, "internal error isolated at {site}; shard restarted")
+            }
+            ServeError::TimedOut { waited } => {
+                write!(f, "no response within {:?}; request still in flight", waited)
+            }
             ServeError::Disconnected => write!(f, "server disconnected"),
         }
     }
@@ -224,11 +278,25 @@ impl std::fmt::Debug for Ticket {
 }
 
 impl Ticket {
-    /// Block until the response (or error) arrives.
+    /// Block until the response (or error) arrives. Panic isolation in
+    /// the shard loop guarantees this cannot hang: a panicked batch
+    /// answers [`ServeError::Internal`], and a dropped server answers
+    /// [`ServeError::Disconnected`].
     pub fn wait(self) -> Result<InferenceResponse, ServeError> {
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(ServeError::Disconnected),
+        }
+    }
+
+    /// Wait at most `timeout` for the response. On
+    /// [`ServeError::TimedOut`] the ticket stays valid — the request is
+    /// still in flight, so the caller may wait (or poll) again.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<InferenceResponse, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::TimedOut { waited: timeout }),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Disconnected),
         }
     }
 }
@@ -269,6 +337,8 @@ struct ShardStats {
     requests: u64,
     steals: u64,
     expired: u64,
+    panics: u64,
+    restarts: u64,
     metrics: Metrics,
 }
 
@@ -302,6 +372,17 @@ struct Inner {
     batch_requests: AtomicU64,
     queue_depth_hwm: AtomicUsize,
     latencies: Mutex<LatencyRing>,
+    /// Effective micro-batch request cap: halved under memory pressure,
+    /// doubled back toward `cfg.max_batch_requests` as pressure clears.
+    batch_limit: AtomicUsize,
+    /// Whether admission currently runs at reduced depth.
+    pressured: AtomicBool,
+    /// Consecutive pressure-free batches observed while `pressured`.
+    clear_streak: AtomicUsize,
+    panics: AtomicU64,
+    restarts: AtomicU64,
+    mem_pressure_events: AtomicU64,
+    shed_cache_bytes: AtomicU64,
 }
 
 #[derive(Default)]
@@ -347,6 +428,12 @@ pub struct ShardSnapshot {
     /// Requests this shard dropped at dispatch because their deadline
     /// had already passed in the queue.
     pub expired: u64,
+    /// Batch panics isolated on this shard (each answered its batch
+    /// members with [`ServeError::Internal`]).
+    pub panics: u64,
+    /// Times the supervisor restarted this shard's serving loop with
+    /// fresh warm arenas.
+    pub restarts: u64,
     /// Current admission-queue length.
     pub queue_len: usize,
     /// Patches executed (coordinator metric).
@@ -402,6 +489,24 @@ pub struct ServerMetrics {
     /// sum) of the per-shard reports: the RAM the weight-spectrum cache
     /// is buying throughput with.
     pub kernel_cache_bytes: u64,
+    /// Batch panics isolated by `catch_unwind` across all shards: every
+    /// affected request was answered [`ServeError::Internal`] instead
+    /// of hanging its ticket.
+    pub panics: u64,
+    /// Shard serving loops restarted by their supervisor after a panic
+    /// (with fresh warm arenas; queued requests survive).
+    pub restarts: u64,
+    /// Times a shard observed memory pressure at batch dispatch (ledger
+    /// over budget, or an injected reserve failure).
+    pub mem_pressure_events: u64,
+    /// Kernel-spectra cache bytes shed (largest row first, mirroring
+    /// the optimizer's fallback order) to relieve memory pressure;
+    /// caches rebuild lazily once pressure clears.
+    pub shed_kernel_cache_bytes: u64,
+    /// Current effective micro-batch request cap — halved under memory
+    /// pressure, restored to [`ServerConfig::max_batch_requests`] after
+    /// a streak of pressure-free batches.
+    pub current_max_batch: usize,
     /// Per-shard observability snapshots.
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -430,7 +535,8 @@ impl ServerMetrics {
         let steals: u64 = self.per_shard.iter().map(|s| s.steals).sum();
         format!(
             "submitted={} completed={} rejected={} expired={} late={} batches={} occupancy={:.2} \
-             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={} kernel_cache={}",
+             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={} kernel_cache={} \
+             panics={} restarts={} mem_pressure={} shed_cache={} max_batch={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -446,6 +552,11 @@ impl ServerMetrics {
             crate::util::human_bytes(hwm),
             fresh,
             crate::util::human_bytes(self.kernel_cache_bytes),
+            self.panics,
+            self.restarts,
+            self.mem_pressure_events,
+            crate::util::human_bytes(self.shed_kernel_cache_bytes),
+            self.current_max_batch,
         )
     }
 }
@@ -503,6 +614,7 @@ impl Server {
                 stats: Mutex::new(ShardStats::default()),
             })
             .collect();
+        let max_batch_requests = cfg.max_batch_requests;
         let inner = Arc::new(Inner {
             cfg,
             pool,
@@ -525,13 +637,20 @@ impl Server {
             batch_requests: AtomicU64::new(0),
             queue_depth_hwm: AtomicUsize::new(0),
             latencies: Mutex::new(LatencyRing::default()),
+            batch_limit: AtomicUsize::new(max_batch_requests),
+            pressured: AtomicBool::new(false),
+            clear_streak: AtomicUsize::new(0),
+            panics: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            mem_pressure_events: AtomicU64::new(0),
+            shed_cache_bytes: AtomicU64::new(0),
         });
         let handles = (0..inner.cfg.shards)
             .map(|si| {
                 let inner = inner.clone();
                 std::thread::Builder::new()
                     .name(format!("znni-shard{si}"))
-                    .spawn(move || inner.shard_loop(si))
+                    .spawn(move || inner.supervise(si))
                     .expect("spawn shard thread")
             })
             .collect();
@@ -596,25 +715,43 @@ impl Server {
         // Round-robin admission with fallback scan: the request lands
         // on the first shard with a free slot (inserted in EDF order,
         // so the shard's head is always its most urgent request); all
-        // full ⇒ reject.
+        // full ⇒ reject. Under memory pressure the effective depth is
+        // halved — the admission half of graceful degradation.
+        let pressured = inner.pressured.load(Ordering::SeqCst);
+        let eff_depth = if pressured {
+            (inner.cfg.queue_depth / 2).max(1)
+        } else {
+            inner.cfg.queue_depth
+        };
         let start = inner.rr.fetch_add(1, Ordering::SeqCst);
         for k in 0..inner.shards.len() {
             let si = (start + k) % inner.shards.len();
             let shard = &inner.shards[si];
-            let mut q = shard.queue.lock().unwrap();
-            if q.len() < inner.cfg.queue_depth {
+            let mut q = recover_lock(&shard.queue);
+            if q.len() < eff_depth {
                 edf_insert(&mut q, item.take().unwrap());
                 let depth = q.len();
                 drop(q);
                 inner.queue_depth_hwm.fetch_max(depth, Ordering::SeqCst);
                 inner.submitted.fetch_add(1, Ordering::SeqCst);
                 shard.cvar.notify_one();
+                // A queue deeper than one request is stealable work:
+                // nudge an idle sibling so its tail does not wait for
+                // the IDLE_WAIT backstop to re-poll.
+                if depth > 1 && inner.shards.len() > 1 {
+                    inner.shards[(si + 1) % inner.shards.len()].cvar.notify_one();
+                }
                 return Ok(Ticket { id, rx });
             }
         }
         inner.rejected.fetch_add(1, Ordering::SeqCst);
         let volume = item.take().unwrap().volume;
-        Err(Rejected { volume, reason: RejectReason::QueueFull { depth: inner.cfg.queue_depth } })
+        let reason = if pressured {
+            RejectReason::MemoryPressure { depth: eff_depth }
+        } else {
+            RejectReason::QueueFull { depth: inner.cfg.queue_depth }
+        };
+        Err(Rejected { volume, reason })
     }
 
     /// Snapshot the serving metrics.
@@ -624,13 +761,15 @@ impl Server {
             .shards
             .iter()
             .map(|sh| {
-                let st = sh.stats.lock().unwrap();
+                let st = recover_lock(&sh.stats);
                 ShardSnapshot {
                     batches: st.batches,
                     requests: st.requests,
                     steals: st.steals,
                     expired: st.expired,
-                    queue_len: sh.queue.lock().unwrap().len(),
+                    panics: st.panics,
+                    restarts: st.restarts,
+                    queue_len: recover_lock(&sh.queue).len(),
                     patches: st.metrics.patches,
                     voxels: st.metrics.voxels,
                     busy_secs: st.metrics.busy_secs,
@@ -641,7 +780,7 @@ impl Server {
                 }
             })
             .collect();
-        let mut samples = inner.latencies.lock().unwrap().samples_us.clone();
+        let mut samples = recover_lock(&inner.latencies).samples_us.clone();
         let [p50, p99] = LatencyRing::percentiles(&mut samples, [0.50, 0.99]);
         ServerMetrics {
             submitted: inner.submitted.load(Ordering::SeqCst),
@@ -657,6 +796,11 @@ impl Server {
             p99_latency: p99,
             voxels: per_shard.iter().map(|s| s.voxels).sum(),
             kernel_cache_bytes: per_shard.iter().map(|s| s.kernel_cache_bytes).max().unwrap_or(0),
+            panics: inner.panics.load(Ordering::SeqCst),
+            restarts: inner.restarts.load(Ordering::SeqCst),
+            mem_pressure_events: inner.mem_pressure_events.load(Ordering::SeqCst),
+            shed_kernel_cache_bytes: inner.shed_cache_bytes.load(Ordering::SeqCst),
+            current_max_batch: inner.batch_limit.load(Ordering::SeqCst),
             per_shard,
         }
     }
@@ -674,11 +818,61 @@ impl Drop for Server {
     }
 }
 
+/// Why a shard's serving loop returned to its supervisor.
+enum ShardExit {
+    /// Graceful shutdown: the server is dropping and every queue this
+    /// shard can reach is drained.
+    Shutdown,
+    /// A batch panicked (isolated in [`Inner::run_batch`]); the
+    /// supervisor should reset the shard's arenas and re-enter.
+    Restart,
+}
+
+/// What happened to one dispatched batch.
+enum BatchOutcome {
+    /// Every member was answered with a response or a typed error.
+    Served,
+    /// The batch panicked; members were answered
+    /// [`ServeError::Internal`] and the shard needs a restart.
+    Panicked,
+}
+
 impl Inner {
+    /// Shard supervisor: runs the serving loop and, whenever a batch
+    /// panic (or a panic escaping the loop itself) kills it, resets the
+    /// shard's worker arenas and restarts the loop on the same thread.
+    /// Undispatched requests survive untouched in the shard's EDF
+    /// queue; the panicked batch's requests were already answered with
+    /// [`ServeError::Internal`].
+    fn supervise(&self, si: usize) {
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| self.shard_loop(si))) {
+                Ok(ShardExit::Shutdown) => return,
+                Ok(ShardExit::Restart) => {}
+                Err(_) => {
+                    // A panic escaped run_batch's isolation (injected
+                    // into the dispatch loop itself, or a bug). Any
+                    // Queued senders it held were dropped, so their
+                    // tickets resolve `Disconnected` — typed, never a
+                    // hang.
+                    self.panics.fetch_add(1, Ordering::SeqCst);
+                    recover_lock(&self.shards[si].stats).panics += 1;
+                }
+            }
+            self.restarts.fetch_add(1, Ordering::SeqCst);
+            recover_lock(&self.shards[si].stats).restarts += 1;
+            // A panicked worker's arena was lost mid-flight; drop the
+            // survivors too so the restarted shard re-warms a
+            // consistent set (steady-state fresh allocs return to zero
+            // after the first post-restart batch).
+            self.coordinators[si].reset_arenas();
+        }
+    }
+
     /// Pop from the shard's own queue head — the earliest deadline,
     /// since [`edf_insert`] keeps the queue EDF-ordered.
     fn try_pop_local(&self, si: usize) -> Option<Queued> {
-        self.shards[si].queue.lock().unwrap().pop_front()
+        recover_lock(&self.shards[si].queue).pop_front()
     }
 
     /// Steal one request from the tail of a sibling's queue — the
@@ -688,9 +882,9 @@ impl Inner {
         let n = self.shards.len();
         for k in 1..n {
             let vi = (si + k) % n;
-            let stolen = self.shards[vi].queue.lock().unwrap().pop_back();
+            let stolen = recover_lock(&self.shards[vi].queue).pop_back();
             if let Some(q) = stolen {
-                self.shards[si].stats.lock().unwrap().steals += 1;
+                recover_lock(&self.shards[si].stats).steals += 1;
                 return Some(q);
             }
         }
@@ -699,7 +893,10 @@ impl Inner {
 
     /// Block until a request is available (own queue, then steal).
     /// Returns `None` on shutdown once every queue this shard can reach
-    /// is drained.
+    /// is drained. Sleeps on the shard condvar — submits and shutdown
+    /// notify it, so the [`IDLE_WAIT`] backstop only bounds how long a
+    /// steal opportunity on a sibling can go unnoticed (and guards
+    /// against a missed wakeup).
     fn next_request(&self, si: usize) -> Option<Queued> {
         loop {
             if let Some(q) = self.try_pop_local(si) {
@@ -709,28 +906,30 @@ impl Inner {
                 return Some(q);
             }
             let shard = &self.shards[si];
-            let guard = shard.queue.lock().unwrap();
+            let guard = recover_lock(&shard.queue);
             if !guard.is_empty() {
                 continue;
             }
             if self.shutdown.load(Ordering::SeqCst) {
                 return None;
             }
-            // Bounded sleep so steals and shutdown are re-polled.
-            let (g, _) = shard.cvar.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            let (g, _) = recover_wait_timeout(&shard.cvar, guard, IDLE_WAIT);
             drop(g);
         }
     }
 
-    fn shard_loop(&self, si: usize) {
+    fn shard_loop(&self, si: usize) -> ShardExit {
         loop {
-            let Some(first) = self.next_request(si) else { return };
+            let Some(first) = self.next_request(si) else { return ShardExit::Shutdown };
             let mut batch_bytes = first.bytes;
             let mut batch = vec![first];
             let wait_until = Instant::now() + self.cfg.max_batch_wait;
             // Coalesce from the local queue while the Table II budget,
-            // the batch cap and the wait window allow.
-            while batch.len() < self.cfg.max_batch_requests {
+            // the (pressure-adjusted) batch cap and the wait window
+            // allow.
+            let limit =
+                self.batch_limit.load(Ordering::SeqCst).clamp(1, self.cfg.max_batch_requests);
+            while batch.len() < limit {
                 match self.try_pop_local(si) {
                     Some(q) => {
                         if batch_bytes
@@ -743,7 +942,7 @@ impl Inner {
                             // earlier deadline since the pop, so the
                             // position is recomputed under the lock
                             // (push_front could break the EDF order).
-                            edf_insert(&mut self.shards[si].queue.lock().unwrap(), q);
+                            edf_insert(&mut recover_lock(&self.shards[si].queue), q);
                             break;
                         }
                         batch_bytes += q.bytes;
@@ -755,19 +954,60 @@ impl Inner {
                             break;
                         }
                         let shard = &self.shards[si];
-                        let guard = shard.queue.lock().unwrap();
+                        let guard = recover_lock(&shard.queue);
                         if guard.is_empty() {
-                            let (g, _) = shard.cvar.wait_timeout(guard, wait_until - now).unwrap();
+                            let (g, _) =
+                                recover_wait_timeout(&shard.cvar, guard, wait_until - now);
                             drop(g);
                         }
                     }
                 }
             }
-            self.run_batch(si, batch);
+            if let BatchOutcome::Panicked = self.run_batch(si, batch) {
+                return ShardExit::Restart;
+            }
         }
     }
 
-    fn run_batch(&self, si: usize, batch: Vec<Queued>) {
+    /// Per-batch memory-pressure probe: pressure is the process-wide
+    /// allocation ledger exceeding the total serving budget, or an
+    /// injected `arena_take:reserve_fail` failpoint. Under pressure the
+    /// micro-batch cap halves and the largest resident kernel-spectra
+    /// cache row is shed (recompute beats an OOM — the same largest-
+    /// first order the optimizer's fallback uses); after
+    /// [`PRESSURE_CLEAR_STREAK`] pressure-free batches the cap doubles
+    /// one step back, and at full cap the caches may rebuild.
+    fn check_pressure(&self, si: usize) {
+        let injected = faults::fire_reserve(FaultSite::ArenaTake);
+        let budget = self.cfg.memory_budget.saturating_mul(self.cfg.shards as u64);
+        let over = budget < u64::MAX && crate::memory::current() > budget;
+        if injected || over {
+            self.mem_pressure_events.fetch_add(1, Ordering::SeqCst);
+            self.pressured.store(true, Ordering::SeqCst);
+            self.clear_streak.store(0, Ordering::SeqCst);
+            let cur = self.batch_limit.load(Ordering::SeqCst);
+            self.batch_limit.store((cur / 2).max(1), Ordering::SeqCst);
+            let shed = self.coordinators[si].plan().shed_largest_kernel_cache();
+            if shed > 0 {
+                self.shed_cache_bytes.fetch_add(shed, Ordering::SeqCst);
+            }
+        } else if self.pressured.load(Ordering::SeqCst) {
+            let streak = self.clear_streak.fetch_add(1, Ordering::SeqCst) + 1;
+            if streak >= PRESSURE_CLEAR_STREAK {
+                self.clear_streak.store(0, Ordering::SeqCst);
+                let cur = self.batch_limit.load(Ordering::SeqCst);
+                let next = (cur.saturating_mul(2)).clamp(1, self.cfg.max_batch_requests);
+                self.batch_limit.store(next, Ordering::SeqCst);
+                if next >= self.cfg.max_batch_requests {
+                    self.pressured.store(false, Ordering::SeqCst);
+                    self.coordinators[si].plan().restore_kernel_caches();
+                }
+            }
+        }
+    }
+
+    fn run_batch(&self, si: usize, batch: Vec<Queued>) -> BatchOutcome {
+        self.check_pressure(si);
         // Expire requests whose deadline passed while queued.
         let now = Instant::now();
         let mut reqs = Vec::with_capacity(batch.len());
@@ -787,18 +1027,26 @@ impl Inner {
             metas.push((q.tx, q.enqueued, q.deadline));
         }
         if expired_here > 0 {
-            self.shards[si].stats.lock().unwrap().expired += expired_here;
+            recover_lock(&self.shards[si].stats).expired += expired_here;
         }
         if reqs.is_empty() {
-            return;
+            return BatchOutcome::Served;
         }
         let n = reqs.len();
-        match self.coordinators[si].serve(reqs, &self.pool) {
-            Ok((resps, m)) => {
+        // Panic isolation: whatever dies inside the coordinator (a
+        // primitive, an arena take, a kernel-cache build, an injected
+        // fault) is caught here so every ticket is answered before the
+        // supervisor restarts the shard.
+        let served = catch_unwind(AssertUnwindSafe(|| {
+            faults::fire(FaultSite::ShardDispatch);
+            self.coordinators[si].serve(reqs, &self.pool)
+        }));
+        match served {
+            Ok(Ok((resps, m))) => {
                 self.batches.fetch_add(1, Ordering::SeqCst);
                 self.batch_requests.fetch_add(n as u64, Ordering::SeqCst);
                 {
-                    let mut st = self.shards[si].stats.lock().unwrap();
+                    let mut st = recover_lock(&self.shards[si].stats);
                     st.batches += 1;
                     st.requests += n as u64;
                     st.metrics.merge(&m);
@@ -813,12 +1061,13 @@ impl Inner {
                         // and the miss is recorded.
                         self.completed_late.fetch_add(1, Ordering::SeqCst);
                     }
-                    self.latencies.lock().unwrap().record(lat.as_micros() as u64);
+                    recover_lock(&self.latencies).record(lat.as_micros() as u64);
                     self.completed.fetch_add(1, Ordering::SeqCst);
                     let _ = tx.send(Ok(resp));
                 }
+                BatchOutcome::Served
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 // Submit-time validation makes per-request failures
                 // unreachable; a batch error here is systemic and is
                 // reported to every member.
@@ -826,6 +1075,19 @@ impl Inner {
                 for (tx, _, _) in metas {
                     let _ = tx.send(Err(ServeError::Failed(msg.clone())));
                 }
+                BatchOutcome::Served
+            }
+            Err(payload) => {
+                let msg = faults::panic_message(payload.as_ref()).unwrap_or("panic");
+                let site = faults::site_of_panic(msg)
+                    .map(|s| s.name().to_string())
+                    .unwrap_or_else(|| msg.to_string());
+                self.panics.fetch_add(1, Ordering::SeqCst);
+                recover_lock(&self.shards[si].stats).panics += 1;
+                for (tx, _, _) in metas {
+                    let _ = tx.send(Err(ServeError::Internal { site: site.clone() }));
+                }
+                BatchOutcome::Panicked
             }
         }
     }

@@ -1,0 +1,414 @@
+//! Deterministic fault injection: a failpoint registry for chaos tests.
+//!
+//! Long-running serving (the regime the paper's throughput argument
+//! assumes) must survive panics and transient memory pressure anywhere
+//! in a shard's compute path. This module provides the *test* side of
+//! that contract: named failpoints compiled into the hot paths that are
+//! a no-op until armed, plus a registry of rules that inject panics,
+//! delays or simulated reserve failures with a deterministic,
+//! [`crate::util::prng::Rng`]-seeded probability.
+//!
+//! Rules come from either the `ZNNI_FAULTS` environment variable (read
+//! once, like `ZNNI_KERNEL_CACHE`) or programmatic [`install`] /
+//! [`install_str`] calls, which take precedence. The spec format is a
+//! comma-separated list of `site:kind:prob[:seed]` rules:
+//!
+//! ```text
+//! ZNNI_FAULTS="worker_patch:panic:0.05:7,arena_take:reserve_fail:0.2:13"
+//! ```
+//!
+//! * `site` — one of [`FaultSite::ALL`]: `shard_dispatch`,
+//!   `worker_patch`, `arena_take`, `kernel_cache_warm`;
+//! * `kind` — `panic` (unwind with a recognisable message), `delay`
+//!   (sleep [`DELAY_MS`] ms) or `reserve_fail` (make
+//!   [`fire_reserve`] report a simulated allocation failure — the
+//!   server treats it as memory pressure);
+//! * `prob` — per-hit probability in `[0, 1]`;
+//! * `seed` — PRNG seed (optional, defaults to a fixed constant), so a
+//!   given spec fires at exactly the same hit sequence on every run.
+//!
+//! The fast path ([`fire`] / [`fire_reserve`] with nothing armed) is two
+//! relaxed atomic loads — cheap enough to sit inside arena takes.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Duration;
+
+use crate::util::prng::Rng;
+use crate::util::sync::recover_lock;
+
+/// Prefix of every injected-panic message; [`site_of_panic`] recognises
+/// it so the server can answer a typed `Internal { site }` error.
+pub const PANIC_PREFIX: &str = "znni fault injected at ";
+
+/// Milliseconds a `delay` rule sleeps when it fires.
+pub const DELAY_MS: u64 = 25;
+
+/// Seed used when a rule omits its fourth field.
+const DEFAULT_SEED: u64 = 0x5EED;
+
+/// A named failpoint compiled into a hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// [`crate::server`] shard loop, just before a batch is served.
+    ShardDispatch,
+    /// [`crate::coordinator`] worker, once per patch job.
+    WorkerPatch,
+    /// [`crate::exec::Arena`] raw buffer takes (`panic`/`delay`), and
+    /// the server's per-batch pressure probe (`reserve_fail`).
+    ArenaTake,
+    /// [`crate::layers::ConvLayer`] kernel-spectra cache build.
+    KernelCacheWarm,
+}
+
+impl FaultSite {
+    /// Every registered site, in registry order.
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::ShardDispatch,
+        FaultSite::WorkerPatch,
+        FaultSite::ArenaTake,
+        FaultSite::KernelCacheWarm,
+    ];
+
+    /// The spec/display name of this site.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::ShardDispatch => "shard_dispatch",
+            FaultSite::WorkerPatch => "worker_patch",
+            FaultSite::ArenaTake => "arena_take",
+            FaultSite::KernelCacheWarm => "kernel_cache_warm",
+        }
+    }
+
+    /// Parse a spec-format site name.
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        Self::ALL.into_iter().find(|site| site.name() == s.trim())
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|s| *s == self).unwrap_or(0)
+    }
+}
+
+/// What an armed rule does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Unwind with `PANIC_PREFIX + site name`.
+    Panic,
+    /// Sleep [`DELAY_MS`] milliseconds (latency chaos; never corrupts).
+    Delay,
+    /// Report a simulated allocation failure through [`fire_reserve`].
+    ReserveFail,
+}
+
+impl FaultKind {
+    /// Parse a spec-format kind name.
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s.trim() {
+            "panic" => Some(FaultKind::Panic),
+            "delay" => Some(FaultKind::Delay),
+            "reserve_fail" => Some(FaultKind::ReserveFail),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed injection rule.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    /// Failpoint this rule arms.
+    pub site: FaultSite,
+    /// Action taken when the probability draw hits.
+    pub kind: FaultKind,
+    /// Per-hit firing probability in `[0, 1]`.
+    pub prob: f64,
+    /// Seed of the rule's private deterministic PRNG.
+    pub seed: u64,
+}
+
+/// A full parsed `ZNNI_FAULTS` spec.
+#[derive(Clone, Debug, Default)]
+pub struct FaultConfig {
+    /// The rules, in spec order.
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultConfig {
+    /// Parse a comma-separated `site:kind:prob[:seed]` spec.
+    pub fn parse(spec: &str) -> Result<FaultConfig, String> {
+        let mut rules = Vec::new();
+        for raw in spec.split(',') {
+            let part = raw.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                return Err(format!("rule {part:?}: want site:kind:prob[:seed]"));
+            }
+            let site = FaultSite::parse(fields[0])
+                .ok_or_else(|| format!("rule {part:?}: unknown site {:?}", fields[0]))?;
+            let kind = FaultKind::parse(fields[1])
+                .ok_or_else(|| format!("rule {part:?}: unknown kind {:?}", fields[1]))?;
+            let prob: f64 = fields[2]
+                .trim()
+                .parse()
+                .map_err(|_| format!("rule {part:?}: bad probability {:?}", fields[2]))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(format!("rule {part:?}: probability must be in [0, 1]"));
+            }
+            let seed = match fields.get(3) {
+                Some(s) => s
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("rule {part:?}: bad seed {:?}", s))?,
+                None => DEFAULT_SEED,
+            };
+            rules.push(FaultRule { site, kind, prob, seed });
+        }
+        Ok(FaultConfig { rules })
+    }
+
+    /// Whether the config arms nothing.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// An installed rule plus its private PRNG stream.
+struct Armed {
+    rule: FaultRule,
+    rng: Rng,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static INJECTED: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+fn registry() -> &'static Mutex<Vec<Armed>> {
+    static REG: OnceLock<Mutex<Vec<Armed>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Load `ZNNI_FAULTS` exactly once. Runs before any install/fire so a
+/// later programmatic [`install`]/[`clear`] always takes precedence
+/// over the environment instead of being clobbered by a lazy env read.
+fn ensure_env() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("ZNNI_FAULTS") {
+            if !v.trim().is_empty() {
+                match FaultConfig::parse(&v) {
+                    Ok(cfg) => install(cfg),
+                    Err(e) => eprintln!("znni: ignoring ZNNI_FAULTS: {e}"),
+                }
+            }
+        }
+    });
+}
+
+/// Arm a config, replacing whatever was installed before (including the
+/// `ZNNI_FAULTS` environment config). An empty config disarms.
+pub fn install(cfg: FaultConfig) {
+    ensure_env();
+    let armed: Vec<Armed> =
+        cfg.rules.into_iter().map(|rule| Armed { rng: Rng::new(rule.seed), rule }).collect();
+    let active = !armed.is_empty();
+    *recover_lock(registry()) = armed;
+    ACTIVE.store(active, Ordering::SeqCst);
+}
+
+/// Parse and [`install`] a spec string.
+pub fn install_str(spec: &str) -> Result<(), String> {
+    install(FaultConfig::parse(spec)?);
+    Ok(())
+}
+
+/// Disarm every rule (also suppresses a pending `ZNNI_FAULTS` config).
+pub fn clear() {
+    install(FaultConfig::default());
+}
+
+/// Whether any rule is currently armed.
+pub fn active() -> bool {
+    ensure_env();
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// How many times a site has injected a fault (any kind) since process
+/// start. Test observability; never reset.
+pub fn injected(site: FaultSite) -> u64 {
+    INJECTED[site.index()].load(Ordering::Relaxed)
+}
+
+/// Total injections across all sites since process start.
+pub fn injected_total() -> u64 {
+    INJECTED.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Hit a failpoint: fires any armed `panic` / `delay` rules for `site`.
+/// A no-op (two relaxed atomic loads) when nothing is armed.
+/// `reserve_fail` rules are ignored here — they only answer
+/// [`fire_reserve`].
+#[inline]
+pub fn fire(site: FaultSite) {
+    ensure_env();
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    fire_slow(site);
+}
+
+#[cold]
+fn fire_slow(site: FaultSite) {
+    let mut do_panic = false;
+    let mut do_delay = false;
+    {
+        let mut reg = recover_lock(registry());
+        for a in reg.iter_mut().filter(|a| a.rule.site == site) {
+            match a.rule.kind {
+                FaultKind::Panic => do_panic |= (a.rng.f32() as f64) < a.rule.prob,
+                FaultKind::Delay => do_delay |= (a.rng.f32() as f64) < a.rule.prob,
+                FaultKind::ReserveFail => {}
+            }
+        }
+    }
+    // Act outside the registry lock so an injected panic never poisons
+    // (or deadlocks) the registry itself.
+    if do_delay {
+        INJECTED[site.index()].fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(DELAY_MS));
+    }
+    if do_panic {
+        INJECTED[site.index()].fetch_add(1, Ordering::Relaxed);
+        panic!("{PANIC_PREFIX}{}", site.name());
+    }
+}
+
+/// Probe a failpoint for a simulated allocation failure: `true` when an
+/// armed `reserve_fail` rule for `site` fires. The server's per-batch
+/// pressure check treats `true` exactly like a real over-budget ledger
+/// reading. A no-op returning `false` when nothing is armed.
+#[inline]
+pub fn fire_reserve(site: FaultSite) -> bool {
+    ensure_env();
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_reserve_slow(site)
+}
+
+#[cold]
+fn fire_reserve_slow(site: FaultSite) -> bool {
+    let mut hit = false;
+    {
+        let mut reg = recover_lock(registry());
+        for a in reg.iter_mut().filter(|a| a.rule.site == site) {
+            if a.rule.kind == FaultKind::ReserveFail {
+                hit |= (a.rng.f32() as f64) < a.rule.prob;
+            }
+        }
+    }
+    if hit {
+        INJECTED[site.index()].fetch_add(1, Ordering::Relaxed);
+    }
+    hit
+}
+
+/// Extract the printable message of a caught panic payload (`&str` and
+/// `String` payloads; anything else is `None`).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> Option<&str> {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+}
+
+/// Recognise an injected-fault panic message and return its site. Works
+/// through the pool scope's re-panic wrapper, which preserves the
+/// original message as a suffix.
+pub fn site_of_panic(msg: &str) -> Option<FaultSite> {
+    FaultSite::ALL
+        .into_iter()
+        .find(|s| msg.contains(&format!("{PANIC_PREFIX}{}", s.name())))
+}
+
+#[cfg(test)]
+mod tests {
+    // The registry is process-global and the failpoints sit inside code
+    // paths (arena takes, shard loops) that *other* concurrently
+    // running unit tests exercise, so in-module tests only cover the
+    // pure parsing/recognition half. Arming and firing is exercised —
+    // serialized — in rust/tests/integration_faults.rs, mirroring the
+    // `force_cache_mode` discipline in `conv::precomp`.
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let cfg =
+            FaultConfig::parse("worker_patch:panic:0.05:7, arena_take:reserve_fail:0.2:13")
+                .unwrap();
+        assert_eq!(cfg.rules.len(), 2);
+        assert_eq!(cfg.rules[0].site, FaultSite::WorkerPatch);
+        assert_eq!(cfg.rules[0].kind, FaultKind::Panic);
+        assert!((cfg.rules[0].prob - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.rules[0].seed, 7);
+        assert_eq!(cfg.rules[1].site, FaultSite::ArenaTake);
+        assert_eq!(cfg.rules[1].kind, FaultKind::ReserveFail);
+    }
+
+    #[test]
+    fn seed_defaults_when_omitted() {
+        let cfg = FaultConfig::parse("shard_dispatch:delay:1.0").unwrap();
+        assert_eq!(cfg.rules[0].seed, DEFAULT_SEED);
+        assert_eq!(cfg.rules[0].kind, FaultKind::Delay);
+    }
+
+    #[test]
+    fn empty_spec_is_empty_config() {
+        assert!(FaultConfig::parse("").unwrap().is_empty());
+        assert!(FaultConfig::parse(" , ,").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultConfig::parse("nope:panic:1.0").is_err());
+        assert!(FaultConfig::parse("arena_take:frobnicate:1.0").is_err());
+        assert!(FaultConfig::parse("arena_take:panic:1.5").is_err());
+        assert!(FaultConfig::parse("arena_take:panic:x").is_err());
+        assert!(FaultConfig::parse("arena_take:panic:0.5:seed").is_err());
+        assert!(FaultConfig::parse("arena_take:panic").is_err());
+        assert!(FaultConfig::parse("arena_take:panic:0.5:1:extra").is_err());
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for s in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(s.name()), Some(s));
+        }
+        assert_eq!(FaultSite::parse("bogus"), None);
+    }
+
+    #[test]
+    fn panic_messages_are_recognised() {
+        let msg = format!("{PANIC_PREFIX}worker_patch");
+        assert_eq!(site_of_panic(&msg), Some(FaultSite::WorkerPatch));
+        let wrapped = format!("a task submitted to the pool scope panicked: {msg}");
+        assert_eq!(site_of_panic(&wrapped), Some(FaultSite::WorkerPatch));
+        assert_eq!(site_of_panic("ordinary panic"), None);
+    }
+
+    #[test]
+    fn panic_payload_message_extraction() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static str panic");
+        assert_eq!(panic_message(s.as_ref()), Some("static str panic"));
+        let s: Box<dyn std::any::Any + Send> = Box::new(String::from("owned panic"));
+        assert_eq!(panic_message(s.as_ref()), Some("owned panic"));
+        let s: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(s.as_ref()), None);
+    }
+}

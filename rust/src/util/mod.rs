@@ -8,12 +8,14 @@
 //! (§IV.A.3).
 
 pub mod bench;
+pub mod faults;
 pub mod json;
 pub mod magic;
 pub mod pool;
 pub mod prng;
 pub mod quick;
 pub mod sendptr;
+pub mod sync;
 
 pub use magic::MagicU64;
 pub use pool::{ChipTopology, TaskPool};

@@ -23,6 +23,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use crate::util::sync::{recover_lock, recover_wait};
+
 /// Logical machine topology: `chips` NUMA nodes × `cores_per_chip`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChipTopology {
@@ -195,7 +197,14 @@ impl TaskPool {
         let r = body(&scope);
         sync.wait();
         if sync.panicked.load(Ordering::SeqCst) {
-            panic!("a task submitted to the pool scope panicked");
+            // Re-raise with the first job's panic message preserved as
+            // a suffix, so upstream isolation (the server's shard
+            // supervisor) can still attribute the fault to its
+            // failpoint site.
+            let msg = recover_lock(&sync.panic_msg)
+                .take()
+                .unwrap_or_else(|| "unknown panic".to_string());
+            panic!("a task submitted to the pool scope panicked: {msg}");
         }
         r
     }
@@ -256,7 +265,7 @@ impl TaskPool {
             let cells = &cells;
             let f = &f;
             self.parallel_for(n, move |i| {
-                **cells[i].lock().unwrap() = f(i);
+                **recover_lock(&cells[i]) = f(i);
             });
         }
         out
@@ -266,7 +275,7 @@ impl TaskPool {
 impl Drop for TaskPool {
     fn drop(&mut self) {
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = recover_lock(&self.inner.state);
             st.shutdown = true;
         }
         self.inner.cvar.notify_all();
@@ -280,6 +289,8 @@ impl Drop for TaskPool {
 struct ScopeSync {
     remaining: AtomicUsize,
     panicked: AtomicBool,
+    /// First panicking job's message, for the scope's re-panic.
+    panic_msg: Mutex<Option<String>>,
     mutex: Mutex<()>,
     cvar: Condvar,
 }
@@ -290,14 +301,14 @@ impl ScopeSync {
     }
     fn done(&self) {
         if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
-            let _g = self.mutex.lock().unwrap();
+            let _g = recover_lock(&self.mutex);
             self.cvar.notify_all();
         }
     }
     fn wait(&self) {
-        let mut g = self.mutex.lock().unwrap();
+        let mut g = recover_lock(&self.mutex);
         while self.remaining.load(Ordering::SeqCst) != 0 {
-            g = self.cvar.wait(g).unwrap();
+            g = recover_wait(&self.cvar, g);
         }
     }
 }
@@ -316,8 +327,15 @@ impl<'env, 'p> Scope<'env, 'p> {
         self.sync.add();
         let sync = self.sync.clone();
         let job: Box<dyn FnOnce(&WorkerCtx) + Send + 'env> = Box::new(move |ctx: &WorkerCtx| {
-            if catch_unwind(AssertUnwindSafe(|| f(ctx))).is_err() {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(ctx))) {
                 sync.panicked.store(true, Ordering::SeqCst);
+                let msg = crate::util::faults::panic_message(payload.as_ref())
+                    .unwrap_or("non-string panic payload")
+                    .to_string();
+                let mut slot = recover_lock(&sync.panic_msg);
+                if slot.is_none() {
+                    *slot = Some(msg);
+                }
             }
             sync.done();
         });
@@ -330,7 +348,7 @@ impl<'env, 'p> Scope<'env, 'p> {
     /// Submit to the global FIFO queue (any worker).
     pub fn submit(&self, f: impl FnOnce(&WorkerCtx) + Send + 'env) {
         let job = self.wrap(f);
-        let mut st = self.pool.inner.state.lock().unwrap();
+        let mut st = recover_lock(&self.pool.inner.state);
         st.global.push_back(job);
         drop(st);
         self.pool.inner.cvar.notify_all();
@@ -361,7 +379,7 @@ impl<'env, 'p> Scope<'env, 'p> {
         f: impl FnOnce(&WorkerCtx) + Send + 'env,
     ) {
         let job = self.wrap(f);
-        let mut st = self.pool.inner.state.lock().unwrap();
+        let mut st = recover_lock(&self.pool.inner.state);
         let chip = chip % st.chips.len();
         let seq = st.seq;
         st.seq += 1;
@@ -379,7 +397,7 @@ impl<'env, 'p> Scope<'env, 'p> {
 fn worker_loop(inner: Arc<PoolInner>, ctx: WorkerCtx) {
     loop {
         let job = {
-            let mut st = inner.state.lock().unwrap();
+            let mut st = recover_lock(&inner.state);
             loop {
                 if st.shutdown {
                     return;
@@ -397,10 +415,13 @@ fn worker_loop(inner: Arc<PoolInner>, ctx: WorkerCtx) {
                 if let Some(j) = st.global.pop_front() {
                     break j;
                 }
-                st = inner.cvar.wait(st).unwrap();
+                st = recover_wait(&inner.cvar, st);
             }
         };
-        job(&ctx);
+        // Defense in depth: Scope::wrap already isolates job panics,
+        // but one slipping through the boxed-job glue must not silently
+        // kill this worker for the life of the pool.
+        let _ = catch_unwind(AssertUnwindSafe(|| job(&ctx)));
     }
 }
 

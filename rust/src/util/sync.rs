@@ -1,0 +1,71 @@
+//! Poison-proof locking helpers.
+//!
+//! A panic while a `std::sync::Mutex` is held poisons it, and every
+//! later `lock().unwrap()` then panics too — one fault cascades through
+//! the whole process. All the state this crate guards with mutexes
+//! (arena free lists, shard queues, stats counters, FFT plan caches) is
+//! either value-consistent at every await point or rebuilt by the shard
+//! supervisor after a panic, so the right response to poisoning is to
+//! take the data and keep serving, not to amplify the failure.
+//!
+//! These helpers are the crate-wide replacement for `lock().unwrap()`
+//! (see `docs/ARCHITECTURE.md`, "Fault tolerance & degradation").
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking. Use wherever the guarded state stays consistent across
+/// panics (or is reset by a supervisor afterwards).
+#[inline]
+pub fn recover_lock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait`] that recovers from a poisoned mutex instead of
+/// panicking — the condvar analogue of [`recover_lock`].
+#[inline]
+pub fn recover_wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] that recovers from a poisoned mutex
+/// instead of panicking.
+#[inline]
+pub fn recover_wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, timeout).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn recover_lock_survives_poison() {
+        let m = Mutex::new(41);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "mutex must be poisoned");
+        let mut g = recover_lock(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn recover_wait_timeout_returns_guard() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let g = recover_lock(&m);
+        let (g, res) = recover_wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+        assert_eq!(*g, 0);
+    }
+}

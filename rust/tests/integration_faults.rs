@@ -1,0 +1,397 @@
+//! Chaos suite: deterministic fault injection against the sharded
+//! server (the `ZNNI_FAULTS` failpoints of `znni::util::faults`).
+//!
+//! The invariants under test are the fault-tolerance contract:
+//!
+//! * **no ticket ever hangs** — every admitted request resolves with an
+//!   output or a *typed* error, whatever panics inside a shard;
+//! * a panicked shard is **restarted** by its supervisor (fresh warm
+//!   arenas) and the server keeps accepting work;
+//! * post-recovery, fault-free requests are **bit-identical** to a
+//!   clean run — restarts and cache shedding never change numerics;
+//! * simulated memory pressure **degrades gracefully** (halved batch
+//!   cap, shed kernel-spectra cache, `MemoryPressure` shedding at
+//!   admission) and fully **recovers** once pressure clears.
+//!
+//! The failpoint registry is process-global, so every test serializes
+//! on one mutex and disarms the registry on entry and on drop (also
+//! when an assertion panics). The `chaos_env_faults` test additionally
+//! honours a `ZNNI_FAULTS` environment spec so CI can sweep configs.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use znni::conv::Weights;
+use znni::device::Device;
+use znni::memory::model::ConvAlgo;
+use znni::net::NetSpec;
+use znni::optimizer::{compile, make_weights, search, CostModel, Plan, SearchSpace};
+use znni::server::{RejectReason, ServeError, Server, ServerConfig};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::faults;
+use znni::util::pool::{ChipTopology, TaskPool};
+
+/// Serializes the tests: the failpoint registry and injection counters
+/// are process-global, so concurrent tests would observe each other.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Holds the serialization lock and guarantees the registry is disarmed
+/// when the test ends — including by a failed assertion, so one broken
+/// test cannot leak armed faults into the next.
+struct FaultGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn serial() -> FaultGuard {
+    // A previous test that failed while holding the lock poisons it;
+    // the guard's Drop already disarmed the registry, so recovery is
+    // safe.
+    let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faults::clear();
+    FaultGuard(g)
+}
+
+fn setup() -> (NetSpec, Plan, Vec<Arc<Weights>>, Arc<TaskPool>) {
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).expect("feasible plan");
+    let weights = make_weights(&net, 77);
+    let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 }));
+    (net, plan, weights, pool)
+}
+
+/// Like [`setup`] but forces the FFT task-parallel primitive so the
+/// plan carries a kernel-spectra cache (the pressure tests shed it).
+fn setup_fft() -> (NetSpec, Plan, Vec<Arc<Weights>>, Arc<TaskPool>) {
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).expect("feasible plan");
+    let weights = make_weights(&net, 77);
+    let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 }));
+    (net, plan, weights, pool)
+}
+
+fn mk(seed: u64) -> Tensor5 {
+    Tensor5::random(Shape5::new(1, 1, 20, 20, 20), seed)
+}
+
+/// One deterministic single-shard server (no micro-batch coalescing
+/// wait, so every submit/wait pair is exactly one batch).
+fn one_shard(net: &NetSpec, plan: &Plan, weights: &[Arc<Weights>], pool: &Arc<TaskPool>) -> Server {
+    let cfg = ServerConfig {
+        shards: 1,
+        queue_depth: 8,
+        max_batch_requests: 1,
+        max_batch_wait: Duration::ZERO,
+        ..ServerConfig::default()
+    };
+    Server::start(net.clone(), compile(net, plan, weights).unwrap(), cfg, pool.clone()).unwrap()
+}
+
+#[test]
+fn injected_dispatch_panic_answers_typed_and_restarts() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup();
+    let server = one_shard(&net, &plan, &weights, &pool);
+
+    // Clean request first: proves the server works and warms the shard.
+    server.submit(mk(1)).unwrap().wait().expect("clean serve");
+
+    // Arm AFTER start (start warms kernel caches on the caller thread).
+    faults::install_str("shard_dispatch:panic:1.0").unwrap();
+    let t = server.submit(mk(2)).unwrap();
+    match t.wait() {
+        Err(ServeError::Internal { site }) => assert_eq!(site, "shard_dispatch"),
+        other => panic!("killed shard must answer Internal, got {other:?}"),
+    }
+
+    // Disarm: the restarted shard keeps serving.
+    faults::clear();
+    server.submit(mk(3)).unwrap().wait().expect("post-restart serve");
+
+    let m = server.metrics();
+    assert!(m.panics >= 1, "panic counter must tick, got {}", m.panics);
+    assert!(m.restarts >= 1, "restart counter must tick, got {}", m.restarts);
+    assert_eq!(m.per_shard[0].panics, m.panics, "single shard owns every panic");
+    assert_eq!(m.per_shard[0].restarts, m.restarts);
+}
+
+#[test]
+fn injected_worker_panic_surfaces_with_site() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup();
+    let server = one_shard(&net, &plan, &weights, &pool);
+    server.submit(mk(1)).unwrap().wait().expect("clean serve");
+
+    // The panic unwinds a coordinator worker thread; the explicit join
+    // in `Coordinator::serve` must propagate the original payload so
+    // the typed error still names the failpoint site.
+    faults::install_str("worker_patch:panic:1.0").unwrap();
+    match server.submit(mk(2)).unwrap().wait() {
+        Err(ServeError::Internal { site }) => assert_eq!(site, "worker_patch"),
+        other => panic!("killed worker must answer Internal, got {other:?}"),
+    }
+
+    faults::clear();
+    server.submit(mk(3)).unwrap().wait().expect("post-restart serve");
+    let m = server.metrics();
+    assert!(m.panics >= 1 && m.restarts >= 1);
+}
+
+#[test]
+fn post_recovery_outputs_bit_identical_to_clean_run() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup();
+    let server = one_shard(&net, &plan, &weights, &pool);
+
+    // Reference output from the clean server.
+    let want = server.submit(mk(7)).unwrap().wait().expect("clean serve").output;
+
+    // Kill the shard once (losing its warm arenas mid-flight).
+    faults::install_str("worker_patch:panic:1.0").unwrap();
+    assert!(server.submit(mk(7)).unwrap().wait().is_err());
+    faults::clear();
+
+    // The restarted shard, on fresh arenas, must reproduce the exact
+    // bytes of the clean run.
+    let got = server.submit(mk(7)).unwrap().wait().expect("post-restart serve").output;
+    assert_eq!(got.data(), want.data(), "restart changed the numerics");
+}
+
+#[test]
+fn arena_warmup_recovers_after_restart() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup();
+    let server = one_shard(&net, &plan, &weights, &pool);
+    let fresh = |server: &Server| -> u64 { server.metrics().per_shard[0].arena_fresh_allocs };
+
+    // Reach the allocation-free steady state (PR 2 discipline).
+    let mut warmed = false;
+    for round in 0..12u64 {
+        let before = fresh(&server);
+        server.submit(mk(100 + round)).unwrap().wait().unwrap();
+        if round > 0 && fresh(&server) == before {
+            warmed = true;
+            break;
+        }
+    }
+    assert!(warmed, "server never reached an allocation-free steady state");
+
+    // Kill the shard: the unwinding worker loses its checked-out arena
+    // and the supervisor drops the survivors.
+    faults::install_str("shard_dispatch:panic:1.0").unwrap();
+    assert!(server.submit(mk(200)).unwrap().wait().is_err());
+    faults::clear();
+
+    // The restarted shard re-warms and must return to zero fresh
+    // allocations per batch.
+    let mut steady = false;
+    for round in 0..12u64 {
+        let before = fresh(&server);
+        server.submit(mk(300 + round)).unwrap().wait().expect("post-restart serve");
+        if fresh(&server) == before {
+            steady = true;
+            break;
+        }
+    }
+    assert!(steady, "post-restart serving never returned to zero fresh allocations");
+}
+
+#[test]
+fn memory_pressure_degrades_then_recovers() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup_fft();
+    let cfg = ServerConfig {
+        shards: 1,
+        queue_depth: 8,
+        max_batch_requests: 4,
+        max_batch_wait: Duration::ZERO,
+        ..ServerConfig::default()
+    };
+    let server =
+        Server::start(net.clone(), compile(&net, &plan, &weights).unwrap(), cfg, pool).unwrap();
+
+    // Reference output + resident cache bytes from the healthy server.
+    let want = server.submit(mk(42)).unwrap().wait().expect("clean serve").output;
+    let cached = server.metrics().kernel_cache_bytes;
+    assert_eq!(server.metrics().current_max_batch, 4);
+
+    // Every batch sees a failed reserve: the cap halves and the largest
+    // kernel-spectra cache row is shed (when one is resident).
+    faults::install_str("arena_take:reserve_fail:1.0").unwrap();
+    server.submit(mk(1)).unwrap().wait().expect("pressured serve still answers");
+    server.submit(mk(2)).unwrap().wait().expect("pressured serve still answers");
+    let m = server.metrics();
+    assert!(m.mem_pressure_events >= 2, "pressure events: {}", m.mem_pressure_events);
+    assert!(m.current_max_batch <= 2, "cap must halve, got {}", m.current_max_batch);
+    if cached > 0 {
+        assert!(m.shed_kernel_cache_bytes > 0, "a resident cache row must be shed");
+    }
+
+    // Pressure clears: after enough clean batches the cap doubles back
+    // to the configured maximum and the shed caches may rebuild.
+    faults::clear();
+    for i in 0..24u64 {
+        server.submit(mk(500 + i)).unwrap().wait().expect("recovery serve");
+    }
+    assert_eq!(server.metrics().current_max_batch, 4, "cap must fully recover");
+
+    // Degradation and recovery never change the numerics.
+    let got = server.submit(mk(42)).unwrap().wait().expect("recovered serve").output;
+    assert_eq!(got.data(), want.data(), "pressure cycle changed the numerics");
+}
+
+#[test]
+fn memory_pressure_sheds_admission() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup();
+    let cfg = ServerConfig {
+        shards: 1,
+        queue_depth: 2,
+        max_batch_requests: 1,
+        max_batch_wait: Duration::ZERO,
+        ..ServerConfig::default()
+    };
+    let server =
+        Server::start(net.clone(), compile(&net, &plan, &weights).unwrap(), cfg, pool).unwrap();
+
+    // Prime: the first batch marks the server pressured (reserve_fail)
+    // and the delay makes every batch slow enough to pile submits on.
+    faults::install_str("shard_dispatch:delay:1.0,arena_take:reserve_fail:1.0").unwrap();
+    server.submit(mk(0)).unwrap().wait().expect("pressured serve still answers");
+
+    // Under pressure the admission depth is halved (2 → 1): a burst
+    // against a slow shard must shed with `MemoryPressure`, never
+    // block. Every admitted ticket must still resolve.
+    let mut tickets = Vec::new();
+    let mut shed = 0u64;
+    'rounds: for round in 0..20u64 {
+        for i in 0..8u64 {
+            match server.submit(mk(1 + round * 8 + i)) {
+                Ok(t) => tickets.push(t),
+                Err(rej) => {
+                    assert_eq!(
+                        rej.reason,
+                        RejectReason::MemoryPressure { depth: 1 },
+                        "pressured admission must shed with the reduced depth"
+                    );
+                    shed += 1;
+                    break 'rounds;
+                }
+            }
+        }
+    }
+    for t in tickets {
+        t.wait().expect("admitted requests still complete under pressure");
+    }
+    assert!(shed > 0, "burst against a pressured depth-1 queue must shed");
+    assert!(server.metrics().rejected >= shed);
+}
+
+#[test]
+fn wait_timeout_expires_then_wait_succeeds() {
+    let _g = serial();
+    let (net, plan, weights, pool) = setup();
+    let server = one_shard(&net, &plan, &weights, &pool);
+
+    // The delay keeps the response from arriving within the timeout.
+    faults::install_str("shard_dispatch:delay:1.0").unwrap();
+    let t = server.submit(mk(5)).unwrap();
+    match t.wait_timeout(Duration::from_millis(1)) {
+        Err(ServeError::TimedOut { waited }) => assert_eq!(waited, Duration::from_millis(1)),
+        other => panic!("1ms wait against a 25ms delay must time out, got {other:?}"),
+    }
+    // The ticket stays valid: the request was in flight, not lost.
+    let resp = t.wait().expect("delayed response still arrives");
+    assert_eq!(resp.output.shape().f, net.f_out());
+}
+
+#[test]
+fn chaos_env_faults() {
+    let _g = serial();
+
+    // CI sweeps real configs through the environment; locally a mixed
+    // default keeps the test meaningful. (The serialized tests above
+    // disarm the env config, so it is re-installed explicitly here.)
+    let spec = std::env::var("ZNNI_FAULTS")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .unwrap_or_else(|| "worker_patch:panic:0.25:7,arena_take:reserve_fail:0.3:13".into());
+
+    let (net, plan, weights, pool) = setup();
+    let cfg = ServerConfig {
+        shards: 2,
+        queue_depth: 4,
+        max_batch_requests: 2,
+        ..ServerConfig::default()
+    };
+    let server =
+        Server::start(net.clone(), compile(&net, &plan, &weights).unwrap(), cfg, pool).unwrap();
+    faults::install_str(&spec).expect("ZNNI_FAULTS spec must parse");
+
+    // Closed-loop clients under chaos. The invariant is liveness with
+    // typed outcomes: every request resolves as an output or a typed
+    // error — no hangs, no livelocks, and rejections return the volume
+    // for retry.
+    let (served, errored) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|c| {
+                let server = &server;
+                s.spawn(move || {
+                    let mut served = 0u64;
+                    let mut errored = 0u64;
+                    for r in 0..6u64 {
+                        let mut vol = mk(1000 + c * 100 + r);
+                        let mut attempts = 0u32;
+                        loop {
+                            match server.submit(vol) {
+                                Ok(t) => {
+                                    match t.wait() {
+                                        Ok(_) => served += 1,
+                                        Err(_) => errored += 1,
+                                    }
+                                    break;
+                                }
+                                Err(rej) => {
+                                    attempts += 1;
+                                    assert!(
+                                        attempts < 10_000,
+                                        "admission livelock under {:?}",
+                                        rej.reason
+                                    );
+                                    vol = rej.volume;
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                            }
+                        }
+                    }
+                    (served, errored)
+                })
+            })
+            .collect();
+        let mut served = 0u64;
+        let mut errored = 0u64;
+        for h in handles {
+            let (s_ok, s_err) = h.join().unwrap();
+            served += s_ok;
+            errored += s_err;
+        }
+        (served, errored)
+    });
+    assert_eq!(served + errored, 24, "every request must resolve exactly once");
+
+    // After the storm: disarm and prove the server still serves clean.
+    faults::clear();
+    server.submit(mk(9999)).unwrap().wait().expect("post-chaos serve");
+    let m = server.metrics();
+    assert_eq!(m.completed, served + 1);
+}

@@ -173,6 +173,24 @@ fn saturated_queue_rejects_not_blocks() {
 }
 
 #[test]
+fn wait_timeout_leaves_ticket_usable() {
+    let (net, plan, weights, pool) = setup();
+    let cfg = ServerConfig { shards: 1, ..ServerConfig::default() };
+    let server =
+        Server::start(net.clone(), compile(&net, &plan, &weights).unwrap(), cfg, pool).unwrap();
+    let t = server.submit(mk(0)).unwrap();
+    // A zero-length wait races nothing: the shard cannot have served a
+    // full volume between submit and this call.
+    match t.wait_timeout(Duration::ZERO) {
+        Err(znni::server::ServeError::TimedOut { .. }) => {}
+        other => panic!("zero-length wait must time out, got {other:?}"),
+    }
+    // The request is still in flight; the ticket redeems normally.
+    let resp = t.wait().expect("response arrives after the timed-out wait");
+    assert_eq!(resp.output.shape().f, net.f_out());
+}
+
+#[test]
 fn batched_server_throughput_at_least_serial() {
     let (net, _plan, weights, pool) = setup();
     let host = Device::host_with_ram(4 << 30);
