@@ -1,0 +1,147 @@
+//! Register-tiled fused direct conv vs the established CPU families,
+//! plus the conv→pool fusion pay-off (ISSUE 7).
+//!
+//! Two measurements on n337-shaped small-kernel (3³) layers:
+//!
+//! * **conv** — one conv layer timed per algorithm (DirectM,
+//!   DirectFused, FFT-TP) through the same warm [`ExecCtx`]: the
+//!   head-to-head the optimizer's default rates model;
+//! * **pair** — a conv→max-pool pair run separately (DirectFused then
+//!   `max_pool`) vs as the single fused primitive
+//!   ([`znni::layers::FusedConvPoolLayer`]), which never materializes
+//!   the pre-pool tensor — the column pair shows the time saved and the
+//!   Table II bytes dropped.
+//!
+//! Results go to stdout and `BENCH_direct_fused.json` (default
+//! `../BENCH_direct_fused.json`, i.e. the repository root when run via
+//! `cargo bench --bench direct_fused`; override with `ZNNI_BENCH_OUT`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use znni::conv::{Activation, Weights};
+use znni::exec::ExecCtx;
+use znni::layers::{ConvLayer, FusedConvPoolLayer, LayerPrimitive, MaxPoolLayer, Placement};
+use znni::memory::model::{conv_memory_bytes, conv_pool_fused_memory_bytes, ConvAlgo, ConvDims};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::{time_budget, Scale, Table};
+use znni::util::json::Json;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    let scale = Scale::from_env();
+    // Even extents so the 2³ pool window tiles the (n-2)³ conv output.
+    let (n, f) = match scale {
+        Scale::Paper => (48usize, 16usize),
+        Scale::Small => (20, 8),
+        Scale::Tiny => (10, 4),
+    };
+    let budget = match scale {
+        Scale::Paper => Duration::from_millis(1500),
+        Scale::Small => Duration::from_millis(600),
+        Scale::Tiny => Duration::from_millis(250),
+    };
+    let sh = Shape5::new(1, f, n, n, n);
+    let d = ConvDims { s: 1, f_in: f, f_out: f, n: [n; 3], k: [3; 3] };
+    println!("== Fused direct conv: {n}³ patches, f=f'={f}, k=3³ ==");
+
+    let mut doc: Vec<(String, Json)> = vec![
+        ("scale".into(), Json::Str(format!("{scale:?}"))),
+        ("extent".into(), Json::Num(n as f64)),
+        ("maps".into(), Json::Num(f as f64)),
+        ("workers".into(), Json::Num(pool.workers() as f64)),
+    ];
+
+    let w = Arc::new(Weights::random(f, f, [3, 3, 3], 0xF5ED));
+    let mut ctx = ExecCtx::new(pool);
+    let base = Tensor5::random(sh, 3);
+    let run = |layer: &dyn LayerPrimitive, ctx: &mut ExecCtx<'_>| {
+        // Warm the arena, then timed iterations copy the same input
+        // into an arena-recycled tensor (execute consumes its input).
+        let out = layer.execute(base.clone_tensor(), ctx);
+        ctx.retire(out);
+        time_budget(budget, || {
+            let mut t = ctx.tensor5(sh);
+            t.data_mut().copy_from_slice(base.data());
+            let out = layer.execute(t, ctx);
+            ctx.retire(out);
+        })
+    };
+
+    // Head-to-head conv layer per algorithm.
+    let mut table = Table::new(&["algorithm", "patch ms", "model bytes"]);
+    let mut conv_doc: Vec<(String, Json)> = Vec::new();
+    for algo in [ConvAlgo::DirectMkl, ConvAlgo::DirectFused, ConvAlgo::FftTaskParallel] {
+        let layer = ConvLayer::new(w.clone(), algo, Activation::Relu);
+        let t = run(&layer, &mut ctx);
+        let bytes = conv_memory_bytes(algo, &d, pool.workers());
+        table.row(vec![
+            algo.name().to_string(),
+            format!("{:.3}", t.secs() * 1e3),
+            znni::util::human_bytes(bytes),
+        ]);
+        conv_doc.push((
+            algo.tag().to_string(),
+            Json::Object(vec![
+                ("secs".into(), Json::Num(t.secs())),
+                ("model_bytes".into(), Json::Num(bytes as f64)),
+            ]),
+        ));
+    }
+    table.print();
+    doc.push(("conv".into(), Json::Object(conv_doc)));
+
+    // The conv→pool pair: separate primitives vs the fused one.
+    let p = [2usize, 2, 2];
+    let conv = ConvLayer::new(w.clone(), ConvAlgo::DirectFused, Activation::Relu);
+    let maxp = MaxPoolLayer { window: p, placement: Placement::Cpu };
+    let fused = FusedConvPoolLayer { weights: w, window: p, act: Activation::Relu };
+    {
+        let out = conv.execute(base.clone_tensor(), &mut ctx);
+        let out = maxp.execute(out, &mut ctx);
+        ctx.retire(out);
+    }
+    let separate = time_budget(budget, || {
+        let mut t = ctx.tensor5(sh);
+        t.data_mut().copy_from_slice(base.data());
+        let out = conv.execute(t, &mut ctx);
+        let out = maxp.execute(out, &mut ctx);
+        ctx.retire(out);
+    });
+    let fused_t = run(&fused, &mut ctx);
+    let (s_ms, f_ms) = (separate.secs() * 1e3, fused_t.secs() * 1e3);
+    let speedup = s_ms / f_ms.max(1e-9);
+    let unfused_bytes = conv_memory_bytes(ConvAlgo::DirectFused, &d, pool.workers());
+    let fused_bytes = conv_pool_fused_memory_bytes(&d, p, pool.workers());
+    let mut table = Table::new(&["conv→pool pair", "patch ms", "model bytes"]);
+    table.row(vec![
+        "separate (conv+pool)".into(),
+        format!("{s_ms:.3}"),
+        znni::util::human_bytes(unfused_bytes),
+    ]);
+    table.row(vec![
+        "fused (DirectFP)".into(),
+        format!("{f_ms:.3}"),
+        znni::util::human_bytes(fused_bytes),
+    ]);
+    table.row(vec!["speedup".into(), format!("{speedup:.2}×"), String::new()]);
+    table.print();
+    doc.push((
+        "pair".into(),
+        Json::Object(vec![
+            ("separate_secs".into(), Json::Num(separate.secs())),
+            ("fused_secs".into(), Json::Num(fused_t.secs())),
+            ("speedup".into(), Json::Num(speedup)),
+            ("unfused_model_bytes".into(), Json::Num(unfused_bytes as f64)),
+            ("fused_model_bytes".into(), Json::Num(fused_bytes as f64)),
+        ]),
+    ));
+
+    let path =
+        std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_direct_fused.json".into());
+    match std::fs::write(&path, Json::Object(doc).to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -2,6 +2,10 @@
 //!
 //! The computation is parallelised by two `parallel for` loops so every
 //! output image of every batch entry is produced on its own worker.
+//! When `S·f'` alone is smaller than the pool (single-image, few-channel
+//! layers), each output image is additionally split into x-slabs so the
+//! job count covers every worker (`slab_count` / `slab_range` below);
+//! slabs write disjoint output rows, so bias+activation stays per-job.
 //! Two variants:
 //!
 //! * **naive** — accumulates straight into the output image; minimal
@@ -23,7 +27,26 @@ use crate::exec::ExecCtx;
 use crate::tensor::Tensor5;
 use crate::util::sendptr::SendPtr;
 
-use super::{conv_out_shape, convolve_valid_accumulate, Activation, Weights};
+use super::{conv_out_shape, convolve_valid_accumulate_rows, Activation, Weights};
+
+/// Number of x-slabs to split each output image into so the job count
+/// `jobs·slabs` covers the pool. One slab (no split) when the `(s, j)`
+/// jobs alone saturate the workers — the common large-layer case.
+pub(crate) fn slab_count(jobs: usize, extent: usize, workers: usize) -> usize {
+    if jobs == 0 || extent == 0 {
+        return 1;
+    }
+    workers.div_ceil(jobs).min(extent)
+}
+
+/// Output x-rows `[x0, x1)` of slab `i` of `slabs` over `extent` rows —
+/// near-equal split, the first `extent % slabs` slabs one row longer.
+pub(crate) fn slab_range(extent: usize, slabs: usize, i: usize) -> (usize, usize) {
+    let base = extent / slabs;
+    let rem = extent % slabs;
+    let x0 = i * base + i.min(rem);
+    (x0, x0 + base + usize::from(i < rem))
+}
 
 /// Direct convolutional layer, naive inner loop.
 pub fn conv_direct_naive(
@@ -38,13 +61,27 @@ pub fn conv_direct_naive(
     let osh = conv_out_shape(ish, w.f_out, w.k);
     let mut out = ctx.tensor5(osh);
     let outp = SendPtr(out.data_mut().as_mut_ptr());
-    let img_len = osh.image_len();
-    // parallel over (s, j) pairs — Algorithm 1's two parallel-for loops.
-    pool.parallel_for(ish.s * w.f_out, |sj| {
+    let plane = osh.y * osh.z;
+    // parallel over (s, j, x-slab) — Algorithm 1's two parallel-for
+    // loops, plus an x split when S·f' alone can't cover the pool.
+    let jobs = ish.s * w.f_out;
+    let slabs = slab_count(jobs, osh.x, pool.workers());
+    pool.parallel_for(jobs * slabs, |sjx| {
+        let (sj, sl) = (sjx / slabs, sjx % slabs);
         let (s, j) = (sj / w.f_out, sj % w.f_out);
-        let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
+        let (x0, x1) = slab_range(osh.x, slabs, sl);
+        let o =
+            unsafe { outp.slice_mut(osh.image_offset(s, j) + x0 * plane, (x1 - x0) * plane) };
         for i in 0..w.f_in {
-            convolve_valid_accumulate(input.image(s, i), ish.spatial(), w.kernel(j, i), w.k, o);
+            convolve_valid_accumulate_rows(
+                input.image(s, i),
+                ish.spatial(),
+                w.kernel(j, i),
+                w.k,
+                o,
+                x0,
+                x1,
+            );
         }
         let b = w.bias(j);
         for v in o.iter_mut() {
@@ -69,22 +106,38 @@ pub fn conv_direct_mkl(
     let mut out = ctx.tensor5(osh);
     let outp = SendPtr(out.data_mut().as_mut_ptr());
     let img_len = osh.image_len();
+    let plane = osh.y * osh.z;
     let n = ish.spatial();
     // One temporary image per worker (the T·n' of Table II), drawn from
     // the arena so steady-state calls allocate nothing. A worker runs
-    // one job at a time, so indexing by worker id is race-free.
+    // one job at a time, so indexing by worker id is race-free. When
+    // jobs are x-slabs each uses only its slab's prefix of the temp.
     let mut tmps: Vec<Vec<f32>> =
         (0..pool.workers()).map(|_| ctx.take_f32_raw(img_len)).collect();
     let tmpp: Vec<SendPtr<f32>> = tmps.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+    let jobs = ish.s * w.f_out;
+    let slabs = slab_count(jobs, osh.x, pool.workers());
     {
         let tmpp = &tmpp;
-        pool.parallel_for_with_worker(ish.s * w.f_out, |worker, sj| {
+        pool.parallel_for_with_worker(jobs * slabs, |worker, sjx| {
+            let (sj, sl) = (sjx / slabs, sjx % slabs);
             let (s, j) = (sj / w.f_out, sj % w.f_out);
-            let o = unsafe { outp.slice_mut(osh.image_offset(s, j), img_len) };
-            let tmp = unsafe { tmpp[worker].slice_mut(0, img_len) };
+            let (x0, x1) = slab_range(osh.x, slabs, sl);
+            let slab_len = (x1 - x0) * plane;
+            let o =
+                unsafe { outp.slice_mut(osh.image_offset(s, j) + x0 * plane, slab_len) };
+            let tmp = unsafe { tmpp[worker].slice_mut(0, slab_len) };
             for i in 0..w.f_in {
                 tmp.fill(0.0);
-                convolve_valid_accumulate(input.image(s, i), n, w.kernel(j, i), w.k, tmp);
+                convolve_valid_accumulate_rows(
+                    input.image(s, i),
+                    n,
+                    w.kernel(j, i),
+                    w.k,
+                    tmp,
+                    x0,
+                    x1,
+                );
                 crate::simd::add_assign(o, tmp);
             }
             let b = w.bias(j);
@@ -146,6 +199,50 @@ mod tests {
         ] {
             assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "asym");
         }
+    }
+
+    #[test]
+    fn slab_helpers_cover_and_partition() {
+        // Saturated pools never split; starved pools split to coverage.
+        assert_eq!(slab_count(8, 10, 4), 1);
+        assert_eq!(slab_count(1, 10, 4), 4);
+        assert_eq!(slab_count(3, 10, 8), 3); // ceil(8/3) = 3
+        assert_eq!(slab_count(1, 2, 16), 2); // capped at the extent
+        assert_eq!(slab_count(0, 10, 4), 1);
+        assert_eq!(slab_count(4, 0, 4), 1);
+        for (extent, slabs) in [(10usize, 4usize), (7, 7), (5, 2), (3, 1)] {
+            let mut next = 0;
+            for i in 0..slabs {
+                let (x0, x1) = slab_range(extent, slabs, i);
+                assert_eq!(x0, next, "contiguous at {i}");
+                assert!(x1 > x0, "non-empty at {i}");
+                next = x1;
+            }
+            assert_eq!(next, extent, "partition covers {extent}/{slabs}");
+        }
+    }
+
+    #[test]
+    fn single_job_splits_across_workers() {
+        // Regression: s·f' = 1 used to run on one worker regardless of
+        // pool size. With 4 workers the image must split into x-slabs
+        // and still match the reference exactly at the slab seams.
+        let p = TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 });
+        assert_eq!(p.workers(), 4);
+        let mut ctx = ExecCtx::new(&p);
+        let input = Tensor5::random(Shape5::new(1, 2, 9, 6, 7), 11);
+        let w = Weights::random(1, 2, [3, 3, 3], 12);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let naive = conv_direct_naive(&input, &w, Activation::Relu, &mut ctx);
+        assert_allclose(naive.data(), expect.data(), 1e-5, 1e-4, "slab naive");
+        let mkl = conv_direct_mkl(&input, &w, Activation::Relu, &mut ctx);
+        assert_allclose(mkl.data(), expect.data(), 1e-5, 1e-4, "slab mkl");
+        // Fewer output rows than workers: the split caps at the extent.
+        let input = Tensor5::random(Shape5::new(1, 1, 4, 5, 5), 13);
+        let w = Weights::random(1, 1, [3, 3, 3], 14);
+        let expect = conv_layer_reference(&input, &w, Activation::None);
+        let got = conv_direct_naive(&input, &w, Activation::None, &mut ctx);
+        assert_allclose(got.data(), expect.data(), 1e-5, 1e-4, "short slab");
     }
 
     #[test]

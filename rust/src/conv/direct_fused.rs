@@ -1,0 +1,428 @@
+//! Fused register-tiled direct convolution (PZnet/Budden direction).
+//!
+//! Two primitives on one tile loop:
+//!
+//! * [`conv_direct_fused`] — a cache-blocked direct conv that carries a
+//!   pair of output-channel accumulator rows across the whole `f_in`
+//!   reduction and applies bias+activation in-register before the
+//!   single store. Each input row loaded feeds *two* output channels
+//!   ([`crate::simd::axpy2`]), halving input bandwidth relative to the
+//!   naive/MKL variants, and the output tensor is written exactly once.
+//! * [`conv_direct_fused_pool`] — the same loop fused with the *next*
+//!   max-pooling layer: each completed window of `p₀` conv x-planes is
+//!   pooled immediately ([`crate::pool::pool_one`]), so the
+//!   full pre-pool tensor is never materialized. This is the
+//!   [`crate::memory::model::conv_pool_fused_memory_bytes`] Table II
+//!   row: the `S·f'·n'` inter-layer tensor shrinks to `S·f'·n'/p³`
+//!   plus per-worker tiles.
+//!
+//! Parallelisation follows the direct primitives: `(s, channel-pair,
+//! x-slab)` jobs, with the x split sized by the same slab heuristic as
+//! [`super::direct`], so small layers still cover the pool.
+//!
+//! **Bit-identity contract.** Unlike the other vector primitives, which
+//! promise tolerance parity, the fused family is *bit-identical* to its
+//! scalar oracle ([`conv_fused_reference`]) on every SIMD tier for
+//! finite inputs: every tier runs multiply-then-add in the same
+//! `(i, a, b, c)` tap order (no FMA anywhere — see
+//! [`crate::simd::axpy2`]), zero-valued taps are *not* skipped, and the
+//! ReLU is the same `max(v, 0)` on every path. The property suite
+//! asserts exact equality across all forced tiers.
+
+use crate::exec::ExecCtx;
+use crate::pool::{max_pool_out_shape, pool_one, pool_one_scalar};
+use crate::tensor::{Tensor5, Vec3};
+use crate::util::sendptr::SendPtr;
+
+use super::direct::{slab_count, slab_range};
+use super::{conv_out_shape, Activation, Weights};
+
+/// Accumulate every tap of input row `(x+a, y+b)` into the channel-pair
+/// accumulator rows. Factored out so the plain and pooled variants run
+/// the identical instruction sequence.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accumulate_pair(
+    tier: crate::simd::Tier,
+    acc0: &mut [f32],
+    acc1: &mut [f32],
+    img: &[f32],
+    n: Vec3,
+    ker0: &[f32],
+    ker1: &[f32],
+    k: Vec3,
+    x: usize,
+    y: usize,
+) {
+    let on2 = acc0.len();
+    for a in 0..k[0] {
+        for b in 0..k[1] {
+            let irow = ((x + a) * n[1] + (y + b)) * n[2];
+            for c in 0..k[2] {
+                let ki = ((k[0] - 1 - a) * k[1] + (k[1] - 1 - b)) * k[2] + (k[2] - 1 - c);
+                // No zero-tap skip: the oracle adds every product, and
+                // skipping would perturb signed-zero accumulation.
+                crate::simd::axpy2_tier(
+                    tier,
+                    acc0,
+                    acc1,
+                    &img[irow + c..irow + c + on2],
+                    ker0[ki],
+                    ker1[ki],
+                );
+            }
+        }
+    }
+}
+
+/// Register-tiled direct convolutional layer with fused bias+activation.
+///
+/// Output and semantics match [`super::conv_layer_reference`] up to
+/// summation order; bit-for-bit it matches [`conv_fused_reference`] on
+/// every SIMD tier (see the module doc for the contract).
+pub fn conv_direct_fused(
+    input: &Tensor5,
+    w: &Weights,
+    act: Activation,
+    ctx: &mut ExecCtx<'_>,
+) -> Tensor5 {
+    let pool = ctx.pool();
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let n = ish.spatial();
+    let on = osh.spatial();
+    let relu = act == Activation::Relu;
+    let mut out = ctx.tensor5(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    // Two accumulator rows per worker — the whole per-thread working
+    // set beyond the tensors themselves (the `T·2·n'_z` of Table II).
+    let mut tiles: Vec<Vec<f32>> =
+        (0..pool.workers()).map(|_| ctx.take_f32_raw(2 * on[2])).collect();
+    let tilep: Vec<SendPtr<f32>> = tiles.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+    let jpairs = w.f_out.div_ceil(2);
+    let jobs = ish.s * jpairs;
+    let slabs = slab_count(jobs, on[0], pool.workers());
+    let tier = crate::simd::active();
+    {
+        let tilep = &tilep;
+        pool.parallel_for_with_worker(jobs * slabs, |worker, sjx| {
+            let (sj, sl) = (sjx / slabs, sjx % slabs);
+            let (s, jp) = (sj / jpairs, sj % jpairs);
+            let j0 = 2 * jp;
+            let j1 = (j0 + 1).min(w.f_out - 1); // odd f_out: j1 == j0
+            let (x0, x1) = slab_range(on[0], slabs, sl);
+            let buf = unsafe { tilep[worker].slice_mut(0, 2 * on[2]) };
+            let (acc0, acc1) = buf.split_at_mut(on[2]);
+            for x in x0..x1 {
+                for y in 0..on[1] {
+                    acc0.fill(0.0);
+                    acc1.fill(0.0);
+                    for i in 0..w.f_in {
+                        accumulate_pair(
+                            tier,
+                            acc0,
+                            acc1,
+                            input.image(s, i),
+                            n,
+                            w.kernel(j0, i),
+                            w.kernel(j1, i),
+                            w.k,
+                            x,
+                            y,
+                        );
+                    }
+                    let ob = osh.image_offset(s, j0) + (x * on[1] + y) * on[2];
+                    let orow = unsafe { outp.slice_mut(ob, on[2]) };
+                    crate::simd::store_bias_act_tier(tier, orow, acc0, w.bias(j0), relu);
+                    if j1 != j0 {
+                        let ob = osh.image_offset(s, j1) + (x * on[1] + y) * on[2];
+                        let orow = unsafe { outp.slice_mut(ob, on[2]) };
+                        crate::simd::store_bias_act_tier(tier, orow, acc1, w.bias(j1), relu);
+                    }
+                }
+            }
+        });
+    }
+    for t in tiles {
+        ctx.put_f32(t);
+    }
+    out
+}
+
+/// [`conv_direct_fused`] with the following max-pool fused in: returns
+/// the *pooled* output directly, never materializing the pre-pool
+/// tensor. The conv output extents must be divisible by `p` (the same
+/// precondition as [`max_pool_out_shape`]).
+///
+/// Each worker computes `p₀` conv x-planes of a channel pair into a
+/// tile (bias+activation applied on store), pools the tile into one
+/// output plane per channel, and moves on — so the transient footprint
+/// is `T` tiles of `2·(p₀·n'_y·n'_z + n'_z)` floats.
+pub fn conv_direct_fused_pool(
+    input: &Tensor5,
+    w: &Weights,
+    act: Activation,
+    p: Vec3,
+    ctx: &mut ExecCtx<'_>,
+) -> Tensor5 {
+    let pool = ctx.pool();
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let csh = conv_out_shape(ish, w.f_out, w.k);
+    let osh = max_pool_out_shape(csh, p);
+    let n = ish.spatial();
+    let on = csh.spatial();
+    let po = osh.spatial();
+    let relu = act == Activation::Relu;
+    let mut out = ctx.tensor5(osh);
+    let outp = SendPtr(out.data_mut().as_mut_ptr());
+    // Per-worker scratch: a pair of accumulator rows plus a pair of
+    // p₀-plane channel tiles (the `T·2·(p₀·n'_y·n'_z + n'_z)` of the
+    // fused Table II row).
+    let plane = on[1] * on[2];
+    let tile_len = p[0] * plane;
+    let scratch = 2 * on[2] + 2 * tile_len;
+    let mut tiles: Vec<Vec<f32>> =
+        (0..pool.workers()).map(|_| ctx.take_f32_raw(scratch)).collect();
+    let tilep: Vec<SendPtr<f32>> = tiles.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+    let jpairs = w.f_out.div_ceil(2);
+    let jobs = ish.s * jpairs;
+    let slabs = slab_count(jobs, po[0], pool.workers());
+    let tier = crate::simd::active();
+    {
+        let tilep = &tilep;
+        pool.parallel_for_with_worker(jobs * slabs, |worker, sjx| {
+            let (sj, sl) = (sjx / slabs, sjx % slabs);
+            let (s, jp) = (sj / jpairs, sj % jpairs);
+            let j0 = 2 * jp;
+            let j1 = (j0 + 1).min(w.f_out - 1);
+            let (px0, px1) = slab_range(po[0], slabs, sl);
+            let buf = unsafe { tilep[worker].slice_mut(0, scratch) };
+            let (accs, tbuf) = buf.split_at_mut(2 * on[2]);
+            let (acc0, acc1) = accs.split_at_mut(on[2]);
+            let (tile0, tile1) = tbuf.split_at_mut(tile_len);
+            for px in px0..px1 {
+                for dx in 0..p[0] {
+                    let x = px * p[0] + dx;
+                    for y in 0..on[1] {
+                        acc0.fill(0.0);
+                        acc1.fill(0.0);
+                        for i in 0..w.f_in {
+                            accumulate_pair(
+                                tier,
+                                acc0,
+                                acc1,
+                                input.image(s, i),
+                                n,
+                                w.kernel(j0, i),
+                                w.kernel(j1, i),
+                                w.k,
+                                x,
+                                y,
+                            );
+                        }
+                        let tb = (dx * on[1] + y) * on[2];
+                        crate::simd::store_bias_act_tier(
+                            tier,
+                            &mut tile0[tb..tb + on[2]],
+                            acc0,
+                            w.bias(j0),
+                            relu,
+                        );
+                        if j1 != j0 {
+                            crate::simd::store_bias_act_tier(
+                                tier,
+                                &mut tile1[tb..tb + on[2]],
+                                acc1,
+                                w.bias(j1),
+                                relu,
+                            );
+                        }
+                    }
+                }
+                // The tile holds conv planes [px·p₀, px·p₀+p₀) with
+                // bias+activation applied — pool it straight into the
+                // output plane and reuse the tile for the next window.
+                let ob = osh.image_offset(s, j0) + px * po[1] * po[2];
+                let oplane = unsafe { outp.slice_mut(ob, po[1] * po[2]) };
+                pool_one(tile0, [p[0], on[1], on[2]], p, [0, 0, 0], [1, po[1], po[2]], oplane);
+                if j1 != j0 {
+                    let ob = osh.image_offset(s, j1) + px * po[1] * po[2];
+                    let oplane = unsafe { outp.slice_mut(ob, po[1] * po[2]) };
+                    pool_one(tile1, [p[0], on[1], on[2]], p, [0, 0, 0], [1, po[1], po[2]], oplane);
+                }
+            }
+        });
+    }
+    for t in tiles {
+        ctx.put_f32(t);
+    }
+    out
+}
+
+/// Scalar oracle of the fused family: one accumulator per output
+/// element, summed over *all* taps of *all* input channels in
+/// `(i, a, b, c)` order, then `act(acc + bias)` — exactly the operation
+/// sequence every [`conv_direct_fused`] tier runs per element. Note
+/// this differs from [`super::conv_layer_reference`], which accumulates
+/// per-channel partial images (different rounding).
+pub fn conv_fused_reference(input: &Tensor5, w: &Weights, act: Activation) -> Tensor5 {
+    let ish = input.shape();
+    assert_eq!(ish.f, w.f_in, "channel mismatch");
+    let osh = conv_out_shape(ish, w.f_out, w.k);
+    let n = ish.spatial();
+    let on = osh.spatial();
+    let k = w.k;
+    let mut out = Tensor5::zeros(osh);
+    for s in 0..ish.s {
+        for j in 0..w.f_out {
+            let bias = w.bias(j);
+            let o = out.image_mut(s, j);
+            for x in 0..on[0] {
+                for y in 0..on[1] {
+                    for z in 0..on[2] {
+                        let mut acc = 0.0f32;
+                        for i in 0..w.f_in {
+                            let img = input.image(s, i);
+                            let ker = w.kernel(j, i);
+                            for a in 0..k[0] {
+                                for b in 0..k[1] {
+                                    for c in 0..k[2] {
+                                        let iv = img[((x + a) * n[1] + (y + b)) * n[2] + (z + c)];
+                                        let kv = ker[((k[0] - 1 - a) * k[1] + (k[1] - 1 - b))
+                                            * k[2]
+                                            + (k[2] - 1 - c)];
+                                        acc += iv * kv;
+                                    }
+                                }
+                            }
+                        }
+                        o[(x * on[1] + y) * on[2] + z] = act.apply(acc + bias);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scalar oracle of [`conv_direct_fused_pool`]: the fused reference
+/// followed by the scalar pooling sweep, per image.
+pub fn conv_fused_pool_reference(
+    input: &Tensor5,
+    w: &Weights,
+    act: Activation,
+    p: Vec3,
+) -> Tensor5 {
+    let conv = conv_fused_reference(input, w, act);
+    let csh = conv.shape();
+    let osh = max_pool_out_shape(csh, p);
+    let mut out = Tensor5::zeros(osh);
+    for s in 0..csh.s {
+        for j in 0..csh.f {
+            pool_one_scalar(
+                conv.image(s, j),
+                csh.spatial(),
+                p,
+                [0, 0, 0],
+                osh.spatial(),
+                out.image_mut(s, j),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::conv_layer_reference;
+    use crate::pool::max_pool;
+    use crate::tensor::Shape5;
+    use crate::util::pool::{ChipTopology, TaskPool};
+    use crate::util::quick::assert_allclose;
+
+    fn pool() -> TaskPool {
+        TaskPool::with_topology(ChipTopology { chips: 1, cores_per_chip: 2 })
+    }
+
+    #[test]
+    fn fused_matches_layer_reference_within_tolerance() {
+        // Different summation order than the per-channel reference →
+        // tolerance parity here; bit-identity is against its own oracle.
+        let p = pool();
+        let mut ctx = ExecCtx::new(&p);
+        let input = Tensor5::random(Shape5::new(2, 3, 6, 7, 8), 21);
+        let w = Weights::random(4, 3, [3, 2, 3], 22);
+        let expect = conv_layer_reference(&input, &w, Activation::Relu);
+        let got = conv_direct_fused(&input, &w, Activation::Relu, &mut ctx);
+        assert_allclose(got.data(), expect.data(), 1e-4, 1e-3, "fused vs layer ref");
+    }
+
+    #[test]
+    fn fused_is_bit_identical_to_its_oracle() {
+        // Odd f_out (register-tile tail) and odd extents on purpose.
+        let p = pool();
+        let mut ctx = ExecCtx::new(&p);
+        for (s, fi, fo, k) in [(1, 1, 1, [1, 1, 1]), (2, 3, 5, [3, 2, 3]), (1, 2, 4, [2, 2, 2])] {
+            let n = [k[0] + 4, k[1] + 6, k[2] + 5];
+            let input = Tensor5::random(Shape5::from_spatial(s, fi, n), 31);
+            let w = Weights::random(fo, fi, k, 32);
+            for act in [Activation::None, Activation::Relu] {
+                let expect = conv_fused_reference(&input, &w, act);
+                let got = conv_direct_fused(&input, &w, act, &mut ctx);
+                assert_allclose(got.data(), expect.data(), 0.0, 0.0, "fused oracle");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_pool_is_bit_identical_to_its_oracle() {
+        let p = pool();
+        let mut ctx = ExecCtx::new(&p);
+        for (fo, pw) in [(4usize, [2, 2, 2]), (3, [1, 2, 2]), (5, [2, 1, 3])] {
+            // Input sized so the conv output divides the pool window.
+            let k = [3, 3, 3];
+            let n = [k[0] - 1 + pw[0] * 3, k[1] - 1 + pw[1] * 2, k[2] - 1 + pw[2] * 2];
+            let input = Tensor5::random(Shape5::from_spatial(1, 2, n), 41);
+            let w = Weights::random(fo, 2, k, 42);
+            let expect = conv_fused_pool_reference(&input, &w, Activation::Relu, pw);
+            let got = conv_direct_fused_pool(&input, &w, Activation::Relu, pw, &mut ctx);
+            assert_allclose(got.data(), expect.data(), 0.0, 0.0, "fused-pool oracle");
+        }
+    }
+
+    #[test]
+    fn fused_pool_matches_separate_conv_then_pool() {
+        // The fusion must be invisible: same result as running the
+        // fused conv and the standalone max-pool primitive in sequence.
+        let p = pool();
+        let mut ctx = ExecCtx::new(&p);
+        let pw = [2, 2, 2];
+        let input = Tensor5::random(Shape5::new(2, 2, 6, 8, 8), 51);
+        let w = Weights::random(3, 2, [3, 3, 3], 52);
+        let conv = conv_direct_fused(&input, &w, Activation::Relu, &mut ctx);
+        let expect = max_pool(&conv, pw, &mut ctx);
+        let got = conv_direct_fused_pool(&input, &w, Activation::Relu, pw, &mut ctx);
+        assert_allclose(got.data(), expect.data(), 0.0, 0.0, "fused vs separate");
+    }
+
+    #[test]
+    fn property_fused_agrees_with_oracle() {
+        let p = pool();
+        let mut ctx = ExecCtx::new(&p);
+        crate::util::quick::check("fused == oracle", |g| {
+            let s = g.usize(1, 2);
+            let fi = g.usize(1, 3);
+            let fo = g.usize(1, 5);
+            let k = [g.usize(1, 3), g.usize(1, 3), g.usize(1, 3)];
+            let n = [k[0] + g.usize(0, 4), k[1] + g.usize(0, 4), k[2] + g.usize(0, 4)];
+            let input = Tensor5::random(Shape5::from_spatial(s, fi, n), g.case as u64);
+            let w = Weights::random(fo, fi, k, g.case as u64 + 100);
+            let expect = conv_fused_reference(&input, &w, Activation::Relu);
+            let got = conv_direct_fused(&input, &w, Activation::Relu, &mut ctx);
+            assert_allclose(got.data(), expect.data(), 0.0, 0.0, "prop fused");
+        });
+    }
+}

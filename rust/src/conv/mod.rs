@@ -7,6 +7,7 @@
 //! "valid"-region output of extent `n − k + 1`, matching Table I.
 
 pub mod direct;
+pub mod direct_fused;
 pub mod fft_dp;
 pub mod fft_gpu;
 pub mod fft_tp;
@@ -153,14 +154,35 @@ pub fn convolve_valid_accumulate(
     out: &mut [f32],
 ) {
     let on = [n[0] - k[0] + 1, n[1] - k[1] + 1, n[2] - k[2] + 1];
+    debug_assert_eq!(out.len(), on[0] * on[1] * on[2]);
+    convolve_valid_accumulate_rows(img, n, ker, k, out, 0, on[0]);
+}
+
+/// [`convolve_valid_accumulate`] restricted to output x-rows
+/// `[x0, x1)`. `out` covers exactly those rows (`(x1−x0)·n'_y·n'_z`
+/// elements); the full input image is still read, since row `x` of the
+/// output needs input rows `x..x+k`. This is the slab entry point the
+/// direct primitives use to split one image across workers when
+/// `S·f' <` the pool size.
+pub fn convolve_valid_accumulate_rows(
+    img: &[f32],
+    n: Vec3,
+    ker: &[f32],
+    k: Vec3,
+    out: &mut [f32],
+    x0: usize,
+    x1: usize,
+) {
+    let on = [n[0] - k[0] + 1, n[1] - k[1] + 1, n[2] - k[2] + 1];
     debug_assert_eq!(img.len(), n[0] * n[1] * n[2]);
     debug_assert_eq!(ker.len(), k[0] * k[1] * k[2]);
-    debug_assert_eq!(out.len(), on[0] * on[1] * on[2]);
+    debug_assert!(x0 <= x1 && x1 <= on[0]);
+    debug_assert_eq!(out.len(), (x1 - x0) * on[1] * on[2]);
     // Resolve the dispatch tier once per image, not once per tap.
     let tier = crate::simd::active();
-    for x in 0..on[0] {
+    for x in x0..x1 {
         for y in 0..on[1] {
-            let ob = (x * on[1] + y) * on[2];
+            let ob = ((x - x0) * on[1] + y) * on[2];
             let orow = &mut out[ob..ob + on[2]];
             for a in 0..k[0] {
                 for b in 0..k[1] {

@@ -17,8 +17,8 @@ use crate::conv::{self, Activation, Weights};
 use crate::exec::{ExecCtx, WorkspaceReq};
 use crate::fft::fft_optimal_vec3;
 use crate::memory::model::{
-    conv_memory_bytes, kernel_spectra_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo,
-    ConvDims,
+    conv_memory_bytes, conv_pool_fused_memory_bytes, kernel_spectra_bytes, mpf_memory_bytes,
+    pool_memory_bytes, ConvAlgo, ConvDims,
 };
 use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
 use crate::tensor::{Shape5, Tensor5, Vec3};
@@ -230,6 +230,8 @@ impl LayerPrimitive for ConvLayer {
         match self.algo {
             ConvAlgo::DirectNaive
             | ConvAlgo::DirectMkl
+            | ConvAlgo::DirectFused
+            | ConvAlgo::DirectFusedPool
             | ConvAlgo::GpuDenseNoWorkspace
             | ConvAlgo::GpuDensePrecomp => d.direct_flops(),
             ConvAlgo::FftDataParallel | ConvAlgo::FftTaskParallel | ConvAlgo::GpuFft => {
@@ -280,6 +282,15 @@ impl LayerPrimitive for ConvLayer {
             }
             ConvAlgo::DirectMkl => {
                 let out = conv::direct::conv_direct_mkl(&input, w, self.act, ctx);
+                ctx.retire(input);
+                out
+            }
+            // A bare `ConvLayer` has no pooling window, so both fused
+            // variants run the register-tiled fused conv; the optimizer
+            // instantiates `FusedConvPoolLayer` (not this) for
+            // `DirectFusedPool` plans, where the pool window is known.
+            ConvAlgo::DirectFused | ConvAlgo::DirectFusedPool => {
+                let out = conv::direct_fused::conv_direct_fused(&input, w, self.act, ctx);
                 ctx.retire(input);
                 out
             }
@@ -407,6 +418,132 @@ impl LayerPrimitive for MpfLayer {
         let out = mpf_forward(&input, self.window, ctx);
         ctx.retire(input);
         out
+    }
+}
+
+/// Fused convolution + max-pool layer ([`ConvAlgo::DirectFusedPool`]):
+/// one primitive spanning a conv→pool pair of the network spec. The
+/// pre-pool tensor is never materialized — each worker convolves a
+/// `p₀`-row tile into per-worker scratch and max-reduces it straight
+/// into the pooled output, so the Table II row drops the inter-layer
+/// `S·f'·n'` tensor (see
+/// [`crate::memory::model::conv_pool_fused_memory_bytes`]).
+///
+/// The optimizer emits this for a `Conv` spec layer whose plan chose
+/// `DirectFusedPool`; the following `Pool` spec layer compiles to
+/// [`PoolFusedLayer`], a pass-through, so plan layers stay 1:1 with
+/// the network spec.
+pub struct FusedConvPoolLayer {
+    /// Shared layer weights of the convolution half.
+    pub weights: Arc<Weights>,
+    /// Pooling window p of the fused max-pool half.
+    pub window: Vec3,
+    /// Activation applied between the conv accumulate and the pool.
+    pub act: Activation,
+}
+
+impl FusedConvPoolLayer {
+    fn dims(&self, input: Shape5) -> ConvDims {
+        ConvDims {
+            s: input.s,
+            f_in: self.weights.f_in,
+            f_out: self.weights.f_out,
+            n: input.spatial(),
+            k: self.weights.k,
+        }
+    }
+}
+
+impl LayerPrimitive for FusedConvPoolLayer {
+    fn name(&self) -> String {
+        "DirectFP".into()
+    }
+
+    fn out_shape(&self, input: Shape5) -> Shape5 {
+        let csh = conv::conv_out_shape(input, self.weights.f_out, self.weights.k);
+        max_pool_out_shape(csh, self.window)
+    }
+
+    fn accepts(&self, input: Shape5) -> bool {
+        if input.f != self.weights.f_in
+            || input.x < self.weights.k[0]
+            || input.y < self.weights.k[1]
+            || input.z < self.weights.k[2]
+        {
+            return false;
+        }
+        let csh = conv::conv_out_shape(input, self.weights.f_out, self.weights.k);
+        csh.x > 0
+            && csh.y > 0
+            && csh.z > 0
+            && csh.x % self.window[0] == 0
+            && csh.y % self.window[1] == 0
+            && csh.z % self.window[2] == 0
+    }
+
+    fn memory_bytes(&self, input: Shape5, threads: usize) -> u64 {
+        conv_pool_fused_memory_bytes(&self.dims(input), self.window, threads)
+    }
+
+    fn flops(&self, input: Shape5) -> f64 {
+        // Convolution FLOPs only; the pool's comparisons ride along in
+        // the fitted per-algorithm rate (`CostModel::conv_secs` divides
+        // these FLOPs by the measured fused throughput, which already
+        // includes the max-reduce).
+        self.dims(input).direct_flops()
+    }
+
+    fn placement(&self) -> Placement {
+        Placement::Cpu
+    }
+
+    fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+        let out = conv::direct_fused::conv_direct_fused_pool(
+            &input,
+            &self.weights,
+            self.act,
+            self.window,
+            ctx,
+        );
+        ctx.retire(input);
+        out
+    }
+}
+
+/// Pass-through primitive standing in for a `Pool` spec layer whose
+/// max-reduce was folded into the preceding [`FusedConvPoolLayer`]. It
+/// keeps compiled plans 1:1 with the network spec: the fused conv
+/// already produced the pooled tensor, so this layer is the identity —
+/// zero FLOPs, zero extra memory.
+pub struct PoolFusedLayer;
+
+impl LayerPrimitive for PoolFusedLayer {
+    fn name(&self) -> String {
+        "PoolFused".into()
+    }
+
+    fn out_shape(&self, input: Shape5) -> Shape5 {
+        input
+    }
+
+    fn accepts(&self, _input: Shape5) -> bool {
+        true
+    }
+
+    fn memory_bytes(&self, _input: Shape5, _threads: usize) -> u64 {
+        0
+    }
+
+    fn flops(&self, _input: Shape5) -> f64 {
+        0.0
+    }
+
+    fn placement(&self) -> Placement {
+        Placement::Cpu
+    }
+
+    fn execute(&self, input: Tensor5, _ctx: &mut ExecCtx<'_>) -> Tensor5 {
+        input
     }
 }
 
@@ -548,6 +685,61 @@ mod tests {
         assert!(ml.accepts(Shape5::new(1, 1, 5, 5, 5)));
         assert!(!ml.accepts(Shape5::new(1, 1, 4, 5, 5)));
         assert_eq!(ml.out_shape(Shape5::new(1, 1, 5, 5, 5)).s, 8);
+    }
+
+    #[test]
+    fn fused_conv_pool_layer_matches_separate_primitives() {
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 21));
+        let fused =
+            FusedConvPoolLayer { weights: w.clone(), window: [2, 2, 2], act: Activation::Relu };
+        let conv = ConvLayer::new(w, ConvAlgo::DirectFused, Activation::Relu);
+        let pool_l = MaxPoolLayer { window: [2, 2, 2], placement: Placement::Cpu };
+        // conv-out 4³ divides the 2³ window.
+        let sh = Shape5::new(1, 2, 6, 6, 6);
+        assert!(fused.accepts(sh));
+        let input = Tensor5::random(sh, 22);
+        let mid = conv.execute(input.clone_tensor(), &mut ctx);
+        let expect = pool_l.execute(mid, &mut ctx);
+        assert_eq!(fused.out_shape(sh), expect.shape());
+        let got = fused.execute(input, &mut ctx);
+        // Same tap order and pool-reduce order — bit-identical.
+        assert_eq!(got.data(), expect.data(), "fused layer vs conv-then-pool");
+        // The fused Table II row must undercut conv + pool: it drops
+        // the full-size inter-layer tensor.
+        let separate = conv.memory_bytes(sh, p.workers());
+        assert!(fused.memory_bytes(sh, p.workers()) < separate);
+        assert_eq!(fused.flops(sh), conv.flops(sh), "pool comparisons fold into the rate");
+    }
+
+    #[test]
+    fn fused_conv_pool_layer_rejects_indivisible_conv_out() {
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 23));
+        let fused = FusedConvPoolLayer { weights: w, window: [2, 2, 2], act: Activation::Relu };
+        // conv-out 5³ does not divide 2.
+        assert!(!fused.accepts(Shape5::new(1, 2, 7, 7, 7)));
+        // wrong channel count.
+        assert!(!fused.accepts(Shape5::new(1, 3, 6, 6, 6)));
+        // kernel does not fit.
+        assert!(!fused.accepts(Shape5::new(1, 2, 2, 6, 6)));
+    }
+
+    #[test]
+    fn pool_fused_layer_is_identity() {
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
+        let l = PoolFusedLayer;
+        let sh = Shape5::new(1, 3, 4, 4, 4);
+        assert!(l.accepts(sh));
+        assert_eq!(l.out_shape(sh), sh);
+        assert_eq!(l.memory_bytes(sh, 8), 0);
+        assert_eq!(l.flops(sh), 0.0);
+        let input = Tensor5::random(sh, 24);
+        let before = input.data().to_vec();
+        let out = l.execute(input, &mut ctx);
+        assert_eq!(out.data(), &before[..], "pass-through must not touch data");
+        ctx.retire(out);
     }
 
     #[test]

@@ -27,6 +27,15 @@ pub enum ConvAlgo {
     DirectNaive,
     /// CPU direct with per-thread temporary result image ("MKL" mode).
     DirectMkl,
+    /// CPU direct, register-tiled and cache-blocked, with bias and
+    /// activation fused into the accumulator store (PZnet-style). Works
+    /// out of per-worker row tiles instead of per-thread result images.
+    DirectFused,
+    /// [`ConvAlgo::DirectFused`] with the following max-pooling layer
+    /// fused into the tile loop: each completed conv tile is pooled
+    /// immediately, so the pre-pool tensor is never materialized. Only
+    /// applicable when the next layer is an aligned max-pool.
+    DirectFusedPool,
     /// CPU FFT-based, data parallel (Algorithm 2 / "FFT algorithm 1").
     FftDataParallel,
     /// CPU FFT-based, task parallel ("FFT algorithm 2").
@@ -41,9 +50,11 @@ pub enum ConvAlgo {
 
 impl ConvAlgo {
     /// Every algorithm, in Table II row order.
-    pub const ALL: [ConvAlgo; 7] = [
+    pub const ALL: [ConvAlgo; 9] = [
         ConvAlgo::DirectNaive,
         ConvAlgo::DirectMkl,
+        ConvAlgo::DirectFused,
+        ConvAlgo::DirectFusedPool,
         ConvAlgo::FftDataParallel,
         ConvAlgo::FftTaskParallel,
         ConvAlgo::GpuDenseNoWorkspace,
@@ -64,6 +75,8 @@ impl ConvAlgo {
         match self {
             ConvAlgo::DirectNaive => "Direct (naive)",
             ConvAlgo::DirectMkl => "Direct (MKL)",
+            ConvAlgo::DirectFused => "Direct (fused)",
+            ConvAlgo::DirectFusedPool => "Direct (fused+pool)",
             ConvAlgo::FftDataParallel => "FFT data-parallel",
             ConvAlgo::FftTaskParallel => "FFT task-parallel",
             ConvAlgo::GpuDenseNoWorkspace => "CuDNN1 (no workspace)",
@@ -77,6 +90,8 @@ impl ConvAlgo {
         match self {
             ConvAlgo::DirectNaive => "DirectN",
             ConvAlgo::DirectMkl => "DirectM",
+            ConvAlgo::DirectFused => "DirectFused",
+            ConvAlgo::DirectFusedPool => "DirectFusedPool",
             ConvAlgo::FftDataParallel => "FFT-DP",
             ConvAlgo::FftTaskParallel => "FFT-TP",
             ConvAlgo::GpuDenseNoWorkspace => "CuDNN1",
@@ -193,6 +208,15 @@ pub fn conv_memory_bytes(algo: ConvAlgo, d: &ConvDims, threads: usize) -> u64 {
         ConvAlgo::DirectNaive => B * (s * f * n + s * fp * np),
         // + one temporary result image per thread
         ConvAlgo::DirectMkl => B * (s * f * n + s * fp * np + t * np),
+        // + one pair of accumulator rows (n'_z floats each) per thread —
+        // the register tile spills nothing bigger than two output rows.
+        // Run as a plain conv (no pool fused), the fused-pool variant
+        // has the same footprint; its pooled row lives in
+        // `conv_pool_fused_memory_bytes`.
+        ConvAlgo::DirectFused | ConvAlgo::DirectFusedPool => {
+            let o = d.out_n();
+            B * (s * f * n + s * fp * np + t * 2 * o[2] as u64)
+        }
         // max over the three stages of Algorithm 2:
         //   input + input transforms;
         //   output + input transforms + output accumulator + w̃;
@@ -226,6 +250,30 @@ pub fn conv_memory_bytes(algo: ConvAlgo, d: &ConvDims, threads: usize) -> u64 {
             GPU_FFT_K_BYTES + B * st1.max(st2).max(st3)
         }
     }
+}
+
+/// Table II row of a fused conv→max-pool pair executed by
+/// [`ConvAlgo::DirectFusedPool`]: input + *pooled* output + per-thread
+/// tiles. The `S·f'·n'` inter-layer tensor of the unfused pair is
+/// replaced by `S·f'·n'/p³` (the pooled output) plus `T` working tiles
+/// of `2·p₀·n'_y·n'_z + 2·n'_z` floats each — the two-channel window of
+/// conv planes being pooled, plus the accumulator rows. For any
+/// realistically sized layer the tiles are orders of magnitude smaller
+/// than the tensor they replace, which is the fusion's memory win.
+///
+/// `p` is the pooling window of the following layer; the conv output
+/// extents must be divisible by it for the fusion to apply.
+pub fn conv_pool_fused_memory_bytes(d: &ConvDims, p: Vec3, threads: usize) -> u64 {
+    let s = d.s as u64;
+    let f = d.f_in as u64;
+    let fp = d.f_out as u64;
+    let n = d.n_elems();
+    let np = d.n_out_elems();
+    let o = d.out_n();
+    let t = threads as u64;
+    let pooled = np / (p[0] * p[1] * p[2]) as u64;
+    let tile = 2 * (p[0] * o[1] * o[2] + o[2]) as u64;
+    B * (s * f * n + s * fp * pooled + t * tile)
 }
 
 /// Resident bytes of one layer's precomputed kernel-spectra row — the
@@ -294,9 +342,53 @@ mod tests {
     fn direct_is_cheapest_memory() {
         let d = dims();
         let naive = conv_memory_bytes(ConvAlgo::DirectNaive, &d, 4);
-        for a in [ConvAlgo::DirectMkl, ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel] {
+        for a in [
+            ConvAlgo::DirectMkl,
+            ConvAlgo::DirectFused,
+            ConvAlgo::FftDataParallel,
+            ConvAlgo::FftTaskParallel,
+        ] {
             assert!(conv_memory_bytes(a, &d, 4) >= naive, "{a:?}");
         }
+    }
+
+    #[test]
+    fn fused_tiles_are_smaller_than_mkl_temporaries() {
+        // The fused family's per-thread scratch is two rows, not a whole
+        // result image — it must sit strictly between naive and MKL.
+        let d = dims();
+        let naive = conv_memory_bytes(ConvAlgo::DirectNaive, &d, 8);
+        let fused = conv_memory_bytes(ConvAlgo::DirectFused, &d, 8);
+        let mkl = conv_memory_bytes(ConvAlgo::DirectMkl, &d, 8);
+        assert!(fused > naive);
+        assert!(fused < mkl);
+        assert_eq!(fused - naive, 8 * B * 2 * d.out_n()[2] as u64);
+    }
+
+    #[test]
+    fn fused_pool_row_drops_the_inter_layer_tensor() {
+        // Unfused CP pair peak: the conv's own row already holds the
+        // full S·f'·n' pre-pool tensor. The fused row replaces it with
+        // the pooled output plus per-thread tiles and must be smaller.
+        let d = dims();
+        let p = [2, 2, 2];
+        let unfused = conv_memory_bytes(ConvAlgo::DirectFused, &d, 4);
+        let fused = conv_pool_fused_memory_bytes(&d, p, 4);
+        assert!(fused < unfused, "fused {fused} vs unfused {unfused}");
+        // The delta is dominated by the eliminated (1 - 1/p³) share of
+        // the inter-layer tensor.
+        let tensor_share = B * (d.s * d.f_out) as u64 * (d.n_out_elems() - d.n_out_elems() / 8);
+        assert!(unfused - fused > tensor_share / 2);
+    }
+
+    #[test]
+    fn fused_pool_tiles_scale_with_threads() {
+        let d = dims();
+        let p = [2, 2, 2];
+        let m1 = conv_pool_fused_memory_bytes(&d, p, 1);
+        let m8 = conv_pool_fused_memory_bytes(&d, p, 8);
+        let o = d.out_n();
+        assert_eq!(m8 - m1, 7 * B * 2 * (p[0] * o[1] * o[2] + o[2]) as u64);
     }
 
     #[test]

@@ -45,7 +45,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::conv::{Activation, Weights};
 use crate::device::Device;
 use crate::exec::ExecCtx;
-use crate::layers::{ConvLayer, LayerPrimitive};
+use crate::layers::{ConvLayer, FusedConvPoolLayer, LayerPrimitive};
 use crate::memory::model::{ConvAlgo, ConvDims};
 use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::json::Json;
@@ -63,7 +63,7 @@ const PROFILE_VERSION: u64 = 1;
 /// Effective throughput (FLOP/s) per algorithm plus pooling rates.
 #[derive(Clone, Debug)]
 pub struct CostModel {
-    rates: [(ConvAlgo, f64); 7],
+    rates: [(ConvAlgo, f64); 9],
     /// voxels/s for pooling layers (comparisons are cheap; memory-bound)
     pub pool_rate: f64,
     /// Worker threads the rates were taken with.
@@ -145,6 +145,12 @@ impl CostModel {
             rates: [
                 (ConvAlgo::DirectNaive, 0.4e9 * t),
                 (ConvAlgo::DirectMkl, 0.8e9 * t),
+                // The register-tiled family streams each input row once
+                // per output-channel *pair* and skips the temp-image
+                // add-assign pass, so it clears ~2× the MKL-style rate
+                // on the small-kernel layers it targets.
+                (ConvAlgo::DirectFused, 1.6e9 * t),
+                (ConvAlgo::DirectFusedPool, 1.6e9 * t),
                 (ConvAlgo::FftDataParallel, 0.5e9 * t),
                 (ConvAlgo::FftTaskParallel, 0.7e9 * t),
                 (ConvAlgo::GpuDenseNoWorkspace, 0.4e9 * t),
@@ -233,10 +239,26 @@ impl CostModel {
         let w = std::sync::Arc::new(Weights::random(f_out, f_in, k, 0xCA11));
         let mut ctx = ExecCtx::new(pool);
         for (algo, rate) in cm.rates.iter_mut() {
-            let layer = ConvLayer::new(w.clone(), *algo, Activation::Relu);
+            // `DirectFusedPool` is probed through the primitive the
+            // optimizer actually emits for it — the fused conv→pool
+            // layer — so its fitted rate includes the max-reduce.
+            let layer: Box<dyn LayerPrimitive> = if *algo == ConvAlgo::DirectFusedPool {
+                Box::new(FusedConvPoolLayer {
+                    weights: w.clone(),
+                    window: [2, 2, 2],
+                    act: Activation::Relu,
+                })
+            } else {
+                Box::new(ConvLayer::new(w.clone(), *algo, Activation::Relu))
+            };
             let mut ladder = Vec::with_capacity(extents.len());
             for &e in &extents {
-                let e = e.max(k[0]);
+                let mut e = e.max(k[0]);
+                // The fused-pool probe needs a conv output the 2³
+                // window tiles.
+                if *algo == ConvAlgo::DirectFusedPool && (e - k[0] + 1) % 2 != 0 {
+                    e += 1;
+                }
                 let sh = Shape5::from_spatial(1, f_in, [e; 3]);
                 let work = layer.flops(sh);
                 let mut best = f64::INFINITY;
@@ -350,11 +372,20 @@ impl CostModel {
             .ok_or_else(|| anyhow!("profile missing 'rates' object"))?;
         for (algo, rate) in cm.rates.iter_mut() {
             let tag = algo.tag();
-            let x = rates
-                .iter()
-                .find(|(k, _)| k == tag)
-                .and_then(|(_, v)| v.as_f64())
-                .ok_or_else(|| anyhow!("profile missing rate for '{tag}'"))?;
+            let entry = rates.iter().find(|(k, _)| k == tag);
+            let Some((_, val)) = entry else {
+                // Profiles written before the fused direct family
+                // existed carry no rate for it; keep the defaults so
+                // old profiles stay loadable. Every other tag is as
+                // strict as ever.
+                if matches!(algo, ConvAlgo::DirectFused | ConvAlgo::DirectFusedPool) {
+                    continue;
+                }
+                bail!("profile missing rate for '{tag}'");
+            };
+            let x = val
+                .as_f64()
+                .ok_or_else(|| anyhow!("profile rate for '{tag}' must be a number"))?;
             if !x.is_finite() || x <= 0.0 {
                 bail!("profile rate for '{tag}' must be positive finite, got {x}");
             }
@@ -406,6 +437,8 @@ impl CostModel {
         let flops = match algo {
             ConvAlgo::DirectNaive
             | ConvAlgo::DirectMkl
+            | ConvAlgo::DirectFused
+            | ConvAlgo::DirectFusedPool
             | ConvAlgo::GpuDenseNoWorkspace
             | ConvAlgo::GpuDensePrecomp => d.direct_flops(),
             _ => d.fft_flops(),
@@ -551,6 +584,48 @@ mod tests {
         let zero = CostModel::default_rates(2).with_dispatch_overhead(0.0);
         let back = CostModel::from_profile_json(&zero.to_profile_json()).unwrap();
         assert_eq!(back.dispatch_overhead_secs, 0.0);
+    }
+
+    #[test]
+    fn profile_without_fused_rates_falls_back_to_defaults() {
+        // A legacy profile written before the fused direct family: its
+        // "rates" object carries only the original seven tags. It must
+        // still load, with the fused algorithms keeping their defaults.
+        let legacy = r#"{
+            "version": 1,
+            "threads": 3,
+            "pool_rate": 150000000.0,
+            "dispatch_overhead_secs": 0.0002,
+            "rates": {
+                "DirectN": 1000000000.0,
+                "DirectM": 2000000000.0,
+                "FFT-DP": 1500000000.0,
+                "FFT-TP": 1700000000.0,
+                "CuDNN1": 1100000000.0,
+                "CuDNN2": 2100000000.0,
+                "FFT": 1600000000.0
+            }
+        }"#;
+        let cm = CostModel::from_profile_json(legacy).unwrap();
+        let defaults = CostModel::default_rates(3);
+        let host = Device::host_with_ram(1 << 30);
+        assert_eq!(cm.rate(ConvAlgo::DirectMkl, &host), 2000000000.0);
+        for algo in [ConvAlgo::DirectFused, ConvAlgo::DirectFusedPool] {
+            assert_eq!(cm.rate(algo, &host), defaults.rate(algo, &host), "{algo:?}");
+        }
+        // A fused rate that IS present must be honoured — and still
+        // validated.
+        let cm = CostModel::default_rates(2);
+        let text = cm.to_profile_json();
+        assert!(text.contains("\"DirectFused\""), "new profiles persist fused rates");
+        let back = CostModel::from_profile_json(&text).unwrap();
+        assert_eq!(back.rate(ConvAlgo::DirectFused, &host), cm.rate(ConvAlgo::DirectFused, &host));
+        let bad = text.replace(
+            &format!("\"DirectFusedPool\": {:?}", cm.rate(ConvAlgo::DirectFusedPool, &host)),
+            "\"DirectFusedPool\": -5.0",
+        );
+        assert_ne!(bad, text, "replacement must have matched the profile text");
+        assert!(CostModel::from_profile_json(&bad).is_err(), "present-but-invalid still errors");
     }
 
     #[test]

@@ -35,9 +35,13 @@ use anyhow::{bail, Result};
 use crate::conv::{Activation, Weights};
 use crate::device::Device;
 use crate::exec::{ExecCtx, WorkspaceReq};
-use crate::layers::{ConvLayer, LayerPrimitive, MaxPoolLayer, MpfLayer, Placement};
+use crate::layers::{
+    ConvLayer, FusedConvPoolLayer, LayerPrimitive, MaxPoolLayer, MpfLayer, Placement,
+    PoolFusedLayer,
+};
 use crate::memory::model::{
-    conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims,
+    conv_memory_bytes, conv_pool_fused_memory_bytes, mpf_memory_bytes, pool_memory_bytes,
+    ConvAlgo, ConvDims,
 };
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
 use crate::tensor::{Shape5, Tensor5};
@@ -65,6 +69,13 @@ pub enum PlanLayer {
         /// Max-pool or MPF.
         mode: PoolingMode,
     },
+    /// A max-pool layer whose reduce was folded into the preceding
+    /// conv layer ([`ConvAlgo::DirectFusedPool`]): the fused primitive
+    /// already produced the pooled tensor, so this slot compiles to a
+    /// pass-through ([`PoolFusedLayer`]) and plans stay 1:1 with the
+    /// network spec. Counts as [`PoolingMode::MaxPool`] in
+    /// [`Plan::modes`].
+    PoolFused,
 }
 
 impl PlanLayer {
@@ -76,6 +87,7 @@ impl PlanLayer {
                 PoolingMode::Mpf => "MPF",
                 PoolingMode::MaxPool => "Pool",
             },
+            PlanLayer::PoolFused => "(fused)",
         }
     }
 }
@@ -117,6 +129,8 @@ impl Plan {
             .iter()
             .filter_map(|l| match l {
                 PlanLayer::Pool { mode } => Some(*mode),
+                // The fused reduce realises max-pool semantics.
+                PlanLayer::PoolFused => Some(PoolingMode::MaxPool),
                 _ => None,
             })
             .collect()
@@ -153,6 +167,8 @@ impl SearchSpace {
             algos: vec![
                 ConvAlgo::DirectNaive,
                 ConvAlgo::DirectMkl,
+                ConvAlgo::DirectFused,
+                ConvAlgo::DirectFusedPool,
                 ConvAlgo::FftDataParallel,
                 ConvAlgo::FftTaskParallel,
             ],
@@ -221,6 +237,15 @@ struct ConvChoice {
 /// under the memory constraint, with kernel-spectra caching searched
 /// per FFT layer. Returns None if any layer has no feasible primitive.
 ///
+/// Conv→pool pairs get an extra candidate spanning both spec layers:
+/// when the next layer is a max-pool whose window tiles the conv
+/// output and [`ConvAlgo::DirectFusedPool`] is in the space, the fused
+/// primitive competes against the best conv choice *plus* the separate
+/// pool pass — on time when both fit, and by default when only the
+/// fused working set (which drops the inter-layer tensor) fits the
+/// device. A fused pair emits `Conv { DirectFusedPool }` followed by
+/// [`PlanLayer::PoolFused`].
+///
 /// Caching discipline: cached spectra are resident for the whole run,
 /// so a plan's peak is `max(layer working sets) + Σ cached spectra`.
 /// Layers are chosen greedily in order (each candidate checked against
@@ -255,7 +280,9 @@ fn evaluate(
     // the candidates of the final drop-to-fit pass.
     let mut cached_layers: Vec<(usize, ConvChoice)> = Vec::new();
     let mut pool_i = 0;
-    for (li, l) in net.layers.iter().enumerate() {
+    let mut li = 0;
+    while li < net.layers.len() {
+        let l = &net.layers[li];
         match l {
             LayerSpec::Conv { f_out, k } => {
                 let d = ConvDims {
@@ -272,6 +299,12 @@ fn evaluate(
                     }
                 };
                 for &algo in &space.algos {
+                    // The conv→pool fused algorithm is not a per-layer
+                    // candidate: it spans two spec layers, so the
+                    // lookahead below owns it.
+                    if algo == ConvAlgo::DirectFusedPool {
+                        continue;
+                    }
                     let mem = conv_memory_bytes(algo, &d, cost.threads);
                     let secs = cost.conv_secs(algo, &d, &space.device);
                     let mut cached_feasible = false;
@@ -315,6 +348,52 @@ fn evaluate(
                         );
                     }
                 }
+                // Fusion lookahead: when the next spec layer is a
+                // max-pool whose window tiles this conv's output, a
+                // single fused conv→pool primitive is a candidate for
+                // the *pair*. Its Table II row drops the inter-layer
+                // tensor, so it can be feasible where conv-then-pool is
+                // not; otherwise it wins on time alone.
+                if space.algos.contains(&ConvAlgo::DirectFusedPool) {
+                    if let Some(LayerSpec::Pool { p }) = net.layers.get(li + 1) {
+                        let csh = shapes[li];
+                        let divisible = csh.x % p[0] == 0
+                            && csh.y % p[1] == 0
+                            && csh.z % p[2] == 0;
+                        if modes[pool_i] == PoolingMode::MaxPool && divisible {
+                            let fmem = conv_pool_fused_memory_bytes(&d, *p, cost.threads);
+                            if space.device.fits(fmem) {
+                                let fsecs =
+                                    cost.conv_secs(ConvAlgo::DirectFusedPool, &d, &space.device);
+                                let pool_mem =
+                                    pool_memory_bytes(csh.s, csh.f, csh.spatial(), *p);
+                                let pool_secs =
+                                    cost.pool_secs(csh.s, csh.f, csh.spatial(), *p, false);
+                                let take_fused = match &best {
+                                    Some(b) if space.device.fits(pool_mem) => {
+                                        fsecs < b.secs + pool_secs
+                                    }
+                                    // No feasible unfused pair at all —
+                                    // fusion is the only way through.
+                                    _ => true,
+                                };
+                                if take_fused {
+                                    layers.push(PlanLayer::Conv {
+                                        algo: ConvAlgo::DirectFusedPool,
+                                        cache_kernels: false,
+                                    });
+                                    layers.push(PlanLayer::PoolFused);
+                                    est_secs += fsecs;
+                                    max_mem = max_mem.max(fmem);
+                                    pool_i += 1;
+                                    cur = shapes[li + 1];
+                                    li += 2;
+                                    continue;
+                                }
+                            }
+                        }
+                    }
+                }
                 let c = best?;
                 if c.cached {
                     cache_total += c.cache_bytes;
@@ -341,6 +420,7 @@ fn evaluate(
             }
         }
         cur = shapes[li];
+        li += 1;
     }
     // Per-layer fallback: caches committed early may no longer fit once
     // later layers raised the peak or added their own spectra. Drop the
@@ -536,8 +616,28 @@ pub fn compile(net: &NetSpec, plan: &Plan, weights: &[Arc<Weights>]) -> Result<C
     }
     let mut prims: Vec<Box<dyn LayerPrimitive>> = Vec::new();
     let mut wi = 0;
-    for (l, pl) in net.layers.iter().zip(&plan.layers) {
+    for (li, (l, pl)) in net.layers.iter().zip(&plan.layers).enumerate() {
         match (l, pl) {
+            // A fused conv→pool pair: the conv slot becomes the fused
+            // primitive (it needs the pool window from the *next* spec
+            // layer); the pool slot is matched below as a pass-through.
+            (
+                LayerSpec::Conv { .. },
+                PlanLayer::Conv { algo: ConvAlgo::DirectFusedPool, .. },
+            ) => {
+                let Some(LayerSpec::Pool { p }) = net.layers.get(li + 1) else {
+                    bail!("DirectFusedPool at layer {li} has no following pool layer");
+                };
+                prims.push(Box::new(FusedConvPoolLayer {
+                    weights: weights[wi].clone(),
+                    window: *p,
+                    act: Activation::Relu,
+                }));
+                wi += 1;
+            }
+            (LayerSpec::Pool { .. }, PlanLayer::PoolFused) => {
+                prims.push(Box::new(PoolFusedLayer));
+            }
             (LayerSpec::Conv { .. }, PlanLayer::Conv { algo, cache_kernels }) => {
                 prims.push(Box::new(
                     ConvLayer::new(weights[wi].clone(), *algo, Activation::Relu)
@@ -878,6 +978,85 @@ mod tests {
                 assert!(!cache_kernels);
             }
         }
+    }
+
+    #[test]
+    fn search_selects_fused_direct_for_small_kernel_layers() {
+        // Acceptance: under default calibration the register-tiled
+        // fused family must win at least one small-kernel (k = 3) conv
+        // layer of a zoo net in the default CPU space.
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let plan = search(&net, &SearchSpace::cpu_only(host(4), 21), &cm).expect("feasible");
+        let fused_layers = plan
+            .layers
+            .iter()
+            .filter(|l| {
+                matches!(
+                    l,
+                    PlanLayer::Conv {
+                        algo: ConvAlgo::DirectFused | ConvAlgo::DirectFusedPool,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert!(fused_layers > 0, "no fused layer in {:?}", plan.layers);
+    }
+
+    #[test]
+    fn fusion_lookahead_drops_inter_layer_tensor() {
+        // Under max-pool modes the fused pair must be chosen, its plan
+        // must carry the (fused) pass-through slot, and est_memory must
+        // drop relative to the same space without the fused algorithm —
+        // the eliminated inter-layer tensor.
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let space = SearchSpace::cpu_only(host(4), 21);
+        let input = Shape5::new(1, net.f_in, 14, 14, 14);
+        let modes = [PoolingMode::MaxPool];
+        let with = evaluate(&net, input, &modes, &space, &cm).expect("fused feasible");
+        assert!(
+            matches!(with.layers[0], PlanLayer::Conv { algo: ConvAlgo::DirectFusedPool, .. }),
+            "{:?}",
+            with.layers
+        );
+        assert_eq!(with.layers[1], PlanLayer::PoolFused);
+        assert_eq!(with.modes(), vec![PoolingMode::MaxPool], "fused slot counts as max-pool");
+        let mut no_fuse = space.clone();
+        no_fuse.algos.retain(|a| *a != ConvAlgo::DirectFusedPool);
+        let without = evaluate(&net, input, &modes, &no_fuse, &cm).expect("unfused feasible");
+        assert!(
+            with.est_memory < without.est_memory,
+            "fusion must shrink the peak: {} vs {}",
+            with.est_memory,
+            without.est_memory
+        );
+        assert!(with.est_secs < without.est_secs, "fused pair saves the separate pool pass");
+    }
+
+    #[test]
+    fn fused_plan_compiles_and_runs() {
+        let pool = tpool();
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let space = SearchSpace::cpu_only(host(4), 21);
+        let input_sh = Shape5::new(1, net.f_in, 14, 14, 14);
+        let modes = [PoolingMode::MaxPool];
+        let with = evaluate(&net, input_sh, &modes, &space, &cm).unwrap();
+        let mut no_fuse = space;
+        no_fuse.algos.retain(|a| *a != ConvAlgo::DirectFusedPool);
+        let without = evaluate(&net, input_sh, &modes, &no_fuse, &cm).unwrap();
+        let weights = make_weights(&net, 5);
+        let cp_with = compile(&net, &with, &weights).unwrap();
+        let cp_without = compile(&net, &without, &weights).unwrap();
+        let input = Tensor5::random(input_sh, 6);
+        let mut ctx = cp_with.make_ctx(&pool).unwrap();
+        let a = cp_with.run(input.clone_tensor(), &mut ctx);
+        assert_eq!(a.shape(), *with.shapes.last().unwrap());
+        let mut ctx2 = cp_without.make_ctx(&pool).unwrap();
+        let b = cp_without.run(input, &mut ctx2);
+        crate::util::quick::assert_allclose(a.data(), b.data(), 1e-4, 1e-3, "fused plan");
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! while 1-pool networks prefer larger batches.
 
 use crate::memory::model::{
-    conv_memory_bytes, mpf_memory_bytes, pool_memory_bytes, ConvAlgo, ConvDims,
+    conv_memory_bytes, conv_pool_fused_memory_bytes, mpf_memory_bytes, pool_memory_bytes,
+    ConvAlgo, ConvDims,
 };
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
 use crate::tensor::Shape5;
@@ -84,6 +85,48 @@ pub fn fft_memory(
         cur = shapes[li];
     }
     Some(mem)
+}
+
+/// Analytic Table II memory saving of conv→pool fusion: for every
+/// `Conv` spec layer immediately followed by a `Pool` whose window
+/// tiles the conv output (max-pooling modes everywhere), compare the
+/// unfused peak — the larger of the DirectMkl conv row and the pool
+/// row, since the plan's working set is the max over layers — with the
+/// fused row (`conv_pool_fused_memory_bytes`, which drops the
+/// inter-layer `S·f'·n'` tensor). Returns one
+/// `(conv layer index, unfused bytes, fused bytes)` triple per fusable
+/// pair, or `None` when the net rejects `input` under max-pooling.
+pub fn fused_pair_memory(
+    net: &NetSpec,
+    input: Shape5,
+    threads: usize,
+) -> Option<Vec<(usize, u64, u64)>> {
+    let modes = vec![PoolingMode::MaxPool; net.pool_count()];
+    let shapes = net.shapes(input, &modes).ok()?;
+    let mut cur = input;
+    let mut pairs = Vec::new();
+    for (li, l) in net.layers.iter().enumerate() {
+        if let LayerSpec::Conv { f_out, k } = l {
+            if let Some(LayerSpec::Pool { p }) = net.layers.get(li + 1) {
+                let c = shapes[li];
+                if c.x % p[0] == 0 && c.y % p[1] == 0 && c.z % p[2] == 0 {
+                    let d = ConvDims {
+                        s: cur.s,
+                        f_in: net.f_in_at(li),
+                        f_out: *f_out,
+                        n: cur.spatial(),
+                        k: *k,
+                    };
+                    let unfused = conv_memory_bytes(ConvAlgo::DirectMkl, &d, threads)
+                        .max(pool_memory_bytes(c.s, c.f, c.spatial(), *p));
+                    let fused = conv_pool_fused_memory_bytes(&d, *p, threads);
+                    pairs.push((li, unfused, fused));
+                }
+            }
+        }
+        cur = shapes[li];
+    }
+    Some(pairs)
 }
 
 /// Ops per output voxel of the naive approach: input = field of view,
@@ -215,5 +258,24 @@ mod tests {
     #[test]
     fn naive_ops_positive() {
         assert!(naive_ops_per_voxel(&tiny_net(2)) > 0.0);
+    }
+
+    #[test]
+    fn fused_pairs_save_memory_on_every_cp_pair() {
+        // tiny_net is C P C C: one fusable pair at conv index 0. A
+        // 10³ input gives an 8³ conv output the 2³ window tiles.
+        let net = tiny_net(2);
+        let input = Shape5::new(1, net.f_in, 10, 10, 10);
+        let pairs = fused_pair_memory(&net, input, 4).unwrap();
+        assert_eq!(pairs.len(), 1);
+        let (li, unfused, fused) = pairs[0];
+        assert_eq!(li, 0);
+        assert!(
+            fused < unfused,
+            "fusion must beat the unfused peak: {fused} vs {unfused}"
+        );
+        // An input whose conv output the pool window cannot tile is
+        // rejected outright under max-pooling modes.
+        assert!(fused_pair_memory(&net, Shape5::new(1, net.f_in, 9, 9, 9), 4).is_none());
     }
 }

@@ -218,6 +218,78 @@ pub(crate) fn axpy_tier(tier: Tier, dst: &mut [f32], src: &[f32], k: f32) {
     }
 }
 
+/// `dst0[i] += k0 · src[i]; dst1[i] += k1 · src[i]` — the fused
+/// direct-conv register tile: one input load feeds two output-channel
+/// accumulators. Multiply-then-add on every tier (no FMA), so all tiers
+/// are bit-identical to [`scalar::axpy2`] on finite inputs.
+#[inline]
+pub fn axpy2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], k0: f32, k1: f32) {
+    axpy2_tier(active(), dst0, dst1, src, k0, k1);
+}
+
+/// [`axpy2`] on an explicit tier (asserts it is supported).
+pub fn axpy2_with(tier: Tier, dst0: &mut [f32], dst1: &mut [f32], src: &[f32], k0: f32, k1: f32) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    axpy2_tier(tier, dst0, dst1, src, k0, k1);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn axpy2_tier(
+    tier: Tier,
+    dst0: &mut [f32],
+    dst1: &mut [f32],
+    src: &[f32],
+    k0: f32,
+    k1: f32,
+) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst0.len(), src.len());
+    assert_eq!(dst1.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::axpy2_avx2(dst0, dst1, src, k0, k1) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::axpy2_sse2(dst0, dst1, src, k0, k1) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::axpy2_neon(dst0, dst1, src, k0, k1) },
+        _ => scalar::axpy2(dst0, dst1, src, k0, k1),
+    }
+}
+
+/// `dst[i] = act(src[i] + bias)` — the fused direct conv's single
+/// store: bias plus optional ReLU applied as an accumulator row leaves
+/// the register tile. Bit-identical to [`scalar::store_bias_act`] on
+/// every tier for finite inputs.
+#[inline]
+pub fn store_bias_act(dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    store_bias_act_tier(active(), dst, src, bias, relu);
+}
+
+/// [`store_bias_act`] on an explicit tier (asserts it is supported).
+pub fn store_bias_act_with(tier: Tier, dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    store_bias_act_tier(tier, dst, src, bias, relu);
+}
+
+/// Crate-internal dispatch: `tier` must be supported (hot loops hoist
+/// `active()` once and call this per row).
+#[inline]
+pub(crate) fn store_bias_act_tier(tier: Tier, dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::store_bias_act_avx2(dst, src, bias, relu) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::store_bias_act_sse2(dst, src, bias, relu) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::store_bias_act_neon(dst, src, bias, relu) },
+        _ => scalar::store_bias_act(dst, src, bias, relu),
+    }
+}
+
 /// `dst[i] += src[i]`.
 #[inline]
 pub fn add_assign(dst: &mut [f32], src: &[f32]) {
@@ -498,6 +570,32 @@ mod tests {
                 let mut got = base.clone();
                 max_assign_with(tier, &mut got, &src);
                 assert_allclose(&got, &want, 0.0, 0.0, &format!("max {tier:?} n={n}"));
+
+                // The fused-conv kernels promise *bit* identity (no FMA
+                // on any tier), hence zero tolerance even for axpy2.
+                let base1 = rand_f32(n, n as u64 + 900);
+                let mut want0 = base.clone();
+                let mut want1 = base1.clone();
+                scalar::axpy2(&mut want0, &mut want1, &src, 0.37, -0.61);
+                let mut got0 = base.clone();
+                let mut got1 = base1.clone();
+                axpy2_with(tier, &mut got0, &mut got1, &src, 0.37, -0.61);
+                assert_allclose(&got0, &want0, 0.0, 0.0, &format!("axpy2.0 {tier:?} n={n}"));
+                assert_allclose(&got1, &want1, 0.0, 0.0, &format!("axpy2.1 {tier:?} n={n}"));
+
+                for relu in [false, true] {
+                    let mut want = vec![0.0f32; n];
+                    scalar::store_bias_act(&mut want, &src, -0.25, relu);
+                    let mut got = vec![0.0f32; n];
+                    store_bias_act_with(tier, &mut got, &src, -0.25, relu);
+                    assert_allclose(
+                        &got,
+                        &want,
+                        0.0,
+                        0.0,
+                        &format!("store_bias_act {tier:?} n={n} relu={relu}"),
+                    );
+                }
             }
         }
     }

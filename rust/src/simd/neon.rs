@@ -35,6 +35,51 @@ pub unsafe fn axpy_neon(dst: &mut [f32], src: &[f32], k: f32) {
 }
 
 #[target_feature(enable = "neon")]
+/// NEON `dst0[i] += k0 * src[i]; dst1[i] += k1 * src[i]`.
+///
+/// Deliberately multiply-then-add (`vmul` + `vadd`, not `vfma`): the
+/// fused direct-conv family promises bit identity with its scalar
+/// oracle, so every tier must run the same IEEE operation sequence.
+pub unsafe fn axpy2_neon(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], k0: f32, k1: f32) {
+    let n = src.len();
+    let d0 = dst0.as_mut_ptr();
+    let d1 = dst1.as_mut_ptr();
+    let s = src.as_ptr();
+    let kv0 = vdupq_n_f32(k0);
+    let kv1 = vdupq_n_f32(k1);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let sv = vld1q_f32(s.add(i));
+        let r0 = vaddq_f32(vld1q_f32(d0.add(i)), vmulq_f32(kv0, sv));
+        let r1 = vaddq_f32(vld1q_f32(d1.add(i)), vmulq_f32(kv1, sv));
+        vst1q_f32(d0.add(i), r0);
+        vst1q_f32(d1.add(i), r1);
+        i += 4;
+    }
+    scalar::axpy2(&mut dst0[i..], &mut dst1[i..], &src[i..], k0, k1);
+}
+
+#[target_feature(enable = "neon")]
+/// NEON `dst[i] = act(src[i] + bias)`.
+pub unsafe fn store_bias_act_neon(dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = vdupq_n_f32(bias);
+    let zero = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let mut v = vaddq_f32(vld1q_f32(s.add(i)), bv);
+        if relu {
+            v = vmaxq_f32(v, zero);
+        }
+        vst1q_f32(d.add(i), v);
+        i += 4;
+    }
+    scalar::store_bias_act(&mut dst[i..], &src[i..], bias, relu);
+}
+
+#[target_feature(enable = "neon")]
 /// NEON `dst[i] += src[i]`.
 pub unsafe fn add_assign_neon(dst: &mut [f32], src: &[f32]) {
     let n = dst.len();

@@ -15,6 +15,34 @@ pub fn axpy(dst: &mut [f32], src: &[f32], k: f32) {
     }
 }
 
+/// `dst0[i] += k0 · src[i]; dst1[i] += k1 · src[i]` — the fused direct
+/// conv's register tile: one input load feeds two output channels.
+///
+/// Deliberately multiply-then-add (no FMA) so every vector tier can
+/// reproduce the exact same IEEE operation sequence — the fused family
+/// promises *bit* identity with its scalar oracle on finite inputs,
+/// not just tolerance parity.
+pub fn axpy2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], k0: f32, k1: f32) {
+    debug_assert_eq!(dst0.len(), src.len());
+    debug_assert_eq!(dst1.len(), src.len());
+    for ((d0, d1), s) in dst0.iter_mut().zip(dst1.iter_mut()).zip(src) {
+        *d0 += k0 * *s;
+        *d1 += k1 * *s;
+    }
+}
+
+/// `dst[i] = act(src[i] + bias)` — the fused direct conv's single
+/// store: bias and (optional) ReLU applied as the accumulator row
+/// leaves the register tile. ReLU is `max(v, 0)`, matching
+/// [`crate::conv::Activation::apply`] bit-for-bit on finite inputs.
+pub fn store_bias_act(dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        let v = *s + bias;
+        *d = if relu { v.max(0.0) } else { v };
+    }
+}
+
 /// `dst[i] += src[i]` — per-channel accumulation of temp images.
 pub fn add_assign(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());

@@ -130,6 +130,93 @@ pub unsafe fn max_assign_sse2(dst: &mut [f32], src: &[f32]) {
     scalar::max_assign(&mut dst[i..], &src[i..]);
 }
 
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst0[i] += k0 * src[i]; dst1[i] += k1 * src[i]`.
+///
+/// Deliberately multiply-then-add (no FMA, despite the tier having it):
+/// the fused direct-conv family promises bit identity with its scalar
+/// oracle, so every tier must run the same IEEE operation sequence.
+pub unsafe fn axpy2_avx2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], k0: f32, k1: f32) {
+    let n = src.len();
+    let d0 = dst0.as_mut_ptr();
+    let d1 = dst1.as_mut_ptr();
+    let s = src.as_ptr();
+    let kv0 = _mm256_set1_ps(k0);
+    let kv1 = _mm256_set1_ps(k1);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let sv = _mm256_loadu_ps(s.add(i));
+        let r0 = _mm256_add_ps(_mm256_loadu_ps(d0.add(i)), _mm256_mul_ps(kv0, sv));
+        let r1 = _mm256_add_ps(_mm256_loadu_ps(d1.add(i)), _mm256_mul_ps(kv1, sv));
+        _mm256_storeu_ps(d0.add(i), r0);
+        _mm256_storeu_ps(d1.add(i), r1);
+        i += 8;
+    }
+    scalar::axpy2(&mut dst0[i..], &mut dst1[i..], &src[i..], k0, k1);
+}
+
+#[target_feature(enable = "sse2")]
+/// SSE2 `dst0[i] += k0 * src[i]; dst1[i] += k1 * src[i]`.
+pub unsafe fn axpy2_sse2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], k0: f32, k1: f32) {
+    let n = src.len();
+    let d0 = dst0.as_mut_ptr();
+    let d1 = dst1.as_mut_ptr();
+    let s = src.as_ptr();
+    let kv0 = _mm_set1_ps(k0);
+    let kv1 = _mm_set1_ps(k1);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let sv = _mm_loadu_ps(s.add(i));
+        let r0 = _mm_add_ps(_mm_loadu_ps(d0.add(i)), _mm_mul_ps(kv0, sv));
+        let r1 = _mm_add_ps(_mm_loadu_ps(d1.add(i)), _mm_mul_ps(kv1, sv));
+        _mm_storeu_ps(d0.add(i), r0);
+        _mm_storeu_ps(d1.add(i), r1);
+        i += 4;
+    }
+    scalar::axpy2(&mut dst0[i..], &mut dst1[i..], &src[i..], k0, k1);
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = act(src[i] + bias)`. `maxps(sum, 0)` takes the second
+/// operand when the sum is NaN, matching scalar `f32::max(0.0)`.
+pub unsafe fn store_bias_act_avx2(dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = _mm256_set1_ps(bias);
+    let zero = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let mut v = _mm256_add_ps(_mm256_loadu_ps(s.add(i)), bv);
+        if relu {
+            v = _mm256_max_ps(v, zero);
+        }
+        _mm256_storeu_ps(d.add(i), v);
+        i += 8;
+    }
+    scalar::store_bias_act(&mut dst[i..], &src[i..], bias, relu);
+}
+
+#[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] = act(src[i] + bias)`.
+pub unsafe fn store_bias_act_sse2(dst: &mut [f32], src: &[f32], bias: f32, relu: bool) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = _mm_set1_ps(bias);
+    let zero = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let mut v = _mm_add_ps(_mm_loadu_ps(s.add(i)), bv);
+        if relu {
+            v = _mm_max_ps(v, zero);
+        }
+        _mm_storeu_ps(d.add(i), v);
+        i += 4;
+    }
+    scalar::store_bias_act(&mut dst[i..], &src[i..], bias, relu);
+}
+
 // ----------------------------------------------------------- complex
 
 /// Deinterleave two 4-complex vectors into (re, im) SoA registers.

@@ -40,6 +40,49 @@ fn calibration_profile_round_trips_through_a_file() {
 }
 
 #[test]
+fn legacy_profile_without_fused_rates_loads_with_defaults() {
+    // Forward compatibility (satellite of ISSUE 7): a profile saved by
+    // a build that predates the fused direct-conv family has no
+    // `DirectFused*` keys in its "rates" object. Loading it must
+    // succeed, honour every persisted rate, and leave the fused
+    // algorithms on their default rates — then a save/load round-trip
+    // of the loaded model must persist and preserve the fused rates.
+    let fixture = r#"{
+        "version": 1,
+        "threads": 2,
+        "pool_rate": 250000000.0,
+        "dispatch_overhead_secs": 0.00015,
+        "rates": {
+            "DirectN": 900000000.0,
+            "DirectM": 1800000000.0,
+            "FFT-DP": 1100000000.0,
+            "FFT-TP": 1500000000.0,
+            "CuDNN1": 800000000.0,
+            "CuDNN2": 1900000000.0,
+            "FFT": 1300000000.0
+        }
+    }"#;
+    let path = std::env::temp_dir().join(format!("znni-profile-old-{}.json", std::process::id()));
+    std::fs::write(&path, fixture).unwrap();
+    let loaded = CostModel::load_profile(&path).expect("legacy profile must load");
+    std::fs::remove_file(&path).ok();
+    let h = host(1);
+    assert_eq!(loaded.rate(ConvAlgo::DirectMkl, &h), 1800000000.0);
+    assert_eq!(loaded.pool_rate, 250000000.0);
+    let defaults = CostModel::default_rates(2);
+    for algo in [ConvAlgo::DirectFused, ConvAlgo::DirectFusedPool] {
+        assert_eq!(loaded.rate(algo, &h), defaults.rate(algo, &h), "{algo:?} keeps its default");
+    }
+    // Round-trip: the re-saved profile carries fused rates explicitly.
+    let text = loaded.to_profile_json();
+    assert!(text.contains("\"DirectFused\"") && text.contains("\"DirectFusedPool\""));
+    let back = CostModel::from_profile_json(&text).unwrap();
+    for algo in ConvAlgo::ALL {
+        assert_eq!(back.rate(algo, &h), loaded.rate(algo, &h), "{algo:?}");
+    }
+}
+
+#[test]
 fn loading_a_missing_or_corrupt_profile_fails_cleanly() {
     assert!(CostModel::load_profile("/nonexistent/znni-profile.json").is_err());
     let path = std::env::temp_dir().join(format!("znni-profile-bad-{}.json", std::process::id()));

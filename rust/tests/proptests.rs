@@ -166,6 +166,34 @@ fn prop_simd_f32_kernels_match_scalar_every_tier() {
             let mut got = base.clone();
             simd::max_assign_with(tier, &mut got, &src);
             assert_allclose(&got, &want, 0.0, 0.0, &format!("max_assign {tier:?} n={n}"));
+
+            // The fused-conv kernels promise exact bit identity on
+            // every tier (mul-then-add, no FMA) — 0.0 tolerance.
+            let base1 = g.vec_f32(n);
+            let (k0, k1) = (g.f32(-2.0, 2.0), g.f32(-2.0, 2.0));
+            let mut want0 = base.clone();
+            let mut want1 = base1.clone();
+            znni::simd::scalar::axpy2(&mut want0, &mut want1, &src, k0, k1);
+            let mut got0 = base.clone();
+            let mut got1 = base1.clone();
+            simd::axpy2_with(tier, &mut got0, &mut got1, &src, k0, k1);
+            assert_allclose(&got0, &want0, 0.0, 0.0, &format!("axpy2.0 {tier:?} n={n}"));
+            assert_allclose(&got1, &want1, 0.0, 0.0, &format!("axpy2.1 {tier:?} n={n}"));
+
+            let bias = g.f32(-1.0, 1.0);
+            for relu in [false, true] {
+                let mut want = base.clone();
+                znni::simd::scalar::store_bias_act(&mut want, &src, bias, relu);
+                let mut got = base.clone();
+                simd::store_bias_act_with(tier, &mut got, &src, bias, relu);
+                assert_allclose(
+                    &got,
+                    &want,
+                    0.0,
+                    0.0,
+                    &format!("store_bias_act {tier:?} relu={relu} n={n}"),
+                );
+            }
         }
     });
 }
@@ -309,6 +337,94 @@ fn simd_forced_tiers_end_to_end() {
         assert_allclose(&back, img.image(0, 0), 1e-4, 1e-3, &label("fft roundtrip"));
     }
     simd::force(None);
+}
+
+/// The fused direct-conv family's bit-identity contract: under every
+/// forced SIMD tier, `conv_direct_fused` and `conv_direct_fused_pool`
+/// must match their scalar oracles *exactly* — including odd extents
+/// and channel/tile tails that exercise the vector remainder paths.
+#[test]
+fn simd_forced_tiers_fused_direct_bit_identity() {
+    use znni::conv::direct_fused::{
+        conv_direct_fused, conv_direct_fused_pool, conv_fused_pool_reference,
+        conv_fused_reference,
+    };
+    let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
+    for tier in simd::supported_tiers() {
+        simd::force(Some(tier));
+        let label = |what: &str| format!("{what} under {tier:?}");
+
+        // Odd spatial extents and an odd f_out (register-tile tail).
+        for (fo, k) in [(3usize, [3usize, 2, 3]), (4, [1, 3, 2]), (1, [2, 2, 2])] {
+            let n = [k[0] + 4, k[1] + 5, k[2] + 3];
+            let input = Tensor5::random(Shape5::from_spatial(2, 3, n), 51);
+            let w = Weights::random(fo, 3, k, 52);
+            for act in [Activation::Relu, Activation::None] {
+                let want = conv_fused_reference(&input, &w, act);
+                let got = conv_direct_fused(&input, &w, act, &mut ctx);
+                assert_allclose(got.data(), want.data(), 0.0, 0.0, &label("fused conv"));
+            }
+        }
+
+        // Fused conv→pool, windows that leave vector tails in z.
+        for (fo, pw) in [(4usize, [2usize, 2, 2]), (3, [1, 2, 2]), (5, [2, 1, 3])] {
+            let k = [3usize, 3, 3];
+            let n = [k[0] - 1 + pw[0] * 3, k[1] - 1 + pw[1] * 3, k[2] - 1 + pw[2] * 3];
+            let input = Tensor5::random(Shape5::from_spatial(1, 2, n), 53);
+            let w = Weights::random(fo, 2, k, 54);
+            let want = conv_fused_pool_reference(&input, &w, Activation::Relu, pw);
+            let got = conv_direct_fused_pool(&input, &w, Activation::Relu, pw, &mut ctx);
+            assert_allclose(got.data(), want.data(), 0.0, 0.0, &label("fused conv+pool"));
+        }
+    }
+    simd::force(None);
+}
+
+/// Satellite parity sweep: on the conv→pool pair shapes of every zoo
+/// net, the fused primitive must agree exactly with running the same
+/// register-tiled conv followed by a separate max-pool.
+#[test]
+fn fused_pool_matches_conv_then_pool_on_zoo_cp_pairs() {
+    use znni::conv::direct_fused::{conv_direct_fused, conv_direct_fused_pool};
+    use znni::net::zoo::{benchmark_nets, tiny_net, NetScale};
+    let pool = tpool();
+    let mut ctx = ExecCtx::new(&pool);
+    let mut nets = benchmark_nets(NetScale::Tiny);
+    nets.push(tiny_net(2));
+    let mut pairs = 0;
+    for net in &nets {
+        for (li, l) in net.layers.iter().enumerate() {
+            let (LayerSpec::Conv { f_out, k }, Some(LayerSpec::Pool { p })) =
+                (l, net.layers.get(li + 1))
+            else {
+                continue;
+            };
+            // Smallest extent where the pool window tiles the conv
+            // output twice — keeps the sweep fast at zoo kernel sizes.
+            let n = [
+                k[0] - 1 + p[0] * 2,
+                k[1] - 1 + p[1] * 2,
+                k[2] - 1 + p[2] * 2,
+            ];
+            let f_in = net.f_in_at(li);
+            let input =
+                Tensor5::random(Shape5::from_spatial(1, f_in, n), li as u64 + 60);
+            let w = Weights::random(*f_out, f_in, *k, li as u64 + 61);
+            let conv = conv_direct_fused(&input, &w, Activation::Relu, &mut ctx);
+            let want = znni::pool::max_pool(&conv, *p, &mut ctx);
+            let got = conv_direct_fused_pool(&input, &w, Activation::Relu, *p, &mut ctx);
+            assert_allclose(
+                got.data(),
+                want.data(),
+                0.0,
+                0.0,
+                &format!("{} layer {li}", net.name),
+            );
+            pairs += 1;
+        }
+    }
+    assert!(pairs >= 8, "expected every zoo CP pair to be swept, got {pairs}");
 }
 
 #[test]
