@@ -1,45 +1,78 @@
-//! Serving demo: the async batched frontend under closed-loop load.
+//! Multi-tenant serving demo: several zoo nets behind one batched
+//! frontend, under closed-loop load.
 //!
-//! One `optimizer::search_serving` call picks the execution plan *and*
-//! the serving configuration (shards, queue depth, batch wait) from the
-//! same Table II model. The demo then:
+//! One `optimizer::search_serving_multi` call picks a per-tenant
+//! execution plan, an SWRR dispatch weight, a byte quota, *and* the
+//! shared serving configuration (shards, queue depth, batch wait) from
+//! the same Table II model. The demo then:
 //!
-//! 1. measures a **serial** coordinator (one request per serve call,
-//!    all workers) on a request stream,
-//! 2. starts the sharded batched [`znni::server::Server`] and drives it
-//!    with a closed-loop multi-client load generator (submit → wait →
-//!    repeat, retrying on backpressure) over the same stream,
+//! 1. starts one sharded [`znni::server::tenants::TenantServer`]
+//!    hosting every tenant's compiled plan,
+//! 2. drives each tenant with its own closed-loop load generators
+//!    (submit → wait → repeat, retrying on backpressure) over a shared
+//!    measurement window,
 //!
-//! and reports both throughputs plus the serving metrics: queue-depth
-//! high-water mark, p50/p99 latency, batch occupancy, per-shard steals
-//! and arena gauges — and the steady-state allocation discipline
-//! (zero transient allocations after warmup).
+//! and reports aggregate and per-tenant throughput, p50/p99 latency,
+//! rejects, and the steady-state allocation discipline (zero transient
+//! allocations after warmup) with every tenant resident.
 //!
-//!     cargo run --release --example serve [volume_extent] [clients] [rounds]
+//!     cargo run --release --example serve [volume_extent] [clients_per_tenant] [rounds]
+//!
+//! The tenant set comes from `ZNNI_TENANTS` (comma-separated zoo names,
+//! default `n337,n537`; the bench miniatures `mini337`..`mini926` also
+//! resolve, handy with `ZNNI_SCALE=tiny` for a fast run). The first
+//! listed tenant gets SWRR weight 2, the rest weight 1, so the weighted
+//! fair dispatch is visible in the per-tenant split.
 
 use std::sync::Arc;
 
-use znni::approaches::run_server;
+use znni::approaches::run_server_multi;
 use znni::device::Device;
-use znni::optimizer::{compile, make_weights, plan_table, search_serving, CostModel, SearchSpace};
-use znni::server::{Server, ServingLoad};
+use znni::net::zoo::{bench_miniatures, net_by_name, NetScale};
+use znni::net::NetSpec;
+use znni::optimizer::{
+    compile, make_weights, plan_table, search_serving_multi, CostModel, SearchSpace,
+};
+use znni::server::tenants::{Tenant, TenantServer};
+use znni::server::ServingLoad;
 use znni::tensor::{Shape5, Tensor5};
 use znni::util::pool::TaskPool;
 use znni::util::{human_bytes, human_throughput};
 
+/// Resolve `ZNNI_TENANTS` (default `n337,n537`) against the zoo at the
+/// `ZNNI_SCALE` scale, falling back to the bench miniatures by name.
+fn tenant_nets() -> anyhow::Result<Vec<NetSpec>> {
+    let scale = NetScale::from_env();
+    let spec = std::env::var("ZNNI_TENANTS").unwrap_or_else(|_| "n337,n537".to_string());
+    let minis = bench_miniatures();
+    let mut nets = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let net = net_by_name(name, scale)
+            .or_else(|| minis.iter().find(|m| m.name == name).cloned())
+            .ok_or_else(|| anyhow::anyhow!("unknown net '{name}' in ZNNI_TENANTS"))?;
+        nets.push(net);
+    }
+    if nets.is_empty() {
+        anyhow::bail!("ZNNI_TENANTS named no tenants");
+    }
+    Ok(nets)
+}
+
 fn main() -> anyhow::Result<()> {
-    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(32);
-    let clients: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(4);
-    let rounds: usize = std::env::args().nth(3).and_then(|a| a.parse().ok()).unwrap_or(3);
+    let nets = tenant_nets()?;
+    // Every tenant's volume must cover its field of view; default the
+    // shared extent to the widest tenant's FoV and never go below it.
+    let max_fov =
+        nets.iter().map(|nt| *nt.field_of_view().iter().max().unwrap_or(&1)).max().unwrap_or(1);
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(max_fov);
+    let n = n.max(max_fov);
+    let clients: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(2);
+    let rounds: usize = std::env::args().nth(3).and_then(|a| a.parse().ok()).unwrap_or(2);
     let pool = Arc::new(TaskPool::new());
-    let net = znni::net::zoo::tiny_net(4);
     // Reuse a saved calibration profile when one exists (see
-    // `examples/calibrate.rs`); otherwise measure a quick ladder now.
-    // Either way the serving-config search below runs on measured
-    // rates and this machine's real batch-dispatch overhead. A profile
-    // taken with a different worker count would mis-size the shard
-    // search, so a mismatched (or unreadable) one triggers a fresh
-    // calibration instead of being trusted silently.
+    // `examples/calibrate.rs`); otherwise measure a quick ladder now. A
+    // profile taken with a different worker count would mis-size the
+    // shard search, so a mismatched one triggers a fresh calibration.
     let cm = match CostModel::load_profile("znni-profile.json") {
         Ok(cm) if cm.threads == pool.workers() => {
             println!("calibration: loaded znni-profile.json");
@@ -61,14 +94,20 @@ fn main() -> anyhow::Result<()> {
     };
     println!("calibration: dispatch overhead {:.1} us/batch", cm.dispatch_overhead_secs * 1e6);
     let host = Device::host();
-    let load = ServingLoad { clients, volume_extent: n };
+    let tenants: Vec<(NetSpec, ServingLoad, u32)> = nets
+        .iter()
+        .enumerate()
+        .map(|(i, nt)| {
+            let w = if i == 0 { 2 } else { 1 };
+            (nt.clone(), ServingLoad { clients, volume_extent: n }, w)
+        })
+        .collect();
 
-    // Plan + serving config from one search call.
-    let space = SearchSpace::cpu_only(host.clone(), n.min(23));
-    let (plan, cfg) = search_serving(&net, &space, &cm, &load).expect("feasible serving plan");
-    for (k, v) in plan_table(&plan) {
-        println!("  {k:<12} {v}");
-    }
+    // Per-tenant plans, weights, quotas, and the shared config from one
+    // search call.
+    let space = SearchSpace::cpu_only(host.clone(), n);
+    let (tplans, cfg) =
+        search_serving_multi(&tenants, &space, &cm).expect("feasible multi-tenant serving plan");
     println!(
         "searched config: shards={} queue_depth={} max_batch={} batch_wait={:?} budget={}",
         cfg.shards,
@@ -77,12 +116,18 @@ fn main() -> anyhow::Result<()> {
         cfg.max_batch_wait,
         human_bytes(cfg.memory_budget),
     );
+    for tp in &tplans {
+        let quota = human_bytes(tp.quota_bytes);
+        println!("tenant {} (weight {}, quota {}):", tp.name, tp.weight, quota);
+        for (k, v) in plan_table(&tp.plan) {
+            println!("  {k:<12} {v}");
+        }
+    }
 
-    // Closed-loop load generator: serial reference vs batched server.
-    // (run_server searches its own plan/config; report the config the
-    // measurement actually ran with, which may differ from the above.)
-    let weights = make_weights(&net, 11);
-    let r = run_server(&net, &weights, &host, &cm, pool.clone(), n.min(23), &load, rounds)?;
+    // Closed-loop load generators, one set per tenant, shared window.
+    // (run_server_multi searches its own plans/config; report the
+    // config the measurement actually ran with.)
+    let r = run_server_multi(&tenants, &host, &cm, pool.clone(), n, rounds)?;
     println!(
         "measured config: shards={} queue_depth={} max_batch={} batch_wait={:?}",
         r.config.shards,
@@ -91,62 +136,69 @@ fn main() -> anyhow::Result<()> {
         r.config.max_batch_wait,
     );
     println!(
-        "serial  : {} requests, {} voxels in {:.3}s -> {}",
-        r.requests,
-        r.serial_voxels,
-        r.serial_wall_secs,
-        human_throughput(r.serial_throughput()),
-    );
-    println!(
-        "batched : {} requests, {} voxels in {:.3}s -> {} ({:.2}x serial)",
-        r.requests,
-        r.voxels,
+        "aggregate: {} requests in {:.3}s -> {} (occupancy {:.2})",
+        r.tenants.iter().map(|t| t.requests).sum::<u64>(),
         r.wall_secs,
         human_throughput(r.throughput()),
-        r.throughput() / r.serial_throughput().max(1e-12),
-    );
-    println!(
-        "latency : p50={:.3}ms p99={:.3}ms occupancy={:.2} rejected={} expired={} failed={}",
-        r.p50_latency.as_secs_f64() * 1e3,
-        r.p99_latency.as_secs_f64() * 1e3,
         r.batch_occupancy,
-        r.rejected,
-        r.expired,
-        r.failed,
     );
+    for t in &r.tenants {
+        println!(
+            "  {:<8} w={} {} requests -> {} | p50={:.3}ms p99={:.3}ms | \
+             rejected={} expired={} failed={}",
+            t.name,
+            t.weight,
+            t.requests,
+            human_throughput(r.tenant_throughput(&t.name)),
+            t.p50_latency.as_secs_f64() * 1e3,
+            t.p99_latency.as_secs_f64() * 1e3,
+            t.rejected,
+            t.expired,
+            t.failed,
+        );
+    }
 
-    // Steady-state allocation discipline through the server: warm one
-    // round, then verify a second round allocates nothing.
-    let cp = compile(&net, &plan, &weights)?;
-    let server = Server::start(net.clone(), cp, cfg, pool)?;
-    let mk = |seed: u64| Tensor5::random(Shape5::new(1, net.f_in, n, n, n), seed);
+    // Steady-state allocation discipline with every tenant resident:
+    // warm one round, then verify a second round allocates nothing.
+    let mut built = Vec::with_capacity(tplans.len());
+    for (i, tp) in tplans.iter().enumerate() {
+        let weights = make_weights(&tenants[i].0, 11 + i as u64);
+        let plan = compile(&tenants[i].0, &tp.plan, &weights)?;
+        built.push(Tenant {
+            net: tenants[i].0.clone(),
+            plan,
+            weight: tp.weight,
+            quota_bytes: tp.quota_bytes,
+        });
+    }
+    let server = TenantServer::start(built, cfg.clone(), pool)?;
     for round in 0..2u64 {
-        let tickets: Vec<_> = (0..clients.max(1) as u64)
-            .map(|i| server.submit(mk(round * 100 + i)).expect("admitted"))
-            .collect();
-        for t in tickets {
-            t.wait().expect("served");
+        for (ti, (net, ..)) in tenants.iter().enumerate() {
+            // Sequential submits per tenant: the quota floor (one
+            // request) always admits, and every shard gets warmed.
+            for s in 0..cfg.shards as u64 {
+                let seed = round * 1000 + ti as u64 * 100 + s;
+                let vol = Tensor5::random(Shape5::new(1, net.f_in, n, n, n), seed);
+                server.submit(&net.name, vol).expect("admitted").wait().expect("served");
+            }
         }
         let m = server.metrics();
-        let fresh: u64 = m.per_shard.iter().map(|s| s.arena_fresh_allocs).sum();
+        let fresh: u64 = m.merged.per_shard.iter().map(|s| s.arena_fresh_allocs).sum();
         let label = if round == 0 { "warmup" } else { "steady" };
-        println!("{label} : {}", m.report());
+        println!("{label} : {}", m.merged.report());
         if round == 1 {
             println!(
                 "steady-state: arena fresh allocs so far {fresh}, process arena hwm {}",
                 human_bytes(znni::memory::arena_hwm()),
             );
-            // The RAM the weight-spectrum cache is buying throughput
-            // with (0 when the plan chose to recompute or
-            // ZNNI_KERNEL_CACHE=off): one shared allocation across all
-            // shards, reported beside the per-worker arena footprint.
-            println!(
-                "footprint : kernel-spectra cache {} (plan budgeted {}), \
-                 per-worker Table II arena {}",
-                human_bytes(m.kernel_cache_bytes),
-                human_bytes(plan.kernel_cache_bytes),
-                human_bytes(plan.est_memory - plan.kernel_cache_bytes),
-            );
+            for tm in &m.tenants {
+                println!(
+                    "  {:<8} kernel-spectra cache {} inflight {}",
+                    tm.name,
+                    human_bytes(tm.metrics.kernel_cache_bytes),
+                    human_bytes(tm.inflight_bytes),
+                );
+            }
         }
     }
     Ok(())

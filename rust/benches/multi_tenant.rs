@@ -1,0 +1,119 @@
+//! Single- vs two-tenant serving throughput, with per-tenant p99
+//! latency (PR 8).
+//!
+//! Each zoo miniature is first served alone (a one-tenant
+//! `TenantServer` via `run_server_multi`), then both share one server
+//! with equal weights. The comparison shows what co-tenancy costs each
+//! model: the shared run splits the same shards, so per-tenant
+//! throughput should land near the weighted share of its solo run
+//! while p99 stays bounded (the SWRR dispatcher never lets one tenant
+//! monopolize a shard).
+//!
+//! Results go to stdout and `BENCH_multi_tenant.json` (default
+//! `../BENCH_multi_tenant.json`, i.e. the repository root when run via
+//! `cargo bench --bench multi_tenant`; override with `ZNNI_BENCH_OUT`).
+
+use std::sync::Arc;
+
+use znni::approaches::run_server_multi;
+use znni::device::Device;
+use znni::net::NetSpec;
+use znni::optimizer::CostModel;
+use znni::server::ServingLoad;
+use znni::util::bench::{Scale, Table};
+use znni::util::json::Json;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = Arc::new(TaskPool::new());
+    let scale = Scale::from_env();
+    let (clients, rounds) = match scale {
+        Scale::Paper => (4usize, 3usize),
+        Scale::Small => (2, 2),
+        Scale::Tiny => (2, 1),
+    };
+    // mini537's field of view is 18³: volumes of 20³ cover both nets.
+    let extent = 20usize;
+    let max_extent = 19usize;
+    let minis = znni::net::zoo::bench_miniatures();
+    let nets: Vec<NetSpec> = vec![minis[0].clone(), minis[1].clone()];
+    let host = Device::host_with_ram(4 << 30);
+    let cm = CostModel::default_rates(pool.workers());
+    let load = ServingLoad { clients, volume_extent: extent };
+    println!(
+        "== Multi-tenant serving: {} + {}, {extent}³ volumes, {clients} clients/tenant ==",
+        nets[0].name, nets[1].name
+    );
+
+    // Solo baselines: each net alone on the server.
+    let solo: Vec<_> = nets
+        .iter()
+        .map(|net| {
+            let tenants = vec![(net.clone(), load, 1u32)];
+            run_server_multi(&tenants, &host, &cm, pool.clone(), max_extent, rounds)
+                .expect("solo serving run")
+        })
+        .collect();
+
+    // Shared run: both tenants, equal weights, same offered load each.
+    let tenants: Vec<_> = nets.iter().map(|net| (net.clone(), load, 1u32)).collect();
+    let shared = run_server_multi(&tenants, &host, &cm, pool, max_extent, rounds)
+        .expect("two-tenant serving run");
+
+    let mut table =
+        Table::new(&["tenant", "solo vox/s", "shared vox/s", "ratio", "solo p99", "shared p99"]);
+    let mut doc: Vec<(String, Json)> = vec![
+        ("scale".into(), Json::Str(format!("{scale:?}"))),
+        ("extent".into(), Json::Num(extent as f64)),
+        ("clients_per_tenant".into(), Json::Num(clients as f64)),
+        ("rounds".into(), Json::Num(rounds as f64)),
+        ("shared_total_vox_per_s".into(), Json::Num(shared.throughput())),
+        ("shared_batch_occupancy".into(), Json::Num(shared.batch_occupancy)),
+    ];
+    for (net, solo_r) in nets.iter().zip(&solo) {
+        let solo_tp = solo_r.tenant_throughput(&net.name);
+        let shared_tp = shared.tenant_throughput(&net.name);
+        let ratio = shared_tp / solo_tp.max(1e-9);
+        let solo_t = &solo_r.tenants[0];
+        let shared_t = shared
+            .tenants
+            .iter()
+            .find(|t| t.name == net.name)
+            .expect("tenant present in shared run");
+        table.row(vec![
+            net.name.clone(),
+            format!("{solo_tp:.0}"),
+            format!("{shared_tp:.0}"),
+            format!("{ratio:.2}×"),
+            format!("{:.3}ms", solo_t.p99_latency.as_secs_f64() * 1e3),
+            format!("{:.3}ms", shared_t.p99_latency.as_secs_f64() * 1e3),
+        ]);
+        doc.push((
+            net.name.clone(),
+            Json::Object(vec![
+                ("solo_vox_per_s".into(), Json::Num(solo_tp)),
+                ("shared_vox_per_s".into(), Json::Num(shared_tp)),
+                ("ratio".into(), Json::Num(ratio)),
+                ("solo_p99_secs".into(), Json::Num(solo_t.p99_latency.as_secs_f64())),
+                ("shared_p99_secs".into(), Json::Num(shared_t.p99_latency.as_secs_f64())),
+                ("shared_requests".into(), Json::Num(shared_t.requests as f64)),
+                ("quota_bytes".into(), Json::Num(shared_t.quota_bytes as f64)),
+            ]),
+        ));
+    }
+    table.print();
+    println!(
+        "shared config: shards={} queue_depth={} max_batch={} | total {:.0} vox/s",
+        shared.config.shards,
+        shared.config.queue_depth,
+        shared.config.max_batch_requests,
+        shared.throughput(),
+    );
+
+    let path =
+        std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_multi_tenant.json".into());
+    match std::fs::write(&path, Json::Object(doc).to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

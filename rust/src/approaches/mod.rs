@@ -20,8 +20,12 @@ use crate::exec::ExecCtx;
 use crate::layers::{ConvLayer, LayerPrimitive, MpfLayer, Placement};
 use crate::memory::model::{ConvAlgo, ConvDims};
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
-use crate::optimizer::{compile, search, search_serving, CostModel, PlanLayer, SearchSpace};
+use crate::optimizer::{
+    compile, make_weights, search, search_serving, search_serving_multi, CostModel, PlanLayer,
+    SearchSpace,
+};
 use crate::pipeline::{best_theta, Pipeline};
+use crate::server::tenants::{Tenant, TenantServer};
 use crate::server::{RejectReason, Server, ServerConfig, ServingLoad};
 use crate::tensor::{Shape5, Tensor5};
 use crate::util::pool::TaskPool;
@@ -524,6 +528,187 @@ pub fn run_server(
     })
 }
 
+/// Per-tenant slice of a [`run_server_multi`] measurement window.
+#[derive(Clone, Debug)]
+pub struct TenantRunResult {
+    /// Tenant id (the net name).
+    pub name: String,
+    /// SWRR dispatch weight the multi-tenant search assigned.
+    pub weight: u32,
+    /// Admission quota (bytes of queued + in-flight requests).
+    pub quota_bytes: u64,
+    /// Closed-loop requests this tenant completed.
+    pub requests: u64,
+    /// Dense output voxels this tenant produced.
+    pub voxels: u64,
+    /// Submits the server rejected for this tenant (all reasons,
+    /// including backpressure retries the closed loop absorbed).
+    pub rejected: u64,
+    /// Requests whose deadline expired in this tenant's queues.
+    pub expired: u64,
+    /// Non-backpressure failures in this tenant's closed loop.
+    pub failed: u64,
+    /// Median request latency for this tenant.
+    pub p50_latency: Duration,
+    /// 99th-percentile request latency for this tenant.
+    pub p99_latency: Duration,
+}
+
+/// Outcome of the multi-tenant closed-loop harness
+/// ([`run_server_multi`]). All tenants share one measurement window,
+/// so per-tenant throughput is `tenants[i].voxels / wall_secs`.
+#[derive(Clone, Debug)]
+pub struct MultiServerRunResult {
+    /// The shared serving config the multi-tenant search chose.
+    pub config: ServerConfig,
+    /// Wall seconds of the measurement window (all tenants together).
+    pub wall_secs: f64,
+    /// Mean requests per dispatched batch, across all tenants.
+    pub batch_occupancy: f64,
+    /// Per-tenant outcomes, in the same order as the input tenant set.
+    pub tenants: Vec<TenantRunResult>,
+}
+
+impl MultiServerRunResult {
+    /// Aggregate throughput (voxels/s) across all tenants.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.tenants.iter().map(|t| t.voxels).sum::<u64>() as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One tenant's share of the window's throughput (voxels/s).
+    pub fn tenant_throughput(&self, name: &str) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.tenants
+            .iter()
+            .find(|t| t.name == name)
+            .map(|t| t.voxels as f64 / self.wall_secs)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Multi-tenant serving harness: search per-tenant plans, weights, and
+/// quotas in one call ([`search_serving_multi`]), compile each tenant
+/// with deterministic weights, start one [`TenantServer`], and drive
+/// every tenant with its own `load.clients` closed-loop threads over a
+/// shared measurement window. Backpressure rejections (queue-full,
+/// over-quota, memory-pressure) are retried; anything else counts as a
+/// failure for that tenant.
+pub fn run_server_multi(
+    tenants: &[(NetSpec, ServingLoad, u32)],
+    host: &Device,
+    cm: &CostModel,
+    pool: Arc<TaskPool>,
+    max_extent: usize,
+    rounds: usize,
+) -> Result<MultiServerRunResult> {
+    let mut space = SearchSpace::cpu_only(host.clone(), max_extent);
+    space.max_candidates = 4;
+    let (tplans, cfg) = search_serving_multi(tenants, &space, cm)
+        .ok_or_else(|| anyhow!("no feasible multi-tenant serving plan"))?;
+    let rounds = rounds.max(1);
+    let mut built = Vec::with_capacity(tplans.len());
+    for (i, tp) in tplans.iter().enumerate() {
+        let net = tenants[i].0.clone();
+        let weights = make_weights(&net, 40 + i as u64);
+        let plan = compile(&net, &tp.plan, &weights)?;
+        built.push(Tenant { net, plan, weight: tp.weight, quota_bytes: tp.quota_bytes });
+    }
+    let server = TenantServer::start(built, cfg.clone(), pool)?;
+    // Warm every shard's arenas for every tenant. Sequential submits
+    // keep at most one request in flight per tenant, so the quota
+    // floor (one request) always admits them.
+    for (i, (net, load, _)) in tenants.iter().enumerate() {
+        let n = load.volume_extent;
+        for s in 0..cfg.shards {
+            let seed = 9100 + (i * 31 + s) as u64;
+            let vol = Tensor5::random(Shape5::new(1, net.f_in, n, n, n), seed);
+            let t = server
+                .submit(&net.name, vol)
+                .map_err(|r| anyhow!("warmup rejected for {}: {:?}", net.name, r.reason))?;
+            t.wait().map_err(|e| anyhow!("warmup failed for {}: {e}", net.name))?;
+        }
+    }
+    // (voxels, served, failed) per tenant.
+    let per: Vec<[AtomicU64; 3]> =
+        tenants.iter().map(|_| [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)]).collect();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (ti, (net, load, _)) in tenants.iter().enumerate() {
+            for c in 0..load.clients.max(1) {
+                let server = &server;
+                let per = &per;
+                s.spawn(move || {
+                    let n = load.volume_extent;
+                    for r in 0..rounds {
+                        let seed = (ti * 7919 + c * rounds + r) as u64;
+                        let mut vol = Tensor5::random(Shape5::new(1, net.f_in, n, n, n), seed);
+                        loop {
+                            match server.submit(&net.name, vol) {
+                                Ok(t) => {
+                                    match t.wait() {
+                                        Ok(resp) => {
+                                            per[ti][0].fetch_add(resp.voxels, Ordering::SeqCst);
+                                            per[ti][1].fetch_add(1, Ordering::SeqCst);
+                                        }
+                                        Err(_) => {
+                                            per[ti][2].fetch_add(1, Ordering::SeqCst);
+                                        }
+                                    }
+                                    break;
+                                }
+                                Err(rej) => match rej.reason {
+                                    RejectReason::QueueFull { .. }
+                                    | RejectReason::OverQuota { .. }
+                                    | RejectReason::MemoryPressure { .. } => {
+                                        // Backpressure: brief pause, retry.
+                                        vol = rej.volume;
+                                        std::thread::sleep(Duration::from_micros(200));
+                                    }
+                                    _ => {
+                                        per[ti][2].fetch_add(1, Ordering::SeqCst);
+                                        break;
+                                    }
+                                },
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    let out = m
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, tm)| TenantRunResult {
+            name: tm.name.clone(),
+            weight: tm.weight,
+            quota_bytes: tm.quota_bytes,
+            requests: per[ti][1].load(Ordering::SeqCst),
+            voxels: per[ti][0].load(Ordering::SeqCst),
+            rejected: tm.metrics.rejected,
+            expired: tm.metrics.expired,
+            failed: per[ti][2].load(Ordering::SeqCst),
+            p50_latency: tm.metrics.p50_latency,
+            p99_latency: tm.metrics.p99_latency,
+        })
+        .collect();
+    Ok(MultiServerRunResult {
+        config: cfg,
+        wall_secs,
+        batch_occupancy: m.merged.batch_occupancy(),
+        tenants: out,
+    })
+}
+
 /// Run one approach (dispatch helper for the benches).
 #[allow(clippy::too_many_arguments)]
 pub fn run_approach(
@@ -613,6 +798,30 @@ mod tests {
         assert!(r.batch_occupancy >= 1.0);
         assert_eq!(r.expired, 0);
         assert_eq!(r.failed, 0);
+    }
+
+    #[test]
+    fn multi_tenant_harness_runs_and_reports() {
+        let (_, _, host, _gpu, cm, pool) = setup();
+        let pool = Arc::new(pool);
+        let minis = crate::net::zoo::bench_miniatures();
+        let tenants = vec![
+            (minis[0].clone(), ServingLoad { clients: 2, volume_extent: 19 }, 2),
+            (minis[1].clone(), ServingLoad { clients: 1, volume_extent: 19 }, 1),
+        ];
+        let r = run_server_multi(&tenants, &host, &cm, pool, 19, 2).unwrap();
+        assert_eq!(r.tenants.len(), 2);
+        assert!(r.throughput() > 0.0);
+        assert!(r.batch_occupancy >= 1.0);
+        for (t, (net, load, _)) in r.tenants.iter().zip(&tenants) {
+            assert_eq!(t.name, net.name);
+            let offered = (load.clients * 2) as u64;
+            assert_eq!(t.requests, offered, "{}: every closed-loop request completes", t.name);
+            assert!(t.voxels > 0, "{}", t.name);
+            assert_eq!(t.failed, 0, "{}", t.name);
+            assert_eq!(t.expired, 0, "{}", t.name);
+            assert!(r.tenant_throughput(&t.name) > 0.0, "{}", t.name);
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@
 //! it programmatically for tests and benches.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use crate::fft::fft3d::Fft3Scratch;
 use crate::memory;
@@ -216,6 +216,89 @@ impl Drop for PrecomputedKernels {
     }
 }
 
+/// A small per-padded-shape map of kernel spectra for one layer.
+///
+/// One layer served under mixed patch sizes (several tenants, or one
+/// tenant whose optimizer picked different extents per device) sees a
+/// different padded FFT shape per shape class — a single
+/// [`PrecomputedKernels`] keyed to one shape forces every other shape
+/// back to on-the-fly transforms. The map holds one cache per distinct
+/// `(layout, padded)` key so *every* shape class a layer serves hits
+/// precomputed spectra after its first warm.
+///
+/// The population is tiny (one entry per distinct patch shape routed
+/// through the layer — in practice one per tenant), so lookups are a
+/// linear scan over [`PrecomputedKernels::matches`]. Eviction under
+/// memory pressure is largest-first via [`SpectraMap::evict_largest`],
+/// mirroring the server's shed policy across layers.
+#[derive(Default)]
+pub struct SpectraMap {
+    entries: Vec<Arc<PrecomputedKernels>>,
+}
+
+impl SpectraMap {
+    /// An empty map.
+    pub fn new() -> Self {
+        SpectraMap { entries: Vec::new() }
+    }
+
+    /// The cache serving `(layout, padded)` for a `f_out × f_in` layer,
+    /// if one has been built.
+    pub fn get(
+        &self,
+        layout: SpectraLayout,
+        padded: Vec3,
+        f_out: usize,
+        f_in: usize,
+    ) -> Option<Arc<PrecomputedKernels>> {
+        self.entries.iter().find(|c| c.matches(layout, padded, f_out, f_in)).cloned()
+    }
+
+    /// Insert a freshly built cache. The caller is expected to have
+    /// checked [`SpectraMap::get`] first; a duplicate key is replaced
+    /// rather than doubled.
+    pub fn insert(&mut self, cache: Arc<PrecomputedKernels>) {
+        self.entries
+            .retain(|c| !c.matches(cache.layout(), cache.padded(), cache.f_out, cache.f_in));
+        self.entries.push(cache);
+    }
+
+    /// Total resident bytes across every cached shape — what the layer
+    /// reports into `kernel_cache_bytes` accounting.
+    pub fn bytes(&self) -> u64 {
+        self.entries.iter().map(|c| c.bytes()).sum()
+    }
+
+    /// Number of distinct cached shapes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no shape is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop the largest cached shape and return its bytes (0 if empty).
+    /// Under memory pressure the server sheds one shape at a time,
+    /// largest-first, so lightly-used big-patch spectra go before small
+    /// hot ones.
+    pub fn evict_largest(&mut self) -> u64 {
+        let idx = self.entries.iter().enumerate().max_by_key(|(_, c)| c.bytes()).map(|(i, _)| i);
+        match idx {
+            Some(i) => self.entries.swap_remove(i).bytes(),
+            None => 0,
+        }
+    }
+
+    /// Drop every cached shape, returning the bytes released.
+    pub fn clear(&mut self) -> u64 {
+        let freed = self.bytes();
+        self.entries.clear();
+        freed
+    }
+}
+
 /// Whether the kernel-spectra cache may be used, and who decides.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
@@ -374,6 +457,48 @@ mod tests {
         assert_eq!(CacheMode::parse("on"), Some(CacheMode::Force));
         assert_eq!(CacheMode::parse("1"), Some(CacheMode::Force));
         assert_eq!(CacheMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spectra_map_keys_per_shape_and_evicts_largest() {
+        let pool = tpool();
+        let w = Weights::random(3, 2, [3, 3, 3], 80);
+        let small = fft_optimal_vec3([6, 6, 6]);
+        let big = fft_optimal_vec3([12, 12, 12]);
+        let mut map = SpectraMap::new();
+        assert!(map.is_empty());
+        assert_eq!(map.evict_largest(), 0, "evicting an empty map is a no-op");
+
+        let a = Arc::new(PrecomputedKernels::build(&w, SpectraLayout::Cpu, small, &pool));
+        let b = Arc::new(PrecomputedKernels::build(&w, SpectraLayout::Cpu, big, &pool));
+        let (a_bytes, b_bytes) = (a.bytes(), b.bytes());
+        assert!(b_bytes > a_bytes, "bigger padded shape must cost more");
+        map.insert(a.clone());
+        map.insert(b.clone());
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.bytes(), a_bytes + b_bytes);
+
+        // Lookups key on (layout, padded, geometry).
+        let hit = map.get(SpectraLayout::Cpu, small, 3, 2).expect("small shape cached");
+        assert!(Arc::ptr_eq(&hit, &a));
+        let hit = map.get(SpectraLayout::Cpu, big, 3, 2).expect("big shape cached");
+        assert!(Arc::ptr_eq(&hit, &b));
+        assert!(map.get(SpectraLayout::Cpu, [5, 5, 5], 3, 2).is_none());
+        assert!(map.get(SpectraLayout::Gpu, small, 3, 2).is_none());
+        assert!(map.get(SpectraLayout::Cpu, small, 2, 3).is_none());
+
+        // Re-inserting an existing key replaces rather than doubles.
+        map.insert(a.clone());
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.bytes(), a_bytes + b_bytes);
+
+        // Eviction is largest-first and the accounting follows.
+        assert_eq!(map.evict_largest(), b_bytes);
+        assert_eq!(map.bytes(), a_bytes);
+        assert!(map.get(SpectraLayout::Cpu, big, 3, 2).is_none());
+        assert!(map.get(SpectraLayout::Cpu, small, 3, 2).is_some());
+        assert_eq!(map.clear(), a_bytes);
+        assert!(map.is_empty());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::conv::precomp::{cache_mode, CacheMode, PrecomputedKernels, SpectraLayout};
+use crate::conv::precomp::{cache_mode, CacheMode, PrecomputedKernels, SpectraLayout, SpectraMap};
 use crate::conv::{self, Activation, Weights};
 use crate::exec::{ExecCtx, WorkspaceReq};
 use crate::fft::fft_optimal_vec3;
@@ -99,10 +99,11 @@ pub trait LayerPrimitive: Send + Sync {
     fn restore_kernel_cache(&self) {}
 }
 
-/// Shed-aware kernel-spectra cache state: the built spectra plus a
-/// pressure flag blocking rebuilds while shed.
+/// Shed-aware kernel-spectra cache state: the per-padded-shape spectra
+/// map plus a pressure flag blocking *new builds* while shed (shapes
+/// still resident stay servable — reads cost nothing).
 struct KernelCacheState {
-    built: Option<Arc<PrecomputedKernels>>,
+    map: SpectraMap,
     shed: bool,
 }
 
@@ -117,9 +118,10 @@ pub struct ConvLayer {
     /// Whether this layer precomputes its kernel spectra (the plan's
     /// per-layer cache decision; see [`ConvLayer::with_kernel_cache`]).
     cache_enabled: bool,
-    /// The spectra, built on first use (or [`LayerPrimitive::warm`])
-    /// and shared via `Arc` across every worker and shard; shed under
-    /// memory pressure (see [`LayerPrimitive::shed_kernel_cache`]).
+    /// Per-padded-shape spectra map, built on first use (or
+    /// [`LayerPrimitive::warm`]) and shared via `Arc` across every
+    /// worker and shard; shed largest-shape-first under memory
+    /// pressure (see [`LayerPrimitive::shed_kernel_cache`]).
     kernel_cache: Mutex<KernelCacheState>,
 }
 
@@ -133,7 +135,7 @@ impl ConvLayer {
             algo,
             act,
             cache_enabled: false,
-            kernel_cache: Mutex::new(KernelCacheState { built: None, shed: false }),
+            kernel_cache: Mutex::new(KernelCacheState { map: SpectraMap::new(), shed: false }),
         }
     }
 
@@ -152,32 +154,34 @@ impl ConvLayer {
     }
 
     /// The cache to execute against for `input`, building it on first
-    /// use. Returns `None` when caching is off (plan decision, the
-    /// `ZNNI_KERNEL_CACHE=off` kill switch, or the cache is currently
-    /// shed under memory pressure) or when the cache was built for a
-    /// different padded FFT shape than `input` needs — the primitive
-    /// then falls back to on-the-fly transforms.
+    /// use. The layer keeps a [`SpectraMap`] — one spectra row per
+    /// distinct padded FFT shape — so mixed patch sizes (several
+    /// tenants routed through one shared plan, or shape-heterogeneous
+    /// traffic) each hit precomputed spectra after their first warm.
+    /// Returns `None` when caching is off (plan decision or the
+    /// `ZNNI_KERNEL_CACHE=off` kill switch), or when the shape is not
+    /// yet resident and builds are blocked because the layer is shed
+    /// under memory pressure — the primitive then falls back to
+    /// on-the-fly transforms. Shapes still resident while shed remain
+    /// servable: a cache hit costs no new bytes.
     fn kernels_for(&self, input: Shape5, pool: &TaskPool) -> Option<Arc<PrecomputedKernels>> {
         if !self.cache_enabled || cache_mode() == CacheMode::Off {
             return None;
         }
         let layout = SpectraLayout::for_algo(self.algo)?;
         let padded = fft_optimal_vec3(input.spatial());
+        let (f_out, f_in) = (self.weights.f_out, self.weights.f_in);
         let mut st = recover_lock(&self.kernel_cache);
+        if let Some(hit) = st.map.get(layout, padded, f_out, f_in) {
+            return Some(hit);
+        }
         if st.shed {
             return None;
         }
-        if st.built.is_none() {
-            faults::fire(FaultSite::KernelCacheWarm);
-            st.built =
-                Some(Arc::new(PrecomputedKernels::build(&self.weights, layout, padded, pool)));
-        }
-        let cache = st.built.as_ref().expect("just built");
-        if cache.matches(layout, padded, self.weights.f_out, self.weights.f_in) {
-            Some(cache.clone())
-        } else {
-            None
-        }
+        faults::fire(FaultSite::KernelCacheWarm);
+        let built = Arc::new(PrecomputedKernels::build(&self.weights, layout, padded, pool));
+        st.map.insert(built.clone());
+        Some(built)
     }
 
     fn dims(&self, input: Shape5) -> ConvDims {
@@ -253,16 +257,17 @@ impl LayerPrimitive for ConvLayer {
     }
 
     fn kernel_cache_bytes(&self) -> u64 {
-        recover_lock(&self.kernel_cache).built.as_ref().map(|c| c.bytes()).unwrap_or(0)
+        recover_lock(&self.kernel_cache).map.bytes()
     }
 
     fn shed_kernel_cache(&self) -> u64 {
         let mut st = recover_lock(&self.kernel_cache);
-        let bytes = st.built.as_ref().map(|c| c.bytes()).unwrap_or(0);
+        // Drop our Arc to the largest cached shape (workers mid-execute
+        // keep theirs alive until their batch finishes) and block new
+        // builds until restored; repeated shed calls drain the map one
+        // shape at a time, largest-first.
+        let bytes = st.map.evict_largest();
         if bytes > 0 {
-            // Drop our Arc (workers mid-execute keep theirs alive until
-            // their batch finishes) and block rebuilds until restored.
-            st.built = None;
             st.shed = true;
         }
         bytes
@@ -665,6 +670,68 @@ mod tests {
         assert_eq!(a.data(), b.data(), "shed fallback must be bit-identical");
         ctx.retire(a);
         ctx.retire(b);
+    }
+
+    #[test]
+    fn per_shape_spectra_map_serves_mixed_patch_shapes() {
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 31));
+        let plain = ConvLayer::new(w.clone(), ConvAlgo::FftTaskParallel, Activation::Relu);
+        let cached =
+            ConvLayer::new(w, ConvAlgo::FftTaskParallel, Activation::Relu).with_kernel_cache(true);
+        let small = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 32);
+        let big = Tensor5::random(Shape5::new(1, 2, 11, 11, 11), 33);
+        cached.warm(small.shape(), &p);
+        let small_bytes = cached.kernel_cache_bytes();
+        cached.warm(big.shape(), &p);
+        let both = cached.kernel_cache_bytes();
+        // (Under ZNNI_KERNEL_CACHE=off nothing is resident; the
+        // identity assertions below still hold via the fallback path.)
+        if small_bytes > 0 {
+            assert!(both > small_bytes, "second shape must add its own spectra row");
+        }
+        for t in [&small, &big] {
+            let a = plain.execute(t.clone_tensor(), &mut ctx);
+            let b = cached.execute(t.clone_tensor(), &mut ctx);
+            assert_eq!(a.data(), b.data(), "cached path bit-identical at {:?}", t.shape());
+            ctx.retire(a);
+            ctx.retire(b);
+        }
+        assert_eq!(cached.kernel_cache_bytes(), both, "execute must not grow the map");
+    }
+
+    #[test]
+    fn shed_evicts_largest_shape_first_with_byte_accounting() {
+        let p = tpool();
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 41));
+        let cached =
+            ConvLayer::new(w, ConvAlgo::FftTaskParallel, Activation::Relu).with_kernel_cache(true);
+        let small = Shape5::new(1, 2, 7, 7, 7);
+        let big = Shape5::new(1, 2, 11, 11, 11);
+        cached.warm(small, &p);
+        let small_bytes = cached.kernel_cache_bytes();
+        cached.warm(big, &p);
+        let big_bytes = cached.kernel_cache_bytes() - small_bytes;
+        // (Under ZNNI_KERNEL_CACHE=off every figure here is 0 and the
+        // assertions degenerate but still hold.)
+        assert!(big_bytes >= small_bytes, "bigger padded shape must cost more");
+        assert_eq!(cached.shed_kernel_cache(), big_bytes, "largest shape goes first");
+        assert_eq!(cached.kernel_cache_bytes(), small_bytes, "small shape stays resident");
+        // While shed, the evicted shape must not rebuild, but the
+        // still-resident shape keeps serving from cache.
+        cached.warm(big, &p);
+        assert_eq!(cached.kernel_cache_bytes(), small_bytes, "no rebuild while shed");
+        let input = Tensor5::random(small, 42);
+        let mut ctx = ExecCtx::new(&p);
+        let out = cached.execute(input.clone_tensor(), &mut ctx);
+        assert_eq!(cached.kernel_cache_bytes(), small_bytes);
+        ctx.retire(out);
+        assert_eq!(cached.shed_kernel_cache(), small_bytes, "second shed drains the map");
+        assert_eq!(cached.kernel_cache_bytes(), 0);
+        cached.restore_kernel_cache();
+        cached.warm(big, &p);
+        assert_eq!(cached.kernel_cache_bytes(), big_bytes, "restore re-admits builds");
     }
 
     #[test]

@@ -582,6 +582,166 @@ pub fn search_serving(
     Some((plan, cfg))
 }
 
+/// One tenant's slice of a multi-tenant serving search: its plan, its
+/// dispatch weight, and its admission quota — ready to compile and
+/// hand to [`crate::server::tenants::TenantServer::start`].
+#[derive(Clone, Debug)]
+pub struct TenantPlan {
+    /// Tenant id (the network name).
+    pub name: String,
+    /// The tenant's searched execution plan.
+    pub plan: Plan,
+    /// Dispatch weight (passed through from the search input).
+    pub weight: u32,
+    /// Admission quota in bytes: the tenant's slice of the device
+    /// budget, split in proportion to its offered load's Table II
+    /// request footprint (`request_memory_bytes × clients`).
+    pub quota_bytes: u64,
+    /// The offered load the quota was derived for.
+    pub load: crate::server::ServingLoad,
+}
+
+/// Multi-tenant serving search: size the shard set and split the device
+/// budget across a tenant set in one call.
+///
+/// Input is `(net, offered load, weight)` per tenant. The search runs
+/// in three steps, all in the paper's memory currency:
+///
+/// 1. **Per-tenant plan search** under a weight-proportional RAM share
+///    (`ram × weight / Σ weights`) — a heavy tenant may buy a larger
+///    patch, a light one gets a leaner plan. Any tenant with no
+///    feasible plan fails the whole search (`None`).
+/// 2. **Aggregate shard sizing**, mirroring [`search_serving`] but with
+///    every tenant's warm arenas resident on every shard and one
+///    in-flight request per tenant per busy shard; the shard count
+///    maximizing summed tenant throughput wins.
+/// 3. **Quota split**: the RAM left after all warm arenas is divided in
+///    proportion to each tenant's `request_memory_bytes × clients`
+///    (its share of the offered byte load), floored at one request so
+///    every tenant can always admit something.
+///
+/// The returned [`crate::server::ServerConfig`] bounds each *per-tenant*
+/// per-shard queue with the deepest per-tenant demand, and budgets one
+/// shard's batch against all tenants' resident arenas.
+pub fn search_serving_multi(
+    tenants: &[(NetSpec, crate::server::ServingLoad, u32)],
+    space: &SearchSpace,
+    cost: &CostModel,
+) -> Option<(Vec<TenantPlan>, crate::server::ServerConfig)> {
+    use std::time::Duration;
+
+    if tenants.is_empty() {
+        return None;
+    }
+    let total_weight: u64 = tenants.iter().map(|(_, _, w)| u64::from((*w).max(1))).sum();
+    let threads = cost.threads.max(1);
+
+    // Step 1: per-tenant plans under weight-proportional RAM shares.
+    let mut plans = Vec::with_capacity(tenants.len());
+    let mut req_bytes = Vec::with_capacity(tenants.len());
+    for (net, load, weight) in tenants {
+        let mut share = space.clone();
+        let w = u64::from((*weight).max(1));
+        share.device.ram_bytes = (space.device.ram_bytes / total_weight).saturating_mul(w);
+        let plan = search(net, &share, cost)?;
+        let fov = net.field_of_view();
+        let vd = [load.volume_extent; 3];
+        req_bytes.push(
+            crate::memory::model::request_memory_bytes(net.f_in, net.f_out(), vd, fov).max(1),
+        );
+        plans.push(plan);
+    }
+
+    // Step 2: aggregate shard sizing (same currency as search_serving,
+    // summed over tenants).
+    let measured_overhead = cost.dispatch_overhead_secs.max(0.0);
+    let overhead_for = |shard_workers: usize| {
+        (measured_overhead * shard_workers as f64 / threads as f64)
+            .max(measured_overhead / threads as f64)
+    };
+    let per_worker_ws: u64 = plans.iter().map(|p| p.est_memory.max(1)).sum();
+    let mut best: Option<(usize, f64)> = None;
+    let mut shards = 1usize;
+    while shards <= threads {
+        let shard_workers = (threads / shards).max(1);
+        let arenas = per_worker_ws.saturating_mul((shard_workers * shards) as u64);
+        let mut inflight = 0u64;
+        let mut tp = 0.0f64;
+        for ((_, load, _), (plan, rb)) in tenants.iter().zip(plans.iter().zip(&req_bytes)) {
+            let concurrency = shards.min(load.clients.max(1));
+            inflight = inflight.saturating_add(rb.saturating_mul(concurrency as u64));
+            let patch_secs = plan.est_secs * threads as f64 / shard_workers as f64;
+            tp += concurrency as f64 * plan.out_voxels as f64
+                / (patch_secs + overhead_for(shard_workers));
+        }
+        let feasible = space.device.fits(arenas.saturating_add(inflight));
+        if feasible && best.map(|(_, b)| tp > b).unwrap_or(true) {
+            best = Some((shards, tp));
+        }
+        shards *= 2;
+    }
+    let (shards, _) = best?;
+    let shard_workers = (threads / shards).max(1);
+    let shard_arena = per_worker_ws.saturating_mul(shard_workers as u64);
+    let arenas = shard_arena.saturating_mul(shards as u64);
+    let spare = space.device.ram_bytes.saturating_sub(arenas);
+
+    // Step 3: quota split over the spare RAM, proportional to each
+    // tenant's offered byte load, floored at one request each.
+    let demand: Vec<u64> = tenants
+        .iter()
+        .zip(&req_bytes)
+        .map(|((_, load, _), rb)| rb.saturating_mul(load.clients.max(1) as u64))
+        .collect();
+    let total_demand: u64 = demand.iter().sum::<u64>().max(1);
+    let quotas: Vec<u64> = demand
+        .iter()
+        .zip(&req_bytes)
+        .map(|(d, rb)| {
+            let share = ((spare as u128 * *d as u128) / total_demand as u128) as u64;
+            share.max(*rb)
+        })
+        .collect();
+
+    // Derived serving config, per-tenant-queue flavoured: queue depth
+    // covers the most demanding tenant (the bound applies per tenant),
+    // the batch wait follows the slowest tenant's patch time.
+    let max_req = req_bytes.iter().copied().max().unwrap_or(1);
+    let depth_by_mem = ((spare / max_req).max(1) as usize).min(1 << 16);
+    let max_clients = tenants.iter().map(|(_, l, _)| l.clients.max(1)).max().unwrap_or(1);
+    let queue_depth = crate::util::ceil_div(2 * max_clients, shards).clamp(1, depth_by_mem);
+    let max_batch_requests = depth_by_mem.min(max_clients).clamp(1, 8);
+    let patch_secs = plans
+        .iter()
+        .map(|p| p.est_secs * threads as f64 / shard_workers as f64)
+        .fold(0.0f64, f64::max);
+    let wait_floor = overhead_for(shard_workers).clamp(50e-6, 5e-3);
+    let max_batch_wait = Duration::from_secs_f64((patch_secs / 8.0).clamp(wait_floor, 10e-3));
+    let memory_budget = (space.device.ram_bytes / shards as u64)
+        .max(shard_arena.saturating_add(max_req).saturating_add(1));
+    let cfg = crate::server::ServerConfig {
+        shards,
+        queue_depth,
+        max_batch_requests,
+        max_batch_wait,
+        memory_budget,
+        default_deadline: None,
+    };
+    let tenant_plans = tenants
+        .iter()
+        .zip(plans)
+        .zip(quotas)
+        .map(|(((net, load, weight), plan), quota_bytes)| TenantPlan {
+            name: net.name.clone(),
+            plan,
+            weight: (*weight).max(1),
+            quota_bytes,
+            load: *load,
+        })
+        .collect();
+    Some((tenant_plans, cfg))
+}
+
 /// Materialised, executable plan: primitives + weights.
 pub struct CompiledPlan {
     /// The plan this was compiled from.
@@ -884,6 +1044,54 @@ mod tests {
         // the Server::start gate relies on this.
         let shard_workers = (cm.threads / cfg.shards).max(1);
         assert!(cfg.memory_budget > plan.est_memory * shard_workers as u64);
+    }
+
+    #[test]
+    fn search_serving_multi_splits_budget_across_tenants() {
+        let minis = crate::net::zoo::bench_miniatures();
+        let cm = CostModel::default_rates(4);
+        // mini537's field of view is 18³: the search space must admit
+        // at least that extent for a feasible plan.
+        let space = SearchSpace::cpu_only(host(4), 19);
+        let tenants = vec![
+            (minis[0].clone(), crate::server::ServingLoad { clients: 4, volume_extent: 19 }, 2),
+            (minis[1].clone(), crate::server::ServingLoad { clients: 2, volume_extent: 19 }, 1),
+        ];
+        let (plans, cfg) = search_serving_multi(&tenants, &space, &cm).expect("feasible");
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].name, "mini337");
+        assert_eq!(plans[1].name, "mini537");
+        assert_eq!(plans[0].weight, 2);
+        let mut quota_sum = 0u64;
+        for (tp, (net, load, _)) in plans.iter().zip(&tenants) {
+            let vd = [load.volume_extent; 3];
+            let rb = crate::memory::model::request_memory_bytes(
+                net.f_in,
+                net.f_out(),
+                vd,
+                net.field_of_view(),
+            );
+            assert!(tp.quota_bytes >= rb, "{}: quota admits at least one request", tp.name);
+            quota_sum += tp.quota_bytes;
+        }
+        assert!(quota_sum <= space.device.ram_bytes, "quotas never exceed the device");
+        // mini337 offers 2× the clients at equal extent: its quota
+        // share must not be smaller than mini537's.
+        assert!(plans[0].quota_bytes >= plans[1].quota_bytes);
+        assert!(cfg.shards >= 1 && cfg.queue_depth >= 1 && cfg.max_batch_requests >= 1);
+        // The budget gate TenantServer::start applies: both tenants'
+        // shard arenas plus one request must fit.
+        let shard_workers = (cm.threads / cfg.shards).max(1);
+        let arenas: u64 =
+            plans.iter().map(|t| t.plan.est_memory * shard_workers as u64).sum();
+        assert!(cfg.memory_budget > arenas);
+    }
+
+    #[test]
+    fn search_serving_multi_rejects_empty_tenant_set() {
+        let cm = CostModel::default_rates(2);
+        let space = SearchSpace::cpu_only(host(4), 15);
+        assert!(search_serving_multi(&[], &space, &cm).is_none());
     }
 
     #[test]

@@ -102,10 +102,12 @@ use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metri
 use crate::memory::model::request_memory_bytes;
 use crate::net::NetSpec;
 use crate::optimizer::CompiledPlan;
-use crate::tensor::{Tensor5, Vec3};
+use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
 use crate::util::sync::{recover_lock, recover_wait_timeout};
+
+pub mod tenants;
 
 /// Latency samples retained for the p50/p99 estimate (ring buffer).
 const LATENCY_CAP: usize = 1 << 14;
@@ -186,6 +188,32 @@ pub enum RejectReason {
     BadShape {
         /// What was wrong with the shape.
         detail: String,
+    },
+    /// Volume shape does not fit the tenant it was submitted to: wrong
+    /// channel count or smaller than the tenant's patch. Carries the
+    /// tenant id and the shapes that tenant accepts, so a client that
+    /// mixed up its models can tell *which* plan turned it away.
+    WrongTenantShape {
+        /// Name of the tenant (network) the submit addressed.
+        tenant: String,
+        /// Input channel count the tenant accepts.
+        f_in: usize,
+        /// Minimum spatial extent (the tenant plan's patch).
+        min_extent: Vec3,
+        /// What was wrong with the submitted shape.
+        detail: String,
+    },
+    /// The tenant's admission quota (its slice of the device budget,
+    /// split via `request_memory_bytes`) is exhausted by requests
+    /// already queued or in flight. Per-tenant backpressure: *this*
+    /// tenant must retry, other tenants keep admitting.
+    OverQuota {
+        /// Name of the tenant whose quota is exhausted.
+        tenant: String,
+        /// Bytes currently queued + in flight for the tenant.
+        inflight_bytes: u64,
+        /// The tenant's quota in bytes.
+        quota: u64,
     },
     /// The server is shedding load because its shards are running under
     /// memory pressure: admission operates at a reduced queue depth
@@ -331,6 +359,22 @@ fn edf_insert(q: &mut VecDeque<Queued>, item: Queued) {
     q.insert(idx, item);
 }
 
+/// Shape admission check shared by the single-model [`Server`] and the
+/// multi-tenant [`tenants::TenantServer`]: `None` if `sh` fits a tenant
+/// with `f_in` input channels and minimum extent `patch`, else the
+/// detail string for [`RejectReason::WrongTenantShape`].
+fn tenant_shape_error(sh: Shape5, f_in: usize, patch: Vec3) -> Option<String> {
+    if sh.f != f_in {
+        return Some(format!("expected {} input channels, got {}", f_in, sh.f));
+    }
+    for d in 0..3 {
+        if patch[d] > [sh.x, sh.y, sh.z][d] {
+            return Some(format!("volume {} smaller than patch {:?}", sh, patch));
+        }
+    }
+    None
+}
+
 #[derive(Default)]
 struct ShardStats {
     batches: u64,
@@ -356,6 +400,10 @@ struct Inner {
     /// Bytes of one shard's warm worker arenas (workspace_req × workers)
     /// — the fixed term of the batch admission inequality.
     shard_ws_bytes: u64,
+    /// Name of the served network — the tenant id carried by
+    /// [`RejectReason::WrongTenantShape`] (a single-model server is one
+    /// tenant owning the whole budget).
+    name: String,
     f_in: usize,
     f_out: usize,
     fov: Vec3,
@@ -621,6 +669,7 @@ impl Server {
             coordinators,
             shards,
             shard_ws_bytes,
+            name: net.name.clone(),
             f_in: net.f_in,
             f_out,
             fov,
@@ -684,15 +733,18 @@ impl Server {
             return Err(Rejected { volume, reason: RejectReason::ShuttingDown });
         }
         let sh = volume.shape();
-        if sh.s != 1 || sh.f != inner.f_in {
-            let detail = format!("expected shape (1, {}, ...), got {}", inner.f_in, sh);
+        if sh.s != 1 {
+            let detail = format!("expected a single volume (s = 1), got {}", sh);
             return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
         }
-        for d in 0..3 {
-            if inner.patch[d] > [sh.x, sh.y, sh.z][d] {
-                let detail = format!("volume {} smaller than patch {:?}", sh, inner.patch);
-                return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
-            }
+        if let Some(detail) = tenant_shape_error(sh, inner.f_in, inner.patch) {
+            let reason = RejectReason::WrongTenantShape {
+                tenant: inner.name.clone(),
+                f_in: inner.f_in,
+                min_extent: inner.patch,
+                detail,
+            };
+            return Err(Rejected { volume, reason });
         }
         let bytes = request_memory_bytes(inner.f_in, inner.f_out, [sh.x, sh.y, sh.z], inner.fov);
         if bytes.saturating_add(inner.shard_ws_bytes) > inner.cfg.memory_budget {
@@ -1132,15 +1184,28 @@ mod tests {
     #[test]
     fn bad_shape_rejected_at_submit() {
         let (net, cp, pool) = setup();
+        let name = net.name.clone();
         let server = Server::start(net, cp, ServerConfig::default(), pool).unwrap();
-        // Wrong feature count.
+        // Wrong feature count: the typed rejection names the tenant and
+        // the shapes it accepts.
         let bad = Tensor5::random(Shape5::new(1, 3, 18, 18, 18), 5);
         let r = server.submit(bad).unwrap_err();
-        assert!(matches!(r.reason, RejectReason::BadShape { .. }));
+        match &r.reason {
+            RejectReason::WrongTenantShape { tenant, f_in, min_extent, .. } => {
+                assert_eq!(tenant, &name);
+                assert_eq!(*f_in, 1);
+                assert_eq!(*min_extent, server.patch());
+            }
+            other => panic!("expected WrongTenantShape, got {other:?}"),
+        }
         assert_eq!(r.volume.shape().f, 3, "volume must come back intact");
         // Smaller than the patch.
         let tiny = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 5);
         let r = server.submit(tiny).unwrap_err();
+        assert!(matches!(r.reason, RejectReason::WrongTenantShape { .. }));
+        // A batched (s > 1) submit is malformed for any tenant.
+        let batched = Tensor5::random(Shape5::new(2, 1, 18, 18, 18), 5);
+        let r = server.submit(batched).unwrap_err();
         assert!(matches!(r.reason, RejectReason::BadShape { .. }));
     }
 

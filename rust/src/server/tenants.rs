@@ -1,0 +1,1018 @@
+//! Multi-tenant serving: several compiled plans — the Table III zoo as
+//! tenants — behind one admission door, one shard set and one device
+//! budget.
+//!
+//! The single-model [`Server`](super::Server) hosts exactly one
+//! [`CompiledPlan`]; mixed-model traffic ("millions of users", several
+//! nets) would need one box per net. [`TenantServer`] generalizes it:
+//!
+//! - **Budget split, not budget rewrite.** Each tenant gets an
+//!   admission *quota* — its slice of the device budget, derived from
+//!   the same Table II [`request_memory_bytes`] currency the
+//!   single-model server admits with (see
+//!   [`crate::optimizer::search_serving_multi`], which sizes shards
+//!   and splits the budget in one call). Admission tracks queued +
+//!   in-flight bytes per tenant; a tenant over its quota is answered
+//!   [`RejectReason::OverQuota`] while every other tenant keeps
+//!   admitting — per-tenant backpressure, never global.
+//! - **Weighted-fair dispatch, strict per-tenant EDF.** Every shard
+//!   keeps one EDF queue *per tenant* and picks the next tenant to
+//!   dispatch by smooth weighted round-robin ([`swrr_pick`]), so a
+//!   weight-2 tenant gets twice the batch slots of a weight-1 tenant
+//!   under saturation while each tenant's own requests still dispatch
+//!   in strict deadline order. Batches never mix tenants (each batch
+//!   runs one tenant's coordinator on that tenant's patch shape).
+//! - **Shared spectra, mixed shapes.** Tenant plans route different
+//!   padded FFT shapes through their layers; the per-shape
+//!   [`crate::conv::precomp::SpectraMap`] keeps every shape class hot
+//!   after its first warm, and memory pressure sheds shapes
+//!   largest-first across all tenants.
+//! - **Per-tenant observability.** [`TenantServer::metrics`] returns a
+//!   full [`ServerMetrics`] per tenant (p50/p99, rejects, occupancy,
+//!   kernel-cache bytes) plus a merged global view.
+//!
+//! Fault tolerance carries over unchanged: shard supervisors catch
+//! batch panics, answer the batch with [`ServeError::Internal`], reset
+//! *every* tenant's arenas on that shard and restart the loop — the
+//! other tenants' queued requests survive untouched.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, InferenceRequest};
+use crate::memory::model::request_memory_bytes;
+use crate::net::NetSpec;
+use crate::optimizer::CompiledPlan;
+use crate::tensor::{Tensor5, Vec3};
+use crate::util::faults::{self, FaultSite};
+use crate::util::pool::TaskPool;
+use crate::util::sync::{recover_lock, recover_wait_timeout};
+
+use super::{
+    edf_le, tenant_shape_error, LatencyRing, Queued, Rejected, RejectReason, ServeError,
+    ServerConfig, ServerMetrics, ShardSnapshot, ShardStats, Ticket, IDLE_WAIT,
+    PRESSURE_CLEAR_STREAK,
+};
+
+/// One tenant: a network, its compiled plan, and its share of the box.
+pub struct Tenant {
+    /// The served network; `net.name` is the tenant id callers submit
+    /// against (must be unique across the tenant set).
+    pub net: NetSpec,
+    /// The tenant's compiled execution plan.
+    pub plan: CompiledPlan,
+    /// Dispatch weight: under saturation a weight-2 tenant receives
+    /// twice the batch slots of a weight-1 tenant.
+    pub weight: u32,
+    /// Admission quota in bytes: the cap on the tenant's queued +
+    /// in-flight Table II request footprint. Derived by
+    /// [`crate::optimizer::search_serving_multi`] as the tenant's slice
+    /// of the device budget.
+    pub quota_bytes: u64,
+}
+
+/// Per-tenant serving state shared by admission and the shard loops.
+struct TenantState {
+    name: String,
+    weight: u32,
+    quota_bytes: u64,
+    f_in: usize,
+    f_out: usize,
+    fov: Vec3,
+    patch: Vec3,
+    /// Queued + in-flight Table II bytes — the quota gauge. Decremented
+    /// by [`InflightGuard::drop`] when a request leaves accounting,
+    /// whatever the exit path (served, expired, failed, disconnected).
+    inflight: Arc<AtomicU64>,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    expired: AtomicU64,
+    completed_late: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batch_requests: AtomicU64,
+    queue_depth_hwm: AtomicUsize,
+    panics: AtomicU64,
+    restarts: AtomicU64,
+    latencies: Mutex<LatencyRing>,
+}
+
+/// Decrements a tenant's in-flight gauge on drop, so quota release is
+/// tied to the request actually leaving the server — no exit path
+/// (response, expiry, batch failure, panic-dropped sender) can leak
+/// quota.
+struct InflightGuard {
+    gauge: Arc<AtomicU64>,
+    bytes: u64,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+/// A queued request plus its quota guard.
+struct TQueued {
+    inner: Queued,
+    guard: InflightGuard,
+}
+
+/// Insert into a per-tenant deadline-sorted queue (EDF with FIFO
+/// tie-breaking, like the single-model server's queue).
+fn edf_insert_t(q: &mut VecDeque<TQueued>, item: TQueued) {
+    let idx = q.partition_point(|x| edf_le(x.inner.deadline, item.inner.deadline));
+    q.insert(idx, item);
+}
+
+/// Smooth weighted round-robin over the backlogged tenants.
+///
+/// Classic nginx-style SWRR: every backlogged tenant's credit grows by
+/// its weight, the highest credit wins the slot, and the winner pays
+/// back the total weight in play. Over any window the slot share of
+/// each continuously-backlogged tenant converges to `weight / Σ
+/// weights`, and consecutive picks interleave (no long monopolies).
+/// Tenants with empty queues neither gain nor pay credit, so an idle
+/// tenant cannot bank an unbounded burst. Returns `None` when nothing
+/// is backlogged.
+fn swrr_pick(credits: &mut [i64], weights: &[u32], backlogged: &[bool]) -> Option<usize> {
+    let mut total = 0i64;
+    let mut best: Option<usize> = None;
+    for t in 0..weights.len() {
+        if !backlogged[t] {
+            continue;
+        }
+        credits[t] += i64::from(weights[t]);
+        total += i64::from(weights[t]);
+        if best.map(|b| credits[t] > credits[b]).unwrap_or(true) {
+            best = Some(t);
+        }
+    }
+    if let Some(b) = best {
+        credits[b] -= total;
+    }
+    best
+}
+
+/// One shard's tenant-partitioned state: an EDF queue and stats row per
+/// tenant, SWRR credits, and the dispatch condvar.
+struct TenantShard {
+    /// One EDF queue per tenant — strict per-tenant deadline order.
+    queues: Vec<Mutex<VecDeque<TQueued>>>,
+    /// Per-tenant shard stats (merged coordinator metrics, steals, …).
+    stats: Vec<Mutex<ShardStats>>,
+    /// SWRR credit per tenant (see [`swrr_pick`]).
+    credits: Mutex<Vec<i64>>,
+    /// Paired with `cvar`; submits take it before notifying so a
+    /// dispatcher checking queues under it cannot miss the wakeup.
+    idle: Mutex<()>,
+    cvar: Condvar,
+}
+
+/// Why a tenant shard loop returned to its supervisor.
+enum TExit {
+    Shutdown,
+    /// A batch of the given tenant panicked; restart with fresh arenas.
+    Restart(usize),
+}
+
+enum TBatchOutcome {
+    Served,
+    Panicked,
+}
+
+struct TenantInner {
+    cfg: ServerConfig,
+    pool: Arc<TaskPool>,
+    tenants: Vec<TenantState>,
+    /// `coordinators[shard][tenant]` — each shard owns one warm-arena
+    /// coordinator per tenant, all sharing that tenant's plan `Arc`.
+    coordinators: Vec<Vec<Coordinator>>,
+    shards: Vec<TenantShard>,
+    /// Σ over tenants of one shard's warm worker arenas — the fixed
+    /// term of every batch admission inequality (all tenants' arenas
+    /// are resident on every shard).
+    shard_ws_bytes: u64,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    rr: AtomicUsize,
+    /// Server-wide micro-batch cap: halved under memory pressure,
+    /// restored as it clears (same half/double policy as the
+    /// single-model server).
+    batch_limit: AtomicUsize,
+    pressured: AtomicBool,
+    clear_streak: AtomicUsize,
+    mem_pressure_events: AtomicU64,
+    shed_cache_bytes: AtomicU64,
+    /// Panics/restarts not attributable to one tenant's batch (a panic
+    /// escaping the dispatch loop itself).
+    orphan_panics: AtomicU64,
+    orphan_restarts: AtomicU64,
+}
+
+/// Per-tenant slice of a [`TenantServerMetrics`] snapshot.
+#[derive(Clone, Debug)]
+pub struct TenantMetrics {
+    /// Tenant id (the network name).
+    pub name: String,
+    /// Dispatch weight.
+    pub weight: u32,
+    /// Admission quota in bytes.
+    pub quota_bytes: u64,
+    /// Queued + in-flight Table II bytes at snapshot time.
+    pub inflight_bytes: u64,
+    /// Full serving metrics for this tenant alone (p50/p99, rejects,
+    /// occupancy, kernel-cache bytes, per-shard rows). Memory-pressure
+    /// gauges are server-wide and reported only on the merged view.
+    pub metrics: ServerMetrics,
+}
+
+/// Snapshot of a [`TenantServer`]: one [`ServerMetrics`] per tenant
+/// plus the merged global view.
+#[derive(Clone, Debug)]
+pub struct TenantServerMetrics {
+    /// Per-tenant metrics, in tenant declaration order.
+    pub tenants: Vec<TenantMetrics>,
+    /// All tenants merged: counters summed, kernel-cache bytes summed
+    /// across the distinct tenant plans, latency percentiles over the
+    /// union of all tenants' samples.
+    pub merged: ServerMetrics,
+}
+
+/// The multi-tenant serving frontend. Construct with
+/// [`TenantServer::start`]; dropping it drains every tenant queue
+/// gracefully and joins the shard threads.
+pub struct TenantServer {
+    inner: Arc<TenantInner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl TenantServer {
+    /// Start `cfg.shards` shard threads over the tenant set. Each shard
+    /// hosts one warm-arena coordinator per tenant; `cfg.queue_depth`
+    /// bounds each *per-tenant* per-shard queue and
+    /// `cfg.memory_budget` bounds one shard's batch (any tenant's
+    /// requests plus *all* tenants' resident arenas). Fails at start —
+    /// never mid-serve — if the budget cannot hold every tenant's warm
+    /// arenas, or on an empty / duplicate-named / zero-weight tenant
+    /// set.
+    pub fn start(tenants: Vec<Tenant>, cfg: ServerConfig, pool: Arc<TaskPool>) -> Result<Self> {
+        if tenants.is_empty() {
+            bail!("tenant server needs at least one tenant");
+        }
+        if cfg.shards == 0 || cfg.queue_depth == 0 || cfg.max_batch_requests == 0 {
+            bail!("server config must have at least one shard, queue slot and batch slot");
+        }
+        for t in &tenants {
+            if t.weight == 0 {
+                bail!("tenant {} has weight 0 — it would never dispatch", t.net.name);
+            }
+            if t.quota_bytes == 0 {
+                bail!("tenant {} has a zero quota — it would never admit", t.net.name);
+            }
+        }
+        for (i, a) in tenants.iter().enumerate() {
+            if tenants[..i].iter().any(|b| b.net.name == a.net.name) {
+                bail!("duplicate tenant name {:?}", a.net.name);
+            }
+        }
+        let shard_workers = (pool.workers() / cfg.shards).max(1);
+        // CompiledPlan owns boxed primitives and is not Clone: each
+        // tenant's plan moves into one Arc shared by every shard.
+        let mut specs = Vec::with_capacity(tenants.len());
+        let mut plans = Vec::with_capacity(tenants.len());
+        let mut shard_ws_bytes = 0u64;
+        for t in tenants {
+            let Tenant { net, plan, weight, quota_bytes } = t;
+            let plan = Arc::new(plan);
+            shard_ws_bytes = shard_ws_bytes
+                .saturating_add(plan.workspace_req(shard_workers).times(shard_workers).total());
+            plans.push(plan);
+            specs.push((net, weight, quota_bytes));
+        }
+        if shard_ws_bytes >= cfg.memory_budget {
+            bail!(
+                "server memory budget {} cannot hold one shard's warm arenas {} across {} \
+                 tenants — no request is admissible",
+                cfg.memory_budget,
+                shard_ws_bytes,
+                specs.len()
+            );
+        }
+        // Spectra build at start, never on a request's critical path;
+        // each tenant's padded shapes land in the layers' per-shape
+        // spectra maps.
+        for plan in &plans {
+            plan.warm_kernel_caches(&pool);
+        }
+        let mut coordinators: Vec<Vec<Coordinator>> = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let mut row = Vec::with_capacity(specs.len());
+            for ((net, _, _), plan) in specs.iter().zip(&plans) {
+                let mut c = Coordinator::with_shared_plan(net.clone(), plan.clone())?;
+                c.workers = shard_workers;
+                row.push(c);
+            }
+            coordinators.push(row);
+        }
+        let states: Vec<TenantState> = specs
+            .iter()
+            .enumerate()
+            .map(|(ti, (net, weight, quota_bytes))| TenantState {
+                name: net.name.clone(),
+                weight: *weight,
+                quota_bytes: *quota_bytes,
+                f_in: net.f_in,
+                f_out: net.f_out(),
+                fov: net.field_of_view(),
+                patch: coordinators[0][ti].patch(),
+                inflight: Arc::new(AtomicU64::new(0)),
+                submitted: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                expired: AtomicU64::new(0),
+                completed_late: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+                batch_requests: AtomicU64::new(0),
+                queue_depth_hwm: AtomicUsize::new(0),
+                panics: AtomicU64::new(0),
+                restarts: AtomicU64::new(0),
+                latencies: Mutex::new(LatencyRing::default()),
+            })
+            .collect();
+        let shards = (0..cfg.shards)
+            .map(|_| TenantShard {
+                queues: (0..states.len()).map(|_| Mutex::new(VecDeque::new())).collect(),
+                stats: (0..states.len()).map(|_| Mutex::new(ShardStats::default())).collect(),
+                credits: Mutex::new(vec![0; states.len()]),
+                idle: Mutex::new(()),
+                cvar: Condvar::new(),
+            })
+            .collect();
+        let max_batch_requests = cfg.max_batch_requests;
+        let inner = Arc::new(TenantInner {
+            cfg,
+            pool,
+            tenants: states,
+            coordinators,
+            shards,
+            shard_ws_bytes,
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            batch_limit: AtomicUsize::new(max_batch_requests),
+            pressured: AtomicBool::new(false),
+            clear_streak: AtomicUsize::new(0),
+            mem_pressure_events: AtomicU64::new(0),
+            shed_cache_bytes: AtomicU64::new(0),
+            orphan_panics: AtomicU64::new(0),
+            orphan_restarts: AtomicU64::new(0),
+        });
+        let handles = (0..inner.cfg.shards)
+            .map(|si| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("znni-tshard{si}"))
+                    .spawn(move || inner.supervise(si))
+                    .expect("spawn tenant shard thread")
+            })
+            .collect();
+        Ok(TenantServer { inner, handles })
+    }
+
+    /// The serving configuration.
+    pub fn config(&self) -> &ServerConfig {
+        &self.inner.cfg
+    }
+
+    /// Tenant names, in declaration order.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.inner.tenants.iter().map(|t| t.name.clone()).collect()
+    }
+
+    /// The patch extent a tenant's shards execute, or `None` for an
+    /// unknown tenant.
+    pub fn patch(&self, tenant: &str) -> Option<Vec3> {
+        self.inner.tenants.iter().find(|t| t.name == tenant).map(|t| t.patch)
+    }
+
+    /// Submit to a tenant with the config's default deadline. Never
+    /// blocks; see [`TenantServer::submit_with_deadline`].
+    pub fn submit(&self, tenant: &str, volume: Tensor5) -> Result<Ticket, Rejected> {
+        self.submit_with_deadline(tenant, volume, self.inner.cfg.default_deadline)
+    }
+
+    /// Submit a volume to the named tenant with an explicit deadline
+    /// (measured from now). Never blocks: shape mismatches come back as
+    /// [`RejectReason::WrongTenantShape`] naming the tenant and its
+    /// accepted shapes, quota exhaustion as
+    /// [`RejectReason::OverQuota`], and full queues as backpressure —
+    /// all with the volume returned intact for retry.
+    pub fn submit_with_deadline(
+        &self,
+        tenant: &str,
+        volume: Tensor5,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, Rejected> {
+        let inner = &*self.inner;
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return Err(Rejected { volume, reason: RejectReason::ShuttingDown });
+        }
+        let Some(ti) = inner.tenants.iter().position(|t| t.name == tenant) else {
+            let known: Vec<&str> = inner.tenants.iter().map(|t| t.name.as_str()).collect();
+            let detail = format!("unknown tenant {tenant:?} (serving {known:?})");
+            return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
+        };
+        let t = &inner.tenants[ti];
+        let sh = volume.shape();
+        if sh.s != 1 {
+            let detail = format!("expected a single volume (s = 1), got {}", sh);
+            return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
+        }
+        if let Some(detail) = tenant_shape_error(sh, t.f_in, t.patch) {
+            t.rejected.fetch_add(1, Ordering::SeqCst);
+            let reason = RejectReason::WrongTenantShape {
+                tenant: t.name.clone(),
+                f_in: t.f_in,
+                min_extent: t.patch,
+                detail,
+            };
+            return Err(Rejected { volume, reason });
+        }
+        let bytes = request_memory_bytes(t.f_in, t.f_out, [sh.x, sh.y, sh.z], t.fov);
+        if bytes.saturating_add(inner.shard_ws_bytes) > inner.cfg.memory_budget {
+            t.rejected.fetch_add(1, Ordering::SeqCst);
+            return Err(Rejected {
+                volume,
+                reason: RejectReason::TooLarge { bytes, budget: inner.cfg.memory_budget },
+            });
+        }
+        if bytes > t.quota_bytes {
+            t.rejected.fetch_add(1, Ordering::SeqCst);
+            return Err(Rejected {
+                volume,
+                reason: RejectReason::TooLarge { bytes, budget: t.quota_bytes },
+            });
+        }
+        // Atomically claim quota: queued + in-flight bytes may not
+        // exceed the tenant's slice of the budget. The claim is
+        // released by the request's InflightGuard on *any* exit path.
+        let mut cur = t.inflight.load(Ordering::SeqCst);
+        loop {
+            if cur.saturating_add(bytes) > t.quota_bytes {
+                t.rejected.fetch_add(1, Ordering::SeqCst);
+                return Err(Rejected {
+                    volume,
+                    reason: RejectReason::OverQuota {
+                        tenant: t.name.clone(),
+                        inflight_bytes: cur,
+                        quota: t.quota_bytes,
+                    },
+                });
+            }
+            match t.inflight.compare_exchange(
+                cur,
+                cur + bytes,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        let guard = InflightGuard { gauge: t.inflight.clone(), bytes };
+        let id = inner.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let mut item = Some(TQueued {
+            inner: Queued {
+                id,
+                volume,
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+                bytes,
+                tx,
+            },
+            guard,
+        });
+        // Round-robin placement with fallback scan over the tenant's
+        // per-shard EDF queues; under memory pressure the effective
+        // depth halves, exactly like the single-model server.
+        let pressured = inner.pressured.load(Ordering::SeqCst);
+        let eff_depth = if pressured {
+            (inner.cfg.queue_depth / 2).max(1)
+        } else {
+            inner.cfg.queue_depth
+        };
+        let start = inner.rr.fetch_add(1, Ordering::SeqCst);
+        for k in 0..inner.shards.len() {
+            let si = (start + k) % inner.shards.len();
+            let shard = &inner.shards[si];
+            let mut q = recover_lock(&shard.queues[ti]);
+            if q.len() < eff_depth {
+                edf_insert_t(&mut q, item.take().unwrap());
+                let depth = q.len();
+                drop(q);
+                t.queue_depth_hwm.fetch_max(depth, Ordering::SeqCst);
+                t.submitted.fetch_add(1, Ordering::SeqCst);
+                // Take the idle lock before notifying: a dispatcher
+                // between its queue check and its wait holds it, so the
+                // wakeup cannot fall between the two.
+                drop(recover_lock(&shard.idle));
+                shard.cvar.notify_one();
+                if depth > 1 && inner.shards.len() > 1 {
+                    let sib = &inner.shards[(si + 1) % inner.shards.len()];
+                    drop(recover_lock(&sib.idle));
+                    sib.cvar.notify_one();
+                }
+                return Ok(Ticket { id, rx });
+            }
+        }
+        t.rejected.fetch_add(1, Ordering::SeqCst);
+        let volume = item.take().unwrap().inner.volume;
+        let reason = if pressured {
+            RejectReason::MemoryPressure { depth: eff_depth }
+        } else {
+            RejectReason::QueueFull { depth: inner.cfg.queue_depth }
+        };
+        Err(Rejected { volume, reason })
+    }
+
+    /// Snapshot per-tenant and merged serving metrics.
+    pub fn metrics(&self) -> TenantServerMetrics {
+        let inner = &*self.inner;
+        let mut tenants = Vec::with_capacity(inner.tenants.len());
+        let mut all_samples: Vec<u64> = Vec::new();
+        for (ti, t) in inner.tenants.iter().enumerate() {
+            let per_shard: Vec<ShardSnapshot> = inner
+                .shards
+                .iter()
+                .map(|sh| {
+                    let st = recover_lock(&sh.stats[ti]);
+                    ShardSnapshot {
+                        batches: st.batches,
+                        requests: st.requests,
+                        steals: st.steals,
+                        expired: st.expired,
+                        panics: st.panics,
+                        restarts: st.restarts,
+                        queue_len: recover_lock(&sh.queues[ti]).len(),
+                        patches: st.metrics.patches,
+                        voxels: st.metrics.voxels,
+                        busy_secs: st.metrics.busy_secs,
+                        arena_hwm_bytes: st.metrics.arena_hwm_bytes,
+                        arena_fresh_allocs: st.metrics.arena_fresh_allocs,
+                        assembly_lock_wait_secs: st.metrics.assembly_lock_wait_secs,
+                        kernel_cache_bytes: st.metrics.kernel_cache_bytes,
+                    }
+                })
+                .collect();
+            let mut samples = recover_lock(&t.latencies).samples_us.clone();
+            all_samples.extend_from_slice(&samples);
+            let [p50, p99] = LatencyRing::percentiles(&mut samples, [0.50, 0.99]);
+            let metrics = ServerMetrics {
+                submitted: t.submitted.load(Ordering::SeqCst),
+                rejected: t.rejected.load(Ordering::SeqCst),
+                expired: t.expired.load(Ordering::SeqCst),
+                completed_late: t.completed_late.load(Ordering::SeqCst),
+                completed: t.completed.load(Ordering::SeqCst),
+                batches: t.batches.load(Ordering::SeqCst),
+                batch_requests: t.batch_requests.load(Ordering::SeqCst),
+                queue_depth_hwm: t.queue_depth_hwm.load(Ordering::SeqCst),
+                queued_now: per_shard.iter().map(|s| s.queue_len).sum(),
+                p50_latency: p50,
+                p99_latency: p99,
+                voxels: per_shard.iter().map(|s| s.voxels).sum(),
+                // One plan shared across shards via Arc: max, not sum.
+                kernel_cache_bytes: inner.coordinators[0][ti].plan().kernel_cache_bytes(),
+                panics: t.panics.load(Ordering::SeqCst),
+                restarts: t.restarts.load(Ordering::SeqCst),
+                mem_pressure_events: 0,
+                shed_kernel_cache_bytes: 0,
+                current_max_batch: inner.batch_limit.load(Ordering::SeqCst),
+                per_shard,
+            };
+            tenants.push(TenantMetrics {
+                name: t.name.clone(),
+                weight: t.weight,
+                quota_bytes: t.quota_bytes,
+                inflight_bytes: t.inflight.load(Ordering::SeqCst),
+                metrics,
+            });
+        }
+        let merged = merge_metrics(&tenants, inner, &mut all_samples);
+        TenantServerMetrics { tenants, merged }
+    }
+}
+
+/// Fold the per-tenant views into one global [`ServerMetrics`]:
+/// counters summed, kernel-cache bytes summed across the distinct
+/// tenant plans, percentiles over the union of latency samples, and
+/// per-shard rows aggregated across tenants.
+fn merge_metrics(
+    tenants: &[TenantMetrics],
+    inner: &TenantInner,
+    all_samples: &mut [u64],
+) -> ServerMetrics {
+    let [p50, p99] = LatencyRing::percentiles(all_samples, [0.50, 0.99]);
+    let shards = inner.cfg.shards;
+    let mut per_shard = vec![ShardSnapshot::default(); shards];
+    for tm in tenants {
+        for (agg, s) in per_shard.iter_mut().zip(&tm.metrics.per_shard) {
+            agg.batches += s.batches;
+            agg.requests += s.requests;
+            agg.steals += s.steals;
+            agg.expired += s.expired;
+            agg.panics += s.panics;
+            agg.restarts += s.restarts;
+            agg.queue_len += s.queue_len;
+            agg.patches += s.patches;
+            agg.voxels += s.voxels;
+            agg.busy_secs += s.busy_secs;
+            agg.arena_hwm_bytes = agg.arena_hwm_bytes.max(s.arena_hwm_bytes);
+            agg.arena_fresh_allocs += s.arena_fresh_allocs;
+            agg.assembly_lock_wait_secs += s.assembly_lock_wait_secs;
+            agg.kernel_cache_bytes += s.kernel_cache_bytes;
+        }
+    }
+    let sum = |f: fn(&ServerMetrics) -> u64| tenants.iter().map(|t| f(&t.metrics)).sum::<u64>();
+    ServerMetrics {
+        submitted: sum(|m| m.submitted),
+        rejected: sum(|m| m.rejected),
+        expired: sum(|m| m.expired),
+        completed_late: sum(|m| m.completed_late),
+        completed: sum(|m| m.completed),
+        batches: sum(|m| m.batches),
+        batch_requests: sum(|m| m.batch_requests),
+        queue_depth_hwm: tenants.iter().map(|t| t.metrics.queue_depth_hwm).max().unwrap_or(0),
+        queued_now: tenants.iter().map(|t| t.metrics.queued_now).sum(),
+        p50_latency: p50,
+        p99_latency: p99,
+        voxels: sum(|m| m.voxels),
+        // Distinct plans per tenant: the global cache footprint is the
+        // sum of the tenants' (per-plan max) reports.
+        kernel_cache_bytes: tenants.iter().map(|t| t.metrics.kernel_cache_bytes).sum(),
+        panics: sum(|m| m.panics) + inner.orphan_panics.load(Ordering::SeqCst),
+        restarts: sum(|m| m.restarts) + inner.orphan_restarts.load(Ordering::SeqCst),
+        mem_pressure_events: inner.mem_pressure_events.load(Ordering::SeqCst),
+        shed_kernel_cache_bytes: inner.shed_cache_bytes.load(Ordering::SeqCst),
+        current_max_batch: inner.batch_limit.load(Ordering::SeqCst),
+        per_shard,
+    }
+}
+
+impl Drop for TenantServer {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for sh in &self.inner.shards {
+            drop(recover_lock(&sh.idle));
+            sh.cvar.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl TenantInner {
+    /// Shard supervisor, mirroring the single-model server's: restart
+    /// the loop after a batch panic, resetting *every* tenant's arenas
+    /// on this shard so the restarted loop re-warms a consistent set.
+    fn supervise(&self, si: usize) {
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| self.shard_loop(si))) {
+                Ok(TExit::Shutdown) => return,
+                Ok(TExit::Restart(ti)) => {
+                    self.tenants[ti].restarts.fetch_add(1, Ordering::SeqCst);
+                    recover_lock(&self.shards[si].stats[ti]).restarts += 1;
+                }
+                Err(_) => {
+                    // A panic escaped run_batch's isolation; dropped
+                    // Queued senders resolve their tickets Disconnected
+                    // and dropped InflightGuards release their quota.
+                    self.orphan_panics.fetch_add(1, Ordering::SeqCst);
+                    self.orphan_restarts.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            for c in &self.coordinators[si] {
+                c.reset_arenas();
+            }
+        }
+    }
+
+    /// Pick the next (tenant, request) from this shard's local queues
+    /// by SWRR over the backlogged tenants; strict EDF within the
+    /// winning tenant's queue.
+    fn try_pick_local(&self, si: usize) -> Option<(usize, TQueued)> {
+        let shard = &self.shards[si];
+        let n = self.tenants.len();
+        let mut backlogged = vec![false; n];
+        for (t, b) in backlogged.iter_mut().enumerate() {
+            *b = !recover_lock(&shard.queues[t]).is_empty();
+        }
+        let weights: Vec<u32> = self.tenants.iter().map(|t| t.weight).collect();
+        let pick = {
+            let mut credits = recover_lock(&shard.credits);
+            swrr_pick(&mut credits, &weights, &backlogged)?
+        };
+        // A sibling may have stolen the last item between the peek and
+        // this pop; the caller just retries.
+        recover_lock(&shard.queues[pick]).pop_front().map(|q| (pick, q))
+    }
+
+    /// Steal one request from a sibling shard's queue tails — least
+    /// urgent work first, scanning tenants in SWRR-agnostic order (the
+    /// stolen request still dispatches under its own tenant's plan).
+    fn try_steal(&self, si: usize) -> Option<(usize, TQueued)> {
+        let n = self.shards.len();
+        for k in 1..n {
+            let vi = (si + k) % n;
+            for t in 0..self.tenants.len() {
+                let stolen = recover_lock(&self.shards[vi].queues[t]).pop_back();
+                if let Some(q) = stolen {
+                    recover_lock(&self.shards[si].stats[t]).steals += 1;
+                    return Some((t, q));
+                }
+            }
+        }
+        None
+    }
+
+    fn any_local(&self, si: usize) -> bool {
+        let shard = &self.shards[si];
+        shard.queues.iter().any(|q| !recover_lock(q).is_empty())
+    }
+
+    /// Block until a request is available (own queues, then steal).
+    /// Returns `None` on shutdown once every queue this shard can reach
+    /// is drained.
+    fn next_request(&self, si: usize) -> Option<(usize, TQueued)> {
+        loop {
+            if let Some(p) = self.try_pick_local(si) {
+                return Some(p);
+            }
+            if let Some(p) = self.try_steal(si) {
+                return Some(p);
+            }
+            let shard = &self.shards[si];
+            let guard = recover_lock(&shard.idle);
+            if self.any_local(si) {
+                continue;
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let (g, _) = recover_wait_timeout(&shard.cvar, guard, IDLE_WAIT);
+            drop(g);
+        }
+    }
+
+    fn shard_loop(&self, si: usize) -> TExit {
+        loop {
+            let Some((ti, first)) = self.next_request(si) else { return TExit::Shutdown };
+            let mut batch_bytes = first.inner.bytes;
+            let mut batch = vec![first];
+            let wait_until = Instant::now() + self.cfg.max_batch_wait;
+            let limit =
+                self.batch_limit.load(Ordering::SeqCst).clamp(1, self.cfg.max_batch_requests);
+            // Coalesce only from the *same tenant's* local queue —
+            // batches never mix tenants (one coordinator, one patch
+            // shape per batch).
+            while batch.len() < limit {
+                let popped = recover_lock(&self.shards[si].queues[ti]).pop_front();
+                match popped {
+                    Some(q) => {
+                        if batch_bytes
+                            .saturating_add(q.inner.bytes)
+                            .saturating_add(self.shard_ws_bytes)
+                            > self.cfg.memory_budget
+                        {
+                            edf_insert_t(&mut recover_lock(&self.shards[si].queues[ti]), q);
+                            break;
+                        }
+                        batch_bytes += q.inner.bytes;
+                        batch.push(q);
+                    }
+                    None => {
+                        let now = Instant::now();
+                        if now >= wait_until || self.shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let shard = &self.shards[si];
+                        let guard = recover_lock(&shard.idle);
+                        if recover_lock(&shard.queues[ti]).is_empty() {
+                            let (g, _) =
+                                recover_wait_timeout(&shard.cvar, guard, wait_until - now);
+                            drop(g);
+                        }
+                    }
+                }
+            }
+            if let TBatchOutcome::Panicked = self.run_batch(si, ti, batch) {
+                return TExit::Restart(ti);
+            }
+        }
+    }
+
+    /// Memory-pressure probe (same policy as the single-model server):
+    /// halve the batch cap and shed the largest kernel-spectra shape
+    /// across *all* tenants' plans; restore once a pressure-free streak
+    /// brings the cap back to full.
+    fn check_pressure(&self) {
+        let injected = faults::fire_reserve(FaultSite::ArenaTake);
+        let budget = self.cfg.memory_budget.saturating_mul(self.cfg.shards as u64);
+        let over = budget < u64::MAX && crate::memory::current() > budget;
+        if injected || over {
+            self.mem_pressure_events.fetch_add(1, Ordering::SeqCst);
+            self.pressured.store(true, Ordering::SeqCst);
+            self.clear_streak.store(0, Ordering::SeqCst);
+            let cur = self.batch_limit.load(Ordering::SeqCst);
+            self.batch_limit.store((cur / 2).max(1), Ordering::SeqCst);
+            // Shed from the tenant holding the most resident spectra.
+            let fattest = (0..self.tenants.len())
+                .max_by_key(|&t| self.coordinators[0][t].plan().kernel_cache_bytes());
+            if let Some(t) = fattest {
+                let shed = self.coordinators[0][t].plan().shed_largest_kernel_cache();
+                if shed > 0 {
+                    self.shed_cache_bytes.fetch_add(shed, Ordering::SeqCst);
+                }
+            }
+        } else if self.pressured.load(Ordering::SeqCst) {
+            let streak = self.clear_streak.fetch_add(1, Ordering::SeqCst) + 1;
+            if streak >= PRESSURE_CLEAR_STREAK {
+                self.clear_streak.store(0, Ordering::SeqCst);
+                let cur = self.batch_limit.load(Ordering::SeqCst);
+                let next = (cur.saturating_mul(2)).clamp(1, self.cfg.max_batch_requests);
+                self.batch_limit.store(next, Ordering::SeqCst);
+                if next >= self.cfg.max_batch_requests {
+                    self.pressured.store(false, Ordering::SeqCst);
+                    for t in 0..self.tenants.len() {
+                        self.coordinators[0][t].plan().restore_kernel_caches();
+                    }
+                }
+            }
+        }
+    }
+
+    fn run_batch(&self, si: usize, ti: usize, batch: Vec<TQueued>) -> TBatchOutcome {
+        self.check_pressure();
+        let tenant = &self.tenants[ti];
+        let now = Instant::now();
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut metas = Vec::with_capacity(batch.len());
+        let mut expired_here = 0u64;
+        for tq in batch {
+            let q = tq.inner;
+            if let Some(d) = q.deadline {
+                if now > d {
+                    expired_here += 1;
+                    tenant.expired.fetch_add(1, Ordering::SeqCst);
+                    let waited = q.enqueued.elapsed();
+                    // Quota released before the reply: a client that
+                    // retries on expiry never races its own guard.
+                    drop(tq.guard);
+                    let _ = q.tx.send(Err(ServeError::DeadlineExceeded { waited }));
+                    continue;
+                }
+            }
+            reqs.push(InferenceRequest { id: q.id, volume: q.volume });
+            metas.push((q.tx, q.enqueued, q.deadline, tq.guard));
+        }
+        if expired_here > 0 {
+            recover_lock(&self.shards[si].stats[ti]).expired += expired_here;
+        }
+        if reqs.is_empty() {
+            return TBatchOutcome::Served;
+        }
+        let n = reqs.len();
+        let served = catch_unwind(AssertUnwindSafe(|| {
+            faults::fire(FaultSite::ShardDispatch);
+            self.coordinators[si][ti].serve(reqs, &self.pool)
+        }));
+        match served {
+            Ok(Ok((resps, m))) => {
+                tenant.batches.fetch_add(1, Ordering::SeqCst);
+                tenant.batch_requests.fetch_add(n as u64, Ordering::SeqCst);
+                {
+                    let mut st = recover_lock(&self.shards[si].stats[ti]);
+                    st.batches += 1;
+                    st.requests += n as u64;
+                    st.metrics.merge(&m);
+                }
+                let done = Instant::now();
+                for (mut resp, (tx, enqueued, deadline, guard)) in resps.into_iter().zip(metas) {
+                    let lat = done.duration_since(enqueued);
+                    resp.latency = lat;
+                    if deadline.map(|d| done > d).unwrap_or(false) {
+                        tenant.completed_late.fetch_add(1, Ordering::SeqCst);
+                    }
+                    recover_lock(&tenant.latencies).record(lat.as_micros() as u64);
+                    tenant.completed.fetch_add(1, Ordering::SeqCst);
+                    // Release quota before waking the client: whoever
+                    // sees the response also sees the freed bytes.
+                    drop(guard);
+                    let _ = tx.send(Ok(resp));
+                }
+                TBatchOutcome::Served
+            }
+            Ok(Err(e)) => {
+                let msg = e.to_string();
+                for (tx, _, _, guard) in metas {
+                    drop(guard);
+                    let _ = tx.send(Err(ServeError::Failed(msg.clone())));
+                }
+                TBatchOutcome::Served
+            }
+            Err(payload) => {
+                let msg = faults::panic_message(payload.as_ref()).unwrap_or("panic");
+                let site = faults::site_of_panic(msg)
+                    .map(|s| s.name().to_string())
+                    .unwrap_or_else(|| msg.to_string());
+                tenant.panics.fetch_add(1, Ordering::SeqCst);
+                recover_lock(&self.shards[si].stats[ti]).panics += 1;
+                for (tx, _, _, guard) in metas {
+                    drop(guard);
+                    let _ = tx.send(Err(ServeError::Internal { site: site.clone() }));
+                }
+                TBatchOutcome::Panicked
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulate a saturated shard: every tenant always backlogged.
+    fn swrr_rounds(weights: &[u32], rounds: usize) -> Vec<usize> {
+        let mut credits = vec![0i64; weights.len()];
+        let backlogged = vec![true; weights.len()];
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..rounds {
+            let pick = swrr_pick(&mut credits, weights, &backlogged).unwrap();
+            counts[pick] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn swrr_is_weight_proportional_under_saturation() {
+        let counts = swrr_rounds(&[1, 2, 1], 400);
+        assert_eq!(counts.iter().sum::<usize>(), 400);
+        assert_eq!(counts[1], 200, "weight-2 tenant gets exactly half the slots");
+        assert_eq!(counts[0], 100);
+        assert_eq!(counts[2], 100);
+    }
+
+    #[test]
+    fn swrr_interleaves_rather_than_monopolizes() {
+        // With weights [1, 3] the heavy tenant must not take runs of 3
+        // followed by starving the light one beyond its share window:
+        // in any 4 consecutive slots the light tenant appears once.
+        let mut credits = vec![0i64; 2];
+        let backlogged = vec![true; 2];
+        let picks: Vec<usize> =
+            (0..40).map(|_| swrr_pick(&mut credits, &[1, 3], &backlogged).unwrap()).collect();
+        for w in picks.windows(4) {
+            assert!(w.contains(&0), "light tenant starved in window {w:?}");
+            assert!(w.contains(&1), "heavy tenant starved in window {w:?}");
+        }
+    }
+
+    #[test]
+    fn swrr_skips_idle_tenants_without_banking_credit() {
+        let weights = [1, 1];
+        let mut credits = vec![0i64; 2];
+        // Tenant 1 idle for many rounds: tenant 0 wins every slot.
+        for _ in 0..10 {
+            assert_eq!(swrr_pick(&mut credits, &weights, &[true, false]), Some(0));
+        }
+        // Once tenant 1 backlogs it gets its fair share immediately but
+        // no compensation burst: over the next 10 slots, 5 each.
+        let mut counts = [0usize; 2];
+        for _ in 0..10 {
+            counts[swrr_pick(&mut credits, &weights, &[true, true]).unwrap()] += 1;
+        }
+        assert_eq!(counts, [5, 5]);
+        // Nothing backlogged → no pick, no credit drift.
+        assert_eq!(swrr_pick(&mut credits, &weights, &[false, false]), None);
+    }
+
+    #[test]
+    fn inflight_guard_releases_on_drop() {
+        let gauge = Arc::new(AtomicU64::new(0));
+        gauge.fetch_add(100, Ordering::SeqCst);
+        let g = InflightGuard { gauge: gauge.clone(), bytes: 100 };
+        assert_eq!(gauge.load(Ordering::SeqCst), 100);
+        drop(g);
+        assert_eq!(gauge.load(Ordering::SeqCst), 0);
+    }
+}

@@ -23,9 +23,10 @@ use std::time::Duration;
 
 use znni::conv::Weights;
 use znni::device::Device;
-use znni::memory::model::ConvAlgo;
+use znni::memory::model::{request_memory_bytes, ConvAlgo};
 use znni::net::NetSpec;
 use znni::optimizer::{compile, make_weights, search, CostModel, Plan, SearchSpace};
+use znni::server::tenants::{Tenant, TenantServer};
 use znni::server::{RejectReason, ServeError, Server, ServerConfig};
 use znni::tensor::{Shape5, Tensor5};
 use znni::util::faults;
@@ -394,4 +395,111 @@ fn chaos_env_faults() {
     server.submit(mk(9999)).unwrap().wait().expect("post-chaos serve");
     let m = server.metrics();
     assert_eq!(m.completed, served + 1);
+}
+
+#[test]
+fn chaos_env_faults_two_tenants() {
+    let _g = serial();
+
+    // CI sweeps real configs through the environment (including a mix
+    // targeting shard restarts with two tenants loaded); locally a
+    // restart-heavy default keeps the test meaningful.
+    let spec = std::env::var("ZNNI_FAULTS")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .unwrap_or_else(|| "shard_dispatch:panic:0.2:23,arena_take:reserve_fail:0.2:13".into());
+
+    // Two zoo miniatures as tenants of one supervised server, with
+    // distinct SWRR weights so the weighted dispatch path runs too.
+    let minis = znni::net::zoo::bench_miniatures();
+    let nets = vec![minis[0].clone(), minis[1].clone()];
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 19);
+    space.max_candidates = 2;
+    let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 }));
+    let mkv = |seed: u64| Tensor5::random(Shape5::new(1, 1, 20, 20, 20), seed);
+    let mut tenants = Vec::new();
+    for (i, net) in nets.iter().enumerate() {
+        let plan = search(net, &space, &cm).expect("feasible plan");
+        let w = make_weights(net, 31 + i as u64);
+        let rb = request_memory_bytes(net.f_in, net.f_out(), [20; 3], net.field_of_view());
+        tenants.push(Tenant {
+            net: net.clone(),
+            plan: compile(net, &plan, &w).unwrap(),
+            weight: (i + 1) as u32,
+            quota_bytes: rb * 8,
+        });
+    }
+    let cfg = ServerConfig {
+        shards: 2,
+        queue_depth: 4,
+        max_batch_requests: 2,
+        ..ServerConfig::default()
+    };
+    let server = TenantServer::start(tenants, cfg, pool).unwrap();
+    faults::install_str(&spec).expect("ZNNI_FAULTS spec must parse");
+
+    // Closed-loop clients for BOTH tenants under chaos. Liveness with
+    // typed outcomes, per tenant: every request resolves as an output
+    // or a typed error; quota claims leak on no path, whatever panics.
+    let (served, errored) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ti, net) in nets.iter().enumerate() {
+            for c in 0..3u64 {
+                let server = &server;
+                let name = net.name.as_str();
+                handles.push(s.spawn(move || {
+                    let mut served = 0u64;
+                    let mut errored = 0u64;
+                    for r in 0..4u64 {
+                        let mut vol = mkv(2000 + ti as u64 * 500 + c * 100 + r);
+                        let mut attempts = 0u32;
+                        loop {
+                            match server.submit(name, vol) {
+                                Ok(t) => {
+                                    match t.wait() {
+                                        Ok(_) => served += 1,
+                                        Err(_) => errored += 1,
+                                    }
+                                    break;
+                                }
+                                Err(rej) => {
+                                    attempts += 1;
+                                    assert!(
+                                        attempts < 10_000,
+                                        "{name}: admission livelock under {:?}",
+                                        rej.reason
+                                    );
+                                    vol = rej.volume;
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                            }
+                        }
+                    }
+                    (served, errored)
+                }));
+            }
+        }
+        let mut served = 0u64;
+        let mut errored = 0u64;
+        for h in handles {
+            let (s_ok, s_err) = h.join().unwrap();
+            served += s_ok;
+            errored += s_err;
+        }
+        (served, errored)
+    });
+    assert_eq!(served + errored, 24, "every request must resolve exactly once");
+
+    // After the storm: disarm; BOTH tenants still serve clean, and no
+    // tenant's quota claim leaked through a panic or restart.
+    faults::clear();
+    for net in &nets {
+        server.submit(&net.name, mkv(9999)).unwrap().wait().expect("post-chaos serve");
+    }
+    let m = server.metrics();
+    assert_eq!(m.merged.completed, served + 2);
+    for t in &m.tenants {
+        assert_eq!(t.inflight_bytes, 0, "{}: quota fully released after chaos", t.name);
+    }
 }

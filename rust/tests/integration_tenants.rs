@@ -1,0 +1,310 @@
+//! Multi-tenant serving, end to end:
+//!
+//! * two zoo miniatures served concurrently from ONE `TenantServer`
+//!   produce outputs **bit-identical** to each tenant's own serial
+//!   `Coordinator::serve` run;
+//! * per-tenant admission quotas are enforced: an over-quota tenant is
+//!   rejected with `OverQuota` (volume returned) while the other
+//!   tenant keeps admitting;
+//! * after warmup, steady-state serving with every tenant resident
+//!   performs **zero** transient arena allocations;
+//! * shape mismatches come back as `WrongTenantShape` naming the
+//!   tenant and the shapes it accepts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use znni::conv::Weights;
+use znni::coordinator::{Coordinator, InferenceRequest};
+use znni::device::Device;
+use znni::memory::model::request_memory_bytes;
+use znni::net::NetSpec;
+use znni::optimizer::{compile, make_weights, search, CostModel, Plan, SearchSpace};
+use znni::server::tenants::{Tenant, TenantServer};
+use znni::server::{RejectReason, ServerConfig};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::pool::{ChipTopology, TaskPool};
+
+const EXTENT: usize = 20;
+
+/// mini337 (FoV 15) and mini537 (FoV 18): two real zoo architectures
+/// small enough for CI, big enough to have different patch shapes.
+fn setup() -> (Vec<NetSpec>, Vec<Plan>, Arc<TaskPool>) {
+    let minis = znni::net::zoo::bench_miniatures();
+    let nets = vec![minis[0].clone(), minis[1].clone()];
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 19);
+    space.max_candidates = 2;
+    let plans = nets.iter().map(|n| search(n, &space, &cm).expect("feasible plan")).collect();
+    let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 }));
+    (nets, plans, pool)
+}
+
+fn mk(seed: u64) -> Tensor5 {
+    Tensor5::random(Shape5::new(1, 1, EXTENT, EXTENT, EXTENT), seed)
+}
+
+/// The admission currency: what one EXTENT³ request costs this net.
+fn request_bytes(net: &NetSpec) -> u64 {
+    request_memory_bytes(net.f_in, net.f_out(), [EXTENT; 3], net.field_of_view())
+}
+
+fn tenant_weights(nets: &[NetSpec]) -> Vec<Vec<Arc<Weights>>> {
+    nets.iter().enumerate().map(|(i, n)| make_weights(n, 21 + i as u64)).collect()
+}
+
+fn build_tenants(
+    nets: &[NetSpec],
+    plans: &[Plan],
+    weights: &[Vec<Arc<Weights>>],
+    quotas: &[u64],
+) -> Vec<Tenant> {
+    nets.iter()
+        .zip(plans)
+        .zip(weights)
+        .zip(quotas)
+        .map(|(((net, plan), w), &quota_bytes)| Tenant {
+            net: net.clone(),
+            plan: compile(net, plan, w).unwrap(),
+            weight: 1,
+            quota_bytes,
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_tenants_bit_identical_to_single_tenant_serial() {
+    let (nets, plans, pool) = setup();
+    let weights = tenant_weights(&nets);
+
+    // Per-tenant serial reference: one request per serve call.
+    let mut expect: Vec<Vec<Tensor5>> = Vec::new();
+    for (ti, (net, plan)) in nets.iter().zip(&plans).enumerate() {
+        let serial =
+            Coordinator::new(net.clone(), compile(net, plan, &weights[ti]).unwrap()).unwrap();
+        let mut outs = Vec::new();
+        for i in 0..4u64 {
+            let req = InferenceRequest { id: i, volume: mk(ti as u64 * 100 + i) };
+            let (r, _) = serial.serve(vec![req], &pool).unwrap();
+            outs.push(r.into_iter().next().unwrap().output);
+        }
+        expect.push(outs);
+    }
+
+    // One server, both tenants, eight concurrent clients (four each),
+    // micro-batching on.
+    let quotas: Vec<u64> = nets.iter().map(|n| request_bytes(n) * 8).collect();
+    let cfg = ServerConfig {
+        shards: 2,
+        queue_depth: 4,
+        max_batch_requests: 3,
+        ..ServerConfig::default()
+    };
+    let server =
+        TenantServer::start(build_tenants(&nets, &plans, &weights, &quotas), cfg, pool).unwrap();
+    assert_eq!(server.tenant_names(), vec!["mini337".to_string(), "mini537".to_string()]);
+    let outputs: Vec<(usize, u64, Tensor5)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for ti in 0..nets.len() {
+            for i in 0..4u64 {
+                let server = &server;
+                let name = nets[ti].name.as_str();
+                handles.push(s.spawn(move || {
+                    let mut vol = mk(ti as u64 * 100 + i);
+                    loop {
+                        match server.submit(name, vol) {
+                            Ok(t) => return (ti, i, t.wait().expect("serve failed").output),
+                            Err(rej) => {
+                                assert!(
+                                    matches!(
+                                        rej.reason,
+                                        RejectReason::QueueFull { .. }
+                                            | RejectReason::OverQuota { .. }
+                                    ),
+                                    "unexpected rejection: {:?}",
+                                    rej.reason
+                                );
+                                vol = rej.volume;
+                                std::thread::sleep(Duration::from_micros(100));
+                            }
+                        }
+                    }
+                }));
+            }
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (ti, i, got) in &outputs {
+        assert_eq!(
+            got.data(),
+            expect[*ti][*i as usize].data(),
+            "tenant {} request {i}: multi-tenant output diverged from its single-tenant run",
+            nets[*ti].name
+        );
+    }
+    let m = server.metrics();
+    assert_eq!(m.merged.completed, 8);
+    for (ti, net) in nets.iter().enumerate() {
+        assert_eq!(m.tenants[ti].name, net.name);
+        assert_eq!(m.tenants[ti].metrics.completed, 4, "{}", net.name);
+        assert_eq!(
+            m.tenants[ti].inflight_bytes, 0,
+            "{}: quota fully released once served",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn over_quota_tenant_rejected_while_other_still_admits() {
+    let (nets, plans, pool) = setup();
+    let weights = tenant_weights(&nets);
+    // Tenant 0 gets a quota of exactly ONE request; tenant 1 is
+    // generous. Quota counts queued + in-flight bytes and is released
+    // only when the response (and its guard) is dropped, so a rapid
+    // burst must overrun tenant 0's quota deterministically.
+    let quotas = vec![request_bytes(&nets[0]), request_bytes(&nets[1]) * 32];
+    let cfg = ServerConfig { shards: 1, queue_depth: 16, ..ServerConfig::default() };
+    let server =
+        TenantServer::start(build_tenants(&nets, &plans, &weights, &quotas), cfg, pool).unwrap();
+
+    let mut tickets = Vec::new();
+    let mut over_quota = 0u64;
+    for i in 0..10u64 {
+        // Interleave: tenant 1 must keep admitting while tenant 0 is
+        // over quota.
+        match server.submit(&nets[0].name, mk(i)) {
+            Ok(t) => tickets.push(t),
+            Err(rej) => {
+                match &rej.reason {
+                    RejectReason::OverQuota { tenant, inflight_bytes, quota } => {
+                        assert_eq!(tenant, &nets[0].name);
+                        assert_eq!(*quota, quotas[0]);
+                        assert!(*inflight_bytes > 0, "rejection implies resident bytes");
+                    }
+                    other => panic!("expected OverQuota, got {other:?}"),
+                }
+                assert_eq!(rej.volume.shape(), mk(0).shape(), "volume returned intact");
+                over_quota += 1;
+            }
+        }
+        let t = server
+            .submit(&nets[1].name, mk(100 + i))
+            .expect("generous-quota tenant must admit while the other is over quota");
+        tickets.push(t);
+    }
+    assert!(over_quota > 0, "a burst of 10 must overrun a one-request quota");
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.tenants[1].metrics.completed, 10, "every admitted request completes");
+    assert_eq!(m.tenants[1].metrics.rejected, 0, "tenant isolation: no collateral rejects");
+    assert_eq!(m.tenants[0].metrics.rejected, over_quota);
+    assert_eq!(m.tenants[0].metrics.completed + over_quota, 10);
+    assert_eq!(m.tenants[0].inflight_bytes, 0);
+    assert_eq!(m.tenants[1].inflight_bytes, 0);
+}
+
+#[test]
+fn steady_state_multi_tenant_is_allocation_free_after_warmup() {
+    let (nets, plans, pool) = setup();
+    let weights = tenant_weights(&nets);
+    let quotas: Vec<u64> = nets.iter().map(|n| request_bytes(n) * 8).collect();
+    let cfg = ServerConfig { shards: 2, queue_depth: 16, ..ServerConfig::default() };
+    let server =
+        TenantServer::start(build_tenants(&nets, &plans, &weights, &quotas), cfg, pool).unwrap();
+    let fresh = |server: &TenantServer| -> u64 {
+        server.metrics().merged.per_shard.iter().map(|s| s.arena_fresh_allocs).sum()
+    };
+
+    // Warm until one full round (two requests per tenant, spread over
+    // the shards) causes no fresh allocations.
+    let mut warmed = false;
+    for round in 0..12u64 {
+        let before = fresh(&server);
+        let tickets: Vec<_> = nets
+            .iter()
+            .enumerate()
+            .flat_map(|(ti, net)| {
+                (0..2u64).map(move |i| (net.name.clone(), ti as u64 * 100 + round * 10 + i))
+            })
+            .map(|(name, seed)| server.submit(&name, mk(seed)).unwrap())
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        if round > 0 && fresh(&server) == before {
+            warmed = true;
+            break;
+        }
+    }
+    assert!(warmed, "multi-tenant server never reached an allocation-free steady state");
+
+    // The steady state must hold across a further mixed round.
+    let before = fresh(&server);
+    let tickets: Vec<_> = (0..3u64)
+        .flat_map(|i| nets.iter().map(move |n| (n.name.clone(), 900 + i)))
+        .map(|(name, seed)| server.submit(&name, mk(seed)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    assert_eq!(
+        fresh(&server),
+        before,
+        "steady-state multi-tenant serving must perform zero transient allocations"
+    );
+}
+
+#[test]
+fn wrong_shape_and_unknown_tenant_are_typed_rejections() {
+    let (nets, plans, pool) = setup();
+    let weights = tenant_weights(&nets);
+    let quotas: Vec<u64> = nets.iter().map(|n| request_bytes(n) * 4).collect();
+    let cfg = ServerConfig::default();
+    let server =
+        TenantServer::start(build_tenants(&nets, &plans, &weights, &quotas), cfg, pool).unwrap();
+
+    // Wrong channel count: the rejection names the tenant and the
+    // shapes it accepts.
+    let bad_f = Tensor5::random(Shape5::new(1, 2, EXTENT, EXTENT, EXTENT), 0);
+    match server.submit("mini337", bad_f) {
+        Err(rej) => match rej.reason {
+            RejectReason::WrongTenantShape { tenant, f_in, min_extent, .. } => {
+                assert_eq!(tenant, "mini337");
+                assert_eq!(f_in, nets[0].f_in);
+                assert_eq!(Some(min_extent), server.patch("mini337"));
+            }
+            other => panic!("expected WrongTenantShape, got {other:?}"),
+        },
+        Ok(_) => panic!("wrong channel count must be rejected"),
+    }
+
+    // Volume smaller than the tenant's patch.
+    let tiny = Tensor5::random(Shape5::new(1, 1, 4, 4, 4), 0);
+    match server.submit("mini537", tiny) {
+        Err(rej) => assert!(
+            matches!(rej.reason, RejectReason::WrongTenantShape { ref tenant, .. }
+                if tenant == "mini537"),
+            "expected WrongTenantShape for mini537, got {:?}",
+            rej.reason
+        ),
+        Ok(_) => panic!("undersized volume must be rejected"),
+    }
+
+    // Unknown tenant: typed rejection listing who IS being served.
+    match server.submit("n926", mk(0)) {
+        Err(rej) => match rej.reason {
+            RejectReason::BadShape { detail } => {
+                assert!(detail.contains("n926") && detail.contains("mini337"), "{detail}");
+            }
+            other => panic!("expected BadShape for unknown tenant, got {other:?}"),
+        },
+        Ok(_) => panic!("unknown tenant must be rejected"),
+    }
+    // Nothing above admitted: no quota is held.
+    for t in &server.metrics().tenants {
+        assert_eq!(t.inflight_bytes, 0);
+    }
+}
