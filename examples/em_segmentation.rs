@@ -117,6 +117,7 @@ fn main() -> anyhow::Result<()> {
                 znni::net::LayerSpec::Conv { .. } => znni::optimizer::PlanLayer::Conv {
                     algo: znni::memory::model::ConvAlgo::DirectMkl,
                     cache_kernels: false,
+                    precision: znni::precision::Precision::F32,
                 },
                 znni::net::LayerSpec::Pool { .. } => znni::optimizer::PlanLayer::Pool {
                     mode: PoolingMode::MaxPool,

@@ -1,0 +1,146 @@
+//! Reduced-precision storage (f16 / bf16) vs the f32 baseline under a
+//! tight memory budget (ISSUE 9).
+//!
+//! The paper's thesis is that throughput is RAM-bound (§V): halving the
+//! bytes at rest buys either twice the resident kernel spectra or a
+//! bigger patch under the same Table II budget. This bench makes that
+//! trade visible end to end. It first finds a roomy f32 plan for
+//! `tiny_net` at 4 GiB, then re-runs the optimizer search under *half*
+//! that plan's memory for each `ZNNI_PRECISION` mode (`f32`, `f16`,
+//! `bf16`, `auto`) and reports, per mode:
+//!
+//! * the achievable patch extent the search settles on,
+//! * the resident kernel-spectra row (halved by the half formats),
+//! * the plan's estimated memory, and
+//! * measured warm throughput (output voxels/s) through the compiled
+//!   plan — including the real widen/narrow conversion cost the
+//!   optimizer only models.
+//!
+//! Results go to stdout and `BENCH_precision.json` (default
+//! `../BENCH_precision.json`, i.e. the repository root when run via
+//! `cargo bench --bench precision`; override with `ZNNI_BENCH_OUT`).
+
+use std::time::Duration;
+
+use znni::conv::precomp::{force_cache_mode, CacheMode};
+use znni::device::Device;
+use znni::exec::ExecCtx;
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::tiny_net;
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::precision::{force_precision_mode, PrecisionMode};
+use znni::util::bench::{time_budget, Scale, Table};
+use znni::util::json::Json;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = TaskPool::global();
+    let scale = Scale::from_env();
+    let max_extent = match scale {
+        Scale::Paper => 33usize,
+        Scale::Small => 21,
+        Scale::Tiny => 15,
+    };
+    let budget = match scale {
+        Scale::Paper => Duration::from_millis(1500),
+        Scale::Small => Duration::from_millis(600),
+        Scale::Tiny => Duration::from_millis(250),
+    };
+    // Pin the cache mode: the resident-row comparison is the point of
+    // this bench, so an inherited ZNNI_KERNEL_CACHE=off must not
+    // silently zero the column. Precision itself is forced per mode
+    // below.
+    force_cache_mode(Some(CacheMode::Auto));
+
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), max_extent);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 1;
+
+    // Roomy f32 reference: at 4 GiB the budget is not binding, so this
+    // fixes the extent ceiling the tight searches are squeezed from.
+    force_precision_mode(Some(PrecisionMode::F32));
+    let roomy = search(&net, &space, &cm).expect("4 GiB must admit tiny_net");
+    let tight_ram = roomy.est_memory / 2;
+    let mut tight = SearchSpace::cpu_only(Device::host_with_ram(tight_ram), max_extent);
+    tight.algos = vec![ConvAlgo::FftTaskParallel];
+    tight.max_candidates = 1;
+
+    println!(
+        "== Reduced-precision storage: {} under {} (half of the roomy f32 plan's {}) ==",
+        net.name,
+        znni::util::human_bytes(tight_ram),
+        znni::util::human_bytes(roomy.est_memory),
+    );
+
+    let mut table =
+        Table::new(&["mode", "extent", "resident row", "est memory", "warm ms", "Mvox/s"]);
+    let mut doc: Vec<(String, Json)> = vec![
+        ("scale".into(), Json::Str(format!("{scale:?}"))),
+        ("workers".into(), Json::Num(pool.workers() as f64)),
+        ("max_extent".into(), Json::Num(max_extent as f64)),
+        ("roomy_extent".into(), Json::Num(roomy.input.x as f64)),
+        ("roomy_est_memory".into(), Json::Num(roomy.est_memory as f64)),
+        ("tight_ram".into(), Json::Num(tight_ram as f64)),
+    ];
+    let weights = make_weights(&net, 0x9C);
+    for (mode, tag) in [
+        (PrecisionMode::F32, "f32"),
+        (PrecisionMode::F16, "f16"),
+        (PrecisionMode::Bf16, "bf16"),
+        (PrecisionMode::Auto, "auto"),
+    ] {
+        force_precision_mode(Some(mode));
+        let plan = search(&net, &tight, &cm)
+            .unwrap_or_else(|| panic!("{tag}: tight budget must stay feasible"));
+        let cp = compile(&net, &plan, &weights).expect("searched plan compiles");
+
+        // Warm throughput through the compiled plan: cache build, arena
+        // growth and FFT planning all happen before the timed region,
+        // so the columns compare steady-state patch time — conversion
+        // cost included.
+        let mut ctx = ExecCtx::new(pool);
+        let base = znni::tensor::Tensor5::random(plan.input, 3);
+        let out = cp.run(base.clone_tensor(), &mut ctx);
+        ctx.retire(out);
+        let timing = time_budget(budget, || {
+            let mut t = ctx.tensor5(plan.input);
+            t.data_mut().copy_from_slice(base.data());
+            let out = cp.run(t, &mut ctx);
+            ctx.retire(out);
+        });
+
+        let secs = timing.secs();
+        let vox_per_s = plan.out_voxels as f64 / secs.max(1e-9);
+        let resident = cp.kernel_cache_bytes();
+        table.row(vec![
+            tag.to_string(),
+            plan.input.x.to_string(),
+            znni::util::human_bytes(resident),
+            znni::util::human_bytes(plan.est_memory),
+            format!("{:.3}", secs * 1e3),
+            format!("{:.3}", vox_per_s / 1e6),
+        ]);
+        doc.push((
+            tag.to_string(),
+            Json::Object(vec![
+                ("extent".into(), Json::Num(plan.input.x as f64)),
+                ("resident_bytes".into(), Json::Num(resident as f64)),
+                ("est_memory".into(), Json::Num(plan.est_memory as f64)),
+                ("warm_secs".into(), Json::Num(secs)),
+                ("vox_per_s".into(), Json::Num(vox_per_s)),
+            ]),
+        ));
+    }
+    table.print();
+    force_precision_mode(None);
+    force_cache_mode(None);
+
+    let path =
+        std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_precision.json".into());
+    match std::fs::write(&path, Json::Object(doc).to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -40,8 +40,12 @@ pub fn conv_fft_dp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecC
 /// padded FFT shape, stage 2 reads the cached `w̃(j,i)` spectra instead
 /// of re-transforming each kernel per output map — bit-identical output
 /// (the cache was built with the same transform path), minus
-/// `f'·f` pruned kernel FFTs per call. A mismatched cache (different
-/// padded shape) silently falls back to on-the-fly transforms.
+/// `f'·f` pruned kernel FFTs per call. A half-precision cache
+/// (f16/bf16 storage) is widened into the same `w̃` scratch the
+/// recompute path uses — one exact widen per `(j, i)` instead of one
+/// kernel FFT, with the multiply-add consuming plain f32 either way. A
+/// mismatched cache (different padded shape) silently falls back to
+/// on-the-fly transforms.
 pub fn conv_fft_dp_with(
     input: Tensor5,
     w: &Weights,
@@ -80,15 +84,26 @@ pub fn conv_fft_dp_with(
     // accumulator Õ, then inverse-transform into O.
     let mut out = ctx.tensor5(osh);
     let mut otrans = ctx.take_c32_raw(ish.s * spec_len);
-    // The w̃ scratch is only needed on the recompute path.
-    let mut wtrans = if kernels.is_none() { ctx.take_c32_raw(spec_len) } else { Vec::new() };
+    // The w̃ scratch serves the recompute path (transform target) and
+    // the half-precision cache path (widen target); an f32 cache is
+    // read in place and never takes it.
+    let cached_half = kernels.is_some_and(|c| c.precision().is_half());
+    let mut wtrans = if kernels.is_none() || cached_half {
+        ctx.take_c32_raw(spec_len)
+    } else {
+        Vec::new()
+    };
     let crop_off = [w.k[0] - 1, w.k[1] - 1, w.k[2] - 1];
     let crop = [osh.x, osh.y, osh.z];
     for j in 0..w.f_out {
         otrans.fill(Complex32::ZERO);
         for i in 0..w.f_in {
             let wspec: &[Complex32] = match kernels {
-                Some(c) => c.spectrum(j, i),
+                Some(c) if !cached_half => c.spectrum(j, i),
+                Some(c) => {
+                    c.widen_spectrum_into(j, i, &mut wtrans);
+                    &wtrans
+                }
                 None => {
                     plan.forward_par(w.kernel(j, i), w.k, &mut wtrans, pool);
                     &wtrans

@@ -40,7 +40,10 @@ pub fn conv_fft_gpu(
 /// kernel transforms are skipped: PARALLEL-MULT reads the cached `w̃`
 /// slab directly and the `w̃`/permute scratches are never taken. Output
 /// is bit-identical to the recompute path; a mismatched cache silently
-/// falls back.
+/// falls back. A half-precision cache takes only the `w̃` slab (no
+/// permute scratches) and widens batch `j`'s stored f16/bf16 bits into
+/// it — one exact widen per output map instead of one batched kernel
+/// FFT.
 pub fn conv_fft_gpu_with(
     input: Tensor5,
     w: &Weights,
@@ -91,13 +94,17 @@ pub fn conv_fft_gpu_with(
     let mut otrans = ctx.take_c32_raw(s_n * f_out * spec);
     {
         // w̃ and its permute scratches are only needed when the spectra
-        // are recomputed per call.
+        // are recomputed per call; a half cache needs just w̃ as the
+        // widen target.
+        let cached_half = kernels.is_some_and(|c| c.precision().is_half());
         let (mut wtrans, mut k1, mut k2) = if kernels.is_none() {
             (
                 ctx.take_c32_raw(f_in * spec),
                 ctx.take_c32_raw(plan_ker.forward_scratch1_len(f_in)),
                 ctx.take_c32_raw(plan_ker.forward_scratch2_len(f_in)),
             )
+        } else if cached_half {
+            (ctx.take_c32_raw(f_in * spec), Vec::new(), Vec::new())
         } else {
             (Vec::new(), Vec::new(), Vec::new())
         };
@@ -105,7 +112,11 @@ pub fn conv_fft_gpu_with(
         let klen = w.klen();
         for j in 0..f_out {
             let wt: &[Complex32] = match kernels {
-                Some(c) => c.batch(j),
+                Some(c) if !cached_half => c.batch(j),
+                Some(c) => {
+                    c.widen_batch_into(j, &mut wtrans);
+                    &wtrans
+                }
                 None => {
                     let kbatch = &w.raw()[j * f_in * klen..(j + 1) * f_in * klen];
                     plan_ker.forward_scratch(f_in, kbatch, &mut wtrans, &mut k1, &mut k2, pool);

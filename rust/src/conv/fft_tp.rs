@@ -55,7 +55,11 @@ pub fn conv_fft_tp(input: Tensor5, w: &Weights, act: Activation, ctx: &mut ExecC
 /// entirely: the per-chip `T·ñ` buffers are never taken and the MAD
 /// tasks read the cached `w̃(j,i)` spectra directly. The wave structure
 /// (and therefore the per-`Õ[s,j]` accumulation order) is unchanged, so
-/// the output is bit-identical to the on-the-fly path. A mismatched
+/// the output is bit-identical to the on-the-fly path. A half-precision
+/// cache keeps the per-chip buffers and the primary-task slot, but the
+/// primary task becomes an exact widen of the stored f16/bf16 bits
+/// instead of a kernel FFT — same waves, same chip locality, same
+/// accumulation order, at a fraction of the task cost. A mismatched
 /// cache silently falls back to recomputation.
 pub fn conv_fft_tp_with(
     input: Tensor5,
@@ -104,9 +108,11 @@ pub fn conv_fft_tp_with(
     // ---- Stage 2: kernel transforms (primary-only) + MADs (chip) ----
     {
         // One spectrum buffer per chip — the primary-thread temporaries.
-        // With a live kernel cache the transforms are skipped and the
-        // buffers never taken (the Table II `T·ñ` term disappears).
-        let mut bufs: Vec<Vec<Complex32>> = if kernels.is_none() {
+        // With a live f32 kernel cache the transforms are skipped and
+        // the buffers never taken (the Table II `T·ñ` term disappears);
+        // a half cache keeps them as widen targets.
+        let cached_half = kernels.is_some_and(|c| c.precision().is_half());
+        let mut bufs: Vec<Vec<Complex32>> = if kernels.is_none() || cached_half {
             (0..chips).map(|_| ctx.take_c32_raw(spec_len)).collect()
         } else {
             Vec::new()
@@ -127,8 +133,11 @@ pub fn conv_fft_tp_with(
                     .filter(|&(_, j)| j < w.f_out)
                     .collect();
                 // Kernel transforms: primary workers, one per chip —
-                // skipped entirely when the spectra are precomputed.
-                if kernels.is_none() {
+                // skipped entirely when f32 spectra are precomputed.
+                // A half cache keeps the primary-task slot but widens
+                // the stored bits into the chip buffer instead of
+                // transforming (same waves, same chip locality).
+                if kernels.is_none() || cached_half {
                     let bufp: Vec<SendPtr<Complex32>> =
                         bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
                     // One cached plan serves both image and kernel
@@ -141,7 +150,12 @@ pub fn conv_fft_tp_with(
                             let prio = (total_pairs - (j * w.f_in + i)) as i64;
                             sc.submit_chip_primary(c, prio, move |_| {
                                 let buf = unsafe { bp.slice_mut(0, spec_len) };
-                                with_tl_scratch(|tls| kplan.forward(w.kernel(j, i), w.k, buf, tls));
+                                match kernels {
+                                    Some(cache) => cache.widen_spectrum_into(j, i, buf),
+                                    None => with_tl_scratch(|tls| {
+                                        kplan.forward(w.kernel(j, i), w.k, buf, tls)
+                                    }),
+                                }
                             });
                         }
                     });
@@ -155,8 +169,11 @@ pub fn conv_fft_tp_with(
                         for &(c, j) in &active {
                             for s in 0..ish.s {
                                 let wbuf: &[Complex32] = match kernels {
-                                    Some(cache) => cache.spectrum(j, i),
-                                    None => unsafe {
+                                    Some(cache) if !cached_half => cache.spectrum(j, i),
+                                    // Half cache or recompute: the chip
+                                    // buffer the primary task just
+                                    // filled (widened or transformed).
+                                    _ => unsafe {
                                         std::slice::from_raw_parts(bufp[c].get(), spec_len)
                                     },
                                 };

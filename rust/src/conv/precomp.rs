@@ -32,9 +32,21 @@
 //! so cached and recomputed executions produce identical outputs down to
 //! the last bit under any fixed SIMD tier.
 //!
+//! Reduced-precision tier: a cache built with a half-width
+//! [`Precision`] ([`PrecomputedKernels::build_p`]) stores the *same*
+//! f32 spectra narrowed to f16/bf16 bit patterns — half the resident
+//! bytes, exactly — and the consuming primitives widen them back to f32
+//! through arena scratch ([`PrecomputedKernels::widen_spectrum_into`] /
+//! [`PrecomputedKernels::widen_batch_into`]). Narrowing is
+//! round-to-nearest-even (relative error ≤ 2⁻¹¹ for f16, ≤ 2⁻⁸ for
+//! bf16, per element) and widening is exact, so a half cache is still
+//! fully deterministic: every execute consumes the same widened
+//! spectra bit for bit.
+//!
 //! The `ZNNI_KERNEL_CACHE` environment variable (`off | auto | on`,
 //! read once) gates the whole subsystem; [`force_cache_mode`] overrides
-//! it programmatically for tests and benches.
+//! it programmatically for tests and benches (`ZNNI_PRECISION` gates
+//! the storage precision the same way — see [`crate::precision`]).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -42,6 +54,7 @@ use std::sync::{Arc, OnceLock};
 use crate::fft::fft3d::Fft3Scratch;
 use crate::memory;
 use crate::memory::model::ConvAlgo;
+use crate::precision::Precision;
 use crate::tensor::{Complex32, Vec3};
 use crate::util::pool::TaskPool;
 use crate::util::sendptr::SendPtr;
@@ -85,8 +98,24 @@ pub struct PrecomputedKernels {
     /// Complex elements per kernel spectrum (both layouts:
     /// `x̃·ỹ·(z̃/2+1)`).
     spec_len: usize,
+    /// f32 spectra ([`Precision::F32`] caches only; empty otherwise).
     data: Vec<Complex32>,
+    /// Narrowed spectra as interleaved `[re, im]` storage bits
+    /// (half-precision caches only; empty otherwise).
+    half: Vec<u16>,
+    precision: Precision,
     bytes: u64,
+}
+
+/// View a complex slice as interleaved `[re, im]` floats — sound
+/// because [`Complex32`] is `#[repr(C)]` with two f32 fields (the same
+/// reinterpretation the FFT I/O paths rely on).
+fn complex_floats(src: &[Complex32]) -> &[f32] {
+    unsafe { std::slice::from_raw_parts(src.as_ptr() as *const f32, src.len() * 2) }
+}
+
+fn complex_floats_mut(dst: &mut [Complex32]) -> &mut [f32] {
+    unsafe { std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut f32, dst.len() * 2) }
 }
 
 impl PrecomputedKernels {
@@ -101,10 +130,48 @@ impl PrecomputedKernels {
     /// would. The spectra bytes are registered with the ledger and the
     /// [`crate::memory::kernel_cache_bytes`] gauge until drop.
     pub fn build(w: &Weights, layout: SpectraLayout, padded: Vec3, pool: &TaskPool) -> Self {
-        match layout {
+        Self::build_p(w, layout, padded, pool, Precision::F32)
+    }
+
+    /// [`PrecomputedKernels::build`] with an explicit storage
+    /// [`Precision`]. A half-width precision transforms in f32 (the
+    /// identical code path), then narrows the spectra to f16/bf16 bits
+    /// — exactly half the resident bytes, with the ledger and
+    /// [`crate::memory::kernel_cache_bytes`] gauge adjusted to the
+    /// stored width.
+    pub fn build_p(
+        w: &Weights,
+        layout: SpectraLayout,
+        padded: Vec3,
+        pool: &TaskPool,
+        precision: Precision,
+    ) -> Self {
+        let full = match layout {
             SpectraLayout::Cpu => Self::build_cpu(w, padded, pool),
             SpectraLayout::Gpu => Self::build_gpu(w, padded, pool),
+        };
+        full.narrowed(precision)
+    }
+
+    /// Narrow a freshly built f32 cache to half-width storage bits,
+    /// returning the ledger delta to the stored width. No-op for
+    /// [`Precision::F32`].
+    fn narrowed(mut self, precision: Precision) -> Self {
+        if !precision.is_half() {
+            return self;
         }
+        let floats = complex_floats(&self.data);
+        let mut half = vec![0u16; floats.len()];
+        precision.narrow(&mut half, floats);
+        let new_bytes = (half.len() * std::mem::size_of::<u16>()) as u64;
+        let freed = self.bytes - new_bytes;
+        memory::free(freed);
+        memory::kernel_cache_gauge(-(freed as i64));
+        self.bytes = new_bytes;
+        self.data = Vec::new();
+        self.half = half;
+        self.precision = precision;
+        self
     }
 
     fn register(spec_len: usize, f_out: usize, f_in: usize) -> (Vec<Complex32>, u64) {
@@ -142,6 +209,8 @@ impl PrecomputedKernels {
             f_in: w.f_in,
             spec_len,
             data,
+            half: Vec::new(),
+            precision: Precision::F32,
             bytes,
         }
     }
@@ -167,6 +236,8 @@ impl PrecomputedKernels {
             f_in: w.f_in,
             spec_len: spec,
             data,
+            half: Vec::new(),
+            precision: Precision::F32,
             bytes,
         }
     }
@@ -178,22 +249,65 @@ impl PrecomputedKernels {
         self.layout == layout && self.padded == padded && self.f_out == f_out && self.f_in == f_in
     }
 
-    /// The spectrum of kernel `w(j, i)` (CPU layout only).
+    /// The spectrum of kernel `w(j, i)` (CPU layout, f32 caches only —
+    /// half caches are consumed via
+    /// [`PrecomputedKernels::widen_spectrum_into`]).
     pub fn spectrum(&self, j: usize, i: usize) -> &[Complex32] {
         debug_assert_eq!(self.layout, SpectraLayout::Cpu);
+        debug_assert_eq!(self.precision, Precision::F32);
         let off = (j * self.f_in + i) * self.spec_len;
         &self.data[off..off + self.spec_len]
     }
 
     /// The batched spectra of all `f` kernels of output map `j` (GPU
-    /// layout only) — the `w̃` slab `fft_gpu`'s PARALLEL-MULT consumes.
+    /// layout, f32 caches only) — the `w̃` slab `fft_gpu`'s
+    /// PARALLEL-MULT consumes.
     pub fn batch(&self, j: usize) -> &[Complex32] {
         debug_assert_eq!(self.layout, SpectraLayout::Gpu);
+        debug_assert_eq!(self.precision, Precision::F32);
         let off = j * self.f_in * self.spec_len;
         &self.data[off..off + self.f_in * self.spec_len]
     }
 
-    /// Resident bytes of this cache (what the optimizer budgeted).
+    /// Widen the spectrum of kernel `w(j, i)` into `dst` (CPU layout,
+    /// half caches only). Widening is exact, so `dst` receives the
+    /// narrowed value of the f32 spectrum this cache was built from —
+    /// the same bits on every call.
+    pub fn widen_spectrum_into(&self, j: usize, i: usize, dst: &mut [Complex32]) {
+        debug_assert_eq!(self.layout, SpectraLayout::Cpu);
+        assert!(self.precision.is_half(), "f32 caches are consumed via spectrum()");
+        assert_eq!(dst.len(), self.spec_len);
+        let off = (j * self.f_in + i) * 2 * self.spec_len;
+        self.precision.widen(complex_floats_mut(dst), &self.half[off..off + 2 * self.spec_len]);
+    }
+
+    /// Widen the batched spectra of output map `j` into `dst` (GPU
+    /// layout, half caches only).
+    pub fn widen_batch_into(&self, j: usize, dst: &mut [Complex32]) {
+        debug_assert_eq!(self.layout, SpectraLayout::Gpu);
+        assert!(self.precision.is_half(), "f32 caches are consumed via batch()");
+        let n = self.f_in * self.spec_len;
+        assert_eq!(dst.len(), n);
+        let off = j * 2 * n;
+        self.precision.widen(complex_floats_mut(dst), &self.half[off..off + 2 * n]);
+    }
+
+    /// Storage precision of the spectra. Compute always stays f32:
+    /// half-width caches are widened into arena scratch at consume
+    /// time.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Complex elements per kernel spectrum (what a widen destination
+    /// for one [`PrecomputedKernels::widen_spectrum_into`] call holds).
+    pub fn spec_len(&self) -> usize {
+        self.spec_len
+    }
+
+    /// Resident bytes of this cache (what the optimizer budgeted) — the
+    /// *stored* width, so a half cache reports exactly half its f32
+    /// twin.
     pub fn bytes(&self) -> u64 {
         self.bytes
     }
@@ -242,24 +356,33 @@ impl SpectraMap {
         SpectraMap { entries: Vec::new() }
     }
 
-    /// The cache serving `(layout, padded)` for a `f_out × f_in` layer,
-    /// if one has been built.
+    /// The cache serving `(layout, padded, precision)` for a
+    /// `f_out × f_in` layer, if one has been built. Precision is part
+    /// of the key: an f32 entry does not satisfy a layer planned at
+    /// f16 (and vice versa), so mixed-precision plans sharing one map
+    /// each hit spectra of their own width.
     pub fn get(
         &self,
         layout: SpectraLayout,
         padded: Vec3,
         f_out: usize,
         f_in: usize,
+        precision: Precision,
     ) -> Option<Arc<PrecomputedKernels>> {
-        self.entries.iter().find(|c| c.matches(layout, padded, f_out, f_in)).cloned()
+        self.entries
+            .iter()
+            .find(|c| c.matches(layout, padded, f_out, f_in) && c.precision() == precision)
+            .cloned()
     }
 
     /// Insert a freshly built cache. The caller is expected to have
-    /// checked [`SpectraMap::get`] first; a duplicate key is replaced
-    /// rather than doubled.
+    /// checked [`SpectraMap::get`] first; a duplicate key (same shape
+    /// *and* precision) is replaced rather than doubled.
     pub fn insert(&mut self, cache: Arc<PrecomputedKernels>) {
-        self.entries
-            .retain(|c| !c.matches(cache.layout(), cache.padded(), cache.f_out, cache.f_in));
+        self.entries.retain(|c| {
+            !(c.matches(cache.layout(), cache.padded(), cache.f_out, cache.f_in)
+                && c.precision() == cache.precision())
+        });
         self.entries.push(cache);
     }
 
@@ -478,14 +601,16 @@ mod tests {
         assert_eq!(map.len(), 2);
         assert_eq!(map.bytes(), a_bytes + b_bytes);
 
-        // Lookups key on (layout, padded, geometry).
-        let hit = map.get(SpectraLayout::Cpu, small, 3, 2).expect("small shape cached");
+        // Lookups key on (layout, padded, geometry, precision).
+        let f32p = Precision::F32;
+        let hit = map.get(SpectraLayout::Cpu, small, 3, 2, f32p).expect("small shape cached");
         assert!(Arc::ptr_eq(&hit, &a));
-        let hit = map.get(SpectraLayout::Cpu, big, 3, 2).expect("big shape cached");
+        let hit = map.get(SpectraLayout::Cpu, big, 3, 2, f32p).expect("big shape cached");
         assert!(Arc::ptr_eq(&hit, &b));
-        assert!(map.get(SpectraLayout::Cpu, [5, 5, 5], 3, 2).is_none());
-        assert!(map.get(SpectraLayout::Gpu, small, 3, 2).is_none());
-        assert!(map.get(SpectraLayout::Cpu, small, 2, 3).is_none());
+        assert!(map.get(SpectraLayout::Cpu, [5, 5, 5], 3, 2, f32p).is_none());
+        assert!(map.get(SpectraLayout::Gpu, small, 3, 2, f32p).is_none());
+        assert!(map.get(SpectraLayout::Cpu, small, 2, 3, f32p).is_none());
+        assert!(map.get(SpectraLayout::Cpu, small, 3, 2, Precision::F16).is_none());
 
         // Re-inserting an existing key replaces rather than doubles.
         map.insert(a.clone());
@@ -495,10 +620,105 @@ mod tests {
         // Eviction is largest-first and the accounting follows.
         assert_eq!(map.evict_largest(), b_bytes);
         assert_eq!(map.bytes(), a_bytes);
-        assert!(map.get(SpectraLayout::Cpu, big, 3, 2).is_none());
-        assert!(map.get(SpectraLayout::Cpu, small, 3, 2).is_some());
+        assert!(map.get(SpectraLayout::Cpu, big, 3, 2, f32p).is_none());
+        assert!(map.get(SpectraLayout::Cpu, small, 3, 2, f32p).is_some());
         assert_eq!(map.clear(), a_bytes);
         assert!(map.is_empty());
+    }
+
+    #[test]
+    fn half_cache_halves_bytes_and_widens_within_bounds() {
+        let pool = tpool();
+        let w = Weights::random(3, 2, [3, 2, 3], 81);
+        let padded = fft_optimal_vec3([8, 7, 9]);
+        let full = PrecomputedKernels::build(&w, SpectraLayout::Cpu, padded, &pool);
+        for p in Precision::HALF {
+            let half = PrecomputedKernels::build_p(&w, SpectraLayout::Cpu, padded, &pool, p);
+            assert_eq!(half.precision(), p);
+            assert_eq!(half.bytes() * 2, full.bytes(), "{} stores exactly half", p.name());
+            assert!(memory::kernel_cache_bytes() >= half.bytes());
+            // Widened spectra sit within the format's per-element
+            // relative bound of the f32 spectra they were narrowed
+            // from, and widening is deterministic bit for bit.
+            let rel = match p {
+                Precision::F16 => 2.0f32.powi(-11),
+                Precision::Bf16 => 2.0f32.powi(-8),
+                Precision::F32 => unreachable!(),
+            };
+            let mut got = vec![Complex32::ZERO; half.spec_len()];
+            let mut again = vec![Complex32::ZERO; half.spec_len()];
+            for j in 0..3 {
+                for i in 0..2 {
+                    half.widen_spectrum_into(j, i, &mut got);
+                    half.widen_spectrum_into(j, i, &mut again);
+                    let exact = full.spectrum(j, i);
+                    for (k, (g, e)) in got.iter().zip(exact).enumerate() {
+                        assert_eq!(g.re.to_bits(), again[k].re.to_bits());
+                        assert_eq!(g.im.to_bits(), again[k].im.to_bits());
+                        // f16 subnormal floor: below ~2^-14 the
+                        // absolute step dominates the relative bound.
+                        let floor = 2.0f32.powi(-14);
+                        for (gv, ev) in [(g.re, e.re), (g.im, e.im)] {
+                            let tol = ev.abs().max(floor) * rel;
+                            assert!(
+                                (gv - ev).abs() <= tol,
+                                "{} spectrum ({j},{i})[{k}]: {gv} vs {ev}",
+                                p.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_half_cache_widens_batches() {
+        let pool = tpool();
+        let w = Weights::random(2, 3, [2, 2, 2], 82);
+        let padded = fft_optimal_vec3([6, 6, 6]);
+        let full = PrecomputedKernels::build(&w, SpectraLayout::Gpu, padded, &pool);
+        let half = PrecomputedKernels::build_p(&w, SpectraLayout::Gpu, padded, &pool, Precision::Bf16);
+        assert_eq!(half.bytes() * 2, full.bytes());
+        let mut got = vec![Complex32::ZERO; 3 * half.spec_len()];
+        for j in 0..2 {
+            half.widen_batch_into(j, &mut got);
+            let exact = full.batch(j);
+            for (g, e) in got.iter().zip(exact) {
+                for (gv, ev) in [(g.re, e.re), (g.im, e.im)] {
+                    // bf16 keeps full range; relative bound 2^-8 (plus
+                    // the subnormal floor for values near zero).
+                    let tol = ev.abs().max(f32::MIN_POSITIVE) * 2.0f32.powi(-8);
+                    assert!((gv - ev).abs() <= tol, "batch {j}: {gv} vs {ev}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_precision_map_accounts_exactly() {
+        let pool = tpool();
+        let w = Weights::random(3, 2, [3, 3, 3], 83);
+        let padded = fft_optimal_vec3([6, 6, 6]);
+        let mut map = SpectraMap::new();
+        let full = Arc::new(PrecomputedKernels::build(&w, SpectraLayout::Cpu, padded, &pool));
+        let half =
+            Arc::new(PrecomputedKernels::build_p(&w, SpectraLayout::Cpu, padded, &pool, Precision::F16));
+        let (fb, hb) = (full.bytes(), half.bytes());
+        assert_eq!(hb * 2, fb);
+        // Same shape, different precisions: both coexist (precision is
+        // part of the key), and byte accounting stays exact.
+        map.insert(full.clone());
+        map.insert(half.clone());
+        assert_eq!(map.len(), 2);
+        assert_eq!(map.bytes(), fb + hb);
+        let hit = map.get(SpectraLayout::Cpu, padded, 3, 2, Precision::F16).expect("f16 entry");
+        assert!(Arc::ptr_eq(&hit, &half));
+        // Shedding goes largest-first: the f32 entry before the f16 one.
+        assert_eq!(map.evict_largest(), fb);
+        assert_eq!(map.bytes(), hb);
+        assert_eq!(map.evict_largest(), hb);
+        assert_eq!(map.bytes(), 0);
     }
 
     #[test]

@@ -166,6 +166,7 @@ const DEFAULT_BUCKET_CAP: usize = 8;
 pub struct Arena {
     f32_free: HashMap<usize, Vec<Vec<f32>>>,
     c32_free: HashMap<usize, Vec<Vec<Complex32>>>,
+    u16_free: HashMap<usize, Vec<Vec<u16>>>,
     budget: Option<u64>,
     bucket_cap: usize,
     held: u64,
@@ -180,6 +181,7 @@ impl Default for Arena {
         Arena {
             f32_free: HashMap::new(),
             c32_free: HashMap::new(),
+            u16_free: HashMap::new(),
             budget: None,
             bucket_cap: DEFAULT_BUCKET_CAP,
             held: 0,
@@ -358,6 +360,57 @@ impl Arena {
         self.note_hwm();
     }
 
+    /// Half-width storage buffer (f16/bf16 bit patterns, 2 bytes per
+    /// element) with **unspecified** contents — the narrow kernels
+    /// fully overwrite before anything reads. Used by
+    /// [`crate::layers::ConvLayer`] to stage reduced-precision
+    /// activations between layers; accounted in the ledger and gauges
+    /// exactly like the f32/c32 families, at the 2-byte width.
+    pub fn take_u16_raw(&mut self, len: usize) -> Vec<u16> {
+        if len == 0 {
+            return Vec::new();
+        }
+        faults::fire(FaultSite::ArenaTake);
+        let bytes = (len * 2) as u64;
+        if let Some(v) = self.u16_free.get_mut(&len).and_then(Vec::pop) {
+            self.held -= bytes;
+            self.outstanding += bytes;
+            self.reuses += 1;
+            memory::alloc_recycled(bytes);
+            memory::arena_gauge(-(bytes as i64), bytes as i64);
+            self.note_hwm();
+            return v;
+        }
+        self.outstanding += bytes;
+        self.fresh += 1;
+        memory::alloc(bytes);
+        memory::arena_fresh_event();
+        memory::arena_gauge(0, bytes as i64);
+        self.note_hwm();
+        vec![0; len]
+    }
+
+    /// Return a half-width storage buffer to the free list.
+    pub fn put_u16(&mut self, v: Vec<u16>) {
+        let len = v.len();
+        if len == 0 {
+            return;
+        }
+        let bytes = (len * 2) as u64;
+        memory::free(bytes);
+        let dec = bytes.min(self.outstanding);
+        self.outstanding -= dec;
+        let bucket = self.u16_free.entry(len).or_default();
+        if bucket.len() < self.bucket_cap {
+            bucket.push(v);
+            self.held += bytes;
+            memory::arena_gauge(bytes as i64, -(dec as i64));
+        } else {
+            memory::arena_gauge(0, -(dec as i64));
+        }
+        self.note_hwm();
+    }
+
     /// Mark `bytes` of a just-taken buffer as transferred out of this
     /// arena's custody (ownership moves to a tensor that may outlive
     /// the arena). Keeps `outstanding` balanced by raw workspace
@@ -492,6 +545,17 @@ impl<'p> ExecCtx<'p> {
     /// Recycle a complex buffer into the arena.
     pub fn put_c32(&mut self, v: Vec<Complex32>) {
         self.arena.put_c32(v)
+    }
+
+    /// Unzeroed half-width storage buffer (f16/bf16 bits) — see
+    /// [`Arena::take_u16_raw`].
+    pub fn take_u16_raw(&mut self, len: usize) -> Vec<u16> {
+        self.arena.take_u16_raw(len)
+    }
+
+    /// Recycle a half-width storage buffer into the arena.
+    pub fn put_u16(&mut self, v: Vec<u16>) {
+        self.arena.put_u16(v)
     }
 
     /// Cached serial/parallel 3D FFT plan for the given padded extent.
@@ -675,6 +739,29 @@ mod tests {
         for b in bufs {
             ctx.put_f32(b);
         }
+    }
+
+    #[test]
+    fn u16_buckets_account_at_two_bytes() {
+        let mut a = Arena::new();
+        let mut v = a.take_u16_raw(100);
+        assert_eq!(v.len(), 100);
+        assert_eq!(a.stats().outstanding_bytes, 200, "2 bytes per element");
+        assert_eq!(a.stats().fresh_allocs, 1);
+        v[0] = 0x3C00;
+        a.put_u16(v);
+        assert_eq!(a.stats().outstanding_bytes, 0);
+        assert_eq!(a.stats().held_bytes, 200);
+        let v2 = a.take_u16_raw(100);
+        assert_eq!(a.stats().fresh_allocs, 1, "second take must reuse");
+        assert_eq!(a.stats().reuses, 1);
+        assert_eq!(v2[0], 0x3C00, "raw take keeps recycled contents");
+        a.put_u16(v2);
+        // Distinct widths never alias: an f32 take of the same element
+        // count is a separate bucket family.
+        let f = a.take_f32(100);
+        assert_eq!(a.stats().fresh_allocs, 2);
+        a.put_f32(f);
     }
 
     #[test]

@@ -271,9 +271,11 @@ mod tests {
             .layers
             .iter()
             .map(|l| match l {
-                LayerSpec::Conv { .. } => {
-                    PlanLayer::Conv { algo: ConvAlgo::DirectMkl, cache_kernels: false }
-                }
+                LayerSpec::Conv { .. } => PlanLayer::Conv {
+                    algo: ConvAlgo::DirectMkl,
+                    cache_kernels: false,
+                    precision: crate::precision::Precision::F32,
+                },
                 LayerSpec::Pool { .. } => {
                     let m = modes[mi];
                     mi += 1;

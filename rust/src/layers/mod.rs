@@ -17,10 +17,11 @@ use crate::conv::{self, Activation, Weights};
 use crate::exec::{ExecCtx, WorkspaceReq};
 use crate::fft::fft_optimal_vec3;
 use crate::memory::model::{
-    conv_memory_bytes, conv_pool_fused_memory_bytes, kernel_spectra_bytes, mpf_memory_bytes,
+    conv_memory_bytes, conv_pool_fused_memory_bytes, kernel_spectra_bytes_p, mpf_memory_bytes,
     pool_memory_bytes, ConvAlgo, ConvDims,
 };
 use crate::pool::{max_pool, max_pool_out_shape, mpf_forward, mpf_out_shape};
+use crate::precision::Precision;
 use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
@@ -118,6 +119,10 @@ pub struct ConvLayer {
     /// Whether this layer precomputes its kernel spectra (the plan's
     /// per-layer cache decision; see [`ConvLayer::with_kernel_cache`]).
     cache_enabled: bool,
+    /// Storage precision of this layer's cached spectra and output
+    /// activations (the plan's per-layer precision decision; see
+    /// [`ConvLayer::with_precision`]). Compute stays f32.
+    precision: Precision,
     /// Per-padded-shape spectra map, built on first use (or
     /// [`LayerPrimitive::warm`]) and shared via `Arc` across every
     /// worker and shard; shed largest-shape-first under memory
@@ -135,6 +140,7 @@ impl ConvLayer {
             algo,
             act,
             cache_enabled: false,
+            precision: Precision::F32,
             kernel_cache: Mutex::new(KernelCacheState { map: SpectraMap::new(), shed: false }),
         }
     }
@@ -151,6 +157,25 @@ impl ConvLayer {
     /// Whether the plan enabled kernel-spectra caching for this layer.
     pub fn kernel_cache_enabled(&self) -> bool {
         self.cache_enabled
+    }
+
+    /// Set the storage precision of this layer's cached kernel spectra
+    /// and output activations (the searched per-layer axis — see
+    /// [`crate::precision`]). The plan's decision is authoritative at
+    /// execute time: the `ZNNI_PRECISION` mode gates which candidates
+    /// the *optimizer* may pick, so a layer only ever receives a
+    /// half-width precision when the mode admitted it at plan time.
+    /// Compute stays f32; a half precision narrows the resident spectra
+    /// (half the bytes) and quantizes the layer's output through an
+    /// arena half-buffer exactly as a stored-half activation would be.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// The storage precision the plan assigned this layer.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// The cache to execute against for `input`, building it on first
@@ -172,16 +197,41 @@ impl ConvLayer {
         let padded = fft_optimal_vec3(input.spatial());
         let (f_out, f_in) = (self.weights.f_out, self.weights.f_in);
         let mut st = recover_lock(&self.kernel_cache);
-        if let Some(hit) = st.map.get(layout, padded, f_out, f_in) {
+        if let Some(hit) = st.map.get(layout, padded, f_out, f_in, self.precision) {
             return Some(hit);
         }
         if st.shed {
             return None;
         }
         faults::fire(FaultSite::KernelCacheWarm);
-        let built = Arc::new(PrecomputedKernels::build(&self.weights, layout, padded, pool));
+        let built = Arc::new(PrecomputedKernels::build_p(
+            &self.weights,
+            layout,
+            padded,
+            pool,
+            self.precision,
+        ));
         st.map.insert(built.clone());
         Some(built)
+    }
+
+    /// Stage `out` through half-width storage when the plan assigned
+    /// this layer a reduced precision: narrow the activations into an
+    /// arena u16 buffer (the stored form), then widen them back —
+    /// exactly the quantization a consumer of stored-half activations
+    /// would observe. No-op at [`Precision::F32`]. The staging buffer
+    /// is charged in [`LayerPrimitive::memory_bytes`] so ledger peaks
+    /// stay within the planned workspace.
+    fn store_activations(&self, mut out: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
+        if !self.precision.is_half() {
+            return out;
+        }
+        let len = out.data().len();
+        let mut bits = ctx.take_u16_raw(len);
+        self.precision.narrow(&mut bits, out.data());
+        self.precision.widen(out.data_mut(), &bits);
+        ctx.put_u16(bits);
+        out
     }
 
     fn dims(&self, input: Shape5) -> ConvDims {
@@ -212,17 +262,27 @@ impl LayerPrimitive for ConvLayer {
     }
 
     fn memory_bytes(&self, input: Shape5, threads: usize) -> u64 {
-        conv_memory_bytes(self.algo, &self.dims(input), threads)
+        let d = self.dims(input);
+        let base = conv_memory_bytes(self.algo, &d, threads);
+        // Half-precision activation staging: the u16 buffer the output
+        // is narrowed through (2 bytes per output element), live beside
+        // the output during the hand-off.
+        if self.precision.is_half() {
+            base + self.precision.elem_bytes() * (d.s as u64 * d.f_out as u64) * d.n_out_elems()
+        } else {
+            base
+        }
     }
 
     fn plan_workspace(&self, input: Shape5, threads: usize) -> WorkspaceReq {
         WorkspaceReq {
             bytes: self.memory_bytes(input, threads),
             // The spectra row is resident beside the arena when the
-            // plan enabled caching — the analytic size, so the plan's
-            // requirement is known before anything is built.
+            // plan enabled caching — the analytic size at the plan's
+            // storage precision (half-width rows cost exactly half), so
+            // the requirement is known before anything is built.
             resident_bytes: if self.cache_enabled {
-                kernel_spectra_bytes(self.algo, &self.dims(input))
+                kernel_spectra_bytes_p(self.algo, &self.dims(input), self.precision)
             } else {
                 0
             },
@@ -279,7 +339,7 @@ impl LayerPrimitive for ConvLayer {
 
     fn execute(&self, input: Tensor5, ctx: &mut ExecCtx<'_>) -> Tensor5 {
         let w = &self.weights;
-        match self.algo {
+        let out = match self.algo {
             ConvAlgo::DirectNaive => {
                 let out = conv::direct::conv_direct_naive(&input, w, self.act, ctx);
                 ctx.retire(input);
@@ -330,7 +390,8 @@ impl LayerPrimitive for ConvLayer {
                 let kern = self.kernels_for(input.shape(), ctx.pool());
                 conv::fft_gpu::conv_fft_gpu_with(input, w, self.act, ctx, kern.as_deref())
             }
-        }
+        };
+        self.store_activations(out, ctx)
     }
 }
 
@@ -614,12 +675,97 @@ mod tests {
             let l = conv_layer(algo).with_kernel_cache(true);
             let req = l.plan_workspace(sh, 4);
             assert_eq!(req.bytes, l.memory_bytes(sh, 4), "{algo:?}: arena row unchanged");
-            let expect = kernel_spectra_bytes(algo, &l.dims(sh));
+            let expect = kernel_spectra_bytes_p(algo, &l.dims(sh), Precision::F32);
             assert_eq!(req.resident_bytes, expect, "{algo:?}");
             if algo.uses_kernel_cache() {
                 assert!(req.resident_bytes > 0, "{algo:?}");
             } else {
                 assert_eq!(req.resident_bytes, 0, "{algo:?}: nothing to cache");
+            }
+        }
+    }
+
+    #[test]
+    fn half_precision_plan_workspace_halves_resident_and_adds_staging() {
+        let sh = Shape5::new(1, 2, 9, 9, 9);
+        for algo in [ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel, ConvAlgo::GpuFft] {
+            let full = conv_layer(algo).with_kernel_cache(true);
+            let fr = full.plan_workspace(sh, 4);
+            for p in Precision::HALF {
+                let half = conv_layer(algo).with_kernel_cache(true).with_precision(p);
+                let hr = half.plan_workspace(sh, 4);
+                assert_eq!(hr.resident_bytes * 2, fr.resident_bytes, "{algo:?} {}", p.name());
+                // Arena row grows by exactly the u16 staging buffer:
+                // 2 bytes per output element.
+                let d = half.dims(sh);
+                let staging = 2 * (d.s as u64 * d.f_out as u64) * d.n_out_elems();
+                assert_eq!(hr.bytes, fr.bytes + staging, "{algo:?} {}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn half_precision_layer_stays_within_error_bound_of_f32() {
+        let p = tpool();
+        let mut ctx = ExecCtx::new(&p);
+        let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 51);
+        for algo in [ConvAlgo::DirectMkl, ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel] {
+            let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 52));
+            let oracle = ConvLayer::new(w.clone(), algo, Activation::Relu)
+                .execute(input.clone_tensor(), &mut ctx);
+            for prec in Precision::HALF {
+                // The documented plan-output bounds (ARCHITECTURE.md):
+                // one narrowing of activations (+ narrowed spectra when
+                // cached) stays well inside these.
+                let rtol = match prec {
+                    Precision::F16 => 2e-2f32,
+                    Precision::Bf16 => 1e-1,
+                    Precision::F32 => unreachable!(),
+                };
+                for cache in [false, true] {
+                    let l = ConvLayer::new(w.clone(), algo, Activation::Relu)
+                        .with_kernel_cache(cache)
+                        .with_precision(prec);
+                    let got = l.execute(input.clone_tensor(), &mut ctx);
+                    for (g, e) in got.data().iter().zip(oracle.data()) {
+                        // Relative above |e| = 1, absolute below: FFT-
+                        // domain quantization error scales with the
+                        // signal norm, not the (possibly cancelled or
+                        // relu-clamped) output value.
+                        let tol = rtol * e.abs().max(1.0);
+                        assert!(
+                            (g - e).abs() <= tol,
+                            "{algo:?} {} cache={cache}: {g} vs {e}",
+                            prec.name()
+                        );
+                    }
+                    ctx.retire(got);
+                }
+            }
+            ctx.retire(oracle);
+        }
+    }
+
+    #[test]
+    fn half_precision_layer_is_deterministic_warm_and_cold() {
+        let p = tpool();
+        let input = Tensor5::random(Shape5::new(1, 2, 7, 7, 7), 53);
+        let w = Arc::new(Weights::random(3, 2, [3, 3, 3], 54));
+        for prec in Precision::HALF {
+            let l = ConvLayer::new(w.clone(), ConvAlgo::FftTaskParallel, Activation::Relu)
+                .with_kernel_cache(true)
+                .with_precision(prec);
+            // Cold context, then the same warm context twice: all three
+            // runs must agree bit for bit (narrow is RNE, widen exact,
+            // and the accumulation order is fixed).
+            let mut cold = ExecCtx::new(&p);
+            let a = l.execute(input.clone_tensor(), &mut cold);
+            let mut warm = ExecCtx::new(&p);
+            let b = l.execute(input.clone_tensor(), &mut warm);
+            let c = l.execute(input.clone_tensor(), &mut warm);
+            for ((x, y), z) in a.data().iter().zip(b.data()).zip(c.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", prec.name());
+                assert_eq!(y.to_bits(), z.to_bits(), "{}", prec.name());
             }
         }
     }

@@ -44,7 +44,13 @@
 //!   worker and shard (bit-identical to on-the-fly transforms), with
 //!   caching a per-layer decision the optimizer searches under the
 //!   memory budget — resident spectra compete with larger input images
-//!   for the same RAM (`ZNNI_KERNEL_CACHE` gates it at runtime).
+//!   for the same RAM (`ZNNI_KERNEL_CACHE` gates it at runtime);
+//! * a reduced-precision storage tier ([`precision`]): cached kernel
+//!   spectra and inter-layer activations can be stored as f16 or bf16
+//!   bit patterns while all compute stays f32 — a per-layer axis the
+//!   optimizer searches exactly like `cache_kernels`, trading halved
+//!   resident bytes against the measured widen/narrow cost
+//!   (`ZNNI_PRECISION=f32|f16|bf16|auto` gates it end to end).
 //!
 //! The one-minute tour — search a plan, compile it, run a patch:
 //!
@@ -94,6 +100,7 @@ pub mod inference;
 pub mod net;
 pub mod optimizer;
 pub mod pipeline;
+pub mod precision;
 pub mod runtime;
 pub mod pool;
 pub mod server;

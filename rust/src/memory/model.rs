@@ -288,10 +288,25 @@ pub fn conv_pool_fused_memory_bytes(d: &ConvDims, p: Vec3, threads: usize) -> u6
 /// ([`crate::exec::WorkspaceReq::resident_bytes`] carries it through
 /// plan compilation).
 pub fn kernel_spectra_bytes(algo: ConvAlgo, d: &ConvDims) -> u64 {
+    kernel_spectra_bytes_p(algo, d, crate::precision::Precision::F32)
+}
+
+/// [`kernel_spectra_bytes`] at an explicit storage precision: the same
+/// `f'·f·ñ` float-equivalents at that precision's element width, so a
+/// half-width row ([`crate::precision::Precision::F16`] /
+/// [`crate::precision::Precision::Bf16`]) costs exactly half the f32
+/// row. This is the memory side of the reduced-precision trade the
+/// optimizer searches — the time side is
+/// [`crate::optimizer::CostModel::convert_secs`].
+pub fn kernel_spectra_bytes_p(
+    algo: ConvAlgo,
+    d: &ConvDims,
+    precision: crate::precision::Precision,
+) -> u64 {
     if !algo.uses_kernel_cache() {
         return 0;
     }
-    B * (d.f_in * d.f_out) as u64 * d.n_tilde_elems()
+    precision.elem_bytes() * (d.f_in * d.f_out) as u64 * d.n_tilde_elems()
 }
 
 /// Memory of a max-pooling layer: input + output (n/p³ per image).
@@ -452,6 +467,21 @@ mod tests {
         // Direct algorithms have no spectra to cache.
         assert_eq!(kernel_spectra_bytes(ConvAlgo::DirectMkl, &d), 0);
         assert_eq!(kernel_spectra_bytes(ConvAlgo::GpuDensePrecomp, &d), 0);
+    }
+
+    #[test]
+    fn half_precision_spectra_row_exactly_halves() {
+        use crate::precision::Precision;
+        let d = ConvDims { s: 1, f_in: 3, f_out: 5, n: [8, 8, 8], k: [3, 3, 3] };
+        for algo in [ConvAlgo::FftDataParallel, ConvAlgo::FftTaskParallel, ConvAlgo::GpuFft] {
+            let full = kernel_spectra_bytes_p(algo, &d, Precision::F32);
+            assert_eq!(full, kernel_spectra_bytes(algo, &d), "f32 delegates");
+            for p in Precision::HALF {
+                assert_eq!(kernel_spectra_bytes_p(algo, &d, p) * 2, full, "{algo:?} {}", p.name());
+            }
+        }
+        // Algorithms without spectra stay at zero at any precision.
+        assert_eq!(kernel_spectra_bytes_p(ConvAlgo::DirectMkl, &d, Precision::F16), 0);
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::device::Device;
 use crate::exec::ExecCtx;
 use crate::layers::{ConvLayer, FusedConvPoolLayer, LayerPrimitive};
 use crate::memory::model::{ConvAlgo, ConvDims};
+use crate::precision::Precision;
 use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::json::Json;
 use crate::util::pool::TaskPool;
@@ -74,6 +75,15 @@ pub struct CostModel {
     /// [`DEFAULT_DISPATCH_OVERHEAD_SECS`]; [`CostModel::calibrate_full`]
     /// replaces it with a measurement.
     pub dispatch_overhead_secs: f64,
+    /// Elements/second of the f16 narrow/widen conversion kernels
+    /// ([`crate::simd::narrow_f16`] / [`crate::simd::widen_f16`]) — the
+    /// per-patch tax a reduced-precision layer pays to stage its cached
+    /// spectra and activations through half-width storage.
+    /// [`CostModel::calibrate_full`] measures it.
+    pub convert_rate_f16: f64,
+    /// Elements/second of the bf16 narrow/widen conversion kernels
+    /// (integer shift/round — typically faster than f16).
+    pub convert_rate_bf16: f64,
 }
 
 /// One timed probe of the calibration ladder.
@@ -105,6 +115,33 @@ pub struct CalibrationReport {
     pub pool: Vec<CalSample>,
     /// Measured per-batch dispatch overhead (seconds).
     pub dispatch_overhead_secs: f64,
+    /// Measured f16 narrow+widen throughput (elements/s).
+    pub convert_f16: f64,
+    /// Measured bf16 narrow+widen throughput (elements/s).
+    pub convert_bf16: f64,
+}
+
+/// Measure the narrow+widen throughput (elements/second) of one half
+/// format's conversion kernels on this machine — a single-threaded
+/// streaming pass over a cache-spilling buffer, best of several trials
+/// (conversions run inside already-parallel primitive sections, so the
+/// per-element rate is what the cost model scales).
+pub fn measure_convert_rate(precision: Precision) -> f64 {
+    assert!(precision.is_half(), "only half formats convert");
+    let len = 1 << 20;
+    let src: Vec<f32> = (0..len).map(|i| (i as f32).sin()).collect();
+    let mut bits = vec![0u16; len];
+    let mut back = vec![0.0f32; len];
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        precision.narrow(&mut bits, &src);
+        precision.widen(&mut back, &bits);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(&back);
+    // Two passes over `len` elements each.
+    2.0 * len as f64 / best.max(1e-9)
 }
 
 /// Measure the fixed per-batch dispatch overhead on this machine: the
@@ -160,6 +197,11 @@ impl CostModel {
             pool_rate: 200e6 * t,
             threads,
             dispatch_overhead_secs: DEFAULT_DISPATCH_OVERHEAD_SECS,
+            // Conversions are memory-bound streaming passes; bf16 is a
+            // pure integer shift/round while f16 re-biases the
+            // exponent, so its default is a little slower.
+            convert_rate_f16: 2.0e9 * t,
+            convert_rate_bf16: 3.0e9 * t,
         }
     }
 
@@ -307,6 +349,10 @@ impl CostModel {
         }
         cm.dispatch_overhead_secs = measure_dispatch_overhead(pool.workers());
         report.dispatch_overhead_secs = cm.dispatch_overhead_secs;
+        cm.convert_rate_f16 = measure_convert_rate(Precision::F16);
+        cm.convert_rate_bf16 = measure_convert_rate(Precision::Bf16);
+        report.convert_f16 = cm.convert_rate_f16;
+        report.convert_bf16 = cm.convert_rate_bf16;
         (cm, report)
     }
 
@@ -319,6 +365,8 @@ impl CostModel {
             ("threads".into(), Json::Num(self.threads as f64)),
             ("pool_rate".into(), Json::Num(self.pool_rate)),
             ("dispatch_overhead_secs".into(), Json::Num(self.dispatch_overhead_secs)),
+            ("convert_rate_f16".into(), Json::Num(self.convert_rate_f16)),
+            ("convert_rate_bf16".into(), Json::Num(self.convert_rate_bf16)),
             ("rates".into(), Json::Object(rates)),
         ])
         .to_pretty_string()
@@ -366,6 +414,25 @@ impl CostModel {
             bail!("profile 'dispatch_overhead_secs' must be finite and >= 0, got {overhead}");
         }
         cm.dispatch_overhead_secs = overhead;
+        // Profiles written before the reduced-precision axis carry no
+        // conversion rates; keep the defaults so old profiles stay
+        // loadable (the same forward-compat contract as the fused
+        // direct rates below). Present keys are validated as strictly
+        // as the rest.
+        for (key, dst) in [
+            ("convert_rate_f16", &mut cm.convert_rate_f16),
+            ("convert_rate_bf16", &mut cm.convert_rate_bf16),
+        ] {
+            if let Some(val) = v.get(key) {
+                let x = val
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("profile '{key}' must be a number"))?;
+                if !x.is_finite() || x <= 0.0 {
+                    bail!("profile '{key}' must be a positive finite number, got {x}");
+                }
+                *dst = x;
+            }
+        }
         let rates = v
             .get("rates")
             .and_then(Json::as_object)
@@ -461,6 +528,18 @@ impl CostModel {
         }
     }
 
+    /// Estimated seconds to convert `elems` stored elements through a
+    /// half format's narrow/widen kernels (0 for f32 — nothing
+    /// converts). The reduced-precision search charges this against the
+    /// halved resident row a half-width layer buys.
+    pub fn convert_secs(&self, precision: Precision, elems: u64) -> f64 {
+        match precision {
+            Precision::F32 => 0.0,
+            Precision::F16 => elems as f64 / self.convert_rate_f16.max(1.0),
+            Precision::Bf16 => elems as f64 / self.convert_rate_bf16.max(1.0),
+        }
+    }
+
     /// Estimated seconds for a pooling/MPF layer.
     pub fn pool_secs(&self, s: usize, f: usize, n: Vec3, p: Vec3, mpf: bool) -> f64 {
         let vox = (s * f * n[0] * n[1] * n[2]) as f64;
@@ -547,6 +626,10 @@ mod tests {
         }
         assert!(cm.pool_rate > 0.0);
         assert!(cm.dispatch_overhead_secs > 0.0 && cm.dispatch_overhead_secs < 1.0);
+        assert!(cm.convert_rate_f16 > 0.0 && cm.convert_rate_f16.is_finite());
+        assert!(cm.convert_rate_bf16 > 0.0 && cm.convert_rate_bf16.is_finite());
+        assert_eq!(report.convert_f16, cm.convert_rate_f16);
+        assert_eq!(report.convert_bf16, cm.convert_rate_bf16);
         // The report carries one ladder per algorithm, each probe timed.
         assert_eq!(report.conv.len(), ConvAlgo::ALL.len());
         for (algo, ladder) in &report.conv {
@@ -570,11 +653,15 @@ mod tests {
         let mut cm = CostModel::default_rates(3);
         cm.pool_rate = 123.5e6;
         cm.dispatch_overhead_secs = 321e-6;
+        cm.convert_rate_f16 = 1.25e9;
+        cm.convert_rate_bf16 = 4.5e9;
         let text = cm.to_profile_json();
         let back = CostModel::from_profile_json(&text).unwrap();
         assert_eq!(back.threads, cm.threads);
         assert_eq!(back.pool_rate, cm.pool_rate);
         assert_eq!(back.dispatch_overhead_secs, cm.dispatch_overhead_secs);
+        assert_eq!(back.convert_rate_f16, cm.convert_rate_f16);
+        assert_eq!(back.convert_rate_bf16, cm.convert_rate_bf16);
         let host = Device::host_with_ram(1 << 30);
         for algo in ConvAlgo::ALL {
             assert_eq!(back.rate(algo, &host), cm.rate(algo, &host), "{algo:?}");
@@ -626,6 +713,64 @@ mod tests {
         );
         assert_ne!(bad, text, "replacement must have matched the profile text");
         assert!(CostModel::from_profile_json(&bad).is_err(), "present-but-invalid still errors");
+    }
+
+    #[test]
+    fn profile_without_convert_rates_falls_back_to_defaults() {
+        // A profile saved before the reduced-precision axis existed:
+        // no convert_rate_* keys anywhere. It must load with the
+        // default conversion rates, and re-saving it must persist the
+        // new keys.
+        let legacy = r#"{
+            "version": 1,
+            "threads": 3,
+            "pool_rate": 150000000.0,
+            "dispatch_overhead_secs": 0.0002,
+            "rates": {
+                "DirectN": 1000000000.0,
+                "DirectM": 2000000000.0,
+                "DirectFused": 2500000000.0,
+                "DirectFusedPool": 2500000000.0,
+                "FFT-DP": 1500000000.0,
+                "FFT-TP": 1700000000.0,
+                "CuDNN1": 1100000000.0,
+                "CuDNN2": 2100000000.0,
+                "FFT": 1600000000.0
+            }
+        }"#;
+        let cm = CostModel::from_profile_json(legacy).unwrap();
+        let defaults = CostModel::default_rates(3);
+        assert_eq!(cm.convert_rate_f16, defaults.convert_rate_f16);
+        assert_eq!(cm.convert_rate_bf16, defaults.convert_rate_bf16);
+        let resaved = cm.to_profile_json();
+        assert!(resaved.contains("\"convert_rate_f16\""));
+        assert!(resaved.contains("\"convert_rate_bf16\""));
+        let back = CostModel::from_profile_json(&resaved).unwrap();
+        assert_eq!(back.convert_rate_f16, defaults.convert_rate_f16);
+        // Present-but-invalid still errors.
+        let cm2 = CostModel::default_rates(2);
+        let bad = cm2.to_profile_json().replace(
+            &format!("\"convert_rate_f16\": {:?}", cm2.convert_rate_f16),
+            "\"convert_rate_f16\": -1.0",
+        );
+        assert_ne!(bad, cm2.to_profile_json(), "replacement must have matched");
+        assert!(CostModel::from_profile_json(&bad).is_err());
+    }
+
+    #[test]
+    fn convert_secs_zero_for_f32_and_positive_for_half() {
+        let cm = CostModel::default_rates(4);
+        assert_eq!(cm.convert_secs(Precision::F32, 1 << 20), 0.0);
+        let f16 = cm.convert_secs(Precision::F16, 1 << 20);
+        let bf16 = cm.convert_secs(Precision::Bf16, 1 << 20);
+        assert!(f16 > 0.0 && bf16 > 0.0);
+        // Linear in the element count.
+        assert!((cm.convert_secs(Precision::F16, 2 << 20) / f16 - 2.0).abs() < 1e-9);
+        // The measured rates are finite and positive on this machine.
+        for p in Precision::HALF {
+            let r = measure_convert_rate(p);
+            assert!(r.is_finite() && r > 0.0, "{p:?}: {r}");
+        }
     }
 
     #[test]

@@ -44,6 +44,7 @@ use crate::memory::model::{
     ConvAlgo, ConvDims,
 };
 use crate::net::{LayerSpec, NetSpec, PoolingMode};
+use crate::precision::Precision;
 use crate::tensor::{Shape5, Tensor5};
 use crate::util::pool::TaskPool;
 
@@ -63,6 +64,16 @@ pub enum PlanLayer {
         /// on a larger input image. Always `false` for non-FFT
         /// algorithms.
         cache_kernels: bool,
+        /// Storage precision of this layer's cached kernel spectra and
+        /// output activations ([`crate::precision::Precision`]).
+        /// Compute stays f32; a half-width choice halves the resident
+        /// spectra row (and stages activations through a 2-byte arena
+        /// buffer) at the cost of the narrow/widen conversions —
+        /// another budgeted trade the search makes per layer. Always
+        /// [`Precision::F32`] unless `ZNNI_PRECISION`
+        /// ([`crate::precision::precision_mode`]) admits the half
+        /// formats.
+        precision: Precision,
     },
     /// A pooling layer realised in the chosen mode.
     Pool {
@@ -219,17 +230,22 @@ fn mode_assignments(pools: usize, allow_maxpool: bool) -> Vec<Vec<PoolingMode>> 
 }
 
 /// One conv-layer candidate during [`evaluate`]: algorithm, whether the
-/// kernel spectra are precomputed, and the modelled cost of each choice.
+/// kernel spectra are precomputed, the storage precision, and the
+/// modelled cost of each choice.
 #[derive(Clone, Copy)]
 struct ConvChoice {
     algo: ConvAlgo,
     cached: bool,
+    /// Storage precision of the spectra row and output activations.
+    precision: Precision,
     secs: f64,
     mem: u64,
-    /// Resident spectra bytes when `cached` (0 otherwise).
+    /// Resident spectra bytes when `cached` (0 otherwise), at
+    /// `precision`'s element width.
     cache_bytes: u64,
     /// Seconds added back if the cache is later dropped (the per-call
-    /// kernel-transform time).
+    /// kernel-transform time, net of any conversion tax the cached
+    /// choice was paying).
     drop_penalty: f64,
 }
 
@@ -259,6 +275,20 @@ struct ConvChoice {
 /// decide — which, under the analytic model, also caches wherever the
 /// budget admits (cached layers are strictly cheaper), so `auto` and
 /// `on` only diverge if a future measured model charges the cache.
+///
+/// Storage precision is a second per-layer axis, gated the same way by
+/// `ZNNI_PRECISION` ([`crate::precision::precision_mode`]): under
+/// `auto`, every cached candidate is probed at f32 first and then at
+/// each half format — a half row costs exactly half the resident bytes
+/// ([`crate::memory::model::kernel_spectra_bytes_p`]) plus an
+/// activation-staging row, against the narrow/widen tax
+/// ([`CostModel::convert_secs`]) — so half-width spectra win exactly
+/// where the f32 row no longer fits. Candidates are ranked purely on
+/// modelled time; pin a fixed mode (`f16`/`bf16`) to choose a format
+/// for accuracy reasons. Fixed modes pin *every* conv layer (cached or
+/// not); under `auto` uncached layers stay f32, where half storage
+/// only costs. The fused conv→pool pair has no spectra row or
+/// inter-layer hand-off and always stays f32.
 fn evaluate(
     net: &NetSpec,
     input: Shape5,
@@ -267,9 +297,15 @@ fn evaluate(
     cost: &CostModel,
 ) -> Option<Plan> {
     use crate::conv::precomp::{cache_mode, CacheMode};
-    use crate::memory::model::kernel_spectra_bytes;
+    use crate::memory::model::kernel_spectra_bytes_p;
+    use crate::precision::precision_mode;
 
     let mode = cache_mode();
+    let pmode = precision_mode();
+    // The precision every *uncached* conv layer gets: a fixed
+    // ZNNI_PRECISION pins it, `auto` keeps f32 (without a resident row
+    // to halve, half storage only adds conversion time and staging).
+    let un_prec = pmode.fixed().unwrap_or(Precision::F32);
     let shapes = net.shapes(input, modes).ok()?;
     let mut cur = input;
     let mut layers = Vec::with_capacity(net.layers.len());
@@ -307,25 +343,52 @@ fn evaluate(
                     }
                     let mem = conv_memory_bytes(algo, &d, cost.threads);
                     let secs = cost.conv_secs(algo, &d, &space.device);
+                    // Per-patch element counts a half format converts:
+                    // output activations are narrowed then widened (two
+                    // passes over S'·f'·n'³), a cached spectra row is
+                    // widened once (f'·f·ñ float-equivalents).
+                    let act_elems = 2 * (d.s * d.f_out) as u64 * d.n_out_elems();
+                    let spectra_elems = (d.f_in * d.f_out) as u64 * d.n_tilde_elems();
+                    // Table II surcharge of the half formats: the 2-byte
+                    // arena staging buffer the activation hand-off
+                    // narrows into (ConvLayer::memory_bytes adds the
+                    // same row).
+                    let staging = |p: Precision| {
+                        if p.is_half() {
+                            2 * (d.s * d.f_out) as u64 * d.n_out_elems()
+                        } else {
+                            0
+                        }
+                    };
+                    let un_secs = secs + cost.convert_secs(un_prec, act_elems);
+                    let un_mem = mem.saturating_add(staging(un_prec));
                     let mut cached_feasible = false;
                     if algo.uses_kernel_cache() && mode != CacheMode::Off {
-                        let cb = kernel_spectra_bytes(algo, &d);
-                        // A cached candidate must afford its own row on
-                        // top of the spectra already committed.
-                        if space.device.fits(mem.saturating_add(cache_total).saturating_add(cb)) {
-                            cached_feasible = true;
-                            let cached_secs = cost.conv_secs_cached(algo, &d, &space.device);
-                            consider(
-                                ConvChoice {
-                                    algo,
-                                    cached: true,
-                                    secs: cached_secs,
-                                    mem,
-                                    cache_bytes: cb,
-                                    drop_penalty: secs - cached_secs,
-                                },
-                                &mut best,
-                            );
+                        for &prec in pmode.candidates() {
+                            let cb = kernel_spectra_bytes_p(algo, &d, prec);
+                            let cmem = mem.saturating_add(staging(prec));
+                            // A cached candidate must afford its own row
+                            // on top of the spectra already committed.
+                            if space
+                                .device
+                                .fits(cmem.saturating_add(cache_total).saturating_add(cb))
+                            {
+                                cached_feasible = true;
+                                let cached_secs = cost.conv_secs_cached(algo, &d, &space.device)
+                                    + cost.convert_secs(prec, spectra_elems + act_elems);
+                                consider(
+                                    ConvChoice {
+                                        algo,
+                                        cached: true,
+                                        precision: prec,
+                                        secs: cached_secs,
+                                        mem: cmem,
+                                        cache_bytes: cb,
+                                        drop_penalty: un_secs - cached_secs,
+                                    },
+                                    &mut best,
+                                );
+                            }
                         }
                     }
                     // The recompute candidate — checked against the
@@ -334,13 +397,14 @@ fn evaluate(
                     // never make a previously feasible plan infeasible);
                     // suppressed in `on` (force) mode when a cached
                     // variant of the same algorithm is admissible.
-                    if space.device.fits(mem) && !(mode == CacheMode::Force && cached_feasible) {
+                    if space.device.fits(un_mem) && !(mode == CacheMode::Force && cached_feasible) {
                         consider(
                             ConvChoice {
                                 algo,
                                 cached: false,
-                                secs,
-                                mem,
+                                precision: un_prec,
+                                secs: un_secs,
+                                mem: un_mem,
                                 cache_bytes: 0,
                                 drop_penalty: 0.0,
                             },
@@ -381,6 +445,11 @@ fn evaluate(
                                     layers.push(PlanLayer::Conv {
                                         algo: ConvAlgo::DirectFusedPool,
                                         cache_kernels: false,
+                                        // The fused pair streams into
+                                        // the pooled output — no spectra
+                                        // row, no inter-layer hand-off —
+                                        // so it stays f32 in every mode.
+                                        precision: Precision::F32,
                                     });
                                     layers.push(PlanLayer::PoolFused);
                                     est_secs += fsecs;
@@ -399,7 +468,11 @@ fn evaluate(
                     cache_total += c.cache_bytes;
                     cached_layers.push((layers.len(), c));
                 }
-                layers.push(PlanLayer::Conv { algo: c.algo, cache_kernels: c.cached });
+                layers.push(PlanLayer::Conv {
+                    algo: c.algo,
+                    cache_kernels: c.cached,
+                    precision: c.precision,
+                });
                 est_secs += c.secs;
                 max_mem = max_mem.max(c.mem);
             }
@@ -433,7 +506,11 @@ fn evaluate(
         };
         cache_total -= c.cache_bytes;
         est_secs += c.drop_penalty;
-        layers[idx] = PlanLayer::Conv { algo: c.algo, cache_kernels: false };
+        // A dropped cache reverts the layer to the uncached precision
+        // (f32 under `auto` — without the row there is nothing for half
+        // storage to buy); `drop_penalty` was priced against exactly
+        // that fallback.
+        layers[idx] = PlanLayer::Conv { algo: c.algo, cache_kernels: false, precision: un_prec };
     }
     let out = *shapes.last().unwrap();
     Some(Plan {
@@ -798,10 +875,11 @@ pub fn compile(net: &NetSpec, plan: &Plan, weights: &[Arc<Weights>]) -> Result<C
             (LayerSpec::Pool { .. }, PlanLayer::PoolFused) => {
                 prims.push(Box::new(PoolFusedLayer));
             }
-            (LayerSpec::Conv { .. }, PlanLayer::Conv { algo, cache_kernels }) => {
+            (LayerSpec::Conv { .. }, PlanLayer::Conv { algo, cache_kernels, precision }) => {
                 prims.push(Box::new(
                     ConvLayer::new(weights[wi].clone(), *algo, Activation::Relu)
-                        .with_kernel_cache(*cache_kernels),
+                        .with_kernel_cache(*cache_kernels)
+                        .with_precision(*precision),
                 ));
                 wi += 1;
             }
@@ -1153,6 +1231,27 @@ mod tests {
         let req = cp.workspace_req(cm.threads);
         assert_eq!(req.resident_bytes, plan.kernel_cache_bytes);
         assert!(req.total() <= plan.est_memory);
+    }
+
+    #[test]
+    fn default_precision_mode_keeps_plans_f32() {
+        // Reduced precision is opt-in: with ZNNI_PRECISION unset (the
+        // default f32 mode) every searched conv layer must come out at
+        // full width, with the full-size spectra row. The half-width
+        // selection path is exercised (serialized) in
+        // tests/integration_precision.rs.
+        let net = tiny_net(2);
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(host(4), 15);
+        space.algos = vec![ConvAlgo::FftTaskParallel];
+        space.max_candidates = 2;
+        let plan = search(&net, &space, &cm).expect("feasible");
+        for l in &plan.layers {
+            if let PlanLayer::Conv { precision, .. } = l {
+                assert_eq!(*precision, crate::precision::Precision::F32);
+            }
+        }
+        assert!(plan.kernel_cache_bytes > 0, "f32 caching itself must still engage");
     }
 
     #[test]

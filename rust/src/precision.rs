@@ -1,0 +1,264 @@
+//! Reduced-precision storage tier (f16 / bf16) — a searched per-layer
+//! axis.
+//!
+//! The paper's central thesis is that inference throughput is
+//! RAM-bound: a nominally slower algorithm wins if it fits a larger
+//! image (§V). Halving bytes per element is therefore a *direct*
+//! throughput lever — twice the resident kernel spectra and bigger
+//! patches under the same Table II budget. This module defines the
+//! precision axis itself; the pieces it feeds:
+//!
+//! * storage: [`crate::conv::precomp::PrecomputedKernels`] can hold its
+//!   spectra as f16/bf16 bit patterns (compute stays f32 — spectra are
+//!   widened through arena scratch at consume time), and
+//!   [`crate::layers::ConvLayer`] narrows its inter-layer activations
+//!   through an arena half-buffer;
+//! * kernels: the widen/narrow conversions live in [`crate::simd`]
+//!   (`narrow_f16`, `widen_bf16`, `store_bias_act_narrow_*`, …) with
+//!   scalar oracles and per-tier parity tests;
+//! * planning: [`crate::memory::model::kernel_spectra_bytes_p`] halves
+//!   the resident row, [`crate::optimizer::PlanLayer::Conv`] carries a
+//!   per-layer `precision`, and `optimizer::evaluate` trades the
+//!   smaller row against the widen/narrow cost from
+//!   [`crate::optimizer::CostModel::convert_secs`].
+//!
+//! The `ZNNI_PRECISION` environment variable
+//! (`f32 | f16 | bf16 | auto`, read once) gates the axis end to end;
+//! [`force_precision_mode`] overrides it programmatically for tests and
+//! benches. The default is `f32` — reduced precision is opt-in, because
+//! unlike the kernel-spectra cache it changes numerics (within the
+//! bounds documented in `docs/ARCHITECTURE.md` and enforced by
+//! `tests/integration_precision.rs`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Storage precision of one layer's cached kernel spectra and output
+/// activations. Compute always stays f32; this selects only how the
+/// bytes at rest are encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Precision {
+    /// Full single precision — 4 bytes/element, bit-exact (the
+    /// baseline and the accuracy oracle).
+    F32 = 1,
+    /// IEEE 754 binary16 — 2 bytes/element, 10 mantissa bits (relative
+    /// step 2⁻¹¹), narrow dynamic range (max ≈ 65504).
+    F16 = 2,
+    /// bfloat16 — 2 bytes/element, 7 mantissa bits (relative step
+    /// 2⁻⁸), full f32 dynamic range.
+    Bf16 = 3,
+}
+
+impl Precision {
+    /// Every precision, f32 first (the order the optimizer probes).
+    pub const ALL: [Precision; 3] = [Precision::F32, Precision::F16, Precision::Bf16];
+
+    /// The two half-width storage formats.
+    pub const HALF: [Precision; 2] = [Precision::F16, Precision::Bf16];
+
+    /// Bytes per stored element (4 for f32, 2 for the half formats).
+    pub fn elem_bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 | Precision::Bf16 => 2,
+        }
+    }
+
+    /// Whether this is a half-width storage format.
+    pub fn is_half(self) -> bool {
+        !matches!(self, Precision::F32)
+    }
+
+    /// Lower-case name (the `ZNNI_PRECISION` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Stable tag used in calibration profiles and bench JSON.
+    pub fn tag(self) -> &'static str {
+        self.name()
+    }
+
+    /// Narrow an f32 row into this format's storage bits. Must not be
+    /// called for [`Precision::F32`] (f32 rows are stored as-is).
+    pub fn narrow(self, dst: &mut [u16], src: &[f32]) {
+        match self {
+            Precision::F32 => unreachable!("f32 rows are not narrowed"),
+            Precision::F16 => crate::simd::narrow_f16(dst, src),
+            Precision::Bf16 => crate::simd::narrow_bf16(dst, src),
+        }
+    }
+
+    /// Widen storage bits of this format back to f32 (exact). Must not
+    /// be called for [`Precision::F32`].
+    pub fn widen(self, dst: &mut [f32], src: &[u16]) {
+        match self {
+            Precision::F32 => unreachable!("f32 rows are not widened"),
+            Precision::F16 => crate::simd::widen_f16(dst, src),
+            Precision::Bf16 => crate::simd::widen_bf16(dst, src),
+        }
+    }
+}
+
+/// Who picks the storage precision, resolved once per process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PrecisionMode {
+    /// Everything stays f32 (the default — bit-exact numerics).
+    F32 = 1,
+    /// Force f16 storage on every conv layer.
+    F16 = 2,
+    /// Force bf16 storage on every conv layer.
+    Bf16 = 3,
+    /// The optimizer searches the axis per layer: f32 spectra where the
+    /// budget admits them, half-width spectra where only those fit.
+    Auto = 4,
+}
+
+impl PrecisionMode {
+    /// Parse a `ZNNI_PRECISION` value.
+    pub fn parse(s: &str) -> Option<PrecisionMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "off" | "full" => Some(PrecisionMode::F32),
+            "f16" | "half" => Some(PrecisionMode::F16),
+            "bf16" | "bfloat16" => Some(PrecisionMode::Bf16),
+            "auto" => Some(PrecisionMode::Auto),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<PrecisionMode> {
+        match v {
+            1 => Some(PrecisionMode::F32),
+            2 => Some(PrecisionMode::F16),
+            3 => Some(PrecisionMode::Bf16),
+            4 => Some(PrecisionMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// The per-layer candidate precisions the optimizer may consider
+    /// under this mode.
+    pub fn candidates(self) -> &'static [Precision] {
+        match self {
+            PrecisionMode::F32 => &[Precision::F32],
+            PrecisionMode::F16 => &[Precision::F16],
+            PrecisionMode::Bf16 => &[Precision::Bf16],
+            PrecisionMode::Auto => &Precision::ALL,
+        }
+    }
+
+    /// The single precision this mode pins every layer to, or `None`
+    /// for [`PrecisionMode::Auto`].
+    pub fn fixed(self) -> Option<Precision> {
+        match self {
+            PrecisionMode::F32 => Some(Precision::F32),
+            PrecisionMode::F16 => Some(Precision::F16),
+            PrecisionMode::Bf16 => Some(Precision::Bf16),
+            PrecisionMode::Auto => None,
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+static FORCED_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+static RESOLVED_MODE: OnceLock<PrecisionMode> = OnceLock::new();
+
+/// The precision mode in effect: the [`force_precision_mode`]d mode if
+/// set, else `ZNNI_PRECISION` (read once), else [`PrecisionMode::F32`].
+pub fn precision_mode() -> PrecisionMode {
+    match PrecisionMode::from_u8(FORCED_MODE.load(Ordering::Relaxed)) {
+        Some(m) => m,
+        None => *RESOLVED_MODE.get_or_init(|| {
+            match std::env::var("ZNNI_PRECISION") {
+                Ok(v) if !v.trim().is_empty() => match PrecisionMode::parse(&v) {
+                    Some(m) => m,
+                    None => {
+                        eprintln!("znni: unknown ZNNI_PRECISION value {v:?}, using f32");
+                        PrecisionMode::F32
+                    }
+                },
+                _ => PrecisionMode::F32,
+            }
+        }),
+    }
+}
+
+/// Force the precision mode for every subsequent decision (tests and
+/// the precision benches), or restore env/default resolution with
+/// `None`.
+pub fn force_precision_mode(mode: Option<PrecisionMode>) {
+    match mode {
+        Some(m) => FORCED_MODE.store(m as u8, Ordering::Relaxed),
+        None => FORCED_MODE.store(MODE_UNSET, Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_bytes_halve() {
+        assert_eq!(Precision::F32.elem_bytes(), 4);
+        assert_eq!(Precision::F16.elem_bytes(), 2);
+        assert_eq!(Precision::Bf16.elem_bytes(), 2);
+        assert!(!Precision::F32.is_half());
+        assert!(Precision::F16.is_half());
+        assert!(Precision::Bf16.is_half());
+    }
+
+    #[test]
+    fn mode_parse() {
+        // `force_precision_mode` is process-global, so flipping it here
+        // would race concurrently running search tests; the force path
+        // is exercised (serialized) in tests/integration_precision.rs.
+        assert_eq!(PrecisionMode::parse("f32"), Some(PrecisionMode::F32));
+        assert_eq!(PrecisionMode::parse("off"), Some(PrecisionMode::F32));
+        assert_eq!(PrecisionMode::parse(" F16 "), Some(PrecisionMode::F16));
+        assert_eq!(PrecisionMode::parse("bf16"), Some(PrecisionMode::Bf16));
+        assert_eq!(PrecisionMode::parse("bfloat16"), Some(PrecisionMode::Bf16));
+        assert_eq!(PrecisionMode::parse("auto"), Some(PrecisionMode::Auto));
+        assert_eq!(PrecisionMode::parse("int8"), None);
+    }
+
+    #[test]
+    fn candidates_follow_mode() {
+        assert_eq!(PrecisionMode::F32.candidates(), &[Precision::F32]);
+        assert_eq!(PrecisionMode::F16.candidates(), &[Precision::F16]);
+        assert_eq!(PrecisionMode::Bf16.candidates(), &[Precision::Bf16]);
+        assert_eq!(PrecisionMode::Auto.candidates(), &Precision::ALL);
+        assert_eq!(PrecisionMode::Auto.fixed(), None);
+        assert_eq!(PrecisionMode::F16.fixed(), Some(Precision::F16));
+    }
+
+    #[test]
+    fn narrow_widen_dispatch() {
+        let src = [1.0f32, -2.5, 0.0, 65519.0, 1e30];
+        for p in Precision::HALF {
+            let mut bits = [0u16; 5];
+            p.narrow(&mut bits, &src);
+            let mut back = [0.0f32; 5];
+            p.widen(&mut back, &bits);
+            // Exactly-representable values round-trip exactly.
+            assert_eq!(back[0], 1.0);
+            assert_eq!(back[1], -2.5);
+            assert_eq!(back[2], 0.0);
+            // Range behaviour differs by format: f16 saturates its
+            // narrow range to inf, bf16 keeps the full f32 range.
+            match p {
+                Precision::F16 => assert!(back[4].is_infinite()),
+                Precision::Bf16 => {
+                    assert!(back[4].is_finite());
+                    assert!((back[4] - 1e30).abs() <= 1e30 * 2.0f32.powi(-8));
+                }
+                Precision::F32 => unreachable!(),
+            }
+        }
+    }
+}

@@ -415,6 +415,199 @@ pub(crate) fn cmul_tier(tier: Tier, dst: &mut [Complex32], a: &[Complex32], b: &
     }
 }
 
+/// `dst[i] = f16(src[i])` — narrow an f32 row into IEEE binary16
+/// storage bits (round-to-nearest-even). The AVX2 tier uses hardware
+/// F16C when the CPU has it (IEEE-identical on finite inputs); SSE2 and
+/// NEON dispatch to the scalar oracle (no stable f16 hardware path at
+/// those tiers), so every tier is bit-identical on finite inputs.
+#[inline]
+pub fn narrow_f16(dst: &mut [u16], src: &[f32]) {
+    narrow_f16_tier(active(), dst, src);
+}
+
+/// [`narrow_f16`] on an explicit tier (asserts it is supported).
+pub fn narrow_f16_with(tier: Tier, dst: &mut [u16], src: &[f32]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    narrow_f16_tier(tier, dst, src);
+}
+
+/// Crate-internal dispatch: `tier` must be supported.
+#[inline]
+pub(crate) fn narrow_f16_tier(tier: Tier, dst: &mut [u16], src: &[f32]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::narrow_f16_avx2(dst, src) },
+        _ => scalar::narrow_f16(dst, src),
+    }
+}
+
+/// `dst[i] = f32(src[i])` — widen f16 storage bits back to f32. Exact
+/// on every tier (each half value is representable in f32).
+#[inline]
+pub fn widen_f16(dst: &mut [f32], src: &[u16]) {
+    widen_f16_tier(active(), dst, src);
+}
+
+/// [`widen_f16`] on an explicit tier (asserts it is supported).
+pub fn widen_f16_with(tier: Tier, dst: &mut [f32], src: &[u16]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    widen_f16_tier(tier, dst, src);
+}
+
+/// Crate-internal dispatch: `tier` must be supported.
+#[inline]
+pub(crate) fn widen_f16_tier(tier: Tier, dst: &mut [f32], src: &[u16]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::widen_f16_avx2(dst, src) },
+        _ => scalar::widen_f16(dst, src),
+    }
+}
+
+/// `dst[i] = bf16(src[i])` — narrow an f32 row into bfloat16 storage
+/// bits (round-to-nearest-even truncation). Every vector tier runs the
+/// same integer sequence as [`scalar::f32_to_bf16_bits`], so all tiers
+/// are bit-identical for all inputs.
+#[inline]
+pub fn narrow_bf16(dst: &mut [u16], src: &[f32]) {
+    narrow_bf16_tier(active(), dst, src);
+}
+
+/// [`narrow_bf16`] on an explicit tier (asserts it is supported).
+pub fn narrow_bf16_with(tier: Tier, dst: &mut [u16], src: &[f32]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    narrow_bf16_tier(tier, dst, src);
+}
+
+/// Crate-internal dispatch: `tier` must be supported.
+#[inline]
+pub(crate) fn narrow_bf16_tier(tier: Tier, dst: &mut [u16], src: &[f32]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::narrow_bf16_avx2(dst, src) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::narrow_bf16_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::narrow_bf16_neon(dst, src) },
+        _ => scalar::narrow_bf16(dst, src),
+    }
+}
+
+/// `dst[i] = f32(src[i])` — widen bf16 storage bits back to f32. Exact
+/// on every tier (bf16 is a prefix of the f32 encoding).
+#[inline]
+pub fn widen_bf16(dst: &mut [f32], src: &[u16]) {
+    widen_bf16_tier(active(), dst, src);
+}
+
+/// [`widen_bf16`] on an explicit tier (asserts it is supported).
+pub fn widen_bf16_with(tier: Tier, dst: &mut [f32], src: &[u16]) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    widen_bf16_tier(tier, dst, src);
+}
+
+/// Crate-internal dispatch: `tier` must be supported.
+#[inline]
+pub(crate) fn widen_bf16_tier(tier: Tier, dst: &mut [f32], src: &[u16]) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::widen_bf16_avx2(dst, src) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::widen_bf16_sse2(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::widen_bf16_neon(dst, src) },
+        _ => scalar::widen_bf16(dst, src),
+    }
+}
+
+/// `dst[i] = f16(act(src[i] + bias))` — fused narrow-on-store: the
+/// [`store_bias_act`] sweep narrowing directly into half storage, so a
+/// reduced-precision layer's output skips the extra f32 store pass.
+/// Bit-identical across tiers on finite inputs.
+#[inline]
+pub fn store_bias_act_narrow_f16(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    store_bias_act_narrow_f16_tier(active(), dst, src, bias, relu);
+}
+
+/// [`store_bias_act_narrow_f16`] on an explicit tier (asserts support).
+pub fn store_bias_act_narrow_f16_with(
+    tier: Tier,
+    dst: &mut [u16],
+    src: &[f32],
+    bias: f32,
+    relu: bool,
+) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    store_bias_act_narrow_f16_tier(tier, dst, src, bias, relu);
+}
+
+/// Crate-internal dispatch: `tier` must be supported.
+#[inline]
+pub(crate) fn store_bias_act_narrow_f16_tier(
+    tier: Tier,
+    dst: &mut [u16],
+    src: &[f32],
+    bias: f32,
+    relu: bool,
+) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::store_bias_act_narrow_f16_avx2(dst, src, bias, relu) },
+        _ => scalar::store_bias_act_narrow_f16(dst, src, bias, relu),
+    }
+}
+
+/// `dst[i] = bf16(act(src[i] + bias))` — fused narrow-on-store, bf16.
+/// Bit-identical across tiers on finite inputs.
+#[inline]
+pub fn store_bias_act_narrow_bf16(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    store_bias_act_narrow_bf16_tier(active(), dst, src, bias, relu);
+}
+
+/// [`store_bias_act_narrow_bf16`] on an explicit tier (asserts support).
+pub fn store_bias_act_narrow_bf16_with(
+    tier: Tier,
+    dst: &mut [u16],
+    src: &[f32],
+    bias: f32,
+    relu: bool,
+) {
+    assert!(supported(tier), "tier {} not supported on this CPU", tier.name());
+    store_bias_act_narrow_bf16_tier(tier, dst, src, bias, relu);
+}
+
+/// Crate-internal dispatch: `tier` must be supported.
+#[inline]
+pub(crate) fn store_bias_act_narrow_bf16_tier(
+    tier: Tier,
+    dst: &mut [u16],
+    src: &[f32],
+    bias: f32,
+    relu: bool,
+) {
+    debug_assert!(supported(tier));
+    assert_eq!(dst.len(), src.len());
+    match tier {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Avx2Fma => unsafe { x86::store_bias_act_narrow_bf16_avx2(dst, src, bias, relu) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Tier::Sse2 => unsafe { x86::store_bias_act_narrow_bf16_sse2(dst, src, bias, relu) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::store_bias_act_narrow_bf16_neon(dst, src, bias, relu) },
+        _ => scalar::store_bias_act_narrow_bf16(dst, src, bias, relu),
+    }
+}
+
 /// Radix-2 DIT combine (see [`scalar::radix2_combine`] for semantics).
 #[inline]
 pub fn radix2_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {
@@ -675,6 +868,172 @@ mod tests {
                     &format!("radix4 {tier:?} m={m}"),
                 );
             }
+        }
+    }
+
+    #[test]
+    fn f16_scalar_oracle_known_values() {
+        use scalar::{f16_bits_to_f32, f32_to_f16_bits};
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // half::MAX
+        assert_eq!(f32_to_f16_bits(65519.0), 0x7BFF); // < 65520: rounds down
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // ties up to inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        // Smallest subnormal half is 2^-24; half of it ties to even (0).
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(1.5 * 2.0f32.powi(-25)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-14)), 0x0400); // min normal
+        // RNE on the mantissa: 1 + 2^-11 ties back to even (1.0); one
+        // more ulp rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3C01);
+        // NaN narrows to a quiet NaN.
+        let h = f32_to_f16_bits(f32::NAN);
+        assert_eq!(h & 0x7C00, 0x7C00);
+        assert_ne!(h & 0x03FF, 0);
+        // Widening is exact on a few anchors.
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7BFF), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x8000), -0.0);
+        assert!(f16_bits_to_f32(0x8000).is_sign_negative());
+    }
+
+    #[test]
+    fn half_round_trips_are_exact_for_representable_values() {
+        // Every non-NaN f16 bit pattern must survive widen→narrow
+        // unchanged (that's 63489 exhaustive cases), and likewise a
+        // sweep of bf16 patterns. This is the "exactly representable
+        // values round-trip exactly" leg of the accuracy gate.
+        for h in 0..=u16::MAX {
+            if h & 0x7C00 == 0x7C00 && h & 0x03FF != 0 {
+                continue; // NaN payloads may be quieted
+            }
+            let w = scalar::f16_bits_to_f32(h);
+            assert_eq!(scalar::f32_to_f16_bits(w), h, "f16 bits {h:#06x}");
+        }
+        for h in 0..=u16::MAX {
+            if h & 0x7F80 == 0x7F80 && h & 0x007F != 0 {
+                continue; // NaN payloads may be quieted
+            }
+            let w = scalar::bf16_bits_to_f32(h);
+            assert_eq!(scalar::f32_to_bf16_bits(w), h, "bf16 bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_scalar_oracle_rounds_to_nearest_even() {
+        use scalar::{bf16_bits_to_f32, f32_to_bf16_bits};
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7F80);
+        // 1 + 2^-8 ties to even (1.0); one more f32 ulp rounds up.
+        assert_eq!(f32_to_bf16_bits(1.0 + 2.0f32.powi(-8)), 0x3F80);
+        assert_eq!(f32_to_bf16_bits(f32::from_bits((1.0f32 + 2.0f32.powi(-8)).to_bits() + 1)), 0x3F81);
+        // Max finite bf16; the next f32 above the rounding boundary
+        // overflows to inf.
+        assert_eq!(bf16_bits_to_f32(0x7F7F), f32::from_bits(0x7F7F_0000));
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x7F7F_0000)), 0x7F7F);
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x7F7F_8001)), 0x7F80);
+        // NaN narrows to a quiet NaN, never to inf.
+        let h = f32_to_bf16_bits(f32::NAN);
+        assert_eq!(h & 0x7F80, 0x7F80);
+        assert_ne!(h & 0x007F, 0);
+    }
+
+    #[test]
+    fn precision_kernels_match_scalar_on_every_tier() {
+        // Odd lengths exercise the remainder tails; values span the
+        // full finite range including subnormal-half territory, exact
+        // halves, ties and negatives.
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 129] {
+            let mut r = Rng::new(n as u64 + 7000);
+            let src: Vec<f32> = (0..n)
+                .map(|i| match i % 7 {
+                    0 => r.f32_range(-1.0, 1.0),
+                    1 => r.f32_range(-70000.0, 70000.0), // overflows f16
+                    2 => r.f32_range(-1e-6, 1e-6),       // subnormal halves
+                    3 => (i as f32) * 0.25,              // exactly representable
+                    4 => -0.0,
+                    5 => r.f32_range(-1e30, 1e30), // tests bf16 range
+                    _ => 1.0 + 2.0f32.powi(-11),   // f16 tie case
+                })
+                .collect();
+            let mut want16 = vec![0u16; n];
+            scalar::narrow_f16(&mut want16, &src);
+            let mut wantb = vec![0u16; n];
+            scalar::narrow_bf16(&mut wantb, &src);
+            let mut want_w16 = vec![0.0f32; n];
+            scalar::widen_f16(&mut want_w16, &want16);
+            let mut want_wb = vec![0.0f32; n];
+            scalar::widen_bf16(&mut want_wb, &wantb);
+            for tier in supported_tiers() {
+                let mut got = vec![0u16; n];
+                narrow_f16_with(tier, &mut got, &src);
+                assert_eq!(got, want16, "narrow_f16 {tier:?} n={n}");
+
+                let mut got = vec![0u16; n];
+                narrow_bf16_with(tier, &mut got, &src);
+                assert_eq!(got, wantb, "narrow_bf16 {tier:?} n={n}");
+
+                let mut got = vec![0.0f32; n];
+                widen_f16_with(tier, &mut got, &want16);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want_w16.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "widen_f16 {tier:?} n={n}"
+                );
+
+                let mut got = vec![0.0f32; n];
+                widen_bf16_with(tier, &mut got, &wantb);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want_wb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "widen_bf16 {tier:?} n={n}"
+                );
+
+                for relu in [false, true] {
+                    let mut want = vec![0u16; n];
+                    scalar::store_bias_act_narrow_f16(&mut want, &src, -0.25, relu);
+                    let mut got = vec![0u16; n];
+                    store_bias_act_narrow_f16_with(tier, &mut got, &src, -0.25, relu);
+                    assert_eq!(got, want, "sban_f16 {tier:?} n={n} relu={relu}");
+
+                    let mut want = vec![0u16; n];
+                    scalar::store_bias_act_narrow_bf16(&mut want, &src, -0.25, relu);
+                    let mut got = vec![0u16; n];
+                    store_bias_act_narrow_bf16_with(tier, &mut got, &src, -0.25, relu);
+                    assert_eq!(got, want, "sban_bf16 {tier:?} n={n} relu={relu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_error_stays_within_documented_ulp_bounds() {
+        // The accuracy-gate contract documented in ARCHITECTURE.md:
+        // narrowing a finite in-range value loses at most half an ulp of
+        // the storage format — relative error ≤ 2^-11 for f16 and
+        // ≤ 2^-8 for bf16.
+        let mut r = Rng::new(41);
+        for _ in 0..4096 {
+            let x = r.f32_range(-1000.0, 1000.0);
+            let f16 = scalar::f16_bits_to_f32(scalar::f32_to_f16_bits(x));
+            let bf = scalar::bf16_bits_to_f32(scalar::f32_to_bf16_bits(x));
+            let ax = x.abs().max(2.0f32.powi(-14)); // below: absolute regime
+            assert!(
+                (f16 - x).abs() <= ax * 2.0f32.powi(-11),
+                "f16 ulp bound: {x} -> {f16}"
+            );
+            assert!(
+                (bf - x).abs() <= ax * 2.0f32.powi(-8),
+                "bf16 ulp bound: {x} -> {bf}"
+            );
         }
     }
 }

@@ -257,6 +257,85 @@ pub unsafe fn radix4_combine_neon(
     scalar::radix4_combine_from(dst, m, tw, step, n, k2);
 }
 
+// ------------------------------------------------- precision storage
+//
+// bf16 runs as real integer vectors (the same RNE arithmetic as the
+// scalar oracle, hence bit-identical for all inputs). The f16 kernels
+// are dispatched to the scalar oracle on this tier: stdarch's NEON
+// f16 conversion intrinsics (`vcvt_f16_f32`) are not stable at the
+// crate's MSRV, and conversions sit outside the per-voxel hot loops.
+
+/// RNE-truncate four f32 bit patterns to bf16 values in the low 16 bits
+/// of each u32 lane — the exact integer sequence of
+/// `scalar::f32_to_bf16_bits`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn bf16_round_neon(u: uint32x4_t) -> uint32x4_t {
+    let abs = vandq_u32(u, vdupq_n_u32(0x7fff_ffff));
+    let is_nan = vcgtq_u32(abs, vdupq_n_u32(0x7f80_0000));
+    let lsb = vandq_u32(vshrq_n_u32::<16>(u), vdupq_n_u32(1));
+    let rounded = vaddq_u32(u, vaddq_u32(vdupq_n_u32(0x7fff), lsb));
+    let r = vshrq_n_u32::<16>(rounded);
+    let nan_r = vorrq_u32(vshrq_n_u32::<16>(u), vdupq_n_u32(0x0040));
+    vbslq_u32(is_nan, nan_r, r)
+}
+
+#[target_feature(enable = "neon")]
+/// NEON `dst[i] = bf16(src[i])` — bit-identical to the scalar oracle.
+pub unsafe fn narrow_bf16_neon(dst: &mut [u16], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let u = vreinterpretq_u32_f32(vld1q_f32(s.add(i)));
+        vst1_u16(d.add(i), vmovn_u32(bf16_round_neon(u)));
+        i += 4;
+    }
+    scalar::narrow_bf16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "neon")]
+/// NEON `dst[i] = f32(src[i])` for bf16 storage (exact widening).
+pub unsafe fn widen_bf16_neon(dst: &mut [f32], src: &[u16]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let w = vshlq_n_u32::<16>(vmovl_u16(vld1_u16(s.add(i))));
+        vst1q_f32(d.add(i), vreinterpretq_f32_u32(w));
+        i += 4;
+    }
+    scalar::widen_bf16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "neon")]
+/// NEON `dst[i] = bf16(act(src[i] + bias))` — fused narrow-on-store.
+pub unsafe fn store_bias_act_narrow_bf16_neon(
+    dst: &mut [u16],
+    src: &[f32],
+    bias: f32,
+    relu: bool,
+) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = vdupq_n_f32(bias);
+    let zero = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let mut v = vaddq_f32(vld1q_f32(s.add(i)), bv);
+        if relu {
+            v = vmaxq_f32(v, zero);
+        }
+        let u = vreinterpretq_u32_f32(v);
+        vst1_u16(d.add(i), vmovn_u32(bf16_round_neon(u)));
+        i += 4;
+    }
+    scalar::store_bias_act_narrow_bf16(&mut dst[i..], &src[i..], bias, relu);
+}
+
 #[target_feature(enable = "neon")]
 /// NEON complex `dst[i] = a[i] * b[i]`.
 pub unsafe fn cmul_neon(dst: &mut [Complex32], a: &[Complex32], b: &[Complex32]) {

@@ -127,6 +127,151 @@ pub fn radix2_combine_from(
     }
 }
 
+// ------------------------------------------------- precision storage
+
+/// Convert one `f32` to IEEE 754 binary16 bits with round-to-nearest-
+/// even — the scalar oracle for the f16 storage tier. Exact for every
+/// finite input (normals, subnormals, overflow to ±inf); NaNs map to a
+/// quiet NaN carrying the top ten payload bits.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf stays inf; NaN becomes a quiet NaN (payload truncated).
+        let mant = if abs > 0x7f80_0000 { 0x0200 | ((abs >> 13) & 0x03ff) as u16 } else { 0 };
+        return sign | 0x7c00 | mant;
+    }
+    let exp = (abs >> 23) as i32 - 127;
+    let mant = abs & 0x007f_ffff;
+    if exp >= 16 {
+        return sign | 0x7c00; // ≥ 2^16: overflows half even before rounding
+    }
+    if exp >= -14 {
+        // Normal half range. Round the 13 dropped mantissa bits to
+        // nearest-even; a mantissa carry correctly bumps the exponent
+        // (and a carry out of exp=30 correctly lands on inf).
+        let mut h = (((exp + 15) as u32) << 10) | (mant >> 13);
+        let rest = mant & 0x1fff;
+        if rest > 0x1000 || (rest == 0x1000 && (h & 1) != 0) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    if exp < -25 {
+        return sign; // below half the smallest subnormal: rounds to ±0
+    }
+    // Subnormal half: value = m · 2^(exp−23) with the implicit bit made
+    // explicit, target unit 2^−24. A carry out of the 10 mantissa bits
+    // lands on the smallest normal — the bit pattern is already right.
+    let m = mant | 0x0080_0000;
+    let shift = (13 + (-14 - exp)) as u32;
+    let mut h = m >> shift;
+    let rest = m & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    if rest > halfway || (rest == halfway && (h & 1) != 0) {
+        h += 1;
+    }
+    sign | h as u16
+}
+
+/// Convert IEEE 754 binary16 bits back to `f32` — exact (every half
+/// value, including subnormals, is representable in `f32`).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x03ff) as u32;
+    let bits = match exp {
+        0 => {
+            if mant == 0 {
+                sign
+            } else {
+                // Subnormal: value = mant · 2^−24. Normalize to f32.
+                let p = 31 - mant.leading_zeros(); // MSB position, 0..=9
+                let exp32 = p + 127 - 24;
+                let mant32 = (mant << (23 - p)) & 0x007f_ffff;
+                sign | (exp32 << 23) | mant32
+            }
+        }
+        31 => sign | 0x7f80_0000 | (mant << 13),
+        _ => sign | ((exp as u32 + 112) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert one `f32` to bfloat16 bits: truncate to the top 16 bits with
+/// round-to-nearest-even. Exact RNE for every finite input; NaNs map to
+/// a quiet NaN (the rounding add must not carry a NaN into the exponent
+/// field). Every vector tier runs this exact integer sequence, so the
+/// conversion is bit-identical across tiers for *all* inputs.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let u = x.to_bits();
+    if (u & 0x7fff_ffff) > 0x7f80_0000 {
+        return ((u >> 16) as u16) | 0x0040;
+    }
+    let rounded = u.wrapping_add(0x7fff + ((u >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// Convert bfloat16 bits back to `f32` — exact (bf16 is a prefix of the
+/// f32 encoding).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// `dst[i] = f16(src[i])` — narrow an f32 row into half storage.
+pub fn narrow_f16(dst: &mut [u16], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16_bits(*s);
+    }
+}
+
+/// `dst[i] = f32(src[i])` — widen half storage back to f32 (exact).
+pub fn widen_f16(dst: &mut [f32], src: &[u16]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = f16_bits_to_f32(*s);
+    }
+}
+
+/// `dst[i] = bf16(src[i])` — narrow an f32 row into bfloat16 storage.
+pub fn narrow_bf16(dst: &mut [u16], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16_bits(*s);
+    }
+}
+
+/// `dst[i] = f32(src[i])` — widen bfloat16 storage back to f32 (exact).
+pub fn widen_bf16(dst: &mut [f32], src: &[u16]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = bf16_bits_to_f32(*s);
+    }
+}
+
+/// `dst[i] = f16(act(src[i] + bias))` — the fused narrow-on-store:
+/// bias + activation + narrowing in one sweep, so a half-precision
+/// layer's output never round-trips through an extra f32 store pass.
+pub fn store_bias_act_narrow_f16(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        let v = *s + bias;
+        *d = f32_to_f16_bits(if relu { v.max(0.0) } else { v });
+    }
+}
+
+/// `dst[i] = bf16(act(src[i] + bias))` — fused narrow-on-store, bf16.
+pub fn store_bias_act_narrow_bf16(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        let v = *s + bias;
+        *d = f32_to_bf16_bits(if relu { v.max(0.0) } else { v });
+    }
+}
+
 /// Radix-4 DIT combine over `m` butterflies (twiddles `w^q` for rows
 /// `q = 1, 2, 3`, then the ±1/±i butterfly).
 pub fn radix4_combine(dst: &mut [Complex32], m: usize, tw: &[Complex32], step: usize, n: usize) {

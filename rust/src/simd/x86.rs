@@ -375,6 +375,267 @@ pub unsafe fn cmul_sse2_slices(dst: &mut [Complex32], a: &[Complex32], b: &[Comp
     scalar::cmul(&mut dst[i..], &a[i..], &b[i..]);
 }
 
+// ------------------------------------------------- precision storage
+
+/// RNE-truncate four f32 bit patterns to bf16 values in the low 16 bits
+/// of each u32 lane — the exact integer sequence of
+/// [`scalar::f32_to_bf16_bits`], so all tiers agree bit-for-bit.
+#[inline]
+#[target_feature(enable = "sse2")]
+unsafe fn bf16_round_sse2(u: __m128i) -> __m128i {
+    let abs = _mm_and_si128(u, _mm_set1_epi32(0x7fff_ffff));
+    // abs ≤ i32::MAX, so the signed compare is exact.
+    let is_nan = _mm_cmpgt_epi32(abs, _mm_set1_epi32(0x7f80_0000));
+    let lsb = _mm_and_si128(_mm_srli_epi32::<16>(u), _mm_set1_epi32(1));
+    let rounded = _mm_add_epi32(u, _mm_add_epi32(_mm_set1_epi32(0x7fff), lsb));
+    let r = _mm_srli_epi32::<16>(rounded);
+    let nan_r = _mm_or_si128(_mm_srli_epi32::<16>(u), _mm_set1_epi32(0x0040));
+    _mm_or_si128(_mm_and_si128(is_nan, nan_r), _mm_andnot_si128(is_nan, r))
+}
+
+/// Pack two vectors of u32 lanes (each ≤ 0xFFFF) into eight u16s. SSE2
+/// has no unsigned pack, so bias into i16 range, saturating-pack, and
+/// flip the sign bit back.
+#[inline]
+#[target_feature(enable = "sse2")]
+unsafe fn pack_u32x8_to_u16_sse2(lo: __m128i, hi: __m128i) -> __m128i {
+    let bias = _mm_set1_epi32(0x8000);
+    let p = _mm_packs_epi32(_mm_sub_epi32(lo, bias), _mm_sub_epi32(hi, bias));
+    _mm_xor_si128(p, _mm_set1_epi16(i16::MIN))
+}
+
+#[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] = bf16(src[i])` — bit-identical to the scalar oracle.
+pub unsafe fn narrow_bf16_sse2(dst: &mut [u16], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let u0 = _mm_castps_si128(_mm_loadu_ps(s.add(i)));
+        let u1 = _mm_castps_si128(_mm_loadu_ps(s.add(i + 4)));
+        let h = pack_u32x8_to_u16_sse2(bf16_round_sse2(u0), bf16_round_sse2(u1));
+        _mm_storeu_si128(d.add(i) as *mut __m128i, h);
+        i += 8;
+    }
+    scalar::narrow_bf16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] = f32(src[i])` for bf16 storage (exact widening).
+pub unsafe fn widen_bf16_sse2(dst: &mut [f32], src: &[u16]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let zero = _mm_setzero_si128();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(s.add(i) as *const __m128i);
+        let lo = _mm_slli_epi32::<16>(_mm_unpacklo_epi16(h, zero));
+        let hi = _mm_slli_epi32::<16>(_mm_unpackhi_epi16(h, zero));
+        _mm_storeu_ps(d.add(i), _mm_castsi128_ps(lo));
+        _mm_storeu_ps(d.add(i + 4), _mm_castsi128_ps(hi));
+        i += 8;
+    }
+    scalar::widen_bf16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "sse2")]
+/// SSE2 `dst[i] = bf16(act(src[i] + bias))` — fused narrow-on-store.
+pub unsafe fn store_bias_act_narrow_bf16_sse2(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = _mm_set1_ps(bias);
+    let zero = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let mut v0 = _mm_add_ps(_mm_loadu_ps(s.add(i)), bv);
+        let mut v1 = _mm_add_ps(_mm_loadu_ps(s.add(i + 4)), bv);
+        if relu {
+            v0 = _mm_max_ps(v0, zero);
+            v1 = _mm_max_ps(v1, zero);
+        }
+        let h = pack_u32x8_to_u16_sse2(
+            bf16_round_sse2(_mm_castps_si128(v0)),
+            bf16_round_sse2(_mm_castps_si128(v1)),
+        );
+        _mm_storeu_si128(d.add(i) as *mut __m128i, h);
+        i += 8;
+    }
+    scalar::store_bias_act_narrow_bf16(&mut dst[i..], &src[i..], bias, relu);
+}
+
+/// AVX2 lane-wise bf16 RNE truncation (see [`bf16_round_sse2`]).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn bf16_round_avx2(u: __m256i) -> __m256i {
+    let abs = _mm256_and_si256(u, _mm256_set1_epi32(0x7fff_ffff));
+    let is_nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7f80_0000));
+    let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(u), _mm256_set1_epi32(1));
+    let rounded = _mm256_add_epi32(u, _mm256_add_epi32(_mm256_set1_epi32(0x7fff), lsb));
+    let r = _mm256_srli_epi32::<16>(rounded);
+    let nan_r = _mm256_or_si256(_mm256_srli_epi32::<16>(u), _mm256_set1_epi32(0x0040));
+    _mm256_blendv_epi8(r, nan_r, is_nan)
+}
+
+/// Pack two 256-bit vectors of u32 lanes (each ≤ 0xFFFF) into sixteen
+/// u16s in order (`packs` interleaves 128-bit lanes; the permute
+/// restores them).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn pack_u32x16_to_u16_avx2(lo: __m256i, hi: __m256i) -> __m256i {
+    let bias = _mm256_set1_epi32(0x8000);
+    let p = _mm256_packs_epi32(_mm256_sub_epi32(lo, bias), _mm256_sub_epi32(hi, bias));
+    let p = _mm256_permute4x64_epi64::<0b11_01_10_00>(p);
+    _mm256_xor_si256(p, _mm256_set1_epi16(i16::MIN))
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = bf16(src[i])` — bit-identical to the scalar oracle.
+pub unsafe fn narrow_bf16_avx2(dst: &mut [u16], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let u0 = _mm256_castps_si256(_mm256_loadu_ps(s.add(i)));
+        let u1 = _mm256_castps_si256(_mm256_loadu_ps(s.add(i + 8)));
+        let h = pack_u32x16_to_u16_avx2(bf16_round_avx2(u0), bf16_round_avx2(u1));
+        _mm256_storeu_si256(d.add(i) as *mut __m256i, h);
+        i += 16;
+    }
+    scalar::narrow_bf16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = f32(src[i])` for bf16 storage (exact widening).
+pub unsafe fn widen_bf16_avx2(dst: &mut [f32], src: &[u16]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(s.add(i) as *const __m128i);
+        let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+        _mm256_storeu_ps(d.add(i), _mm256_castsi256_ps(w));
+        i += 8;
+    }
+    scalar::widen_bf16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = bf16(act(src[i] + bias))` — fused narrow-on-store.
+pub unsafe fn store_bias_act_narrow_bf16_avx2(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = _mm256_set1_ps(bias);
+    let zero = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let mut v0 = _mm256_add_ps(_mm256_loadu_ps(s.add(i)), bv);
+        let mut v1 = _mm256_add_ps(_mm256_loadu_ps(s.add(i + 8)), bv);
+        if relu {
+            v0 = _mm256_max_ps(v0, zero);
+            v1 = _mm256_max_ps(v1, zero);
+        }
+        let h = pack_u32x16_to_u16_avx2(
+            bf16_round_avx2(_mm256_castps_si256(v0)),
+            bf16_round_avx2(_mm256_castps_si256(v1)),
+        );
+        _mm256_storeu_si256(d.add(i) as *mut __m256i, h);
+        i += 16;
+    }
+    scalar::store_bias_act_narrow_bf16(&mut dst[i..], &src[i..], bias, relu);
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = f16(src[i])`: hardware F16C (`vcvtps2ph`, RNE) when
+/// the CPU has it — IEEE-identical to [`scalar::f32_to_f16_bits`] on
+/// finite inputs — else the scalar oracle. The check is a runtime
+/// branch because AVX2 does not imply F16C.
+pub unsafe fn narrow_f16_avx2(dst: &mut [u16], src: &[f32]) {
+    if std::arch::is_x86_feature_detected!("f16c") {
+        narrow_f16_f16c(dst, src);
+    } else {
+        scalar::narrow_f16(dst, src);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "f16c")]
+unsafe fn narrow_f16_f16c(dst: &mut [u16], src: &[f32]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(_mm256_loadu_ps(s.add(i)));
+        _mm_storeu_si128(d.add(i) as *mut __m128i, h);
+        i += 8;
+    }
+    scalar::narrow_f16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = f32(src[i])` for f16 storage: F16C `vcvtph2ps` when
+/// available (widening is exact on every path), else scalar.
+pub unsafe fn widen_f16_avx2(dst: &mut [f32], src: &[u16]) {
+    if std::arch::is_x86_feature_detected!("f16c") {
+        widen_f16_f16c(dst, src);
+    } else {
+        scalar::widen_f16(dst, src);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "f16c")]
+unsafe fn widen_f16_f16c(dst: &mut [f32], src: &[u16]) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(s.add(i) as *const __m128i);
+        _mm256_storeu_ps(d.add(i), _mm256_cvtph_ps(h));
+        i += 8;
+    }
+    scalar::widen_f16(&mut dst[i..], &src[i..]);
+}
+
+#[target_feature(enable = "avx2")]
+/// AVX2 `dst[i] = f16(act(src[i] + bias))` — fused narrow-on-store
+/// (F16C when available, scalar otherwise).
+pub unsafe fn store_bias_act_narrow_f16_avx2(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    if std::arch::is_x86_feature_detected!("f16c") {
+        store_bias_act_narrow_f16_f16c(dst, src, bias, relu);
+    } else {
+        scalar::store_bias_act_narrow_f16(dst, src, bias, relu);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "f16c")]
+unsafe fn store_bias_act_narrow_f16_f16c(dst: &mut [u16], src: &[f32], bias: f32, relu: bool) {
+    let n = dst.len();
+    let d = dst.as_mut_ptr();
+    let s = src.as_ptr();
+    let bv = _mm256_set1_ps(bias);
+    let zero = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let mut v = _mm256_add_ps(_mm256_loadu_ps(s.add(i)), bv);
+        if relu {
+            v = _mm256_max_ps(v, zero);
+        }
+        let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(v);
+        _mm_storeu_si128(d.add(i) as *mut __m128i, h);
+        i += 8;
+    }
+    scalar::store_bias_act_narrow_f16(&mut dst[i..], &src[i..], bias, relu);
+}
+
 // -------------------------------------------------------- butterflies
 
 #[target_feature(enable = "avx2")]

@@ -186,7 +186,7 @@ fn force_mode_caches_every_fft_layer() {
     space.max_candidates = 2;
     let plan = search(&net, &space, &cm).expect("feasible");
     for l in &plan.layers {
-        if let PlanLayer::Conv { algo, cache_kernels } = l {
+        if let PlanLayer::Conv { algo, cache_kernels, .. } = l {
             assert!(algo.uses_kernel_cache());
             assert!(*cache_kernels, "force mode must cache every FFT layer");
         }

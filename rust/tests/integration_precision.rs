@@ -1,0 +1,325 @@
+//! Reduced-precision storage end to end (ISSUE 9): f16/bf16 spectra and
+//! activations as a searched per-layer axis, gated by oracle-bound
+//! accuracy tests.
+//!
+//! The contract under test, in the paper's currency:
+//!
+//! * **selection** — under `ZNNI_PRECISION=auto` the optimizer keeps
+//!   plans at f32 while the budget is ample and switches to a half-width
+//!   spectra row exactly where the f32 row stops fitting (the acceptance
+//!   criterion);
+//! * **accuracy** — a compiled half-precision plan's outputs stay within
+//!   the documented bounds of the f32 oracle (f16: 2e-2, bf16: 1e-1,
+//!   relative with an absolute floor at |oracle| ≤ 1) on every zoo net
+//!   here and on every SIMD tier this CPU supports;
+//! * **determinism** — half plans are bit-stable across cold and warm
+//!   contexts (narrow is round-to-nearest-even, widen is exact, and the
+//!   accumulation order is fixed);
+//! * **memory** — the ledger's measured peak stays within the planned
+//!   `workspace_req` (whose resident row is the *halved* spectra row).
+//!
+//! `precision::force_precision_mode`, `simd::force`,
+//! `precomp::force_cache_mode` and the process ledger are global, so
+//! every test in this binary serializes on one mutex.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use znni::conv::precomp::{force_cache_mode, CacheMode};
+use znni::device::Device;
+use znni::exec::ExecCtx;
+use znni::memory::model::ConvAlgo;
+use znni::net::zoo::{bench_miniatures, tiny_net};
+use znni::net::NetSpec;
+use znni::optimizer::{compile, make_weights, search, CostModel, PlanLayer, SearchSpace};
+use znni::precision::{force_precision_mode, Precision, PrecisionMode};
+use znni::simd;
+use znni::tensor::Tensor5;
+use znni::util::pool::{ChipTopology, TaskPool};
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A panicking test poisons the mutex; the remaining tests still
+    // need to run serialized, so take the guard either way.
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn tpool() -> TaskPool {
+    TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 })
+}
+
+fn host(bytes: u64) -> Device {
+    Device::host_with_ram(bytes)
+}
+
+/// The searched conv precisions of a plan, in layer order.
+fn conv_precisions(plan: &znni::optimizer::Plan) -> Vec<Precision> {
+    plan.layers
+        .iter()
+        .filter_map(|l| match l {
+            PlanLayer::Conv { precision, .. } => Some(*precision),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Acceptance: with `auto` precision, an ample budget keeps every layer
+/// at f32 — and tightening the budget over the same pinned patch shape
+/// eventually forces a half-width spectra row (halved resident bytes)
+/// before the plan goes infeasible.
+#[test]
+fn optimizer_selects_half_precision_under_tight_budget() {
+    let _g = guard();
+    force_precision_mode(Some(PrecisionMode::Auto));
+    force_cache_mode(Some(CacheMode::Auto));
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(2);
+    let mut space = SearchSpace::cpu_only(host(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 1;
+    let roomy = search(&net, &space, &cm).expect("feasible under 4 GiB");
+    assert!(roomy.kernel_cache_bytes > 0, "ample RAM must cache the spectra");
+    assert!(
+        conv_precisions(&roomy).iter().all(|p| !p.is_half()),
+        "ample RAM must stay f32 (no conversion tax): {:?}",
+        roomy.layers
+    );
+
+    // Pin the patch shape and shrink the budget 1% at a time.
+    space.min_extent = roomy.input.x;
+    space.max_extent = roomy.input.x;
+    let mut found = None;
+    for pct in 1..100u64 {
+        let ram = roomy.est_memory * (100 - pct) / 100;
+        let mut sp = space.clone();
+        sp.device = host(ram);
+        let Some(p) = search(&net, &sp, &cm) else { break };
+        if conv_precisions(&p).iter().any(|pr| pr.is_half()) {
+            found = Some((ram, p));
+            break;
+        }
+    }
+    let (ram, half) = found.expect(
+        "some tightened budget must buy a half-width spectra row before going infeasible",
+    );
+    assert!(half.kernel_cache_bytes > 0, "the half plan still caches");
+    assert!(
+        half.kernel_cache_bytes < roomy.kernel_cache_bytes,
+        "half rows must shrink the resident spectra: {} vs {}",
+        half.kernel_cache_bytes,
+        roomy.kernel_cache_bytes
+    );
+    assert!(half.est_memory <= ram, "the searched plan respects the tight budget");
+    assert!(half.est_secs >= roomy.est_secs, "the conversions are not free");
+    force_cache_mode(None);
+    force_precision_mode(None);
+}
+
+/// Fixed `ZNNI_PRECISION` modes pin every searched conv layer, and the
+/// resident spectra row costs exactly half the f32 row.
+#[test]
+fn fixed_modes_pin_every_conv_layer_and_halve_the_row() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(2);
+    let mut space = SearchSpace::cpu_only(host(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 1;
+    force_precision_mode(Some(PrecisionMode::F32));
+    let full = search(&net, &space, &cm).expect("f32 feasible");
+    assert!(full.kernel_cache_bytes > 0);
+    for (mode, prec) in
+        [(PrecisionMode::F16, Precision::F16), (PrecisionMode::Bf16, Precision::Bf16)]
+    {
+        force_precision_mode(Some(mode));
+        let plan = search(&net, &space, &cm).expect("half feasible");
+        assert_eq!(plan.input, full.input, "same pinned patch shape");
+        for p in conv_precisions(&plan) {
+            assert_eq!(p, prec, "{mode:?} must pin every conv layer");
+        }
+        assert_eq!(
+            plan.kernel_cache_bytes * 2,
+            full.kernel_cache_bytes,
+            "{mode:?}: half row must be exactly half the f32 row"
+        );
+    }
+    force_precision_mode(None);
+    force_cache_mode(None);
+}
+
+/// Accuracy gate (the oracle-bound suite): for every zoo net here and
+/// every supported SIMD tier, the compiled f16/bf16 plan's output stays
+/// within the documented bound of the f32 oracle compiled from the same
+/// space, weights and input. Both plans are searched with the same
+/// pinned patch so they differ only in storage precision.
+#[test]
+fn half_plans_match_f32_oracle_on_zoo_nets_across_tiers() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let pool = tpool();
+    let cm = CostModel::default_rates(pool.workers());
+    let mut nets: Vec<NetSpec> = vec![tiny_net(2)];
+    nets.extend(bench_miniatures());
+    for net in &nets {
+        // 25 admits every miniature's field of view (mini926 needs 21).
+        let mut space = SearchSpace::cpu_only(host(4 << 30), 25);
+        space.algos = vec![ConvAlgo::FftTaskParallel];
+        space.max_candidates = 1;
+        let weights = make_weights(net, 0xE0);
+        for tier in simd::supported_tiers() {
+            simd::force(Some(tier));
+            force_precision_mode(Some(PrecisionMode::F32));
+            let plan32 = search(net, &space, &cm).expect("f32 feasible");
+            let cp32 = compile(net, &plan32, &weights).unwrap();
+            let input = Tensor5::random(plan32.input, 0xE1);
+            let mut ctx = ExecCtx::new(&pool);
+            let oracle = cp32.run(input.clone_tensor(), &mut ctx);
+            for (mode, rtol) in
+                [(PrecisionMode::F16, 2e-2f32), (PrecisionMode::Bf16, 1e-1)]
+            {
+                force_precision_mode(Some(mode));
+                let plan = search(net, &space, &cm).expect("half feasible");
+                assert_eq!(plan.input, plan32.input, "{}: same patch", net.name);
+                let cp = compile(net, &plan, &weights).unwrap();
+                let mut hctx = ExecCtx::new(&pool);
+                let got = cp.run(input.clone_tensor(), &mut hctx);
+                assert_eq!(got.shape(), oracle.shape());
+                for (i, (g, e)) in got.data().iter().zip(oracle.data()).enumerate() {
+                    // Relative above |e| = 1, absolute below: the
+                    // quantization error scales with the layer's signal
+                    // norm, not a cancelled or relu-clamped output.
+                    let tol = rtol * e.abs().max(1.0);
+                    assert!(
+                        (g - e).abs() <= tol,
+                        "{} {mode:?} on {tier:?} elem {i}: {g} vs oracle {e} (tol {tol})",
+                        net.name
+                    );
+                }
+            }
+            simd::force(None);
+        }
+    }
+    force_precision_mode(None);
+    force_cache_mode(None);
+}
+
+/// Round-trip exactness: widen∘narrow is idempotent — narrowing what a
+/// widen produced returns identical bits, and a second widen returns
+/// identical floats. Exactly-representable values survive unchanged.
+#[test]
+fn narrow_widen_round_trip_is_exact() {
+    let _g = guard();
+    let src: Vec<f32> = (0..4096).map(|i| ((i as f32) * 0.37 - 700.0).sin() * 3.0e3).collect();
+    for prec in Precision::HALF {
+        let mut bits1 = vec![0u16; src.len()];
+        prec.narrow(&mut bits1, &src);
+        let mut wide1 = vec![0.0f32; src.len()];
+        prec.widen(&mut wide1, &bits1);
+        let mut bits2 = vec![0u16; src.len()];
+        prec.narrow(&mut bits2, &wide1);
+        assert_eq!(bits1, bits2, "{prec:?}: widened values must re-narrow to the same bits");
+        let mut wide2 = vec![0.0f32; src.len()];
+        prec.widen(&mut wide2, &bits2);
+        let a: Vec<u32> = wide1.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = wide2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "{prec:?}: the round trip must be a fixed point");
+    }
+    // Values exactly representable in both half formats pass through
+    // the full round trip bit-for-bit.
+    let exact = [0.0f32, -0.0, 1.0, -2.5, 0.5, 256.0, -1024.0];
+    for prec in Precision::HALF {
+        let mut bits = [0u16; 7];
+        prec.narrow(&mut bits, &exact);
+        let mut back = [0.0f32; 7];
+        prec.widen(&mut back, &bits);
+        for (e, b) in exact.iter().zip(back) {
+            assert_eq!(e.to_bits(), b.to_bits(), "{prec:?}: {e} must round-trip exactly");
+        }
+    }
+}
+
+/// Determinism: a compiled half-precision plan produces bit-identical
+/// outputs from a cold context and from a warm (recycled-arena) context
+/// run twice.
+#[test]
+fn half_plan_bit_stable_warm_and_cold() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let pool = tpool();
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(host(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 1;
+    let weights = make_weights(&net, 0xD0);
+    for mode in [PrecisionMode::F16, PrecisionMode::Bf16] {
+        force_precision_mode(Some(mode));
+        let plan = search(&net, &space, &cm).expect("feasible");
+        assert!(conv_precisions(&plan).iter().any(|p| p.is_half()), "{mode:?} plans are half");
+        let cp = compile(&net, &plan, &weights).unwrap();
+        let input = Tensor5::random(plan.input, 0xD1);
+        let mut cold = ExecCtx::new(&pool);
+        let a = cp.run(input.clone_tensor(), &mut cold);
+        let mut warm = ExecCtx::new(&pool);
+        let b = cp.run(input.clone_tensor(), &mut warm);
+        let c = cp.run(input.clone_tensor(), &mut warm);
+        let bits = |t: &Tensor5| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&a), bits(&b), "{mode:?}: cold vs warm");
+        assert_eq!(bits(&b), bits(&c), "{mode:?}: warm vs warm");
+    }
+    force_precision_mode(None);
+    force_cache_mode(None);
+}
+
+/// Memory regression (the ledger does not lie): under a pinned f16
+/// mode the planned resident row is the halved spectra row, the
+/// compiled plan's `workspace_req` carries exactly that row, and the
+/// measured allocation peak of a cold build + run stays within the
+/// planned workspace.
+#[test]
+fn ledger_peak_stays_within_planned_workspace_with_half_spectra() {
+    let _g = guard();
+    force_cache_mode(Some(CacheMode::Auto));
+    let pool = tpool();
+    let net = tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(host(4 << 30), 15);
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    space.max_candidates = 1;
+    force_precision_mode(Some(PrecisionMode::F32));
+    let full = search(&net, &space, &cm).expect("f32 feasible");
+    force_precision_mode(Some(PrecisionMode::F16));
+    let plan = search(&net, &space, &cm).expect("f16 feasible");
+    assert_eq!(plan.kernel_cache_bytes * 2, full.kernel_cache_bytes, "halved resident row");
+    let weights = make_weights(&net, 0xF0);
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let req = cp.workspace_req(pool.workers());
+    assert_eq!(
+        req.resident_bytes, plan.kernel_cache_bytes,
+        "planned resident row == searched (half) row"
+    );
+    assert!(req.total() <= plan.est_memory, "workspace stays within the Table II estimate");
+
+    let input = Tensor5::random(plan.input, 0xF1);
+    let input_bytes = plan.input.bytes_f32();
+    let (out, peak) = znni::memory::measure(|| {
+        // Cold context *and* half-cache build inside the measured
+        // section: narrowed spectra register with the ledger at their
+        // 2-byte width.
+        let mut ctx = cp.make_ctx(&pool).expect("budget admits the plan");
+        cp.run(input, &mut ctx)
+    });
+    assert_eq!(cp.kernel_cache_bytes(), plan.kernel_cache_bytes, "built == planned (half)");
+    assert!(
+        peak + input_bytes <= req.total() + input_bytes,
+        "measured peak {peak} exceeds planned workspace {} + resident row {}",
+        req.bytes,
+        req.resident_bytes
+    );
+    assert_eq!(out.shape(), *plan.shapes.last().unwrap());
+    force_precision_mode(None);
+    force_cache_mode(None);
+}

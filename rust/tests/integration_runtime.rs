@@ -69,10 +69,22 @@ fn tiny_net_artifact_matches_compiled_plan() {
         net_name: net.name.clone(),
         input: input.shape(),
         layers: vec![
-            PlanLayer::Conv { algo: ConvAlgo::FftTaskParallel, cache_kernels: false },
+            PlanLayer::Conv {
+                algo: ConvAlgo::FftTaskParallel,
+                cache_kernels: false,
+                precision: znni::precision::Precision::F32,
+            },
             PlanLayer::Pool { mode: PoolingMode::Mpf },
-            PlanLayer::Conv { algo: ConvAlgo::DirectMkl, cache_kernels: false },
-            PlanLayer::Conv { algo: ConvAlgo::GpuFft, cache_kernels: false },
+            PlanLayer::Conv {
+                algo: ConvAlgo::DirectMkl,
+                cache_kernels: false,
+                precision: znni::precision::Precision::F32,
+            },
+            PlanLayer::Conv {
+                algo: ConvAlgo::GpuFft,
+                cache_kernels: false,
+                precision: znni::precision::Precision::F32,
+            },
         ],
         shapes,
         est_secs: 1.0,

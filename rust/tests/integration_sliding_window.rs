@@ -22,7 +22,11 @@ fn manual_plan(net: &NetSpec, input: Shape5, modes: &[PoolingMode], algo: ConvAl
         .layers
         .iter()
         .map(|l| match l {
-            LayerSpec::Conv { .. } => PlanLayer::Conv { algo, cache_kernels: false },
+            LayerSpec::Conv { .. } => PlanLayer::Conv {
+                algo,
+                cache_kernels: false,
+                precision: znni::precision::Precision::F32,
+            },
             LayerSpec::Pool { .. } => {
                 let m = modes[mi];
                 mi += 1;
