@@ -1,0 +1,157 @@
+//! NUMA first-touch cost and live-replan cutover pause (PR 10).
+//!
+//! Two measurements behind the placement work:
+//!
+//! * **Arena page touch** — the cost of first-touching a warm arena's
+//!   free-list pages (what a pinned shard worker pays once at start so
+//!   every later batch reads node-local pages) versus re-walking pages
+//!   already resident. On a multi-socket box the gap is the local-vs-
+//!   interleaved page placement the ZNNi fast-RAM thesis is about; on a
+//!   single node it still bounds the warmup the owner-touch pass adds.
+//! * **Plan cutover pause** — how long `Server::swap_plan` takes to
+//!   install a different compiled plan on a warm serving server
+//!   (kernel-cache warm + per-shard coordinator swap), and what a
+//!   serving round costs before and after — the pause the live
+//!   replanner imposes when it changes its mind.
+//!
+//! Results go to stdout and `BENCH_numa.json` (default
+//! `../BENCH_numa.json`; override with `ZNNI_BENCH_OUT`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use znni::device::Device;
+use znni::exec::Arena;
+use znni::memory::model::ConvAlgo;
+use znni::optimizer::{compile, make_weights, search, CostModel, SearchSpace};
+use znni::server::{Server, ServerConfig};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::bench::{time_n, Scale, Table};
+use znni::util::json::Json;
+use znni::util::pool::TaskPool;
+
+fn main() {
+    let pool = Arc::new(TaskPool::new());
+    let scale = Scale::from_env();
+    let (touch_elems, rounds, swaps) = match scale {
+        Scale::Paper => (1usize << 26, 6usize, 5usize),
+        Scale::Small => (1 << 24, 4, 3),
+        Scale::Tiny => (1 << 22, 2, 2),
+    };
+    let touch_mb = (touch_elems * 4) as f64 / (1 << 20) as f64;
+    println!(
+        "== NUMA first-touch + replan cutover: {touch_mb:.0} MiB arena, {swaps} swaps \
+         (numa mode: {:?}, {} node(s)) ==",
+        znni::util::numa::numa_mode(),
+        znni::util::numa::topology().node_count(),
+    );
+
+    // -- Arena page touch: first walk (commits pages) vs resident walk.
+    let t0 = Instant::now();
+    let mut arena = Arena::new();
+    let buf = arena.take_f32_raw(touch_elems);
+    arena.put_f32(buf);
+    let cold_bytes = arena.touch_pages();
+    let cold = t0.elapsed();
+    let warm = time_n(1, 5, || {
+        arena.touch_pages();
+    });
+    let cold_gbs = cold_bytes as f64 / cold.as_secs_f64().max(1e-12) / 1e9;
+    let warm_gbs = cold_bytes as f64 / warm.median.as_secs_f64().max(1e-12) / 1e9;
+
+    let mut table = Table::new(&["case", "time", "GB/s"]);
+    table.row(vec![
+        "first touch (alloc+commit)".into(),
+        format!("{:.3}ms", cold.as_secs_f64() * 1e3),
+        format!("{cold_gbs:.1}"),
+    ]);
+    table.row(vec![
+        "resident re-touch".into(),
+        format!("{:.3}ms", warm.median.as_secs_f64() * 1e3),
+        format!("{warm_gbs:.1}"),
+    ]);
+
+    // -- Plan cutover pause on a warm serving server.
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(pool.workers());
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    let plan_a = search(&net, &space, &cm).expect("feasible direct plan");
+    let mut fft_space = space.clone();
+    fft_space.algos = vec![ConvAlgo::FftTaskParallel];
+    let plan_b = search(&net, &fft_space, &cm).expect("feasible fft plan");
+    let weights = make_weights(&net, 77);
+    let cfg = ServerConfig { shards: 2, queue_depth: 8, ..ServerConfig::default() };
+    let server = Server::start(
+        net.clone(),
+        compile(&net, &plan_a, &weights).expect("compile plan A"),
+        cfg,
+        pool.clone(),
+    )
+    .expect("server start");
+    let serve_round = |server: &Server, base: u64| -> f64 {
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..rounds as u64)
+            .map(|i| {
+                server
+                    .submit(Tensor5::random(Shape5::new(1, 1, 20, 20, 20), base + i))
+                    .expect("admitted")
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("served");
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let pre_round = serve_round(&server, 100);
+    let mut cutovers: Vec<f64> = Vec::with_capacity(swaps);
+    for k in 0..swaps {
+        // Alternate A→B→A…: every swap installs a genuinely different
+        // plan, and the server keeps serving between swaps.
+        let next = if k % 2 == 0 { &plan_b } else { &plan_a };
+        let cp = compile(&net, next, &weights).expect("compile swap target");
+        let t0 = Instant::now();
+        server.swap_plan(cp).expect("swap");
+        cutovers.push(t0.elapsed().as_secs_f64());
+        serve_round(&server, 1000 + 100 * k as u64);
+    }
+    let post_round = serve_round(&server, 9000);
+    cutovers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut_median = cutovers[cutovers.len() / 2];
+    let cut_min = cutovers[0];
+    let m = server.metrics();
+    table.row(vec![
+        "plan cutover (swap_plan)".into(),
+        format!("{:.3}ms", cut_median * 1e3),
+        "-".into(),
+    ]);
+    table.print();
+    println!(
+        "rounds: pre-swap {:.3}ms, post-swap {:.3}ms | swaps={} completed={}",
+        pre_round * 1e3,
+        post_round * 1e3,
+        m.plan_swaps,
+        m.completed,
+    );
+
+    let doc: Vec<(String, Json)> = vec![
+        ("scale".into(), Json::Str(format!("{scale:?}"))),
+        ("numa_nodes".into(), Json::Num(znni::util::numa::topology().node_count() as f64)),
+        ("touch_mb".into(), Json::Num(touch_mb)),
+        ("cold_first_touch_secs".into(), Json::Num(cold.as_secs_f64())),
+        ("warm_retouch_secs".into(), Json::Num(warm.median.as_secs_f64())),
+        ("cold_touch_gb_per_s".into(), Json::Num(cold_gbs)),
+        ("warm_touch_gb_per_s".into(), Json::Num(warm_gbs)),
+        ("swaps".into(), Json::Num(m.plan_swaps as f64)),
+        ("cutover_median_secs".into(), Json::Num(cut_median)),
+        ("cutover_min_secs".into(), Json::Num(cut_min)),
+        ("pre_swap_round_secs".into(), Json::Num(pre_round)),
+        ("post_swap_round_secs".into(), Json::Num(post_round)),
+        ("completed_requests".into(), Json::Num(m.completed as f64)),
+    ];
+    let path = std::env::var("ZNNI_BENCH_OUT").unwrap_or_else(|_| "../BENCH_numa.json".into());
+    match std::fs::write(&path, Json::Object(doc).to_pretty_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

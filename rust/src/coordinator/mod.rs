@@ -150,6 +150,14 @@ pub struct Coordinator {
     pub queue_depth: usize,
     /// Number of worker threads pulling patches.
     pub workers: usize,
+    /// Home NUMA node CPU set for this coordinator's serve workers.
+    /// `None` (the default, and always the case on single-node hosts)
+    /// means workers float and no affinity syscalls are issued. When
+    /// set by [`crate::server::Server`] under `ZNNI_NUMA=auto` on a
+    /// multi-node machine, each scoped serve worker pins itself to
+    /// these CPUs and owner-touches its warm arena before executing,
+    /// so first-touched pages land on the shard's home node.
+    pub home_cpus: Option<Arc<Vec<usize>>>,
     /// Warm per-worker arenas, persisted across `serve` calls so the
     /// second and later calls run allocation-free from the first patch.
     arenas: Mutex<Vec<Arena>>,
@@ -182,6 +190,7 @@ impl Coordinator {
             patch,
             queue_depth: 2,
             workers: 1,
+            home_cpus: None,
             arenas: Mutex::new(Vec::new()),
         })
     }
@@ -344,7 +353,18 @@ impl Coordinator {
                 let busy_us = &busy_us;
                 let assembly_ns = &assembly_ns;
                 handles.push(s.spawn(move || {
-                    let arena = recover_lock(&self.arenas).pop().unwrap_or_default();
+                    // Home-node placement: pin this worker to the
+                    // shard's CPU set *before* taking the arena, then
+                    // owner-touch the warm buffers so any page not yet
+                    // committed (or migrated by a prior floating run)
+                    // is first-touched node-local. Both are no-ops when
+                    // no home node was assigned (single-node hosts,
+                    // `ZNNI_NUMA=off`).
+                    let mut arena = recover_lock(&self.arenas).pop().unwrap_or_default();
+                    if let Some(cpus) = &self.home_cpus {
+                        crate::util::numa::pin_current_thread(cpus);
+                        arena.touch_pages();
+                    }
                     let fresh_before = arena.stats().fresh_allocs;
                     let mut ctx = ExecCtx::from_arena(pool, arena);
                     let mut lock_ns = 0u64;

@@ -250,6 +250,45 @@ impl Arena {
         }
     }
 
+    /// Owner-touch warmup: rewrite one element per 4 KiB page of every
+    /// buffer idle in the free lists, from the *calling* thread.
+    ///
+    /// Linux commits anonymous pages on first touch, on the node of the
+    /// thread that touches them — so an arena whose buffers were
+    /// allocated (or migrated) on the wrong node serves remote-DRAM
+    /// reads forever after. A pinned shard worker calls this after
+    /// binding to its home node: already-local pages are a cheap
+    /// read+write, while pages still untouched (fresh `vec![0; n]`
+    /// allocations are copy-on-write mappings of the zero page) get
+    /// committed node-local. Contents are preserved (each page's first
+    /// element is rewritten with its own value, via volatile accesses
+    /// the compiler cannot elide). Returns the bytes walked.
+    pub fn touch_pages(&mut self) -> u64 {
+        const PAGE: usize = 4096;
+        fn touch<T>(bufs: &mut HashMap<usize, Vec<Vec<T>>>, elem_bytes: usize) -> u64 {
+            let stride = PAGE / elem_bytes;
+            let mut bytes = 0u64;
+            for bucket in bufs.values_mut() {
+                for buf in bucket.iter_mut() {
+                    let p = buf.as_mut_ptr();
+                    let mut i = 0;
+                    while i < buf.len() {
+                        // SAFETY: i < len; volatile keeps the dead
+                        // store from being optimised away.
+                        unsafe {
+                            let v = std::ptr::read_volatile(p.add(i));
+                            std::ptr::write_volatile(p.add(i), v);
+                        }
+                        i += stride;
+                    }
+                    bytes += (buf.len() * elem_bytes) as u64;
+                }
+            }
+            bytes
+        }
+        touch(&mut self.f32_free, 4) + touch(&mut self.c32_free, 8) + touch(&mut self.u16_free, 2)
+    }
+
     /// f32 buffer of exactly `len` elements with **unspecified**
     /// contents (recycled data). For workspaces the caller fully
     /// overwrites before reading — skips a working-set-sized memset on
@@ -762,6 +801,33 @@ mod tests {
         let f = a.take_f32(100);
         assert_eq!(a.stats().fresh_allocs, 2);
         a.put_f32(f);
+    }
+
+    #[test]
+    fn touch_pages_walks_free_lists_and_preserves_contents() {
+        let mut a = Arena::new();
+        assert_eq!(a.touch_pages(), 0, "empty arena touches nothing");
+        let mut f = a.take_f32_raw(3000); // > 2 pages
+        f[0] = 1.5;
+        f[1024] = 2.5; // the second page's first element
+        a.put_f32(f);
+        let c = a.take_c32(600);
+        a.put_c32(c);
+        let u = a.take_u16_raw(100);
+        a.put_u16(u);
+        let walked = a.touch_pages();
+        assert_eq!(walked, 3000 * 4 + 600 * 8 + 100 * 2);
+        // Touching never moves buffers out of the free lists or changes
+        // their contents.
+        let f = a.take_f32_raw(3000);
+        assert_eq!(a.stats().reuses, 4);
+        assert_eq!(f[0], 1.5);
+        assert_eq!(f[1024], 2.5);
+        a.put_f32(f);
+        // Outstanding buffers are not walked — only idle ones.
+        let held = a.take_f32_raw(3000);
+        assert_eq!(a.touch_pages(), 600 * 8 + 100 * 2);
+        a.put_f32(held);
     }
 
     #[test]

@@ -50,7 +50,16 @@
 //!   bit patterns while all compute stays f32 — a per-layer axis the
 //!   optimizer searches exactly like `cache_kernels`, trading halved
 //!   resident bytes against the measured widen/narrow cost
-//!   (`ZNNI_PRECISION=f32|f16|bf16|auto` gates it end to end).
+//!   (`ZNNI_PRECISION=f32|f16|bf16|auto` gates it end to end);
+//! * NUMA-aware placement and live replanning ([`util::numa`],
+//!   [`server::replan`]): on a multi-node host each shard gets a home
+//!   node — workers pin there and first-touch their arenas so pages
+//!   commit node-locally, and stealing prefers same-node victims
+//!   (`ZNNI_NUMA` gates it; single-node hosts are a provable no-op) —
+//!   while a metrics-driven controller ([`server::Server::start_replanner`])
+//!   re-searches the serving plan on sustained load shifts and swaps it
+//!   in between batches without dropping a request (`ZNNI_REPLAN`
+//!   tunes the hysteresis).
 //!
 //! The one-minute tour — search a plan, compile it, run a patch:
 //!

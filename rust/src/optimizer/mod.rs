@@ -168,6 +168,13 @@ pub struct SearchSpace {
     pub max_extent: usize,
     /// Cap on candidate extents actually evaluated (largest kept).
     pub max_candidates: usize,
+    /// Per-search storage-precision override. `None` (the default)
+    /// defers to the process-wide `ZNNI_PRECISION`
+    /// ([`crate::precision::precision_mode`]); `Some(mode)` pins this
+    /// search to that mode regardless of the environment — the hook
+    /// [`search_serving_multi_spec`] uses to give each tenant its own
+    /// precision policy on one box.
+    pub precision: Option<crate::precision::PrecisionMode>,
 }
 
 impl SearchSpace {
@@ -188,6 +195,7 @@ impl SearchSpace {
             min_extent: 1,
             max_extent,
             max_candidates: 12,
+            precision: None,
         }
     }
 
@@ -205,6 +213,7 @@ impl SearchSpace {
             min_extent: 1,
             max_extent,
             max_candidates: 12,
+            precision: None,
         }
     }
 }
@@ -301,7 +310,7 @@ fn evaluate(
     use crate::precision::precision_mode;
 
     let mode = cache_mode();
-    let pmode = precision_mode();
+    let pmode = space.precision.unwrap_or_else(precision_mode);
     // The precision every *uncached* conv layer gets: a fixed
     // ZNNI_PRECISION pins it, `auto` keeps f32 (without a resident row
     // to halve, half storage only adds conversion time and staging).
@@ -678,16 +687,58 @@ pub struct TenantPlan {
     pub load: crate::server::ServingLoad,
 }
 
+/// One tenant's input to [`search_serving_multi_spec`]: its network,
+/// offered load, dispatch weight, and (optionally) its own storage
+/// precision policy.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// The tenant's network; `net.name` becomes the tenant id.
+    pub net: NetSpec,
+    /// The offered load to size shards and quotas for.
+    pub load: crate::server::ServingLoad,
+    /// Dispatch weight (see [`crate::server::tenants::Tenant::weight`]).
+    pub weight: u32,
+    /// Per-tenant storage-precision override for this tenant's plan
+    /// search: `Some(mode)` pins the tenant to that mode (e.g. a
+    /// latency-insensitive tenant opting into f16 spectra while an
+    /// accuracy-critical sibling stays f32 on the same box); `None`
+    /// inherits the search space's [`SearchSpace::precision`], which in
+    /// turn defaults to the process-wide `ZNNI_PRECISION`.
+    pub precision: Option<crate::precision::PrecisionMode>,
+}
+
+/// Multi-tenant serving search over `(net, load, weight)` tuples — the
+/// original interface, kept for callers without per-tenant precision
+/// policies. Equivalent to [`search_serving_multi_spec`] with every
+/// [`TenantSpec::precision`] set to `None`.
+pub fn search_serving_multi(
+    tenants: &[(NetSpec, crate::server::ServingLoad, u32)],
+    space: &SearchSpace,
+    cost: &CostModel,
+) -> Option<(Vec<TenantPlan>, crate::server::ServerConfig)> {
+    let specs: Vec<TenantSpec> = tenants
+        .iter()
+        .map(|(net, load, weight)| TenantSpec {
+            net: net.clone(),
+            load: *load,
+            weight: *weight,
+            precision: None,
+        })
+        .collect();
+    search_serving_multi_spec(&specs, space, cost)
+}
+
 /// Multi-tenant serving search: size the shard set and split the device
 /// budget across a tenant set in one call.
 ///
-/// Input is `(net, offered load, weight)` per tenant. The search runs
+/// Input is one [`TenantSpec`] per tenant. The search runs
 /// in three steps, all in the paper's memory currency:
 ///
 /// 1. **Per-tenant plan search** under a weight-proportional RAM share
 ///    (`ram × weight / Σ weights`) — a heavy tenant may buy a larger
-///    patch, a light one gets a leaner plan. Any tenant with no
-///    feasible plan fails the whole search (`None`).
+///    patch, a light one gets a leaner plan — and under the tenant's
+///    own precision policy ([`TenantSpec::precision`]). Any tenant
+///    with no feasible plan fails the whole search (`None`).
 /// 2. **Aggregate shard sizing**, mirroring [`search_serving`] but with
 ///    every tenant's warm arenas resident on every shard and one
 ///    in-flight request per tenant per busy shard; the shard count
@@ -700,8 +751,8 @@ pub struct TenantPlan {
 /// The returned [`crate::server::ServerConfig`] bounds each *per-tenant*
 /// per-shard queue with the deepest per-tenant demand, and budgets one
 /// shard's batch against all tenants' resident arenas.
-pub fn search_serving_multi(
-    tenants: &[(NetSpec, crate::server::ServingLoad, u32)],
+pub fn search_serving_multi_spec(
+    tenants: &[TenantSpec],
     space: &SearchSpace,
     cost: &CostModel,
 ) -> Option<(Vec<TenantPlan>, crate::server::ServerConfig)> {
@@ -710,21 +761,24 @@ pub fn search_serving_multi(
     if tenants.is_empty() {
         return None;
     }
-    let total_weight: u64 = tenants.iter().map(|(_, _, w)| u64::from((*w).max(1))).sum();
+    let total_weight: u64 = tenants.iter().map(|t| u64::from(t.weight.max(1))).sum();
     let threads = cost.threads.max(1);
 
-    // Step 1: per-tenant plans under weight-proportional RAM shares.
+    // Step 1: per-tenant plans under weight-proportional RAM shares,
+    // each under the tenant's own precision policy.
     let mut plans = Vec::with_capacity(tenants.len());
     let mut req_bytes = Vec::with_capacity(tenants.len());
-    for (net, load, weight) in tenants {
+    for t in tenants {
         let mut share = space.clone();
-        let w = u64::from((*weight).max(1));
+        let w = u64::from(t.weight.max(1));
         share.device.ram_bytes = (space.device.ram_bytes / total_weight).saturating_mul(w);
-        let plan = search(net, &share, cost)?;
-        let fov = net.field_of_view();
-        let vd = [load.volume_extent; 3];
+        share.precision = t.precision.or(space.precision);
+        let plan = search(&t.net, &share, cost)?;
+        let fov = t.net.field_of_view();
+        let vd = [t.load.volume_extent; 3];
         req_bytes.push(
-            crate::memory::model::request_memory_bytes(net.f_in, net.f_out(), vd, fov).max(1),
+            crate::memory::model::request_memory_bytes(t.net.f_in, t.net.f_out(), vd, fov)
+                .max(1),
         );
         plans.push(plan);
     }
@@ -744,8 +798,8 @@ pub fn search_serving_multi(
         let arenas = per_worker_ws.saturating_mul((shard_workers * shards) as u64);
         let mut inflight = 0u64;
         let mut tp = 0.0f64;
-        for ((_, load, _), (plan, rb)) in tenants.iter().zip(plans.iter().zip(&req_bytes)) {
-            let concurrency = shards.min(load.clients.max(1));
+        for (t, (plan, rb)) in tenants.iter().zip(plans.iter().zip(&req_bytes)) {
+            let concurrency = shards.min(t.load.clients.max(1));
             inflight = inflight.saturating_add(rb.saturating_mul(concurrency as u64));
             let patch_secs = plan.est_secs * threads as f64 / shard_workers as f64;
             tp += concurrency as f64 * plan.out_voxels as f64
@@ -768,7 +822,7 @@ pub fn search_serving_multi(
     let demand: Vec<u64> = tenants
         .iter()
         .zip(&req_bytes)
-        .map(|((_, load, _), rb)| rb.saturating_mul(load.clients.max(1) as u64))
+        .map(|(t, rb)| rb.saturating_mul(t.load.clients.max(1) as u64))
         .collect();
     let total_demand: u64 = demand.iter().sum::<u64>().max(1);
     let quotas: Vec<u64> = demand
@@ -785,7 +839,7 @@ pub fn search_serving_multi(
     // the batch wait follows the slowest tenant's patch time.
     let max_req = req_bytes.iter().copied().max().unwrap_or(1);
     let depth_by_mem = ((spare / max_req).max(1) as usize).min(1 << 16);
-    let max_clients = tenants.iter().map(|(_, l, _)| l.clients.max(1)).max().unwrap_or(1);
+    let max_clients = tenants.iter().map(|t| t.load.clients.max(1)).max().unwrap_or(1);
     let queue_depth = crate::util::ceil_div(2 * max_clients, shards).clamp(1, depth_by_mem);
     let max_batch_requests = depth_by_mem.min(max_clients).clamp(1, 8);
     let patch_secs = plans
@@ -808,12 +862,12 @@ pub fn search_serving_multi(
         .iter()
         .zip(plans)
         .zip(quotas)
-        .map(|(((net, load, weight), plan), quota_bytes)| TenantPlan {
-            name: net.name.clone(),
+        .map(|((t, plan), quota_bytes)| TenantPlan {
+            name: t.net.name.clone(),
             plan,
-            weight: (*weight).max(1),
+            weight: t.weight.max(1),
             quota_bytes,
-            load: *load,
+            load: t.load,
         })
         .collect();
     Some((tenant_plans, cfg))
@@ -1170,6 +1224,38 @@ mod tests {
         let cm = CostModel::default_rates(2);
         let space = SearchSpace::cpu_only(host(4), 15);
         assert!(search_serving_multi(&[], &space, &cm).is_none());
+    }
+
+    #[test]
+    fn tenant_precision_override_is_per_tenant() {
+        // A tenant pinned to f16 gets half-width conv layers while its
+        // unpinned sibling on the same box inherits the process default
+        // (f32 — ZNNI_PRECISION is unset under test), in one search.
+        let minis = crate::net::zoo::bench_miniatures();
+        let cm = CostModel::default_rates(4);
+        let mut space = SearchSpace::cpu_only(host(4), 19);
+        space.algos = vec![ConvAlgo::FftTaskParallel];
+        let load = crate::server::ServingLoad { clients: 2, volume_extent: 19 };
+        let tenants = vec![
+            TenantSpec {
+                net: minis[0].clone(),
+                load,
+                weight: 1,
+                precision: Some(crate::precision::PrecisionMode::F16),
+            },
+            TenantSpec { net: minis[1].clone(), load, weight: 1, precision: None },
+        ];
+        let (plans, _) = search_serving_multi_spec(&tenants, &space, &cm).expect("feasible");
+        for l in &plans[0].plan.layers {
+            if let PlanLayer::Conv { precision, .. } = l {
+                assert_eq!(*precision, crate::precision::Precision::F16, "pinned tenant");
+            }
+        }
+        for l in &plans[1].plan.layers {
+            if let PlanLayer::Conv { precision, .. } = l {
+                assert_eq!(*precision, crate::precision::Precision::F32, "unpinned tenant");
+            }
+        }
     }
 
     #[test]

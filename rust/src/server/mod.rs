@@ -58,6 +58,24 @@
 //!   kernel-spectra cache row is shed (the optimizer's fallback order)
 //!   and the micro-batch cap halves until pressure clears. See
 //!   `docs/ARCHITECTURE.md`, "Fault tolerance & degradation".
+//! * **NUMA placement** — on genuinely multi-node machines (under
+//!   `ZNNI_NUMA=auto`, see [`crate::util::numa`]) each shard gets a
+//!   home node: its serve workers pin to the node's CPUs and
+//!   owner-touch their warm arenas there (first-touched pages land
+//!   node-local — the paper's "fast access to more RAM" requires it),
+//!   and stealing prefers same-node victims — a cross-node steal only
+//!   happens once a victim's queue tail has gone stale. On single-node
+//!   hosts none of these paths run: no affinity syscalls, identical
+//!   scheduling, bit-identical outputs.
+//! * **Live replanning** — a [`replan::ReplanController`] fed from this
+//!   server's own metrics decides when a sustained load shift justifies
+//!   re-running [`crate::optimizer::search_serving`];
+//!   [`Server::swap_plan`] then installs the new compiled plan *between
+//!   batches* (each shard's coordinator slot is mutex-held for exactly
+//!   one batch), with kernel-spectra caches warmed before cutover and
+//!   the serving weights reused, so in-flight batches finish on the
+//!   plan that dispatched them and outputs are unchanged across the
+//!   swap.
 //!
 //! Use [`crate::optimizer::search_serving`] to derive both the plan and
 //! the [`ServerConfig`] from one search call; with a
@@ -101,12 +119,13 @@ use anyhow::{bail, Result};
 use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
 use crate::memory::model::request_memory_bytes;
 use crate::net::NetSpec;
-use crate::optimizer::CompiledPlan;
+use crate::optimizer::{CompiledPlan, CostModel, SearchSpace};
 use crate::tensor::{Shape5, Tensor5, Vec3};
 use crate::util::faults::{self, FaultSite};
 use crate::util::pool::TaskPool;
 use crate::util::sync::{recover_lock, recover_wait_timeout};
 
+pub mod replan;
 pub mod tenants;
 
 /// Latency samples retained for the p50/p99 estimate (ring buffer).
@@ -380,6 +399,11 @@ struct ShardStats {
     batches: u64,
     requests: u64,
     steals: u64,
+    /// Steals from a victim sharing this shard's home node (on a
+    /// single-node machine every steal is local).
+    local_steals: u64,
+    /// Cross-node steals, taken only past the staleness threshold.
+    remote_steals: u64,
     expired: u64,
     panics: u64,
     restarts: u64,
@@ -395,11 +419,27 @@ struct Shard {
 struct Inner {
     cfg: ServerConfig,
     pool: Arc<TaskPool>,
-    coordinators: Vec<Coordinator>,
+    /// One coordinator slot per shard. A slot's mutex is held for the
+    /// duration of exactly one batch dispatch ([`Inner::run_batch`]),
+    /// so [`Inner::swap_plan`] acquiring every slot serializes with
+    /// in-flight batches: a cutover lands *between* batches, never
+    /// under one.
+    coordinators: Vec<Mutex<Coordinator>>,
     shards: Vec<Shard>,
     /// Bytes of one shard's warm worker arenas (workspace_req × workers)
-    /// — the fixed term of the batch admission inequality.
-    shard_ws_bytes: u64,
+    /// — the fixed term of the batch admission inequality. Atomic
+    /// because a live plan swap re-derives it for the new plan.
+    shard_ws_bytes: AtomicU64,
+    /// The served network spec, kept so a live replan can recompile a
+    /// new plan against the same architecture (and the same weights).
+    net: NetSpec,
+    /// Home NUMA node per shard: `None` everywhere unless
+    /// `ZNNI_NUMA=auto` found a multi-node machine. Drives the locality
+    /// tiers of [`Inner::try_steal`].
+    home_nodes: Vec<Option<usize>>,
+    /// Home-node CPU set per shard — handed to each coordinator's serve
+    /// workers, and re-applied to replacement coordinators on a swap.
+    home_sets: Vec<Option<Arc<Vec<usize>>>>,
     /// Name of the served network — the tenant id carried by
     /// [`RejectReason::WrongTenantShape`] (a single-model server is one
     /// tenant owning the whole budget).
@@ -407,7 +447,11 @@ struct Inner {
     f_in: usize,
     f_out: usize,
     fov: Vec3,
-    patch: Vec3,
+    /// Patch extent of the *current* plan (swapped with it); submits
+    /// validate against this.
+    patch: Mutex<Vec3>,
+    /// Plan cutovers committed by [`Inner::swap_plan`].
+    plan_swaps: AtomicU64,
     shutdown: AtomicBool,
     next_id: AtomicU64,
     rr: AtomicUsize,
@@ -473,6 +517,12 @@ pub struct ShardSnapshot {
     pub requests: u64,
     /// Requests stolen from siblings' queue tails.
     pub steals: u64,
+    /// Steals whose victim shared this shard's home NUMA node (every
+    /// steal, on a single-node machine).
+    pub local_steals: u64,
+    /// Cross-node steals — taken only once the victim's queue tail had
+    /// waited past the staleness threshold.
+    pub remote_steals: u64,
     /// Requests this shard dropped at dispatch because their deadline
     /// had already passed in the queue.
     pub expired: u64,
@@ -555,6 +605,9 @@ pub struct ServerMetrics {
     /// pressure, restored to [`ServerConfig::max_batch_requests`] after
     /// a streak of pressure-free batches.
     pub current_max_batch: usize,
+    /// Live plan cutovers committed by [`Server::swap_plan`] (directly
+    /// or via the replanner) since start.
+    pub plan_swaps: u64,
     /// Per-shard observability snapshots.
     pub per_shard: Vec<ShardSnapshot>,
 }
@@ -581,10 +634,13 @@ impl ServerMetrics {
         let fresh: u64 = self.per_shard.iter().map(|s| s.arena_fresh_allocs).sum();
         let hwm = self.per_shard.iter().map(|s| s.arena_hwm_bytes).max().unwrap_or(0);
         let steals: u64 = self.per_shard.iter().map(|s| s.steals).sum();
+        let local: u64 = self.per_shard.iter().map(|s| s.local_steals).sum();
+        let remote: u64 = self.per_shard.iter().map(|s| s.remote_steals).sum();
         format!(
             "submitted={} completed={} rejected={} expired={} late={} batches={} occupancy={:.2} \
-             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} arena_hwm={} arena_fresh_allocs={} kernel_cache={} \
-             panics={} restarts={} mem_pressure={} shed_cache={} max_batch={}",
+             queue_hwm={} queued={} p50={:.3}ms p99={:.3}ms steals={} (local={} remote={}) \
+             arena_hwm={} arena_fresh_allocs={} kernel_cache={} \
+             panics={} restarts={} mem_pressure={} shed_cache={} max_batch={} plan_swaps={}",
             self.submitted,
             self.completed,
             self.rejected,
@@ -597,6 +653,8 @@ impl ServerMetrics {
             self.p50_latency.as_secs_f64() * 1e3,
             self.p99_latency.as_secs_f64() * 1e3,
             steals,
+            local,
+            remote,
             crate::util::human_bytes(hwm),
             fresh,
             crate::util::human_bytes(self.kernel_cache_bytes),
@@ -605,6 +663,7 @@ impl ServerMetrics {
             self.mem_pressure_events,
             crate::util::human_bytes(self.shed_kernel_cache_bytes),
             self.current_max_batch,
+            self.plan_swaps,
         )
     }
 }
@@ -615,6 +674,10 @@ impl ServerMetrics {
 pub struct Server {
     inner: Arc<Inner>,
     handles: Vec<JoinHandle<()>>,
+    /// Stop flag + thread of the metrics-driven replanner, when
+    /// [`Server::start_replanner`] armed one. Joined before the shards
+    /// on drop.
+    replanner: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl Server {
@@ -648,13 +711,34 @@ impl Server {
         plan.warm_kernel_caches(&pool);
         let fov = net.field_of_view();
         let f_out = net.f_out();
+        // Home-node assignment: only on a genuinely multi-node machine
+        // under ZNNI_NUMA=auto do shards get CPU sets (round-robin over
+        // nodes). Everywhere else every entry stays None and no
+        // affinity syscall is ever issued — the provable no-op path.
+        let numa = crate::util::numa::topology();
+        let active = crate::util::numa::placement_active(numa);
+        let mut home_nodes = Vec::with_capacity(cfg.shards);
+        let mut home_sets: Vec<Option<Arc<Vec<usize>>>> = Vec::with_capacity(cfg.shards);
+        for si in 0..cfg.shards {
+            if active {
+                let node = crate::util::numa::home_node_for_shard(numa, si);
+                home_nodes.push(Some(node));
+                home_sets.push(Some(Arc::new(numa.nodes[node].cpus.clone())));
+            } else {
+                home_nodes.push(None);
+                home_sets.push(None);
+            }
+        }
         let mut coordinators = Vec::with_capacity(cfg.shards);
-        for _ in 0..cfg.shards {
+        for si in 0..cfg.shards {
             let mut c = Coordinator::with_shared_plan(net.clone(), plan.clone())?;
             c.workers = shard_workers;
+            c.home_cpus = home_sets[si].clone();
             coordinators.push(c);
         }
         let patch = coordinators[0].patch();
+        let coordinators: Vec<Mutex<Coordinator>> =
+            coordinators.into_iter().map(Mutex::new).collect();
         let shards = (0..cfg.shards)
             .map(|_| Shard {
                 queue: Mutex::new(VecDeque::new()),
@@ -668,12 +752,16 @@ impl Server {
             pool,
             coordinators,
             shards,
-            shard_ws_bytes,
+            shard_ws_bytes: AtomicU64::new(shard_ws_bytes),
+            home_nodes,
+            home_sets,
             name: net.name.clone(),
             f_in: net.f_in,
             f_out,
+            net,
             fov,
-            patch,
+            patch: Mutex::new(patch),
+            plan_swaps: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
             rr: AtomicUsize::new(0),
@@ -703,7 +791,7 @@ impl Server {
                     .expect("spawn shard thread")
             })
             .collect();
-        Ok(Server { inner, handles })
+        Ok(Server { inner, handles, replanner: None })
     }
 
     /// The serving configuration.
@@ -711,9 +799,75 @@ impl Server {
         &self.inner.cfg
     }
 
-    /// Patch extent the shards execute (the plan's input extent).
+    /// Patch extent the shards execute (the *current* plan's input
+    /// extent — a live plan swap updates it).
     pub fn patch(&self) -> Vec3 {
-        self.inner.patch
+        *recover_lock(&self.inner.patch)
+    }
+
+    /// Install a new compiled plan on every shard without stopping the
+    /// server: kernel-spectra caches are warmed first (off every
+    /// request's critical path), then each shard's coordinator slot is
+    /// replaced under its mutex — a shard mid-batch finishes that batch
+    /// on the old plan and dispatches its next one on the new plan, so
+    /// every in-flight request is answered by the plan that dispatched
+    /// it. Fails (leaving the current plan serving untouched) if the
+    /// new plan's warm arenas cannot fit the shard batch budget or the
+    /// plan is not all-MPF.
+    pub fn swap_plan(&self, plan: CompiledPlan) -> Result<()> {
+        self.inner.swap_plan(Arc::new(plan))
+    }
+
+    /// Arm the metrics-driven replanner: a background thread samples
+    /// this server's own metrics (p99 latency, deadline misses, batch
+    /// occupancy) every [`replan::ReplanConfig::sample_every`] and
+    /// feeds them to a [`replan::ReplanController`]. On a sustained
+    /// shift (hysteresis + cooldown in the controller keep noise from
+    /// ever thrashing plans) it re-runs
+    /// [`crate::optimizer::search_serving`] against `space`/`cost`/
+    /// `load` and, when the winner differs from the serving plan, swaps
+    /// it in via [`Server::swap_plan`] — reusing the serving weights,
+    /// so outputs are unchanged across the cutover. The thread stops
+    /// when the server drops.
+    pub fn start_replanner(
+        &mut self,
+        space: SearchSpace,
+        cost: CostModel,
+        load: ServingLoad,
+        rcfg: replan::ReplanConfig,
+    ) {
+        let inner = self.inner.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("znni-replan".into())
+            .spawn(move || {
+                let mut ctl = replan::ReplanController::new(rcfg.clone());
+                while !stop_t.load(Ordering::SeqCst) {
+                    // Sleep in short slices so a server drop never
+                    // waits a full sample interval on the join.
+                    let mut left = rcfg.sample_every;
+                    while left > Duration::ZERO && !stop_t.load(Ordering::SeqCst) {
+                        let step = left.min(Duration::from_millis(5));
+                        std::thread::sleep(step);
+                        left = left.saturating_sub(step);
+                    }
+                    if stop_t.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let m = inner.snapshot_metrics();
+                    let sample = replan::ReplanSample {
+                        p99_us: m.p99_latency.as_micros() as u64,
+                        deadline_misses: m.deadline_misses(),
+                        batch_occupancy: m.batch_occupancy(),
+                    };
+                    if ctl.observe(sample).is_some() {
+                        inner.replan(&space, &cost, &load);
+                    }
+                }
+            })
+            .expect("spawn replanner thread");
+        self.replanner = Some((stop, handle));
     }
 
     /// Submit with the config's default deadline. Never blocks: a full
@@ -737,17 +891,19 @@ impl Server {
             let detail = format!("expected a single volume (s = 1), got {}", sh);
             return Err(Rejected { volume, reason: RejectReason::BadShape { detail } });
         }
-        if let Some(detail) = tenant_shape_error(sh, inner.f_in, inner.patch) {
+        let patch = *recover_lock(&inner.patch);
+        if let Some(detail) = tenant_shape_error(sh, inner.f_in, patch) {
             let reason = RejectReason::WrongTenantShape {
                 tenant: inner.name.clone(),
                 f_in: inner.f_in,
-                min_extent: inner.patch,
+                min_extent: patch,
                 detail,
             };
             return Err(Rejected { volume, reason });
         }
         let bytes = request_memory_bytes(inner.f_in, inner.f_out, [sh.x, sh.y, sh.z], inner.fov);
-        if bytes.saturating_add(inner.shard_ws_bytes) > inner.cfg.memory_budget {
+        let ws = inner.shard_ws_bytes.load(Ordering::SeqCst);
+        if bytes.saturating_add(ws) > inner.cfg.memory_budget {
             return Err(Rejected {
                 volume,
                 reason: RejectReason::TooLarge { bytes, budget: inner.cfg.memory_budget },
@@ -808,58 +964,18 @@ impl Server {
 
     /// Snapshot the serving metrics.
     pub fn metrics(&self) -> ServerMetrics {
-        let inner = &*self.inner;
-        let per_shard: Vec<ShardSnapshot> = inner
-            .shards
-            .iter()
-            .map(|sh| {
-                let st = recover_lock(&sh.stats);
-                ShardSnapshot {
-                    batches: st.batches,
-                    requests: st.requests,
-                    steals: st.steals,
-                    expired: st.expired,
-                    panics: st.panics,
-                    restarts: st.restarts,
-                    queue_len: recover_lock(&sh.queue).len(),
-                    patches: st.metrics.patches,
-                    voxels: st.metrics.voxels,
-                    busy_secs: st.metrics.busy_secs,
-                    arena_hwm_bytes: st.metrics.arena_hwm_bytes,
-                    arena_fresh_allocs: st.metrics.arena_fresh_allocs,
-                    assembly_lock_wait_secs: st.metrics.assembly_lock_wait_secs,
-                    kernel_cache_bytes: st.metrics.kernel_cache_bytes,
-                }
-            })
-            .collect();
-        let mut samples = recover_lock(&inner.latencies).samples_us.clone();
-        let [p50, p99] = LatencyRing::percentiles(&mut samples, [0.50, 0.99]);
-        ServerMetrics {
-            submitted: inner.submitted.load(Ordering::SeqCst),
-            rejected: inner.rejected.load(Ordering::SeqCst),
-            expired: inner.expired.load(Ordering::SeqCst),
-            completed_late: inner.completed_late.load(Ordering::SeqCst),
-            completed: inner.completed.load(Ordering::SeqCst),
-            batches: inner.batches.load(Ordering::SeqCst),
-            batch_requests: inner.batch_requests.load(Ordering::SeqCst),
-            queue_depth_hwm: inner.queue_depth_hwm.load(Ordering::SeqCst),
-            queued_now: per_shard.iter().map(|s| s.queue_len).sum(),
-            p50_latency: p50,
-            p99_latency: p99,
-            voxels: per_shard.iter().map(|s| s.voxels).sum(),
-            kernel_cache_bytes: per_shard.iter().map(|s| s.kernel_cache_bytes).max().unwrap_or(0),
-            panics: inner.panics.load(Ordering::SeqCst),
-            restarts: inner.restarts.load(Ordering::SeqCst),
-            mem_pressure_events: inner.mem_pressure_events.load(Ordering::SeqCst),
-            shed_kernel_cache_bytes: inner.shed_cache_bytes.load(Ordering::SeqCst),
-            current_max_batch: inner.batch_limit.load(Ordering::SeqCst),
-            per_shard,
-        }
+        self.inner.snapshot_metrics()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
+        // The replanner goes first: it must not race a plan swap
+        // against the shard shutdown below.
+        if let Some((stop, h)) = self.replanner.take() {
+            stop.store(true, Ordering::SeqCst);
+            let _ = h.join();
+        }
         self.inner.shutdown.store(true, Ordering::SeqCst);
         for sh in &self.inner.shards {
             sh.cvar.notify_all();
@@ -917,7 +1033,126 @@ impl Inner {
             // survivors too so the restarted shard re-warms a
             // consistent set (steady-state fresh allocs return to zero
             // after the first post-restart batch).
-            self.coordinators[si].reset_arenas();
+            recover_lock(&self.coordinators[si]).reset_arenas();
+        }
+    }
+
+    /// Snapshot the serving metrics (shared by [`Server::metrics`] and
+    /// the replanner thread, which holds only the `Inner`).
+    fn snapshot_metrics(&self) -> ServerMetrics {
+        let per_shard: Vec<ShardSnapshot> = self
+            .shards
+            .iter()
+            .map(|sh| {
+                let st = recover_lock(&sh.stats);
+                ShardSnapshot {
+                    batches: st.batches,
+                    requests: st.requests,
+                    steals: st.steals,
+                    local_steals: st.local_steals,
+                    remote_steals: st.remote_steals,
+                    expired: st.expired,
+                    panics: st.panics,
+                    restarts: st.restarts,
+                    queue_len: recover_lock(&sh.queue).len(),
+                    patches: st.metrics.patches,
+                    voxels: st.metrics.voxels,
+                    busy_secs: st.metrics.busy_secs,
+                    arena_hwm_bytes: st.metrics.arena_hwm_bytes,
+                    arena_fresh_allocs: st.metrics.arena_fresh_allocs,
+                    assembly_lock_wait_secs: st.metrics.assembly_lock_wait_secs,
+                    kernel_cache_bytes: st.metrics.kernel_cache_bytes,
+                }
+            })
+            .collect();
+        let mut samples = recover_lock(&self.latencies).samples_us.clone();
+        let [p50, p99] = LatencyRing::percentiles(&mut samples, [0.50, 0.99]);
+        ServerMetrics {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+            expired: self.expired.load(Ordering::SeqCst),
+            completed_late: self.completed_late.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+            batches: self.batches.load(Ordering::SeqCst),
+            batch_requests: self.batch_requests.load(Ordering::SeqCst),
+            queue_depth_hwm: self.queue_depth_hwm.load(Ordering::SeqCst),
+            queued_now: per_shard.iter().map(|s| s.queue_len).sum(),
+            p50_latency: p50,
+            p99_latency: p99,
+            voxels: per_shard.iter().map(|s| s.voxels).sum(),
+            kernel_cache_bytes: per_shard.iter().map(|s| s.kernel_cache_bytes).max().unwrap_or(0),
+            panics: self.panics.load(Ordering::SeqCst),
+            restarts: self.restarts.load(Ordering::SeqCst),
+            mem_pressure_events: self.mem_pressure_events.load(Ordering::SeqCst),
+            shed_kernel_cache_bytes: self.shed_cache_bytes.load(Ordering::SeqCst),
+            current_max_batch: self.batch_limit.load(Ordering::SeqCst),
+            plan_swaps: self.plan_swaps.load(Ordering::SeqCst),
+            per_shard,
+        }
+    }
+
+    /// Swap every shard's coordinator onto `plan`. Preconditions are
+    /// checked before any slot is touched (all-or-nothing): the plan
+    /// must be all-MPF and its warm arenas must leave batch headroom.
+    /// Kernel-spectra caches are warmed here — off every request's
+    /// critical path — and each slot's mutex is then taken in turn, so
+    /// a shard mid-batch finishes that batch on the old plan and picks
+    /// up the new plan for its next dispatch. Admission geometry (the
+    /// patch extent and the warm-arena term) updates last; requests
+    /// already queued are served by whichever plan dispatches them —
+    /// same net, same weights, so the function they compute is the
+    /// same.
+    fn swap_plan(&self, plan: Arc<CompiledPlan>) -> Result<()> {
+        let shard_workers = (self.pool.workers() / self.cfg.shards).max(1);
+        let ws = plan.workspace_req(shard_workers).times(shard_workers).total();
+        if ws >= self.cfg.memory_budget {
+            bail!(
+                "plan swap rejected: new plan's warm arenas {} exceed the shard budget {}",
+                ws,
+                self.cfg.memory_budget
+            );
+        }
+        plan.warm_kernel_caches(&self.pool);
+        let mut fresh = Vec::with_capacity(self.coordinators.len());
+        for si in 0..self.coordinators.len() {
+            let mut c = Coordinator::with_shared_plan(self.net.clone(), plan.clone())?;
+            c.workers = shard_workers;
+            c.home_cpus = self.home_sets[si].clone();
+            fresh.push(c);
+        }
+        let new_patch = fresh[0].patch();
+        for (slot, c) in self.coordinators.iter().zip(fresh) {
+            *recover_lock(slot) = c;
+        }
+        *recover_lock(&self.patch) = new_patch;
+        self.shard_ws_bytes.store(ws, Ordering::SeqCst);
+        self.plan_swaps.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Search + compile + swap, for the replanner thread. Returns
+    /// whether a cutover happened: an infeasible search, a winner
+    /// identical to the serving plan, or a failed budget check all
+    /// leave the current plan serving. The new plan is compiled against
+    /// the *serving weights*, so a swap never changes the function the
+    /// server computes.
+    fn replan(&self, space: &SearchSpace, cost: &CostModel, load: &ServingLoad) -> bool {
+        let Some((plan, _)) = crate::optimizer::search_serving(&self.net, space, cost, load)
+        else {
+            return false;
+        };
+        let (weights, same) = {
+            let cur = recover_lock(&self.coordinators[0]);
+            let cp = cur.plan();
+            let same = cp.plan.input == plan.input && cp.plan.layers == plan.layers;
+            (cp.weights.clone(), same)
+        };
+        if same {
+            return false;
+        }
+        match crate::optimizer::compile(&self.net, &plan, &weights) {
+            Ok(cp) => self.swap_plan(Arc::new(cp)).is_ok(),
+            Err(_) => false,
         }
     }
 
@@ -927,17 +1162,59 @@ impl Inner {
         recover_lock(&self.shards[si].queue).pop_front()
     }
 
+    /// How stale a *cross-node* victim's queue tail must be before an
+    /// idle shard reaches across the interconnect for it. Same-node
+    /// steals keep first-touch traffic on one node and happen
+    /// immediately; a remote steal drags the request's pages (and its
+    /// output's) across nodes, so it only pays once the victim has
+    /// demonstrably fallen behind — its tail has waited longer than two
+    /// batch windows.
+    fn steal_staleness(&self) -> Duration {
+        self.cfg.max_batch_wait.max(Duration::from_micros(500)) * 2
+    }
+
     /// Steal one request from the tail of a sibling's queue — the
     /// victim's *least* urgent work, so stealing never takes a request
-    /// the victim was about to dispatch against a deadline.
+    /// the victim was about to dispatch against a deadline. Victims are
+    /// tried in two locality tiers: same-home-node shards first
+    /// (unconditionally), then cross-node shards, but only for work
+    /// staler than [`Inner::steal_staleness`].
     fn try_steal(&self, si: usize) -> Option<Queued> {
         let n = self.shards.len();
+        let my_node = self.home_nodes[si];
+        // Tier 1: same home node. On a single-node machine every shard
+        // shares the `None` home, so this tier is the whole ring and
+        // stealing behaves exactly as it did before NUMA placement.
         for k in 1..n {
             let vi = (si + k) % n;
+            if self.home_nodes[vi] != my_node {
+                continue;
+            }
             let stolen = recover_lock(&self.shards[vi].queue).pop_back();
             if let Some(q) = stolen {
-                recover_lock(&self.shards[si].stats).steals += 1;
+                let mut st = recover_lock(&self.shards[si].stats);
+                st.steals += 1;
+                st.local_steals += 1;
                 return Some(q);
+            }
+        }
+        // Tier 2: cross-node victims, only for stale tails — locality
+        // is worth less than a request visibly rotting in a queue.
+        let threshold = self.steal_staleness();
+        for k in 1..n {
+            let vi = (si + k) % n;
+            if self.home_nodes[vi] == my_node {
+                continue;
+            }
+            let mut q = recover_lock(&self.shards[vi].queue);
+            let stale = q.back().map(|x| x.enqueued.elapsed() >= threshold).unwrap_or(false);
+            let stolen = if stale { q.pop_back() } else { None };
+            drop(q);
+            if let Some(item) = stolen {
+                let mut st = recover_lock(&self.shards[si].stats);
+                st.steals += 1;
+                st.remote_steals += 1;
+                return Some(item);
             }
         }
         None
@@ -981,12 +1258,11 @@ impl Inner {
             // allow.
             let limit =
                 self.batch_limit.load(Ordering::SeqCst).clamp(1, self.cfg.max_batch_requests);
+            let ws = self.shard_ws_bytes.load(Ordering::SeqCst);
             while batch.len() < limit {
                 match self.try_pop_local(si) {
                     Some(q) => {
-                        if batch_bytes
-                            .saturating_add(q.bytes)
-                            .saturating_add(self.shard_ws_bytes)
+                        if batch_bytes.saturating_add(q.bytes).saturating_add(ws)
                             > self.cfg.memory_budget
                         {
                             // Does not fit this batch — put it back. A
@@ -1039,7 +1315,7 @@ impl Inner {
             self.clear_streak.store(0, Ordering::SeqCst);
             let cur = self.batch_limit.load(Ordering::SeqCst);
             self.batch_limit.store((cur / 2).max(1), Ordering::SeqCst);
-            let shed = self.coordinators[si].plan().shed_largest_kernel_cache();
+            let shed = recover_lock(&self.coordinators[si]).plan().shed_largest_kernel_cache();
             if shed > 0 {
                 self.shed_cache_bytes.fetch_add(shed, Ordering::SeqCst);
             }
@@ -1052,7 +1328,7 @@ impl Inner {
                 self.batch_limit.store(next, Ordering::SeqCst);
                 if next >= self.cfg.max_batch_requests {
                     self.pressured.store(false, Ordering::SeqCst);
-                    self.coordinators[si].plan().restore_kernel_caches();
+                    recover_lock(&self.coordinators[si]).plan().restore_kernel_caches();
                 }
             }
         }
@@ -1091,7 +1367,10 @@ impl Inner {
         // supervisor restarts the shard.
         let served = catch_unwind(AssertUnwindSafe(|| {
             faults::fire(FaultSite::ShardDispatch);
-            self.coordinators[si].serve(reqs, &self.pool)
+            // The slot lock is held for exactly this batch: a
+            // concurrent swap_plan waits here, and once it lands the
+            // next batch dispatches on the new plan.
+            recover_lock(&self.coordinators[si]).serve(reqs, &self.pool)
         }));
         match served {
             Ok(Ok((resps, m))) => {
@@ -1259,6 +1538,42 @@ mod tests {
         assert!(m.batches >= 1);
         assert_eq!(m.per_shard.len(), 2);
         assert!(m.p99_latency >= m.p50_latency);
+        // The locality split always accounts for every steal.
+        for s in &m.per_shard {
+            assert_eq!(s.local_steals + s.remote_steals, s.steals);
+        }
+    }
+
+    #[test]
+    fn swap_plan_cuts_over_and_preserves_the_function() {
+        let (net, cp, pool) = setup();
+        let weights = cp.weights.clone();
+        let server = Server::start(net.clone(), cp, ServerConfig::default(), pool).unwrap();
+        let vol = || Tensor5::random(Shape5::new(1, 1, 18, 18, 18), 21);
+        let before = server.submit(vol()).unwrap().wait().unwrap();
+        // A genuinely different plan over the same weights: force the
+        // FFT family.
+        let cm = CostModel::default_rates(2);
+        let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+        space.algos = vec![crate::memory::model::ConvAlgo::FftTaskParallel];
+        space.max_candidates = 2;
+        let plan_b = search(&net, &space, &cm).unwrap();
+        let cp_b = compile(&net, &plan_b, &weights).unwrap();
+        server.swap_plan(cp_b).unwrap();
+        let after = server.submit(vol()).unwrap().wait().unwrap();
+        let m = server.metrics();
+        assert_eq!(m.plan_swaps, 1);
+        assert_eq!(m.completed, 2);
+        // Same weights, same input ⇒ the same function across the
+        // algorithm change (bit-identity against a cold start on the
+        // new plan is the integration test's job).
+        crate::util::quick::assert_allclose(
+            before.output.data(),
+            after.output.data(),
+            1e-4,
+            1e-3,
+            "swap preserves the served function",
+        );
     }
 
     #[test]

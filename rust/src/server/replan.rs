@@ -1,0 +1,356 @@
+//! Metrics-driven live replanning: decide *when* a sustained load
+//! shift justifies re-running the serving plan search.
+//!
+//! The controller is deliberately pure — tick-based, no clocks, no
+//! I/O — so its stability properties are unit-testable. The sampling
+//! thread ([`crate::server::Server::start_replanner`]) feeds it one
+//! [`ReplanSample`] per interval; [`ReplanController::observe`]
+//! returns `Some(trigger)` only when
+//!
+//! 1. a **baseline** has formed (the mean of the first
+//!    [`ReplanConfig::window`] samples),
+//! 2. a signal has stayed outside the baseline's **hysteresis band**
+//!    for [`ReplanConfig::sustain`] *consecutive* samples (an
+//!    excursion that dips back in resets the count), and
+//! 3. the **cooldown** from the previous trigger has elapsed.
+//!
+//! After a trigger the baseline re-forms from scratch, so subsequent
+//! shifts are judged against the *new* operating point. The
+//! plan-thrash failure mode — noisy metrics causing repeated expensive
+//! searches and cutovers — is structurally excluded: inside the band
+//! nothing fires, a short excursion is absorbed by `sustain`, and even
+//! a genuine oscillation fires at most once per `cooldown` ticks.
+
+use std::time::Duration;
+
+/// One observation of the serving metrics, taken per sampling tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplanSample {
+    /// 99th-percentile submit-to-response latency, in microseconds.
+    pub p99_us: u64,
+    /// Cumulative deadline misses (expired + completed late) — the
+    /// controller differences consecutive samples into a per-tick rate.
+    pub deadline_misses: u64,
+    /// Mean requests per dispatched batch
+    /// ([`crate::server::ServerMetrics::batch_occupancy`]).
+    pub batch_occupancy: f64,
+}
+
+/// Knobs of the replan controller. Tick-denominated fields count
+/// sampling intervals, so wall-clock behavior scales with
+/// [`ReplanConfig::sample_every`].
+#[derive(Clone, Debug)]
+pub struct ReplanConfig {
+    /// Samples averaged into the baseline before shifts are judged.
+    pub window: usize,
+    /// Consecutive out-of-band samples required to trigger.
+    pub sustain: usize,
+    /// Relative half-width of the no-trigger band around the baseline
+    /// (0.5 ⇒ a signal must move ±50% to count as out-of-band).
+    pub hysteresis: f64,
+    /// Ticks after a trigger during which no new trigger fires.
+    pub cooldown: usize,
+    /// Wall-clock spacing between samples (used by the sampling
+    /// thread; the controller itself is tick-based).
+    pub sample_every: Duration,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            window: 8,
+            sustain: 4,
+            hysteresis: 0.5,
+            cooldown: 32,
+            sample_every: Duration::from_millis(50),
+        }
+    }
+}
+
+impl ReplanConfig {
+    /// Overrides from `ZNNI_REPLAN` — a comma list
+    /// `window,sustain,hysteresis,cooldown,sample_ms` where any field
+    /// may be left empty to keep its default (e.g. `ZNNI_REPLAN=4,,0.3`
+    /// changes only the window and the band).
+    pub fn from_env() -> Self {
+        match std::env::var("ZNNI_REPLAN") {
+            Ok(v) => Self::parse(&v),
+            Err(_) => ReplanConfig::default(),
+        }
+    }
+
+    /// Parse one `ZNNI_REPLAN` spec (separated out for testability).
+    fn parse(spec: &str) -> Self {
+        let mut cfg = ReplanConfig::default();
+        let parts: Vec<&str> = spec.split(',').collect();
+        if let Some(x) = parts.first().and_then(|s| s.trim().parse::<usize>().ok()) {
+            cfg.window = x.max(1);
+        }
+        if let Some(x) = parts.get(1).and_then(|s| s.trim().parse::<usize>().ok()) {
+            cfg.sustain = x.max(1);
+        }
+        if let Some(x) = parts.get(2).and_then(|s| s.trim().parse::<f64>().ok()) {
+            if x > 0.0 && x.is_finite() {
+                cfg.hysteresis = x;
+            }
+        }
+        if let Some(x) = parts.get(3).and_then(|s| s.trim().parse::<usize>().ok()) {
+            cfg.cooldown = x;
+        }
+        if let Some(x) = parts.get(4).and_then(|s| s.trim().parse::<u64>().ok()) {
+            cfg.sample_every = Duration::from_millis(x.max(1));
+        }
+        cfg
+    }
+}
+
+/// Which signal left the band and fired the trigger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplanTrigger {
+    /// p99 latency shifted out of the baseline band.
+    P99Shift,
+    /// Deadline misses started accruing at an out-of-band rate.
+    MissRate,
+    /// Batch occupancy shifted out of the baseline band.
+    Occupancy,
+}
+
+/// Absolute floors under the relative deviation test, one per tracked
+/// signal (p99 µs, miss rate per tick, batch occupancy): near-zero
+/// baselines would otherwise make any nonzero sample an infinite
+/// relative shift. One microsecond of p99, a quarter-miss-per-tick and
+/// 0.05 requests of occupancy are below measurement noise.
+const DEVIATION_FLOORS: [f64; 3] = [1.0, 0.25, 0.05];
+
+/// The pure hysteresis/cooldown state machine. Feed one sample per
+/// sampling tick through [`ReplanController::observe`].
+pub struct ReplanController {
+    cfg: ReplanConfig,
+    /// Samples collected toward the (re-)forming baseline, as
+    /// `[p99_us, miss_delta, occupancy]` rows.
+    warmup: Vec<[f64; 3]>,
+    baseline: Option<[f64; 3]>,
+    /// Previous cumulative miss counter, for differencing into a rate.
+    last_misses: Option<u64>,
+    out_streak: usize,
+    cooldown_left: usize,
+    triggers: u64,
+}
+
+impl ReplanController {
+    /// A fresh controller: no baseline yet, no cooldown pending.
+    pub fn new(cfg: ReplanConfig) -> Self {
+        ReplanController {
+            cfg,
+            warmup: Vec::new(),
+            baseline: None,
+            last_misses: None,
+            out_streak: 0,
+            cooldown_left: 0,
+            triggers: 0,
+        }
+    }
+
+    /// Total triggers fired so far.
+    pub fn triggers(&self) -> u64 {
+        self.triggers
+    }
+
+    /// Ingest one sample; `Some` exactly when a sustained out-of-band
+    /// shift should re-run the plan search now.
+    pub fn observe(&mut self, s: ReplanSample) -> Option<ReplanTrigger> {
+        let miss_delta = match self.last_misses {
+            Some(prev) => s.deadline_misses.saturating_sub(prev) as f64,
+            None => 0.0,
+        };
+        self.last_misses = Some(s.deadline_misses);
+        let x = [s.p99_us as f64, miss_delta, s.batch_occupancy];
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+        }
+        let Some(base) = self.baseline else {
+            self.warmup.push(x);
+            if self.warmup.len() >= self.cfg.window {
+                let mut mean = [0.0f64; 3];
+                for row in &self.warmup {
+                    for (m, v) in mean.iter_mut().zip(row) {
+                        *m += v;
+                    }
+                }
+                for m in &mut mean {
+                    *m /= self.warmup.len() as f64;
+                }
+                self.baseline = Some(mean);
+                self.warmup.clear();
+            }
+            return None;
+        };
+        let out = (0..3).find(|&i| {
+            let dev = (x[i] - base[i]).abs() / base[i].abs().max(DEVIATION_FLOORS[i]);
+            dev > self.cfg.hysteresis
+        });
+        match out {
+            Some(i) if self.cooldown_left == 0 => {
+                self.out_streak += 1;
+                if self.out_streak >= self.cfg.sustain {
+                    self.out_streak = 0;
+                    // Re-form the baseline at the new operating point;
+                    // cooldown guards the interval until it has.
+                    self.baseline = None;
+                    self.cooldown_left = self.cfg.cooldown;
+                    self.triggers += 1;
+                    return Some(match i {
+                        0 => ReplanTrigger::P99Shift,
+                        1 => ReplanTrigger::MissRate,
+                        _ => ReplanTrigger::Occupancy,
+                    });
+                }
+            }
+            // Out of band but still cooling down: suppressed, and the
+            // streak does not accrue toward a fire-on-expiry.
+            Some(_) => {}
+            None => self.out_streak = 0,
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ReplanConfig {
+        ReplanConfig {
+            window: 4,
+            sustain: 3,
+            hysteresis: 0.5,
+            cooldown: 8,
+            sample_every: Duration::from_millis(1),
+        }
+    }
+
+    fn p99(us: u64) -> ReplanSample {
+        ReplanSample { p99_us: us, deadline_misses: 0, batch_occupancy: 1.0 }
+    }
+
+    fn warm(c: &mut ReplanController, us: u64) {
+        for _ in 0..cfg().window {
+            assert!(c.observe(p99(us)).is_none(), "warmup must not trigger");
+        }
+    }
+
+    #[test]
+    fn noise_within_band_never_triggers() {
+        let mut c = ReplanController::new(cfg());
+        warm(&mut c, 1000);
+        // ±30% jitter around the 1000 µs baseline stays inside the
+        // ±50% band no matter how long it persists.
+        for i in 0..200 {
+            let us = if i % 2 == 0 { 1300 } else { 750 };
+            assert!(c.observe(p99(us)).is_none());
+        }
+        assert_eq!(c.triggers(), 0);
+    }
+
+    #[test]
+    fn short_excursions_are_absorbed_by_sustain() {
+        let mut c = ReplanController::new(cfg());
+        warm(&mut c, 1000);
+        // Two out-of-band samples (sustain is 3), then back in band —
+        // the streak resets, so repeating this forever never fires.
+        for _ in 0..50 {
+            assert!(c.observe(p99(5000)).is_none());
+            assert!(c.observe(p99(5000)).is_none());
+            assert!(c.observe(p99(1000)).is_none());
+        }
+        assert_eq!(c.triggers(), 0);
+    }
+
+    #[test]
+    fn sustained_shift_triggers_once_then_rebaselines() {
+        let mut c = ReplanController::new(cfg());
+        warm(&mut c, 1000);
+        assert!(c.observe(p99(5000)).is_none());
+        assert!(c.observe(p99(5000)).is_none());
+        assert_eq!(c.observe(p99(5000)), Some(ReplanTrigger::P99Shift));
+        // The shifted level is now the new normal: staying there fires
+        // nothing further, ever (cooldown first, then the re-formed
+        // baseline absorbs it).
+        for _ in 0..100 {
+            assert!(c.observe(p99(5000)).is_none());
+        }
+        assert_eq!(c.triggers(), 1);
+    }
+
+    #[test]
+    fn cooldown_blocks_oscillation_retrigger() {
+        let mut c = ReplanController::new(ReplanConfig {
+            window: 2,
+            sustain: 2,
+            hysteresis: 0.5,
+            cooldown: 12,
+            sample_every: Duration::from_millis(1),
+        });
+        for _ in 0..2 {
+            assert!(c.observe(p99(1000)).is_none());
+        }
+        assert!(c.observe(p99(5000)).is_none());
+        assert_eq!(c.observe(p99(5000)), Some(ReplanTrigger::P99Shift));
+        // The metric oscillates straight back: the baseline re-forms at
+        // the old level...
+        for _ in 0..2 {
+            assert!(c.observe(p99(1000)).is_none());
+        }
+        // ...and the next excursion — out-of-band and sustained — is
+        // still held off for the remainder of the cooldown —
+        for _ in 0..9 {
+            assert!(c.observe(p99(5000)).is_none());
+        }
+        assert_eq!(c.triggers(), 1, "cooldown must absorb the oscillation");
+        // — then fires exactly once more when it has elapsed.
+        assert!(c.observe(p99(5000)).is_none());
+        assert_eq!(c.observe(p99(5000)), Some(ReplanTrigger::P99Shift));
+        assert_eq!(c.triggers(), 2);
+    }
+
+    #[test]
+    fn miss_rate_shift_triggers_with_attribution() {
+        let mut c = ReplanController::new(cfg());
+        // Miss-free baseline at a steady p99.
+        warm(&mut c, 1000);
+        // Misses start accruing (cumulative counter grows each tick)
+        // while p99 stays in band: the trigger must name the miss rate.
+        let mut misses = 0;
+        let mut got = None;
+        for _ in 0..cfg().sustain {
+            misses += 2;
+            got = c.observe(ReplanSample {
+                p99_us: 1000,
+                deadline_misses: misses,
+                batch_occupancy: 1.0,
+            });
+        }
+        assert_eq!(got, Some(ReplanTrigger::MissRate));
+    }
+
+    #[test]
+    fn env_spec_parses_with_defaults_for_empty_fields() {
+        let c = ReplanConfig::parse("4,2,0.3,16,25");
+        assert_eq!(c.window, 4);
+        assert_eq!(c.sustain, 2);
+        assert!((c.hysteresis - 0.3).abs() < 1e-12);
+        assert_eq!(c.cooldown, 16);
+        assert_eq!(c.sample_every, Duration::from_millis(25));
+        let d = ReplanConfig::parse("6,,nonsense");
+        assert_eq!(d.window, 6);
+        assert_eq!(d.sustain, ReplanConfig::default().sustain);
+        assert!((d.hysteresis - ReplanConfig::default().hysteresis).abs() < 1e-12);
+        // Zero-ish fields clamp to sane minima.
+        let e = ReplanConfig::parse("0,0,-1,0,0");
+        assert_eq!(e.window, 1);
+        assert_eq!(e.sustain, 1);
+        assert!(e.hysteresis > 0.0);
+        assert_eq!(e.cooldown, 0);
+        assert_eq!(e.sample_every, Duration::from_millis(1));
+    }
+}

@@ -35,6 +35,14 @@
 //! batch panics, answer the batch with [`ServeError::Internal`], reset
 //! *every* tenant's arenas on that shard and restart the loop — the
 //! other tenants' queued requests survive untouched.
+//!
+//! NUMA placement also carries over from the single-model server: on a
+//! multi-node host (with `ZNNI_NUMA=auto`) each shard is assigned a
+//! home node round-robin, every tenant coordinator on that shard pins
+//! its workers there and first-touches its arenas from the pinned
+//! threads, and work stealing prefers same-node victims — cross-node
+//! steals only happen when a victim's queue tail has gone stale (see
+//! [`crate::util::numa`]). Single-node hosts take none of these paths.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -196,6 +204,11 @@ struct TenantInner {
     /// coordinator per tenant, all sharing that tenant's plan `Arc`.
     coordinators: Vec<Vec<Coordinator>>,
     shards: Vec<TenantShard>,
+    /// `home_nodes[shard]` — the shard's home NUMA node, or `None` when
+    /// placement is inactive (single-node host or `ZNNI_NUMA=off`).
+    /// Drives the two-tier steal policy: same-home victims are always
+    /// fair game, cross-node victims only past the staleness threshold.
+    home_nodes: Vec<Option<usize>>,
     /// Σ over tenants of one shard's warm worker arenas — the fixed
     /// term of every batch admission inequality (all tenants' arenas
     /// are resident on every shard).
@@ -312,12 +325,27 @@ impl TenantServer {
         for plan in &plans {
             plan.warm_kernel_caches(&pool);
         }
+        // Same placement policy as the single-model server: on an
+        // active multi-node topology, each shard gets a home node
+        // round-robin and every tenant coordinator on that shard pins
+        // its serve workers there.
+        let numa = crate::util::numa::topology();
+        let active = crate::util::numa::placement_active(numa);
+        let mut home_nodes: Vec<Option<usize>> = vec![None; cfg.shards];
         let mut coordinators: Vec<Vec<Coordinator>> = Vec::with_capacity(cfg.shards);
-        for _ in 0..cfg.shards {
+        for si in 0..cfg.shards {
+            let home_set = if active {
+                let node = crate::util::numa::home_node_for_shard(numa, si);
+                home_nodes[si] = Some(node);
+                Some(Arc::new(numa.nodes[node].cpus.clone()))
+            } else {
+                None
+            };
             let mut row = Vec::with_capacity(specs.len());
             for ((net, _, _), plan) in specs.iter().zip(&plans) {
                 let mut c = Coordinator::with_shared_plan(net.clone(), plan.clone())?;
                 c.workers = shard_workers;
+                c.home_cpus = home_set.clone();
                 row.push(c);
             }
             coordinators.push(row);
@@ -363,6 +391,7 @@ impl TenantServer {
             tenants: states,
             coordinators,
             shards,
+            home_nodes,
             shard_ws_bytes,
             shutdown: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
@@ -560,6 +589,8 @@ impl TenantServer {
                         batches: st.batches,
                         requests: st.requests,
                         steals: st.steals,
+                        local_steals: st.local_steals,
+                        remote_steals: st.remote_steals,
                         expired: st.expired,
                         panics: st.panics,
                         restarts: st.restarts,
@@ -629,6 +660,8 @@ fn merge_metrics(
             agg.batches += s.batches;
             agg.requests += s.requests;
             agg.steals += s.steals;
+            agg.local_steals += s.local_steals;
+            agg.remote_steals += s.remote_steals;
             agg.expired += s.expired;
             agg.panics += s.panics;
             agg.restarts += s.restarts;
@@ -727,17 +760,55 @@ impl TenantInner {
         recover_lock(&shard.queues[pick]).pop_front().map(|q| (pick, q))
     }
 
+    /// Queue-tail age past which a cross-node steal is worth the remote
+    /// memory traffic (same rule as the single-model server).
+    fn steal_staleness(&self) -> Duration {
+        self.cfg.max_batch_wait.max(Duration::from_micros(500)) * 2
+    }
+
     /// Steal one request from a sibling shard's queue tails — least
     /// urgent work first, scanning tenants in SWRR-agnostic order (the
     /// stolen request still dispatches under its own tenant's plan).
+    ///
+    /// Two locality tiers: same-home-node victims are stolen from
+    /// unconditionally (on a single-node host every home is `None`, so
+    /// all steals are tier 1 — identical to pre-NUMA behavior); a
+    /// cross-node victim gives up its tail only once that request has
+    /// waited past [`TenantInner::steal_staleness`], so transient
+    /// imbalance stays node-local.
     fn try_steal(&self, si: usize) -> Option<(usize, TQueued)> {
         let n = self.shards.len();
         for k in 1..n {
             let vi = (si + k) % n;
+            if self.home_nodes[vi] != self.home_nodes[si] {
+                continue;
+            }
             for t in 0..self.tenants.len() {
                 let stolen = recover_lock(&self.shards[vi].queues[t]).pop_back();
                 if let Some(q) = stolen {
-                    recover_lock(&self.shards[si].stats[t]).steals += 1;
+                    let mut st = recover_lock(&self.shards[si].stats[t]);
+                    st.steals += 1;
+                    st.local_steals += 1;
+                    return Some((t, q));
+                }
+            }
+        }
+        let threshold = self.steal_staleness();
+        for k in 1..n {
+            let vi = (si + k) % n;
+            if self.home_nodes[vi] == self.home_nodes[si] {
+                continue;
+            }
+            for t in 0..self.tenants.len() {
+                let mut q = recover_lock(&self.shards[vi].queues[t]);
+                let stale =
+                    q.back().map(|x| x.inner.enqueued.elapsed() >= threshold).unwrap_or(false);
+                let stolen = if stale { q.pop_back() } else { None };
+                drop(q);
+                if let Some(q) = stolen {
+                    let mut st = recover_lock(&self.shards[si].stats[t]);
+                    st.steals += 1;
+                    st.remote_steals += 1;
                     return Some((t, q));
                 }
             }

@@ -11,6 +11,7 @@ pub mod bench;
 pub mod faults;
 pub mod json;
 pub mod magic;
+pub mod numa;
 pub mod pool;
 pub mod prng;
 pub mod quick;

@@ -1,0 +1,450 @@
+//! NUMA topology discovery and worker pinning — zero-dependency.
+//!
+//! The paper's headline CPU result ("the CPU manages to achieve higher
+//! throughput because of its fast access to more RAM") assumes the
+//! multi-socket machines of Table III, where that RAM is only *fast*
+//! when a worker touches node-local pages. This module gives the
+//! serving stack the two primitives that argument needs:
+//!
+//! * **Topology** — [`NumaTopology::detect`] parses
+//!   `/sys/devices/system/node/node*/{cpulist,meminfo}` (no libnuma,
+//!   no crates) and falls back to a single all-CPU node when the
+//!   hierarchy is absent (non-Linux hosts, containers without sysfs,
+//!   genuinely single-socket machines).
+//! * **Pinning** — [`pin_current_thread`] binds the calling thread to a
+//!   node's CPU set via a direct `extern "C" sched_setaffinity`
+//!   binding (the offline crate set has no `libc`). Every attempted
+//!   syscall bumps [`pin_calls`], so tests can *prove* the single-node
+//!   path never pins.
+//!
+//! The whole axis is gated by `ZNNI_NUMA` (`off | auto`, default
+//! `auto`, read once; [`force_numa_mode`] overrides for tests).
+//! Placement only ever engages when the mode is `auto` **and** the
+//! detected topology has more than one node ([`placement_active`]) —
+//! on a single-node machine the feature is a provable no-op: no
+//! syscalls, no behavioural change, bit-identical outputs.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// One NUMA node: its sysfs id, the online CPUs it owns, and its local
+/// memory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaNode {
+    /// The sysfs node id (the `N` of `/sys/devices/system/node/nodeN`).
+    pub id: usize,
+    /// Online CPUs local to this node, ascending (parsed from
+    /// `cpulist`; offline CPUs simply never appear).
+    pub cpus: Vec<usize>,
+    /// Node-local memory in bytes (`meminfo` `MemTotal`), or 0 when the
+    /// file is absent or unparsable.
+    pub mem_bytes: u64,
+}
+
+/// The machine's NUMA topology: every node that owns at least one CPU,
+/// in node-id order. Memory-only nodes (CXL expanders, zero-CPU HBM
+/// nodes) are excluded — nothing can be pinned to them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaTopology {
+    /// CPU-owning nodes, ascending by id. Never empty: detection falls
+    /// back to a single node covering `fallback_cores` CPUs.
+    pub nodes: Vec<NumaNode>,
+}
+
+impl NumaTopology {
+    /// The degenerate single-node topology: one node owning CPUs
+    /// `0..cores` — the graceful fallback everywhere sysfs is absent.
+    pub fn single(cores: usize) -> Self {
+        NumaTopology {
+            nodes: vec![NumaNode { id: 0, cpus: (0..cores.max(1)).collect(), mem_bytes: 0 }],
+        }
+    }
+
+    /// Parse a sysfs-style node directory (entries `node0`, `node1`, …
+    /// each holding `cpulist` and optionally `meminfo`). Falls back to
+    /// [`NumaTopology::single`]`(fallback_cores)` when the directory is
+    /// missing, unreadable, or contains no CPU-owning node. Exposed
+    /// (rather than hard-coding `/sys`) so fixture tests can parse
+    /// synthetic trees.
+    pub fn from_dir(dir: &Path, fallback_cores: usize) -> Self {
+        let mut nodes: Vec<NumaNode> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let Some(name) = name.to_str() else { continue };
+                let Some(idstr) = name.strip_prefix("node") else { continue };
+                let Ok(id) = idstr.parse::<usize>() else { continue };
+                let cpus = std::fs::read_to_string(e.path().join("cpulist"))
+                    .map(|s| parse_cpulist(&s))
+                    .unwrap_or_default();
+                if cpus.is_empty() {
+                    continue; // memory-only node: nothing to pin to
+                }
+                let mem_bytes = std::fs::read_to_string(e.path().join("meminfo"))
+                    .map(|s| parse_meminfo(&s))
+                    .unwrap_or(0);
+                nodes.push(NumaNode { id, cpus, mem_bytes });
+            }
+        }
+        if nodes.is_empty() {
+            return NumaTopology::single(fallback_cores);
+        }
+        nodes.sort_by_key(|n| n.id);
+        NumaTopology { nodes }
+    }
+
+    /// Detect the host topology from `/sys/devices/system/node`,
+    /// falling back to one node of `fallback_cores` CPUs.
+    pub fn detect(fallback_cores: usize) -> Self {
+        Self::from_dir(Path::new("/sys/devices/system/node"), fallback_cores)
+    }
+
+    /// Number of CPU-owning nodes (≥ 1).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether more than one CPU-owning node exists — the precondition
+    /// for any pinning to engage.
+    pub fn is_multi(&self) -> bool {
+        self.nodes.len() > 1
+    }
+
+    /// Total CPUs across all nodes.
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// Index (into [`NumaTopology::nodes`]) of the node owning `cpu`,
+    /// or `None` for an unknown/offline CPU.
+    pub fn node_of_cpu(&self, cpu: usize) -> Option<usize> {
+        self.nodes.iter().position(|n| n.cpus.contains(&cpu))
+    }
+}
+
+/// Parse a sysfs `cpulist` (`"0-3,8-11"`, `"0"`, `"0,2,4"`; ranges are
+/// inclusive, whitespace tolerated, malformed fragments skipped).
+/// Returns ascending, deduplicated CPU ids.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b {
+                    cpus.extend(a..=b);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            cpus.push(c);
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// Parse a per-node `meminfo` for the `MemTotal` kB value, returning
+/// bytes (0 when absent). Lines look like
+/// `Node 0 MemTotal:       16303680 kB`.
+pub fn parse_meminfo(s: &str) -> u64 {
+    for line in s.lines() {
+        if let Some(rest) = line.split("MemTotal:").nth(1) {
+            let kb = rest
+                .split_whitespace()
+                .next()
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0);
+            return kb.saturating_mul(1024);
+        }
+    }
+    0
+}
+
+/// Whether NUMA placement may engage, resolved once per process from
+/// `ZNNI_NUMA`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum NumaMode {
+    /// Never pin, never differentiate nodes — the topology module is
+    /// inert.
+    Off = 1,
+    /// Pin workers to home nodes **when the machine is actually
+    /// multi-node** ([`placement_active`]); single-node machines stay
+    /// untouched. The default.
+    Auto = 2,
+}
+
+impl NumaMode {
+    /// Parse a `ZNNI_NUMA` value.
+    pub fn parse(s: &str) -> Option<NumaMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "false" => Some(NumaMode::Off),
+            "auto" | "on" | "1" | "true" => Some(NumaMode::Auto),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<NumaMode> {
+        match v {
+            1 => Some(NumaMode::Off),
+            2 => Some(NumaMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+const MODE_UNSET: u8 = 0;
+static FORCED_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+static RESOLVED_MODE: OnceLock<NumaMode> = OnceLock::new();
+static PIN_CALLS: AtomicU64 = AtomicU64::new(0);
+static TOPOLOGY: OnceLock<NumaTopology> = OnceLock::new();
+
+/// The NUMA mode in effect: the [`force_numa_mode`]d mode if set, else
+/// `ZNNI_NUMA` (read once), else [`NumaMode::Auto`].
+pub fn numa_mode() -> NumaMode {
+    match NumaMode::from_u8(FORCED_MODE.load(Ordering::Relaxed)) {
+        Some(m) => m,
+        None => *RESOLVED_MODE.get_or_init(|| match std::env::var("ZNNI_NUMA") {
+            Ok(v) if !v.trim().is_empty() => match NumaMode::parse(&v) {
+                Some(m) => m,
+                None => {
+                    eprintln!("znni: unknown ZNNI_NUMA value {v:?}, using auto");
+                    NumaMode::Auto
+                }
+            },
+            _ => NumaMode::Auto,
+        }),
+    }
+}
+
+/// Force the NUMA mode for every subsequent decision (tests and
+/// benches), or restore env/default resolution with `None`.
+pub fn force_numa_mode(mode: Option<NumaMode>) {
+    match mode {
+        Some(m) => FORCED_MODE.store(m as u8, Ordering::Relaxed),
+        None => FORCED_MODE.store(MODE_UNSET, Ordering::Relaxed),
+    }
+}
+
+/// The host topology, detected once per process (fallback core count:
+/// [`std::thread::available_parallelism`]).
+pub fn topology() -> &'static NumaTopology {
+    TOPOLOGY.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NumaTopology::detect(cores)
+    })
+}
+
+/// Whether placement should engage for this topology: mode is
+/// [`NumaMode::Auto`] **and** the topology is genuinely multi-node.
+/// Everything that pins checks this first, which is what makes the
+/// single-node path a provable no-op.
+pub fn placement_active(topo: &NumaTopology) -> bool {
+    numa_mode() == NumaMode::Auto && topo.is_multi()
+}
+
+/// Bind the calling thread to the given CPU set via `sched_setaffinity`
+/// (direct syscall binding — the crate set has no `libc`). Returns
+/// whether the kernel accepted the mask. Every *attempted* syscall
+/// bumps [`pin_calls`] first; callers are expected to gate on
+/// [`placement_active`] so single-node machines never reach the
+/// syscall. No-op (returns `false`, counter untouched) off Linux and
+/// for empty CPU sets. CPUs ≥ 1024 are ignored (mask width).
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    if cpus.is_empty() {
+        return false;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        // 16 × 64 = 1024 CPUs — matches glibc's default cpu_set_t.
+        const WORDS: usize = 16;
+        let mut mask = [0u64; WORDS];
+        let mut any = false;
+        for &c in cpus {
+            if c < WORDS * 64 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        extern "C" {
+            // int sched_setaffinity(pid_t, size_t, const cpu_set_t *);
+            // pid 0 = the calling thread.
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        PIN_CALLS.fetch_add(1, Ordering::SeqCst);
+        let rc = unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) };
+        rc == 0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        false
+    }
+}
+
+/// Total `sched_setaffinity` calls attempted process-wide — the
+/// single-node no-op proof reads this (it must stay 0 when
+/// [`placement_active`] is false everywhere).
+pub fn pin_calls() -> u64 {
+    PIN_CALLS.load(Ordering::SeqCst)
+}
+
+/// The home node (index into `topo.nodes`) for shard `si` of `shards`:
+/// round-robin over the nodes, so shards spread evenly and shard
+/// siblings on the same node are `si ± node_count` — the locality tier
+/// work stealing prefers.
+pub fn home_node_for_shard(topo: &NumaTopology, si: usize) -> usize {
+    si % topo.node_count().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn cpulist_single_and_ranges() {
+        assert_eq!(parse_cpulist("0\n"), vec![0]);
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-3,8-11\n"), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist(" 0 , 2 , 4-5 "), vec![0, 2, 4, 5]);
+    }
+
+    #[test]
+    fn cpulist_offline_gaps_and_garbage() {
+        // Offline CPUs simply never appear: "0-1,6-7" is a 4-CPU node
+        // with CPUs 2..=5 offline.
+        assert_eq!(parse_cpulist("0-1,6-7"), vec![0, 1, 6, 7]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("3-1"), Vec::<usize>::new(), "inverted range skipped");
+        assert_eq!(parse_cpulist("x,2,y-3,4"), vec![2, 4], "malformed fragments skipped");
+        assert_eq!(parse_cpulist("1,1,0-1"), vec![0, 1], "deduplicated");
+    }
+
+    #[test]
+    fn meminfo_parses_kb_as_bytes() {
+        let s = "Node 0 MemTotal:       16303680 kB\nNode 0 MemFree:  1 kB\n";
+        assert_eq!(parse_meminfo(s), 16303680 * 1024);
+        assert_eq!(parse_meminfo("no such key"), 0);
+    }
+
+    /// Build a synthetic `nodeN/{cpulist,meminfo}` tree under a unique
+    /// temp dir.
+    fn fixture(nodes: &[(usize, &str, Option<&str>)]) -> std::path::PathBuf {
+        static SEQ: AtomicU32 = AtomicU32::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "znni-numa-fixture-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::SeqCst)
+        ));
+        for (id, cpulist, meminfo) in nodes {
+            let nd = dir.join(format!("node{id}"));
+            std::fs::create_dir_all(&nd).unwrap();
+            std::fs::write(nd.join("cpulist"), cpulist).unwrap();
+            if let Some(m) = meminfo {
+                std::fs::write(nd.join("meminfo"), m).unwrap();
+            }
+        }
+        if nodes.is_empty() {
+            std::fs::create_dir_all(&dir).unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn from_dir_multi_node() {
+        let dir = fixture(&[
+            (0, "0-3\n", Some("Node 0 MemTotal: 1024 kB\n")),
+            (1, "4-7\n", Some("Node 1 MemTotal: 2048 kB\n")),
+        ]);
+        let t = NumaTopology::from_dir(&dir, 8);
+        assert_eq!(t.node_count(), 2);
+        assert!(t.is_multi());
+        assert_eq!(t.nodes[0].cpus, vec![0, 1, 2, 3]);
+        assert_eq!(t.nodes[1].cpus, vec![4, 5, 6, 7]);
+        assert_eq!(t.nodes[0].mem_bytes, 1024 * 1024);
+        assert_eq!(t.nodes[1].mem_bytes, 2048 * 1024);
+        assert_eq!(t.total_cpus(), 8);
+        assert_eq!(t.node_of_cpu(5), Some(1));
+        assert_eq!(t.node_of_cpu(99), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_dir_skips_memory_only_nodes_and_missing_meminfo() {
+        let dir = fixture(&[
+            (0, "0-1,6-7\n", None),
+            (2, "\n", Some("Node 2 MemTotal: 4096 kB\n")), // CXL-style, no CPUs
+        ]);
+        let t = NumaTopology::from_dir(&dir, 4);
+        assert_eq!(t.node_count(), 1, "memory-only node excluded");
+        assert_eq!(t.nodes[0].id, 0);
+        assert_eq!(t.nodes[0].cpus, vec![0, 1, 6, 7], "offline CPUs 2-5 absent");
+        assert_eq!(t.nodes[0].mem_bytes, 0, "missing meminfo defaults to 0");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_dir_falls_back_to_single_node() {
+        let missing = std::env::temp_dir().join("znni-numa-definitely-missing");
+        let t = NumaTopology::from_dir(&missing, 6);
+        assert_eq!(t.node_count(), 1);
+        assert!(!t.is_multi());
+        assert_eq!(t.nodes[0].cpus, (0..6).collect::<Vec<_>>());
+        // An empty dir (sysfs present but no nodeN entries) also falls
+        // back.
+        let empty = fixture(&[]);
+        let t = NumaTopology::from_dir(&empty, 2);
+        assert_eq!(t.node_count(), 1);
+        assert_eq!(t.nodes[0].cpus, vec![0, 1]);
+        std::fs::remove_dir_all(&empty).ok();
+    }
+
+    #[test]
+    fn single_never_empty() {
+        assert_eq!(NumaTopology::single(0).nodes[0].cpus, vec![0]);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(NumaMode::parse("off"), Some(NumaMode::Off));
+        assert_eq!(NumaMode::parse(" AUTO "), Some(NumaMode::Auto));
+        assert_eq!(NumaMode::parse("on"), Some(NumaMode::Auto));
+        assert_eq!(NumaMode::parse("numa"), None);
+    }
+
+    #[test]
+    fn placement_needs_multi_node() {
+        // Whatever the mode, a single-node topology never activates
+        // placement; `force_numa_mode` is process-global, so this test
+        // only asserts the topology half of the conjunction.
+        assert!(!placement_active(&NumaTopology::single(8)));
+    }
+
+    #[test]
+    fn home_nodes_round_robin() {
+        let dir = fixture(&[(0, "0-3\n", None), (1, "4-7\n", None)]);
+        let t = NumaTopology::from_dir(&dir, 8);
+        assert_eq!(home_node_for_shard(&t, 0), 0);
+        assert_eq!(home_node_for_shard(&t, 1), 1);
+        assert_eq!(home_node_for_shard(&t, 2), 0);
+        assert_eq!(home_node_for_shard(&t, 3), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pin_rejects_empty_and_out_of_range() {
+        let before = pin_calls();
+        assert!(!pin_current_thread(&[]));
+        assert_eq!(pin_calls(), before, "empty set never reaches the syscall");
+        assert!(!pin_current_thread(&[100_000]));
+        assert_eq!(pin_calls(), before, "out-of-mask CPUs never reach the syscall");
+    }
+}

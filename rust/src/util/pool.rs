@@ -4,10 +4,15 @@
 //! convolutional layer (§IV.A.3):
 //!
 //! * every worker is logically **pinned** to a `(chip, core)` slot — the
-//!   paper pins via OS affinity on a 4-way Xeon; here pinning is
-//!   expressed as strict queue affinity (a chip-affine task is only ever
-//!   executed by that chip's workers), which reproduces the scheduling
-//!   behaviour without requiring libc affinity syscalls;
+//!   paper pins via OS affinity on a 4-way Xeon. Pinning is expressed
+//!   as strict queue affinity (a chip-affine task is only ever executed
+//!   by that chip's workers), which reproduces the scheduling behaviour
+//!   on any host; on genuinely multi-node machines
+//!   ([`TaskPool::with_placement`], engaged by [`TaskPool::new`] under
+//!   `ZNNI_NUMA=auto`) each chip's workers are *additionally* bound to
+//!   a home NUMA node via [`crate::util::numa::pin_current_thread`], so
+//!   queue affinity and OS affinity agree and first-touched pages land
+//!   node-local;
 //! * a subset of workers are **primary** threads (at most one per task
 //!   that needs a private kernel-transform buffer), evenly distributed
 //!   across chips;
@@ -139,6 +144,27 @@ impl TaskPool {
     /// M = max(N, f') primaries spread over chips; callers gate
     /// primary-only work via [`Scope::submit_chip_primary`]).
     pub fn with_topology(topo: ChipTopology) -> Self {
+        Self::build(topo, None)
+    }
+
+    /// Build a pool whose chips are mapped onto the host's NUMA nodes:
+    /// chip `c`'s workers bind themselves (OS affinity, first thing in
+    /// their loop) to node `c % numa.node_count()`'s CPU set, so the
+    /// pages they first-touch are node-local. Pinning only engages when
+    /// [`crate::util::numa::placement_active`] holds — under
+    /// `ZNNI_NUMA=off` or on a single-node machine this is exactly
+    /// [`TaskPool::with_topology`]: zero affinity syscalls, identical
+    /// scheduling.
+    pub fn with_placement(topo: ChipTopology, numa: &crate::util::numa::NumaTopology) -> Self {
+        if !crate::util::numa::placement_active(numa) {
+            return Self::build(topo, None);
+        }
+        let sets: Vec<Arc<Vec<usize>>> =
+            numa.nodes.iter().map(|n| Arc::new(n.cpus.clone())).collect();
+        Self::build(topo, Some(sets))
+    }
+
+    fn build(topo: ChipTopology, pin_sets: Option<Vec<Arc<Vec<usize>>>>) -> Self {
         let inner = Arc::new(PoolInner {
             state: Mutex::new(State {
                 global: VecDeque::new(),
@@ -156,20 +182,28 @@ impl TaskPool {
             // are the next workers round-robin — every worker knows its
             // rank within the chip, primariness is decided per-pop.
             let ctx = WorkerCtx { worker: w, chip, primary: w % topo.cores_per_chip == 0 };
+            let pin = pin_sets.as_ref().map(|sets| sets[chip % sets.len()].clone());
             let inner = inner.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("znni-w{w}-c{chip}"))
-                    .spawn(move || worker_loop(inner, ctx))
+                    .spawn(move || {
+                        if let Some(cpus) = pin {
+                            crate::util::numa::pin_current_thread(&cpus);
+                        }
+                        worker_loop(inner, ctx)
+                    })
                     .expect("spawn worker"),
             );
         }
         TaskPool { inner, handles }
     }
 
-    /// Pool sized to the detected machine topology.
+    /// Pool sized to the detected machine topology, with workers pinned
+    /// to home NUMA nodes when the host is multi-node and `ZNNI_NUMA`
+    /// admits it (see [`TaskPool::with_placement`]).
     pub fn new() -> Self {
-        Self::with_topology(ChipTopology::detect())
+        Self::with_placement(ChipTopology::detect(), crate::util::numa::topology())
     }
 
     /// The process-wide pool (created on first use).
@@ -573,5 +607,23 @@ mod tests {
         let t = ChipTopology::detect();
         assert!(t.chips >= 1);
         assert!(t.cores_per_chip >= 1);
+    }
+
+    #[test]
+    fn placement_is_noop_on_single_node() {
+        let before = crate::util::numa::pin_calls();
+        let numa = crate::util::numa::NumaTopology::single(4);
+        let pool = TaskPool::with_placement(ChipTopology { chips: 2, cores_per_chip: 2 }, &numa);
+        let c = AtomicUsize::new(0);
+        pool.parallel_for(8, |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+        drop(pool);
+        // Other tests only pin if the *host* is multi-node; on a
+        // single-node host the counter must be exactly untouched.
+        if !crate::util::numa::topology().is_multi() {
+            assert_eq!(crate::util::numa::pin_calls(), before, "single node must never pin");
+        }
     }
 }

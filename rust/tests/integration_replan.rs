@@ -1,0 +1,225 @@
+//! NUMA placement and live replanning, end to end:
+//!
+//! * on a single-node host the NUMA path is a **provable no-op**:
+//!   `ZNNI_NUMA=auto` makes zero pinning syscalls, produces outputs
+//!   bit-identical to `off`, and still reaches the allocation-free
+//!   steady state;
+//! * a **live plan swap** under concurrent load answers every accepted
+//!   request, re-converges to zero fresh allocations after the re-warm,
+//!   and produces outputs bit-identical to a cold server started
+//!   directly on the new plan (same weights, same function);
+//! * the metrics-driven replanner arms, samples a serving server, and
+//!   stops cleanly when the server drops.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use znni::conv::Weights;
+use znni::device::Device;
+use znni::memory::model::ConvAlgo;
+use znni::net::NetSpec;
+use znni::optimizer::{compile, make_weights, search, CostModel, Plan, SearchSpace};
+use znni::server::replan::ReplanConfig;
+use znni::server::{RejectReason, Server, ServerConfig, ServingLoad};
+use znni::tensor::{Shape5, Tensor5};
+use znni::util::numa::{self, NumaMode};
+use znni::util::pool::{ChipTopology, TaskPool};
+
+fn setup() -> (NetSpec, Plan, Vec<Arc<Weights>>, Arc<TaskPool>) {
+    let net = znni::net::zoo::tiny_net(2);
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    let plan = search(&net, &space, &cm).expect("feasible plan");
+    let weights = make_weights(&net, 77);
+    let pool = Arc::new(TaskPool::with_topology(ChipTopology { chips: 2, cores_per_chip: 2 }));
+    (net, plan, weights, pool)
+}
+
+/// An FFT-only plan for the same net — a genuinely different plan to
+/// swap to (different algorithms, different arena shapes).
+fn fft_plan(net: &NetSpec) -> Plan {
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    space.algos = vec![ConvAlgo::FftTaskParallel];
+    search(net, &space, &cm).expect("feasible fft plan")
+}
+
+fn mk(seed: u64) -> Tensor5 {
+    Tensor5::random(Shape5::new(1, 1, 20, 20, 20), seed)
+}
+
+/// Serve one fixed round of requests sequentially; returns the outputs.
+fn serve_round(server: &Server, seeds: std::ops::Range<u64>) -> Vec<Tensor5> {
+    seeds
+        .map(|i| server.submit(mk(i)).expect("admitted").wait().expect("served").output)
+        .collect()
+}
+
+/// Warm a server until one full round causes no fresh arena
+/// allocations; panics if it never converges.
+fn warm_to_steady_state(server: &Server, base_seed: u64) {
+    let fresh = |server: &Server| -> u64 {
+        server.metrics().per_shard.iter().map(|s| s.arena_fresh_allocs).sum()
+    };
+    for round in 0..12u64 {
+        let before = fresh(server);
+        let tickets: Vec<_> =
+            (0..4u64).map(|i| server.submit(mk(base_seed + round * 10 + i)).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let all_served = server.metrics().per_shard.iter().all(|s| s.requests > 0);
+        if round > 0 && all_served && fresh(server) == before {
+            return;
+        }
+    }
+    panic!("server never reached an allocation-free steady state");
+}
+
+#[test]
+fn single_node_numa_placement_is_a_provable_noop() {
+    let (net, plan, weights, pool) = setup();
+    let pins_at_start = numa::pin_calls();
+
+    // Baseline: NUMA explicitly off.
+    numa::force_numa_mode(Some(NumaMode::Off));
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let server = Server::start(net.clone(), cp, ServerConfig::default(), pool.clone()).unwrap();
+    let out_off = serve_round(&server, 0..4);
+    drop(server);
+
+    // Same server under `auto`: on a single-node host placement must
+    // not activate — same outputs, same (zero) syscalls, and the
+    // allocation-free steady state still holds.
+    numa::force_numa_mode(Some(NumaMode::Auto));
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let server = Server::start(net.clone(), cp, ServerConfig::default(), pool).unwrap();
+    let out_auto = serve_round(&server, 0..4);
+    warm_to_steady_state(&server, 1000);
+    drop(server);
+    numa::force_numa_mode(None);
+
+    for (i, (a, b)) in out_off.iter().zip(&out_auto).enumerate() {
+        assert_eq!(a.data(), b.data(), "request {i}: auto diverged from off on a single node");
+    }
+    // pin_calls is process-global, so only assert it where the claim
+    // holds unconditionally: a single-node topology must never pin.
+    if !numa::topology().is_multi() {
+        assert_eq!(
+            numa::pin_calls(),
+            pins_at_start,
+            "single-node serving must make zero affinity syscalls"
+        );
+    }
+}
+
+#[test]
+fn live_plan_swap_under_load_answers_everything_and_matches_cold_restart() {
+    let (net, plan, weights, pool) = setup();
+    let plan_b = fft_plan(&net);
+    let cfg = ServerConfig { shards: 2, queue_depth: 8, ..ServerConfig::default() };
+    let server = Server::start(
+        net.clone(),
+        compile(&net, &plan, &weights).unwrap(),
+        cfg.clone(),
+        pool.clone(),
+    )
+    .unwrap();
+
+    // Clients hammer the server while the plan is swapped out from
+    // under them. Every accepted request must be answered Ok — by
+    // whichever plan admitted it.
+    let stop = AtomicBool::new(false);
+    let answered: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3u64)
+            .map(|c| {
+                let server = &server;
+                let stop = &stop;
+                s.spawn(move || {
+                    let mut served = 0u64;
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::SeqCst) {
+                        match server.submit(mk(c * 1000 + i)) {
+                            Ok(t) => {
+                                t.wait().expect("accepted request must be answered");
+                                served += 1;
+                            }
+                            Err(rej) => {
+                                assert!(
+                                    matches!(
+                                        rej.reason,
+                                        RejectReason::QueueFull { .. }
+                                            | RejectReason::MemoryPressure { .. }
+                                    ),
+                                    "unexpected rejection: {:?}",
+                                    rej.reason
+                                );
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                        i += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+        // Let the load establish, then cut over mid-flight.
+        std::thread::sleep(Duration::from_millis(30));
+        server.swap_plan(compile(&net, &plan_b, &weights).unwrap()).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        stop.store(true, Ordering::SeqCst);
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    assert!(answered > 0, "clients must have been served across the swap");
+    let m = server.metrics();
+    assert_eq!(m.plan_swaps, 1);
+    assert_eq!(m.completed, answered, "no accepted request may be dropped by the cutover");
+
+    // After the cutover the server must re-converge to the zero-alloc
+    // steady state on the new plan's arenas.
+    warm_to_steady_state(&server, 5000);
+
+    // And the swapped-in plan must compute the same function as a cold
+    // server started directly on plan B with the same weights.
+    let out_live = serve_round(&server, 9000..9004);
+    drop(server);
+    let cold =
+        Server::start(net.clone(), compile(&net, &plan_b, &weights).unwrap(), cfg, pool).unwrap();
+    let out_cold = serve_round(&cold, 9000..9004);
+    for (i, (a, b)) in out_live.iter().zip(&out_cold).enumerate() {
+        assert_eq!(
+            a.data(),
+            b.data(),
+            "request {i}: swapped-in plan diverged from a cold restart onto the same plan"
+        );
+    }
+}
+
+#[test]
+fn replanner_arms_samples_and_stops_cleanly() {
+    let (net, plan, weights, pool) = setup();
+    let cm = CostModel::default_rates(4);
+    let mut space = SearchSpace::cpu_only(Device::host_with_ram(4 << 30), 15);
+    space.max_candidates = 2;
+    let cp = compile(&net, &plan, &weights).unwrap();
+    let mut server = Server::start(net.clone(), cp, ServerConfig::default(), pool).unwrap();
+    let rcfg = ReplanConfig {
+        window: 2,
+        sustain: 2,
+        hysteresis: 0.5,
+        cooldown: 4,
+        sample_every: Duration::from_millis(5),
+    };
+    server.start_replanner(space, cm, ServingLoad { clients: 3, volume_extent: 20 }, rcfg);
+    // Serve while the replanner samples in the background; the metrics
+    // stream it sees is the real one.
+    for i in 0..4u64 {
+        server.submit(mk(7000 + i)).unwrap().wait().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(25));
+    // Drop must stop the sampler thread promptly (no hang, no panic).
+    drop(server);
+}
